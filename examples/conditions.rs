@@ -1,0 +1,47 @@
+//! Paper §4.9: stdout and conditions relay "as-is" from parallel
+//! workers — and can be handled with the ordinary sequential tools.
+//!
+//! Run: `cargo run --example conditions`
+
+use futurize::prelude::*;
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+    let mut session = Session::new();
+    session.eval_str("plan(multisession, workers = 2)").unwrap();
+
+    println!("== messages relayed from workers (§4.9) ==");
+    let (v, out) = session.eval_captured(
+        "ys <- 1:4 |> map_dbl(\\(x) {\n  message(\"x = \", x)\n  sqrt(x)\n}) |> futurize()\nys",
+    );
+    print!("{out}");
+    println!("values: {}\n", v.unwrap());
+
+    println!("== same code under suppressMessages(): silence ==");
+    let (v, out) = session.eval_captured(
+        "ys <- 1:4 |> map_dbl(\\(x) {\n  message(\"x = \", x)\n  sqrt(x)\n}) |> suppressMessages() |> futurize()\nys",
+    );
+    print!("{out}");
+    println!("values: {}\n", v.unwrap());
+
+    println!("== stdout (cat) relays too ==");
+    let (_, out) = session.eval_captured(
+        "invisible(lapply(1:3, function(x) cat(\"worker says\", x, \"\\n\")) |> futurize())",
+    );
+    print!("{out}");
+
+    println!("\n== errors keep the original condition object ==");
+    let v = session
+        .eval_str(
+            "r <- tryCatch({\n  lapply(1:3, function(x) if (x == 2) stop(\"boom at 2\") else x) |> futurize()\n}, error = function(e) conditionMessage(e))\nr",
+        )
+        .unwrap();
+    println!("caught: {v}");
+
+    println!("\n== RNG misuse detection (§5.2) ==");
+    let (_, out) = session.eval_captured(
+        "invisible(lapply(1:2, function(x) rnorm(1)) |> futurize())",
+    );
+    print!("{out}");
+    println!("(fix: lapply(...) |> futurize(seed = TRUE))");
+}

@@ -1,0 +1,33 @@
+//! Figure 1 reproduction: eight `fcn()` calls, sequential vs futurized
+//! with three workers — printing the task→worker timeline the paper
+//! draws.
+//!
+//! Run: `cargo run --example figure1`
+
+use futurize::prelude::*;
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+    let mut session = Session::with_config(SessionConfig { time_scale: 0.02 });
+
+    session
+        .eval_str("fcn <- function(x) { Sys.sleep(1)\nx^2 }\nxs <- 1:8")
+        .unwrap();
+
+    println!("Figure 1 — lapply(xs, fcn), 8 tasks\n");
+
+    let (_, seq) = session.eval_timed("ys <- lapply(xs, fcn)").unwrap();
+    println!("sequential: {:.2} task-units walltime", seq / 0.02);
+
+    session.eval_str("plan(multicore, workers = 3)").unwrap();
+    let (_, par) = session
+        .eval_timed("ys <- lapply(xs, fcn) |> futurize(scheduling = Inf)")
+        .unwrap();
+    println!(
+        "futurized (3 workers): {:.2} task-units walltime (ideal ceil(8/3) = 3)\n",
+        par / 0.02
+    );
+    println!("task→worker timeline (one letter per task):");
+    println!("{}", session.render_trace());
+    println!("speedup: {:.2}x (ideal 8/3 = 2.67x)", seq / par);
+}

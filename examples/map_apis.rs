@@ -1,0 +1,71 @@
+//! Paper §4.2–4.5: the same `|> futurize()` gesture across every
+//! supported map-reduce API family — purrr, foreach (+iterators), plyr,
+//! crossmap, BiocParallel.
+//!
+//! Run: `cargo run --example map_apis`
+
+use futurize::prelude::*;
+
+fn show(session: &mut Session, title: &str, src: &str) {
+    let v = session.eval_str(src).unwrap_or_else(|e| panic!("{title}: {e}"));
+    println!("{title}\n  -> {v}\n");
+}
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+    let mut session = Session::with_config(SessionConfig { time_scale: 0.002 });
+    session.eval_str("plan(multisession, workers = 3)").unwrap();
+    session
+        .eval_str("slow_fcn <- function(x) { Sys.sleep(1)\nx^2 }\nxs <- 1:12")
+        .unwrap();
+
+    show(
+        &mut session,
+        "purrr: map(xs, slow_fcn) |> futurize()",
+        "ys <- map(xs, slow_fcn) |> futurize()\nsum(unlist(ys))",
+    );
+
+    show(
+        &mut session,
+        "purrr pipeline (§4.2): both stages futurized",
+        "ys <- 1:100 |>\n  map(rnorm, n = 10) |> futurize(seed = TRUE) |>\n  map_dbl(mean) |> futurize()\nround(mean(ys), 3)",
+    );
+
+    show(
+        &mut session,
+        "foreach (§4.3): %do% futurized without changing the operator",
+        "ys <- foreach(x = xs, .combine = c) %do% { slow_fcn(x) } |> futurize()\nsum(ys)",
+    );
+
+    show(
+        &mut session,
+        "foreach + iterators (§4.3): icount() indices",
+        "df <- data.frame(a = 1:4, b = letters[1:4])\nys <- foreach(d = df, i = icount()) %do% { list(index = i) } |> futurize()\nlength(ys)",
+    );
+
+    show(
+        &mut session,
+        "times (§4.3): seed defaults to TRUE",
+        "samples <- times(20) %do% rnorm(5) |> futurize()\nlength(samples)",
+    );
+
+    show(
+        &mut session,
+        "plyr (§4.4): llply futurized via its own .parallel sub-API",
+        "ys <- llply(xs, slow_fcn) |> futurize()\nsum(unlist(ys))",
+    );
+
+    show(
+        &mut session,
+        "crossmap (§4.5): xmap over all combinations",
+        "ys <- crossmap::xmap_dbl(list(1:4, 1:3), function(a, b) a * b) |> futurize()\nsum(ys)",
+    );
+
+    show(
+        &mut session,
+        "BiocParallel (§4.5): bplapply through FutureParam",
+        "ys <- bplapply(xs, slow_fcn) |> futurize()\nsum(unlist(ys))",
+    );
+
+    println!("supported packages: {:?}", futurize::transpile::supported_packages());
+}

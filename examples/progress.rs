@@ -1,0 +1,34 @@
+//! Paper §4.10: near-live progress reporting from parallel workers via
+//! the progressr analog. Note how futurize() unwraps `local({ ... })` to
+//! find the lapply() call (§3.3).
+//!
+//! Run: `cargo run --example progress`
+
+use futurize::prelude::*;
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+    let mut session = Session::with_config(SessionConfig { time_scale: 0.03 });
+    session.eval_str("plan(multisession, workers = 3)").unwrap();
+    session.eval_str("handlers(global = TRUE)").unwrap();
+
+    println!("running 30 slow tasks with near-live progress:\n");
+    let v = session
+        .eval_str(
+            r#"
+            slow_fcn <- function(x) { Sys.sleep(1)
+            x^2 }
+            xs <- 1:30
+            ys <- local({
+              p <- progressor(along = xs)
+              lapply(xs, function(x) {
+                p()
+                slow_fcn(x)
+              })
+            }) |> futurize(scheduling = Inf)
+            sum(unlist(ys))
+            "#,
+        )
+        .unwrap();
+    println!("\ndone: sum = {v}");
+}

@@ -1,0 +1,53 @@
+//! Quickstart (paper §4.1): parallelize `lapply()` by appending
+//! `|> futurize()`.
+//!
+//! Run: `cargo run --example quickstart`
+
+use futurize::prelude::*;
+
+fn main() {
+    // Host worker subprocesses when spawned by the multisession backend.
+    futurize::backend::worker::maybe_worker();
+
+    // The paper's slow_fcn sleeps 1s; scale time down 100x so the demo
+    // finishes quickly while keeping the same shape.
+    let mut session = Session::with_config(SessionConfig { time_scale: 0.01 });
+
+    println!("== sequential ==");
+    let (v, secs) = session
+        .eval_timed(
+            r#"
+            slow_fcn <- function(x) {
+              Sys.sleep(1.0) # Simulate work
+              x^2
+            }
+            xs <- 1:24
+            ys <- lapply(xs, slow_fcn)
+            sum(unlist(ys))
+            "#,
+        )
+        .expect("sequential run");
+    println!("sum = {v}, walltime = {secs:.2}s (scaled)");
+
+    println!("\n== futurized: plan(multicore, workers = 4) ==");
+    session.eval_str("plan(multicore, workers = 4)").unwrap();
+    let (v, par_secs) = session
+        .eval_timed("ys <- lapply(xs, slow_fcn) |> futurize()\nsum(unlist(ys))")
+        .expect("parallel run");
+    println!("sum = {v}, walltime = {par_secs:.2}s (scaled)");
+    println!("speedup: {:.1}x with 4 workers", secs / par_secs);
+
+    // replicate() defaults to seed = TRUE under futurize (§4.1).
+    println!("\n== futurized replicate() on process workers (multisession) ==");
+    session.eval_str("plan(multisession, workers = 4)").unwrap();
+    let v = session
+        .eval_str("samples <- replicate(100, rnorm(10)) |> futurize()\nlength(samples)")
+        .unwrap();
+    println!("drew {v} reproducible random numbers across workers");
+
+    // The transpiler is inspectable (§3.2): eval = FALSE.
+    let v = session
+        .eval_str("lapply(xs, slow_fcn) |> futurize(eval = FALSE, seed = TRUE, chunk_size = 2)")
+        .unwrap();
+    println!("\ntranspiled form:\n  {}", v.as_str().unwrap());
+}

@@ -1,0 +1,55 @@
+"""AOT lowering: JAX -> HLO *text* -> artifacts/<name>.hlo.txt.
+
+HLO text (not `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids that xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 rust crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACTS
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower to HLO text.
+
+    Preferred path: `compiler_ir(dialect="hlo")` — emits classic HLO
+    directly, bypassing the StableHLO round-trip (jax 0.8's StableHLO
+    emits `dynamic_slice` attribute syntax the old parser bundled with
+    xla_extension 0.5.1 rejects). Fallback: stablehlo -> XlaComputation,
+    which works for grid-free kernels.
+
+    Single-output computations have a non-tuple root; multi-output ones a
+    tuple root. The Rust loader handles both (runtime::pjrt_execute).
+    """
+    try:
+        return lowered.compiler_ir(dialect="hlo").as_hlo_text()
+    except Exception:
+        mlir_mod = lowered.compiler_ir("stablehlo")
+        comp = xc._xla.mlir.mlir_module_to_xla_computation(
+            str(mlir_mod), use_tuple_args=False, return_tuple=True
+        )
+        return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name, (fn, example_args) in ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

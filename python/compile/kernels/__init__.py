@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the map-task compute hot-spots.
+from . import boot_stat, chunk_map, gram, ref  # noqa: F401

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: weighted-ratio bootstrap statistic.
+
+One bootstrap replicate's statistic over the (padded) bigcity block:
+numerator sum(w*x) and denominator sum(w*u) accumulated across VMEM
+tiles. Padding rows carry w = 0, so the masked accumulation is exact.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BOOT_N = 64  # must match rust/src/runtime/mod.rs::BOOT_N
+BLOCK = 32
+
+
+def _kernel(x_ref, u_ref, w_ref, num_ref, den_ref):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    u = u_ref[...]
+    w = w_ref[...]
+    num = jnp.sum(w * x)
+    den = jnp.sum(w * u)
+
+    @pl.when(i == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    num_ref[...] += num
+    den_ref[...] += den
+
+
+def boot_stat(x, u, w):
+    """Return (sum(w*x), sum(w*u)) over f32[BOOT_N] blocks."""
+    num, den = pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        ),
+        grid=(BOOT_N // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((), lambda i: ()),
+            pl.BlockSpec((), lambda i: ()),
+        ),
+        interpret=True,
+    )(x, u, w)
+    return num, den

@@ -1,0 +1,31 @@
+"""L1 Pallas kernel: tiled elementwise map (the `slow_fcn` payload).
+
+The paper's map bodies are embarrassingly parallel over elements; on TPU
+the natural mapping is one map *chunk* per grid step with the chunk tiled
+into VMEM-resident blocks (DESIGN.md §Hardware-Adaptation). `interpret=
+True` everywhere: the CPU PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK_N = 128  # must match rust/src/runtime/mod.rs::CHUNK_N
+BLOCK = 64  # VMEM tile per grid step
+
+
+def _kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = 3.0 * x * x + 2.0 * x + 1.0
+
+
+def chunk_map(x):
+    """Apply 3x^2 + 2x + 1 over an f32[CHUNK_N] block, tiled by BLOCK."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((CHUNK_N,), jnp.float32),
+        grid=(CHUNK_N // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(x)

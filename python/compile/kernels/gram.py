@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: blocked Gram matrix (X^T X, X^T y).
+
+The heavy O(n·p²) half of every least-squares fold solver in the domain
+packages (mgcv's bam chunks, glmnet's fold fits). On TPU this is the MXU
+sweet spot: row blocks of X stream HBM→VMEM, each grid step contracts a
+(BLOCK_N, P) tile into the resident (P, P) accumulator. The cheap O(p³)
+solve stays on the Rust side.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GRAM_N = 256  # rows  (must match rust/src/runtime/mod.rs::GRAM_N)
+GRAM_P = 32  # cols  (GRAM_P)
+BLOCK_N = 64  # row block per grid step
+
+
+def _kernel(x_ref, y_ref, g_ref, xty_ref):
+    i = pl.program_id(0)
+    xb = x_ref[...]  # (BLOCK_N, P)
+    yb = y_ref[...]  # (BLOCK_N,)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        xty_ref[...] = jnp.zeros_like(xty_ref)
+
+    g_ref[...] += jnp.dot(xb.T, xb, preferred_element_type=jnp.float32)
+    xty_ref[...] += jnp.dot(xb.T, yb, preferred_element_type=jnp.float32)
+
+
+def gram(x, y):
+    """X^T X and X^T y over f32[GRAM_N, GRAM_P] / f32[GRAM_N] blocks."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((GRAM_P, GRAM_P), jnp.float32),
+            jax.ShapeDtypeStruct((GRAM_P,), jnp.float32),
+        ),
+        grid=(GRAM_N // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, GRAM_P), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((GRAM_P, GRAM_P), lambda i: (0, 0)),
+            pl.BlockSpec((GRAM_P,), lambda i: (0,)),
+        ),
+        interpret=True,
+    )(x, y)

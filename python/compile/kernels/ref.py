@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are validated against at build
+time (pytest + hypothesis), and they define the exact math the Rust
+native fallbacks replicate (rust/src/runtime/kernels.rs).
+"""
+
+import jax.numpy as jnp
+
+
+def chunk_map_ref(x):
+    """Elementwise 3x^2 + 2x + 1 — the paper's `slow_fcn` compute payload."""
+    return 3.0 * x * x + 2.0 * x + 1.0
+
+
+def boot_stat_ref(x, u, w):
+    """Weighted-ratio bootstrap statistic: (sum(w*x), sum(w*u)).
+
+    Returned as (numerator, denominator) so the division happens in f64
+    on the Rust side (padding rows carry w = 0 and drop out).
+    """
+    num = jnp.sum(w * x)
+    den = jnp.sum(w * u)
+    return num, den
+
+
+def gram_ref(x, y):
+    """Gram matrix X^T X and moment vector X^T y for a design matrix."""
+    return x.T @ x, x.T @ y

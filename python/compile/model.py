@@ -1,0 +1,54 @@
+"""L2: JAX compute graphs for the map-task payloads.
+
+Each function composes the L1 Pallas kernels into the jitted computation
+that `aot.py` lowers to HLO text (one artifact per function). All return
+tuples, matching the Rust loader's `to_tuple()` unwrapping.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import boot_stat as boot_stat_k
+from .kernels import chunk_map as chunk_map_k
+from .kernels import gram as gram_k
+
+
+def chunk_map_model(x):
+    """f32[128] -> (f32[128],): the slow_fcn compute payload."""
+    return (chunk_map_k.chunk_map(x),)
+
+
+def boot_stat_model(x, u, w):
+    """f32[64] x3 -> (f32[2],): weighted-ratio statistic (num, den)."""
+    num, den = boot_stat_k.boot_stat(x, u, w)
+    return (jnp.stack([num, den]),)
+
+
+def gram_model(x, y):
+    """f32[256,32], f32[256] -> (f32[32,32], f32[32])."""
+    g, xty = gram_k.gram(x, y)
+    return (g, xty)
+
+
+#: name -> (fn, example-argument shapes)
+ARTIFACTS = {
+    "chunk_map": (
+        chunk_map_model,
+        (jax.ShapeDtypeStruct((chunk_map_k.CHUNK_N,), jnp.float32),),
+    ),
+    "boot_stat": (
+        boot_stat_model,
+        (
+            jax.ShapeDtypeStruct((boot_stat_k.BOOT_N,), jnp.float32),
+            jax.ShapeDtypeStruct((boot_stat_k.BOOT_N,), jnp.float32),
+            jax.ShapeDtypeStruct((boot_stat_k.BOOT_N,), jnp.float32),
+        ),
+    ),
+    "gram": (
+        gram_model,
+        (
+            jax.ShapeDtypeStruct((gram_k.GRAM_N, gram_k.GRAM_P), jnp.float32),
+            jax.ShapeDtypeStruct((gram_k.GRAM_N,), jnp.float32),
+        ),
+    ),
+}

@@ -1,0 +1,169 @@
+"""Kernel-vs-reference correctness — the CORE L1 signal.
+
+Every Pallas kernel is checked against its pure-jnp oracle, with
+hypothesis sweeping input distributions and (where the kernel supports
+it) shapes/dtypes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import boot_stat, chunk_map, gram, ref
+
+finite_f32 = st.floats(
+    min_value=-1e3, max_value=1e3, allow_nan=False, allow_infinity=False, width=32
+)
+
+
+# ---------------------------------------------------------------------------
+# chunk_map
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_map_matches_ref_basic():
+    x = jnp.arange(chunk_map.CHUNK_N, dtype=jnp.float32) / 7.0
+    got = chunk_map.chunk_map(x)
+    want = ref.chunk_map_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(finite_f32, min_size=chunk_map.CHUNK_N, max_size=chunk_map.CHUNK_N))
+def test_chunk_map_matches_ref_hypothesis(vals):
+    x = jnp.asarray(vals, dtype=jnp.float32)
+    got = chunk_map.chunk_map(x)
+    want = ref.chunk_map_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_chunk_map_zero_padding_is_benign():
+    # Padding with zeros maps to the constant term only.
+    x = jnp.zeros(chunk_map.CHUNK_N, dtype=jnp.float32)
+    got = chunk_map.chunk_map(x)
+    np.testing.assert_allclose(got, jnp.ones_like(x))
+
+
+# ---------------------------------------------------------------------------
+# boot_stat
+# ---------------------------------------------------------------------------
+
+
+def test_boot_stat_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(40, 900, boot_stat.BOOT_N), dtype=jnp.float32)
+    u = jnp.asarray(rng.uniform(40, 900, boot_stat.BOOT_N), dtype=jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 2, boot_stat.BOOT_N), dtype=jnp.float32)
+    num, den = boot_stat.boot_stat(x, u, w)
+    rnum, rden = ref.boot_stat_ref(x, u, w)
+    np.testing.assert_allclose(num, rnum, rtol=1e-5)
+    np.testing.assert_allclose(den, rden, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(finite_f32, min_size=boot_stat.BOOT_N, max_size=boot_stat.BOOT_N),
+    st.lists(finite_f32, min_size=boot_stat.BOOT_N, max_size=boot_stat.BOOT_N),
+)
+def test_boot_stat_hypothesis(xv, uv):
+    x = jnp.asarray(xv, dtype=jnp.float32)
+    u = jnp.asarray(uv, dtype=jnp.float32)
+    w = jnp.ones(boot_stat.BOOT_N, dtype=jnp.float32)
+    num, den = boot_stat.boot_stat(x, u, w)
+    rnum, rden = ref.boot_stat_ref(x, u, w)
+    np.testing.assert_allclose(num, rnum, rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(den, rden, rtol=1e-4, atol=1e-2)
+
+
+def test_boot_stat_zero_weights_drop_rows():
+    # Padding rows (w = 0) contribute nothing.
+    x = jnp.full(boot_stat.BOOT_N, 100.0, dtype=jnp.float32)
+    u = jnp.full(boot_stat.BOOT_N, 50.0, dtype=jnp.float32)
+    w = jnp.zeros(boot_stat.BOOT_N, dtype=jnp.float32).at[:10].set(1.0)
+    num, den = boot_stat.boot_stat(x, u, w)
+    np.testing.assert_allclose(num, 1000.0, rtol=1e-6)
+    np.testing.assert_allclose(den, 500.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+
+
+def test_gram_matches_ref_basic():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(gram.GRAM_N, gram.GRAM_P)), dtype=jnp.float32)
+    y = jnp.asarray(rng.normal(size=gram.GRAM_N), dtype=jnp.float32)
+    g, xty = gram.gram(x, y)
+    rg, rxty = ref.gram_ref(x, y)
+    np.testing.assert_allclose(g, rg, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(xty, rxty, rtol=1e-4, atol=1e-3)
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(gram.GRAM_N, gram.GRAM_P)), dtype=jnp.float32)
+    y = jnp.zeros(gram.GRAM_N, dtype=jnp.float32)
+    g, _ = gram.gram(x, y)
+    np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-3)
+    eigs = np.linalg.eigvalsh(np.asarray(g, dtype=np.float64))
+    assert eigs.min() > -1e-2
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=1_000_000))
+def test_gram_hypothesis_random_seeds(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        rng.uniform(-3, 3, size=(gram.GRAM_N, gram.GRAM_P)), dtype=jnp.float32
+    )
+    y = jnp.asarray(rng.uniform(-3, 3, size=gram.GRAM_N), dtype=jnp.float32)
+    g, xty = gram.gram(x, y)
+    rg, rxty = ref.gram_ref(x, y)
+    np.testing.assert_allclose(g, rg, rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(xty, rxty, rtol=1e-4, atol=1e-2)
+
+
+def test_gram_zero_padding_rows_are_benign():
+    # Zero rows (the Rust side pads n < GRAM_N) leave G unchanged.
+    rng = np.random.default_rng(3)
+    half = gram.GRAM_N // 2
+    xs = rng.normal(size=(half, gram.GRAM_P)).astype(np.float32)
+    x_pad = jnp.asarray(np.vstack([xs, np.zeros((half, gram.GRAM_P), np.float32)]))
+    y_pad = jnp.zeros(gram.GRAM_N, dtype=jnp.float32)
+    g, _ = gram.gram(x_pad, y_pad)
+    np.testing.assert_allclose(g, xs.T @ xs, rtol=1e-4, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# model-level shapes (L2)
+# ---------------------------------------------------------------------------
+
+
+def test_models_produce_expected_shapes():
+    from compile.model import ARTIFACTS
+
+    import jax
+
+    for name, (fn, args) in ARTIFACTS.items():
+        out = jax.eval_shape(fn, *args)
+        assert isinstance(out, tuple), name
+        assert all(hasattr(o, "shape") for o in out), name
+
+
+def test_models_lower_to_hlo_text():
+    import jax
+
+    from compile.aot import to_hlo_text
+    from compile.model import ARTIFACTS
+
+    for name, (fn, args) in ARTIFACTS.items():
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        assert "HloModule" in text, name
+        assert len(text) > 100, name
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,63 @@
+//! Exp S48 — backend flexibility (§4.8): the same futurized script on
+//! every plan(), reporting walltime/speedup. The paper's claim is
+//! qualitative: same code, any backend; speedup shape follows worker
+//! count with per-backend overhead regimes (threads < processes <
+//! latency-injected cluster < polled batch queue).
+
+use futurize::bench_harness as bh;
+use futurize::prelude::*;
+
+const UNIT: f64 = 0.01;
+
+fn run_plan(plan: &str, label: &str, seq_mean: f64) {
+    let mut session = Session::with_config(SessionConfig { time_scale: UNIT });
+    session.eval_str(&format!("plan({plan})")).unwrap();
+    session
+        .eval_str("slow_fcn <- function(x) { Sys.sleep(1)\nx^2 }\nxs <- 1:24")
+        .unwrap();
+    // Warm the worker pool (plan instantiation is lazy).
+    session.eval_str("invisible(lapply(1:3, slow_fcn) |> futurize())").unwrap();
+    let st = bh::bench("backends", label, 0, 3, || {
+        session.eval_str("ys <- lapply(xs, slow_fcn) |> futurize()").unwrap();
+    });
+    bh::table_row(&[
+        label.to_string(),
+        format!("{:.3}s", st.mean_s),
+        format!("{:.2}x", seq_mean / st.mean_s),
+    ]);
+}
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+
+    let mut session = Session::with_config(SessionConfig { time_scale: UNIT });
+    session
+        .eval_str("slow_fcn <- function(x) { Sys.sleep(1)\nx^2 }\nxs <- 1:24")
+        .unwrap();
+    let seq = bh::bench("backends", "sequential", 0, 3, || {
+        session.eval_str("ys <- lapply(xs, slow_fcn)").unwrap();
+    });
+
+    bh::table_header(
+        "Backend flexibility (24 x 1-unit tasks; §4.8)",
+        &["plan()", "walltime", "speedup"],
+    );
+    bh::table_row(&["sequential".into(), format!("{:.3}s", seq.mean_s), "1.00x".into()]);
+    run_plan("multicore, workers = 4", "multicore-4", seq.mean_s);
+    run_plan("multisession, workers = 4", "multisession-4", seq.mean_s);
+    run_plan(
+        "future.mirai::mirai_multisession, workers = 4",
+        "mirai_multisession-4",
+        seq.mean_s,
+    );
+    run_plan(
+        "cluster, workers = c(\"n1\", \"n2\", \"n3\", \"n4\"), latency_ms = 0.5",
+        "cluster-4 (0.5ms links)",
+        seq.mean_s,
+    );
+    run_plan(
+        "future.batchtools::batchtools_slurm, workers = 4, poll_ms = 10",
+        "batchtools-4 (10ms poll)",
+        seq.mean_s,
+    );
+}

@@ -1,0 +1,52 @@
+//! Exp X1 — ablation of the unified `chunk_size`/`scheduling` options
+//! (§2.4): sweep chunk granularity on a low-latency backend (multicore)
+//! and a high-latency one (batchtools-sim). The crossover the options
+//! exist for: fine chunks balance load when dispatch is cheap; coarse
+//! chunks amortize submission cost when dispatch is expensive.
+
+use futurize::bench_harness as bh;
+use futurize::prelude::*;
+
+const UNIT: f64 = 0.004;
+
+fn sweep(plan: &str, label: &str) {
+    bh::table_header(
+        &format!("chunking sweep on {label} (48 tasks, 4 workers)"),
+        &["policy", "walltime"],
+    );
+    for (policy, opts) in [
+        ("scheduling = 1 (1 chunk/worker)", "scheduling = 1"),
+        ("scheduling = 4", "scheduling = 4"),
+        ("scheduling = Inf (1 elem/chunk)", "scheduling = Inf"),
+        ("chunk_size = 2", "chunk_size = 2"),
+        ("chunk_size = 24", "chunk_size = 24"),
+    ] {
+        let mut session = Session::with_config(SessionConfig { time_scale: UNIT });
+        session.eval_str(&format!("plan({plan})")).unwrap();
+        // Unbalanced workload: task x sleeps x/24 units, so coarse
+        // contiguous chunks are skewed and benefit from fine scheduling.
+        session
+            .eval_str("f <- function(x) { Sys.sleep(x / 24)\nx }\nxs <- 1:48")
+            .unwrap();
+        session.eval_str("invisible(lapply(1:2, f) |> futurize())").unwrap(); // warm pool
+        let st = bh::bench("chunking", &format!("{label}/{policy}"), 0, 3, || {
+            session
+                .eval_str(&format!("ys <- lapply(xs, f) |> futurize({opts})"))
+                .unwrap();
+        });
+        bh::table_row(&[policy.to_string(), format!("{:.3}s", st.mean_s)]);
+    }
+}
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+    sweep("multicore, workers = 4", "multicore (cheap dispatch)");
+    sweep(
+        "future.batchtools::batchtools_slurm, workers = 4, poll_ms = 8",
+        "batchtools (8ms poll latency)",
+    );
+    println!(
+        "\nexpected shape: fine chunks win on multicore (load balance), \
+         coarse chunks win on batchtools (amortize queue latency)"
+    );
+}

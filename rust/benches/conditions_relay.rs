@@ -1,0 +1,46 @@
+//! Exp S49 — cost of the "familiar behavior" guarantee: capturing and
+//! relaying stdout + conditions from workers, vs discarding them
+//! (stdout = FALSE, conditions = FALSE).
+
+use futurize::bench_harness as bh;
+use futurize::prelude::*;
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+
+    let mut session = Session::new();
+    session.eval_str("plan(multicore, workers = 2)").unwrap();
+    session
+        .eval_str(
+            "noisy <- function(x) {\n  cat(\"out\", x, \"\\n\")\n  message(\"msg \", x)\n  x\n}\nxs <- 1:200",
+        )
+        .unwrap();
+    session.eval_str("invisible(lapply(1:2, function(x) x) |> futurize())").unwrap();
+
+    let relay_on = bh::bench("conditions", "relay_on_200_noisy_tasks", 1, 8, || {
+        let (_, _out) = session
+            .eval_captured("ys <- lapply(xs, noisy) |> futurize()");
+    });
+    let relay_off = bh::bench("conditions", "relay_off_200_noisy_tasks", 1, 8, || {
+        let (_, _out) = session.eval_captured(
+            "ys <- lapply(xs, noisy) |> futurize(stdout = FALSE, conditions = FALSE)",
+        );
+    });
+    let quiet = bh::bench("conditions", "quiet_tasks_baseline", 1, 8, || {
+        session.eval_str("ys <- lapply(xs, function(x) x) |> futurize()").unwrap();
+    });
+
+    println!(
+        "\nrelay cost per noisy task: {:.1}us (on) vs {:.1}us (off); quiet baseline {:.1}us",
+        relay_on.mean_s / 200.0 * 1e6,
+        relay_off.mean_s / 200.0 * 1e6,
+        quiet.mean_s / 200.0 * 1e6,
+    );
+
+    // Semantics check: suppression works through the relay (§4.9).
+    let (_, out) = session.eval_captured(
+        "ys <- lapply(1:3, function(x) { message(\"m\", x)\nx }) |> suppressMessages() |> futurize()",
+    );
+    assert!(!out.contains('m'), "suppressMessages must silence relayed messages");
+    println!("suppressMessages() through relay: OK");
+}

@@ -1,0 +1,47 @@
+//! Exp F1 — the paper's Figure 1: 8 one-unit tasks, sequential vs
+//! futurized on 3 workers. Checks the *shape*: parallel walltime ≈
+//! ceil(8/3) task-units, tasks spread across all workers.
+
+use futurize::bench_harness as bh;
+use futurize::prelude::*;
+
+const UNIT: f64 = 0.02; // seconds per task (scaled from the paper's 1s)
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+
+    let mut session = Session::with_config(SessionConfig { time_scale: UNIT });
+    session
+        .eval_str("fcn <- function(x) { Sys.sleep(1)\nx^2 }\nxs <- 1:8")
+        .unwrap();
+
+    let seq = bh::bench("figure1", "sequential_8_tasks", 1, 5, || {
+        session.eval_str("ys <- lapply(xs, fcn)").unwrap();
+    });
+
+    session.eval_str("plan(multicore, workers = 3)").unwrap();
+    let par = bh::bench("figure1", "futurized_3_workers", 1, 5, || {
+        session
+            .eval_str("ys <- lapply(xs, fcn) |> futurize(scheduling = Inf)")
+            .unwrap();
+    });
+
+    bh::table_header(
+        "Figure 1 shape (task-units of walltime; paper: 8 seq vs 3 par)",
+        &["variant", "task-units", "ideal"],
+    );
+    bh::table_row(&["sequential".into(), format!("{:.2}", seq.mean_s / UNIT), "8".into()]);
+    bh::table_row(&["futurized(3)".into(), format!("{:.2}", par.mean_s / UNIT), "3".into()]);
+    println!("\nspeedup {:.2}x (ideal 2.67x)", seq.mean_s / par.mean_s);
+    println!("\ntimeline of the last run:\n{}", session.render_trace());
+
+    let workers: std::collections::HashSet<usize> =
+        session.last_trace().iter().map(|e| e.worker).collect();
+    assert_eq!(session.last_trace().len(), 8, "8 tasks traced");
+    assert!(workers.len() >= 2, "tasks should spread across workers");
+    assert!(
+        seq.mean_s / par.mean_s > 1.6,
+        "parallel run should beat sequential (got {:.2}x)",
+        seq.mean_s / par.mean_s
+    );
+}

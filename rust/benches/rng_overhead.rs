@@ -1,0 +1,51 @@
+//! Exp X2 — `seed = TRUE` cost: pre-allocating one L'Ecuyer-CMRG stream
+//! per element (2 modular 3x3 matrix products each) vs no RNG
+//! management, plus the raw stream-generation rate.
+
+use futurize::bench_harness as bh;
+use futurize::prelude::*;
+use futurize::rng::make_streams;
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+
+    // Raw stream allocation rate.
+    let st = bh::bench("rng", "make_streams_10k", 2, 10, || {
+        let streams = make_streams(42, 10_000);
+        assert_eq!(streams.len(), 10_000);
+    });
+    println!(
+        "per-element stream cost: {:.0}ns",
+        st.mean_s / 10_000.0 * 1e9
+    );
+
+    // End-to-end: futurized map with and without seed over 1000 elements.
+    let mut session = Session::new();
+    session.eval_str("plan(multicore, workers = 2)").unwrap();
+    session.eval_str("xs <- 1:1000\nf <- function(x) x + 1").unwrap();
+    session.eval_str("invisible(lapply(xs, f) |> futurize())").unwrap();
+
+    let no_seed = bh::bench("rng", "futurize_1000_no_seed", 1, 10, || {
+        session.eval_str("ys <- lapply(xs, f) |> futurize()").unwrap();
+    });
+    let with_seed = bh::bench("rng", "futurize_1000_seed_true", 1, 10, || {
+        session.eval_str("ys <- lapply(xs, f) |> futurize(seed = TRUE)").unwrap();
+    });
+    println!(
+        "\nseed = TRUE overhead: {:+.1}% ({:.2}ms -> {:.2}ms)",
+        (with_seed.mean_s / no_seed.mean_s - 1.0) * 100.0,
+        no_seed.mean_s * 1e3,
+        with_seed.mean_s * 1e3
+    );
+
+    // Reproducibility invariant (the property the cost buys).
+    let draw = |workers: usize| {
+        let mut s = Session::new();
+        s.eval_str(&format!("plan(multicore, workers = {workers})")).unwrap();
+        s.eval_str("futureSeed(7)").unwrap();
+        s.eval_str("unlist(lapply(1:16, function(x) rnorm(1)) |> futurize(seed = TRUE))")
+            .unwrap()
+    };
+    assert_eq!(draw(1), draw(4), "seed = TRUE must be worker-count invariant");
+    println!("reproducibility across worker counts: OK");
+}

@@ -1,0 +1,110 @@
+//! Exp T1 — Table 1 coverage: every registered map-reduce function is
+//! futurized on a shared fixture; we verify identical-to-sequential
+//! results and report per-call futurize overhead (transpile + dispatch).
+
+use futurize::bench_harness as bh;
+use futurize::prelude::*;
+
+/// (label, setup, sequential expr, futurized expr)
+const CASES: &[(&str, &str, &str, &str)] = &[
+    ("base::lapply", "", "lapply(xs, f)", "lapply(xs, f) |> futurize()"),
+    ("base::sapply", "", "sapply(xs, f)", "sapply(xs, f) |> futurize()"),
+    ("base::vapply", "", "vapply(xs, f, numeric(1))", "vapply(xs, f, numeric(1)) |> futurize()"),
+    ("base::mapply", "", "mapply(g2, xs, ys)", "mapply(g2, xs, ys) |> futurize()"),
+    ("base::Map", "", "Map(g2, xs, ys)", "Map(g2, xs, ys) |> futurize()"),
+    ("base::apply", "m <- matrix(1:24, nrow = 4)", "apply(m, 2, sum)", "apply(m, 2, sum) |> futurize()"),
+    ("base::tapply", "", "tapply(vals, grp, sum)", "tapply(vals, grp, sum) |> futurize()"),
+    ("base::by", "df <- data.frame(g = grp, v = vals)", "by(df, grp, function(d) sum(d$v))", "by(df, grp, function(d) sum(d$v)) |> futurize()"),
+    ("base::eapply", "e <- new.env()\ne$a <- 1\ne$b <- 2", "eapply(e, f)", "eapply(e, f) |> futurize()"),
+    ("base::replicate", "", "{ futureSeed(1)\nreplicate(6, rnorm(3)) |> futurize() }", "{ futureSeed(1)\nreplicate(6, rnorm(3)) |> futurize() }"),
+    ("base::Filter", "", "Filter(pos, xs)", "Filter(pos, xs) |> futurize()"),
+    ("base::.mapply", "", ".mapply(g2, list(xs, ys), NULL)", ".mapply(g2, list(xs, ys), NULL) |> futurize()"),
+    ("stats::kernapply", "", "kernapply(vals, k3)", "kernapply(vals, k3) |> futurize()"),
+    ("purrr::map", "", "map(xs, f)", "map(xs, f) |> futurize()"),
+    ("purrr::map_dbl", "", "map_dbl(xs, f)", "map_dbl(xs, f) |> futurize()"),
+    ("purrr::map_chr", "", "map_chr(xs, function(x) paste0(\"v\", x))", "map_chr(xs, function(x) paste0(\"v\", x)) |> futurize()"),
+    ("purrr::map2", "", "map2(xs, ys, g2)", "map2(xs, ys, g2) |> futurize()"),
+    ("purrr::pmap", "", "pmap(list(xs, ys), g2)", "pmap(list(xs, ys), g2) |> futurize()"),
+    ("purrr::imap", "", "imap(named, function(x, nm) paste0(nm, x))", "imap(named, function(x, nm) paste0(nm, x)) |> futurize()"),
+    ("purrr::modify", "", "modify(xs, f)", "modify(xs, f) |> futurize()"),
+    ("purrr::map_if", "", "map_if(xs, pos, f)", "map_if(xs, pos, f) |> futurize()"),
+    ("purrr::map_at", "", "map_at(xs, c(1, 2), f)", "map_at(xs, c(1, 2), f) |> futurize()"),
+    ("purrr::walk", "", "walk(xs, f)", "walk(xs, f) |> futurize()"),
+    ("crossmap::xmap", "", "crossmap::xmap_dbl(list(1:3, 1:2), g2)", "crossmap::xmap_dbl(list(1:3, 1:2), g2) |> futurize()"),
+    ("crossmap::map_vec", "", "crossmap::map_vec(xs, f)", "crossmap::map_vec(xs, f) |> futurize()"),
+    ("foreach::%do%", "", "foreach(x = xs, .combine = c) %do% { f(x) }", "foreach(x = xs, .combine = c) %do% { f(x) } |> futurize()"),
+    ("foreach::times", "", "{ futureSeed(1)\ntimes(5) %do% rnorm(2) |> futurize() }", "{ futureSeed(1)\ntimes(5) %do% rnorm(2) |> futurize() }"),
+    ("plyr::llply", "", "llply(xs, f)", "llply(xs, f) |> futurize()"),
+    ("plyr::laply", "", "laply(xs, f)", "laply(xs, f) |> futurize()"),
+    ("plyr::ldply", "", "ldply(xs, function(x) list(v = x))", "ldply(xs, function(x) list(v = x)) |> futurize()"),
+    ("plyr::ddply", "df <- data.frame(g = grp, v = vals)", "ddply(df, \"g\", function(d) list(s = sum(d$v)))", "ddply(df, \"g\", function(d) list(s = sum(d$v))) |> futurize()"),
+    ("plyr::mlply", "df2 <- data.frame(a = 1:3, b = 4:6)", "mlply(df2, g2)", "mlply(df2, g2) |> futurize()"),
+    ("BiocParallel::bplapply", "", "bplapply(xs, f)", "bplapply(xs, f) |> futurize()"),
+    ("BiocParallel::bpmapply", "", "bpmapply(g2, xs, ys)", "bpmapply(g2, xs, ys) |> futurize()"),
+    ("BiocParallel::bpvec", "", "bpvec(vals, function(v) v * 2)", "bpvec(vals, function(v) v * 2) |> futurize()"),
+    ("BiocParallel::bpaggregate", "", "bpaggregate(vals, grp, sum)", "bpaggregate(vals, grp, sum) |> futurize()"),
+];
+
+const FIXTURE: &str = "
+f <- function(x) x^2
+g2 <- function(a, b) a + b
+pos <- function(x) x > 2
+xs <- 1:6
+ys <- 11:16
+vals <- c(1, 5, 2, 8, 3, 9)
+grp <- c(\"a\", \"b\", \"a\", \"b\", \"a\", \"b\")
+named <- c(p = 1, q = 2)
+k3 <- c(0.25, 0.5, 0.25)
+";
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+
+    bh::table_header(
+        "Table 1 coverage: futurized == sequential, with per-call overhead",
+        &["function", "identical", "seq", "futurized"],
+    );
+    let mut all_ok = true;
+    for (label, setup, seq_src, fut_src) in CASES {
+        let mut s1 = Session::new();
+        s1.eval_str(FIXTURE).unwrap();
+        if !setup.is_empty() {
+            s1.eval_str(setup).unwrap();
+        }
+        let seq_v = s1.eval_str(seq_src).unwrap_or_else(|e| panic!("{label} seq: {e}"));
+
+        let mut s2 = Session::new();
+        s2.eval_str(FIXTURE).unwrap();
+        s2.eval_str("plan(multicore, workers = 2)").unwrap();
+        if !setup.is_empty() {
+            s2.eval_str(setup).unwrap();
+        }
+        let fut_v = s2.eval_str(fut_src).unwrap_or_else(|e| panic!("{label} fut: {e}"));
+
+        let identical = seq_v == fut_v;
+        all_ok &= identical;
+
+        let t0 = std::time::Instant::now();
+        for _ in 0..20 {
+            s1.eval_str(seq_src).unwrap();
+        }
+        let seq_t = t0.elapsed().as_secs_f64() / 20.0;
+        let t0 = std::time::Instant::now();
+        for _ in 0..20 {
+            s2.eval_str(fut_src).unwrap();
+        }
+        let fut_t = t0.elapsed().as_secs_f64() / 20.0;
+        bh::table_row(&[
+            label.to_string(),
+            if identical { "yes".into() } else { "NO".into() },
+            format!("{:.0}us", seq_t * 1e6),
+            format!("{:.0}us", fut_t * 1e6),
+        ]);
+    }
+    println!(
+        "\ncovered {} of the paper's Table-1 functions; identical results: {}",
+        CASES.len(),
+        if all_ok { "ALL" } else { "MISMATCH — see rows above" }
+    );
+    assert!(all_ok, "Table-1 equivalence violated");
+}

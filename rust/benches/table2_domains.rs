@@ -1,0 +1,101 @@
+//! Exp T2 — Table 2: domain-specific functions futurized, comparing
+//! sequential vs futurized walltime and verifying identical results
+//! where determinism applies.
+
+use futurize::bench_harness as bh;
+use futurize::prelude::*;
+
+struct Case {
+    label: &'static str,
+    setup: &'static str,
+    body: &'static str,
+    futurized: &'static str,
+    check: &'static str,
+}
+
+const CASES: &[Case] = &[
+    Case {
+        label: "boot::boot (R = 200)",
+        setup: "data(bigcity)\nratio <- function(d, w) hlo_boot_stat(d$x, d$u, w)",
+        body: "b <- boot(bigcity, statistic = ratio, R = 200, stype = \"w\") |> futurize()",
+        futurized: "b <- boot(bigcity, statistic = ratio, R = 200, stype = \"w\") |> futurize()",
+        check: "round(mean(b$t), 6)",
+    },
+    Case {
+        label: "glmnet::cv.glmnet (n=400, p=20)",
+        setup: "set.seed(5)\nx <- matrix(rnorm(400 * 20), nrow = 400, ncol = 20)\ny <- rnorm(400)",
+        body: "cv <- cv.glmnet(x, y, nfolds = 5, nlambda = 10)",
+        futurized: "cv <- cv.glmnet(x, y, nfolds = 5, nlambda = 10) |> futurize()",
+        check: "round(min(cv$cvm), 6)",
+    },
+    Case {
+        label: "lme4::allFit (7 optimizers)",
+        setup: "set.seed(6)\nn <- 120\ng <- rep(letters[1:4], each = 30)\nxv <- rnorm(n)\nyv <- 1 + 2 * xv + rnorm(n)\ndf <- data.frame(y = yv, x = xv, g = g)\nm <- lmer(y ~ x + (1 | g), data = df)",
+        body: "fits <- allFit(m)",
+        futurized: "fits <- allFit(m) |> futurize()",
+        check: "round(min(sapply(fits, function(f) f$deviance)), 4)",
+    },
+    Case {
+        label: "caret::train (knn, 8-fold cv)",
+        setup: "data(iris)\nctrl <- trainControl(method = \"cv\", number = 8)",
+        body: "mod <- train(Species ~ ., data = iris, method = \"knn\", trControl = ctrl)",
+        futurized: "mod <- train(Species ~ ., data = iris, method = \"knn\", trControl = ctrl) |> futurize()",
+        check: "round(mod$bestAccuracy, 4)",
+    },
+    Case {
+        label: "mgcv::bam (n=2000, PJRT gram)",
+        setup: "set.seed(7)\nn <- 2000\nxv <- runif(n, 0, 10)\nyv <- sin(xv) + rnorm(n, sd = 0.1)\ndf <- data.frame(y = yv, x = xv)",
+        body: "m <- bam(y ~ s(x), data = df, sp = 0.5)",
+        futurized: "m <- bam(y ~ s(x), data = df, sp = 0.5) |> futurize()",
+        check: "round(m$rmse, 6)",
+    },
+    Case {
+        label: "tm::tm_map + TermDocumentMatrix",
+        setup: "data(crude)\ncorpus <- Corpus(VectorSource(rep(crude, 10)))",
+        body: "clean <- tm_map(corpus, tolower)\ntdm <- TermDocumentMatrix(clean)",
+        futurized: "clean <- tm_map(corpus, tolower) |> futurize()\ntdm <- TermDocumentMatrix(clean)",
+        check: "length(tdm$terms)",
+    },
+];
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+
+    bh::table_header(
+        "Table 2 domains: sequential vs futurized (multicore, 3 workers)",
+        &["function", "seq", "futurized", "speedup", "check seq", "check fut"],
+    );
+    for c in CASES {
+        // Sequential.
+        let mut s1 = Session::new();
+        s1.eval_str("futureSeed(11)").unwrap();
+        s1.eval_str(c.setup).unwrap_or_else(|e| panic!("{}: {e}", c.label));
+        // For the boot case, "sequential" still needs seed=TRUE semantics
+        // for comparability; run the futurized form on plan(sequential).
+        let t0 = std::time::Instant::now();
+        s1.eval_str(c.body).unwrap_or_else(|e| panic!("{} seq: {e}", c.label));
+        let seq_t = t0.elapsed().as_secs_f64();
+        let seq_check = s1.eval_str(c.check).unwrap();
+
+        // Futurized on 3 workers.
+        let mut s2 = Session::new();
+        s2.eval_str("plan(multicore, workers = 3)").unwrap();
+        s2.eval_str("futureSeed(11)").unwrap();
+        s2.eval_str(c.setup).unwrap();
+        let t0 = std::time::Instant::now();
+        s2.eval_str(c.futurized).unwrap_or_else(|e| panic!("{} fut: {e}", c.label));
+        let fut_t = t0.elapsed().as_secs_f64();
+        let fut_check = s2.eval_str(c.check).unwrap();
+
+        bh::table_row(&[
+            c.label.to_string(),
+            format!("{:.3}s", seq_t),
+            format!("{:.3}s", fut_t),
+            format!("{:.2}x", seq_t / fut_t),
+            format!("{seq_check}"),
+            format!("{fut_check}"),
+        ]);
+        assert_eq!(seq_check, fut_check, "{}: futurized result diverged", c.label);
+    }
+    println!("\nall Table-2 domain results identical under futurization");
+}

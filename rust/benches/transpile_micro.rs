@@ -1,0 +1,52 @@
+//! Exp T1 micro — the futurize() mechanism itself: parse, capture,
+//! identify, registry lookup, rewrite, deparse. The paper's implicit
+//! claim is that the transpilation layer is negligible next to any real
+//! map body.
+
+use futurize::bench_harness as bh;
+use futurize::prelude::*;
+use futurize::transpile::{transpile_expr, FuturizeOptions};
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+
+    let cases = [
+        ("lapply", "lapply(xs, fcn)"),
+        ("purrr_map", "map(xs, fcn)"),
+        ("foreach_do", "foreach(x = xs) %do% { fcn(x) }"),
+        ("wrapped", "suppressMessages(local({ p <- 1\nlapply(xs, fcn) }))"),
+        ("domain_boot", "boot(bigcity, statistic = ratio, R = 999, stype = \"w\")"),
+    ];
+
+    bh::table_header("futurize() transpile cost", &["call", "per-transpile"]);
+    for (name, src) in cases {
+        let expr = parse_expr(src).unwrap();
+        let opts = FuturizeOptions::default();
+        let st = bh::bench("transpile", name, 100, 10, || {
+            for _ in 0..1000 {
+                let out = transpile_expr(&expr, &opts).unwrap();
+                std::hint::black_box(&out);
+            }
+        });
+        bh::table_row(&[name.to_string(), format!("{:.2}us", st.mean_s / 1000.0 * 1e6)]);
+    }
+
+    // End-to-end futurize() dispatch on a trivial body (pure overhead).
+    let mut session = Session::new();
+    session.eval_str("xs <- 1:4\nfcn <- function(x) x").unwrap();
+    let plain = bh::bench("transpile", "eval_lapply_plain", 10, 10, || {
+        for _ in 0..100 {
+            session.eval_str("lapply(xs, fcn)").unwrap();
+        }
+    });
+    let fut = bh::bench("transpile", "eval_lapply_futurized_seq", 10, 10, || {
+        for _ in 0..100 {
+            session.eval_str("lapply(xs, fcn) |> futurize()").unwrap();
+        }
+    });
+    println!(
+        "\nfuturize() overhead on plan(sequential): {:.1}us/call (plain {:.1}us)",
+        (fut.mean_s - plain.mean_s) / 100.0 * 1e6,
+        plain.mean_s / 100.0 * 1e6
+    );
+}

@@ -1,0 +1,103 @@
+//! Local `serde` facade for offline builds.
+//!
+//! The vendored crate set contains `serde_core` (the implementation) and
+//! `serde_derive` (the macros) but not the `serde` facade crate that
+//! derive-generated code links against (`extern crate serde as _serde`).
+//! This shim plays that role: it re-exports all of serde_core, neutralizes
+//! the `__require_serde_not_serde_core!` guard, and provides the
+//! `__private228::{de, ser}` helpers the derives reference.
+
+pub use serde_core::*;
+
+/// The guard serde_core arms to reject deriving directly against it; the
+/// facade defines it as a no-op (exactly as the real `serde` crate does).
+#[macro_export]
+macro_rules! __require_serde_not_serde_core {
+    () => {};
+}
+
+#[doc(hidden)]
+pub mod __private228 {
+    #[doc(hidden)]
+    pub use serde_core::__private228::*;
+
+    #[doc(hidden)]
+    pub use core::clone::Clone;
+    #[doc(hidden)]
+    pub use core::convert::{From, Into, TryFrom};
+    #[doc(hidden)]
+    pub use core::default::Default;
+    #[doc(hidden)]
+    pub use core::fmt::{self, Formatter};
+    #[doc(hidden)]
+    pub use core::marker::PhantomData;
+    #[doc(hidden)]
+    pub use core::option::Option::{self, None, Some};
+    #[doc(hidden)]
+    pub use core::result::Result::{self, Err, Ok};
+    #[doc(hidden)]
+    pub use std::string::String;
+    #[doc(hidden)]
+    pub use std::vec::Vec;
+
+    /// Used by derive codegen when deserializing identifiers from bytes.
+    #[doc(hidden)]
+    pub fn from_utf8_lossy(bytes: &[u8]) -> std::borrow::Cow<'_, str> {
+        std::string::String::from_utf8_lossy(bytes)
+    }
+
+    #[doc(hidden)]
+    pub mod de {
+        #[doc(hidden)]
+        pub use serde_core::__private228::InPlaceSeed;
+        use serde_core::de::{Deserialize, Deserializer, Error, Visitor};
+
+        /// Deserialize a missing struct field: succeeds only for types
+        /// (like `Option<T>`) that accept "none".
+        #[doc(hidden)]
+        pub fn missing_field<'de, V, E>(field: &'static str) -> Result<V, E>
+        where
+            V: Deserialize<'de>,
+            E: Error,
+        {
+            struct MissingFieldDeserializer<E>(&'static str, core::marker::PhantomData<E>);
+
+            impl<'de, E: Error> Deserializer<'de> for MissingFieldDeserializer<E> {
+                type Error = E;
+
+                fn deserialize_any<V2: Visitor<'de>>(
+                    self,
+                    _visitor: V2,
+                ) -> Result<V2::Value, E> {
+                    Err(Error::missing_field(self.0))
+                }
+
+                fn deserialize_option<V2: Visitor<'de>>(
+                    self,
+                    visitor: V2,
+                ) -> Result<V2::Value, E> {
+                    visitor.visit_none()
+                }
+
+                serde_core::forward_to_deserialize_any! {
+                    bool i8 i16 i32 i64 i128 u8 u16 u32 u64 u128 f32 f64 char
+                    str string bytes byte_buf unit unit_struct newtype_struct
+                    seq tuple tuple_struct map struct enum identifier
+                    ignored_any
+                }
+            }
+
+            let deserializer = MissingFieldDeserializer(field, core::marker::PhantomData);
+            Deserialize::deserialize(deserializer)
+        }
+
+        #[allow(unused_imports)]
+        use serde_core::de::DeserializeSeed as _;
+    }
+
+    /// Serialization helpers for exotic enum representations (internally/
+    /// adjacently tagged, flatten). This crate's types use the default
+    /// externally-tagged representation, so these are not exercised.
+    #[doc(hidden)]
+    pub mod ser {}
+}

@@ -1,0 +1,449 @@
+//! Sequential base-R map-reduce functions (paper Table 1, rows
+//! "base"/"stats"). These are the forms users write; `futurize()`
+//! rewrites them into the [`super::future_apply`] forms.
+
+use super::{as_function, seq_map, simplify_to};
+use crate::rlite::ast::Arg;
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::{RList, RVal};
+
+pub fn register(r: &mut Reg) {
+    r.normal("base", "lapply", lapply_fn);
+    r.normal("base", "sapply", sapply_fn);
+    r.normal("base", "vapply", vapply_fn);
+    r.normal("base", "mapply", mapply_fn);
+    r.normal("base", ".mapply", dot_mapply_fn);
+    r.normal("base", "Map", map_base_fn);
+    r.normal("base", "apply", apply_fn);
+    r.normal("base", "tapply", tapply_fn);
+    r.normal("base", "by", by_fn);
+    r.normal("base", "eapply", eapply_fn);
+    r.special("base", "replicate", replicate_fn);
+    r.normal("base", "Filter", filter_fn);
+    r.normal("stats", "kernapply", kernapply_fn);
+}
+
+/// Split `(X, FUN, ...)` and resolve FUN.
+fn xf_args(
+    args: &Args,
+    env: &EnvRef,
+    x_name: &str,
+    f_name: &str,
+) -> Result<(RVal, RVal, Vec<(Option<String>, RVal)>), Signal> {
+    let b = args.bind(&[x_name, f_name]);
+    let x = b.req(0, x_name)?;
+    let f = as_function(&b.req(1, f_name)?, env)?;
+    Ok((x, f, b.rest))
+}
+
+fn lapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (x, f, extra) = xf_args(&args, env, "X", "FUN")?;
+    let results = seq_map(i, env, &x.iter_elements(), &f, &extra)?;
+    simplify_to(results, x.element_names(), "list")
+}
+
+fn sapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (x, f, extra) = xf_args(&args, env, "X", "FUN")?;
+    let extra: Vec<_> =
+        extra.into_iter().filter(|(n, _)| n.as_deref() != Some("simplify")).collect();
+    let results = seq_map(i, env, &x.iter_elements(), &f, &extra)?;
+    let names = x.element_names().or_else(|| {
+        // sapply over character vectors uses the values as names, as in R.
+        match &x {
+            RVal::Chr(v) => Some(v.vals.clone()),
+            _ => None,
+        }
+    });
+    simplify_to(results, names, "auto")
+}
+
+fn vapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["X", "FUN", "FUN.VALUE"]);
+    let x = b.req(0, "X")?;
+    let f = as_function(&b.req(1, "FUN")?, env)?;
+    let proto = b.req(2, "FUN.VALUE")?;
+    let results = seq_map(i, env, &x.iter_elements(), &f, &b.rest)?;
+    // Type/length check against the prototype.
+    for r in &results {
+        if r.len() != proto.len() {
+            return Err(Signal::error(format!(
+                "values must be length {}, but FUN(X[[i]]) result is length {}",
+                proto.len(),
+                r.len()
+            )));
+        }
+        if r.class() != proto.class() && !(proto.class() == "numeric" && r.class() == "integer")
+        {
+            return Err(Signal::error(format!(
+                "values must be type '{}', but FUN(X[[i]]) result is type '{}'",
+                proto.class(),
+                r.class()
+            )));
+        }
+    }
+    let want = match proto.class() {
+        "numeric" | "integer" => "dbl",
+        "character" => "chr",
+        "logical" => "lgl",
+        _ => "auto",
+    };
+    simplify_to(results, x.element_names(), want)
+}
+
+/// mapply(FUN, ..., MoreArgs = NULL): zip the `...` collections.
+fn mapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["FUN"]);
+    let f = as_function(&b.req(0, "FUN")?, env)?;
+    let mut seqs: Vec<(Option<String>, Vec<RVal>)> = Vec::new();
+    let mut more: Vec<(Option<String>, RVal)> = Vec::new();
+    for (name, v) in b.rest {
+        if name.as_deref() == Some("MoreArgs") {
+            if let RVal::List(l) = v {
+                for (k, mv) in l.vals.iter().enumerate() {
+                    let nm = l.names.as_ref().and_then(|ns| ns.get(k)).cloned();
+                    more.push((nm, mv.clone()));
+                }
+            }
+        } else if name.as_deref() == Some("SIMPLIFY") {
+            // handled below via auto
+        } else {
+            seqs.push((name, v.iter_elements()));
+        }
+    }
+    if seqs.is_empty() {
+        return Err(Signal::error("mapply: no arguments to map over"));
+    }
+    let n = seqs.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+    let mut results = Vec::with_capacity(n);
+    for k in 0..n {
+        let mut call_args: Vec<(Option<String>, RVal)> = seqs
+            .iter()
+            .map(|(nm, s)| (nm.clone(), s[k % s.len()].clone()))
+            .collect();
+        call_args.extend(more.iter().cloned());
+        results.push(i.call_function(&f, call_args, env)?);
+    }
+    simplify_to(results, None, "auto")
+}
+
+fn dot_mapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["FUN", "dots", "MoreArgs"]);
+    let f = as_function(&b.req(0, "FUN")?, env)?;
+    let dots = match b.req(1, "dots")? {
+        RVal::List(l) => l,
+        other => return Err(Signal::error(format!(".mapply: dots must be a list, got {}", other.class()))),
+    };
+    let seqs: Vec<Vec<RVal>> = dots.vals.iter().map(|v| v.iter_elements()).collect();
+    let n = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut results = Vec::with_capacity(n);
+    for k in 0..n {
+        let call_args: Vec<(Option<String>, RVal)> =
+            seqs.iter().map(|s| (None, s[k % s.len()].clone())).collect();
+        results.push(i.call_function(&f, call_args, env)?);
+    }
+    simplify_to(results, None, "list")
+}
+
+/// Map(f, ...): mapply without simplification.
+fn map_base_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["f"]);
+    let f = as_function(&b.req(0, "f")?, env)?;
+    let seqs: Vec<Vec<RVal>> = b.rest.iter().map(|(_, v)| v.iter_elements()).collect();
+    let n = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut results = Vec::with_capacity(n);
+    for k in 0..n {
+        let call_args: Vec<(Option<String>, RVal)> =
+            seqs.iter().map(|s| (None, s[k % s.len()].clone())).collect();
+        results.push(i.call_function(&f, call_args, env)?);
+    }
+    simplify_to(results, None, "list")
+}
+
+/// apply(X, MARGIN, FUN): X is our column-list "matrix".
+fn apply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["X", "MARGIN", "FUN"]);
+    let x = b.req(0, "X")?;
+    let margin = b.req(1, "MARGIN")?.as_usize().map_err(Signal::error)?;
+    let f = as_function(&b.req(2, "FUN")?, env)?;
+    let cols = match &x {
+        RVal::List(l) => l.vals.clone(),
+        other => vec![other.clone()],
+    };
+    let items: Vec<RVal> = match margin {
+        2 => cols,
+        1 => {
+            let nrow = cols.first().map(|c| c.len()).unwrap_or(0);
+            (0..nrow)
+                .map(|r| {
+                    let row: Vec<f64> = cols
+                        .iter()
+                        .map(|c| c.as_dbl_vec().map(|v| v[r]).unwrap_or(f64::NAN))
+                        .collect();
+                    RVal::dbl(row)
+                })
+                .collect()
+        }
+        other => return Err(Signal::error(format!("apply: MARGIN must be 1 or 2, got {other}"))),
+    };
+    let results = seq_map(i, env, &items, &f, &b.rest)?;
+    simplify_to(results, None, "auto")
+}
+
+/// tapply(X, INDEX, FUN): group X by INDEX values, apply FUN per group.
+fn tapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["X", "INDEX", "FUN"]);
+    let x = b.req(0, "X")?;
+    let index = b.req(1, "INDEX")?.as_str_vec().map_err(Signal::error)?;
+    let f = as_function(&b.req(2, "FUN")?, env)?;
+    let (groups, items) = group_by(&x, &index)?;
+    let results = seq_map(i, env, &items, &f, &b.rest)?;
+    simplify_to(results, Some(groups), "auto")
+}
+
+pub(crate) fn group_by(x: &RVal, index: &[String]) -> Result<(Vec<String>, Vec<RVal>), Signal> {
+    let elems = x.iter_elements();
+    if elems.len() != index.len() {
+        return Err(Signal::error("arguments must have same length"));
+    }
+    let mut groups: Vec<String> = index.to_vec();
+    groups.sort();
+    groups.dedup();
+    let mut items = Vec::with_capacity(groups.len());
+    for g in &groups {
+        let members: Vec<RVal> = elems
+            .iter()
+            .zip(index)
+            .filter(|(_, idx)| *idx == g)
+            .map(|(e, _)| e.clone())
+            .collect();
+        items.push(
+            crate::rlite::builtins::core::combine(members.into_iter().map(|v| (None, v)).collect())
+                .unwrap_or(RVal::Null),
+        );
+    }
+    Ok((groups, items))
+}
+
+/// by(data, INDICES, FUN): split a data.frame by row groups.
+fn by_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["data", "INDICES", "FUN"]);
+    let data = b.req(0, "data")?;
+    let idx = b.req(1, "INDICES")?.as_str_vec().map_err(Signal::error)?;
+    let f = as_function(&b.req(2, "FUN")?, env)?;
+    let RVal::List(df) = &data else {
+        return Err(Signal::error("by: data must be a data.frame"));
+    };
+    let mut groups: Vec<String> = idx.clone();
+    groups.sort();
+    groups.dedup();
+    let mut items = Vec::with_capacity(groups.len());
+    for g in &groups {
+        let rows: Vec<usize> =
+            idx.iter().enumerate().filter(|(_, v)| *v == g).map(|(k, _)| k).collect();
+        let cols: Vec<RVal> = df
+            .vals
+            .iter()
+            .map(|c| {
+                crate::rlite::eval::index_get(
+                    c,
+                    &[RVal::dbl(rows.iter().map(|&r| (r + 1) as f64).collect())],
+                    false,
+                )
+                .unwrap_or(RVal::Null)
+            })
+            .collect();
+        let mut sub = RList { vals: cols, names: df.names.clone(), class: df.class.clone() };
+        sub.class = Some("data.frame".into());
+        items.push(RVal::List(sub));
+    }
+    let results = seq_map(i, env, &items, &f, &b.rest)?;
+    simplify_to(results, Some(groups), "list")
+}
+
+/// eapply(env, FUN): apply over an environment's bindings.
+fn eapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["env", "FUN"]);
+    let target = match b.req(0, "env")? {
+        RVal::Env(e) => e,
+        other => return Err(Signal::error(format!("eapply: not an environment: {}", other.class()))),
+    };
+    let f = as_function(&b.req(1, "FUN")?, env)?;
+    let mut bindings: Vec<(String, RVal)> = target.borrow().vars.clone().into_iter().collect();
+    bindings.sort_by(|a, b| a.0.cmp(&b.0));
+    let names: Vec<String> = bindings.iter().map(|(n, _)| n.clone()).collect();
+    let items: Vec<RVal> = bindings.into_iter().map(|(_, v)| v).collect();
+    let results = seq_map(i, env, &items, &f, &b.rest)?;
+    simplify_to(results, Some(names), "list")
+}
+
+/// replicate(n, expr): special form — re-evaluates `expr` n times.
+fn replicate_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let mut n: Option<usize> = None;
+    let mut expr = None;
+    let mut pos = 0;
+    for a in args {
+        match a.name.as_deref() {
+            Some("n") => n = Some(i.eval(&a.value, env)?.as_usize().map_err(Signal::error)?),
+            Some("expr") => expr = Some(&a.value),
+            Some("simplify") => {}
+            None => {
+                match pos {
+                    0 => n = Some(i.eval(&a.value, env)?.as_usize().map_err(Signal::error)?),
+                    1 => expr = Some(&a.value),
+                    _ => {}
+                }
+                pos += 1;
+            }
+            _ => {}
+        }
+    }
+    let n = n.ok_or_else(|| Signal::error("replicate: missing n"))?;
+    let expr = expr.ok_or_else(|| Signal::error("replicate: missing expr"))?;
+    let mut results = Vec::with_capacity(n);
+    for _ in 0..n {
+        results.push(i.eval(expr, env)?);
+    }
+    simplify_to(results, None, "auto")
+}
+
+fn filter_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["f", "x"]);
+    let f = as_function(&b.req(0, "f")?, env)?;
+    let x = b.req(1, "x")?;
+    let elems = x.iter_elements();
+    let mut keep = Vec::with_capacity(elems.len());
+    for e in &elems {
+        keep.push(i.call_function(&f, vec![(None, e.clone())], env)?.as_bool().map_err(Signal::error)?);
+    }
+    let kept: Vec<RVal> =
+        elems.into_iter().zip(&keep).filter(|(_, &k)| k).map(|(e, _)| e).collect();
+    match x {
+        RVal::List(_) => Ok(RVal::list(kept)),
+        _ => crate::rlite::builtins::core::combine(kept.into_iter().map(|v| (None, v)).collect()),
+    }
+}
+
+/// stats::kernapply(x, k): apply a smoothing kernel by convolution.
+fn kernapply_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "k"]);
+    let x = b.req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    let k = b.req(1, "k")?.as_dbl_vec().map_err(Signal::error)?;
+    Ok(RVal::dbl(kernapply_native(&x, &k)))
+}
+
+/// Centered moving-kernel convolution (valid region), shared with the
+/// future variant so both paths agree exactly.
+pub(crate) fn kernapply_native(x: &[f64], k: &[f64]) -> Vec<f64> {
+    let m = k.len();
+    if x.len() < m {
+        return vec![];
+    }
+    (0..=(x.len() - m))
+        .map(|s| x[s..s + m].iter().zip(k).map(|(a, b)| a * b).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn lapply_returns_list() {
+        let v = run("lapply(1:3, function(x) x^2)");
+        match v {
+            RVal::List(l) => {
+                assert_eq!(l.len(), 3);
+                assert_eq!(l.vals[2].as_f64().unwrap(), 9.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sapply_simplifies() {
+        assert_eq!(run("sapply(1:4, function(x) x * 2)"), RVal::dbl(vec![2.0, 4.0, 6.0, 8.0]));
+    }
+
+    #[test]
+    fn vapply_checks_prototype() {
+        assert_eq!(
+            run("vapply(1:3, function(x) x + 0.5, numeric(1))"),
+            RVal::dbl(vec![1.5, 2.5, 3.5])
+        );
+        assert!(Interp::new()
+            .eval_program("vapply(1:3, function(x) c(x, x), numeric(1))")
+            .is_err());
+        assert!(Interp::new()
+            .eval_program("vapply(1:3, function(x) \"s\", numeric(1))")
+            .is_err());
+    }
+
+    #[test]
+    fn mapply_zips() {
+        assert_eq!(
+            run("mapply(function(a, b) a + b, 1:3, c(10, 20, 30))"),
+            RVal::dbl(vec![11.0, 22.0, 33.0])
+        );
+    }
+
+    #[test]
+    fn map_base_does_not_simplify() {
+        let v = run("Map(function(a, b) a * b, 1:2, 3:4)");
+        assert!(matches!(v, RVal::List(_)));
+    }
+
+    #[test]
+    fn tapply_groups() {
+        let v = run("tapply(c(1, 2, 3, 4), c(\"a\", \"b\", \"a\", \"b\"), sum)");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![4.0, 6.0]);
+        assert_eq!(v.names().unwrap(), &["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn replicate_reevaluates() {
+        let v = run("set.seed(1)\nr <- replicate(3, rnorm(2))\nlength(r)");
+        assert_eq!(v, RVal::scalar_int(6)); // simplified to 6 numbers
+    }
+
+    #[test]
+    fn filter_keeps_matching() {
+        assert_eq!(run("Filter(function(x) x > 2, c(1, 2, 3, 4))"), RVal::dbl(vec![3.0, 4.0]));
+    }
+
+    #[test]
+    fn apply_margins() {
+        assert_eq!(
+            run("m <- matrix(1:6, nrow = 2, ncol = 3)\napply(m, 2, sum)"),
+            RVal::dbl(vec![3.0, 7.0, 11.0])
+        );
+        assert_eq!(
+            run("m <- matrix(1:6, nrow = 2, ncol = 3)\napply(m, 1, sum)"),
+            RVal::dbl(vec![9.0, 12.0])
+        );
+    }
+
+    #[test]
+    fn kernapply_smooths() {
+        let v = run("kernapply(c(1, 2, 3, 4), c(0.5, 0.5))");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn eapply_over_environment() {
+        let v = run("e <- new.env()\ne$a <- 1\ne$b <- 2\nr <- eapply(e, function(x) x * 10)\nunlist(r)");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn lapply_preserves_names() {
+        let v = run("lapply(c(a = 1, b = 2), function(x) x)");
+        assert_eq!(v.names().unwrap(), &["a".to_string(), "b".to_string()]);
+    }
+}

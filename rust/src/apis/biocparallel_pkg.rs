@@ -1,0 +1,226 @@
+//! BiocParallel (paper Table 1, §4.5): Bioconductor's parallel-evaluation
+//! core. The futurize transpiler routes these through `BPPARAM =
+//! FutureParam(...)`, letting Bioconductor workflows use every future
+//! backend.
+
+use super::{as_function, simplify_to};
+use crate::future_core::driver::map_elements;
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::{RList, RVal};
+use crate::transpile::{options_from_value, FuturizeOptions};
+
+pub fn register(r: &mut Reg) {
+    r.normal("BiocParallel", "bplapply", bplapply_fn);
+    r.normal("BiocParallel", "bpmapply", bpmapply_fn);
+    r.normal("BiocParallel", "bpvec", bpvec_fn);
+    r.normal("BiocParallel", "bpiterate", bpiterate_fn);
+    r.normal("BiocParallel", "bpaggregate", bpaggregate_fn);
+    r.normal("BiocParallel", "FutureParam", future_param_fn);
+    r.normal("BiocParallel", "SerialParam", serial_param_fn);
+}
+
+/// FutureParam(seed = , chunk.size = ): the future-backed BPPARAM.
+fn future_param_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let mut l = RList::default();
+    for (name, v) in &args.items {
+        if let Some(n) = name {
+            l.set(n, v.clone());
+        }
+    }
+    l.class = Some("FutureParam".into());
+    Ok(RVal::List(l))
+}
+
+fn serial_param_fn(_i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let mut v = future_param_fn(_i, args, env)?;
+    if let RVal::List(l) = &mut v {
+        l.class = Some("SerialParam".into());
+    }
+    Ok(v)
+}
+
+/// Split off BPPARAM; a FutureParam turns on the parallel path.
+fn split_bpparam(args: &Args) -> (Args, bool, FuturizeOptions) {
+    let mut user = Vec::new();
+    let mut parallel = false;
+    let mut opts = FuturizeOptions::default();
+    for (name, v) in &args.items {
+        if name.as_deref() == Some("BPPARAM") {
+            if let RVal::List(l) = v {
+                if l.class.as_deref() == Some("FutureParam") {
+                    parallel = true;
+                    opts = options_from_value(v);
+                }
+            }
+        } else {
+            user.push((name.clone(), v.clone()));
+        }
+    }
+    (Args::new(user), parallel, opts)
+}
+
+fn bplapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (args, parallel, opts) = split_bpparam(&args);
+    let b = args.bind(&["X", "FUN"]);
+    let x = b.req(0, "X")?;
+    let f = as_function(&b.req(1, "FUN")?, env)?;
+    let results = if parallel {
+        map_elements(i, env, x.iter_elements(), &f, b.rest, &opts.to_map_options(false))?
+    } else {
+        super::seq_map(i, env, &x.iter_elements(), &f, &b.rest)?
+    };
+    simplify_to(results, x.element_names(), "list")
+}
+
+fn bpmapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (args, parallel, opts) = split_bpparam(&args);
+    let b = args.bind(&["FUN"]);
+    let f = as_function(&b.req(0, "FUN")?, env)?;
+    let seqs: Vec<Vec<RVal>> = b
+        .rest
+        .iter()
+        .filter(|(n, _)| n.as_deref() != Some("MoreArgs") && n.as_deref() != Some("SIMPLIFY"))
+        .map(|(_, v)| v.iter_elements())
+        .collect();
+    let n = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+    let items: Vec<RVal> = (0..n)
+        .map(|k| RVal::list(seqs.iter().map(|s| s[k % s.len()].clone()).collect()))
+        .collect();
+    let results = if parallel {
+        super::future_apply::map_tuple(i, env, items, &f, &[], &opts, seqs.len())?
+    } else {
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            let RVal::List(l) = item else { unreachable!() };
+            let call_args: Vec<(Option<String>, RVal)> =
+                l.vals.into_iter().map(|v| (None, v)).collect();
+            out.push(i.call_function(&f, call_args, env)?);
+        }
+        out
+    };
+    simplify_to(results, None, "auto")
+}
+
+/// bpvec(X, FUN): FUN receives whole *subvectors* (not elements) and the
+/// results are concatenated — BiocParallel's vectorized form.
+fn bpvec_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (args, parallel, opts) = split_bpparam(&args);
+    let b = args.bind(&["X", "FUN"]);
+    let x = b.req(0, "X")?;
+    let f = as_function(&b.req(1, "FUN")?, env)?;
+    let xs = x.as_dbl_vec().map_err(Signal::error)?;
+    let workers = if parallel { i.session.workers().max(1) } else { 1 };
+    let chunks = crate::scheduling::make_chunks(
+        xs.len(),
+        workers,
+        &opts.to_map_options(false).policy,
+    );
+    let items: Vec<RVal> =
+        chunks.iter().map(|&(s, e)| RVal::dbl(xs[s..e].to_vec())).collect();
+    let results = if parallel {
+        map_elements(i, env, items, &f, b.rest, &opts.to_map_options(false))?
+    } else {
+        super::seq_map(i, env, &items, &f, &b.rest)?
+    };
+    let mut out = Vec::with_capacity(xs.len());
+    for r in results {
+        out.extend(r.as_dbl_vec().map_err(Signal::error)?);
+    }
+    Ok(RVal::dbl(out))
+}
+
+/// bpiterate(ITER, FUN): pull items from a generator closure until NULL.
+fn bpiterate_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (args, parallel, opts) = split_bpparam(&args);
+    let b = args.bind(&["ITER", "FUN"]);
+    let iter = as_function(&b.req(0, "ITER")?, env)?;
+    let f = as_function(&b.req(1, "FUN")?, env)?;
+    // Drain the iterator sequentially (it is stateful), then map.
+    let mut items = Vec::new();
+    loop {
+        let v = i.call_function(&iter, vec![], env)?;
+        if v.is_null() {
+            break;
+        }
+        items.push(v);
+        if items.len() > 1_000_000 {
+            return Err(Signal::error("bpiterate: iterator never returned NULL"));
+        }
+    }
+    let results = if parallel {
+        map_elements(i, env, items, &f, b.rest, &opts.to_map_options(false))?
+    } else {
+        super::seq_map(i, env, &items, &f, &b.rest)?
+    };
+    simplify_to(results, None, "list")
+}
+
+/// bpaggregate(x, by, FUN): group x by `by` then apply FUN per group.
+fn bpaggregate_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (args, parallel, opts) = split_bpparam(&args);
+    let b = args.bind(&["x", "by", "FUN"]);
+    let x = b.req(0, "x")?;
+    let by = b.req(1, "by")?.as_str_vec().map_err(Signal::error)?;
+    let f = as_function(&b.req(2, "FUN")?, env)?;
+    let (groups, items) = super::base_r::group_by(&x, &by)?;
+    let results = if parallel {
+        map_elements(i, env, items, &f, b.rest, &opts.to_map_options(false))?
+    } else {
+        super::seq_map(i, env, &items, &f, &b.rest)?
+    };
+    simplify_to(results, Some(groups), "auto")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn bplapply_sequential_default() {
+        let v = run("r <- bplapply(1:3, function(x) x + 1)\nunlist(r)");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn bplapply_with_futureparam_parallel() {
+        let seq = run("bplapply(1:8, function(x) x^2)");
+        let par = run(
+            "plan(multicore, workers = 3)\nbplapply(1:8, function(x) x^2, BPPARAM = BiocParallel::FutureParam())",
+        );
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn bpvec_concatenates_chunks() {
+        let v = run(
+            "plan(multicore, workers = 2)\nbpvec(1:10, function(chunk) chunk * 2, BPPARAM = BiocParallel::FutureParam())",
+        );
+        assert_eq!(v.as_dbl_vec().unwrap(), (1..=10).map(|x| (x * 2) as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bpiterate_drains_generator() {
+        let v = run(
+            "i <- 0\nmk <- function() { i <<- 0\nfunction() NULL }\n\
+             count <- 3\nnext_val <- function() { if (count == 0) return(NULL)\ncount <<- count - 1\ncount + 1 }\n\
+             r <- bpiterate(next_val, function(x) x * 10)\nunlist(r)",
+        );
+        // Generator yields 3, 2, 1.
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![30.0, 20.0, 10.0]);
+    }
+
+    #[test]
+    fn bpaggregate_groups() {
+        let v = run(
+            "bpaggregate(c(1, 2, 3, 4), c(\"a\", \"a\", \"b\", \"b\"), sum)",
+        );
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![3.0, 7.0]);
+    }
+}

@@ -1,0 +1,147 @@
+//! crossmap (paper Table 1): apply a function to every *combination* of
+//! list elements. Hosts its own future variants ("Requires: (itself)").
+
+use super::{as_function, simplify_to};
+use crate::future_core::driver::map_elements;
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::RVal;
+use crate::transpile::{options_from_value, FuturizeOptions};
+
+pub fn register(r: &mut Reg) {
+    r.normal("crossmap", "xmap", |i, a, e| xmap_impl(i, a, e, "list", false));
+    r.normal("crossmap", "xmap_dbl", |i, a, e| xmap_impl(i, a, e, "dbl", false));
+    r.normal("crossmap", "xmap_chr", |i, a, e| xmap_impl(i, a, e, "chr", false));
+    r.normal("crossmap", "xwalk", |i, a, e| xmap_impl(i, a, e, "walk", false));
+    r.normal("crossmap", "map_vec", |i, a, e| map_vec_impl(i, a, e));
+    r.normal("crossmap", "map2_vec", map2_vec_impl);
+    r.normal("crossmap", "pmap_vec", pmap_vec_impl);
+    r.normal("crossmap", "imap_vec", imap_vec_impl);
+    // future variants (transpile targets).
+    r.normal("crossmap", "future_xmap", |i, a, e| xmap_impl(i, a, e, "list", true));
+    r.normal("crossmap", "future_xmap_dbl", |i, a, e| xmap_impl(i, a, e, "dbl", true));
+    r.normal("crossmap", "future_xmap_chr", |i, a, e| xmap_impl(i, a, e, "chr", true));
+    r.normal("crossmap", "future_xwalk", |i, a, e| xmap_impl(i, a, e, "walk", true));
+    r.normal("crossmap", "future_map_vec", |i, a, e| map_vec_future(i, a, e));
+    r.normal("crossmap", "future_map2_vec", map2_vec_impl);
+    r.normal("crossmap", "future_pmap_vec", pmap_vec_impl);
+    r.normal("crossmap", "future_imap_vec", imap_vec_impl);
+}
+
+/// Cartesian product of the elements of each list entry, in
+/// column-major order (first entry varies fastest), as crossmap does.
+pub(crate) fn cross_product(seqs: &[Vec<RVal>]) -> Vec<Vec<RVal>> {
+    let total: usize = seqs.iter().map(|s| s.len().max(1)).product();
+    let mut out = Vec::with_capacity(total);
+    for mut idx in 0..total {
+        let mut row = Vec::with_capacity(seqs.len());
+        for s in seqs {
+            let n = s.len().max(1);
+            row.push(s[idx % n].clone());
+            idx /= n;
+        }
+        out.push(row);
+    }
+    out
+}
+
+fn split_options(args: &Args) -> (Args, FuturizeOptions) {
+    let mut user = Vec::new();
+    let mut opts = FuturizeOptions::default();
+    for (name, v) in &args.items {
+        if name.as_deref() == Some(".options") {
+            opts = options_from_value(v);
+        } else {
+            user.push((name.clone(), v.clone()));
+        }
+    }
+    (Args::new(user), opts)
+}
+
+fn xmap_impl(i: &mut Interp, args: Args, env: &EnvRef, want: &str, parallel: bool) -> EvalResult {
+    let (args, opts) = split_options(&args);
+    let b = args.bind(&[".l", ".f"]);
+    let l = match b.req(0, ".l")? {
+        RVal::List(l) => l,
+        other => return Err(Signal::error(format!("xmap: .l must be a list, got {}", other.class()))),
+    };
+    let f = as_function(&b.req(1, ".f")?, env)?;
+    let seqs: Vec<Vec<RVal>> = l.vals.iter().map(|v| v.iter_elements()).collect();
+    let combos = cross_product(&seqs);
+    let results = if parallel {
+        let items: Vec<RVal> = combos.into_iter().map(RVal::list).collect();
+        super::future_apply::map_tuple(i, env, items, &f, &b.rest, &opts, seqs.len())?
+    } else {
+        let mut out = Vec::with_capacity(combos.len());
+        for row in combos {
+            let mut call_args: Vec<(Option<String>, RVal)> =
+                row.into_iter().map(|v| (None, v)).collect();
+            call_args.extend(b.rest.iter().cloned());
+            out.push(i.call_function(&f, call_args, env)?);
+        }
+        out
+    };
+    if want == "walk" {
+        return Ok(RVal::Null);
+    }
+    simplify_to(results, None, want)
+}
+
+fn map_vec_impl(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    super::purrr_pkg::map_variant(i, args, env, super::purrr_pkg::Arity::Map1, "auto", false)
+}
+
+fn map_vec_future(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (args, opts) = split_options(&args);
+    let b = args.bind(&[".x", ".f"]);
+    let x = b.req(0, ".x")?;
+    let f = as_function(&b.req(1, ".f")?, env)?;
+    let results = map_elements(i, env, x.iter_elements(), &f, b.rest, &opts.to_map_options(false))?;
+    simplify_to(results, x.element_names(), "auto")
+}
+
+fn map2_vec_impl(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (args, _) = split_options(&args);
+    super::purrr_pkg::map_variant(i, args, env, super::purrr_pkg::Arity::Map2, "auto", false)
+}
+
+fn pmap_vec_impl(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (args, _) = split_options(&args);
+    super::purrr_pkg::map_variant(i, args, env, super::purrr_pkg::Arity::PMap, "auto", false)
+}
+
+fn imap_vec_impl(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (args, _) = split_options(&args);
+    super::purrr_pkg::map_variant(i, args, env, super::purrr_pkg::Arity::IMap, "auto", false)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn xmap_covers_all_combinations() {
+        let v = run("xmap_dbl(list(1:2, c(10, 20)), function(a, b) a + b)");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![11.0, 12.0, 21.0, 22.0]);
+    }
+
+    #[test]
+    fn future_xmap_matches_xmap() {
+        let seq = run("xmap_dbl(list(1:3, 1:3), function(a, b) a * b)");
+        let par = run(
+            "plan(multicore, workers = 2)\ncrossmap::future_xmap_dbl(list(1:3, 1:3), function(a, b) a * b)",
+        );
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn map_vec_simplifies() {
+        assert_eq!(run("map_vec(1:3, function(x) x * 2)"), RVal::dbl(vec![2.0, 4.0, 6.0]));
+    }
+}

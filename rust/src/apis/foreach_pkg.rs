@@ -1,0 +1,280 @@
+//! foreach + iterators (paper Table 1 row "foreach", §4.3).
+//!
+//! `foreach(x = xs, ...) %do% { body }` evaluates `body` once per zipped
+//! iteration with the loop variables bound. `%dofuture%` (doFuture) is
+//! the parallel form the transpiler targets. `times(n) %do% body`
+//! mirrors `replicate()` and defaults to `seed = TRUE` when futurized.
+//! Iterators: `icount()` (position counter) and `iter(obj)`.
+
+use crate::future_core::driver::foreach_elements;
+use crate::rlite::ast::Arg;
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::env::{define, Env, EnvRef};
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::{RList, RVal};
+use crate::transpile::{options_from_value, FuturizeOptions, SeedSetting};
+
+pub fn register(r: &mut Reg) {
+    r.normal("foreach", "foreach", foreach_ctor);
+    r.normal("foreach", "times", times_ctor);
+    r.special("foreach", "%do%", do_seq);
+    r.special("foreach", "%dopar%", do_par_fallback);
+    r.special("doFuture", "%dofuture%", do_future);
+    r.normal("iterators", "icount", icount_ctor);
+    r.normal("iterators", "iter", iter_ctor);
+}
+
+/// foreach(x = xs, y = ys, .combine = c, ...) — an iteration spec object.
+fn foreach_ctor(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let mut vars: Vec<(String, RVal)> = Vec::new();
+    let mut combine = RVal::Null;
+    let mut fut_opts = RVal::Null;
+    for (name, v) in args.items {
+        match name.as_deref() {
+            Some(".combine") => combine = v,
+            Some(".options.future") => fut_opts = v,
+            Some(n) => vars.push((n.to_string(), v)),
+            None => {
+                return Err(Signal::error(
+                    "foreach: iteration variables must be named (e.g. foreach(x = xs))",
+                ))
+            }
+        }
+    }
+    if vars.is_empty() {
+        return Err(Signal::error("foreach: no iteration variables"));
+    }
+    let names: Vec<String> =
+        vars.iter().map(|(n, _)| n.clone()).chain(["__combine".into(), "__opts".into()]).collect();
+    let vals: Vec<RVal> =
+        vars.into_iter().map(|(_, v)| v).chain([combine, fut_opts]).collect();
+    let mut l = RList::named(vals, names);
+    l.class = Some("foreach".into());
+    Ok(RVal::List(l))
+}
+
+/// times(n) — n anonymous iterations.
+fn times_ctor(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let n = args.bind(&["n"]).req(0, "n")?.as_usize().map_err(Signal::error)?;
+    let mut l = RList::named(vec![RVal::scalar_int(n as i64)], vec!["n".into()]);
+    l.class = Some("times".into());
+    Ok(RVal::List(l))
+}
+
+/// icount() — an iterator yielding 1, 2, 3, ... bounded by the other
+/// iteration variables.
+fn icount_ctor(_i: &mut Interp, _args: Args, _env: &EnvRef) -> EvalResult {
+    let mut l = RList::named(vec![], vec![]);
+    l.class = Some("icount".into());
+    Ok(RVal::List(l))
+}
+
+/// iter(obj) — explicit element iterator (elements of obj).
+fn iter_ctor(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["obj"]).req(0, "obj")?;
+    let mut l = RList::named(vec![x], vec!["obj".into()]);
+    l.class = Some("iter".into());
+    Ok(RVal::List(l))
+}
+
+/// Expand a foreach spec into per-iteration variable bindings.
+pub(crate) fn expand_bindings(spec: &RVal) -> Result<(Vec<Vec<(String, RVal)>>, RVal, RVal), Signal> {
+    let RVal::List(l) = spec else {
+        return Err(Signal::error("%do%: lhs must be a foreach() or times() object"));
+    };
+    match l.class.as_deref() {
+        Some("times") => {
+            let n = l.get("n").and_then(|v| v.as_i64().ok()).unwrap_or(0) as usize;
+            Ok(((0..n).map(|_| vec![]).collect(), RVal::Null, RVal::Null))
+        }
+        Some("foreach") => {
+            let names = l.names.clone().unwrap_or_default();
+            let mut seqs: Vec<(String, Option<Vec<RVal>>)> = Vec::new(); // None = icount
+            let mut combine = RVal::Null;
+            let mut opts = RVal::Null;
+            for (k, name) in names.iter().enumerate() {
+                let v = &l.vals[k];
+                match name.as_str() {
+                    "__combine" => combine = v.clone(),
+                    "__opts" => opts = v.clone(),
+                    _ => match v {
+                        RVal::List(inner) if inner.class.as_deref() == Some("icount") => {
+                            seqs.push((name.clone(), None));
+                        }
+                        RVal::List(inner) if inner.class.as_deref() == Some("iter") => {
+                            let obj = inner.get("obj").cloned().unwrap_or(RVal::Null);
+                            seqs.push((name.clone(), Some(obj.iter_elements())));
+                        }
+                        other => seqs.push((name.clone(), Some(other.iter_elements()))),
+                    },
+                }
+            }
+            let n = seqs
+                .iter()
+                .filter_map(|(_, s)| s.as_ref().map(|v| v.len()))
+                .min()
+                .ok_or_else(|| Signal::error("foreach: only icount() iterators — unbounded"))?;
+            let mut bindings = Vec::with_capacity(n);
+            for k in 0..n {
+                let mut row = Vec::with_capacity(seqs.len());
+                for (name, s) in &seqs {
+                    let v = match s {
+                        Some(vals) => vals[k].clone(),
+                        None => RVal::scalar_int((k + 1) as i64),
+                    };
+                    row.push((name.clone(), v));
+                }
+                bindings.push(row);
+            }
+            Ok((bindings, combine, opts))
+        }
+        other => Err(Signal::error(format!(
+            "%do%: lhs must be foreach() or times(), got {other:?}"
+        ))),
+    }
+}
+
+/// Reduce per-iteration results per `.combine` (default: list).
+fn reduce_combine(
+    i: &mut Interp,
+    env: &EnvRef,
+    results: Vec<RVal>,
+    combine: &RVal,
+) -> EvalResult {
+    if combine.is_null() {
+        return Ok(RVal::list(results));
+    }
+    if combine.is_function() {
+        let mut it = results.into_iter();
+        let Some(mut acc) = it.next() else { return Ok(RVal::Null) };
+        for r in it {
+            acc = i.call_function(combine, vec![(None, acc), (None, r)], env)?;
+        }
+        return Ok(acc);
+    }
+    Err(Signal::error("foreach: .combine must be a function"))
+}
+
+/// Sequential `%do%`: body evaluated in a child of the calling
+/// environment (lexical visibility of locals, as in foreach).
+fn do_seq(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let spec = i.eval(&args[0].value, env)?;
+    let body = &args[1].value;
+    let (bindings, combine, _) = expand_bindings(&spec)?;
+    let mut results = Vec::with_capacity(bindings.len());
+    for row in bindings {
+        let iter_env = Env::child_of(env);
+        for (name, v) in row {
+            define(&iter_env, &name, v);
+        }
+        results.push(i.eval(body, &iter_env)?);
+    }
+    reduce_combine(i, env, results, &combine)
+}
+
+/// `%dopar%` without a registered adapter behaves like `%do%` plus the
+/// canonical foreach warning — the paper's §1 lock-in critique.
+fn do_par_fallback(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    i.signal_condition(crate::rlite::conditions::RCondition::warning_cond(
+        "executing %dopar% sequentially: no parallel backend registered",
+    ))?;
+    do_seq(i, args, env)
+}
+
+/// `%dofuture%`: the doFuture parallel form.
+fn do_future(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let spec = i.eval(&args[0].value, env)?;
+    let body = &args[1].value;
+    let (bindings, combine, optsval) = expand_bindings(&spec)?;
+    let mut opts: FuturizeOptions = options_from_value(&optsval);
+    // times() implies resampling: default seed = TRUE (paper §4.3).
+    if opts.seed.is_none() {
+        if let RVal::List(l) = &spec {
+            if l.class.as_deref() == Some("times") {
+                opts.seed = Some(SeedSetting::True);
+            }
+        }
+    }
+    let results = foreach_elements(i, env, bindings, body, &opts.to_map_options(false))?;
+    reduce_combine(i, env, results, &combine)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn do_iterates_and_collects_list() {
+        let v = run("r <- foreach(x = 1:3) %do% { x * 2 }\nunlist(r)");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn do_zips_multiple_variables() {
+        let v = run("r <- foreach(a = 1:3, b = c(10, 20, 30)) %do% { a + b }\nunlist(r)");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn combine_with_c() {
+        let v = run("foreach(x = 1:4, .combine = c) %do% { x^2 }");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![1.0, 4.0, 9.0, 16.0]);
+    }
+
+    #[test]
+    fn icount_provides_indices() {
+        let v = run(
+            "r <- foreach(d = c(9, 8), i = icount()) %do% { list(value = d, index = i) }\nr[[2]]$index",
+        );
+        assert_eq!(v, RVal::scalar_int(2));
+    }
+
+    #[test]
+    fn times_do() {
+        let v = run("r <- times(5) %do% 7\nunlist(r)");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![7.0; 5]);
+    }
+
+    #[test]
+    fn dofuture_matches_do() {
+        let seq = run("foreach(x = 1:6, .combine = c) %do% { x + 1 }");
+        let par = run(
+            "plan(multicore, workers = 3)\nforeach(x = 1:6, .combine = c) %dofuture% { x + 1 }",
+        );
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn dofuture_sees_globals() {
+        let v = run(
+            "plan(multicore, workers = 2)\noffset <- 100\nr <- foreach(x = 1:3) %dofuture% { x + offset }\nunlist(r)",
+        );
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![101.0, 102.0, 103.0]);
+    }
+
+    #[test]
+    fn dopar_warns_and_runs() {
+        let mut i = Interp::new();
+        let (r, out) = i.capture_stdout(|i| {
+            i.eval_program("foreach(x = 1:2, .combine = c) %dopar% { x }")
+        });
+        assert_eq!(r.unwrap().as_dbl_vec().unwrap(), vec![1.0, 2.0]);
+        assert!(out.contains("sequentially"), "{out}");
+    }
+
+    #[test]
+    fn iterate_data_frame_columns() {
+        // §4.3's iterators example: foreach over a data.frame iterates
+        // columns.
+        let v = run(
+            "df <- data.frame(a = 1:4, b = c(\"w\", \"x\", \"y\", \"z\"))\n\
+             r <- foreach(d = df, i = icount()) %do% { list(value = d, index = i) }\nlength(r)",
+        );
+        assert_eq!(v, RVal::scalar_int(2));
+    }
+}

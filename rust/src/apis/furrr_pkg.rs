@@ -1,0 +1,281 @@
+//! furrr — the future-based purrr mirrors (`future_map()` etc.), the
+//! transpile targets for Table 1 row "purrr". Options arrive as
+//! `.options = furrr_options(...)`, furrr's own convention.
+
+use super::purrr_pkg::{Arity, VARIANTS};
+use super::{as_function, simplify_to, static_name};
+use crate::future_core::driver::map_elements;
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::RVal;
+use crate::transpile::{options_from_value, FuturizeOptions};
+
+pub fn register(r: &mut Reg) {
+    for &(name, arity, want) in VARIANTS {
+        let fname = static_name(format!("future_{name}"));
+        r.normal("furrr", fname, move |i, a, e| future_map_variant(i, a, e, arity, want));
+    }
+    r.normal("furrr", "future_walk", |i, a, e| {
+        let b = a.bind(&[".x"]);
+        let x = b.req(0, ".x")?;
+        future_map_variant(i, a, e, Arity::Map1, "list")?;
+        Ok(x)
+    });
+    r.normal("furrr", "future_modify", |i, a, e| future_map_variant(i, a, e, Arity::Map1, "auto"));
+    // The remaining purrr helpers (predicate/index variants) reuse the
+    // sequential predicate pass + parallel transform.
+    for name in ["future_modify_if", "future_map_if"] {
+        r.normal("furrr", name, future_modify_if_fn);
+    }
+    for name in ["future_modify_at", "future_map_at"] {
+        r.normal("furrr", name, future_modify_at_fn);
+    }
+    r.normal("furrr", "future_invoke_map", future_invoke_map_fn);
+}
+
+/// Split off `.options` (a furrr_options object) from the arguments.
+fn split_options(args: &Args) -> (Vec<(Option<String>, RVal)>, FuturizeOptions) {
+    let mut user = Vec::new();
+    let mut opts = FuturizeOptions::default();
+    for (name, v) in &args.items {
+        if name.as_deref() == Some(".options") {
+            opts = options_from_value(v);
+        } else {
+            user.push((name.clone(), v.clone()));
+        }
+    }
+    (user, opts)
+}
+
+fn future_map_variant(
+    i: &mut Interp,
+    args: Args,
+    env: &EnvRef,
+    arity: Arity,
+    want: &str,
+) -> EvalResult {
+    let (user, opts) = split_options(&args);
+    let args = Args::new(user);
+    let mopts = opts.to_map_options(false);
+    match arity {
+        Arity::Map1 => {
+            let b = args.bind(&[".x", ".f"]);
+            let x = b.req(0, ".x")?;
+            let f = as_function(&b.req(1, ".f")?, env)?;
+            let results = map_elements(i, env, x.iter_elements(), &f, b.rest, &mopts)?;
+            simplify_to(results, x.element_names(), want)
+        }
+        Arity::Map2 => {
+            let b = args.bind(&[".x", ".y", ".f"]);
+            let x = b.req(0, ".x")?;
+            let y = b.req(1, ".y")?;
+            let f = as_function(&b.req(2, ".f")?, env)?;
+            let xs = x.iter_elements();
+            let ys = y.iter_elements();
+            let n = xs.len().max(ys.len());
+            let items: Vec<RVal> = (0..n)
+                .map(|k| RVal::list(vec![xs[k % xs.len()].clone(), ys[k % ys.len()].clone()]))
+                .collect();
+            let results = super::future_apply::map_tuple(i, env, items, &f, &b.rest, &opts, 2)?;
+            simplify_to(results, x.element_names(), want)
+        }
+        Arity::PMap => {
+            let b = args.bind(&[".l", ".f"]);
+            let l = match b.req(0, ".l")? {
+                RVal::List(l) => l,
+                other => {
+                    return Err(Signal::error(format!(
+                        "future_pmap: .l must be a list, got {}",
+                        other.class()
+                    )))
+                }
+            };
+            let f = as_function(&b.req(1, ".f")?, env)?;
+            let seqs: Vec<Vec<RVal>> = l.vals.iter().map(|v| v.iter_elements()).collect();
+            let n = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+            let items: Vec<RVal> = (0..n)
+                .map(|k| RVal::list(seqs.iter().map(|s| s[k % s.len()].clone()).collect()))
+                .collect();
+            let results =
+                super::future_apply::map_tuple(i, env, items, &f, &b.rest, &opts, seqs.len())?;
+            simplify_to(results, None, want)
+        }
+        Arity::IMap => {
+            let b = args.bind(&[".x", ".f"]);
+            let x = b.req(0, ".x")?;
+            let f = as_function(&b.req(1, ".f")?, env)?;
+            let elems = x.iter_elements();
+            let names = x.element_names();
+            let items: Vec<RVal> = elems
+                .iter()
+                .enumerate()
+                .map(|(k, e)| {
+                    let tag = match &names {
+                        Some(ns) if !ns[k].is_empty() => RVal::scalar_str(ns[k].clone()),
+                        _ => RVal::scalar_int((k + 1) as i64),
+                    };
+                    RVal::list(vec![e.clone(), tag])
+                })
+                .collect();
+            let results = super::future_apply::map_tuple(i, env, items, &f, &b.rest, &opts, 2)?;
+            simplify_to(results, names, want)
+        }
+    }
+}
+
+fn future_modify_if_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_options(&args);
+    let args2 = Args::new(user);
+    let b = args2.bind(&[".x", ".p", ".f"]);
+    let x = b.req(0, ".x")?;
+    let p = as_function(&b.req(1, ".p")?, env)?;
+    let f = as_function(&b.req(2, ".f")?, env)?;
+    let elems = x.iter_elements();
+    // Predicate sequentially (cheap), transform in parallel (hot).
+    let mut selected = Vec::new();
+    let mut mask = Vec::with_capacity(elems.len());
+    for e in &elems {
+        let hit =
+            i.call_function(&p, vec![(None, e.clone())], env)?.as_bool().map_err(Signal::error)?;
+        mask.push(hit);
+        if hit {
+            selected.push(e.clone());
+        }
+    }
+    let transformed = map_elements(i, env, selected, &f, vec![], &opts.to_map_options(false))?;
+    let mut ti = transformed.into_iter();
+    let out: Vec<RVal> = elems
+        .into_iter()
+        .zip(&mask)
+        .map(|(e, &hit)| if hit { ti.next().unwrap() } else { e })
+        .collect();
+    let mut l = crate::rlite::value::RList::plain(out);
+    l.names = x.element_names();
+    Ok(RVal::List(l))
+}
+
+fn future_modify_at_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_options(&args);
+    let args2 = Args::new(user);
+    let b = args2.bind(&[".x", ".at", ".f"]);
+    let x = b.req(0, ".x")?;
+    let at = b.req(1, ".at")?;
+    let f = as_function(&b.req(2, ".f")?, env)?;
+    let n = x.len();
+    let mut mask = vec![false; n];
+    match &at {
+        RVal::Chr(keys) => {
+            if let Some(names) = x.names() {
+                for (k, nm) in names.iter().enumerate() {
+                    if keys.vals.contains(nm) {
+                        mask[k] = true;
+                    }
+                }
+            }
+        }
+        other => {
+            for idx in other.as_dbl_vec().map_err(Signal::error)? {
+                let k = idx as usize;
+                if k >= 1 && k <= n {
+                    mask[k - 1] = true;
+                }
+            }
+        }
+    }
+    let elems = x.iter_elements();
+    let selected: Vec<RVal> =
+        elems.iter().zip(&mask).filter(|(_, &m)| m).map(|(e, _)| e.clone()).collect();
+    let transformed = map_elements(i, env, selected, &f, vec![], &opts.to_map_options(false))?;
+    let mut ti = transformed.into_iter();
+    let out: Vec<RVal> = elems
+        .into_iter()
+        .zip(&mask)
+        .map(|(e, &hit)| if hit { ti.next().unwrap() } else { e })
+        .collect();
+    let mut l = crate::rlite::value::RList::plain(out);
+    l.names = x.element_names();
+    Ok(RVal::List(l))
+}
+
+fn future_invoke_map_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_options(&args);
+    let args2 = Args::new(user);
+    let b = args2.bind(&[".f", ".x"]);
+    let fs = b.req(0, ".f")?.iter_elements();
+    let xs = match b.opt(1) {
+        Some(RVal::List(l)) => l.vals,
+        _ => vec![RVal::Null; fs.len()],
+    };
+    let items: Vec<RVal> = fs
+        .iter()
+        .enumerate()
+        .map(|(k, f)| {
+            RVal::list(vec![f.clone(), xs.get(k % xs.len().max(1)).cloned().unwrap_or(RVal::Null)])
+        })
+        .collect();
+    let shim_src = "function(pair) { f <- pair[[1]]\nargs <- pair[[2]]\nif (is.null(args)) f() else do.call(f, as.list(args)) }";
+    let shim = i.eval(&crate::rlite::parse_expr(shim_src).map_err(Signal::error)?, env)?;
+    let results = map_elements(i, env, items, &shim, vec![], &opts.to_map_options(false))?;
+    simplify_to(results, None, "list")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn future_map_matches_map() {
+        let seq = run("map(1:8, function(x) x^2)");
+        let par = run("plan(multicore, workers = 3)\nfurrr::future_map(1:8, function(x) x^2)");
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn future_map_dbl_with_options() {
+        let v = run(
+            "plan(multicore, workers = 2)\nfurrr::future_map_dbl(1:4, function(x) x + 0.5, .options = furrr_options(chunk_size = 1))",
+        );
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![1.5, 2.5, 3.5, 4.5]);
+    }
+
+    #[test]
+    fn future_map2_zips() {
+        let v = run(
+            "plan(multicore, workers = 2)\nfurrr::future_map2_dbl(1:3, 4:6, function(a, b) a * b)",
+        );
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![4.0, 10.0, 18.0]);
+    }
+
+    #[test]
+    fn future_pmap() {
+        let v = run(
+            "plan(multicore, workers = 2)\nfurrr::future_pmap_dbl(list(1:2, 3:4), function(a, b) a + b)",
+        );
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn future_imap_uses_names() {
+        let v = run(
+            "plan(multicore, workers = 2)\nfurrr::future_imap_chr(c(a = 1, b = 2), function(x, nm) paste0(nm, \"=\", x))",
+        );
+        assert_eq!(v.as_str_vec().unwrap(), vec!["a=1".to_string(), "b=2".to_string()]);
+    }
+
+    #[test]
+    fn future_map_seeded_reproducible() {
+        let a = run(
+            "plan(multicore, workers = 3)\nfutureSeed(5)\nfurrr::future_map_dbl(1:6, function(x) rnorm(1), .options = furrr_options(seed = TRUE))",
+        );
+        let b = run(
+            "plan(multicore, workers = 2)\nfutureSeed(5)\nfurrr::future_map_dbl(1:6, function(x) rnorm(1), .options = furrr_options(seed = TRUE))",
+        );
+        assert_eq!(a, b);
+    }
+}

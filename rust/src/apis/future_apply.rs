@@ -1,0 +1,550 @@
+//! future.apply — the future-based forms of the base-R family
+//! (`future_lapply()` etc.), the transpile targets for Table 1 row 1.
+//!
+//! Options arrive in future.apply's own convention (`future.seed=`,
+//! `future.chunk.size=`, `future.scheduling=`, `future.stdout=`,
+//! `future.conditions=`) — produced by the futurize transpiler's
+//! option-mapping step.
+
+use super::{as_function, simplify_to};
+use crate::future_core::driver::{foreach_elements, map_elements};
+use crate::rlite::ast::Arg;
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::RVal;
+use crate::transpile::{options_from_pairs, FuturizeOptions};
+
+pub fn register(r: &mut Reg) {
+    r.normal("future.apply", "future_lapply", |i, a, e| fut_apply(i, a, e, "list"));
+    r.normal("future.apply", "future_sapply", |i, a, e| fut_apply(i, a, e, "auto"));
+    r.normal("future.apply", "future_vapply", fut_vapply);
+    r.normal("future.apply", "future_mapply", fut_mapply);
+    r.normal("future.apply", "future_Map", fut_map_base);
+    r.normal("future.apply", "future_.mapply", fut_dot_mapply);
+    r.normal("future.apply", "future_apply", fut_apply_matrix);
+    r.normal("future.apply", "future_tapply", fut_tapply);
+    r.normal("future.apply", "future_by", fut_by);
+    r.normal("future.apply", "future_eapply", fut_eapply);
+    r.special("future.apply", "future_replicate", fut_replicate);
+    r.normal("future.apply", "future_Filter", fut_filter);
+    r.normal("future.apply", "future_kernapply", fut_kernapply);
+}
+
+/// Split arguments into (positional/user, future.* options).
+pub(crate) fn split_future_opts(
+    args: &Args,
+) -> (Vec<(Option<String>, RVal)>, FuturizeOptions) {
+    let mut user = Vec::new();
+    let mut optpairs = Vec::new();
+    for (name, v) in &args.items {
+        match name {
+            Some(n) if n.starts_with("future.") => optpairs.push((n.clone(), v.clone())),
+            _ => user.push((name.clone(), v.clone())),
+        }
+    }
+    (user, options_from_pairs(&optpairs))
+}
+
+fn bind2<'a>(
+    user: &'a [(Option<String>, RVal)],
+    a: &str,
+    b: &str,
+) -> (Option<&'a RVal>, Option<&'a RVal>, Vec<(Option<String>, RVal)>) {
+    let mut x = None;
+    let mut f = None;
+    let mut rest = Vec::new();
+    let mut positional = Vec::new();
+    for (name, v) in user {
+        match name.as_deref() {
+            Some(n) if n == a => x = Some(v),
+            Some(n) if n == b => f = Some(v),
+            Some(_) => rest.push((name.clone(), v.clone())),
+            None => positional.push(v),
+        }
+    }
+    let mut pos = positional.into_iter();
+    if x.is_none() {
+        x = pos.next();
+    }
+    if f.is_none() {
+        f = pos.next();
+    }
+    for v in pos {
+        rest.push((None, v.clone()));
+    }
+    (x, f, rest)
+}
+
+fn fut_apply(i: &mut Interp, args: Args, env: &EnvRef, want: &str) -> EvalResult {
+    let (user, opts) = split_future_opts(&args);
+    let (x, f, rest) = bind2(&user, "X", "FUN");
+    let x = x.ok_or_else(|| Signal::error("missing X"))?.clone();
+    let f = as_function(f.ok_or_else(|| Signal::error("missing FUN"))?, env)?;
+    let results = map_elements(i, env, x.iter_elements(), &f, rest, &opts.to_map_options(false))?;
+    let names = x.element_names().or(match (&x, want) {
+        (RVal::Chr(v), "auto") => Some(v.vals.clone()),
+        _ => None,
+    });
+    simplify_to(results, names, want)
+}
+
+fn fut_vapply(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_future_opts(&args);
+    // X, FUN, FUN.VALUE
+    let mut x = None;
+    let mut f = None;
+    let mut proto = None;
+    let mut rest = Vec::new();
+    let mut positional = Vec::new();
+    for (name, v) in user {
+        match name.as_deref() {
+            Some("X") => x = Some(v),
+            Some("FUN") => f = Some(v),
+            Some("FUN.VALUE") => proto = Some(v),
+            Some(_) => rest.push((name, v)),
+            None => positional.push(v),
+        }
+    }
+    let mut pos = positional.into_iter();
+    let x = x.or_else(|| pos.next()).ok_or_else(|| Signal::error("missing X"))?;
+    let f = as_function(&f.or_else(|| pos.next()).ok_or_else(|| Signal::error("missing FUN"))?, env)?;
+    let proto =
+        proto.or_else(|| pos.next()).ok_or_else(|| Signal::error("missing FUN.VALUE"))?;
+    for v in pos {
+        rest.push((None, v));
+    }
+    let results =
+        map_elements(i, env, x.iter_elements(), &f, rest, &opts.to_map_options(false))?;
+    for r in &results {
+        if r.len() != proto.len() {
+            return Err(Signal::error(format!(
+                "values must be length {}, but FUN(X[[i]]) result is length {}",
+                proto.len(),
+                r.len()
+            )));
+        }
+    }
+    let want = match proto.class() {
+        "numeric" | "integer" => "dbl",
+        "character" => "chr",
+        "logical" => "lgl",
+        _ => "auto",
+    };
+    simplify_to(results, x.element_names(), want)
+}
+
+/// Split off the first argument (by name or first positional), keeping
+/// the rest in order.
+fn bind1<'a>(
+    user: &'a [(Option<String>, RVal)],
+    a: &str,
+) -> (Option<&'a RVal>, Vec<(Option<String>, RVal)>) {
+    let mut x = None;
+    let mut rest = Vec::new();
+    for (name, v) in user {
+        match name.as_deref() {
+            Some(n) if n == a && x.is_none() => x = Some(v),
+            None if x.is_none() && name.is_none() => x = Some(v),
+            _ => rest.push((name.clone(), v.clone())),
+        }
+    }
+    (x, rest)
+}
+
+fn fut_mapply(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_future_opts(&args);
+    let (f, rest0) = bind1(&user, "FUN");
+    let f = as_function(f.ok_or_else(|| Signal::error("missing FUN"))?, env)?;
+    let mut seqs: Vec<(Option<String>, Vec<RVal>)> = Vec::new();
+    let mut more: Vec<(Option<String>, RVal)> = Vec::new();
+    for (name, v) in rest0 {
+        if name.as_deref() == Some("MoreArgs") {
+            if let RVal::List(l) = v {
+                for (k, mv) in l.vals.iter().enumerate() {
+                    let nm = l.names.as_ref().and_then(|ns| ns.get(k)).cloned();
+                    more.push((nm, mv.clone()));
+                }
+            }
+        } else if name.as_deref() != Some("SIMPLIFY") {
+            seqs.push((name, v.iter_elements()));
+        }
+    }
+    seqs.retain(|(_, s)| !s.is_empty());
+    let n = seqs.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+    // Zip into per-element binding rows and run as a foreach-style chunk
+    // (each element is a tuple of arguments).
+    let mut items: Vec<RVal> = Vec::with_capacity(n);
+    for k in 0..n {
+        let row: Vec<RVal> = seqs.iter().map(|(_, s)| s[k % s.len()].clone()).collect();
+        items.push(RVal::list(row));
+    }
+    // Wrapper closure: f applied to the elements of the tuple.
+    let results = map_tuple(i, env, items, &f, &more, &opts, seqs.len())?;
+    simplify_to(results, None, "auto")
+}
+
+/// `future_.mapply(FUN, dots, MoreArgs)`: dots is a list of sequences.
+fn fut_dot_mapply(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_future_opts(&args);
+    let args2 = Args::new(user);
+    let b = args2.bind(&["FUN", "dots", "MoreArgs"]);
+    let f = as_function(&b.req(0, "FUN")?, env)?;
+    let dots = match b.req(1, "dots")? {
+        RVal::List(l) => l,
+        other => {
+            return Err(Signal::error(format!(
+                "future_.mapply: dots must be a list, got {}",
+                other.class()
+            )))
+        }
+    };
+    let seqs: Vec<Vec<RVal>> = dots
+        .vals
+        .iter()
+        .map(|v| v.iter_elements())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let n = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+    let items: Vec<RVal> = (0..n)
+        .map(|k| RVal::list(seqs.iter().map(|s| s[k % s.len()].clone()).collect()))
+        .collect();
+    let results = map_tuple(i, env, items, &f, &[], &opts, seqs.len())?;
+    simplify_to(results, None, "list")
+}
+
+fn fut_map_base(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_future_opts(&args);
+    let (f, rest) = bind1(&user, "f");
+    let f = as_function(f.ok_or_else(|| Signal::error("missing f"))?, env)?;
+    let seqs: Vec<Vec<RVal>> = rest.iter().map(|(_, v)| v.iter_elements()).collect();
+    let n = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut items = Vec::with_capacity(n);
+    for k in 0..n {
+        let row: Vec<RVal> = seqs.iter().map(|s| s[k % s.len()].clone()).collect();
+        items.push(RVal::list(row));
+    }
+    let results = map_tuple(i, env, items, &f, &[], &opts, seqs.len())?;
+    simplify_to(results, None, "list")
+}
+
+/// Run `f` over tuple items (each an RVal::List of the per-position
+/// arguments) by wrapping it in a do.call shim closure.
+pub(crate) fn map_tuple(
+    i: &mut Interp,
+    env: &EnvRef,
+    items: Vec<RVal>,
+    f: &RVal,
+    more: &[(Option<String>, RVal)],
+    opts: &FuturizeOptions,
+    _arity: usize,
+) -> Result<Vec<RVal>, Signal> {
+    // shim: function(.tuple) do.call(.f, c(.tuple, .more))
+    let shim_src = "function(.tuple, .f, .more) do.call(.f, append(.tuple, .more))";
+    let shim_expr = crate::rlite::parse_expr(shim_src).map_err(Signal::error)?;
+    let shim = i.eval(&shim_expr, env)?;
+    let more_list = RVal::List(crate::rlite::value::RList {
+        vals: more.iter().map(|(_, v)| v.clone()).collect(),
+        names: Some(more.iter().map(|(n, _)| n.clone().unwrap_or_default()).collect()),
+        class: None,
+    });
+    let extra = vec![(Some(".f".to_string()), f.clone()), (Some(".more".to_string()), more_list)];
+    map_elements(i, env, items, &shim, extra, &opts.to_map_options(false))
+}
+
+fn fut_apply_matrix(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_future_opts(&args);
+    let mut x = None;
+    let mut margin = None;
+    let mut f = None;
+    let mut rest = Vec::new();
+    let mut positional = Vec::new();
+    for (name, v) in user {
+        match name.as_deref() {
+            Some("X") => x = Some(v),
+            Some("MARGIN") => margin = Some(v),
+            Some("FUN") => f = Some(v),
+            Some(_) => rest.push((name, v)),
+            None => positional.push(v),
+        }
+    }
+    let mut pos = positional.into_iter();
+    let x = x.or_else(|| pos.next()).ok_or_else(|| Signal::error("missing X"))?;
+    let margin = margin
+        .or_else(|| pos.next())
+        .ok_or_else(|| Signal::error("missing MARGIN"))?
+        .as_usize()
+        .map_err(Signal::error)?;
+    let f = as_function(&f.or_else(|| pos.next()).ok_or_else(|| Signal::error("missing FUN"))?, env)?;
+    let cols = match &x {
+        RVal::List(l) => l.vals.clone(),
+        other => vec![other.clone()],
+    };
+    let items: Vec<RVal> = match margin {
+        2 => cols,
+        1 => {
+            let nrow = cols.first().map(|c| c.len()).unwrap_or(0);
+            (0..nrow)
+                .map(|r| {
+                    let row: Vec<f64> = cols
+                        .iter()
+                        .map(|c| c.as_dbl_vec().map(|v| v[r]).unwrap_or(f64::NAN))
+                        .collect();
+                    RVal::dbl(row)
+                })
+                .collect()
+        }
+        other => return Err(Signal::error(format!("MARGIN must be 1 or 2, got {other}"))),
+    };
+    let results = map_elements(i, env, items, &f, rest, &opts.to_map_options(false))?;
+    simplify_to(results, None, "auto")
+}
+
+fn fut_tapply(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_future_opts(&args);
+    let mut pos = user
+        .iter()
+        .filter(|(n, _)| n.is_none())
+        .map(|(_, v)| v.clone())
+        .collect::<Vec<_>>()
+        .into_iter();
+    let x = pos.next().ok_or_else(|| Signal::error("missing X"))?;
+    let index = pos.next().ok_or_else(|| Signal::error("missing INDEX"))?;
+    let f = as_function(&pos.next().ok_or_else(|| Signal::error("missing FUN"))?, env)?;
+    let (groups, items) =
+        super::base_r::group_by(&x, &index.as_str_vec().map_err(Signal::error)?)?;
+    let results = map_elements(i, env, items, &f, vec![], &opts.to_map_options(false))?;
+    simplify_to(results, Some(groups), "auto")
+}
+
+fn fut_by(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    // Delegate grouping to the sequential implementation, then map the
+    // groups in parallel: group extraction is cheap, FUN is the hot part.
+    // For simplicity reuse sequential by() shape via base_r, but through
+    // map_elements.
+    fut_tapply_like_by(i, args, env)
+}
+
+fn fut_tapply_like_by(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_future_opts(&args);
+    let mut pos = user
+        .iter()
+        .filter(|(n, _)| n.is_none())
+        .map(|(_, v)| v.clone())
+        .collect::<Vec<_>>()
+        .into_iter();
+    let data = pos.next().ok_or_else(|| Signal::error("missing data"))?;
+    let idx =
+        pos.next().ok_or_else(|| Signal::error("missing INDICES"))?.as_str_vec().map_err(Signal::error)?;
+    let f = as_function(&pos.next().ok_or_else(|| Signal::error("missing FUN"))?, env)?;
+    let RVal::List(df) = &data else {
+        return Err(Signal::error("future_by: data must be a data.frame"));
+    };
+    let mut groups: Vec<String> = idx.clone();
+    groups.sort();
+    groups.dedup();
+    let mut items = Vec::with_capacity(groups.len());
+    for g in &groups {
+        let rows: Vec<usize> =
+            idx.iter().enumerate().filter(|(_, v)| *v == g).map(|(k, _)| k).collect();
+        let cols: Vec<RVal> = df
+            .vals
+            .iter()
+            .map(|c| {
+                crate::rlite::eval::index_get(
+                    c,
+                    &[RVal::dbl(rows.iter().map(|&r| (r + 1) as f64).collect())],
+                    false,
+                )
+                .unwrap_or(RVal::Null)
+            })
+            .collect();
+        let mut sub = crate::rlite::value::RList {
+            vals: cols,
+            names: df.names.clone(),
+            class: Some("data.frame".into()),
+        };
+        sub.class = Some("data.frame".into());
+        items.push(RVal::List(sub));
+    }
+    let results = map_elements(i, env, items, &f, vec![], &opts.to_map_options(false))?;
+    simplify_to(results, Some(groups), "list")
+}
+
+fn fut_eapply(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_future_opts(&args);
+    let (e, f, _) = bind2(&user, "env", "FUN");
+    let target = match e.ok_or_else(|| Signal::error("missing env"))? {
+        RVal::Env(e) => e.clone(),
+        other => return Err(Signal::error(format!("not an environment: {}", other.class()))),
+    };
+    let f = as_function(f.ok_or_else(|| Signal::error("missing FUN"))?, env)?;
+    let mut bindings: Vec<(String, RVal)> = target.borrow().vars.clone().into_iter().collect();
+    bindings.sort_by(|a, b| a.0.cmp(&b.0));
+    let names: Vec<String> = bindings.iter().map(|(n, _)| n.clone()).collect();
+    let items: Vec<RVal> = bindings.into_iter().map(|(_, v)| v).collect();
+    let results = map_elements(i, env, items, &f, vec![], &opts.to_map_options(false))?;
+    simplify_to(results, Some(names), "list")
+}
+
+/// future_replicate(n, expr, future.seed = TRUE): special form — each
+/// replication is one foreach-style element with its own RNG stream.
+fn fut_replicate(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let mut n = None;
+    let mut expr = None;
+    let mut optpairs: Vec<(String, RVal)> = Vec::new();
+    let mut pos = 0;
+    for a in args {
+        match a.name.as_deref() {
+            Some(name) if name.starts_with("future.") => {
+                let v = i.eval(&a.value, env)?;
+                optpairs.push((name.to_string(), v));
+            }
+            Some("n") => n = Some(i.eval(&a.value, env)?.as_usize().map_err(Signal::error)?),
+            Some("expr") => expr = Some(a.value.clone()),
+            Some("simplify") => {}
+            None => {
+                match pos {
+                    0 => n = Some(i.eval(&a.value, env)?.as_usize().map_err(Signal::error)?),
+                    1 => expr = Some(a.value.clone()),
+                    _ => {}
+                }
+                pos += 1;
+            }
+            _ => {}
+        }
+    }
+    let n = n.ok_or_else(|| Signal::error("future_replicate: missing n"))?;
+    let expr = expr.ok_or_else(|| Signal::error("future_replicate: missing expr"))?;
+    let mut opts = options_from_pairs(&optpairs);
+    if opts.seed.is_none() {
+        opts.seed = Some(crate::transpile::SeedSetting::True);
+    }
+    let bindings: Vec<Vec<(String, RVal)>> = (0..n).map(|_| vec![]).collect();
+    let results = foreach_elements(i, env, bindings, &expr, &opts.to_map_options(true))?;
+    simplify_to(results, None, "auto")
+}
+
+fn fut_filter(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_future_opts(&args);
+    let (f, x, _) = bind2(&user, "f", "x");
+    let f = as_function(f.ok_or_else(|| Signal::error("missing f"))?, env)?;
+    let x = x.ok_or_else(|| Signal::error("missing x"))?.clone();
+    let elems = x.iter_elements();
+    let flags =
+        map_elements(i, env, elems.clone(), &f, vec![], &opts.to_map_options(false))?;
+    let mut kept = Vec::new();
+    for (e, flag) in elems.into_iter().zip(&flags) {
+        if flag.as_bool().map_err(Signal::error)? {
+            kept.push(e);
+        }
+    }
+    match x {
+        RVal::List(_) => Ok(RVal::list(kept)),
+        _ => crate::rlite::builtins::core::combine(kept.into_iter().map(|v| (None, v)).collect()),
+    }
+}
+
+/// future_kernapply: chunk the series with kernel-width overlap so the
+/// concatenated per-chunk convolutions equal the sequential result.
+fn fut_kernapply(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_future_opts(&args);
+    let (x, k, _) = bind2(&user, "x", "k");
+    let x = x.ok_or_else(|| Signal::error("missing x"))?.as_dbl_vec().map_err(Signal::error)?;
+    let k = k.ok_or_else(|| Signal::error("missing k"))?.clone();
+    let kv = k.as_dbl_vec().map_err(Signal::error)?;
+    let m = kv.len();
+    if x.len() < m {
+        return Ok(RVal::dbl(vec![]));
+    }
+    let workers = i.session.workers().max(1);
+    let out_len = x.len() - m + 1;
+    let per = out_len.div_ceil(workers);
+    let mut items = Vec::new();
+    let mut s = 0;
+    while s < out_len {
+        let e = (s + per).min(out_len);
+        // Overlap: chunk needs x[s .. e+m-1].
+        items.push(RVal::dbl(x[s..(e + m - 1)].to_vec()));
+        s = e;
+    }
+    let shim = i
+        .eval(&crate::rlite::parse_expr("function(chunk, k) kernapply(chunk, k)").map_err(Signal::error)?, env)?;
+    let results = map_elements(
+        i,
+        env,
+        items,
+        &shim,
+        vec![(Some("k".into()), k)],
+        &opts.to_map_options(false),
+    )?;
+    let mut out = Vec::with_capacity(out_len);
+    for r in results {
+        out.extend(r.as_dbl_vec().map_err(Signal::error)?);
+    }
+    Ok(RVal::dbl(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn future_lapply_matches_lapply() {
+        let seq = run("lapply(1:10, function(x) x^2)");
+        let par = run(
+            "plan(multicore, workers = 3)\nfuture.apply::future_lapply(1:10, function(x) x^2)",
+        );
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn future_sapply_simplifies() {
+        let v = run("plan(multicore, workers = 2)\nfuture.apply::future_sapply(1:4, sqrt)");
+        assert_eq!(v.len(), 4);
+        assert!((v.as_dbl_vec().unwrap()[3] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn future_mapply_zips() {
+        let v = run(
+            "plan(multicore, workers = 2)\nfuture.apply::future_mapply(function(a, b) a + b, 1:3, c(10, 20, 30))",
+        );
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn future_replicate_seeded() {
+        let a = run("futureSeed(7)\nfuture.apply::future_replicate(3, rnorm(2))");
+        let b = run("futureSeed(7)\nfuture.apply::future_replicate(3, rnorm(2))");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn future_kernapply_matches_sequential() {
+        let seq = run("kernapply(c(1, 2, 3, 4, 5, 6, 7, 8), c(0.25, 0.5, 0.25))");
+        let par = run(
+            "plan(multicore, workers = 3)\nfuture.apply::future_kernapply(c(1, 2, 3, 4, 5, 6, 7, 8), c(0.25, 0.5, 0.25))",
+        );
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn future_filter_matches() {
+        let v = run("plan(multicore, workers = 2)\nfuture.apply::future_Filter(function(x) x %% 2 == 0, 1:10)");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![2.0, 4.0, 6.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn future_tapply_groups() {
+        let v = run(
+            "plan(multicore, workers = 2)\nfuture.apply::future_tapply(c(1, 2, 3, 4), c(\"a\", \"b\", \"a\", \"b\"), sum)",
+        );
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![4.0, 6.0]);
+    }
+}

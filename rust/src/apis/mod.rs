@@ -1,0 +1,136 @@
+//! The map-reduce API families of the paper's Table 1, each in both its
+//! sequential form (what users write) and its future-based form (what
+//! the transpiler targets).
+//!
+//! | family        | sequential module     | parallel module / mechanism      |
+//! |---------------|-----------------------|----------------------------------|
+//! | base, stats   | [`base_r`]            | [`future_apply`] (`future_*`)    |
+//! | purrr         | [`purrr_pkg`]         | [`furrr_pkg`] (`future_map*`)    |
+//! | crossmap      | [`crossmap_pkg`]      | same module (`future_x*`)        |
+//! | foreach       | [`foreach_pkg`] `%do%`| `%dofuture%` (doFuture)          |
+//! | plyr          | [`plyr_pkg`]          | `.parallel = TRUE` path          |
+//! | BiocParallel  | [`biocparallel_pkg`]  | `BPPARAM = FutureParam()` path   |
+
+pub mod base_r;
+pub mod biocparallel_pkg;
+pub mod crossmap_pkg;
+pub mod foreach_pkg;
+pub mod furrr_pkg;
+pub mod future_apply;
+pub mod plyr_pkg;
+pub mod purrr_pkg;
+
+use crate::rlite::builtins::Reg;
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::RVal;
+
+pub fn register_builtins(r: &mut Reg) {
+    base_r::register(r);
+    future_apply::register(r);
+    purrr_pkg::register(r);
+    furrr_pkg::register(r);
+    crossmap_pkg::register(r);
+    foreach_pkg::register(r);
+    plyr_pkg::register(r);
+    biocparallel_pkg::register(r);
+}
+
+/// Leak a generated function name into a `'static` registry key.
+pub(crate) fn static_name(s: String) -> &'static str {
+    Box::leak(s.into_boxed_str())
+}
+
+/// Sequential element-wise application: `f(item, extra...)` inline in the
+/// current session (side effects and conditions propagate immediately, as
+/// in plain `lapply`).
+pub(crate) fn seq_map(
+    i: &mut Interp,
+    env: &EnvRef,
+    items: &[RVal],
+    f: &RVal,
+    extra: &[(Option<String>, RVal)],
+) -> Result<Vec<RVal>, Signal> {
+    let mut out = Vec::with_capacity(items.len());
+    for item in items {
+        let mut args = vec![(None, item.clone())];
+        args.extend(extra.iter().cloned());
+        out.push(i.call_function(f, args, env)?);
+    }
+    Ok(out)
+}
+
+/// Resolve a function argument (closure, builtin, or name) — `match.fun`.
+pub(crate) fn as_function(v: &RVal, env: &EnvRef) -> Result<RVal, Signal> {
+    match v {
+        RVal::Chr(_) => {
+            let name = v.as_str().map_err(Signal::error)?;
+            crate::rlite::env::lookup(env, &name)
+                .or_else(|| {
+                    crate::rlite::builtins::lookup_builtin(&name).map(|d| RVal::Builtin(d.key()))
+                })
+                .ok_or_else(|| Signal::error(format!("could not find function \"{name}\"")))
+        }
+        other if other.is_function() => Ok(other.clone()),
+        other => Err(Signal::error(format!("not a function: {}", other.class()))),
+    }
+}
+
+/// Typed simplification used by `sapply`-style and `map_dbl`-style
+/// functions. `want` is one of "list", "dbl", "int", "chr", "lgl",
+/// "auto".
+pub(crate) fn simplify_to(
+    results: Vec<RVal>,
+    names: Option<Vec<String>>,
+    want: &str,
+) -> EvalResult {
+    match want {
+        "list" => {
+            let mut l = crate::rlite::value::RList::plain(results);
+            l.names = names;
+            Ok(RVal::List(l))
+        }
+        "auto" => Ok(RVal::simplify(results, names)),
+        "dbl" | "int" => {
+            let mut vals = Vec::with_capacity(results.len());
+            for r in &results {
+                if r.len() != 1 {
+                    return Err(Signal::error(format!(
+                        "Result must be length 1, not {}",
+                        r.len()
+                    )));
+                }
+                vals.push(r.as_f64().map_err(Signal::error)?);
+            }
+            if want == "int" {
+                Ok(RVal::Int(crate::rlite::value::RVec {
+                    vals: vals.into_iter().map(|x| x as i64).collect(),
+                    names,
+                }))
+            } else {
+                Ok(RVal::Dbl(crate::rlite::value::RVec { vals, names }))
+            }
+        }
+        "chr" => {
+            let mut vals = Vec::with_capacity(results.len());
+            for r in &results {
+                if r.len() != 1 {
+                    return Err(Signal::error("Result must be length 1"));
+                }
+                vals.push(r.as_str_vec().map_err(Signal::error)?.remove(0));
+            }
+            Ok(RVal::Chr(crate::rlite::value::RVec { vals, names }))
+        }
+        "lgl" => {
+            let mut vals = Vec::with_capacity(results.len());
+            for r in &results {
+                if r.len() != 1 {
+                    return Err(Signal::error("Result must be length 1"));
+                }
+                vals.push(r.as_bool().map_err(Signal::error)?);
+            }
+            Ok(RVal::Lgl(crate::rlite::value::RVec { vals, names }))
+        }
+        other => Err(Signal::error(format!("unknown simplification '{other}'"))),
+    }
+}

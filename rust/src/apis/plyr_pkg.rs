@@ -1,0 +1,285 @@
+//! plyr (paper Table 1): the split-apply-combine toolkit (Wickham 2011).
+//! Naming scheme: `<in><out>ply` with in/out ∈ {l=list, a=array/vector,
+//! d=data.frame, m=multi-arg}. Futurization goes through plyr's own
+//! `.parallel = TRUE` sub-API (served by doFuture underneath), which the
+//! transpiler sets.
+
+use super::{as_function, simplify_to};
+use crate::future_core::driver::map_elements;
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::{RList, RVal};
+use crate::transpile::{options_from_value, FuturizeOptions};
+
+pub fn register(r: &mut Reg) {
+    for (name, out) in [("llply", 'l'), ("laply", 'a'), ("ldply", 'd')] {
+        r.normal("plyr", name, move |i, a, e| list_in_ply(i, a, e, out));
+    }
+    for (name, out) in [("alply", 'l'), ("aaply", 'a'), ("adply", 'd')] {
+        r.normal("plyr", name, move |i, a, e| list_in_ply(i, a, e, out));
+    }
+    for (name, out) in [("dlply", 'l'), ("daply", 'a'), ("ddply", 'd')] {
+        r.normal("plyr", name, move |i, a, e| df_in_ply(i, a, e, out));
+    }
+    for (name, out) in [("mlply", 'l'), ("maply", 'a'), ("mdply", 'd')] {
+        r.normal("plyr", name, move |i, a, e| multi_in_ply(i, a, e, out));
+    }
+}
+
+fn split_opts(args: &Args) -> (Args, bool, FuturizeOptions) {
+    let mut user = Vec::new();
+    let mut parallel = false;
+    let mut opts = FuturizeOptions::default();
+    for (name, v) in &args.items {
+        match name.as_deref() {
+            Some(".parallel") => parallel = v.as_bool().unwrap_or(false),
+            Some(".futurize_opts") => opts = options_from_value(v),
+            Some(".progress") | Some(".inform") => {}
+            _ => user.push((name.clone(), v.clone())),
+        }
+    }
+    (Args::new(user), parallel, opts)
+}
+
+fn run_map(
+    i: &mut Interp,
+    env: &EnvRef,
+    items: Vec<RVal>,
+    f: &RVal,
+    extra: Vec<(Option<String>, RVal)>,
+    parallel: bool,
+    opts: &FuturizeOptions,
+) -> Result<Vec<RVal>, Signal> {
+    if parallel {
+        map_elements(i, env, items, f, extra, &opts.to_map_options(false))
+    } else {
+        super::seq_map(i, env, &items, f, &extra)
+    }
+}
+
+fn shape_output(results: Vec<RVal>, names: Option<Vec<String>>, out: char) -> EvalResult {
+    match out {
+        'l' => simplify_to(results, names, "list"),
+        'a' => simplify_to(results, names, "auto"),
+        'd' => {
+            // rbind per-element records into a data.frame: each result
+            // must be a named list/df-row; columns are unioned.
+            let mut cols: Vec<String> = Vec::new();
+            for r in &results {
+                if let Some(ns) = r.names() {
+                    for n in ns {
+                        if !cols.contains(n) {
+                            cols.push(n.clone());
+                        }
+                    }
+                }
+            }
+            if cols.is_empty() {
+                // Fall back: single unnamed column V1.
+                let vals: Result<Vec<f64>, _> = results.iter().map(|r| r.as_f64()).collect();
+                let vals = vals.map_err(Signal::error)?;
+                let mut l = RList::named(vec![RVal::dbl(vals)], vec!["V1".into()]);
+                l.class = Some("data.frame".into());
+                return Ok(RVal::List(l));
+            }
+            let mut columns: Vec<Vec<RVal>> = vec![Vec::new(); cols.len()];
+            for r in &results {
+                for (ci, cname) in cols.iter().enumerate() {
+                    let cell = match r {
+                        RVal::List(l) => l.get(cname).cloned().unwrap_or(RVal::Null),
+                        other => {
+                            let idx = other
+                                .names()
+                                .and_then(|ns| ns.iter().position(|n| n == cname));
+                            match idx {
+                                Some(k) => other.iter_elements()[k].clone(),
+                                None => RVal::Null,
+                            }
+                        }
+                    };
+                    columns[ci].push(cell);
+                }
+            }
+            let col_vals: Vec<RVal> = columns
+                .into_iter()
+                .map(|cells| {
+                    crate::rlite::builtins::core::combine(
+                        cells.into_iter().map(|v| (None, v)).collect(),
+                    )
+                    .unwrap_or(RVal::Null)
+                })
+                .collect();
+            let mut l = RList::named(col_vals, cols);
+            l.class = Some("data.frame".into());
+            Ok(RVal::List(l))
+        }
+        other => Err(Signal::error(format!("plyr: unknown output shape '{other}'"))),
+    }
+}
+
+/// llply / laply / ldply (and the a* family over vectors).
+fn list_in_ply(i: &mut Interp, args: Args, env: &EnvRef, out: char) -> EvalResult {
+    let (args, parallel, opts) = split_opts(&args);
+    let b = args.bind(&[".data", ".fun"]);
+    let data = b.req(0, ".data")?;
+    let f = as_function(&b.req(1, ".fun")?, env)?;
+    let results = run_map(i, env, data.iter_elements(), &f, b.rest, parallel, &opts)?;
+    shape_output(results, data.element_names(), out)
+}
+
+/// ddply / dlply / daply: split a data.frame by grouping variables.
+fn df_in_ply(i: &mut Interp, args: Args, env: &EnvRef, out: char) -> EvalResult {
+    let (args, parallel, opts) = split_opts(&args);
+    let b = args.bind(&[".data", ".variables", ".fun"]);
+    let data = b.req(0, ".data")?;
+    let vars = b.req(1, ".variables")?.as_str_vec().map_err(Signal::error)?;
+    let f = as_function(&b.req(2, ".fun")?, env)?;
+    let RVal::List(df) = &data else {
+        return Err(Signal::error("ddply: .data must be a data.frame"));
+    };
+    // Group labels: join the values of the grouping columns per row.
+    let nrow = df.vals.first().map(|c| c.len()).unwrap_or(0);
+    let mut labels = vec![String::new(); nrow];
+    for v in &vars {
+        let col = df
+            .get(v)
+            .ok_or_else(|| Signal::error(format!("ddply: no column '{v}'")))?
+            .as_str_vec()
+            .map_err(Signal::error)?;
+        for (r, lab) in labels.iter_mut().enumerate() {
+            if !lab.is_empty() {
+                lab.push('.');
+            }
+            lab.push_str(&col[r]);
+        }
+    }
+    let mut groups: Vec<String> = labels.clone();
+    groups.sort();
+    groups.dedup();
+    let mut items = Vec::with_capacity(groups.len());
+    for g in &groups {
+        let rows: Vec<usize> =
+            labels.iter().enumerate().filter(|(_, l)| *l == g).map(|(k, _)| k).collect();
+        let cols: Vec<RVal> = df
+            .vals
+            .iter()
+            .map(|c| {
+                crate::rlite::eval::index_get(
+                    c,
+                    &[RVal::dbl(rows.iter().map(|&r| (r + 1) as f64).collect())],
+                    false,
+                )
+                .unwrap_or(RVal::Null)
+            })
+            .collect();
+        let mut sub = RList { vals: cols, names: df.names.clone(), class: None };
+        sub.class = Some("data.frame".into());
+        items.push(RVal::List(sub));
+    }
+    let results = run_map(i, env, items, &f, b.rest, parallel, &opts)?;
+    shape_output(results, Some(groups), out)
+}
+
+/// mlply / maply / mdply: rows of a data.frame (or list of vectors) as
+/// call arguments.
+fn multi_in_ply(i: &mut Interp, args: Args, env: &EnvRef, out: char) -> EvalResult {
+    let (args, parallel, opts) = split_opts(&args);
+    let b = args.bind(&[".data", ".fun"]);
+    let data = b.req(0, ".data")?;
+    let f = as_function(&b.req(1, ".fun")?, env)?;
+    let RVal::List(df) = &data else {
+        return Err(Signal::error("mlply: .data must be a data.frame or list of columns"));
+    };
+    let nrow = df.vals.first().map(|c| c.len()).unwrap_or(0);
+    let names = df.names.clone().unwrap_or_default();
+    let mut items = Vec::with_capacity(nrow);
+    for r in 0..nrow {
+        let row: Vec<RVal> = df.vals.iter().map(|c| c.iter_elements()[r].clone()).collect();
+        let mut l = RList::plain(row);
+        if !names.is_empty() {
+            l.names = Some(names.clone());
+        }
+        items.push(RVal::List(l));
+    }
+    let results = if parallel {
+        super::future_apply::map_tuple(i, env, items, &f, &b.rest, &opts, names.len())?
+    } else {
+        let mut out_vals = Vec::with_capacity(items.len());
+        for item in items {
+            let RVal::List(l) = item else { unreachable!() };
+            let call_args: Vec<(Option<String>, RVal)> = l
+                .vals
+                .iter()
+                .enumerate()
+                .map(|(k, v)| {
+                    let nm = l
+                        .names
+                        .as_ref()
+                        .and_then(|ns| ns.get(k))
+                        .filter(|s| !s.is_empty())
+                        .cloned();
+                    (nm, v.clone())
+                })
+                .collect();
+            out_vals.push(i.call_function(&f, call_args, env)?);
+        }
+        out_vals
+    };
+    shape_output(results, None, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn llply_matches_lapply() {
+        let a = run("llply(1:3, function(x) x * 3)");
+        let b = run("lapply(1:3, function(x) x * 3)");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn laply_simplifies() {
+        assert_eq!(run("laply(1:3, function(x) x + 1)"), RVal::dbl(vec![2.0, 3.0, 4.0]));
+    }
+
+    #[test]
+    fn llply_parallel_matches_sequential() {
+        let seq = run("llply(1:8, function(x) x^2)");
+        let par = run("plan(multicore, workers = 3)\nllply(1:8, function(x) x^2, .parallel = TRUE)");
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn ddply_groups_data_frame() {
+        let v = run(
+            "df <- data.frame(g = c(\"a\", \"b\", \"a\"), x = c(1, 2, 3))\n\
+             r <- ddply(df, \"g\", function(d) list(total = sum(d$x)))\nr$total",
+        );
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn mlply_rows_as_args() {
+        let v = run(
+            "df <- data.frame(a = 1:2, b = c(10, 20))\n\
+             r <- mlply(df, function(a, b) a + b)\nunlist(r)",
+        );
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn ldply_binds_rows() {
+        let v = run(
+            "r <- ldply(1:2, function(x) list(v = x, sq = x^2))\nr$sq",
+        );
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![1.0, 4.0]);
+    }
+}

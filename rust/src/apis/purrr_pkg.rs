@@ -1,0 +1,331 @@
+//! Sequential purrr family (paper Table 1 row "purrr").
+//!
+//! All `map*` variants share one template parameterized by input arity
+//! (map / map2 / pmap / imap) and output shape (list / dbl / int / chr /
+//! lgl / same-as-input). `.f` may be a function or (as in purrr) a
+//! character name.
+
+use super::{as_function, seq_map, simplify_to};
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::{RList, RVal};
+
+#[derive(Clone, Copy, PartialEq)]
+pub(crate) enum Arity {
+    Map1,
+    Map2,
+    PMap,
+    IMap,
+}
+
+pub(crate) const VARIANTS: &[(&str, Arity, &str)] = &[
+    ("map", Arity::Map1, "list"),
+    ("map_dbl", Arity::Map1, "dbl"),
+    ("map_int", Arity::Map1, "int"),
+    ("map_chr", Arity::Map1, "chr"),
+    ("map_lgl", Arity::Map1, "lgl"),
+    ("map2", Arity::Map2, "list"),
+    ("map2_dbl", Arity::Map2, "dbl"),
+    ("map2_int", Arity::Map2, "int"),
+    ("map2_chr", Arity::Map2, "chr"),
+    ("map2_lgl", Arity::Map2, "lgl"),
+    ("pmap", Arity::PMap, "list"),
+    ("pmap_dbl", Arity::PMap, "dbl"),
+    ("pmap_chr", Arity::PMap, "chr"),
+    ("imap", Arity::IMap, "list"),
+    ("imap_dbl", Arity::IMap, "dbl"),
+    ("imap_chr", Arity::IMap, "chr"),
+];
+
+pub fn register(r: &mut Reg) {
+    for &(name, arity, want) in VARIANTS {
+        r.normal("purrr", name, move |i, a, e| map_variant(i, a, e, arity, want, false));
+    }
+    r.normal("purrr", "walk", |i, a, e| {
+        let b = a.bind(&[".x"]);
+        let x = b.req(0, ".x")?;
+        map_variant(i, a, e, Arity::Map1, "list", false)?;
+        Ok(x) // walk returns .x invisibly
+    });
+    r.normal("purrr", "modify", |i, a, e| map_variant(i, a, e, Arity::Map1, "auto", false));
+    r.normal("purrr", "modify_if", modify_if_fn);
+    r.normal("purrr", "modify_at", modify_at_fn);
+    r.normal("purrr", "map_if", map_if_fn);
+    r.normal("purrr", "map_at", map_at_fn);
+    r.normal("purrr", "invoke_map", invoke_map_fn);
+}
+
+pub(crate) fn map_variant(
+    i: &mut Interp,
+    args: Args,
+    env: &EnvRef,
+    arity: Arity,
+    want: &str,
+    _parallel_marker: bool,
+) -> EvalResult {
+    match arity {
+        Arity::Map1 => {
+            let b = args.bind(&[".x", ".f"]);
+            let x = b.req(0, ".x")?;
+            let f = as_function(&b.req(1, ".f")?, env)?;
+            let results = seq_map(i, env, &x.iter_elements(), &f, &b.rest)?;
+            simplify_to(results, x.element_names(), want)
+        }
+        Arity::Map2 => {
+            let b = args.bind(&[".x", ".y", ".f"]);
+            let x = b.req(0, ".x")?;
+            let y = b.req(1, ".y")?;
+            let f = as_function(&b.req(2, ".f")?, env)?;
+            let xs = x.iter_elements();
+            let ys = y.iter_elements();
+            if xs.len() != ys.len() && ys.len() != 1 && xs.len() != 1 {
+                return Err(Signal::error(format!(
+                    "map2: .x (length {}) and .y (length {}) are incompatible",
+                    xs.len(),
+                    ys.len()
+                )));
+            }
+            let n = xs.len().max(ys.len());
+            let mut results = Vec::with_capacity(n);
+            for k in 0..n {
+                let mut call_args = vec![
+                    (None, xs[k % xs.len()].clone()),
+                    (None, ys[k % ys.len()].clone()),
+                ];
+                call_args.extend(b.rest.iter().cloned());
+                results.push(i.call_function(&f, call_args, env)?);
+            }
+            simplify_to(results, x.element_names(), want)
+        }
+        Arity::PMap => {
+            let b = args.bind(&[".l", ".f"]);
+            let l = match b.req(0, ".l")? {
+                RVal::List(l) => l,
+                other => return Err(Signal::error(format!("pmap: .l must be a list, got {}", other.class()))),
+            };
+            let f = as_function(&b.req(1, ".f")?, env)?;
+            let seqs: Vec<Vec<RVal>> = l.vals.iter().map(|v| v.iter_elements()).collect();
+            let n = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+            let mut results = Vec::with_capacity(n);
+            for k in 0..n {
+                let mut call_args: Vec<(Option<String>, RVal)> = seqs
+                    .iter()
+                    .enumerate()
+                    .map(|(j, s)| {
+                        let nm = l
+                            .names
+                            .as_ref()
+                            .and_then(|ns| ns.get(j))
+                            .filter(|s| !s.is_empty())
+                            .cloned();
+                        (nm, s[k % s.len()].clone())
+                    })
+                    .collect();
+                call_args.extend(b.rest.iter().cloned());
+                results.push(i.call_function(&f, call_args, env)?);
+            }
+            simplify_to(results, None, want)
+        }
+        Arity::IMap => {
+            let b = args.bind(&[".x", ".f"]);
+            let x = b.req(0, ".x")?;
+            let f = as_function(&b.req(1, ".f")?, env)?;
+            let elems = x.iter_elements();
+            let names = x.element_names();
+            let mut results = Vec::with_capacity(elems.len());
+            for (k, e) in elems.iter().enumerate() {
+                // Second argument: name if named, else 1-based index.
+                let tag = match &names {
+                    Some(ns) if !ns[k].is_empty() => RVal::scalar_str(ns[k].clone()),
+                    _ => RVal::scalar_int((k + 1) as i64),
+                };
+                let mut call_args = vec![(None, e.clone()), (None, tag)];
+                call_args.extend(b.rest.iter().cloned());
+                results.push(i.call_function(&f, call_args, env)?);
+            }
+            simplify_to(results, names, want)
+        }
+    }
+}
+
+fn predicate_mask(
+    i: &mut Interp,
+    env: &EnvRef,
+    elems: &[RVal],
+    p: &RVal,
+) -> Result<Vec<bool>, Signal> {
+    let mut mask = Vec::with_capacity(elems.len());
+    for e in elems {
+        mask.push(
+            i.call_function(p, vec![(None, e.clone())], env)?
+                .as_bool()
+                .map_err(Signal::error)?,
+        );
+    }
+    Ok(mask)
+}
+
+fn apply_where(
+    i: &mut Interp,
+    env: &EnvRef,
+    x: &RVal,
+    mask: &[bool],
+    f: &RVal,
+) -> EvalResult {
+    let elems = x.iter_elements();
+    let mut out = Vec::with_capacity(elems.len());
+    for (k, e) in elems.into_iter().enumerate() {
+        if mask[k] {
+            out.push(i.call_function(f, vec![(None, e)], env)?);
+        } else {
+            out.push(e);
+        }
+    }
+    let mut l = RList::plain(out);
+    l.names = x.element_names();
+    Ok(RVal::List(l))
+}
+
+fn modify_if_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&[".x", ".p", ".f"]);
+    let x = b.req(0, ".x")?;
+    let p = as_function(&b.req(1, ".p")?, env)?;
+    let f = as_function(&b.req(2, ".f")?, env)?;
+    let mask = predicate_mask(i, env, &x.iter_elements(), &p)?;
+    apply_where(i, env, &x, &mask, &f)
+}
+
+fn map_if_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    modify_if_fn(i, args, env)
+}
+
+fn modify_at_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&[".x", ".at", ".f"]);
+    let x = b.req(0, ".x")?;
+    let at = b.req(1, ".at")?;
+    let f = as_function(&b.req(2, ".f")?, env)?;
+    let n = x.len();
+    let mut mask = vec![false; n];
+    match &at {
+        RVal::Chr(keys) => {
+            if let Some(names) = x.names() {
+                for (k, nm) in names.iter().enumerate() {
+                    if keys.vals.contains(nm) {
+                        mask[k] = true;
+                    }
+                }
+            }
+        }
+        other => {
+            for idx in other.as_dbl_vec().map_err(Signal::error)? {
+                let k = idx as usize;
+                if k >= 1 && k <= n {
+                    mask[k - 1] = true;
+                }
+            }
+        }
+    }
+    apply_where(i, env, &x, &mask, &f)
+}
+
+fn map_at_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    modify_at_fn(i, args, env)
+}
+
+/// invoke_map(.f, .x): .f is a list of functions, .x a list of arg-lists.
+fn invoke_map_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&[".f", ".x"]);
+    let fs = b.req(0, ".f")?.iter_elements();
+    let xs = match b.opt(1) {
+        Some(RVal::List(l)) => l.vals,
+        _ => vec![RVal::Null; fs.len()],
+    };
+    let mut results = Vec::with_capacity(fs.len());
+    for (k, fval) in fs.iter().enumerate() {
+        let f = as_function(fval, env)?;
+        let call_args: Vec<(Option<String>, RVal)> = match xs.get(k % xs.len().max(1)) {
+            Some(RVal::List(l)) => l.vals.iter().map(|v| (None, v.clone())).collect(),
+            Some(RVal::Null) | None => vec![],
+            Some(other) => vec![(None, other.clone())],
+        };
+        results.push(i.call_function(&f, call_args, env)?);
+    }
+    simplify_to(results, None, "list")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn map_returns_list() {
+        let v = run("map(1:3, function(x) x + 1)");
+        assert!(matches!(v, RVal::List(_)));
+        assert_eq!(v.len(), 3);
+    }
+
+    #[test]
+    fn map_dbl_typed() {
+        assert_eq!(run("map_dbl(1:3, function(x) x * 1.5)"), RVal::dbl(vec![1.5, 3.0, 4.5]));
+    }
+
+    #[test]
+    fn map_dbl_rejects_nonscalar() {
+        assert!(Interp::new().eval_program("map_dbl(1:3, function(x) c(x, x))").is_err());
+    }
+
+    #[test]
+    fn map2_zips() {
+        assert_eq!(
+            run("map2_dbl(1:3, c(10, 20, 30), function(a, b) a + b)"),
+            RVal::dbl(vec![11.0, 22.0, 33.0])
+        );
+    }
+
+    #[test]
+    fn pmap_over_list() {
+        assert_eq!(
+            run("pmap_dbl(list(1:2, 3:4, 5:6), function(a, b, c) a + b + c)"),
+            RVal::dbl(vec![9.0, 12.0])
+        );
+    }
+
+    #[test]
+    fn imap_passes_names_or_index() {
+        let v = run("imap_chr(c(a = 1, b = 2), function(x, nm) paste0(nm, x))");
+        assert_eq!(v.as_str_vec().unwrap(), vec!["a1".to_string(), "b2".to_string()]);
+        let v = run("imap_chr(c(5, 6), function(x, idx) paste0(idx, \":\", x))");
+        assert_eq!(v.as_str_vec().unwrap(), vec!["1:5".to_string(), "2:6".to_string()]);
+    }
+
+    #[test]
+    fn map_with_extra_args() {
+        // map(xs, rnorm, n = 10) — the paper's §4.2 pipeline shape.
+        let v = run("set.seed(1)\nr <- map(1:3, rnorm, n = 10)\nlength(r[[2]])");
+        assert_eq!(v, RVal::scalar_int(10));
+    }
+
+    #[test]
+    fn modify_if_applies_selectively() {
+        let v = run("r <- modify_if(c(1, 5, 2), function(x) x > 3, function(x) x * 100)\nunlist(r)");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![1.0, 500.0, 2.0]);
+    }
+
+    #[test]
+    fn walk_returns_input() {
+        let v = run("walk(1:3, function(x) x)");
+        assert_eq!(v, RVal::int(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn invoke_map_calls_each() {
+        let v = run("r <- invoke_map(list(function() 1, function() 2))\nunlist(r)");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![1.0, 2.0]);
+    }
+}

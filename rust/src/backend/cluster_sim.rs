@@ -1,0 +1,65 @@
+//! The `plan(cluster, workers = c("n1", ...))` backend.
+//!
+//! The paper's ad-hoc clusters run PSOCK workers on *remote* machines;
+//! we have one machine, so per the substitution rule we keep the real
+//! process workers and inject a configurable per-message network latency
+//! on both the submit and the result path. This preserves the property
+//! that matters for the evaluation: the chunking/scheduling trade-off
+//! (few large chunks amortize latency; many small chunks balance load).
+
+use std::time::Duration;
+
+use super::multisession::MultisessionBackend;
+use super::{Backend, BackendEvent};
+use crate::future_core::TaskPayload;
+
+pub struct ClusterSimBackend {
+    inner: MultisessionBackend,
+    latency: Duration,
+}
+
+impl ClusterSimBackend {
+    pub fn new(workers: usize, latency_ms: f64) -> Result<Self, String> {
+        Ok(ClusterSimBackend {
+            inner: MultisessionBackend::with_name(workers, "cluster")?,
+            latency: Duration::from_secs_f64(latency_ms.max(0.0) / 1000.0),
+        })
+    }
+}
+
+impl Backend for ClusterSimBackend {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+
+    fn submit(&mut self, task: TaskPayload) -> Result<(), String> {
+        // One-way trip to the remote node.
+        std::thread::sleep(self.latency);
+        self.inner.submit(task)
+    }
+
+    fn next_event(&mut self) -> Result<BackendEvent, String> {
+        let ev = self.inner.next_event()?;
+        if matches!(ev, BackendEvent::Done(_)) {
+            // Result travels back over the wire.
+            std::thread::sleep(self.latency);
+        }
+        Ok(ev)
+    }
+
+    fn try_next_event(&mut self) -> Result<Option<BackendEvent>, String> {
+        let ev = self.inner.try_next_event()?;
+        if matches!(ev, Some(BackendEvent::Done(_))) {
+            std::thread::sleep(self.latency);
+        }
+        Ok(ev)
+    }
+
+    fn cancel_queued(&mut self) -> usize {
+        self.inner.cancel_queued()
+    }
+}

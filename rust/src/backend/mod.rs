@@ -1,0 +1,220 @@
+//! Execution backends — the *how/where* half of the paper's separation
+//! of concerns, selected by the end-user via `plan()`.
+//!
+//! | plan() name                                | backend           |
+//! |--------------------------------------------|-------------------|
+//! | `sequential`                               | [`sequential`]    |
+//! | `multicore`                                | [`multicore`] (native threads, the fork analog) |
+//! | `multisession`, `future.callr::callr`, `future.mirai::mirai_multisession` | [`multisession`] (worker subprocesses over stdio, the PSOCK analog) |
+//! | `cluster`                                  | [`cluster_sim`] (process workers + injected per-message latency) |
+//! | `future.batchtools::batchtools_slurm` etc. | [`batchtools_sim`] (file-based job queue + polling scheduler) |
+//!
+//! Every backend implements [`Backend`] and must pass the conformance
+//! suite in `rust/tests/backend_conformance.rs` — the future.tests
+//! analog the paper cites for guaranteeing Future-API compliance.
+
+pub mod batchtools_sim;
+pub mod cluster_sim;
+pub mod multicore;
+pub mod multisession;
+pub mod sequential;
+pub mod task_runner;
+pub mod worker;
+
+use crate::future_core::{TaskOutcome, TaskPayload};
+use crate::rlite::conditions::RCondition;
+
+/// Which backend family a plan names.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BackendKind {
+    Sequential,
+    Multicore,
+    Multisession,
+    ClusterSim,
+    BatchtoolsSim,
+}
+
+/// A fully resolved `plan()`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanSpec {
+    pub kind: BackendKind,
+    /// Requested worker count (0 = all available cores).
+    pub workers: usize,
+    /// Cluster node names (display/trace only).
+    pub worker_names: Vec<String>,
+    /// cluster_sim: one-way message latency in milliseconds.
+    pub latency_ms: f64,
+    /// batchtools_sim: scheduler poll interval in milliseconds.
+    pub poll_ms: f64,
+    /// The plan name as the user wrote it (e.g.
+    /// "future.mirai::mirai_multisession") for display.
+    pub display: String,
+}
+
+impl PlanSpec {
+    pub fn sequential() -> Self {
+        PlanSpec {
+            kind: BackendKind::Sequential,
+            workers: 1,
+            worker_names: vec![],
+            latency_ms: 0.0,
+            poll_ms: 0.0,
+            display: "sequential".into(),
+        }
+    }
+
+    pub fn multicore(workers: usize) -> Self {
+        PlanSpec {
+            kind: BackendKind::Multicore,
+            workers,
+            worker_names: vec![],
+            latency_ms: 0.0,
+            poll_ms: 0.0,
+            display: "multicore".into(),
+        }
+    }
+
+    pub fn multisession(workers: usize) -> Self {
+        PlanSpec {
+            kind: BackendKind::Multisession,
+            workers,
+            worker_names: vec![],
+            latency_ms: 0.0,
+            poll_ms: 0.0,
+            display: "multisession".into(),
+        }
+    }
+
+    /// Resolve a `plan()` backend name. Accepts every name used in the
+    /// paper's §4.8 backend-flexibility tour.
+    pub fn from_name(
+        name: &str,
+        workers: Option<usize>,
+        worker_names: Vec<String>,
+        latency_ms: Option<f64>,
+        poll_ms: Option<f64>,
+    ) -> Result<PlanSpec, String> {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        let kind = match name {
+            "sequential" => BackendKind::Sequential,
+            "multicore" => BackendKind::Multicore,
+            "multisession" => BackendKind::Multisession,
+            // callr and mirai are PSOCK-like process backends in spirit.
+            "future.callr::callr" | "callr" => BackendKind::Multisession,
+            "future.mirai::mirai_multisession" | "mirai_multisession" => {
+                BackendKind::Multisession
+            }
+            "cluster" => BackendKind::ClusterSim,
+            n if n.starts_with("future.batchtools::") || n.starts_with("batchtools_") => {
+                BackendKind::BatchtoolsSim
+            }
+            other => return Err(format!("unknown future backend '{other}'")),
+        };
+        let default_workers = match kind {
+            BackendKind::Sequential => 1,
+            BackendKind::ClusterSim if !worker_names.is_empty() => worker_names.len(),
+            BackendKind::BatchtoolsSim => cores,
+            _ => cores,
+        };
+        Ok(PlanSpec {
+            workers: workers.unwrap_or(default_workers).max(1),
+            worker_names,
+            latency_ms: latency_ms.unwrap_or(if kind == BackendKind::ClusterSim { 1.0 } else { 0.0 }),
+            poll_ms: poll_ms.unwrap_or(if kind == BackendKind::BatchtoolsSim { 20.0 } else { 0.0 }),
+            display: name.to_string(),
+            kind,
+        })
+    }
+
+    pub fn describe(&self) -> String {
+        match self.kind {
+            BackendKind::Sequential => "sequential".into(),
+            _ => format!("{} ({} workers)", self.display, self.workers),
+        }
+    }
+}
+
+/// An event surfaced by a backend.
+#[derive(Debug)]
+pub enum BackendEvent {
+    /// A near-live progress/custom condition from a still-running task.
+    Progress { task_id: u64, cond: RCondition },
+    /// A task finished (successfully or not).
+    Done(TaskOutcome),
+}
+
+/// The Future-API surface every backend must provide.
+pub trait Backend: Send {
+    fn name(&self) -> &'static str;
+    fn workers(&self) -> usize;
+    /// Queue a task for execution. Must not block on task completion
+    /// (sequential backends may run the task inline).
+    fn submit(&mut self, task: TaskPayload) -> Result<(), String>;
+    /// Block until the next event is available.
+    fn next_event(&mut self) -> Result<BackendEvent, String>;
+    /// Non-blocking poll.
+    fn try_next_event(&mut self) -> Result<Option<BackendEvent>, String>;
+    /// Best-effort cancellation of queued (not yet running) tasks —
+    /// structured-concurrency support (paper §5.3).
+    fn cancel_queued(&mut self) -> usize;
+}
+
+/// Instantiate the backend for a plan.
+pub fn instantiate(plan: &PlanSpec) -> Result<Box<dyn Backend>, String> {
+    Ok(match plan.kind {
+        BackendKind::Sequential => Box::new(sequential::SequentialBackend::new()),
+        BackendKind::Multicore => Box::new(multicore::MulticoreBackend::new(plan.workers)),
+        BackendKind::Multisession => {
+            Box::new(multisession::MultisessionBackend::new(plan.workers)?)
+        }
+        BackendKind::ClusterSim => Box::new(cluster_sim::ClusterSimBackend::new(
+            plan.workers,
+            plan.latency_ms,
+        )?),
+        BackendKind::BatchtoolsSim => Box::new(batchtools_sim::BatchtoolsSimBackend::new(
+            plan.workers,
+            plan.poll_ms,
+        )?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_name_resolution() {
+        let p = PlanSpec::from_name("multisession", Some(4), vec![], None, None).unwrap();
+        assert_eq!(p.kind, BackendKind::Multisession);
+        assert_eq!(p.workers, 4);
+
+        let p = PlanSpec::from_name("future.mirai::mirai_multisession", None, vec![], None, None)
+            .unwrap();
+        assert_eq!(p.kind, BackendKind::Multisession);
+
+        let p = PlanSpec::from_name("future.batchtools::batchtools_slurm", None, vec![], None, None)
+            .unwrap();
+        assert_eq!(p.kind, BackendKind::BatchtoolsSim);
+
+        assert!(PlanSpec::from_name("nosuch", None, vec![], None, None).is_err());
+    }
+
+    #[test]
+    fn cluster_workers_from_names() {
+        let p = PlanSpec::from_name(
+            "cluster",
+            None,
+            vec!["n1".into(), "n1".into(), "n2".into()],
+            None,
+            None,
+        )
+        .unwrap();
+        assert_eq!(p.workers, 3);
+    }
+
+    #[test]
+    fn sequential_defaults_to_one_worker() {
+        let p = PlanSpec::from_name("sequential", None, vec![], None, None).unwrap();
+        assert_eq!(p.workers, 1);
+    }
+}

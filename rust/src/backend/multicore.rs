@@ -1,0 +1,176 @@
+//! The `plan(multicore)` backend: a native thread pool (the fork analog —
+//! shared-memory workers on the local machine).
+//!
+//! Tasks still cross the boundary in wire form (closures captured by
+//! value), preserving the future framework's by-value globals semantics:
+//! a forked R worker sees a *copy-on-write snapshot*, not live state.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::{Backend, BackendEvent};
+use crate::future_core::TaskPayload;
+
+struct Shared {
+    queue: Mutex<VecDeque<TaskPayload>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+pub struct MulticoreBackend {
+    shared: Arc<Shared>,
+    events_rx: Receiver<BackendEvent>,
+    _events_tx: Sender<BackendEvent>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl MulticoreBackend {
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let (tx, rx) = channel::<BackendEvent>();
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let shared = shared.clone();
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let task = {
+                    let mut q = shared.queue.lock().unwrap();
+                    loop {
+                        if *shared.shutdown.lock().unwrap() {
+                            return;
+                        }
+                        if let Some(t) = q.pop_front() {
+                            break t;
+                        }
+                        q = shared.cv.wait(q).unwrap();
+                    }
+                };
+                let tx_progress = tx.clone();
+                let outcome = super::task_runner::run_task(
+                    &task,
+                    w,
+                    Some(&mut |task_id, cond| {
+                        let _ = tx_progress.send(BackendEvent::Progress { task_id, cond });
+                    }),
+                );
+                if tx.send(BackendEvent::Done(outcome)).is_err() {
+                    return;
+                }
+            }));
+        }
+        MulticoreBackend { shared, events_rx: rx, _events_tx: tx, handles, workers }
+    }
+}
+
+impl Backend for MulticoreBackend {
+    fn name(&self) -> &'static str {
+        "multicore"
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn submit(&mut self, task: TaskPayload) -> Result<(), String> {
+        self.shared.queue.lock().unwrap().push_back(task);
+        self.shared.cv.notify_one();
+        Ok(())
+    }
+
+    fn next_event(&mut self) -> Result<BackendEvent, String> {
+        self.events_rx.recv().map_err(|e| format!("multicore backend: {e}"))
+    }
+
+    fn try_next_event(&mut self) -> Result<Option<BackendEvent>, String> {
+        match self.events_rx.try_recv() {
+            Ok(ev) => Ok(Some(ev)),
+            Err(std::sync::mpsc::TryRecvError::Empty) => Ok(None),
+            Err(e) => Err(format!("multicore backend: {e}")),
+        }
+    }
+
+    fn cancel_queued(&mut self) -> usize {
+        let mut q = self.shared.queue.lock().unwrap();
+        let n = q.len();
+        q.clear();
+        n
+    }
+}
+
+impl Drop for MulticoreBackend {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::future_core::TaskKind;
+    use crate::rlite::parse_expr;
+    use crate::rlite::serialize::WireVal;
+
+    fn payload(id: u64, src: &str) -> TaskPayload {
+        TaskPayload {
+            id,
+            kind: TaskKind::Expr { expr: parse_expr(src).unwrap(), globals: vec![] },
+            time_scale: 0.0,
+            capture_stdout: true,
+        }
+    }
+
+    #[test]
+    fn runs_tasks_on_multiple_threads() {
+        let mut b = MulticoreBackend::new(3);
+        for id in 1..=6 {
+            b.submit(payload(id, &format!("{id} * 2"))).unwrap();
+        }
+        let mut seen = std::collections::HashMap::new();
+        let mut workers = std::collections::HashSet::new();
+        while seen.len() < 6 {
+            if let BackendEvent::Done(o) = b.next_event().unwrap() {
+                workers.insert(o.worker);
+                match &o.values.unwrap()[0] {
+                    WireVal::Dbl(v, _) => {
+                        seen.insert(o.id, v[0]);
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+        }
+        for id in 1..=6u64 {
+            assert_eq!(seen[&id], (id * 2) as f64);
+        }
+    }
+
+    #[test]
+    fn cancel_queued_drops_pending() {
+        let mut b = MulticoreBackend::new(1);
+        // First task blocks the single worker briefly.
+        let mut slow = payload(1, "Sys.sleep(0.2)");
+        slow.time_scale = 1.0;
+        b.submit(slow).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        b.submit(payload(2, "2")).unwrap();
+        b.submit(payload(3, "3")).unwrap();
+        let cancelled = b.cancel_queued();
+        assert!(cancelled >= 1, "expected queued tasks to be cancellable, got {cancelled}");
+        // First task still completes.
+        match b.next_event().unwrap() {
+            BackendEvent::Done(o) => assert_eq!(o.id, 1),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! The `plan(multisession)` backend: a pool of persistent worker
+//! *subprocesses* speaking the JSON stdio protocol — the PSOCK-cluster
+//! analog, with true process isolation. Also backs the paper's
+//! `future.callr::callr` and `future.mirai::mirai_multisession` plans.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::worker::{ParentMsg, WorkerMsg, WORKER_SENTINEL};
+use super::{Backend, BackendEvent};
+use crate::future_core::TaskPayload;
+
+struct WorkerProc {
+    child: Child,
+    stdin: ChildStdin,
+    busy: bool,
+    _reader: JoinHandle<()>,
+}
+
+pub struct MultisessionBackend {
+    workers: Vec<WorkerProc>,
+    /// (worker_idx, msg) events from reader threads.
+    rx: Receiver<(usize, WorkerMsg)>,
+    _tx: Sender<(usize, WorkerMsg)>,
+    queue: VecDeque<TaskPayload>,
+    name: &'static str,
+}
+
+impl MultisessionBackend {
+    pub fn new(n: usize) -> Result<Self, String> {
+        Self::with_name(n, "multisession")
+    }
+
+    pub fn with_name(n: usize, name: &'static str) -> Result<Self, String> {
+        let n = n.max(1);
+        let bin = super::worker::worker_binary()?;
+        let (tx, rx) = channel::<(usize, WorkerMsg)>();
+        let mut workers = Vec::with_capacity(n);
+        for idx in 0..n {
+            let mut child = Command::new(&bin)
+                .arg(WORKER_SENTINEL)
+                .env("FUTURIZE_WORKER_IDX", idx.to_string())
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .map_err(|e| format!("failed to spawn worker {}: {e}", bin.display()))?;
+            let stdin = child.stdin.take().ok_or("no stdin")?;
+            let stdout = child.stdout.take().ok_or("no stdout")?;
+            let tx = tx.clone();
+            let reader = std::thread::spawn(move || {
+                let br = BufReader::new(stdout);
+                for line in br.lines() {
+                    let line = match line {
+                        Ok(l) => l,
+                        Err(_) => break,
+                    };
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    match crate::wire::from_str::<WorkerMsg>(&line) {
+                        Ok(msg) => {
+                            if tx.send((idx, msg)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => eprintln!("futurize: bad worker message: {e}"),
+                    }
+                }
+            });
+            workers.push(WorkerProc { child, stdin, busy: false, _reader: reader });
+        }
+        Ok(MultisessionBackend { workers, rx, _tx: tx, queue: VecDeque::new(), name })
+    }
+
+    fn dispatch(&mut self) -> Result<(), String> {
+        while let Some(idle) = self.workers.iter().position(|w| !w.busy) {
+            let Some(task) = self.queue.pop_front() else { break };
+            let w = &mut self.workers[idle];
+            let msg = crate::wire::to_string(&ParentMsg::Task(task))
+                .map_err(|e| format!("serialize task: {e}"))?;
+            writeln!(w.stdin, "{msg}").map_err(|e| format!("worker write: {e}"))?;
+            w.stdin.flush().map_err(|e| format!("worker flush: {e}"))?;
+            w.busy = true;
+        }
+        Ok(())
+    }
+
+    fn handle(&mut self, idx: usize, msg: WorkerMsg) -> Result<BackendEvent, String> {
+        match msg {
+            WorkerMsg::Progress { task_id, cond } => {
+                Ok(BackendEvent::Progress { task_id, cond })
+            }
+            WorkerMsg::Done(outcome) => {
+                self.workers[idx].busy = false;
+                self.dispatch()?;
+                Ok(BackendEvent::Done(outcome))
+            }
+        }
+    }
+}
+
+impl Backend for MultisessionBackend {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn submit(&mut self, task: TaskPayload) -> Result<(), String> {
+        self.queue.push_back(task);
+        self.dispatch()
+    }
+
+    fn next_event(&mut self) -> Result<BackendEvent, String> {
+        let (idx, msg) =
+            self.rx.recv().map_err(|e| format!("multisession backend: {e}"))?;
+        self.handle(idx, msg)
+    }
+
+    fn try_next_event(&mut self) -> Result<Option<BackendEvent>, String> {
+        match self.rx.try_recv() {
+            Ok((idx, msg)) => Ok(Some(self.handle(idx, msg)?)),
+            Err(std::sync::mpsc::TryRecvError::Empty) => Ok(None),
+            Err(e) => Err(format!("multisession backend: {e}")),
+        }
+    }
+
+    fn cancel_queued(&mut self) -> usize {
+        let n = self.queue.len();
+        self.queue.clear();
+        n
+    }
+}
+
+impl Drop for MultisessionBackend {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            let _ = writeln!(w.stdin, "{}", crate::wire::to_string(&ParentMsg::Shutdown).unwrap());
+            let _ = w.stdin.flush();
+        }
+        for w in &mut self.workers {
+            let _ = w.child.wait();
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! The `plan(sequential)` backend: tasks run inline at submit time, in a
+//! fresh interpreter (same isolation semantics as the parallel backends,
+//! so code validated here behaves identically under `multisession` —
+//! the property future.tests checks).
+
+use std::collections::VecDeque;
+
+use super::{Backend, BackendEvent};
+use crate::future_core::TaskPayload;
+
+pub struct SequentialBackend {
+    events: VecDeque<BackendEvent>,
+}
+
+impl SequentialBackend {
+    pub fn new() -> Self {
+        SequentialBackend { events: VecDeque::new() }
+    }
+}
+
+impl Default for SequentialBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for SequentialBackend {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn workers(&self) -> usize {
+        1
+    }
+
+    fn submit(&mut self, task: TaskPayload) -> Result<(), String> {
+        // Run inline; progress conditions become queued Progress events so
+        // ordering matches the parallel backends (progress before done).
+        let mut progress: Vec<BackendEvent> = Vec::new();
+        let outcome = super::task_runner::run_task(&task, 0, Some(&mut |task_id, cond| {
+            progress.push(BackendEvent::Progress { task_id, cond });
+        }));
+        self.events.extend(progress);
+        self.events.push_back(BackendEvent::Done(outcome));
+        Ok(())
+    }
+
+    fn next_event(&mut self) -> Result<BackendEvent, String> {
+        self.events.pop_front().ok_or_else(|| "sequential backend: no pending events".into())
+    }
+
+    fn try_next_event(&mut self) -> Result<Option<BackendEvent>, String> {
+        Ok(self.events.pop_front())
+    }
+
+    fn cancel_queued(&mut self) -> usize {
+        0 // nothing is ever queued
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::future_core::TaskKind;
+    use crate::rlite::parse_expr;
+
+    #[test]
+    fn runs_inline_and_queues_done() {
+        let mut b = SequentialBackend::new();
+        b.submit(TaskPayload {
+            id: 7,
+            kind: TaskKind::Expr { expr: parse_expr("1 + 1").unwrap(), globals: vec![] },
+            time_scale: 0.0,
+            capture_stdout: true,
+        })
+        .unwrap();
+        match b.next_event().unwrap() {
+            BackendEvent::Done(o) => assert_eq!(o.id, 7),
+            other => panic!("{other:?}"),
+        }
+        assert!(b.try_next_event().unwrap().is_none());
+    }
+}

@@ -1,0 +1,261 @@
+//! Shared task execution: every backend ultimately calls [`run_task`].
+//!
+//! A task runs in a *fresh* interpreter seeded only with its exported
+//! globals — the same isolation a PSOCK worker gives R. Stdout and
+//! conditions are captured for as-is relay in the parent (paper §4.9);
+//! progress-class conditions are additionally streamed through
+//! `progress_hook` the moment they are signaled (paper §4.10).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::future_core::{TaskKind, TaskOutcome, TaskPayload};
+use crate::rlite::conditions::{CaptureLog, RCondition};
+use crate::rlite::env::{define, Env};
+use crate::rlite::eval::{HandlerFrame, Interp, InterpConfig, Signal};
+use crate::rlite::serialize::{from_wire, to_wire, WireVal};
+use crate::rlite::value::RVal;
+use crate::rng::RngStream;
+
+/// Condition classes streamed near-live instead of relayed at resolve
+/// time. Mirrors progressr's `progression` condition class.
+pub const LIVE_CLASSES: &[&str] = &["progression", "immediateCondition"];
+
+/// Execute one payload, invoking `progress_hook` for every live-class
+/// condition as it is signaled.
+pub fn run_task(
+    payload: &TaskPayload,
+    worker_idx: usize,
+    mut progress_hook: Option<&mut dyn FnMut(u64, RCondition)>,
+) -> TaskOutcome {
+    let started = crate::future_core::driver::now_unix();
+    let mut interp = Interp::with_config(InterpConfig {
+        time_scale: payload.time_scale,
+        ..Default::default()
+    });
+    // Stream live-class conditions through the hook; mark them so they are
+    // not double-relayed from the final capture log.
+    let streamed: Rc<RefCell<Vec<RCondition>>> = Rc::new(RefCell::new(Vec::new()));
+    if progress_hook.is_some() {
+        for class in LIVE_CLASSES {
+            let streamed = streamed.clone();
+            interp.handlers.push(HandlerFrame::Native {
+                class: class.to_string(),
+                hook: Rc::new(RefCell::new(move |c: &RCondition| {
+                    streamed.borrow_mut().push(c.clone());
+                })),
+            });
+        }
+    }
+
+    let genv = interp.global.clone();
+    let (result, mut log) = execute_kind(&mut interp, &payload.kind, &genv);
+
+    // Drain streamed conditions through the hook and strip them from the
+    // log (they have already reached the parent).
+    let streamed = streamed.borrow();
+    if let Some(hook) = progress_hook.as_deref_mut() {
+        for c in streamed.iter() {
+            hook(payload.id, c.clone());
+        }
+    }
+    if !streamed.is_empty() {
+        log.conditions.retain(|c| !LIVE_CLASSES.iter().any(|lc| c.inherits(lc)));
+    }
+
+    TaskOutcome {
+        id: payload.id,
+        values: result,
+        log,
+        worker: worker_idx,
+        started_unix: started,
+        finished_unix: crate::future_core::driver::now_unix(),
+    }
+}
+
+fn execute_kind(
+    interp: &mut Interp,
+    kind: &TaskKind,
+    genv: &crate::rlite::env::EnvRef,
+) -> (Result<Vec<WireVal>, RCondition>, CaptureLog) {
+    match kind {
+        TaskKind::Expr { expr, globals } => {
+            install_globals(genv, globals);
+            let (r, log) = interp.eval_captured(expr, genv);
+            (wrap_single(r), log)
+        }
+        TaskKind::MapChunk { f, items, extra, seeds, globals } => {
+            install_globals(genv, globals);
+            let func = from_wire(f, genv);
+            let extra_vals: Vec<(Option<String>, RVal)> =
+                extra.iter().map(|(n, w)| (n.clone(), from_wire(w, genv))).collect();
+            let mut out = Vec::with_capacity(items.len());
+            let mut log = CaptureLog::default();
+            for (k, item_w) in items.iter().enumerate() {
+                if let Some(seeds) = seeds {
+                    interp.rng = RngStream::new(seeds[k]);
+                }
+                let item = from_wire(item_w, genv);
+                let mut call_args = vec![(None, item)];
+                call_args.extend(extra_vals.clone());
+                let (r, elem_log) = capture_call(interp, &func, call_args, genv);
+                log.merge(elem_log);
+                match r {
+                    Ok(v) => match to_wire(&v) {
+                        Ok(w) => out.push(w),
+                        Err(e) => return (Err(RCondition::error_cond(e)), log),
+                    },
+                    Err(cond) => return (Err(cond), log),
+                }
+            }
+            (Ok(out), log)
+        }
+        TaskKind::ForeachChunk { bindings, body, seeds, globals } => {
+            install_globals(genv, globals);
+            let mut out = Vec::with_capacity(bindings.len());
+            let mut log = CaptureLog::default();
+            for (k, bs) in bindings.iter().enumerate() {
+                if let Some(seeds) = seeds {
+                    interp.rng = RngStream::new(seeds[k]);
+                }
+                let iter_env = Env::child_of(genv);
+                for (name, w) in bs {
+                    define(&iter_env, name, from_wire(w, genv));
+                }
+                let (r, elem_log) = interp.eval_captured(body, &iter_env);
+                log.merge(elem_log);
+                match r {
+                    Ok(v) => match to_wire(&v) {
+                        Ok(w) => out.push(w),
+                        Err(e) => return (Err(RCondition::error_cond(e)), log),
+                    },
+                    Err(sig) => return (Err(signal_to_cond(sig)), log),
+                }
+            }
+            (Ok(out), log)
+        }
+    }
+}
+
+fn capture_call(
+    interp: &mut Interp,
+    func: &RVal,
+    args: Vec<(Option<String>, RVal)>,
+    genv: &crate::rlite::env::EnvRef,
+) -> (Result<RVal, RCondition>, CaptureLog) {
+    // Wrap the call in eval_captured semantics manually: we capture via a
+    // synthetic expression would lose the argument values, so replicate
+    // the capture plumbing around call_function.
+    let sink: Rc<RefCell<Vec<RCondition>>> = Rc::new(RefCell::new(Vec::new()));
+    let buf: Rc<RefCell<String>> = Rc::new(RefCell::new(String::new()));
+    interp
+        .handlers
+        .push(HandlerFrame::Collect { classes: vec!["condition".into()], sink: sink.clone() });
+    interp.out.push(crate::rlite::eval::OutSink::Capture(buf.clone()));
+    let rng_before = interp.rng_used;
+    interp.rng_used = false;
+    let r = interp.call_function(func, args, genv);
+    let rng_used = interp.rng_used;
+    interp.rng_used = rng_before || rng_used;
+    interp.out.pop();
+    interp.handlers.pop();
+    let log =
+        CaptureLog { stdout: buf.borrow().clone(), conditions: sink.borrow().clone(), rng_used };
+    (r.map_err(signal_to_cond), log)
+}
+
+fn wrap_single(
+    r: Result<RVal, Signal>,
+) -> Result<Vec<WireVal>, RCondition> {
+    match r {
+        Ok(v) => to_wire(&v).map(|w| vec![w]).map_err(RCondition::error_cond),
+        Err(sig) => Err(signal_to_cond(sig)),
+    }
+}
+
+fn signal_to_cond(sig: Signal) -> RCondition {
+    match sig {
+        Signal::Error(c) => c,
+        Signal::Unwind { cond, .. } => cond,
+        other => RCondition::error_cond(format!("non-error control signal escaped task: {other:?}")),
+    }
+}
+
+fn install_globals(genv: &crate::rlite::env::EnvRef, globals: &[(String, WireVal)]) {
+    for (name, w) in globals {
+        define(genv, name, from_wire(w, genv));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::future_core::{TaskKind, TaskPayload};
+    use crate::rlite::parse_expr;
+
+    fn expr_task(src: &str, globals: Vec<(String, WireVal)>) -> TaskPayload {
+        TaskPayload {
+            id: 1,
+            kind: TaskKind::Expr { expr: parse_expr(src).unwrap(), globals },
+            time_scale: 0.0,
+            capture_stdout: true,
+        }
+    }
+
+    #[test]
+    fn expr_task_returns_value_and_log() {
+        let t = expr_task("{ cat(\"out\")\nmessage(\"msg\")\n6 * 7 }", vec![]);
+        let o = run_task(&t, 0, None);
+        let vals = o.values.unwrap();
+        assert_eq!(vals.len(), 1);
+        assert_eq!(o.log.stdout, "out");
+        assert_eq!(o.log.conditions.len(), 1);
+    }
+
+    #[test]
+    fn expr_task_error_keeps_condition() {
+        let t = expr_task("stop(\"task failed\")", vec![]);
+        let o = run_task(&t, 0, None);
+        let err = o.values.unwrap_err();
+        assert_eq!(err.message, "task failed");
+        assert!(err.inherits("error"));
+    }
+
+    #[test]
+    fn globals_are_installed() {
+        let g = vec![("a".to_string(), WireVal::Dbl(vec![5.0], None))];
+        let t = expr_task("a * 2", g);
+        let o = run_task(&t, 0, None);
+        match &o.values.unwrap()[0] {
+            WireVal::Dbl(v, _) => assert_eq!(v[0], 10.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn live_conditions_stream_through_hook() {
+        let t = expr_task(
+            "signalCondition(simpleCondition(\"tick\", class = \"progression\"))",
+            vec![],
+        );
+        let mut seen = Vec::new();
+        let o = run_task(&t, 0, Some(&mut |_, c| seen.push(c)));
+        assert_eq!(seen.len(), 1);
+        assert_eq!(seen[0].message, "tick");
+        // Streamed conditions do not reappear in the final log.
+        assert!(o.log.conditions.is_empty());
+    }
+
+    #[test]
+    fn tasks_are_isolated() {
+        // A task cannot see variables from a previous task's interpreter.
+        let t1 = expr_task("leak <- 99", vec![]);
+        run_task(&t1, 0, None);
+        let t2 = expr_task("exists(\"leak\")", vec![]);
+        let o = run_task(&t2, 0, None);
+        match &o.values.unwrap()[0] {
+            WireVal::Lgl(v, _) => assert!(!v[0]),
+            other => panic!("{other:?}"),
+        }
+    }
+}

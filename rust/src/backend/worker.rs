@@ -1,0 +1,129 @@
+//! The multisession worker protocol (PSOCK analog).
+//!
+//! A worker is this same binary re-executed with the sentinel first
+//! argument [`WORKER_SENTINEL`]. Parent → worker messages are
+//! newline-delimited JSON [`ParentMsg`] on stdin; worker → parent
+//! messages are [`WorkerMsg`] on stdout. Task stdout is captured by the
+//! task runner, so the protocol channel stays clean.
+
+use std::io::{BufRead, Write};
+
+use serde_derive::{Deserialize, Serialize};
+
+use crate::future_core::{TaskOutcome, TaskPayload};
+use crate::rlite::conditions::RCondition;
+
+/// argv[1] sentinel that switches a process into worker mode.
+pub const WORKER_SENTINEL: &str = "__futurize_worker__";
+
+/// Environment variable overriding which binary to spawn as a worker
+/// (used by integration tests and benches, where `current_exe()` is the
+/// test harness rather than the CLI).
+pub const WORKER_BIN_ENV: &str = "FUTURIZE_WORKER_BIN";
+
+#[derive(Debug, Serialize, Deserialize)]
+pub enum ParentMsg {
+    Task(TaskPayload),
+    Shutdown,
+}
+
+#[derive(Debug, Serialize, Deserialize)]
+pub enum WorkerMsg {
+    Progress { task_id: u64, cond: RCondition },
+    Done(TaskOutcome),
+}
+
+/// Call this first in any binary that may be used as a worker host
+/// (the CLI and every example do). If the process was spawned as a
+/// worker it never returns.
+pub fn maybe_worker() {
+    let mut args = std::env::args();
+    let _exe = args.next();
+    if args.next().as_deref() == Some(WORKER_SENTINEL) {
+        worker_main();
+        std::process::exit(0);
+    }
+}
+
+/// The worker main loop.
+pub fn worker_main() {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    for line in stdin.lock().lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let msg: ParentMsg = match crate::wire::from_str(&line) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("futurize worker: bad message: {e}");
+                continue;
+            }
+        };
+        match msg {
+            ParentMsg::Shutdown => break,
+            ParentMsg::Task(task) => {
+                let worker_idx = std::env::var("FUTURIZE_WORKER_IDX")
+                    .ok()
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(0);
+                // Progress messages must flush immediately for near-live
+                // relay across the process boundary.
+                let outcome = {
+                    let out_cell = std::cell::RefCell::new(&mut out);
+                    super::task_runner::run_task(
+                        &task,
+                        worker_idx,
+                        Some(&mut |task_id, cond| {
+                            let mut o = out_cell.borrow_mut();
+                            let msg = WorkerMsg::Progress { task_id, cond };
+                            let _ = writeln!(o, "{}", crate::wire::to_string(&msg).unwrap());
+                            let _ = o.flush();
+                        }),
+                    )
+                };
+                let msg = WorkerMsg::Done(outcome);
+                if writeln!(out, "{}", crate::wire::to_string(&msg).unwrap()).is_err() {
+                    break;
+                }
+                let _ = out.flush();
+            }
+        }
+    }
+}
+
+/// Resolve the worker binary path.
+pub fn worker_binary() -> Result<std::path::PathBuf, String> {
+    if let Ok(p) = std::env::var(WORKER_BIN_ENV) {
+        return Ok(p.into());
+    }
+    std::env::current_exe().map_err(|e| format!("cannot locate worker binary: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::future_core::TaskKind;
+    use crate::rlite::parse_expr;
+
+    #[test]
+    fn protocol_messages_roundtrip() {
+        let task = TaskPayload {
+            id: 3,
+            kind: TaskKind::Expr { expr: parse_expr("1 + 2").unwrap(), globals: vec![] },
+            time_scale: 1.0,
+            capture_stdout: true,
+        };
+        let s = crate::wire::to_string(&ParentMsg::Task(task)).unwrap();
+        let back: ParentMsg = crate::wire::from_str(&s).unwrap();
+        match back {
+            ParentMsg::Task(t) => assert_eq!(t.id, 3),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Tiny benchmark harness (criterion is not available offline).
+//!
+//! Provides warmup + repeated timing with mean/min/max/stddev reporting
+//! in a stable, grep-friendly format that EXPERIMENTS.md quotes:
+//!
+//! ```text
+//! bench <group>/<name>  mean 12.34ms  min 11.90ms  max 13.00ms  sd 0.35ms  (n=10)
+//! ```
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub sd_s: f64,
+    pub n: usize,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        let n = samples.len().max(1);
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / (n as f64 - 1.0)
+        } else {
+            0.0
+        };
+        Stats {
+            mean_s: mean,
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_s: samples.iter().cloned().fold(0.0, f64::max),
+            sd_s: var.sqrt(),
+            n,
+        }
+    }
+}
+
+fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Run `f` `n` times after `warmup` runs; print and return stats.
+pub fn bench<F: FnMut()>(group: &str, name: &str, warmup: usize, n: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let st = Stats::from_samples(&samples);
+    println!(
+        "bench {group}/{name}  mean {}  min {}  max {}  sd {}  (n={})",
+        fmt_secs(st.mean_s),
+        fmt_secs(st.min_s),
+        fmt_secs(st.max_s),
+        fmt_secs(st.sd_s),
+        st.n
+    );
+    st
+}
+
+/// Print a table header / row (for the paper-style result tables).
+pub fn table_header(title: &str, cols: &[&str]) {
+    println!("\n== {title} ==");
+    println!("{}", cols.join("\t"));
+}
+
+pub fn table_row(cells: &[String]) {
+    println!("{}", cells.join("\t"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let st = Stats::from_samples(&[1.0, 2.0, 3.0]);
+        assert_eq!(st.mean_s, 2.0);
+        assert_eq!(st.min_s, 1.0);
+        assert_eq!(st.max_s, 3.0);
+        assert_eq!(st.n, 3);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut hits = 0;
+        let st = bench("t", "noop", 1, 3, || hits += 1);
+        assert_eq!(hits, 4);
+        assert_eq!(st.n, 3);
+    }
+}

@@ -1,0 +1,165 @@
+//! The session coordinator: the embedding-facing API that examples,
+//! tests, benches and the CLI use. Wraps an [`Interp`] with convenience
+//! evaluation methods, timing, and access to the execution trace.
+
+use crate::future_core::TraceEvent;
+use crate::rlite::eval::{Interp, InterpConfig, Signal};
+use crate::rlite::value::RVal;
+
+/// Session construction options.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// `Sys.sleep()` scale factor (benches use e.g. 0.01).
+    pub time_scale: f64,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { time_scale: 1.0 }
+    }
+}
+
+/// An interactive futurize session.
+pub struct Session {
+    pub interp: Interp,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Session {
+    pub fn new() -> Self {
+        Session { interp: Interp::new() }
+    }
+
+    pub fn with_config(cfg: SessionConfig) -> Self {
+        Session {
+            interp: Interp::with_config(InterpConfig {
+                time_scale: cfg.time_scale,
+                ..Default::default()
+            }),
+        }
+    }
+
+    /// Evaluate a program; the last expression's value is returned.
+    pub fn eval_str(&mut self, src: &str) -> Result<RVal, String> {
+        self.interp.eval_program(src).map_err(render_signal)
+    }
+
+    /// Evaluate, capturing stdout + relayed conditions as text.
+    pub fn eval_captured(&mut self, src: &str) -> (Result<RVal, String>, String) {
+        let exprs = match crate::rlite::parse_program(src) {
+            Ok(e) => e,
+            Err(e) => return (Err(e), String::new()),
+        };
+        let genv = self.interp.global.clone();
+        let (r, out) = self.interp.capture_stdout(move |i| {
+            let mut last = RVal::Null;
+            for e in &exprs {
+                match i.eval(e, &genv) {
+                    Ok(v) => last = v,
+                    Err(sig) => return Err(sig),
+                }
+            }
+            Ok(last)
+        });
+        (r.map_err(render_signal), out)
+    }
+
+    /// Evaluate and time a program; returns (value, seconds).
+    pub fn eval_timed(&mut self, src: &str) -> Result<(RVal, f64), String> {
+        let t0 = std::time::Instant::now();
+        let v = self.eval_str(src)?;
+        Ok((v, t0.elapsed().as_secs_f64()))
+    }
+
+    /// The task→worker trace of the most recent futurized map call
+    /// (regenerates the paper's Figure 1).
+    pub fn last_trace(&self) -> &[TraceEvent] {
+        &self.interp.session.last_trace
+    }
+
+    /// Render the last trace as an ASCII timeline (one row per worker).
+    pub fn render_trace(&self) -> String {
+        let trace = self.last_trace();
+        if trace.is_empty() {
+            return "(no trace)".into();
+        }
+        let t_end = trace.iter().map(|e| e.end).fold(0.0f64, f64::max).max(1e-9);
+        let width = 60usize;
+        let n_workers = trace.iter().map(|e| e.worker).max().unwrap_or(0) + 1;
+        let mut rows = vec![vec![b'.'; width]; n_workers];
+        for (k, ev) in trace.iter().enumerate() {
+            let s = ((ev.start / t_end) * (width as f64 - 1.0)) as usize;
+            let e = ((ev.end / t_end) * (width as f64 - 1.0)) as usize;
+            let label = b'a' + (k % 26) as u8;
+            for c in rows[ev.worker].iter_mut().take(e.min(width - 1) + 1).skip(s) {
+                *c = label;
+            }
+        }
+        let mut out = String::new();
+        for (w, row) in rows.iter().enumerate() {
+            out.push_str(&format!("worker {w}: "));
+            out.push_str(std::str::from_utf8(row).unwrap());
+            out.push('\n');
+        }
+        out.push_str(&format!("total: {:.3}s\n", t_end));
+        out
+    }
+}
+
+fn render_signal(sig: Signal) -> String {
+    match sig {
+        Signal::Error(c) => c.render(),
+        other => format!("unexpected control signal: {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_quickstart() {
+        let mut s = Session::new();
+        s.eval_str("plan(multicore, workers = 2)").unwrap();
+        let v = s.eval_str("unlist(lapply(1:4, function(x) x^2) |> futurize())").unwrap();
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![1.0, 4.0, 9.0, 16.0]);
+    }
+
+    #[test]
+    fn trace_is_recorded() {
+        let mut s = Session::with_config(SessionConfig { time_scale: 0.001 });
+        s.eval_str("plan(multicore, workers = 3)").unwrap();
+        s.eval_str(
+            "slow_fcn <- function(x) { Sys.sleep(1)\nx }\nys <- lapply(1:8, slow_fcn) |> futurize(scheduling = Inf)",
+        )
+        .unwrap();
+        let trace = s.last_trace();
+        assert_eq!(trace.len(), 8);
+        let workers: std::collections::HashSet<usize> =
+            trace.iter().map(|e| e.worker).collect();
+        assert!(workers.len() >= 2, "tasks should spread over workers: {workers:?}");
+        let rendered = s.render_trace();
+        assert!(rendered.contains("worker 0"));
+    }
+
+    #[test]
+    fn eval_captured_collects_output() {
+        let mut s = Session::new();
+        let (r, out) = s.eval_captured("cat(\"hello \")\nmessage(\"world\")\n1");
+        assert!(r.is_ok());
+        assert!(out.contains("hello"));
+        assert!(out.contains("world"));
+    }
+
+    #[test]
+    fn error_renders_r_style() {
+        let mut s = Session::new();
+        let err = s.eval_str("lapply(1:2, function(x) stop(\"bad\")) |> futurize()").unwrap_err();
+        assert!(err.contains("bad"), "{err}");
+    }
+}

@@ -1,0 +1,268 @@
+//! boot (paper §4.6): bootstrap resampling. `boot()` supports the
+//! package's own parallel sub-API (`parallel = "snow"/"multicore"`,
+//! `ncpus`, `cl` — including the ncpus > 1 footgun the paper documents)
+//! and the transpiler-injected `.futurize_opts` path, which routes the
+//! replicate loop through the future driver with per-replicate RNG
+//! streams (`seed = TRUE` by default, since boot is resampling).
+
+use super::split_futurize_opts;
+use crate::future_core::driver::map_elements;
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::env::{define, Env, EnvRef};
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::{RList, RVal};
+use crate::transpile::{FuturizeOptions, SeedSetting};
+
+pub fn register(r: &mut Reg) {
+    r.normal("boot", "boot", boot_fn);
+    r.normal("boot", "censboot", censboot_fn);
+    r.normal("boot", "tsboot", tsboot_fn);
+    r.normal("boot", "boot.ci", boot_ci_fn);
+}
+
+struct BootArgs {
+    data: RVal,
+    statistic: RVal,
+    r: usize,
+    stype: String,
+    parallel_legacy: bool,
+    opts: Option<FuturizeOptions>,
+}
+
+fn parse_boot_args(i: &mut Interp, args: &Args, env: &EnvRef) -> Result<BootArgs, Signal> {
+    let (user, opts) = split_futurize_opts(args);
+    let b = user.bind(&["data", "statistic", "R", "stype", "sim", "parallel", "ncpus", "cl", "l"]);
+    let data = b.req(0, "data")?;
+    let statistic = super::super::apis::as_function(&b.req(1, "statistic")?, env)?;
+    let r = b.req(2, "R")?.as_usize().map_err(Signal::error)?;
+    let stype =
+        b.opt(3).map(|v| v.as_str()).transpose().map_err(Signal::error)?.unwrap_or_else(|| "i".into());
+    // The package's own sub-API (what futurize hides): parallel only
+    // happens when parallel != "no" AND ncpus > 1 — the footgun the
+    // paper's §4.6 footnote documents.
+    let parallel_mode = b
+        .opt(5)
+        .map(|v| v.as_str())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or_else(|| "no".into());
+    let ncpus =
+        b.opt(6).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(1);
+    let parallel_legacy = parallel_mode != "no" && ncpus > 1;
+    let _ = i;
+    Ok(BootArgs { data, statistic, r, stype, parallel_legacy, opts })
+}
+
+/// Build the per-replicate closure in rlite so it serializes to workers:
+/// captures `data`, `statistic`, `n`, `stype`.
+fn replicate_closure(i: &mut Interp, env: &EnvRef, ba: &BootArgs) -> Result<RVal, Signal> {
+    let n = match &ba.data {
+        RVal::List(l) if l.class.as_deref() == Some("data.frame") => {
+            l.vals.first().map(|c| c.len()).unwrap_or(0)
+        }
+        other => other.len(),
+    };
+    let src = if ba.stype == "w" {
+        // Frequency weights f/n, as boot's stype = "w". tabulate() is
+        // native (perf: the interpreted increment loop cost ~55us per
+        // replicate, see EXPERIMENTS.md §Perf).
+        "function(r) {\n  idx <- sample(n, size = n, replace = TRUE)\n  statistic(data, tabulate(idx, n) / n)\n}"
+    } else {
+        "function(r) {\n  idx <- sample(n, size = n, replace = TRUE)\n  statistic(data, idx)\n}"
+    };
+    let fenv = Env::child_of(env);
+    define(&fenv, "data", ba.data.clone());
+    define(&fenv, "statistic", ba.statistic.clone());
+    define(&fenv, "n", RVal::scalar_int(n as i64));
+    let expr = crate::rlite::parse_expr(src).map_err(Signal::error)?;
+    i.eval(&expr, &fenv)
+}
+
+/// Original-sample statistic value (t0).
+fn t0_value(i: &mut Interp, env: &EnvRef, ba: &BootArgs) -> EvalResult {
+    let n = match &ba.data {
+        RVal::List(l) if l.class.as_deref() == Some("data.frame") => {
+            l.vals.first().map(|c| c.len()).unwrap_or(0)
+        }
+        other => other.len(),
+    };
+    let second = if ba.stype == "w" {
+        RVal::dbl(vec![1.0 / n as f64; n])
+    } else {
+        RVal::int((1..=n as i64).collect())
+    };
+    i.call_function(&ba.statistic, vec![(None, ba.data.clone()), (None, second)], env)
+}
+
+fn run_boot(i: &mut Interp, env: &EnvRef, ba: BootArgs) -> EvalResult {
+    let t0 = t0_value(i, env, &ba)?;
+    let f = replicate_closure(i, env, &ba)?;
+    let items: Vec<RVal> = (1..=ba.r as i64).map(RVal::scalar_int).collect();
+    let t_vals: Vec<RVal> = if let Some(opts) = &ba.opts {
+        let mut o = opts.clone();
+        if o.seed.is_none() {
+            o.seed = Some(SeedSetting::True);
+        }
+        map_elements(i, env, items, &f, vec![], &o.to_map_options(true))?
+    } else if ba.parallel_legacy {
+        // The package's own parallel path also goes through the session
+        // plan — honest simulation of "snow" with whatever plan is set.
+        let o = FuturizeOptions { seed: Some(SeedSetting::True), ..Default::default() };
+        map_elements(i, env, items, &f, vec![], &o.to_map_options(true))?
+    } else {
+        super::super::apis::seq_map(i, env, &items, &f, &[])?
+    };
+    let t: Vec<f64> =
+        t_vals.iter().map(|v| v.as_f64()).collect::<Result<_, _>>().map_err(Signal::error)?;
+    let mut out = RList::named(
+        vec![t0, RVal::dbl(t), RVal::scalar_int(ba.r as i64)],
+        vec!["t0".into(), "t".into(), "R".into()],
+    );
+    out.class = Some("boot".into());
+    Ok(RVal::List(out))
+}
+
+fn boot_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let ba = parse_boot_args(i, &args, env)?;
+    run_boot(i, env, ba)
+}
+
+/// censboot: case resampling for censored data — same resampling core
+/// with stype fixed to "i".
+fn censboot_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let mut ba = parse_boot_args(i, &args, env)?;
+    ba.stype = "i".into();
+    run_boot(i, env, ba)
+}
+
+/// tsboot: block bootstrap for time series (fixed block length `l`).
+fn tsboot_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, opts) = split_futurize_opts(&args);
+    let b = user.bind(&["tseries", "statistic", "R", "l", "sim"]);
+    let ts = b.req(0, "tseries")?;
+    let statistic = super::super::apis::as_function(&b.req(1, "statistic")?, env)?;
+    let r = b.req(2, "R")?.as_usize().map_err(Signal::error)?;
+    let l = b.opt(3).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(5);
+    let n = ts.len();
+    if n == 0 || l == 0 {
+        return Err(Signal::error("tsboot: empty series or zero block length"));
+    }
+    // Per-replicate closure: stitch ceil(n/l) random blocks, truncate to n.
+    let src = "function(r) {\n  n_blocks <- ceiling(n / l)\n  starts <- sample(n - l + 1, size = n_blocks, replace = TRUE)\n  xs <- numeric(0)\n  for (s in starts) xs <- c(xs, series[s:(s + l - 1)])\n  statistic(xs[1:n])\n}";
+    let fenv = Env::child_of(env);
+    define(&fenv, "series", ts.clone());
+    define(&fenv, "statistic", statistic.clone());
+    define(&fenv, "n", RVal::scalar_int(n as i64));
+    define(&fenv, "l", RVal::scalar_int(l as i64));
+    let f = i.eval(&crate::rlite::parse_expr(src).map_err(Signal::error)?, &fenv)?;
+    let t0 = i.call_function(&statistic, vec![(None, ts.clone())], env)?;
+    let items: Vec<RVal> = (1..=r as i64).map(RVal::scalar_int).collect();
+    let t_vals: Vec<RVal> = if let Some(opts) = opts {
+        let mut o = opts;
+        if o.seed.is_none() {
+            o.seed = Some(SeedSetting::True);
+        }
+        map_elements(i, env, items, &f, vec![], &o.to_map_options(true))?
+    } else {
+        super::super::apis::seq_map(i, env, &items, &f, &[])?
+    };
+    let t: Vec<f64> =
+        t_vals.iter().map(|v| v.as_f64()).collect::<Result<_, _>>().map_err(Signal::error)?;
+    let mut out = RList::named(
+        vec![t0, RVal::dbl(t), RVal::scalar_int(r as i64)],
+        vec!["t0".into(), "t".into(), "R".into()],
+    );
+    out.class = Some("boot".into());
+    Ok(RVal::List(out))
+}
+
+/// boot.ci(b): basic percentile interval from the replicate distribution.
+fn boot_ci_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["boot.out", "conf"]);
+    let obj = b.req(0, "boot.out")?;
+    let conf =
+        b.opt(1).map(|v| v.as_f64()).transpose().map_err(Signal::error)?.unwrap_or(0.95);
+    let RVal::List(l) = &obj else {
+        return Err(Signal::error("boot.ci: not a boot object"));
+    };
+    let mut t = l.get("t").ok_or_else(|| Signal::error("no t"))?.as_dbl_vec().map_err(Signal::error)?;
+    t.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let alpha = (1.0 - conf) / 2.0;
+    let lo = t[((t.len() as f64 - 1.0) * alpha) as usize];
+    let hi = t[((t.len() as f64 - 1.0) * (1.0 - alpha)).ceil() as usize];
+    Ok(RVal::Dbl(crate::rlite::value::RVec::named(
+        vec![lo, hi],
+        vec!["lower".into(), "upper".into()],
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn boot_replicates_shape() {
+        let v = run(
+            "data(bigcity)\nratio <- function(d, w) sum(d$x * w) / sum(d$u * w)\n\
+             set.seed(1)\nb <- boot(bigcity, statistic = ratio, R = 50, stype = \"w\")\nlength(b$t)",
+        );
+        assert_eq!(v, RVal::scalar_int(50));
+    }
+
+    #[test]
+    fn boot_t_centred_near_t0() {
+        let v = run(
+            "data(bigcity)\nratio <- function(d, w) sum(d$x * w) / sum(d$u * w)\n\
+             set.seed(1)\nb <- boot(bigcity, statistic = ratio, R = 200, stype = \"w\")\n\
+             abs(mean(b$t) - b$t0) < 0.05",
+        );
+        assert_eq!(v, RVal::scalar_bool(true));
+    }
+
+    #[test]
+    fn futurized_boot_is_reproducible_across_worker_counts() {
+        let go = |workers: usize| -> RVal {
+            run(&format!(
+                "plan(multicore, workers = {workers})\nfutureSeed(99)\ndata(bigcity)\n\
+                 ratio <- function(d, w) sum(d$x * w) / sum(d$u * w)\n\
+                 b <- boot(bigcity, statistic = ratio, R = 40, stype = \"w\") |> futurize()\nb$t"
+            ))
+        };
+        assert_eq!(go(1), go(3));
+    }
+
+    #[test]
+    fn tsboot_blocks() {
+        let v = run(
+            "set.seed(2)\nts <- rnorm(60)\nb <- tsboot(ts, statistic = mean, R = 25, l = 10)\nlength(b$t)",
+        );
+        assert_eq!(v, RVal::scalar_int(25));
+    }
+
+    #[test]
+    fn boot_ci_brackets_t0() {
+        let v = run(
+            "data(bigcity)\nratio <- function(d, w) sum(d$x * w) / sum(d$u * w)\n\
+             set.seed(3)\nb <- boot(bigcity, statistic = ratio, R = 199, stype = \"w\")\n\
+             ci <- boot.ci(b)\nc(ci[\"lower\"] < b$t0, b$t0 < ci[\"upper\"])",
+        );
+        assert_eq!(v, RVal::lgl(vec![true, true]));
+    }
+
+    #[test]
+    fn legacy_parallel_footgun_ncpus_1_is_sequential() {
+        // boot's own sub-API: parallel = "snow" with default ncpus = 1
+        // does NOT parallelize (paper §4.6 footnote) — it still works,
+        // sequentially.
+        let v = run(
+            "data(bigcity)\nratio <- function(d, w) sum(d$x * w) / sum(d$u * w)\n\
+             set.seed(1)\nb <- boot(bigcity, statistic = ratio, R = 10, stype = \"w\", parallel = \"snow\")\nlength(b$t)",
+        );
+        assert_eq!(v, RVal::scalar_int(10));
+    }
+}

@@ -1,0 +1,191 @@
+//! Datasets used by the paper's §4.6 examples, synthesized
+//! deterministically (DESIGN.md substitution table): `bigcity` (boot),
+//! `iris` (caret), `cbpp` (lme4). `data(name)` defines the dataset in the
+//! calling environment, as in R.
+
+use crate::rlite::ast::Arg;
+use crate::rlite::builtins::Reg;
+use crate::rlite::env::{define, EnvRef};
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::{RList, RVal};
+use crate::rng::RngStream;
+
+pub fn register(r: &mut Reg) {
+    r.special("datasets", "data", data_fn);
+}
+
+fn data_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let name = match args.first().map(|a| &a.value) {
+        Some(crate::rlite::ast::Expr::Sym(s)) => s.clone(),
+        Some(crate::rlite::ast::Expr::Str(s)) => s.clone(),
+        _ => return Err(Signal::error("data: expected a dataset name")),
+    };
+    let v = load(&name).ok_or_else(|| {
+        Signal::error(format!("data set '{name}' not found"))
+    })?;
+    define(env, &name, v);
+    let _ = i;
+    Ok(RVal::scalar_str(name))
+}
+
+/// Load a dataset by name.
+pub fn load(name: &str) -> Option<RVal> {
+    match name {
+        "bigcity" => Some(bigcity()),
+        "iris" => Some(iris()),
+        "cbpp" => Some(cbpp()),
+        "crude" => Some(crude()),
+        _ => None,
+    }
+}
+
+fn df(cols: Vec<(&str, RVal)>) -> RVal {
+    let names: Vec<String> = cols.iter().map(|(n, _)| n.to_string()).collect();
+    let vals: Vec<RVal> = cols.into_iter().map(|(_, v)| v).collect();
+    let mut l = RList::named(vals, names);
+    l.class = Some("data.frame".into());
+    RVal::List(l)
+}
+
+/// `boot::bigcity` analog: 49 US cities, populations (thousands) in 1920
+/// (`u`) and 1930 (`x`). Synthesized with the same marginal behaviour:
+/// 1930 ≈ 1.2× 1920 with heavy right tail; the ratio statistic
+/// sum(x)/sum(u) lands near the published ≈1.24.
+pub fn bigcity() -> RVal {
+    let mut g = RngStream::from_seed(1920);
+    let n = 49;
+    let mut u = Vec::with_capacity(n);
+    let mut x = Vec::with_capacity(n);
+    for _ in 0..n {
+        // Log-normal-ish city sizes in [40, 900] thousand.
+        let base = (40.0 + 860.0 * g.next_f64().powi(3)).round();
+        let growth = 1.15 + 0.25 * g.next_f64();
+        u.push(base);
+        x.push((base * growth).round());
+    }
+    df(vec![("u", RVal::dbl(u)), ("x", RVal::dbl(x))])
+}
+
+/// `iris` analog: 150 observations, 3 species × 50, four measurements
+/// with species-dependent means (separable like the real data).
+pub fn iris() -> RVal {
+    let mut g = RngStream::from_seed(1935);
+    let species = ["setosa", "versicolor", "virginica"];
+    // (sl, sw, pl, pw) means per species, mirroring the real structure.
+    let means = [
+        [5.0, 3.4, 1.46, 0.24],
+        [5.9, 2.77, 4.26, 1.33],
+        [6.6, 2.97, 5.55, 2.03],
+    ];
+    let sds = [0.35, 0.33, 0.3, 0.2];
+    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); 4];
+    let mut sp: Vec<String> = Vec::new();
+    for (s, name) in species.iter().enumerate() {
+        for _ in 0..50 {
+            for j in 0..4 {
+                let v = means[s][j] + sds[j] * g.next_normal();
+                cols[j].push((v * 10.0).round() / 10.0);
+            }
+            sp.push(name.to_string());
+        }
+    }
+    let mut it = cols.into_iter();
+    df(vec![
+        ("Sepal.Length", RVal::dbl(it.next().unwrap())),
+        ("Sepal.Width", RVal::dbl(it.next().unwrap())),
+        ("Petal.Length", RVal::dbl(it.next().unwrap())),
+        ("Petal.Width", RVal::dbl(it.next().unwrap())),
+        ("Species", RVal::chr(sp)),
+    ])
+}
+
+/// `lme4::cbpp` analog: contagious bovine pleuropneumonia — 56 rows,
+/// 15 herds × 4 periods (one missing combination trimmed), incidence out
+/// of herd size with a declining period effect and herd-level variation.
+pub fn cbpp() -> RVal {
+    let mut g = RngStream::from_seed(1964);
+    let mut herd = Vec::new();
+    let mut period = Vec::new();
+    let mut incidence = Vec::new();
+    let mut size = Vec::new();
+    let period_logit = [-2.0, -3.0, -3.3, -3.6];
+    for h in 1..=15 {
+        let herd_effect = 0.6 * g.next_normal();
+        for (p, &pl) in period_logit.iter().enumerate() {
+            if h == 15 && p == 3 {
+                continue; // 56 rows, as in the real data + 1 trim
+            }
+            let sz = (8.0 + 25.0 * g.next_f64()).round();
+            let logit: f64 = pl + herd_effect;
+            let prob = 1.0 / (1.0 + (-logit).exp());
+            let inc = (0..sz as usize).filter(|_| g.next_f64() < prob).count();
+            herd.push(format!("H{h:02}"));
+            period.push((p + 1) as f64);
+            incidence.push(inc as f64);
+            size.push(sz);
+        }
+    }
+    df(vec![
+        ("herd", RVal::chr(herd)),
+        ("period", RVal::dbl(period)),
+        ("incidence", RVal::dbl(incidence)),
+        ("size", RVal::dbl(size)),
+    ])
+}
+
+/// `tm::crude` analog: a small corpus of oil-market headlines.
+pub fn crude() -> RVal {
+    let texts = [
+        "Crude oil prices rose sharply after the OPEC meeting in Vienna",
+        "Diamond Shamrock cut its contract price for crude oil by 1.50 dollars",
+        "OPEC ministers said they would defend the 18 dollar benchmark price",
+        "Texaco lowered posted prices for crude oil across all grades",
+        "Analysts expect crude supplies to tighten as refinery demand grows",
+        "The national oil company announced new exploration in the gulf",
+        "Futures for light sweet crude settled higher on the exchange",
+        "Heavy crude discounts widened as fuel oil demand weakened",
+        "Production quotas were discussed at the emergency OPEC session",
+        "Spot prices for brent crude slipped amid ample supply",
+    ];
+    RVal::chr(texts.iter().map(|s| s.to_string()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rlite::eval::Interp;
+
+    #[test]
+    fn bigcity_shape_and_ratio() {
+        let v = bigcity();
+        let RVal::List(l) = &v else { panic!() };
+        assert_eq!(l.vals[0].len(), 49);
+        let u: Vec<f64> = l.get("u").unwrap().as_dbl_vec().unwrap();
+        let x: Vec<f64> = l.get("x").unwrap().as_dbl_vec().unwrap();
+        let ratio = x.iter().sum::<f64>() / u.iter().sum::<f64>();
+        assert!((1.1..1.45).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn iris_has_150_rows_3_species() {
+        let v = iris();
+        let RVal::List(l) = &v else { panic!() };
+        assert_eq!(l.vals[0].len(), 150);
+        let sp = l.get("Species").unwrap().as_str_vec().unwrap();
+        assert_eq!(sp.iter().filter(|s| *s == "setosa").count(), 50);
+    }
+
+    #[test]
+    fn data_defines_in_env() {
+        let mut i = Interp::new();
+        let v = i.eval_program("data(bigcity)\nnrow(bigcity)").unwrap();
+        assert_eq!(v.as_f64().unwrap(), 49.0);
+    }
+
+    #[test]
+    fn datasets_are_deterministic() {
+        assert_eq!(bigcity(), bigcity());
+        assert_eq!(iris(), iris());
+        assert_eq!(cbpp(), cbpp());
+    }
+}

@@ -1,0 +1,145 @@
+//! Model formulas: `y ~ x + (1 | g)`, `Species ~ .`, `y ~ s(x)`.
+//!
+//! `~` is a special form that captures both sides *unevaluated* and
+//! stores their deparsed text in a `"formula"` object; domain packages
+//! interpret the text (response, fixed terms, random-intercept group,
+//! smooth terms) via [`parse_formula_parts`].
+
+use crate::rlite::ast::Arg;
+use crate::rlite::builtins::Reg;
+use crate::rlite::deparse::deparse;
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::{RList, RVal};
+
+pub fn register(r: &mut Reg) {
+    r.special("stats", "~", tilde_fn);
+}
+
+fn tilde_fn(_i: &mut Interp, args: &[Arg], _env: &EnvRef) -> EvalResult {
+    let (lhs, rhs) = match args.len() {
+        1 => (String::new(), deparse(&args[0].value)),
+        2 => (deparse(&args[0].value), deparse(&args[1].value)),
+        n => return Err(Signal::error(format!("~ expects 1 or 2 operands, got {n}"))),
+    };
+    let mut l = RList::named(
+        vec![RVal::scalar_str(lhs), RVal::scalar_str(rhs)],
+        vec!["lhs".into(), "rhs".into()],
+    );
+    l.class = Some("formula".into());
+    Ok(RVal::List(l))
+}
+
+/// A decomposed model formula.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FormulaParts {
+    /// Response text (may be `cbind(a, b)`).
+    pub response: String,
+    /// Plain fixed-effect terms (`x`, `period`); `.` expands to "all
+    /// other columns" at fit time.
+    pub fixed: Vec<String>,
+    /// Random-intercept grouping factors from `(1 | g)` terms.
+    pub random_intercepts: Vec<String>,
+    /// Smooth terms from `s(x)`.
+    pub smooths: Vec<String>,
+    /// Was the RHS just `.`?
+    pub dot: bool,
+}
+
+/// Interpret a `"formula"` RVal.
+pub fn parse_formula_parts(v: &RVal) -> Result<FormulaParts, String> {
+    let RVal::List(l) = v else {
+        return Err(format!("expected a formula, got {}", v.class()));
+    };
+    if l.class.as_deref() != Some("formula") {
+        return Err(format!("expected a formula, got {}", v.class()));
+    }
+    let lhs = l.get("lhs").and_then(|x| x.as_str().ok()).unwrap_or_default();
+    let rhs = l.get("rhs").and_then(|x| x.as_str().ok()).unwrap_or_default();
+    let mut parts = FormulaParts { response: lhs, ..Default::default() };
+    for term in split_terms(&rhs) {
+        let t = term.trim();
+        if t.is_empty() || t == "1" {
+            continue;
+        }
+        if t == "." {
+            parts.dot = true;
+        } else if let Some(inner) = t.strip_prefix("s(").and_then(|s| s.strip_suffix(')')) {
+            parts.smooths.push(inner.trim().to_string());
+        } else if t.starts_with('(') && t.contains('|') {
+            let inner = t.trim_start_matches('(').trim_end_matches(')');
+            let group = inner.split('|').nth(1).unwrap_or("").trim();
+            parts.random_intercepts.push(group.to_string());
+        } else {
+            parts.fixed.push(t.to_string());
+        }
+    }
+    Ok(parts)
+}
+
+/// Split an RHS on top-level `+` (not inside parentheses).
+fn split_terms(rhs: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for c in rhs.chars() {
+        match c {
+            '(' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ')' => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            '+' if depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rlite::eval::Interp;
+
+    fn formula(src: &str) -> FormulaParts {
+        let v = Interp::new().eval_program(src).unwrap();
+        parse_formula_parts(&v).unwrap()
+    }
+
+    #[test]
+    fn simple_formula() {
+        let p = formula("y ~ x");
+        assert_eq!(p.response, "y");
+        assert_eq!(p.fixed, vec!["x"]);
+    }
+
+    #[test]
+    fn dot_formula() {
+        let p = formula("Species ~ .");
+        assert_eq!(p.response, "Species");
+        assert!(p.dot);
+    }
+
+    #[test]
+    fn mixed_model_formula() {
+        let p = formula("cbind(incidence, size - incidence) ~ period + (1 | herd)");
+        assert_eq!(p.response, "cbind(incidence, size - incidence)");
+        assert_eq!(p.fixed, vec!["period"]);
+        assert_eq!(p.random_intercepts, vec!["herd"]);
+    }
+
+    #[test]
+    fn smooth_formula() {
+        let p = formula("y ~ s(x)");
+        assert_eq!(p.smooths, vec!["x"]);
+    }
+}

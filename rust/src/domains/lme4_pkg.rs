@@ -1,0 +1,474 @@
+//! lme4 (paper §4.6): mixed-effects models. We implement a single-
+//! grouping-factor linear mixed model fit by profiled GLS (DESIGN.md
+//! documents this substitution for the full lme4 machinery: it exercises
+//! the identical parallel surfaces — `allFit()` re-fitting under several
+//! optimizers, and `bootMer()` parametric bootstrap). The binomial GLMM
+//! of the cbpp example is fit on the empirical-logit scale.
+
+use super::formula::parse_formula_parts;
+use super::split_futurize_opts;
+use crate::future_core::driver::map_elements;
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::env::{define, Env, EnvRef};
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::{RList, RVal};
+use crate::transpile::SeedSetting;
+
+pub fn register(r: &mut Reg) {
+    r.normal("lme4", "lmer", |i, a, e| fit_model_fn(i, a, e, false));
+    r.normal("lme4", "glmer", |i, a, e| fit_model_fn(i, a, e, true));
+    r.normal("lme4", "allFit", all_fit_fn);
+    r.normal("lme4", "bootMer", boot_mer_fn);
+    r.normal("lme4", "fixef", fixef_fn);
+    r.normal("lme4", ".lmm_refit", lmm_refit_fn);
+}
+
+/// The optimizer roster allFit() tries (lme4's actual set).
+pub const OPTIMIZERS: &[&str] =
+    &["bobyqa", "Nelder_Mead", "nlminbwrap", "nmkbw", "optimx.L-BFGS-B", "nloptwrap.NLOPT_LN_NELDERMEAD", "nloptwrap.NLOPT_LN_BOBYQA"];
+
+/// Profiled-likelihood LMM fit: y = Xβ + b_g + ε, b ~ N(0, σ²θ).
+/// Golden-section search over the variance ratio θ; GLS per θ.
+/// Different "optimizers" vary the search discipline (tolerance /
+/// bracketing), converging to the same optimum within tolerance — the
+/// behaviour allFit() exists to check.
+pub fn fit_lmm(
+    y: &[f64],
+    x_cols: &[Vec<f64>],
+    groups: &[usize],
+    n_groups: usize,
+    optimizer: &str,
+) -> Result<LmmFit, String> {
+    let (tol, max_iter) = match optimizer {
+        "bobyqa" => (1e-8, 200),
+        "Nelder_Mead" => (1e-6, 120),
+        "nlminbwrap" => (1e-7, 160),
+        "nmkbw" => (1e-5, 80),
+        _ => (1e-7, 140),
+    };
+    // Design with intercept.
+    let n = y.len();
+    let p = x_cols.len() + 1;
+    let mut cols: Vec<Vec<f64>> = vec![vec![1.0; n]];
+    cols.extend(x_cols.iter().cloned());
+    let dev = |theta: f64| -> (f64, Vec<f64>) {
+        gls_profile(y, &cols, groups, n_groups, theta)
+    };
+    // Golden-section on log(theta) in [1e-6, 1e3].
+    let golden = 0.618_033_988_75f64;
+    let (mut lo, mut hi) = (-6.0f64, 3.0f64);
+    let mut iters = 0;
+    let mut m1 = hi - golden * (hi - lo);
+    let mut m2 = lo + golden * (hi - lo);
+    let mut f1 = dev(10f64.powf(m1)).0;
+    let mut f2 = dev(10f64.powf(m2)).0;
+    while (hi - lo) > tol && iters < max_iter {
+        if f1 < f2 {
+            hi = m2;
+            m2 = m1;
+            f2 = f1;
+            m1 = hi - golden * (hi - lo);
+            f1 = dev(10f64.powf(m1)).0;
+        } else {
+            lo = m1;
+            m1 = m2;
+            f1 = f2;
+            m2 = lo + golden * (hi - lo);
+            f2 = dev(10f64.powf(m2)).0;
+        }
+        iters += 1;
+    }
+    let theta = 10f64.powf((lo + hi) / 2.0);
+    let (deviance, beta) = dev(theta);
+    Ok(LmmFit { beta, theta, deviance, iters, p, optimizer: optimizer.to_string() })
+}
+
+#[derive(Clone, Debug)]
+pub struct LmmFit {
+    pub beta: Vec<f64>,
+    pub theta: f64,
+    pub deviance: f64,
+    pub iters: usize,
+    pub p: usize,
+    pub optimizer: String,
+}
+
+/// GLS deviance + fixed effects at a given variance ratio θ, using the
+/// group-wise Sherman–Morrison structure of V = I + θ Z Z'.
+fn gls_profile(
+    y: &[f64],
+    cols: &[Vec<f64>],
+    groups: &[usize],
+    n_groups: usize,
+    theta: f64,
+) -> (f64, Vec<f64>) {
+    let n = y.len();
+    let p = cols.len();
+    // Per-group sizes.
+    let mut gsize = vec![0usize; n_groups];
+    for &g in groups {
+        gsize[g] += 1;
+    }
+    // Weighted cross-products under V^{-1} = I - (θ/(1+θ n_g)) per group
+    // (Sherman–Morrison on the group blocks).
+    let mut xtx = vec![0.0; p * p];
+    let mut xty = vec![0.0; p];
+    let mut yty = 0.0;
+    // Plain parts.
+    for i in 0..n {
+        for a in 0..p {
+            for bcol in a..p {
+                xtx[a * p + bcol] += cols[a][i] * cols[bcol][i];
+            }
+            xty[a] += cols[a][i] * y[i];
+        }
+        yty += y[i] * y[i];
+    }
+    // Group-sum corrections.
+    let mut gx = vec![vec![0.0; p]; n_groups];
+    let mut gy = vec![0.0; n_groups];
+    for i in 0..n {
+        let g = groups[i];
+        for a in 0..p {
+            gx[g][a] += cols[a][i];
+        }
+        gy[g] += y[i];
+    }
+    for g in 0..n_groups {
+        let w = theta / (1.0 + theta * gsize[g] as f64);
+        for a in 0..p {
+            for bcol in a..p {
+                xtx[a * p + bcol] -= w * gx[g][a] * gx[g][bcol];
+            }
+            xty[a] -= w * gx[g][a] * gy[g];
+        }
+        yty -= w * gy[g] * gy[g];
+    }
+    for a in 0..p {
+        for bcol in 0..a {
+            xtx[a * p + bcol] = xtx[bcol * p + a];
+        }
+    }
+    let beta = crate::runtime::kernels::ridge_solve(&xtx, &xty, 1e-10).unwrap_or(vec![0.0; p]);
+    // Residual quadratic form and log|V|.
+    let mut quad = yty;
+    for a in 0..p {
+        quad -= beta[a] * xty[a];
+    }
+    let quad = quad.max(1e-12);
+    let mut logdet = 0.0;
+    for g in 0..n_groups {
+        logdet += (1.0 + theta * gsize[g] as f64).ln();
+    }
+    let sigma2 = quad / n as f64;
+    let deviance = n as f64 * sigma2.ln() + logdet;
+    (deviance, beta)
+}
+
+/// Pull (y, X columns, group codes) from a formula + data.frame. Binomial
+/// responses `cbind(a, b)` are mapped to the empirical logit.
+fn build_design(
+    i: &mut Interp,
+    env: &EnvRef,
+    formula: &RVal,
+    data: &RVal,
+) -> Result<(Vec<f64>, Vec<Vec<f64>>, Vec<usize>, usize, String), Signal> {
+    let parts = parse_formula_parts(formula).map_err(Signal::error)?;
+    let RVal::List(df) = data else {
+        return Err(Signal::error("lmer: data must be a data.frame"));
+    };
+    // Response: plain column or cbind(a, b) empirical logit.
+    let y: Vec<f64> = if parts.response.starts_with("cbind(") {
+        let expr = crate::rlite::parse_expr(&parts.response).map_err(Signal::error)?;
+        let fenv = Env::child_of(env);
+        if let (Some(names), true) = (&df.names, true) {
+            for (k, n) in names.iter().enumerate() {
+                define(&fenv, n, df.vals[k].clone());
+            }
+        }
+        let both = i.eval(&expr, &fenv)?.as_dbl_vec().map_err(Signal::error)?;
+        let n = both.len() / 2;
+        (0..n)
+            .map(|k| {
+                let a = both[k] + 0.5;
+                let b = both[n + k] + 0.5;
+                (a / b).ln()
+            })
+            .collect()
+    } else {
+        super::df_column(data, &parts.response).map_err(Signal::error)?
+    };
+    let mut x_cols = Vec::new();
+    for t in &parts.fixed {
+        x_cols.push(super::df_column(data, t).map_err(Signal::error)?);
+    }
+    let group_col = parts
+        .random_intercepts
+        .first()
+        .ok_or_else(|| Signal::error("lmer: needs a (1 | group) term"))?;
+    let raw = df
+        .get(group_col)
+        .ok_or_else(|| Signal::error(format!("no column '{group_col}'")))?
+        .as_str_vec()
+        .map_err(Signal::error)?;
+    let mut levels: Vec<String> = raw.clone();
+    levels.sort();
+    levels.dedup();
+    let groups: Vec<usize> =
+        raw.iter().map(|v| levels.iter().position(|l| l == v).unwrap()).collect();
+    Ok((y, x_cols, groups, levels.len(), group_col.clone()))
+}
+
+fn fit_to_rval(fit: &LmmFit) -> RVal {
+    let mut l = RList::named(
+        vec![
+            RVal::dbl(fit.beta.clone()),
+            RVal::scalar_dbl(fit.theta),
+            RVal::scalar_dbl(fit.deviance),
+            RVal::scalar_int(fit.iters as i64),
+            RVal::scalar_str(fit.optimizer.clone()),
+        ],
+        vec![
+            "beta".into(),
+            "theta".into(),
+            "deviance".into(),
+            "iters".into(),
+            "optimizer".into(),
+        ],
+    );
+    l.class = Some("merMod".into());
+    RVal::List(l)
+}
+
+/// lmer(formula, data) / glmer(formula, data, family): fit the model.
+/// The fit object additionally carries the design for refits.
+fn fit_model_fn(i: &mut Interp, args: Args, env: &EnvRef, _glm: bool) -> EvalResult {
+    let (user, _) = split_futurize_opts(&args);
+    let b = user.bind(&["formula", "data", "family"]);
+    let formula = b.req(0, "formula")?;
+    let data = b.req(1, "data")?;
+    let (y, x_cols, groups, n_groups, gname) = build_design(i, env, &formula, &data)?;
+    let fit = fit_lmm(&y, &x_cols, &groups, n_groups, "bobyqa").map_err(Signal::error)?;
+    let mut v = fit_to_rval(&fit);
+    if let RVal::List(l) = &mut v {
+        l.set("y", RVal::dbl(y));
+        l.set("x", RVal::list(x_cols.into_iter().map(RVal::dbl).collect()));
+        l.set("groups", RVal::dbl(groups.iter().map(|&g| g as f64).collect()));
+        l.set("n_groups", RVal::scalar_int(n_groups as i64));
+        l.set("group_name", RVal::scalar_str(gname));
+    }
+    Ok(v)
+}
+
+/// Internal refit builtin used by allFit/bootMer workers.
+fn lmm_refit_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["y", "x", "groups", "n_groups", "optimizer"]);
+    let y = b.req(0, "y")?.as_dbl_vec().map_err(Signal::error)?;
+    let x_cols: Vec<Vec<f64>> = match b.req(1, "x")? {
+        RVal::List(l) => l
+            .vals
+            .iter()
+            .map(|c| c.as_dbl_vec())
+            .collect::<Result<_, _>>()
+            .map_err(Signal::error)?,
+        other => vec![other.as_dbl_vec().map_err(Signal::error)?],
+    };
+    let groups: Vec<usize> = b
+        .req(2, "groups")?
+        .as_dbl_vec()
+        .map_err(Signal::error)?
+        .into_iter()
+        .map(|g| g as usize)
+        .collect();
+    let n_groups = b.req(3, "n_groups")?.as_usize().map_err(Signal::error)?;
+    let optimizer = b.req(4, "optimizer")?.as_str().map_err(Signal::error)?;
+    let fit = fit_lmm(&y, &x_cols, &groups, n_groups, &optimizer).map_err(Signal::error)?;
+    Ok(fit_to_rval(&fit))
+}
+
+/// allFit(model): refit under every optimizer — the parallel surface.
+fn all_fit_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, fopts) = split_futurize_opts(&args);
+    let b = user.bind(&["model", "parallel", "ncpus", "cl"]);
+    let model = b.req(0, "model")?;
+    let RVal::List(m) = &model else {
+        return Err(Signal::error("allFit: not a merMod object"));
+    };
+    let src = "function(opt) .lmm_refit(y, x, groups, n_groups, opt)";
+    let fenv = Env::child_of(env);
+    for key in ["y", "x", "groups", "n_groups"] {
+        define(&fenv, key, m.get(key).cloned().unwrap_or(RVal::Null));
+    }
+    let f = i.eval(&crate::rlite::parse_expr(src).map_err(Signal::error)?, &fenv)?;
+    let items: Vec<RVal> =
+        OPTIMIZERS.iter().map(|o| RVal::scalar_str(o.to_string())).collect();
+    // allFit's own sub-API mirrors boot's (parallel/ncpus/cl, all three
+    // needed); futurize hides it.
+    let legacy = b.opt(1).map(|v| v.as_str().unwrap_or_default()).unwrap_or_default() != ""
+        && b.opt(2).map(|v| v.as_usize().unwrap_or(1)).unwrap_or(1) > 1;
+    let fits = if let Some(opts) = fopts {
+        map_elements(i, env, items, &f, vec![], &opts.to_map_options(false))?
+    } else if legacy {
+        map_elements(
+            i,
+            env,
+            items,
+            &f,
+            vec![],
+            &crate::transpile::FuturizeOptions::default().to_map_options(false),
+        )?
+    } else {
+        crate::apis::seq_map(i, env, &items, &f, &[])?
+    };
+    let mut out = RList::named(
+        fits,
+        OPTIMIZERS.iter().map(|o| o.to_string()).collect(),
+    );
+    out.class = Some("allFit".into());
+    Ok(RVal::List(out))
+}
+
+/// bootMer(model, FUN, nsim): parametric bootstrap — simulate from the
+/// fitted model, refit, apply FUN. Parallel over simulations with
+/// per-simulation RNG streams.
+fn boot_mer_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, fopts) = split_futurize_opts(&args);
+    let b = user.bind(&["x", "FUN", "nsim"]);
+    let model = b.req(0, "x")?;
+    let fun = crate::apis::as_function(&b.req(1, "FUN")?, env)?;
+    let nsim = b.opt(2).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(100);
+    let RVal::List(m) = &model else {
+        return Err(Signal::error("bootMer: not a merMod object"));
+    };
+    // Simulate y* = Xβ + b*_g + ε* on the worker, refit, FUN(fit).
+    let src = "function(s) {\n  n <- length(y)\n  bg <- rnorm(n_groups, sd = sqrt(theta) * sigma)\n  ystar <- yhat + bg[groups + 1] + rnorm(n, sd = sigma)\n  fit <- .lmm_refit(ystar, x, groups, n_groups, \"bobyqa\")\n  FUN(fit)\n}";
+    // Fitted values Xβ.
+    let y = m.get("y").unwrap().as_dbl_vec().map_err(Signal::error)?;
+    let beta = m.get("beta").unwrap().as_dbl_vec().map_err(Signal::error)?;
+    let x_cols: Vec<Vec<f64>> = match m.get("x") {
+        Some(RVal::List(l)) => l
+            .vals
+            .iter()
+            .map(|c| c.as_dbl_vec())
+            .collect::<Result<_, _>>()
+            .map_err(Signal::error)?,
+        _ => vec![],
+    };
+    let n = y.len();
+    let yhat: Vec<f64> = (0..n)
+        .map(|i2| {
+            beta[0]
+                + x_cols.iter().enumerate().map(|(j, c)| beta[j + 1] * c[i2]).sum::<f64>()
+        })
+        .collect();
+    let theta = m.get("theta").unwrap().as_f64().map_err(Signal::error)?;
+    // Residual sigma estimate.
+    let groups_f = m.get("groups").unwrap().as_dbl_vec().map_err(Signal::error)?;
+    let resid_var = {
+        let ss: f64 = y.iter().zip(&yhat).map(|(a, b)| (a - b).powi(2)).sum();
+        (ss / n as f64).max(1e-8)
+    };
+    let fenv = Env::child_of(env);
+    define(&fenv, "y", RVal::dbl(y));
+    define(&fenv, "yhat", RVal::dbl(yhat));
+    define(&fenv, "x", m.get("x").cloned().unwrap_or(RVal::Null));
+    define(&fenv, "groups", RVal::dbl(groups_f));
+    define(&fenv, "n_groups", m.get("n_groups").cloned().unwrap_or(RVal::Null));
+    define(&fenv, "theta", RVal::scalar_dbl(theta));
+    define(&fenv, "sigma", RVal::scalar_dbl(resid_var.sqrt()));
+    define(&fenv, "FUN", fun);
+    let f = i.eval(&crate::rlite::parse_expr(src).map_err(Signal::error)?, &fenv)?;
+    let items: Vec<RVal> = (1..=nsim as i64).map(RVal::scalar_int).collect();
+    let results = if let Some(opts) = fopts {
+        let mut o = opts;
+        if o.seed.is_none() {
+            o.seed = Some(SeedSetting::True);
+        }
+        map_elements(i, env, items, &f, vec![], &o.to_map_options(true))?
+    } else {
+        crate::apis::seq_map(i, env, &items, &f, &[])?
+    };
+    Ok(RVal::simplify(results, None))
+}
+
+fn fixef_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let model = args.bind(&["object"]).req(0, "object")?;
+    match &model {
+        RVal::List(l) => Ok(l.get("beta").cloned().unwrap_or(RVal::Null)),
+        other => Err(Signal::error(format!("fixef: not a model: {}", other.class()))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn lmm_recovers_fixed_effect() {
+        // y = 2 + 3x + group effect + noise.
+        let v = run(
+            "set.seed(11)\nn <- 120\ng <- rep(c(\"a\",\"b\",\"c\",\"d\"), each = 30)\n\
+             x <- rnorm(n)\ny <- 2 + 3 * x + rnorm(n, sd = 0.3)\n\
+             df <- data.frame(y = y, x = x, g = g)\n\
+             m <- lmer(y ~ x + (1 | g), data = df)\nfixef(m)",
+        );
+        let beta = v.as_dbl_vec().unwrap();
+        assert!((beta[0] - 2.0).abs() < 0.3, "intercept {}", beta[0]);
+        assert!((beta[1] - 3.0).abs() < 0.15, "slope {}", beta[1]);
+    }
+
+    #[test]
+    fn all_fit_optimizers_agree() {
+        let v = run(
+            "set.seed(12)\nn <- 80\ng <- rep(c(\"a\",\"b\"), each = 40)\nx <- rnorm(n)\n\
+             y <- 1 + 2 * x + rnorm(n, sd = 0.5)\ndf <- data.frame(y = y, x = x, g = g)\n\
+             m <- lmer(y ~ x + (1 | g), data = df)\n\
+             fits <- allFit(m)\n\
+             slopes <- sapply(fits, function(f) f$beta[2])\nmax(slopes) - min(slopes)",
+        );
+        assert!(v.as_f64().unwrap() < 1e-3, "optimizers disagree: {v}");
+    }
+
+    #[test]
+    fn glmer_cbpp_period_effect_negative() {
+        // The paper's cbpp model: incidence declines over periods.
+        let v = run(
+            "data(cbpp)\nm <- glmer(cbind(incidence, size - incidence) ~ period + (1 | herd), data = cbpp, family = \"binomial\")\nfixef(m)",
+        );
+        let beta = v.as_dbl_vec().unwrap();
+        assert!(beta[1] < 0.0, "period effect should be negative: {beta:?}");
+    }
+
+    #[test]
+    fn futurized_all_fit_matches() {
+        let seq = run(
+            "set.seed(13)\nn <- 60\ng <- rep(c(\"a\",\"b\",\"c\"), each = 20)\nx <- rnorm(n)\n\
+             y <- x + rnorm(n)\ndf <- data.frame(y = y, x = x, g = g)\n\
+             m <- lmer(y ~ x + (1 | g), data = df)\n\
+             fits <- allFit(m)\nsapply(fits, function(f) f$deviance)",
+        );
+        let par = run(
+            "plan(multicore, workers = 3)\nset.seed(13)\nn <- 60\ng <- rep(c(\"a\",\"b\",\"c\"), each = 20)\nx <- rnorm(n)\n\
+             y <- x + rnorm(n)\ndf <- data.frame(y = y, x = x, g = g)\n\
+             m <- lmer(y ~ x + (1 | g), data = df)\n\
+             fits <- allFit(m) |> futurize()\nsapply(fits, function(f) f$deviance)",
+        );
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn boot_mer_runs() {
+        let v = run(
+            "set.seed(14)\nn <- 40\ng <- rep(c(\"a\",\"b\"), each = 20)\nx <- rnorm(n)\n\
+             y <- x + rnorm(n)\ndf <- data.frame(y = y, x = x, g = g)\n\
+             m <- lmer(y ~ x + (1 | g), data = df)\n\
+             bs <- bootMer(m, function(f) f$beta[2], nsim = 10)\nlength(bs)",
+        );
+        assert_eq!(v, RVal::scalar_int(10));
+    }
+}

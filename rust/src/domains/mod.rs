@@ -1,0 +1,59 @@
+//! Domain-specific packages (paper Table 2): boot, caret, glmnet, lme4,
+//! mgcv, tm analogs, plus the datasets their examples use.
+//!
+//! Each function offers its package's *own* (awkward) parallel sub-API —
+//! the `parallel`/`ncpus`/`cl`-style knobs the paper's §4.6 critiques —
+//! and the `.futurize_opts` hook the transpiler injects, which routes the
+//! hot loop through the future driver instead.
+
+pub mod boot_pkg;
+pub mod caret_pkg;
+pub mod datasets;
+pub mod formula;
+pub mod glmnet_pkg;
+pub mod lme4_pkg;
+pub mod mgcv_pkg;
+pub mod tm_pkg;
+
+use crate::rlite::builtins::Reg;
+
+pub fn register_builtins(r: &mut Reg) {
+    formula::register(r);
+    datasets::register(r);
+    boot_pkg::register(r);
+    glmnet_pkg::register(r);
+    lme4_pkg::register(r);
+    caret_pkg::register(r);
+    mgcv_pkg::register(r);
+    tm_pkg::register(r);
+}
+
+use crate::rlite::builtins::Args;
+use crate::rlite::value::RVal;
+use crate::transpile::{options_from_value, FuturizeOptions};
+
+/// Split off the transpiler-injected `.futurize_opts` argument. Returns
+/// (user args, Some(opts) if futurized).
+pub(crate) fn split_futurize_opts(args: &Args) -> (Args, Option<FuturizeOptions>) {
+    let mut user = Vec::new();
+    let mut opts = None;
+    for (name, v) in &args.items {
+        if name.as_deref() == Some(".futurize_opts") {
+            opts = Some(options_from_value(v));
+        } else {
+            user.push((name.clone(), v.clone()));
+        }
+    }
+    (Args::new(user), opts)
+}
+
+/// Extract a data.frame column as f64s.
+pub(crate) fn df_column(df: &RVal, name: &str) -> Result<Vec<f64>, String> {
+    match df {
+        RVal::List(l) => l
+            .get(name)
+            .ok_or_else(|| format!("no column '{name}'"))?
+            .as_dbl_vec(),
+        other => Err(format!("expected a data.frame, got {}", other.class())),
+    }
+}

@@ -1,0 +1,251 @@
+//! tm (paper §4.7): text mining. A corpus is a character vector tagged
+//! with class "corpus"; `tm_map()` transforms each document (the
+//! parallel surface — tm's own engine knob `tm_parlapply_engine()` is
+//! what futurize hides), `TermDocumentMatrix()` counts term×document
+//! frequencies, `tm_index()` filters.
+
+use super::split_futurize_opts;
+use crate::future_core::driver::map_elements;
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::{RList, RVal, RVec};
+
+pub fn register(r: &mut Reg) {
+    r.normal("tm", "Corpus", corpus_fn);
+    r.normal("tm", "VCorpus", corpus_fn);
+    r.normal("tm", "VectorSource", |_i, a, _e| a.bind(&["x"]).req(0, "x"));
+    r.normal("tm", "tm_map", tm_map_fn);
+    r.normal("tm", "tm_index", tm_index_fn);
+    r.normal("tm", "TermDocumentMatrix", tdm_fn);
+    r.normal("tm", "content_transformer", |_i, a, _e| a.bind(&["FUN"]).req(0, "FUN"));
+    r.normal("tm", "removePunctuation", remove_punct_fn);
+    r.normal("tm", "stripWhitespace", strip_ws_fn);
+    r.normal("tm", "removeWords", remove_words_fn);
+    r.normal("tm", "stopwords", stopwords_fn);
+}
+
+fn corpus_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    let docs = x.as_str_vec().map_err(Signal::error)?;
+    let mut l = RList::named(
+        vec![RVal::chr(docs)],
+        vec!["content".into()],
+    );
+    l.class = Some("corpus".into());
+    Ok(RVal::List(l))
+}
+
+fn corpus_docs(v: &RVal) -> Result<Vec<String>, Signal> {
+    match v {
+        RVal::List(l) if l.class.as_deref() == Some("corpus") => {
+            l.get("content").unwrap().as_str_vec().map_err(Signal::error)
+        }
+        other => other.as_str_vec().map_err(Signal::error),
+    }
+}
+
+/// tm_map(corpus, FUN): transform every document.
+fn tm_map_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, fopts) = split_futurize_opts(&args);
+    let b = user.bind(&["x", "FUN"]);
+    let corpus = b.req(0, "x")?;
+    let f = crate::apis::as_function(&b.req(1, "FUN")?, env)?;
+    let docs = corpus_docs(&corpus)?;
+    let items: Vec<RVal> = docs.into_iter().map(RVal::scalar_str).collect();
+    let results = if let Some(opts) = fopts {
+        map_elements(i, env, items, &f, b.rest, &opts.to_map_options(false))?
+    } else {
+        crate::apis::seq_map(i, env, &items, &f, &b.rest)?
+    };
+    let out: Vec<String> = results
+        .iter()
+        .map(|r| r.as_str_vec().map(|v| v.join(" ")))
+        .collect::<Result<_, _>>()
+        .map_err(Signal::error)?;
+    let mut l = RList::named(vec![RVal::chr(out)], vec!["content".into()]);
+    l.class = Some("corpus".into());
+    Ok(RVal::List(l))
+}
+
+/// tm_index(corpus, FUN): logical filter over documents.
+fn tm_index_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, fopts) = split_futurize_opts(&args);
+    let b = user.bind(&["x", "FUN"]);
+    let corpus = b.req(0, "x")?;
+    let f = crate::apis::as_function(&b.req(1, "FUN")?, env)?;
+    let docs = corpus_docs(&corpus)?;
+    let items: Vec<RVal> = docs.into_iter().map(RVal::scalar_str).collect();
+    let results = if let Some(opts) = fopts {
+        map_elements(i, env, items, &f, b.rest, &opts.to_map_options(false))?
+    } else {
+        crate::apis::seq_map(i, env, &items, &f, &b.rest)?
+    };
+    let flags: Result<Vec<bool>, _> = results.iter().map(|r| r.as_bool()).collect();
+    Ok(RVal::lgl(flags.map_err(Signal::error)?))
+}
+
+/// TermDocumentMatrix(corpus): term × document counts. Per-document
+/// tokenization is the parallel surface.
+fn tdm_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let (user, fopts) = split_futurize_opts(&args);
+    let b = user.bind(&["x"]);
+    let corpus = b.req(0, "x")?;
+    let docs = corpus_docs(&corpus)?;
+    // Per-document token counting, futurizable.
+    let counts: Vec<std::collections::HashMap<String, usize>> = if let Some(opts) = fopts {
+        // Tokenize on workers via an rlite shim returning tokens.
+        let shim = i.eval(
+            &crate::rlite::parse_expr("function(doc) strsplit(tolower(doc), \" \")[[1]]")
+                .map_err(Signal::error)?,
+            env,
+        )?;
+        let items: Vec<RVal> = docs.iter().map(|d| RVal::scalar_str(d.clone())).collect();
+        let toks = map_elements(i, env, items, &shim, vec![], &opts.to_map_options(false))?;
+        toks.iter()
+            .map(|t| {
+                let mut m = std::collections::HashMap::new();
+                for w in t.as_str_vec().unwrap_or_default() {
+                    let w = normalize(&w);
+                    if !w.is_empty() {
+                        *m.entry(w).or_insert(0) += 1;
+                    }
+                }
+                m
+            })
+            .collect()
+    } else {
+        docs.iter()
+            .map(|d| {
+                let mut m = std::collections::HashMap::new();
+                for w in d.to_lowercase().split_whitespace() {
+                    let w = normalize(w);
+                    if !w.is_empty() {
+                        *m.entry(w).or_insert(0) += 1;
+                    }
+                }
+                m
+            })
+            .collect()
+    };
+    let mut terms: Vec<String> =
+        counts.iter().flat_map(|m| m.keys().cloned()).collect();
+    terms.sort();
+    terms.dedup();
+    // Matrix as list of per-document count columns, named by terms.
+    let cols: Vec<RVal> = counts
+        .iter()
+        .map(|m| {
+            RVal::dbl(terms.iter().map(|t| *m.get(t).unwrap_or(&0) as f64).collect())
+        })
+        .collect();
+    let mut l = RList::named(
+        vec![
+            RVal::Chr(RVec::plain(terms)),
+            RVal::list(cols),
+            RVal::scalar_int(docs.len() as i64),
+        ],
+        vec!["terms".into(), "counts".into(), "n_docs".into()],
+    );
+    l.class = Some("TermDocumentMatrix".into());
+    Ok(RVal::List(l))
+}
+
+fn normalize(w: &str) -> String {
+    w.chars().filter(|c| c.is_alphanumeric()).collect::<String>().to_lowercase()
+}
+
+fn remove_punct_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?.as_str_vec().map_err(Signal::error)?;
+    Ok(RVal::chr(
+        x.iter()
+            .map(|s| s.chars().filter(|c| !c.is_ascii_punctuation()).collect())
+            .collect(),
+    ))
+}
+
+fn strip_ws_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?.as_str_vec().map_err(Signal::error)?;
+    Ok(RVal::chr(
+        x.iter().map(|s| s.split_whitespace().collect::<Vec<_>>().join(" ")).collect(),
+    ))
+}
+
+fn remove_words_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "words"]);
+    let x = b.req(0, "x")?.as_str_vec().map_err(Signal::error)?;
+    let words = b.req(1, "words")?.as_str_vec().map_err(Signal::error)?;
+    Ok(RVal::chr(
+        x.iter()
+            .map(|s| {
+                s.split_whitespace()
+                    .filter(|w| !words.contains(&w.to_lowercase()))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            })
+            .collect(),
+    ))
+}
+
+fn stopwords_fn(_i: &mut Interp, _args: Args, _env: &EnvRef) -> EvalResult {
+    Ok(RVal::chr(
+        ["the", "a", "an", "and", "or", "of", "in", "on", "for", "to", "at", "its", "it",
+            "as", "by", "with", "would", "said", "they"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn tm_map_transforms_documents() {
+        let v = run(
+            "data(crude)\ncorpus <- Corpus(VectorSource(crude))\n\
+             up <- tm_map(corpus, toupper)\nup$content[1]",
+        );
+        let s = v.as_str().unwrap();
+        assert_eq!(s, s.to_uppercase());
+    }
+
+    #[test]
+    fn futurized_tm_map_matches() {
+        let seq = run(
+            "data(crude)\nc1 <- tm_map(Corpus(VectorSource(crude)), tolower)\nc1$content",
+        );
+        let par = run(
+            "plan(multicore, workers = 3)\ndata(crude)\n\
+             c1 <- tm_map(Corpus(VectorSource(crude)), tolower) |> futurize()\nc1$content",
+        );
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn tdm_counts_terms() {
+        let v = run(
+            "corpus <- Corpus(VectorSource(c(\"oil oil price\", \"price up\")))\n\
+             tdm <- TermDocumentMatrix(corpus)\ntdm$terms",
+        );
+        assert_eq!(
+            v.as_str_vec().unwrap(),
+            vec!["oil".to_string(), "price".to_string(), "up".to_string()]
+        );
+    }
+
+    #[test]
+    fn tm_index_filters() {
+        let v = run(
+            "data(crude)\ncorpus <- Corpus(VectorSource(crude))\n\
+             hits <- tm_index(corpus, function(d) nchar(d) > 60)\nsum(hits) > 0",
+        );
+        assert_eq!(v, RVal::scalar_bool(true));
+    }
+}

@@ -1,0 +1,394 @@
+//! The chunked map driver — the engine every `future_*` function and
+//! every futurized domain function delegates to.
+//!
+//! Pipeline: identify + export globals → derive per-element RNG streams
+//! (`seed = TRUE`) → chunk per the scheduling policy → submit chunks to
+//! the plan's backend → stream progress conditions near-live → collect
+//! outcomes → relay captured stdout/conditions *in input order* → reduce
+//! back to per-element values.
+
+use super::{TaskKind, TaskOutcome, TaskPayload, TraceEvent};
+use crate::rlite::ast::Expr;
+use crate::rlite::conditions::RCondition;
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{Interp, Signal};
+use crate::rlite::serialize::{from_wire, to_wire, WireVal};
+use crate::rlite::value::RVal;
+use crate::rng::{make_streams, RngState};
+use crate::scheduling::ChunkPolicy;
+
+/// Execution options distilled from `futurize()`'s unified surface.
+#[derive(Clone, Debug)]
+pub struct MapOptions {
+    pub seed: SeedOption,
+    pub policy: ChunkPolicy,
+    /// Relay stdout from workers (future's `stdout = TRUE`).
+    pub stdout: bool,
+    /// Relay conditions from workers (future's `conditions` option).
+    pub conditions: bool,
+}
+
+impl Default for MapOptions {
+    fn default() -> Self {
+        MapOptions {
+            seed: SeedOption::False,
+            policy: ChunkPolicy::default(),
+            stdout: true,
+            conditions: true,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SeedOption {
+    /// No RNG management; warn if the task draws random numbers.
+    False,
+    /// Derive one L'Ecuyer stream per element from the session root seed.
+    True,
+    /// As `True` but from an explicit seed.
+    Seed(u64),
+}
+
+/// Apply `f(item, extra...)` to every element, concurrently per the
+/// current plan. Returns per-element results in input order.
+pub fn map_elements(
+    i: &mut Interp,
+    env: &EnvRef,
+    items: Vec<RVal>,
+    f: &RVal,
+    extra: Vec<(Option<String>, RVal)>,
+    opts: &MapOptions,
+) -> Result<Vec<RVal>, Signal> {
+    let n = items.len();
+    if n == 0 {
+        return Ok(vec![]);
+    }
+    let f_wire = to_wire(f).map_err(Signal::error)?;
+    let items_wire: Vec<WireVal> =
+        items.iter().map(to_wire).collect::<Result<_, _>>().map_err(Signal::error)?;
+    let mut extra_wire = Vec::with_capacity(extra.len());
+    for (name, v) in &extra {
+        extra_wire.push((name.clone(), to_wire(v).map_err(Signal::error)?));
+    }
+    let seeds = element_seeds(i, opts, n);
+    let workers = i.session.workers();
+    let chunks = crate::scheduling::make_chunks(n, workers, &opts.policy);
+
+    let mut payloads = Vec::with_capacity(chunks.len());
+    for &(start, end) in &chunks {
+        let id = i.session.fresh_task_id();
+        payloads.push((
+            id,
+            start,
+            TaskPayload {
+                id,
+                kind: TaskKind::MapChunk {
+                    f: f_wire.clone(),
+                    items: items_wire[start..end].to_vec(),
+                    extra: extra_wire.clone(),
+                    seeds: seeds.as_ref().map(|s| s[start..end].to_vec()),
+                    globals: vec![],
+                },
+                time_scale: i.config.time_scale,
+                capture_stdout: opts.stdout,
+            },
+        ));
+    }
+    run_chunks(i, env, payloads, opts, n)
+}
+
+/// Foreach-style execution: per element, bind iteration variables then
+/// evaluate `body`. `globals` are the free variables of `body` minus the
+/// binding names, resolved in `env`.
+pub fn foreach_elements(
+    i: &mut Interp,
+    env: &EnvRef,
+    bindings: Vec<Vec<(String, RVal)>>,
+    body: &Expr,
+    opts: &MapOptions,
+) -> Result<Vec<RVal>, Signal> {
+    let n = bindings.len();
+    if n == 0 {
+        return Ok(vec![]);
+    }
+    // Globals: free vars of body minus per-iteration bindings.
+    let bound: Vec<&str> = bindings[0].iter().map(|(k, _)| k.as_str()).collect();
+    let mut globals = Vec::new();
+    for name in crate::globals::free_variables(body) {
+        if bound.contains(&name.as_str()) {
+            continue;
+        }
+        if let Some(v) = crate::rlite::env::lookup(env, &name) {
+            if matches!(v, RVal::Builtin(_)) {
+                continue;
+            }
+            globals.push((name.clone(), to_wire(&v).map_err(Signal::error)?));
+        } else if crate::rlite::builtins::lookup_builtin(&name).is_none() {
+            return Err(Signal::error(format!(
+                "Failed to identify a global variable: '{name}' is not defined"
+            )));
+        }
+    }
+    let mut bindings_wire: Vec<Vec<(String, WireVal)>> = Vec::with_capacity(n);
+    for bs in &bindings {
+        let mut row = Vec::with_capacity(bs.len());
+        for (k, v) in bs {
+            row.push((k.clone(), to_wire(v).map_err(Signal::error)?));
+        }
+        bindings_wire.push(row);
+    }
+    let seeds = element_seeds(i, opts, n);
+    let workers = i.session.workers();
+    let chunks = crate::scheduling::make_chunks(n, workers, &opts.policy);
+    let mut payloads = Vec::with_capacity(chunks.len());
+    for &(start, end) in &chunks {
+        let id = i.session.fresh_task_id();
+        payloads.push((
+            id,
+            start,
+            TaskPayload {
+                id,
+                kind: TaskKind::ForeachChunk {
+                    bindings: bindings_wire[start..end].to_vec(),
+                    body: body.clone(),
+                    seeds: seeds.as_ref().map(|s| s[start..end].to_vec()),
+                    globals: globals.clone(),
+                },
+                time_scale: i.config.time_scale,
+                capture_stdout: opts.stdout,
+            },
+        ));
+    }
+    run_chunks(i, env, payloads, opts, n)
+}
+
+fn element_seeds(i: &Interp, opts: &MapOptions, n: usize) -> Option<Vec<RngState>> {
+    match opts.seed {
+        SeedOption::False => None,
+        SeedOption::True => Some(make_streams(i.session.rng_root_seed, n)),
+        SeedOption::Seed(s) => Some(make_streams(s, n)),
+    }
+}
+
+/// Submit all payloads, stream progress, collect outcomes, relay logs in
+/// chunk order, reassemble per-element values in input order.
+fn run_chunks(
+    i: &mut Interp,
+    _env: &EnvRef,
+    payloads: Vec<(u64, usize, TaskPayload)>,
+    opts: &MapOptions,
+    n: usize,
+) -> Result<Vec<RVal>, Signal> {
+    use std::collections::HashMap;
+
+    let order: Vec<(u64, usize)> = payloads.iter().map(|(id, start, _)| (*id, *start)).collect();
+    let expected: usize = payloads.len();
+    {
+        let backend = i.session.backend().map_err(Signal::error)?;
+        for (_, _, p) in payloads {
+            backend.submit(p).map_err(Signal::error)?;
+        }
+    }
+    let mut outcomes: HashMap<u64, TaskOutcome> = HashMap::with_capacity(expected);
+    let t0 = now_unix();
+    while outcomes.len() < expected {
+        let ev = {
+            let backend = i.session.backend().map_err(Signal::error)?;
+            backend.next_event().map_err(Signal::error)?
+        };
+        match ev {
+            super::BackendEvent::Progress { cond, .. } => {
+                // Near-live relay (paper §4.10): progress conditions pass
+                // through the parent handler stack immediately.
+                i.signal_condition(cond)?;
+            }
+            super::BackendEvent::Done(outcome) => {
+                outcomes.insert(outcome.id, outcome);
+            }
+        }
+    }
+    // Trace for Figure 1.
+    i.session.last_trace = outcomes
+        .values()
+        .map(|o| TraceEvent {
+            task_id: o.id,
+            worker: o.worker,
+            start: o.started_unix - t0,
+            end: o.finished_unix - t0,
+        })
+        .collect();
+    i.session.last_trace.sort_by(|a, b| a.task_id.cmp(&b.task_id));
+
+    // Relay + reassemble in input (chunk) order.
+    let genv = i.global.clone();
+    let mut out: Vec<Option<RVal>> = (0..n).map(|_| None).collect();
+    let mut first_error: Option<RCondition> = None;
+    for (id, start) in &order {
+        let outcome = outcomes.remove(id).expect("outcome present");
+        if opts.stdout || opts.conditions {
+            let mut log = outcome.log.clone();
+            if !opts.stdout {
+                log.stdout.clear();
+            }
+            if !opts.conditions {
+                log.conditions.clear();
+            }
+            i.relay(&log)?;
+        }
+        // RNG misuse detection (paper §5.2 recommendation 3).
+        if outcome.log.rng_used && matches!(opts.seed, SeedOption::False) {
+            i.signal_condition(RCondition::warning_cond(
+                "UNRELIABLE VALUE: one of the futures unexpectedly generated random numbers \
+                 without declaring so. Use 'seed = TRUE' to resolve this."
+                    .to_string(),
+            ))?;
+        }
+        match outcome.values {
+            Ok(vals) => {
+                for (k, w) in vals.iter().enumerate() {
+                    out[start + k] = Some(from_wire(w, &genv));
+                }
+            }
+            Err(cond) => {
+                if first_error.is_none() {
+                    first_error = Some(cond);
+                }
+            }
+        }
+    }
+    if let Some(cond) = first_error {
+        return Err(Signal::Error(cond));
+    }
+    Ok(out.into_iter().map(|v| v.expect("all elements resolved")).collect())
+}
+
+pub fn now_unix() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rlite::env::define;
+    use crate::rlite::eval::Interp;
+
+    fn make_closure(i: &mut Interp, src: &str) -> RVal {
+        i.eval_program(&format!("__f <- {src}")).unwrap();
+        crate::rlite::env::lookup(&i.global, "__f").unwrap()
+    }
+
+    #[test]
+    fn map_elements_sequential_squares() {
+        let mut i = Interp::new();
+        let f = make_closure(&mut i, "function(x) x^2");
+        let items: Vec<RVal> = (1..=5).map(|k| RVal::scalar_dbl(k as f64)).collect();
+        let genv = i.global.clone();
+        let out = map_elements(&mut i, &genv, items, &f, vec![], &MapOptions::default()).unwrap();
+        let got: Vec<f64> = out.iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(got, vec![1.0, 4.0, 9.0, 16.0, 25.0]);
+    }
+
+    #[test]
+    fn map_elements_multicore_preserves_order() {
+        let mut i = Interp::new();
+        i.eval_program("plan(multicore, workers = 3)").unwrap();
+        let f = make_closure(&mut i, "function(x) x * 10");
+        let items: Vec<RVal> = (1..=20).map(|k| RVal::scalar_dbl(k as f64)).collect();
+        let genv = i.global.clone();
+        let out = map_elements(&mut i, &genv, items, &f, vec![], &MapOptions::default()).unwrap();
+        let got: Vec<f64> = out.iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(got, (1..=20).map(|k| (k * 10) as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn seed_true_is_chunking_invariant() {
+        // Same per-element streams regardless of worker count/chunking —
+        // the property behind the paper's litmus test.
+        let draw = |workers: usize, chunk_size: Option<usize>| -> Vec<f64> {
+            let mut i = Interp::new();
+            i.eval_program(&format!("plan(multicore, workers = {workers})")).unwrap();
+            let f = make_closure(&mut i, "function(x) rnorm(1)");
+            let items: Vec<RVal> = (1..=8).map(|k| RVal::scalar_dbl(k as f64)).collect();
+            let genv = i.global.clone();
+            let opts = MapOptions {
+                seed: SeedOption::Seed(123),
+                policy: ChunkPolicy { chunk_size, scheduling: 1.0 },
+                ..Default::default()
+            };
+            map_elements(&mut i, &genv, items, &f, vec![], &opts)
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect()
+        };
+        let a = draw(1, None);
+        let b = draw(4, None);
+        let c = draw(2, Some(1));
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn rng_without_seed_warns() {
+        let mut i = Interp::new();
+        let f = make_closure(&mut i, "function(x) rnorm(1)");
+        let items = vec![RVal::scalar_dbl(1.0)];
+        let genv = i.global.clone();
+        let (r, captured) = i.capture_stdout(|i| {
+            let genv2 = genv.clone();
+            map_elements(i, &genv2, items, &f, vec![], &MapOptions::default())
+        });
+        r.unwrap();
+        assert!(captured.contains("UNRELIABLE VALUE"), "{captured}");
+    }
+
+    #[test]
+    fn worker_error_propagates_with_original_message() {
+        let mut i = Interp::new();
+        i.eval_program("plan(multicore, workers = 2)").unwrap();
+        let f = make_closure(&mut i, "function(x) if (x == 3) stop(\"bad x\") else x");
+        let items: Vec<RVal> = (1..=5).map(|k| RVal::scalar_dbl(k as f64)).collect();
+        let genv = i.global.clone();
+        let err =
+            map_elements(&mut i, &genv, items, &f, vec![], &MapOptions::default()).unwrap_err();
+        match err {
+            Signal::Error(c) => assert_eq!(c.message, "bad x"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn extra_args_forwarded() {
+        let mut i = Interp::new();
+        let f = make_closure(&mut i, "function(x, n) x + n");
+        let items = vec![RVal::scalar_dbl(1.0), RVal::scalar_dbl(2.0)];
+        let genv = i.global.clone();
+        let out = map_elements(
+            &mut i,
+            &genv,
+            items,
+            &f,
+            vec![(Some("n".into()), RVal::scalar_dbl(10.0))],
+            &MapOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(out[1].as_f64().unwrap(), 12.0);
+    }
+
+    #[test]
+    fn foreach_elements_binds_variables() {
+        let mut i = Interp::new();
+        let genv = i.global.clone();
+        define(&genv, "offset", RVal::scalar_dbl(100.0));
+        let body = crate::rlite::parse_expr("x * 2 + offset").unwrap();
+        let bindings: Vec<Vec<(String, RVal)>> =
+            (1..=3).map(|k| vec![("x".to_string(), RVal::scalar_dbl(k as f64))]).collect();
+        let out =
+            foreach_elements(&mut i, &genv, bindings, &body, &MapOptions::default()).unwrap();
+        let got: Vec<f64> = out.iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(got, vec![102.0, 104.0, 106.0]);
+    }
+}

@@ -1,0 +1,419 @@
+//! The future abstraction: `plan()`, task payloads, future handles, and
+//! the chunked map driver every `future_*` function delegates to.
+//!
+//! This module is the rlite-facing half of the "future ecosystem" the
+//! paper builds on: it owns the *what-to-run* representation
+//! ([`TaskPayload`]) and the developer-visible lifecycle
+//! (`future()` → `resolved()` → `value()`), while [`crate::backend`]
+//! owns the *how/where* (the paper's end-user concern, selected via
+//! `plan()`).
+
+pub mod driver;
+
+use std::collections::HashMap;
+
+use serde_derive::{Deserialize, Serialize};
+
+use crate::backend::{Backend, BackendEvent, BackendKind, PlanSpec};
+use crate::rlite::ast::{Arg, Expr};
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::conditions::{CaptureLog, RCondition};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::serialize::WireVal;
+use crate::rlite::value::{RList, RVal};
+use crate::rng::RngState;
+
+/// What a worker should execute.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub enum TaskKind {
+    /// A single expression with exported globals (low-level `future()`,
+    /// domain functions).
+    Expr { expr: Expr, globals: Vec<(String, WireVal)> },
+    /// A chunk of map elements: run `f(item, extra...)` per element.
+    /// `seeds` carries one pre-allocated L'Ecuyer stream per element
+    /// (`seed = TRUE`), making results invariant to chunking and order.
+    MapChunk {
+        f: WireVal,
+        items: Vec<WireVal>,
+        extra: Vec<(Option<String>, WireVal)>,
+        seeds: Option<Vec<RngState>>,
+        globals: Vec<(String, WireVal)>,
+    },
+    /// A chunk of foreach iterations: per element, bind the iteration
+    /// variables then evaluate `body`.
+    ForeachChunk {
+        bindings: Vec<Vec<(String, WireVal)>>,
+        body: Expr,
+        seeds: Option<Vec<RngState>>,
+        globals: Vec<(String, WireVal)>,
+    },
+}
+
+/// A unit of work shipped to a backend.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct TaskPayload {
+    pub id: u64,
+    pub kind: TaskKind,
+    /// Sys.sleep scale, forwarded so workers honour bench-time scaling.
+    pub time_scale: f64,
+    /// Relay stdout? (future's `stdout = TRUE` default)
+    pub capture_stdout: bool,
+}
+
+/// What a worker produced.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct TaskOutcome {
+    pub id: u64,
+    /// Per-element values for chunk tasks; single value for Expr tasks.
+    pub values: Result<Vec<WireVal>, RCondition>,
+    pub log: CaptureLog,
+    /// Which worker ran it (for the Figure-1 trace).
+    pub worker: usize,
+    /// Start/end offsets in seconds relative to task pickup, plus
+    /// wall-clock capture for tracing.
+    pub started_unix: f64,
+    pub finished_unix: f64,
+}
+
+/// One entry of the execution trace (regenerates the paper's Figure 1).
+#[derive(Clone, Debug, Serialize)]
+pub struct TraceEvent {
+    pub task_id: u64,
+    pub worker: usize,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Per-session future-ecosystem state, owned by the interpreter.
+pub struct SessionState {
+    /// The plan stack (`plan()` pushes/replaces the top).
+    pub plan: PlanSpec,
+    /// Lazily instantiated backend for the current plan.
+    backend: Option<Box<dyn Backend>>,
+    /// Pending low-level futures: id → resolved outcome (if arrived).
+    pending: HashMap<u64, Option<TaskOutcome>>,
+    next_task_id: u64,
+    /// Trace of the most recent futurized map call.
+    pub last_trace: Vec<TraceEvent>,
+    /// Session RNG seed used to derive per-element streams.
+    pub rng_root_seed: u64,
+}
+
+impl Default for SessionState {
+    fn default() -> Self {
+        SessionState {
+            plan: PlanSpec::sequential(),
+            backend: None,
+            pending: HashMap::new(),
+            next_task_id: 0,
+            last_trace: Vec::new(),
+            rng_root_seed: 42,
+        }
+    }
+}
+
+impl SessionState {
+    pub fn set_plan(&mut self, plan: PlanSpec) {
+        if self.plan != plan {
+            // Tear down the old worker pool, as future does on plan change.
+            self.backend = None;
+            self.plan = plan;
+        }
+    }
+
+    pub fn fresh_task_id(&mut self) -> u64 {
+        self.next_task_id += 1;
+        self.next_task_id
+    }
+
+    /// Instantiate (or reuse) the backend for the current plan.
+    pub fn backend(&mut self) -> Result<&mut Box<dyn Backend>, String> {
+        if self.backend.is_none() {
+            self.backend = Some(crate::backend::instantiate(&self.plan)?);
+        }
+        Ok(self.backend.as_mut().unwrap())
+    }
+
+    pub fn workers(&mut self) -> usize {
+        match self.backend() {
+            Ok(b) => b.workers(),
+            Err(_) => 1,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rlite-facing builtins: plan(), nbrOfWorkers(), future(), value(), ...
+// ---------------------------------------------------------------------------
+
+pub fn register_builtins(r: &mut Reg) {
+    r.special("future", "plan", plan_fn);
+    r.normal("future", "nbrOfWorkers", nbr_of_workers_fn);
+    r.normal("parallelly", "availableCores", available_cores_fn);
+    r.special("future", "future", future_fn);
+    r.normal("future", "value", value_fn);
+    r.normal("future", "resolved", resolved_fn);
+    r.special("future", "futureSeed", future_seed_fn);
+    r.special("future", "%<-%", future_assign_fn);
+}
+
+/// `plan(backend, workers = n)` — a special form: the backend may be an
+/// unevaluated symbol (`multisession`), a namespaced symbol
+/// (`future.mirai::mirai_multisession`), or a string.
+fn plan_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let Some(first) = args.first() else {
+        // plan() with no args: report current plan name.
+        return Ok(RVal::scalar_str(i.session.plan.describe()));
+    };
+    let kind_name = match &first.value {
+        Expr::Sym(s) => s.clone(),
+        Expr::Ns { pkg, name } => format!("{pkg}::{name}"),
+        Expr::Str(s) => s.clone(),
+        other => {
+            // Maybe an expression evaluating to a string.
+            i.eval(other, env)?.as_str().map_err(Signal::error)?
+        }
+    };
+    let mut workers: Option<usize> = None;
+    let mut worker_names: Vec<String> = Vec::new();
+    let mut latency_ms: Option<f64> = None;
+    let mut poll_ms: Option<f64> = None;
+    for a in &args[1..] {
+        match a.name.as_deref() {
+            Some("workers") => {
+                let v = i.eval(&a.value, env)?;
+                match &v {
+                    RVal::Chr(names) => {
+                        worker_names = names.vals.clone();
+                        workers = Some(names.vals.len());
+                    }
+                    other => workers = Some(other.as_usize().map_err(Signal::error)?),
+                }
+            }
+            Some("latency_ms") => {
+                latency_ms = Some(i.eval(&a.value, env)?.as_f64().map_err(Signal::error)?)
+            }
+            Some("poll_ms") => {
+                poll_ms = Some(i.eval(&a.value, env)?.as_f64().map_err(Signal::error)?)
+            }
+            _ => {}
+        }
+    }
+    let spec = PlanSpec::from_name(&kind_name, workers, worker_names, latency_ms, poll_ms)
+        .map_err(Signal::error)?;
+    i.session.set_plan(spec);
+    Ok(RVal::Null)
+}
+
+fn nbr_of_workers_fn(i: &mut Interp, _args: Args, _env: &EnvRef) -> EvalResult {
+    Ok(RVal::scalar_int(i.session.workers() as i64))
+}
+
+fn available_cores_fn(_i: &mut Interp, _args: Args, _env: &EnvRef) -> EvalResult {
+    Ok(RVal::scalar_int(
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as i64,
+    ))
+}
+
+/// `future(expr)` — the low-level API: launch one future on the current
+/// backend, return a handle.
+fn future_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let expr =
+        args.first().ok_or_else(|| Signal::error("future: missing expression"))?;
+    let id = submit_expr(i, &expr.value, env)?;
+    let mut l = RList::named(vec![RVal::scalar_int(id as i64)], vec!["id".into()]);
+    l.class = Some("Future".into());
+    Ok(RVal::List(l))
+}
+
+/// `x %<-% expr` — future assignment sugar: evaluates eagerly-as-future
+/// and binds the *value* (rlite has no promises, so this resolves on
+/// first use, i.e. immediately at bind time).
+fn future_assign_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let target = match &args[0].value {
+        Expr::Sym(s) => s.clone(),
+        other => {
+            return Err(Signal::error(format!(
+                "invalid %<-% target: {}",
+                crate::rlite::deparse::deparse(other)
+            )))
+        }
+    };
+    let id = submit_expr(i, &args[1].value, env)?;
+    let v = wait_for(i, id, env)?;
+    crate::rlite::env::define(env, &target, v.clone());
+    Ok(v)
+}
+
+/// Submit one expression as a future; returns the task id.
+fn submit_expr(i: &mut Interp, expr: &Expr, env: &EnvRef) -> Result<u64, Signal> {
+    let export = crate::globals::identify_globals(expr, env).map_err(Signal::error)?;
+    let mut globals = Vec::new();
+    for (name, v) in export.values {
+        globals.push((name, crate::rlite::serialize::to_wire(&v).map_err(Signal::error)?));
+    }
+    let id = i.session.fresh_task_id();
+    let payload = TaskPayload {
+        id,
+        kind: TaskKind::Expr { expr: expr.clone(), globals },
+        time_scale: i.config.time_scale,
+        capture_stdout: true,
+    };
+    i.session.backend().map_err(Signal::error)?.submit(payload).map_err(Signal::error)?;
+    i.session.pending.insert(id, None);
+    Ok(id)
+}
+
+fn future_id(v: &RVal) -> Result<u64, Signal> {
+    match v {
+        RVal::List(l) if l.class.as_deref() == Some("Future") => {
+            Ok(l.get("id").and_then(|x| x.as_i64().ok()).unwrap_or(0) as u64)
+        }
+        other => Err(Signal::error(format!("not a Future: {}", other.class()))),
+    }
+}
+
+/// Block until task `id` resolves; relay its output; return its value.
+fn wait_for(i: &mut Interp, id: u64, env: &EnvRef) -> EvalResult {
+    loop {
+        if let Some(Some(outcome)) = i.session.pending.get(&id) {
+            let outcome = outcome.clone();
+            i.session.pending.remove(&id);
+            return finish_outcome(i, outcome, env);
+        }
+        let ev = i
+            .session
+            .backend()
+            .map_err(Signal::error)?
+            .next_event()
+            .map_err(Signal::error)?;
+        match ev {
+            BackendEvent::Progress { cond, .. } => {
+                i.signal_condition(cond)?;
+            }
+            BackendEvent::Done(outcome) => {
+                if outcome.id == id {
+                    i.session.pending.remove(&id);
+                    return finish_outcome(i, outcome, env);
+                }
+                i.session.pending.insert(outcome.id, Some(outcome));
+            }
+        }
+    }
+}
+
+fn finish_outcome(i: &mut Interp, outcome: TaskOutcome, _env: &EnvRef) -> EvalResult {
+    i.relay(&outcome.log)?;
+    match outcome.values {
+        Ok(vals) => {
+            let genv = i.global.clone();
+            let mut out: Vec<RVal> = vals
+                .iter()
+                .map(|w| crate::rlite::serialize::from_wire(w, &genv))
+                .collect();
+            Ok(out.pop().unwrap_or(RVal::Null))
+        }
+        Err(cond) => Err(Signal::Error(cond)),
+    }
+}
+
+fn value_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let f = args.bind(&["future"]).req(0, "future")?;
+    let id = future_id(&f)?;
+    wait_for(i, id, env)
+}
+
+fn resolved_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let f = args.bind(&["future"]).req(0, "future")?;
+    let id = future_id(&f)?;
+    // Drain any ready events without blocking on this id.
+    while let Ok(Some(ev)) = i.session.backend().map_err(Signal::error)?.try_next_event() {
+        match ev {
+            BackendEvent::Progress { cond, .. } => {
+                i.signal_condition(cond)?;
+            }
+            BackendEvent::Done(outcome) => {
+                i.session.pending.insert(outcome.id, Some(outcome));
+            }
+        }
+    }
+    Ok(RVal::scalar_bool(matches!(i.session.pending.get(&id), Some(Some(_)))))
+}
+
+/// `futureSeed(seed)` — set the root seed used to derive per-element
+/// L'Ecuyer streams when `seed = TRUE`.
+fn future_seed_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let v = i.eval(&args[0].value, env)?;
+    i.session.rng_root_seed = v.as_i64().map_err(Signal::error)? as u64;
+    Ok(RVal::Null)
+}
+
+/// Map a backend kind to a human-readable name (used in traces/benches).
+pub fn backend_kind_name(kind: &BackendKind) -> &'static str {
+    match kind {
+        BackendKind::Sequential => "sequential",
+        BackendKind::Multicore => "multicore",
+        BackendKind::Multisession => "multisession",
+        BackendKind::ClusterSim => "cluster",
+        BackendKind::BatchtoolsSim => "batchtools",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn plan_default_is_sequential() {
+        assert_eq!(run("plan()"), RVal::scalar_str("sequential"));
+    }
+
+    #[test]
+    fn plan_switches_backend() {
+        let v = run("plan(multicore, workers = 2)\nnbrOfWorkers()");
+        assert_eq!(v, RVal::scalar_int(2));
+    }
+
+    #[test]
+    fn plan_accepts_namespaced_backends() {
+        // future.mirai::mirai_multisession maps onto the process backend.
+        let v = run("plan(future.mirai::mirai_multisession, workers = 2)\nplan()");
+        assert!(v.as_str().unwrap().contains("multisession"), "{v}");
+    }
+
+    #[test]
+    fn low_level_future_value_roundtrip() {
+        let v = run("plan(sequential)\nf <- future(21 * 2)\nvalue(f)");
+        assert_eq!(v, RVal::scalar_dbl(42.0));
+    }
+
+    #[test]
+    fn future_exports_globals() {
+        let v = run("plan(multicore, workers = 2)\na <- 5\nf <- future(a + 1)\nvalue(f)");
+        assert_eq!(v, RVal::scalar_dbl(6.0));
+    }
+
+    #[test]
+    fn future_error_propagates() {
+        let mut i = Interp::new();
+        let r = i.eval_program("plan(sequential)\nf <- future(stop(\"worker boom\"))\nvalue(f)");
+        match r {
+            Err(crate::rlite::eval::Signal::Error(c)) => assert_eq!(c.message, "worker boom"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn resolved_eventually_true() {
+        let v = run(
+            "plan(multicore, workers = 1)\nf <- future(1 + 1)\nv <- value(f)\nv",
+        );
+        assert_eq!(v, RVal::scalar_dbl(2.0));
+    }
+}

@@ -1,0 +1,214 @@
+//! Static identification of global variables — the `globals` package
+//! analog (paper §2.4: "globals are automatically identified through
+//! static-code analysis").
+//!
+//! Given an expression that will run on a worker, we walk the AST
+//! tracking locally-bound names (function parameters, loop variables,
+//! assignment targets) and collect every free symbol. Free symbols that
+//! resolve in the calling environment are exported to the worker; free
+//! symbols that resolve to builtins need no export (every "package"
+//! ships inside the worker binary — the `packages` option becomes a
+//! load-check rather than a code shipment).
+
+use std::collections::HashSet;
+
+use crate::rlite::ast::{Arg, Expr};
+use crate::rlite::builtins;
+use crate::rlite::env::{self, EnvRef};
+use crate::rlite::value::RVal;
+
+/// Free variables of `expr`, in first-use order.
+pub fn free_variables(expr: &Expr) -> Vec<String> {
+    let mut bound: HashSet<String> = HashSet::new();
+    let mut free: Vec<String> = Vec::new();
+    let mut seen: HashSet<String> = HashSet::new();
+    walk(expr, &mut bound, &mut free, &mut seen);
+    free
+}
+
+fn note(name: &str, bound: &HashSet<String>, free: &mut Vec<String>, seen: &mut HashSet<String>) {
+    if !bound.contains(name) && seen.insert(name.to_string()) {
+        free.push(name.to_string());
+    }
+}
+
+fn walk(e: &Expr, bound: &mut HashSet<String>, free: &mut Vec<String>, seen: &mut HashSet<String>) {
+    match e {
+        Expr::Sym(name) => note(name, bound, free, seen),
+        Expr::Call { func, args } => {
+            walk(func, bound, free, seen);
+            walk_args(args, bound, free, seen);
+        }
+        Expr::Function { params, body } => {
+            // Parameters bind inside the function body only.
+            let mut inner = bound.clone();
+            for p in params {
+                inner.insert(p.name.clone());
+            }
+            for p in params {
+                if let Some(d) = &p.default {
+                    walk(d, &mut inner, free, seen);
+                }
+            }
+            walk(body, &mut inner, free, seen);
+        }
+        Expr::Block(stmts) => {
+            for s in stmts {
+                walk(s, bound, free, seen);
+            }
+        }
+        Expr::If { cond, then, els } => {
+            walk(cond, bound, free, seen);
+            walk(then, bound, free, seen);
+            if let Some(e) = els {
+                walk(e, bound, free, seen);
+            }
+        }
+        Expr::For { var, seq, body } => {
+            walk(seq, bound, free, seen);
+            bound.insert(var.clone());
+            walk(body, bound, free, seen);
+        }
+        Expr::While { cond, body } => {
+            walk(cond, bound, free, seen);
+            walk(body, bound, free, seen);
+        }
+        Expr::Assign { target, value } => {
+            // RHS first: `x <- x + 1` with global x reads the global.
+            walk(value, bound, free, seen);
+            match target.as_ref() {
+                Expr::Sym(name) => {
+                    bound.insert(name.clone());
+                }
+                other => walk(other, bound, free, seen),
+            }
+        }
+        Expr::SuperAssign { target, value } => {
+            // `x <<- v` *reads* an enclosing binding: x stays free.
+            walk(value, bound, free, seen);
+            if let Expr::Sym(name) = target.as_ref() {
+                note(name, bound, free, seen);
+            }
+        }
+        Expr::Index { obj, args, .. } => {
+            walk(obj, bound, free, seen);
+            walk_args(args, bound, free, seen);
+        }
+        Expr::Dollar { obj, .. } => walk(obj, bound, free, seen),
+        _ => {}
+    }
+}
+
+fn walk_args(
+    args: &[Arg],
+    bound: &mut HashSet<String>,
+    free: &mut Vec<String>,
+    seen: &mut HashSet<String>,
+) {
+    for a in args {
+        walk(&a.value, bound, free, seen);
+    }
+}
+
+/// A resolved globals export: values to ship plus packages to check.
+#[derive(Clone, Debug, Default)]
+pub struct GlobalsExport {
+    pub values: Vec<(String, RVal)>,
+    pub packages: Vec<String>,
+}
+
+/// Resolve the free variables of `expr` against `env`, splitting them
+/// into exportable values and builtin namespaces ("packages").
+///
+/// Unresolvable symbols are an error, mirroring the future package's
+/// "Failed to identify a global variable" diagnostics.
+pub fn identify_globals(expr: &Expr, env: &EnvRef) -> Result<GlobalsExport, String> {
+    let mut out = GlobalsExport::default();
+    let mut pkgs: HashSet<String> = HashSet::new();
+    for name in free_variables(expr) {
+        if let Some(v) = env::lookup(env, &name) {
+            // Builtin references resolve implicitly on the worker.
+            if let RVal::Builtin(_) = v {
+                continue;
+            }
+            out.values.push((name, v));
+        } else if let Some(def) = builtins::lookup_builtin(&name) {
+            pkgs.insert(def.pkg.to_string());
+        } else {
+            return Err(format!(
+                "Failed to identify a global variable: '{name}' is not defined"
+            ));
+        }
+    }
+    let mut pkgs: Vec<String> = pkgs.into_iter().collect();
+    pkgs.sort();
+    out.packages = pkgs;
+    Ok(out)
+}
+
+/// Total serialized size of exported globals, for diagnostics and the
+/// future ecosystem's export-size accounting.
+pub fn export_size_bytes(export: &GlobalsExport) -> usize {
+    export
+        .values
+        .iter()
+        .map(|(n, v)| n.len() + crate::rlite::serialize::to_wire(v).map(|w| w.approx_size()).unwrap_or(0))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rlite::env::{define, Env};
+    use crate::rlite::parse_expr;
+
+    #[test]
+    fn finds_free_variables() {
+        let e = parse_expr("function(x) x + a + b").unwrap();
+        assert_eq!(free_variables(&e), vec!["+", "a", "b"]);
+    }
+
+    #[test]
+    fn params_and_locals_are_bound() {
+        let e = parse_expr("function(x) { y <- x * 2\ny + x }").unwrap();
+        let frees = free_variables(&e);
+        assert!(!frees.contains(&"x".to_string()));
+        assert!(!frees.contains(&"y".to_string()));
+    }
+
+    #[test]
+    fn loop_variable_is_bound() {
+        let e = parse_expr("for (i in 1:10) s <- s + i").unwrap();
+        let frees = free_variables(&e);
+        assert!(!frees.contains(&"i".to_string()));
+        assert!(frees.contains(&"s".to_string()));
+    }
+
+    #[test]
+    fn rhs_before_binding() {
+        // `x <- x + 1` reads a global x before rebinding.
+        let e = parse_expr("x <- x + 1").unwrap();
+        assert!(free_variables(&e).contains(&"x".to_string()));
+    }
+
+    #[test]
+    fn identify_splits_values_and_packages() {
+        let env = Env::new_ref();
+        define(&env, "a", crate::rlite::value::RVal::scalar_dbl(1.0));
+        let e = parse_expr("lapply(xs, function(x) x + a)").unwrap();
+        define(&env, "xs", crate::rlite::value::RVal::dbl(vec![1.0]));
+        let g = identify_globals(&e, &env).unwrap();
+        let names: Vec<&str> = g.values.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"a"));
+        assert!(names.contains(&"xs"));
+        assert!(g.packages.contains(&"base".to_string()));
+    }
+
+    #[test]
+    fn missing_global_is_an_error() {
+        let env = Env::new_ref();
+        let e = parse_expr("f(undefined_thing)").unwrap();
+        let err = identify_globals(&e, &env).unwrap_err();
+        assert!(err.contains("Failed to identify a global variable"), "{err}");
+    }
+}

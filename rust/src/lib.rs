@@ -1,0 +1,81 @@
+//! # futurize-rs
+//!
+//! A Rust reproduction of the *futurize* paper ("A Unified Approach to
+//! Concurrent, Parallel Map-Reduce in R using Futures", Bengtsson 2026).
+//!
+//! The crate is organised as the paper's ecosystem is:
+//!
+//! - [`rlite`] — the language substrate: a mini-R interpreter (lexer,
+//!   parser, evaluator, condition system, builtin library). The paper's
+//!   mechanism is source-to-source transpilation of R expressions; this
+//!   module provides the expressions.
+//! - [`rng`] — L'Ecuyer MRG32k3a combined multiple recursive generator
+//!   with 2^127 stream jumping (the `parallel`-package L'Ecuyer-CMRG
+//!   analog used for `seed = TRUE`).
+//! - [`globals`] — static free-variable analysis used to identify and
+//!   export globals to parallel workers.
+//! - [`future_core`] — the future abstraction: handles, lifecycle,
+//!   `plan()` stack, structured-concurrency scope.
+//! - [`backend`] — execution backends: `sequential`, `multicore`
+//!   (threads), `multisession` (worker subprocesses over stdio),
+//!   `cluster_sim` (latency-injected processes) and `batchtools_sim`
+//!   (file-based job queue with scheduler polling).
+//! - [`scheduling`] — chunking and load-balancing (`chunk_size`,
+//!   `scheduling`), ordered result reassembly.
+//! - [`transpile`] — **the paper's contribution**: `futurize()`, the
+//!   registry of per-function transpilers, expression unwrapping, and
+//!   the unified options surface.
+//! - [`apis`] — the supported map-reduce API families of Table 1
+//!   (base, stats, purrr, crossmap, foreach, plyr, BiocParallel) in both
+//!   sequential and future-based forms.
+//! - [`domains`] — the domain-specific packages of Table 2 (boot,
+//!   caret, glmnet, lme4, mgcv, tm analogs).
+//! - [`progress`] — the progressr analog: near-live progress conditions
+//!   relayed from workers.
+//! - [`runtime`] — the PJRT engine that loads and executes the AOT
+//!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) from map-task bodies.
+//! - [`coordinator`] — the session object that wires everything
+//!   together, plus tracing and metrics.
+//!
+//! ## Quickstart
+//!
+//! (`no_run`: rustdoc test binaries don't inherit the cargo-config
+//! rpath to libxla_extension's bundled libstdc++; the same snippet runs
+//! as `coordinator::tests::session_quickstart`.)
+//!
+//! ```no_run
+//! use futurize::prelude::*;
+//!
+//! let mut session = Session::new();
+//! session.eval_str("plan(multicore, workers = 2)").unwrap();
+//! let ys = session
+//!     .eval_str("lapply(1:8, function(x) x^2) |> futurize()")
+//!     .unwrap();
+//! assert_eq!(ys.len(), 8);
+//! ```
+
+pub mod apis;
+pub mod backend;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod domains;
+pub mod future_core;
+pub mod globals;
+pub mod progress;
+pub mod rlite;
+pub mod rng;
+pub mod runtime;
+pub mod scheduling;
+pub mod transpile;
+pub mod wire;
+
+/// Convenience re-exports covering the public API surface used by the
+/// examples, tests, and benchmarks.
+pub mod prelude {
+    pub use crate::backend::PlanSpec;
+    pub use crate::coordinator::{Session, SessionConfig};
+    pub use crate::rlite::conditions::{RCondition, Severity};
+    pub use crate::rlite::value::RVal;
+    pub use crate::rlite::{parse_program, parse_expr};
+    pub use crate::transpile::FuturizeOptions;
+}

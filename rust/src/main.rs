@@ -1,0 +1,121 @@
+//! futurize-rs CLI: run rlite scripts with the futurize ecosystem, host
+//! worker subprocesses, and print Table-1/2 support info.
+//!
+//! (Arguments are parsed by hand: the offline crate set has no clap.)
+
+use futurize::backend::worker;
+use futurize::coordinator::{Session, SessionConfig};
+
+const USAGE: &str = "\
+futurize-rs — unified, transpiling map-reduce parallelism (futurize reproduction)
+
+USAGE:
+    futurize-rs run <script.R> [--time-scale X] [--trace]
+    futurize-rs eval <expr> [--time-scale X]
+    futurize-rs supported [package]
+    futurize-rs doctor
+";
+
+fn main() {
+    // Worker mode: the multisession backend re-executes this binary with
+    // a sentinel argv[1]; never returns if so.
+    worker::maybe_worker();
+
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+
+    let flag_f64 = |name: &str, default: f64| -> f64 {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let has_flag = |name: &str| args.iter().any(|a| a == name);
+
+    match cmd.as_str() {
+        "run" => {
+            let Some(script) = args.get(1).filter(|a| !a.starts_with("--")) else {
+                eprintln!("futurize-rs run: missing script path");
+                std::process::exit(2);
+            };
+            let src = match std::fs::read_to_string(script) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("futurize-rs: cannot read {script}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            let mut session = Session::with_config(SessionConfig {
+                time_scale: flag_f64("--time-scale", 1.0),
+            });
+            match session.eval_str(&src) {
+                Ok(v) => {
+                    println!("{v}");
+                    if has_flag("--trace") {
+                        println!("{}", session.render_trace());
+                    }
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        "eval" => {
+            let Some(expr) = args.get(1) else {
+                eprintln!("futurize-rs eval: missing expression");
+                std::process::exit(2);
+            };
+            let mut session = Session::with_config(SessionConfig {
+                time_scale: flag_f64("--time-scale", 1.0),
+            });
+            match session.eval_str(expr) {
+                Ok(v) => println!("{v}"),
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        "supported" => match args.get(1) {
+            Some(pkg) => {
+                for f in futurize::transpile::supported_functions(pkg) {
+                    println!("{f}");
+                }
+            }
+            None => {
+                for p in futurize::transpile::supported_packages() {
+                    let n = futurize::transpile::supported_functions(p).len();
+                    println!("{p} ({n} functions)");
+                }
+            }
+        },
+        "doctor" => {
+            println!("futurize-rs {}", env!("CARGO_PKG_VERSION"));
+            println!(
+                "cores: {}",
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            );
+            println!("pjrt artifacts: {}", futurize::runtime::pjrt_available());
+            println!(
+                "worker binary: {}",
+                worker::worker_binary().map(|p| p.display().to_string()).unwrap_or_default()
+            );
+            let mut s = Session::new();
+            let v = s
+                .eval_str(
+                    "plan(multisession, workers = 2)\nunlist(lapply(1:4, function(x) x * 2) |> futurize())",
+                )
+                .unwrap_or_else(|e| panic!("self-test failed: {e}"));
+            println!("multisession self-test: {v}");
+        }
+        other => {
+            eprintln!("futurize-rs: unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

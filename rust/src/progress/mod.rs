@@ -1,0 +1,175 @@
+//! progressr analog (paper §4.10): near-live progress reporting from
+//! parallel workers.
+//!
+//! `p <- progressor(along = xs)` creates a closure that signals a
+//! `progression` condition each time it is called. On a worker, the
+//! task runner streams progression conditions to the parent immediately
+//! (see [`crate::backend::task_runner::LIVE_CLASSES`]); in the parent,
+//! `handlers(global = TRUE)` installs a display hook that renders a
+//! progress line to stderr as updates arrive.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::conditions::RCondition;
+use crate::rlite::env::{Env, EnvRef};
+use crate::rlite::eval::{EvalResult, HandlerFrame, Interp, Signal};
+use crate::rlite::value::RVal;
+
+pub fn register_builtins(r: &mut Reg) {
+    r.normal("progressr", "progressor", progressor_fn);
+    r.normal("progressr", "handlers", handlers_fn);
+    r.normal("progressr", ".progress_step", progress_step_fn);
+    r.special("progressr", "with_progress", with_progress_fn);
+}
+
+/// `progressor(along = xs)` / `progressor(steps = n)`: returns a closure
+/// `p(msg = "")` that signals one progression step. The closure body
+/// calls the internal `.progress_step(total, msg)` builtin, so it
+/// serializes cleanly to workers.
+fn progressor_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let total = if let Some(along) = args.named("along") {
+        along.len()
+    } else if let Some(steps) = args.named("steps") {
+        steps.as_usize().map_err(Signal::error)?
+    } else if let Some((_, v)) = args.items.first() {
+        v.len()
+    } else {
+        0
+    };
+    let src = format!("function(msg = \"\") .progress_step({total}, msg)");
+    let expr = crate::rlite::parse_expr(&src).map_err(Signal::error)?;
+    i.eval(&expr, &Env::child_of(env))
+}
+
+/// Internal: signal one progression condition.
+fn progress_step_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["total", "msg"]);
+    let total = b.opt(0).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(0);
+    let msg =
+        b.opt(1).map(|v| v.as_str()).transpose().map_err(Signal::error)?.unwrap_or_default();
+    let cond = RCondition::custom(
+        "progression",
+        msg,
+        Some(crate::wire::JsonValue::obj(vec![("amount", crate::wire::JsonValue::num(1.0)), ("total", crate::wire::JsonValue::num(total as f64))])),
+    );
+    i.signal_condition(cond)?;
+    Ok(RVal::Null)
+}
+
+/// `handlers(global = TRUE)`: install the parent-side display hook that
+/// renders progression conditions to stderr as they are relayed.
+fn handlers_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let enable = args
+        .named("global")
+        .map(|v| v.as_bool())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or(true);
+    if enable {
+        install_display(i);
+    }
+    Ok(RVal::scalar_bool(enable))
+}
+
+/// `with_progress({ ... })`: scoped variant — display hook active only
+/// for the wrapped expression.
+fn with_progress_fn(
+    i: &mut Interp,
+    args: &[crate::rlite::ast::Arg],
+    env: &EnvRef,
+) -> EvalResult {
+    let expr = args.first().ok_or_else(|| Signal::error("with_progress: missing expr"))?;
+    install_display(i);
+    let r = i.eval(&expr.value, env);
+    i.handlers.pop();
+    r
+}
+
+/// The display hook: tracks completed steps and writes a single-line
+/// progress bar to the error stream.
+fn install_display(i: &mut Interp) {
+    let count = Rc::new(RefCell::new(0usize));
+    let line = Rc::new(RefCell::new(String::new()));
+    i.handlers.push(HandlerFrame::Native {
+        class: "progression".into(),
+        hook: Rc::new(RefCell::new(move |c: &RCondition| {
+            let mut n = count.borrow_mut();
+            *n += 1;
+            let total = c
+                .data
+                .as_ref()
+                .and_then(|d| d.get("total"))
+                .and_then(|t| t.as_u64())
+                .unwrap_or(0);
+            let rendered = if total > 0 {
+                let pct = (*n as f64 / total as f64 * 100.0).min(100.0);
+                format!("[{:>3.0}%] {}/{} {}", pct, n, total, c.message)
+            } else {
+                format!("[step {}] {}", n, c.message)
+            };
+            *line.borrow_mut() = rendered;
+            // Rendering goes to the process stderr; tests observe the
+            // relayed conditions themselves instead of scraping output.
+            eprint!("\r{}", line.borrow());
+            if total > 0 && *n >= total as usize {
+                eprintln!();
+            }
+        })),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rlite::eval::Interp;
+
+    #[test]
+    fn progressor_signals_progression_conditions() {
+        let mut i = Interp::new();
+        // Capture conditions at the interpreter boundary.
+        let exprs = crate::rlite::parse_program(
+            "p <- progressor(steps = 3)\nfor (k in 1:3) p()\n\"done\"",
+        )
+        .unwrap();
+        let genv = i.global.clone();
+        let mut all = crate::rlite::conditions::CaptureLog::default();
+        let mut last = RVal::Null;
+        for e in &exprs {
+            let (r, log) = i.eval_captured(e, &genv);
+            last = r.unwrap();
+            all.merge(log);
+        }
+        assert_eq!(last, RVal::scalar_str("done"));
+        let progressions: Vec<_> =
+            all.conditions.iter().filter(|c| c.inherits("progression")).collect();
+        assert_eq!(progressions.len(), 3);
+    }
+
+    #[test]
+    fn progress_relays_from_parallel_workers() {
+        // The §4.10 pattern: progressor inside local(), futurized lapply.
+        let mut i = Interp::new();
+        let src = "plan(multicore, workers = 2)\n\
+                   xs <- 1:6\n\
+                   ys <- local({\n  p <- progressor(along = xs)\n  lapply(xs, function(x) { p()\n x^2 })\n}) |> futurize()\n\
+                   unlist(ys)";
+        let exprs = crate::rlite::parse_program(src).unwrap();
+        let genv = i.global.clone();
+        let mut all = crate::rlite::conditions::CaptureLog::default();
+        let mut last = RVal::Null;
+        for e in &exprs {
+            let (r, log) = i.eval_captured(e, &genv);
+            last = r.unwrap_or_else(|e| panic!("{e:?}"));
+            all.merge(log);
+        }
+        assert_eq!(
+            last.as_dbl_vec().unwrap(),
+            vec![1.0, 4.0, 9.0, 16.0, 25.0, 36.0]
+        );
+        let progressions =
+            all.conditions.iter().filter(|c| c.inherits("progression")).count();
+        assert_eq!(progressions, 6, "one progression per element");
+    }
+}

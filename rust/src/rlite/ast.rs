@@ -1,0 +1,173 @@
+//! Abstract syntax tree for rlite.
+//!
+//! Expressions are plain data (`Clone + PartialEq + Serialize`), which is
+//! what makes the futurize transpiler possible: `futurize()` receives the
+//! unevaluated [`Expr`] of its first argument, rewrites it, and evaluates
+//! the rewritten tree. Task payloads shipped to parallel workers are also
+//! `Expr`s plus a serialized globals environment.
+
+use serde_derive::{Deserialize, Serialize};
+
+/// A call argument: optionally named, as in `f(x, n = 10)`.
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub struct Arg {
+    pub name: Option<String>,
+    pub value: Expr,
+}
+
+impl Arg {
+    pub fn pos(value: Expr) -> Self {
+        Arg { name: None, value }
+    }
+    pub fn named(name: &str, value: Expr) -> Self {
+        Arg { name: Some(name.to_string()), value }
+    }
+}
+
+/// A formal parameter of a `function(...)` definition.
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub struct Param {
+    pub name: String,
+    pub default: Option<Expr>,
+}
+
+/// An rlite expression.
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub enum Expr {
+    /// `NULL`
+    Null,
+    /// `TRUE` / `FALSE`
+    Bool(bool),
+    /// Integer literal `42L` (and integer-valued ranges)
+    Int(i64),
+    /// Numeric literal
+    Num(f64),
+    /// String literal
+    Str(String),
+    /// Symbol (variable reference)
+    Sym(String),
+    /// Namespace access `pkg::name`
+    Ns { pkg: String, name: String },
+    /// Function call `f(a, b = 1)`. Infix operators, `[`/`[[` indexing and
+    /// `%op%` operators are all represented as calls, as in R.
+    Call { func: Box<Expr>, args: Vec<Arg> },
+    /// `function(x, y = 1) body` or `\(x) body`
+    Function { params: Vec<Param>, body: Box<Expr> },
+    /// `{ e1; e2; ... }`
+    Block(Vec<Expr>),
+    /// `if (cond) then else els`
+    If { cond: Box<Expr>, then: Box<Expr>, els: Option<Box<Expr>> },
+    /// `for (var in seq) body`
+    For { var: String, seq: Box<Expr>, body: Box<Expr> },
+    /// `while (cond) body`
+    While { cond: Box<Expr>, body: Box<Expr> },
+    /// `target <- value` (also `=` at statement level and `->` reversed)
+    Assign { target: Box<Expr>, value: Box<Expr> },
+    /// `target <<- value`: super-assignment into the nearest enclosing
+    /// frame that binds `target` (else the global environment).
+    SuperAssign { target: Box<Expr>, value: Box<Expr> },
+    /// `x[i]` (single-bracket) / `x[[i]]` (double-bracket)
+    Index { obj: Box<Expr>, args: Vec<Arg>, double: bool },
+    /// `x$name`
+    Dollar { obj: Box<Expr>, name: String },
+    /// `break`
+    Break,
+    /// `next`
+    Next,
+    /// An elided argument slot (empty argument, e.g. `x[ , 1]`)
+    Missing,
+    /// The `...` symbol forwarded inside a function body
+    Dots,
+}
+
+impl Expr {
+    /// Convenience: build a call to a named function.
+    pub fn call(name: &str, args: Vec<Arg>) -> Expr {
+        Expr::Call { func: Box::new(Expr::Sym(name.to_string())), args }
+    }
+
+    /// Convenience: build a namespaced call `pkg::name(args)`.
+    pub fn ns_call(pkg: &str, name: &str, args: Vec<Arg>) -> Expr {
+        Expr::Call {
+            func: Box::new(Expr::Ns { pkg: pkg.to_string(), name: name.to_string() }),
+            args,
+        }
+    }
+
+    /// If this expression is a call, return `(head, args)` where `head` is
+    /// the textual function name (ignoring namespace qualification).
+    pub fn as_call(&self) -> Option<(&Expr, &[Arg])> {
+        match self {
+            Expr::Call { func, args } => Some((func, args)),
+            _ => None,
+        }
+    }
+
+    /// The called function's bare name, if statically known:
+    /// `lapply(...)` -> "lapply", `base::lapply(...)` -> "lapply".
+    pub fn call_name(&self) -> Option<&str> {
+        match self {
+            Expr::Call { func, .. } => match func.as_ref() {
+                Expr::Sym(s) => Some(s),
+                Expr::Ns { name, .. } => Some(name),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
+    /// The explicit namespace qualifier of a call, if present.
+    pub fn call_namespace(&self) -> Option<&str> {
+        match self {
+            Expr::Call { func, .. } => match func.as_ref() {
+                Expr::Ns { pkg, .. } => Some(pkg),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
+    /// True for literal leaves (no evaluation effects).
+    pub fn is_literal(&self) -> bool {
+        matches!(
+            self,
+            Expr::Null | Expr::Bool(_) | Expr::Int(_) | Expr::Num(_) | Expr::Str(_)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn call_name_plain_and_namespaced() {
+        let e = Expr::call("lapply", vec![Arg::pos(Expr::Sym("xs".into()))]);
+        assert_eq!(e.call_name(), Some("lapply"));
+        assert_eq!(e.call_namespace(), None);
+
+        let e = Expr::ns_call("purrr", "map", vec![]);
+        assert_eq!(e.call_name(), Some("map"));
+        assert_eq!(e.call_namespace(), Some("purrr"));
+    }
+
+    #[test]
+    fn ast_roundtrips_serde() {
+        let e = Expr::call(
+            "lapply",
+            vec![
+                Arg::pos(Expr::Sym("xs".into())),
+                Arg::pos(Expr::Function {
+                    params: vec![Param { name: "x".into(), default: None }],
+                    body: Box::new(Expr::call(
+                        "^",
+                        vec![Arg::pos(Expr::Sym("x".into())), Arg::pos(Expr::Num(2.0))],
+                    )),
+                }),
+            ],
+        );
+        let json = crate::wire::to_string(&e).unwrap();
+        let back: Expr = crate::wire::from_str(&json).unwrap();
+        assert_eq!(e, back);
+    }
+}

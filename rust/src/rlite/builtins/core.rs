@@ -1,0 +1,1061 @@
+//! Core base-R builtins: vectors, lists, coercions, structural helpers.
+
+use super::{Args, Reg};
+use crate::rlite::env::{self, Env, EnvRef};
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::{RList, RVal, RVec};
+
+pub fn register(r: &mut Reg) {
+    r.normal("base", "c", c_fn);
+    // `( expr )` — parenthesis kept as a call node so the futurize
+    // transpiler can unwrap it (paper §3.3); semantically identity.
+    r.normal("base", "(", |_i, a, _e| a.bind(&["x"]).req(0, "x"));
+    // cbind over equal-length vectors: concatenated column-major (our
+    // matrix model is a flat column-major vector / list of columns).
+    r.normal("base", "cbind", c_fn);
+    r.normal("base", "rbind", c_fn);
+    r.normal("base", "list", list_fn);
+    r.normal("base", "length", length_fn);
+    r.normal("base", "names", names_fn);
+    r.normal("base", "rev", rev_fn);
+    r.normal("base", "unlist", unlist_fn);
+    r.normal("base", "seq", seq_fn);
+    r.normal("base", "seq_len", seq_len_fn);
+    r.normal("base", "seq_along", seq_along_fn);
+    r.normal("base", "rep", rep_fn);
+    r.normal("base", "identity", identity_fn);
+    r.normal("base", "I", identity_fn);
+    r.normal("base", "invisible", identity_fn);
+    r.normal("base", "class", class_fn);
+    r.normal("base", "inherits", inherits_fn);
+    r.normal("base", "is.null", is_null_fn);
+    r.normal("base", "is.function", is_function_fn);
+    r.normal("base", "is.numeric", is_numeric_fn);
+    r.normal("base", "is.character", is_character_fn);
+    r.normal("base", "is.list", is_list_fn);
+    r.normal("base", "is.na", is_na_fn);
+    r.normal("base", "as.numeric", as_numeric_fn);
+    r.normal("base", "as.double", as_numeric_fn);
+    r.normal("base", "as.integer", as_integer_fn);
+    r.normal("base", "as.character", as_character_fn);
+    r.normal("base", "as.logical", as_logical_fn);
+    r.normal("base", "as.list", as_list_fn);
+    r.normal("base", "as.vector", identity_fn);
+    r.normal("base", "numeric", numeric_fn);
+    r.normal("base", "integer", integer_fn);
+    r.normal("base", "character", character_fn);
+    r.normal("base", "logical", logical_fn);
+    r.normal("base", "vector", vector_fn);
+    r.normal("base", "paste", paste_fn);
+    r.normal("base", "paste0", paste0_fn);
+    r.normal("base", "nchar", nchar_fn);
+    r.normal("base", "toupper", toupper_fn);
+    r.normal("base", "tolower", tolower_fn);
+    r.normal("base", "strsplit", strsplit_fn);
+    r.normal("base", "gsub", gsub_fn);
+    r.normal("base", "sprintf", sprintf_fn);
+    r.normal("base", "data.frame", data_frame_fn);
+    r.normal("base", "nrow", nrow_fn);
+    r.normal("base", "ncol", ncol_fn);
+    r.normal("base", "head", head_fn);
+    r.normal("base", "tail", tail_fn);
+    r.normal("base", "which", which_fn);
+    r.normal("base", "any", any_fn);
+    r.normal("base", "all", all_fn);
+    r.normal("base", "identical", identical_fn);
+    r.normal("base", "stopifnot", stopifnot_fn);
+    r.normal("base", "do.call", do_call_fn);
+    r.normal("base", "Reduce", reduce_fn);
+    r.normal("base", "append", append_fn);
+    r.normal("base", "setdiff", setdiff_fn);
+    r.normal("base", "unique", unique_fn);
+    r.normal("base", "sort", sort_fn);
+    r.normal("base", "order", order_fn);
+    r.normal("base", "exists", exists_fn);
+    r.normal("base", "get", get_fn);
+    r.normal("base", "environment", environment_fn);
+    r.normal("base", "new.env", new_env_fn);
+    r.normal("base", "structure", structure_fn);
+    r.normal("base", "attr", attr_fn);
+    r.normal("base", "max", max_fn);
+    r.normal("base", "min", min_fn);
+    r.normal("base", "matrix", matrix_fn);
+    r.normal("base", "tabulate", tabulate_fn);
+}
+
+/// `tabulate(bin, nbins)`: counts of integer values 1..nbins. Native —
+/// the interpreted `for (k in idx) w[k] <- w[k] + 1` loop this replaces
+/// was the hot spot of `boot(stype = "w")` (EXPERIMENTS.md §Perf).
+fn tabulate_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["bin", "nbins"]);
+    let bin = b.req(0, "bin")?.as_dbl_vec().map_err(Signal::error)?;
+    let nbins = match b.opt(1) {
+        Some(v) => v.as_usize().map_err(Signal::error)?,
+        None => bin.iter().cloned().fold(0.0, f64::max).max(0.0) as usize,
+    };
+    let mut counts = vec![0.0; nbins];
+    for &v in &bin {
+        let k = v as i64;
+        if k >= 1 && (k as usize) <= nbins {
+            counts[k as usize - 1] += 1.0;
+        }
+    }
+    Ok(RVal::dbl(counts))
+}
+
+// -- vector construction ------------------------------------------------------
+
+/// `c(...)`: concatenate with R's coercion hierarchy
+/// (list > character > double > integer > logical).
+pub fn c_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    combine(args.items)
+}
+
+pub fn combine(items: Vec<(Option<String>, RVal)>) -> EvalResult {
+    // Determine result kind.
+    let mut has_list = false;
+    let mut has_chr = false;
+    let mut has_dbl = false;
+    let mut any_names = false;
+    for (n, v) in &items {
+        match v {
+            RVal::List(_) | RVal::Closure(_) | RVal::Builtin(_) | RVal::Cond(_) | RVal::Env(_) => {
+                has_list = true
+            }
+            RVal::Chr(_) => has_chr = true,
+            RVal::Dbl(_) | RVal::Int(_) | RVal::Lgl(_) => has_dbl = true,
+            RVal::Null => {}
+        }
+        if n.is_some() || v.names().is_some() {
+            any_names = true;
+        }
+    }
+    let _ = has_dbl;
+    let mut names: Vec<String> = Vec::new();
+    let push_names = |names: &mut Vec<String>, outer: &Option<String>, v: &RVal, k: usize| {
+        for j in 0..k {
+            let inner = v.names().and_then(|ns| ns.get(j).cloned()).unwrap_or_default();
+            let label = match (outer, inner.is_empty()) {
+                (Some(o), false) => format!("{o}.{inner}"),
+                (Some(o), true) => {
+                    if k == 1 {
+                        o.clone()
+                    } else {
+                        format!("{o}{}", j + 1)
+                    }
+                }
+                (None, _) => inner,
+            };
+            names.push(label);
+        }
+    };
+
+    if has_list {
+        let mut vals = Vec::new();
+        for (n, v) in &items {
+            match v {
+                RVal::Null => {}
+                RVal::List(l) => {
+                    push_names(&mut names, n, v, l.len());
+                    vals.extend(l.vals.iter().cloned());
+                }
+                other => {
+                    push_names(&mut names, n, v, 1);
+                    vals.push(other.clone());
+                }
+            }
+        }
+        let mut out = RList::plain(vals);
+        if any_names {
+            out.names = Some(names);
+        }
+        return Ok(RVal::List(out));
+    }
+    if has_chr {
+        let mut vals = Vec::new();
+        for (n, v) in &items {
+            let s = v.as_str_vec().map_err(Signal::error)?;
+            push_names(&mut names, n, v, s.len());
+            vals.extend(s);
+        }
+        return Ok(RVal::Chr(RVec { vals, names: if any_names { Some(names) } else { None } }));
+    }
+    // All-logical stays logical (R's coercion hierarchy).
+    let all_lgl = items.iter().all(|(_, v)| matches!(v, RVal::Lgl(_) | RVal::Null));
+    if all_lgl {
+        let mut vals = Vec::new();
+        for (n, v) in &items {
+            if let RVal::Lgl(b) = v {
+                push_names(&mut names, n, v, b.len());
+                vals.extend(b.vals.iter().copied());
+            }
+        }
+        return Ok(RVal::Lgl(RVec { vals, names: if any_names { Some(names) } else { None } }));
+    }
+    let mut vals = Vec::new();
+    for (n, v) in &items {
+        let d = v.as_dbl_vec().map_err(Signal::error)?;
+        push_names(&mut names, n, v, d.len());
+        vals.extend(d);
+    }
+    Ok(RVal::Dbl(RVec { vals, names: if any_names { Some(names) } else { None } }))
+}
+
+fn list_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let any_named = args.items.iter().any(|(n, _)| n.is_some());
+    let names: Vec<String> =
+        args.items.iter().map(|(n, _)| n.clone().unwrap_or_default()).collect();
+    let vals: Vec<RVal> = args.items.into_iter().map(|(_, v)| v).collect();
+    let mut l = RList::plain(vals);
+    if any_named {
+        l.names = Some(names);
+    }
+    Ok(RVal::List(l))
+}
+
+fn length_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x"]);
+    Ok(RVal::scalar_int(b.req(0, "x")?.len() as i64))
+}
+
+fn names_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x"]);
+    match b.req(0, "x")?.names() {
+        Some(ns) => Ok(RVal::chr(ns.to_vec())),
+        None => Ok(RVal::Null),
+    }
+}
+
+fn rev_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x"]);
+    let x = b.req(0, "x")?;
+    Ok(match x {
+        RVal::Dbl(mut v) => {
+            v.vals.reverse();
+            if let Some(n) = &mut v.names {
+                n.reverse();
+            }
+            RVal::Dbl(v)
+        }
+        RVal::Int(mut v) => {
+            v.vals.reverse();
+            if let Some(n) = &mut v.names {
+                n.reverse();
+            }
+            RVal::Int(v)
+        }
+        RVal::Chr(mut v) => {
+            v.vals.reverse();
+            if let Some(n) = &mut v.names {
+                n.reverse();
+            }
+            RVal::Chr(v)
+        }
+        RVal::Lgl(mut v) => {
+            v.vals.reverse();
+            if let Some(n) = &mut v.names {
+                n.reverse();
+            }
+            RVal::Lgl(v)
+        }
+        RVal::List(mut l) => {
+            l.vals.reverse();
+            if let Some(n) = &mut l.names {
+                n.reverse();
+            }
+            RVal::List(l)
+        }
+        other => other,
+    })
+}
+
+fn unlist_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x"]);
+    let x = b.req(0, "x")?;
+    match x {
+        RVal::List(l) => {
+            let items: Vec<(Option<String>, RVal)> = l
+                .vals
+                .into_iter()
+                .enumerate()
+                .map(|(i, v)| {
+                    let nm = l
+                        .names
+                        .as_ref()
+                        .and_then(|ns| ns.get(i))
+                        .filter(|s| !s.is_empty())
+                        .cloned();
+                    (nm, v)
+                })
+                .collect();
+            combine(items)
+        }
+        other => Ok(other),
+    }
+}
+
+fn seq_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["from", "to", "by", "length.out"]);
+    let from = b.opt(0).map(|v| v.as_f64()).transpose().map_err(Signal::error)?.unwrap_or(1.0);
+    let to = b.opt(1).map(|v| v.as_f64()).transpose().map_err(Signal::error)?;
+    let by = b.opt(2).map(|v| v.as_f64()).transpose().map_err(Signal::error)?;
+    let len_out =
+        b.opt(3).map(|v| v.as_usize()).transpose().map_err(Signal::error)?;
+    match (to, by, len_out) {
+        (Some(to), None, None) => {
+            let step = if to >= from { 1.0 } else { -1.0 };
+            Ok(RVal::dbl(arange(from, to, step)))
+        }
+        (Some(to), Some(by), _) => Ok(RVal::dbl(arange(from, to, by))),
+        (Some(to), None, Some(n)) => {
+            if n == 1 {
+                return Ok(RVal::dbl(vec![from]));
+            }
+            let step = (to - from) / (n as f64 - 1.0);
+            Ok(RVal::dbl((0..n).map(|k| from + step * k as f64).collect()))
+        }
+        (None, _, Some(n)) => Ok(RVal::dbl((1..=n).map(|k| k as f64).collect())),
+        _ => Ok(RVal::dbl(arange(1.0, from, 1.0))),
+    }
+}
+
+fn arange(from: f64, to: f64, by: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut x = from;
+    if by > 0.0 {
+        while x <= to + 1e-12 {
+            out.push(x);
+            x += by;
+        }
+    } else if by < 0.0 {
+        while x >= to - 1e-12 {
+            out.push(x);
+            x += by;
+        }
+    }
+    out
+}
+
+fn seq_len_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let n = args.bind(&["length.out"]).req(0, "length.out")?.as_usize().map_err(Signal::error)?;
+    Ok(RVal::int((1..=n as i64).collect()))
+}
+
+fn seq_along_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["along.with"]).req(0, "along.with")?;
+    Ok(RVal::int((1..=x.len() as i64).collect()))
+}
+
+fn rep_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "times", "each"]);
+    let x = b.req(0, "x")?;
+    let times = b.opt(1).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(1);
+    let each = b.opt(2).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(1);
+    let elems = x.iter_elements();
+    let mut out: Vec<RVal> = Vec::with_capacity(elems.len() * times * each);
+    for _ in 0..times {
+        for e in &elems {
+            for _ in 0..each {
+                out.push(e.clone());
+            }
+        }
+    }
+    combine(out.into_iter().map(|v| (None, v)).collect())
+}
+
+fn identity_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    args.bind(&["x"]).req(0, "x")
+}
+
+// -- type predicates / coercions ----------------------------------------------
+
+fn class_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    Ok(RVal::scalar_str(args.bind(&["x"]).req(0, "x")?.class()))
+}
+
+fn inherits_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "what"]);
+    let x = b.req(0, "x")?;
+    let what = b.req(1, "what")?.as_str_vec().map_err(Signal::error)?;
+    let hit = match &x {
+        RVal::Cond(c) => what.iter().any(|w| c.inherits(w)),
+        other => what.iter().any(|w| w == other.class()),
+    };
+    Ok(RVal::scalar_bool(hit))
+}
+
+fn is_null_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    Ok(RVal::scalar_bool(args.bind(&["x"]).req(0, "x")?.is_null()))
+}
+
+fn is_function_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    Ok(RVal::scalar_bool(args.bind(&["x"]).req(0, "x")?.is_function()))
+}
+
+fn is_numeric_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    Ok(RVal::scalar_bool(matches!(x, RVal::Dbl(_) | RVal::Int(_))))
+}
+
+fn is_character_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    Ok(RVal::scalar_bool(matches!(x, RVal::Chr(_))))
+}
+
+fn is_list_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    Ok(RVal::scalar_bool(matches!(x, RVal::List(_))))
+}
+
+fn is_na_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    match x {
+        RVal::Dbl(v) => Ok(RVal::lgl(v.vals.iter().map(|x| x.is_nan()).collect())),
+        other => Ok(RVal::lgl(vec![false; other.len()])),
+    }
+}
+
+fn as_numeric_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    match &x {
+        RVal::Chr(v) => {
+            let vals: Vec<f64> =
+                v.vals.iter().map(|s| s.parse::<f64>().unwrap_or(f64::NAN)).collect();
+            Ok(RVal::dbl(vals))
+        }
+        _ => Ok(RVal::dbl(x.as_dbl_vec().map_err(Signal::error)?)),
+    }
+}
+
+fn as_integer_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    let d = x.as_dbl_vec().map_err(Signal::error)?;
+    Ok(RVal::int(d.into_iter().map(|x| x as i64).collect()))
+}
+
+fn as_character_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    Ok(RVal::chr(x.as_str_vec().map_err(Signal::error)?))
+}
+
+fn as_logical_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    let d = x.as_dbl_vec().map_err(Signal::error)?;
+    Ok(RVal::lgl(d.into_iter().map(|x| x != 0.0).collect()))
+}
+
+fn as_list_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    let names = x.element_names();
+    let vals = x.iter_elements();
+    let mut l = RList::plain(vals);
+    l.names = names;
+    Ok(RVal::List(l))
+}
+
+fn numeric_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let n = args.bind(&["length"]).opt(0).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(0);
+    Ok(RVal::dbl(vec![0.0; n]))
+}
+
+fn integer_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let n = args.bind(&["length"]).opt(0).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(0);
+    Ok(RVal::int(vec![0; n]))
+}
+
+fn character_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let n = args.bind(&["length"]).opt(0).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(0);
+    Ok(RVal::chr(vec![String::new(); n]))
+}
+
+fn logical_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let n = args.bind(&["length"]).opt(0).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(0);
+    Ok(RVal::lgl(vec![false; n]))
+}
+
+fn vector_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["mode", "length"]);
+    let mode = b.opt(0).map(|v| v.as_str()).transpose().map_err(Signal::error)?.unwrap_or_else(|| "logical".into());
+    let n = b.opt(1).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(0);
+    Ok(match mode.as_str() {
+        "numeric" | "double" => RVal::dbl(vec![0.0; n]),
+        "integer" => RVal::int(vec![0; n]),
+        "character" => RVal::chr(vec![String::new(); n]),
+        "list" => RVal::list(vec![RVal::Null; n]),
+        _ => RVal::lgl(vec![false; n]),
+    })
+}
+
+// -- strings -------------------------------------------------------------------
+
+fn paste_impl(args: &Args, default_sep: &str) -> EvalResult {
+    let sep = args
+        .named("sep")
+        .map(|v| v.as_str())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or_else(|| default_sep.to_string());
+    let collapse = args.named("collapse").cloned();
+    let parts: Vec<Vec<String>> = args
+        .items
+        .iter()
+        .filter(|(n, _)| n.as_deref() != Some("sep") && n.as_deref() != Some("collapse"))
+        .map(|(_, v)| v.as_str_vec().map_err(Signal::error))
+        .collect::<Result<_, _>>()?;
+    let n = parts.iter().map(|p| p.len()).max().unwrap_or(0);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let row: Vec<String> = parts
+            .iter()
+            .filter(|p| !p.is_empty())
+            .map(|p| p[i % p.len()].clone())
+            .collect();
+        out.push(row.join(&sep));
+    }
+    match collapse {
+        Some(RVal::Chr(cv)) if !cv.vals.is_empty() => {
+            Ok(RVal::scalar_str(out.join(&cv.vals[0])))
+        }
+        _ => Ok(RVal::chr(out)),
+    }
+}
+
+fn paste_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    paste_impl(&args, " ")
+}
+
+fn paste0_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    paste_impl(&args, "")
+}
+
+fn nchar_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?.as_str_vec().map_err(Signal::error)?;
+    Ok(RVal::int(x.iter().map(|s| s.chars().count() as i64).collect()))
+}
+
+fn toupper_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?.as_str_vec().map_err(Signal::error)?;
+    Ok(RVal::chr(x.iter().map(|s| s.to_uppercase()).collect()))
+}
+
+fn tolower_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?.as_str_vec().map_err(Signal::error)?;
+    Ok(RVal::chr(x.iter().map(|s| s.to_lowercase()).collect()))
+}
+
+fn strsplit_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "split"]);
+    let x = b.req(0, "x")?.as_str_vec().map_err(Signal::error)?;
+    let split = b.req(1, "split")?.as_str().map_err(Signal::error)?;
+    let out: Vec<RVal> = x
+        .iter()
+        .map(|s| {
+            let parts: Vec<String> = if split.is_empty() {
+                s.chars().map(|c| c.to_string()).collect()
+            } else {
+                s.split(&split).map(|p| p.to_string()).collect()
+            };
+            RVal::chr(parts)
+        })
+        .collect();
+    Ok(RVal::list(out))
+}
+
+fn gsub_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["pattern", "replacement", "x"]);
+    let pat = b.req(0, "pattern")?.as_str().map_err(Signal::error)?;
+    let rep = b.req(1, "replacement")?.as_str().map_err(Signal::error)?;
+    let x = b.req(2, "x")?.as_str_vec().map_err(Signal::error)?;
+    // Literal (fixed) replacement — enough for the tm-style examples.
+    Ok(RVal::chr(x.iter().map(|s| s.replace(&pat, &rep)).collect()))
+}
+
+fn sprintf_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let pos = args.positional();
+    let fmt = pos
+        .first()
+        .ok_or_else(|| Signal::error("sprintf needs a format"))?
+        .as_str()
+        .map_err(Signal::error)?;
+    let mut out = String::new();
+    let mut ai = 1usize;
+    let mut chars = fmt.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c != '%' {
+            out.push(c);
+            continue;
+        }
+        let mut spec = String::from("%");
+        loop {
+            match chars.next() {
+                Some(k) => {
+                    spec.push(k);
+                    if k.is_ascii_alphabetic() || k == '%' {
+                        break;
+                    }
+                }
+                None => return Err(Signal::error("bad sprintf format")),
+            }
+        }
+        let conv = spec.chars().last().unwrap();
+        match conv {
+            '%' => out.push('%'),
+            'd' | 'i' => {
+                let v = pos.get(ai).ok_or_else(|| Signal::error("too few sprintf args"))?;
+                out.push_str(&format!("{}", v.as_i64().map_err(Signal::error)?));
+                ai += 1;
+            }
+            'f' | 'g' | 'e' => {
+                let v = pos.get(ai).ok_or_else(|| Signal::error("too few sprintf args"))?;
+                let x = v.as_f64().map_err(Signal::error)?;
+                // honour %.Nf
+                if let Some(dot) = spec.find('.') {
+                    let prec: usize =
+                        spec[dot + 1..spec.len() - 1].parse().unwrap_or(6);
+                    out.push_str(&format!("{:.*}", prec, x));
+                } else {
+                    out.push_str(&crate::rlite::value::format_dbl(x));
+                }
+                ai += 1;
+            }
+            's' => {
+                let v = pos.get(ai).ok_or_else(|| Signal::error("too few sprintf args"))?;
+                out.push_str(&v.as_str_vec().map_err(Signal::error)?.join(","));
+                ai += 1;
+            }
+            other => return Err(Signal::error(format!("unsupported sprintf conversion %{other}"))),
+        }
+    }
+    Ok(RVal::scalar_str(out))
+}
+
+// -- data.frame-ish -------------------------------------------------------------
+
+fn data_frame_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let mut names = Vec::new();
+    let mut cols = Vec::new();
+    let mut nrow = 0usize;
+    for (n, v) in &args.items {
+        let name = n.clone().unwrap_or_else(|| format!("V{}", names.len() + 1));
+        nrow = nrow.max(v.len());
+        names.push(name);
+        cols.push(v.clone());
+    }
+    // Recycle length-1 columns.
+    for c in cols.iter_mut() {
+        if c.len() == 1 && nrow > 1 {
+            let elems = c.iter_elements();
+            let rep: Vec<RVal> = (0..nrow).map(|_| elems[0].clone()).collect();
+            *c = combine(rep.into_iter().map(|v| (None, v)).collect())?;
+        }
+    }
+    let mut l = RList::named(cols, names);
+    l.class = Some("data.frame".into());
+    Ok(RVal::List(l))
+}
+
+fn nrow_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    match &x {
+        RVal::List(l) if l.class.as_deref() == Some("data.frame") => {
+            Ok(RVal::scalar_int(l.vals.first().map(|c| c.len()).unwrap_or(0) as i64))
+        }
+        _ => Ok(RVal::Null),
+    }
+}
+
+fn ncol_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    match &x {
+        RVal::List(l) if l.class.as_deref() == Some("data.frame") => {
+            Ok(RVal::scalar_int(l.len() as i64))
+        }
+        _ => Ok(RVal::Null),
+    }
+}
+
+fn head_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "n"]);
+    let x = b.req(0, "x")?;
+    let n = b.opt(1).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(6);
+    let elems = x.iter_elements();
+    let take: Vec<RVal> = elems.into_iter().take(n).collect();
+    match x {
+        RVal::List(_) => Ok(RVal::list(take)),
+        _ => combine(take.into_iter().map(|v| (None, v)).collect()),
+    }
+}
+
+fn tail_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "n"]);
+    let x = b.req(0, "x")?;
+    let n = b.opt(1).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(6);
+    let elems = x.iter_elements();
+    let skip = elems.len().saturating_sub(n);
+    let take: Vec<RVal> = elems.into_iter().skip(skip).collect();
+    match x {
+        RVal::List(_) => Ok(RVal::list(take)),
+        _ => combine(take.into_iter().map(|v| (None, v)).collect()),
+    }
+}
+
+// -- logic / search ---------------------------------------------------------------
+
+fn which_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    match x {
+        RVal::Lgl(v) => Ok(RVal::int(
+            v.vals
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b)
+                .map(|(i, _)| (i + 1) as i64)
+                .collect(),
+        )),
+        other => Err(Signal::error(format!("which() expects logical, got {}", other.class()))),
+    }
+}
+
+fn any_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let mut hit = false;
+    for (_, v) in &args.items {
+        for e in v.as_dbl_vec().map_err(Signal::error)? {
+            hit |= e != 0.0;
+        }
+    }
+    Ok(RVal::scalar_bool(hit))
+}
+
+fn all_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let mut ok = true;
+    for (_, v) in &args.items {
+        for e in v.as_dbl_vec().map_err(Signal::error)? {
+            ok &= e != 0.0;
+        }
+    }
+    Ok(RVal::scalar_bool(ok))
+}
+
+fn identical_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "y"]);
+    Ok(RVal::scalar_bool(b.req(0, "x")? == b.req(1, "y")?))
+}
+
+fn stopifnot_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    for (name, v) in &args.items {
+        let d = v.as_dbl_vec().map_err(Signal::error)?;
+        if d.is_empty() || d.iter().any(|&x| x == 0.0) {
+            let what = name.clone().unwrap_or_else(|| "condition".into());
+            return Err(Signal::error(format!("{what} is not TRUE")));
+        }
+    }
+    Ok(RVal::Null)
+}
+
+fn do_call_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["what", "args"]);
+    let what = b.req(0, "what")?;
+    let f = match &what {
+        RVal::Chr(_) => {
+            let name = what.as_str().map_err(Signal::error)?;
+            env::lookup(env, &name)
+                .or_else(|| super::lookup_builtin(&name).map(|d| RVal::Builtin(d.key())))
+                .ok_or_else(|| Signal::error(format!("could not find function \"{name}\"")))?
+        }
+        other => other.clone(),
+    };
+    let arg_list = match b.req(1, "args")? {
+        RVal::List(l) => {
+            let names = l.names.clone();
+            l.vals
+                .into_iter()
+                .enumerate()
+                .map(|(idx, v)| {
+                    let nm = names
+                        .as_ref()
+                        .and_then(|ns| ns.get(idx))
+                        .filter(|s| !s.is_empty())
+                        .cloned();
+                    (nm, v)
+                })
+                .collect()
+        }
+        RVal::Null => vec![],
+        other => vec![(None, other)],
+    };
+    i.call_function(&f, arg_list, env)
+}
+
+fn reduce_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["f", "x", "init", "accumulate"]);
+    let f = b.req(0, "f")?;
+    let x = b.req(1, "x")?;
+    let init = b.opt(2);
+    let mut elems = x.iter_elements().into_iter();
+    let mut acc = match init {
+        Some(v) if !v.is_null() => v,
+        _ => match elems.next() {
+            Some(v) => v,
+            None => return Ok(RVal::Null),
+        },
+    };
+    for e in elems {
+        acc = i.call_function(&f, vec![(None, acc), (None, e)], env)?;
+    }
+    Ok(acc)
+}
+
+fn append_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "values"]);
+    combine(vec![(None, b.req(0, "x")?), (None, b.req(1, "values")?)])
+}
+
+fn setdiff_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "y"]);
+    let x = b.req(0, "x")?.as_str_vec().map_err(Signal::error)?;
+    let y = b.req(1, "y")?.as_str_vec().map_err(Signal::error)?;
+    Ok(RVal::chr(x.into_iter().filter(|e| !y.contains(e)).collect()))
+}
+
+fn unique_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    match x {
+        RVal::Chr(v) => {
+            let mut seen = std::collections::HashSet::new();
+            Ok(RVal::chr(v.vals.into_iter().filter(|s| seen.insert(s.clone())).collect()))
+        }
+        other => {
+            let d = other.as_dbl_vec().map_err(Signal::error)?;
+            let mut seen = Vec::new();
+            for x in d {
+                if !seen.iter().any(|&s: &f64| s == x) {
+                    seen.push(x);
+                }
+            }
+            Ok(RVal::dbl(seen))
+        }
+    }
+}
+
+fn sort_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "decreasing"]);
+    let decreasing =
+        b.opt(1).map(|v| v.as_bool()).transpose().map_err(Signal::error)?.unwrap_or(false);
+    let x = b.req(0, "x")?;
+    match x {
+        RVal::Chr(mut v) => {
+            v.vals.sort();
+            if decreasing {
+                v.vals.reverse();
+            }
+            v.names = None;
+            Ok(RVal::Chr(v))
+        }
+        other => {
+            let mut d = other.as_dbl_vec().map_err(Signal::error)?;
+            d.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            if decreasing {
+                d.reverse();
+            }
+            Ok(RVal::dbl(d))
+        }
+    }
+}
+
+fn order_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    let d = x.as_dbl_vec().map_err(Signal::error)?;
+    let mut idx: Vec<usize> = (0..d.len()).collect();
+    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap_or(std::cmp::Ordering::Equal));
+    Ok(RVal::int(idx.into_iter().map(|i| (i + 1) as i64).collect()))
+}
+
+// -- environments ---------------------------------------------------------------
+
+fn exists_fn(_i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let name = args.bind(&["x"]).req(0, "x")?.as_str().map_err(Signal::error)?;
+    Ok(RVal::scalar_bool(
+        env::exists(env, &name) || super::lookup_builtin(&name).is_some(),
+    ))
+}
+
+fn get_fn(_i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "envir"]);
+    let name = b.req(0, "x")?.as_str().map_err(Signal::error)?;
+    let target = match b.opt(1) {
+        Some(RVal::Env(e)) => e,
+        _ => env.clone(),
+    };
+    env::lookup(&target, &name)
+        .or_else(|| super::lookup_builtin(&name).map(|d| RVal::Builtin(d.key())))
+        .ok_or_else(|| Signal::error(format!("object '{name}' not found")))
+}
+
+fn environment_fn(_i: &mut Interp, _args: Args, env: &EnvRef) -> EvalResult {
+    Ok(RVal::Env(env.clone()))
+}
+
+fn new_env_fn(_i: &mut Interp, _args: Args, env: &EnvRef) -> EvalResult {
+    Ok(RVal::Env(Env::child_of(env)))
+}
+
+fn structure_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "class"]);
+    let mut x = b.req(0, "x")?;
+    if let (RVal::List(l), Some(cls)) = (&mut x, b.opt(1)) {
+        l.class = Some(cls.as_str().map_err(Signal::error)?);
+    }
+    Ok(x)
+}
+
+fn attr_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "which"]);
+    let x = b.req(0, "x")?;
+    let which = b.req(1, "which")?.as_str().map_err(Signal::error)?;
+    match which.as_str() {
+        "names" => match x.names() {
+            Some(ns) => Ok(RVal::chr(ns.to_vec())),
+            None => Ok(RVal::Null),
+        },
+        "class" => Ok(RVal::scalar_str(x.class())),
+        _ => Ok(RVal::Null),
+    }
+}
+
+fn max_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let mut m = f64::NEG_INFINITY;
+    for (_, v) in &args.items {
+        for x in v.as_dbl_vec().map_err(Signal::error)? {
+            m = m.max(x);
+        }
+    }
+    Ok(RVal::scalar_dbl(m))
+}
+
+fn min_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let mut m = f64::INFINITY;
+    for (_, v) in &args.items {
+        for x in v.as_dbl_vec().map_err(Signal::error)? {
+            m = m.min(x);
+        }
+    }
+    Ok(RVal::scalar_dbl(m))
+}
+
+/// Minimal `matrix()`: stored as a list of column vectors with a
+/// `"matrix"` class tag (enough for the glmnet/caret-style examples).
+fn matrix_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["data", "nrow", "ncol"]);
+    let data = b.req(0, "data")?.as_dbl_vec().map_err(Signal::error)?;
+    let nrow = b.opt(1).map(|v| v.as_usize()).transpose().map_err(Signal::error)?;
+    let ncol = b.opt(2).map(|v| v.as_usize()).transpose().map_err(Signal::error)?;
+    let (nr, nc) = match (nrow, ncol) {
+        (Some(r), Some(c)) => (r, c),
+        (Some(r), None) => (r, data.len().div_ceil(r.max(1))),
+        (None, Some(c)) => (data.len().div_ceil(c.max(1)), c),
+        (None, None) => (data.len(), 1),
+    };
+    let mut cols = Vec::with_capacity(nc);
+    for j in 0..nc {
+        let mut col = Vec::with_capacity(nr);
+        for i in 0..nr {
+            let idx = j * nr + i;
+            col.push(if data.is_empty() { 0.0 } else { data[idx % data.len()] });
+        }
+        cols.push(RVal::dbl(col));
+    }
+    let mut l = RList::plain(cols);
+    l.class = Some("matrix".into());
+    Ok(RVal::List(l))
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn c_concatenates_and_coerces() {
+        assert_eq!(run("c(1, 2, 3)"), RVal::dbl(vec![1.0, 2.0, 3.0]));
+        assert_eq!(
+            run("c(1, \"a\")").as_str_vec().unwrap(),
+            vec!["1".to_string(), "a".to_string()]
+        );
+    }
+
+    #[test]
+    fn c_preserves_names() {
+        let v = run("c(a = 1, b = 2)");
+        assert_eq!(v.names().unwrap(), &["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn seq_variants() {
+        assert_eq!(run("seq_len(3)"), RVal::int(vec![1, 2, 3]));
+        assert_eq!(run("seq(2, 8, by = 2)"), RVal::dbl(vec![2.0, 4.0, 6.0, 8.0]));
+        assert_eq!(run("seq_along(c(9, 9))"), RVal::int(vec![1, 2]));
+    }
+
+    #[test]
+    fn rep_times_each() {
+        assert_eq!(run("rep(1:2, times = 2)"), RVal::dbl(vec![1.0, 2.0, 1.0, 2.0]));
+        assert_eq!(run("rep(1:2, each = 2)"), RVal::dbl(vec![1.0, 1.0, 2.0, 2.0]));
+    }
+
+    #[test]
+    fn paste_family() {
+        assert_eq!(run("paste(\"a\", \"b\")"), RVal::chr(vec!["a b".into()]));
+        assert_eq!(run("paste0(\"x = \", 1)"), RVal::chr(vec!["x = 1".into()]));
+        assert_eq!(
+            run("paste(c(\"a\",\"b\"), collapse = \"+\")"),
+            RVal::scalar_str("a+b")
+        );
+    }
+
+    #[test]
+    fn do_call_by_name() {
+        assert_eq!(run("do.call(\"sum\", list(1, 2, 3))"), RVal::scalar_dbl(6.0));
+    }
+
+    #[test]
+    fn reduce_folds() {
+        assert_eq!(
+            run("Reduce(function(a, b) a + b, 1:4)"),
+            RVal::scalar_dbl(10.0)
+        );
+    }
+
+    #[test]
+    fn unlist_flattens_named() {
+        let v = run("unlist(list(a = 1, b = 2))");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(v.names().unwrap(), &["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn data_frame_columns() {
+        let v = run("df <- data.frame(a = 1:4, b = letters[1:4])\nncol(df)");
+        assert_eq!(v, RVal::scalar_int(2));
+    }
+
+    #[test]
+    fn stopifnot_errors() {
+        assert!(Interp::new().eval_program("stopifnot(1 == 2)").is_err());
+        assert!(Interp::new().eval_program("stopifnot(1 == 1)").is_ok());
+    }
+
+    #[test]
+    fn sort_and_unique() {
+        assert_eq!(run("sort(c(3, 1, 2))"), RVal::dbl(vec![1.0, 2.0, 3.0]));
+        assert_eq!(run("unique(c(1, 1, 2))"), RVal::dbl(vec![1.0, 2.0]));
+    }
+
+    #[test]
+    fn sprintf_basic() {
+        assert_eq!(run("sprintf(\"n=%d x=%.2f\", 3, 1.5)"), RVal::scalar_str("n=3 x=1.50"));
+    }
+}

@@ -1,0 +1,423 @@
+//! Output and condition builtins: `cat`, `print`, `message`, `warning`,
+//! `stop`, suppressors, `tryCatch`, `withCallingHandlers`, timing.
+
+use super::{Args, Reg};
+use crate::rlite::ast::{Arg, Expr};
+use crate::rlite::conditions::RCondition;
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, HandlerFrame, Interp, Signal};
+use crate::rlite::value::RVal;
+
+pub fn register(r: &mut Reg) {
+    r.normal("base", "cat", cat_fn);
+    r.normal("base", "print", print_fn);
+    r.normal("base", "str", str_fn);
+    r.normal("base", "format", format_fn);
+    r.normal("base", "message", message_fn);
+    r.normal("base", "warning", warning_fn);
+    r.normal("base", "stop", stop_fn);
+    r.normal("base", "conditionMessage", condition_message_fn);
+    r.normal("base", "conditionCall", condition_call_fn);
+    r.normal("base", "signalCondition", signal_condition_fn);
+    r.normal("base", "simpleCondition", simple_condition_fn);
+    r.special("base", "suppressMessages", suppress_messages_fn);
+    r.special("base", "suppressWarnings", suppress_warnings_fn);
+    r.special("base", "tryCatch", try_catch_fn);
+    r.special("base", "try", try_fn);
+    r.special("base", "withCallingHandlers", with_calling_handlers_fn);
+    r.special("base", "capture.output", capture_output_fn);
+    r.special("base", "system.time", system_time_fn);
+    r.normal("base", "Sys.sleep", sys_sleep_fn);
+    r.normal("base", "Sys.time", sys_time_fn);
+    r.normal("base", "Sys.getenv", sys_getenv_fn);
+    r.normal("base", "proc.time", proc_time_fn);
+}
+
+fn render_for_cat(v: &RVal) -> Result<String, Signal> {
+    match v {
+        RVal::Null => Ok(String::new()),
+        other => Ok(other.as_str_vec().map_err(Signal::error)?.join(" ")),
+    }
+}
+
+fn cat_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let sep = args
+        .named("sep")
+        .map(|v| v.as_str())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or_else(|| " ".to_string());
+    let parts: Vec<String> = args
+        .items
+        .iter()
+        .filter(|(n, _)| n.as_deref() != Some("sep"))
+        .map(|(_, v)| render_for_cat(v))
+        .collect::<Result<_, _>>()?;
+    i.write_out(&parts.join(&sep));
+    Ok(RVal::Null)
+}
+
+fn print_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    let text = format!("{x}\n");
+    i.write_out(&text);
+    Ok(x)
+}
+
+fn str_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["object"]).req(0, "object")?;
+    let text = format!("{} [len {}]\n", x.class(), x.len());
+    i.write_out(&text);
+    Ok(RVal::Null)
+}
+
+fn format_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    Ok(RVal::chr(x.as_str_vec().map_err(Signal::error)?))
+}
+
+fn msg_text(args: &Args) -> Result<String, Signal> {
+    let parts: Vec<String> = args
+        .items
+        .iter()
+        .filter(|(n, _)| n.is_none())
+        .map(|(_, v)| match v {
+            RVal::Cond(c) => Ok(c.message.clone()),
+            other => other.as_str_vec().map_err(Signal::error).map(|v| v.join("")),
+        })
+        .collect::<Result<_, _>>()?;
+    Ok(parts.join(""))
+}
+
+fn message_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let text = msg_text(&args)?;
+    i.signal_condition(RCondition::message_cond(format!("{text}\n")))?;
+    Ok(RVal::Null)
+}
+
+fn warning_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let text = msg_text(&args)?;
+    i.signal_condition(RCondition::warning_cond(text))?;
+    Ok(RVal::Null)
+}
+
+fn stop_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    // stop(cond) re-raises a condition object as-is (error preservation —
+    // the behaviour the paper contrasts against mclapply/parLapply).
+    if let Some((_, RVal::Cond(c))) = args.items.first() {
+        return Err(Signal::Error((**c).clone()));
+    }
+    Err(Signal::Error(RCondition::error_cond(msg_text(&args)?)))
+}
+
+fn condition_message_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    match args.bind(&["c"]).req(0, "c")? {
+        RVal::Cond(c) => Ok(RVal::scalar_str(c.message.clone())),
+        other => Err(Signal::error(format!("not a condition: {}", other.class()))),
+    }
+}
+
+fn condition_call_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    match args.bind(&["c"]).req(0, "c")? {
+        RVal::Cond(c) => Ok(match &c.call {
+            Some(call) => RVal::scalar_str(call.clone()),
+            None => RVal::Null,
+        }),
+        other => Err(Signal::error(format!("not a condition: {}", other.class()))),
+    }
+}
+
+fn simple_condition_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["message", "class"]);
+    let msg = b.req(0, "message")?.as_str().map_err(Signal::error)?;
+    let class = b
+        .opt(1)
+        .map(|v| v.as_str())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or_else(|| "simpleCondition".into());
+    Ok(RVal::Cond(Box::new(RCondition::custom(&class, msg, None))))
+}
+
+fn signal_condition_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    match args.bind(&["cond"]).req(0, "cond")? {
+        RVal::Cond(c) => {
+            i.signal_condition(*c)?;
+            Ok(RVal::Null)
+        }
+        other => Err(Signal::error(format!("not a condition: {}", other.class()))),
+    }
+}
+
+// ---- suppressors / handlers ---------------------------------------------------
+
+fn suppress_impl(i: &mut Interp, args: &[Arg], env: &EnvRef, classes: Vec<String>) -> EvalResult {
+    let expr = args
+        .first()
+        .ok_or_else(|| Signal::error("nothing to evaluate"))?;
+    i.handlers.push(HandlerFrame::Suppress { classes });
+    let r = i.eval(&expr.value, env);
+    i.handlers.pop();
+    r
+}
+
+fn suppress_messages_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    suppress_impl(i, args, env, vec!["message".into()])
+}
+
+fn suppress_warnings_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    suppress_impl(i, args, env, vec!["warning".into()])
+}
+
+/// `tryCatch(expr, error = f, warning = f, ..., finally = expr)`.
+/// Handlers are *exiting*: a matching condition unwinds evaluation of
+/// `expr` and the handler's value becomes the result.
+fn try_catch_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let mut expr: Option<&Expr> = None;
+    let mut handlers: Vec<(String, RVal)> = Vec::new();
+    let mut finally: Option<&Expr> = None;
+    for a in args {
+        match a.name.as_deref() {
+            None => {
+                if expr.is_none() {
+                    expr = Some(&a.value)
+                }
+            }
+            Some("finally") => finally = Some(&a.value),
+            Some(class) => {
+                let f = i.eval(&a.value, env)?;
+                handlers.push((class.to_string(), f));
+            }
+        }
+    }
+    let expr = expr.ok_or_else(|| Signal::error("tryCatch: missing expression"))?;
+    let id = i.fresh_frame_id();
+    let classes: Vec<String> = handlers
+        .iter()
+        .map(|(c, _)| c.clone())
+        .filter(|c| c != "error") // errors arrive via Signal::Error, not signal_condition
+        .collect();
+    let pushed = if classes.is_empty() {
+        false
+    } else {
+        i.handlers.push(HandlerFrame::Exiting { classes, id });
+        true
+    };
+    let result = i.eval(expr, env);
+    if pushed {
+        i.handlers.pop();
+    }
+    let out = match result {
+        Ok(v) => Ok(v),
+        Err(Signal::Unwind { cond, id: uid }) if uid == id => {
+            // Find the most specific matching handler.
+            let handler = handlers
+                .iter()
+                .find(|(c, _)| cond.inherits(c))
+                .map(|(_, f)| f.clone());
+            match handler {
+                Some(f) => i.call_function(&f, vec![(None, RVal::Cond(Box::new(cond)))], env),
+                None => Err(Signal::Error(cond)),
+            }
+        }
+        Err(Signal::Error(cond)) => {
+            let handler = handlers
+                .iter()
+                .find(|(c, _)| cond.inherits(c) || c == "error" || c == "condition")
+                .map(|(_, f)| f.clone());
+            match handler {
+                Some(f) => i.call_function(&f, vec![(None, RVal::Cond(Box::new(cond)))], env),
+                None => Err(Signal::Error(cond)),
+            }
+        }
+        Err(other) => Err(other),
+    };
+    if let Some(fin) = finally {
+        i.eval(fin, env)?;
+    }
+    out
+}
+
+/// `try(expr)`: evaluate; on error return the condition (class
+/// "try-error"-ish) instead of propagating.
+fn try_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let expr = args.first().ok_or_else(|| Signal::error("try: missing expression"))?;
+    match i.eval(&expr.value, env) {
+        Ok(v) => Ok(v),
+        Err(Signal::Error(mut cond)) => {
+            cond.classes.insert(0, "try-error".into());
+            Ok(RVal::Cond(Box::new(cond)))
+        }
+        Err(other) => Err(other),
+    }
+}
+
+fn with_calling_handlers_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let mut expr: Option<&Expr> = None;
+    let mut pushed = 0usize;
+    for a in args {
+        match a.name.as_deref() {
+            None => {
+                if expr.is_none() {
+                    expr = Some(&a.value)
+                }
+            }
+            Some(class) => {
+                let f = i.eval(&a.value, env)?;
+                i.handlers.push(HandlerFrame::Calling { class: class.to_string(), func: f });
+                pushed += 1;
+            }
+        }
+    }
+    let expr = expr.ok_or_else(|| Signal::error("withCallingHandlers: missing expression"))?;
+    let r = i.eval(expr, env);
+    for _ in 0..pushed {
+        i.handlers.pop();
+    }
+    r
+}
+
+fn capture_output_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let expr = args.first().ok_or_else(|| Signal::error("capture.output: missing expr"))?;
+    let (r, text) = i.capture_stdout(|i| i.eval(&expr.value, env));
+    r?;
+    let lines: Vec<String> = text.lines().map(|s| s.to_string()).collect();
+    Ok(RVal::chr(lines))
+}
+
+fn system_time_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let expr = args.first().ok_or_else(|| Signal::error("system.time: missing expr"))?;
+    let t0 = std::time::Instant::now();
+    i.eval(&expr.value, env)?;
+    let dt = t0.elapsed().as_secs_f64();
+    Ok(RVal::Dbl(crate::rlite::value::RVec::named(
+        vec![dt, 0.0, dt],
+        vec!["user.self".into(), "sys.self".into(), "elapsed".into()],
+    )))
+}
+
+fn sys_sleep_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let secs = args.bind(&["time"]).req(0, "time")?.as_f64().map_err(Signal::error)?;
+    let scaled = secs * i.config.time_scale;
+    if scaled > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(scaled));
+    }
+    Ok(RVal::Null)
+}
+
+fn sys_time_fn(_i: &mut Interp, _args: Args, _env: &EnvRef) -> EvalResult {
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_secs_f64();
+    Ok(RVal::scalar_dbl(now))
+}
+
+fn sys_getenv_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let name = args.bind(&["x"]).req(0, "x")?.as_str().map_err(Signal::error)?;
+    Ok(RVal::scalar_str(std::env::var(&name).unwrap_or_default()))
+}
+
+fn proc_time_fn(_i: &mut Interp, _args: Args, _env: &EnvRef) -> EvalResult {
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_secs_f64();
+    Ok(RVal::Dbl(crate::rlite::value::RVec::named(
+        vec![now, 0.0, now],
+        vec!["user.self".into(), "sys.self".into(), "elapsed".into()],
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    fn run_captured(src: &str) -> (RVal, String) {
+        let mut i = Interp::new();
+        let (r, text) = i.capture_stdout(|i| i.eval_program(src));
+        (r.unwrap(), text)
+    }
+
+    #[test]
+    fn cat_writes_stdout() {
+        let (_, out) = run_captured("cat(\"x =\", 1, \"\\n\")");
+        assert_eq!(out, "x = 1 \n");
+    }
+
+    #[test]
+    fn suppress_messages_muffles() {
+        let (_, out) = run_captured("suppressMessages(message(\"loud\"))");
+        assert_eq!(out, "");
+        let (_, out) = run_captured("message(\"loud\")");
+        assert_eq!(out, "loud\n");
+    }
+
+    #[test]
+    fn suppress_warnings_muffles_only_warnings() {
+        let (_, out) = run_captured("suppressWarnings({ warning(\"w\")\nmessage(\"m\") })");
+        assert_eq!(out, "m\n");
+    }
+
+    #[test]
+    fn try_catch_error_handler() {
+        let v = run("tryCatch(stop(\"boom\"), error = function(e) conditionMessage(e))");
+        assert_eq!(v, RVal::scalar_str("boom"));
+    }
+
+    #[test]
+    fn try_catch_warning_is_exiting() {
+        let v = run("tryCatch({ warning(\"w\")\n\"not reached\" }, warning = function(w) \"caught\")");
+        assert_eq!(v, RVal::scalar_str("caught"));
+    }
+
+    #[test]
+    fn try_catch_finally_runs() {
+        let v = run("x <- 0\ntryCatch(stop(\"e\"), error = function(e) 1, finally = x <- 99)\nx");
+        assert_eq!(v, RVal::scalar_dbl(99.0));
+    }
+
+    #[test]
+    fn try_returns_condition() {
+        let v = run("r <- try(stop(\"oops\"))\ninherits(r, \"try-error\")");
+        assert_eq!(v, RVal::scalar_bool(true));
+    }
+
+    #[test]
+    fn stop_preserves_condition_object() {
+        // Error objects survive re-raising (the paper's §1 critique of
+        // mclapply, which loses the original condition).
+        let v = run(
+            "e <- tryCatch(stop(\"original\"), error = function(e) e)\n\
+             r <- tryCatch(stop(e), error = function(e2) conditionMessage(e2))\nr",
+        );
+        assert_eq!(v, RVal::scalar_str("original"));
+    }
+
+    #[test]
+    fn with_calling_handlers_continues() {
+        let v = run(
+            "hits <- 0\nr <- withCallingHandlers({ message(\"a\")\nmessage(\"b\")\n42 },\n\
+             message = function(m) hits <<- hits + 1)\nc(r, hits)",
+        );
+        assert_eq!(v, RVal::dbl(vec![42.0, 2.0]));
+    }
+
+    #[test]
+    fn capture_output_returns_lines() {
+        let v = run("capture.output({ cat(\"l1\\n\")\ncat(\"l2\\n\") })");
+        assert_eq!(v, RVal::chr(vec!["l1".into(), "l2".into()]));
+    }
+
+    #[test]
+    fn warning_then_value() {
+        let (v, out) = run_captured("{ warning(\"careful\")\n7 }");
+        assert_eq!(v, RVal::scalar_dbl(7.0));
+        assert!(out.contains("careful"));
+    }
+}

@@ -1,0 +1,451 @@
+//! Vectorized arithmetic, comparison, and numeric summaries.
+
+use super::{Args, Reg};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::{RVal, RVec};
+
+pub fn register(r: &mut Reg) {
+    r.normal("base", "+", add_fn);
+    r.normal("base", "-", sub_fn);
+    r.normal("base", "*", mul_fn);
+    r.normal("base", "/", div_fn);
+    r.normal("base", "^", pow_fn);
+    r.normal("base", "%%", mod_fn);
+    r.normal("base", "%/%", intdiv_fn);
+    r.normal("base", "==", eq_fn);
+    r.normal("base", "!=", neq_fn);
+    r.normal("base", "<", lt_fn);
+    r.normal("base", ">", gt_fn);
+    r.normal("base", "<=", le_fn);
+    r.normal("base", ">=", ge_fn);
+    r.normal("base", "&", and_fn);
+    r.normal("base", "&&", and2_fn);
+    r.normal("base", "|", or_fn);
+    r.normal("base", "||", or2_fn);
+    r.normal("base", "!", not_fn);
+    r.normal("base", ":", range_fn);
+    r.normal("base", "%in%", in_fn);
+    r.normal("base", "sqrt", sqrt_fn);
+    r.normal("base", "exp", exp_fn);
+    r.normal("base", "log", log_fn);
+    r.normal("base", "log2", log2_fn);
+    r.normal("base", "log10", log10_fn);
+    r.normal("base", "abs", abs_fn);
+    r.normal("base", "floor", floor_fn);
+    r.normal("base", "ceiling", ceiling_fn);
+    r.normal("base", "round", round_fn);
+    r.normal("base", "sin", sin_fn);
+    r.normal("base", "cos", cos_fn);
+    r.normal("base", "sum", sum_fn);
+    r.normal("base", "prod", prod_fn);
+    r.normal("base", "mean", mean_fn);
+    r.normal("base", "cumsum", cumsum_fn);
+    r.normal("stats", "median", median_fn);
+    r.normal("stats", "var", var_fn);
+    r.normal("stats", "sd", sd_fn);
+    r.normal("stats", "quantile", quantile_fn);
+    r.normal("stats", "weighted.mean", weighted_mean_fn);
+    r.normal("stats", "cor", cor_fn);
+    r.normal("base", "range", range_summary_fn);
+    r.normal("base", "pmin", pmin_fn);
+    r.normal("base", "pmax", pmax_fn);
+}
+
+/// Elementwise binary op with R recycling and name preservation.
+fn binop(a: &RVal, b: &RVal, f: impl Fn(f64, f64) -> f64) -> EvalResult {
+    let av = a.as_dbl_vec().map_err(Signal::error)?;
+    let bv = b.as_dbl_vec().map_err(Signal::error)?;
+    if av.is_empty() || bv.is_empty() {
+        return Ok(RVal::dbl(vec![]));
+    }
+    let n = av.len().max(bv.len());
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push(f(av[i % av.len()], bv[i % bv.len()]));
+    }
+    let names = if av.len() >= bv.len() {
+        a.names().map(|x| x.to_vec())
+    } else {
+        b.names().map(|x| x.to_vec())
+    };
+    Ok(RVal::Dbl(RVec { vals: out, names }))
+}
+
+fn cmpop(a: &RVal, b: &RVal, f: impl Fn(f64, f64) -> bool) -> EvalResult {
+    let av = a.as_dbl_vec().map_err(Signal::error)?;
+    let bv = b.as_dbl_vec().map_err(Signal::error)?;
+    if av.is_empty() || bv.is_empty() {
+        return Ok(RVal::lgl(vec![]));
+    }
+    let n = av.len().max(bv.len());
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push(f(av[i % av.len()], bv[i % bv.len()]));
+    }
+    Ok(RVal::lgl(out))
+}
+
+macro_rules! bin {
+    ($name:ident, $f:expr) => {
+        fn $name(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+            let b = args.bind(&["e1", "e2"]);
+            binop(&b.req(0, "e1")?, &b.req(1, "e2")?, $f)
+        }
+    };
+}
+macro_rules! cmp {
+    ($name:ident, $f:expr) => {
+        fn $name(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+            let b = args.bind(&["e1", "e2"]);
+            cmpop(&b.req(0, "e1")?, &b.req(1, "e2")?, $f)
+        }
+    };
+}
+
+bin!(mul_fn, |a, b| a * b);
+bin!(div_fn, |a, b| a / b);
+bin!(pow_fn, |a, b| a.powf(b));
+bin!(mod_fn, |a, b| a.rem_euclid(b));
+bin!(intdiv_fn, |a, b| (a / b).floor());
+cmp!(lt_fn, |a, b| a < b);
+cmp!(gt_fn, |a, b| a > b);
+cmp!(le_fn, |a, b| a <= b);
+cmp!(ge_fn, |a, b| a >= b);
+
+fn add_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["e1", "e2"]);
+    let e1 = b.req(0, "e1")?;
+    match b.opt(1) {
+        Some(e2) => binop(&e1, &e2, |a, b| a + b),
+        None => Ok(e1), // unary +
+    }
+}
+
+fn sub_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["e1", "e2"]);
+    let e1 = b.req(0, "e1")?;
+    match b.opt(1) {
+        Some(e2) => binop(&e1, &e2, |a, b| a - b),
+        None => binop(&RVal::scalar_dbl(0.0), &e1, |a, b| a - b), // unary -
+    }
+}
+
+fn eq_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["e1", "e2"]);
+    let (x, y) = (b.req(0, "e1")?, b.req(1, "e2")?);
+    // String comparison if either side is character.
+    if matches!(x, RVal::Chr(_)) || matches!(y, RVal::Chr(_)) {
+        let xs = x.as_str_vec().map_err(Signal::error)?;
+        let ys = y.as_str_vec().map_err(Signal::error)?;
+        let n = xs.len().max(ys.len());
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(xs[i % xs.len()] == ys[i % ys.len()]);
+        }
+        return Ok(RVal::lgl(out));
+    }
+    cmpop(&x, &y, |a, b| a == b)
+}
+
+fn neq_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    match eq_fn(i, args, env)? {
+        RVal::Lgl(v) => Ok(RVal::lgl(v.vals.into_iter().map(|b| !b).collect())),
+        other => Ok(other),
+    }
+}
+
+fn and_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["e1", "e2"]);
+    cmpop(&b.req(0, "e1")?, &b.req(1, "e2")?, |a, b| a != 0.0 && b != 0.0)
+}
+
+fn or_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["e1", "e2"]);
+    cmpop(&b.req(0, "e1")?, &b.req(1, "e2")?, |a, b| a != 0.0 || b != 0.0)
+}
+
+fn and2_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["e1", "e2"]);
+    let x = b.req(0, "e1")?.as_bool().map_err(Signal::error)?;
+    let y = b.req(1, "e2")?.as_bool().map_err(Signal::error)?;
+    Ok(RVal::scalar_bool(x && y))
+}
+
+fn or2_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["e1", "e2"]);
+    let x = b.req(0, "e1")?.as_bool().map_err(Signal::error)?;
+    let y = b.req(1, "e2")?.as_bool().map_err(Signal::error)?;
+    Ok(RVal::scalar_bool(x || y))
+}
+
+fn not_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?;
+    let d = x.as_dbl_vec().map_err(Signal::error)?;
+    Ok(RVal::lgl(d.into_iter().map(|v| v == 0.0).collect()))
+}
+
+fn range_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["from", "to"]);
+    let from = b.req(0, "from")?.as_f64().map_err(Signal::error)?;
+    let to = b.req(1, "to")?.as_f64().map_err(Signal::error)?;
+    let mut out = Vec::new();
+    if from <= to {
+        let mut x = from;
+        while x <= to + 1e-9 {
+            out.push(x as i64);
+            x += 1.0;
+        }
+    } else {
+        let mut x = from;
+        while x >= to - 1e-9 {
+            out.push(x as i64);
+            x -= 1.0;
+        }
+    }
+    Ok(RVal::int(out))
+}
+
+fn in_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "table"]);
+    let x = b.req(0, "x")?.as_str_vec().map_err(Signal::error)?;
+    let table = b.req(1, "table")?.as_str_vec().map_err(Signal::error)?;
+    Ok(RVal::lgl(x.iter().map(|e| table.contains(e)).collect()))
+}
+
+macro_rules! unary {
+    ($name:ident, $f:expr) => {
+        fn $name(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+            let x = args.bind(&["x"]).req(0, "x")?;
+            let d = x.as_dbl_vec().map_err(Signal::error)?;
+            let names = x.names().map(|n| n.to_vec());
+            Ok(RVal::Dbl(RVec { vals: d.into_iter().map($f).collect(), names }))
+        }
+    };
+}
+
+unary!(sqrt_fn, |x: f64| x.sqrt());
+unary!(exp_fn, |x: f64| x.exp());
+unary!(log2_fn, |x: f64| x.log2());
+unary!(log10_fn, |x: f64| x.log10());
+unary!(abs_fn, |x: f64| x.abs());
+unary!(floor_fn, |x: f64| x.floor());
+unary!(ceiling_fn, |x: f64| x.ceil());
+unary!(sin_fn, |x: f64| x.sin());
+unary!(cos_fn, |x: f64| x.cos());
+
+fn log_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "base"]);
+    let x = b.req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    match b.opt(1) {
+        Some(base) => {
+            let base = base.as_f64().map_err(Signal::error)?;
+            Ok(RVal::dbl(x.into_iter().map(|v| v.log(base)).collect()))
+        }
+        None => Ok(RVal::dbl(x.into_iter().map(|v| v.ln()).collect())),
+    }
+}
+
+fn round_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "digits"]);
+    let x = b.req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    let digits =
+        b.opt(1).map(|v| v.as_i64()).transpose().map_err(Signal::error)?.unwrap_or(0);
+    let scale = 10f64.powi(digits as i32);
+    Ok(RVal::dbl(x.into_iter().map(|v| (v * scale).round() / scale).collect()))
+}
+
+fn sum_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let mut s = 0.0;
+    for (_, v) in &args.items {
+        for x in v.as_dbl_vec().map_err(Signal::error)? {
+            s += x;
+        }
+    }
+    Ok(RVal::scalar_dbl(s))
+}
+
+fn prod_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let mut p = 1.0;
+    for (_, v) in &args.items {
+        for x in v.as_dbl_vec().map_err(Signal::error)? {
+            p *= x;
+        }
+    }
+    Ok(RVal::scalar_dbl(p))
+}
+
+fn mean_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    if x.is_empty() {
+        return Ok(RVal::scalar_dbl(f64::NAN));
+    }
+    Ok(RVal::scalar_dbl(x.iter().sum::<f64>() / x.len() as f64))
+}
+
+fn cumsum_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    let mut s = 0.0;
+    Ok(RVal::dbl(
+        x.into_iter()
+            .map(|v| {
+                s += v;
+                s
+            })
+            .collect(),
+    ))
+}
+
+fn median_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let mut x = args.bind(&["x"]).req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    if x.is_empty() {
+        return Ok(RVal::scalar_dbl(f64::NAN));
+    }
+    x.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = x.len();
+    let m = if n % 2 == 1 { x[n / 2] } else { (x[n / 2 - 1] + x[n / 2]) / 2.0 };
+    Ok(RVal::scalar_dbl(m))
+}
+
+fn var_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    Ok(RVal::scalar_dbl(variance(&x)))
+}
+
+fn sd_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    Ok(RVal::scalar_dbl(variance(&x).sqrt()))
+}
+
+pub fn variance(x: &[f64]) -> f64 {
+    if x.len() < 2 {
+        return f64::NAN;
+    }
+    let m = x.iter().sum::<f64>() / x.len() as f64;
+    x.iter().map(|v| (v - m).powi(2)).sum::<f64>() / (x.len() as f64 - 1.0)
+}
+
+fn quantile_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "probs"]);
+    let mut x = b.req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    let probs = b
+        .opt(1)
+        .map(|v| v.as_dbl_vec())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or_else(|| vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+    x.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    if x.is_empty() {
+        return Err(Signal::error("quantile of empty vector"));
+    }
+    // Type-7 quantiles (R default).
+    let q: Vec<f64> = probs
+        .iter()
+        .map(|&p| {
+            let h = (x.len() as f64 - 1.0) * p;
+            let lo = h.floor() as usize;
+            let hi = h.ceil() as usize;
+            x[lo] + (h - lo as f64) * (x[hi.min(x.len() - 1)] - x[lo])
+        })
+        .collect();
+    Ok(RVal::dbl(q))
+}
+
+fn weighted_mean_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "w"]);
+    let x = b.req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    let w = b.req(1, "w")?.as_dbl_vec().map_err(Signal::error)?;
+    if x.len() != w.len() {
+        return Err(Signal::error("'x' and 'w' must have the same length"));
+    }
+    let sw: f64 = w.iter().sum();
+    let s: f64 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+    Ok(RVal::scalar_dbl(s / sw))
+}
+
+fn cor_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "y"]);
+    let x = b.req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    let y = b.req(1, "y")?.as_dbl_vec().map_err(Signal::error)?;
+    if x.len() != y.len() || x.len() < 2 {
+        return Err(Signal::error("incompatible dimensions in cor()"));
+    }
+    let mx = x.iter().sum::<f64>() / x.len() as f64;
+    let my = y.iter().sum::<f64>() / y.len() as f64;
+    let cov: f64 = x.iter().zip(&y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let vx: f64 = x.iter().map(|a| (a - mx).powi(2)).sum();
+    let vy: f64 = y.iter().map(|b| (b - my).powi(2)).sum();
+    Ok(RVal::scalar_dbl(cov / (vx.sqrt() * vy.sqrt())))
+}
+
+fn range_summary_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for (_, v) in &args.items {
+        for x in v.as_dbl_vec().map_err(Signal::error)? {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+    }
+    Ok(RVal::dbl(vec![lo, hi]))
+}
+
+fn pmin_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["e1", "e2"]);
+    binop(&b.req(0, "e1")?, &b.req(1, "e2")?, f64::min)
+}
+
+fn pmax_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["e1", "e2"]);
+    binop(&b.req(0, "e1")?, &b.req(1, "e2")?, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn recycling() {
+        assert_eq!(run("1:4 + 1"), RVal::dbl(vec![2.0, 3.0, 4.0, 5.0]));
+        assert_eq!(run("c(1, 2, 3, 4) * c(1, 2)"), RVal::dbl(vec![1.0, 4.0, 3.0, 8.0]));
+    }
+
+    #[test]
+    fn summaries() {
+        assert_eq!(run("mean(1:10)"), RVal::scalar_dbl(5.5));
+        assert_eq!(run("median(c(1, 9, 5))"), RVal::scalar_dbl(5.0));
+        assert_eq!(run("sd(c(2, 4, 4, 4, 5, 5, 7, 9))").as_f64().unwrap().round(), 2.0);
+    }
+
+    #[test]
+    fn descending_range() {
+        assert_eq!(run("3:1"), RVal::int(vec![3, 2, 1]));
+    }
+
+    #[test]
+    fn string_equality() {
+        assert_eq!(run("\"a\" == \"a\""), RVal::scalar_bool(true));
+        assert_eq!(run("\"a\" != \"b\""), RVal::scalar_bool(true));
+    }
+
+    #[test]
+    fn in_operator() {
+        assert_eq!(run("2 %in% c(1, 2, 3)"), RVal::lgl(vec![true]));
+    }
+
+    #[test]
+    fn weighted_mean() {
+        assert_eq!(run("weighted.mean(c(1, 3), c(1, 3))"), RVal::scalar_dbl(2.5));
+    }
+
+    #[test]
+    fn quantile_type7() {
+        let v = run("quantile(1:5, probs = c(0, 0.5, 1))");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![1.0, 3.0, 5.0]);
+    }
+}

@@ -1,0 +1,278 @@
+//! Builtin registry.
+//!
+//! Every callable that is not a user closure lives here, tagged with its
+//! originating *namespace* ("package"). The namespace tag is what the
+//! futurize transpiler uses for **function identification** (paper §3.2,
+//! step 2): `lapply` resolves to `base::lapply`, `map` to `purrr::map`,
+//! and transpiler lookup is keyed on `(namespace, name)`.
+//!
+//! Builtins come in two kinds:
+//! - `Normal` — arguments are evaluated before the call (most functions);
+//! - `Special` — receives the raw argument [`Expr`]s (NSE): `futurize()`,
+//!   `quote()`, `suppressMessages()`, `tryCatch()`, `%do%`, `local()`, ...
+
+use std::collections::HashMap;
+
+use once_cell::sync::Lazy;
+
+use super::ast::Arg;
+use super::env::EnvRef;
+use super::eval::{EvalResult, Interp, Signal};
+use super::value::RVal;
+
+pub mod control;
+pub mod core;
+pub mod io;
+pub mod math;
+pub mod stats_rng;
+
+/// Evaluated arguments of a Normal builtin call.
+#[derive(Clone, Debug)]
+pub struct Args {
+    pub items: Vec<(Option<String>, RVal)>,
+}
+
+/// Result of matching arguments against a parameter list.
+pub struct Bound {
+    pub vals: Vec<Option<RVal>>,
+    /// Unmatched arguments, in order (the `...` of the call).
+    pub rest: Vec<(Option<String>, RVal)>,
+}
+
+impl Args {
+    pub fn new(items: Vec<(Option<String>, RVal)>) -> Self {
+        Args { items }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// R-style argument matching: named arguments bind by exact name;
+    /// unnamed arguments fill the remaining parameters left-to-right;
+    /// everything else lands in `rest`.
+    pub fn bind(&self, params: &[&str]) -> Bound {
+        let mut vals: Vec<Option<RVal>> = vec![None; params.len()];
+        let mut rest = Vec::new();
+        let mut positional: Vec<RVal> = Vec::new();
+        for (name, val) in &self.items {
+            match name {
+                Some(n) => match params.iter().position(|p| p == n) {
+                    Some(idx) => vals[idx] = Some(val.clone()),
+                    None => rest.push((Some(n.clone()), val.clone())),
+                },
+                None => positional.push(val.clone()),
+            }
+        }
+        let mut pos = positional.into_iter();
+        for (idx, _) in params.iter().enumerate() {
+            if vals[idx].is_none() {
+                if let Some(v) = pos.next() {
+                    vals[idx] = Some(v);
+                }
+            }
+        }
+        for v in pos {
+            rest.push((None, v));
+        }
+        Bound { vals, rest }
+    }
+
+    /// Named argument lookup (no positional fallback).
+    pub fn named(&self, name: &str) -> Option<&RVal> {
+        self.items
+            .iter()
+            .find(|(n, _)| n.as_deref() == Some(name))
+            .map(|(_, v)| v)
+    }
+
+    /// All positional (unnamed) arguments, in order.
+    pub fn positional(&self) -> Vec<&RVal> {
+        self.items.iter().filter(|(n, _)| n.is_none()).map(|(_, v)| v).collect()
+    }
+}
+
+impl Bound {
+    pub fn req(&self, i: usize, what: &str) -> Result<RVal, Signal> {
+        self.vals
+            .get(i)
+            .and_then(|v| v.clone())
+            .ok_or_else(|| Signal::error(format!("argument \"{what}\" is missing, with no default")))
+    }
+    pub fn opt(&self, i: usize) -> Option<RVal> {
+        self.vals.get(i).and_then(|v| v.clone())
+    }
+}
+
+/// A builtin implementation. Boxed closures allow families of related
+/// functions (purrr's 20+ map variants, furrr's mirrors) to be
+/// mass-registered from parameterized templates.
+pub enum BuiltinFn {
+    Normal(Box<dyn Fn(&mut Interp, Args, &EnvRef) -> EvalResult + Send + Sync>),
+    Special(Box<dyn Fn(&mut Interp, &[Arg], &EnvRef) -> EvalResult + Send + Sync>),
+}
+
+/// A registered builtin.
+pub struct BuiltinDef {
+    pub name: &'static str,
+    pub pkg: &'static str,
+    pub f: BuiltinFn,
+}
+
+impl BuiltinDef {
+    pub fn key(&self) -> String {
+        format!("{}::{}", self.pkg, self.name)
+    }
+}
+
+/// The global registry, keyed by `"pkg::name"`, plus an unqualified-name
+/// index (first registration wins — base R registers first, mirroring R's
+/// search path).
+pub struct Registry {
+    pub by_key: HashMap<String, BuiltinDef>,
+    pub by_name: HashMap<&'static str, String>,
+    /// Registration order of packages (for `futurize_supported_packages`).
+    pub packages: Vec<&'static str>,
+}
+
+impl Registry {
+    fn register(&mut self, def: BuiltinDef) {
+        if !self.packages.contains(&def.pkg) {
+            self.packages.push(def.pkg);
+        }
+        self.by_name.entry(def.name).or_insert_with(|| def.key());
+        let key = def.key();
+        let prev = self.by_key.insert(key.clone(), def);
+        debug_assert!(prev.is_none(), "duplicate builtin {key}");
+    }
+}
+
+/// Registration helper used by every module that contributes builtins.
+pub struct Reg<'a>(pub &'a mut Registry);
+
+impl<'a> Reg<'a> {
+    pub fn normal(
+        &mut self,
+        pkg: &'static str,
+        name: &'static str,
+        f: impl Fn(&mut Interp, Args, &EnvRef) -> EvalResult + Send + Sync + 'static,
+    ) {
+        self.0.register(BuiltinDef { name, pkg, f: BuiltinFn::Normal(Box::new(f)) });
+    }
+    pub fn special(
+        &mut self,
+        pkg: &'static str,
+        name: &'static str,
+        f: impl Fn(&mut Interp, &[Arg], &EnvRef) -> EvalResult + Send + Sync + 'static,
+    ) {
+        self.0.register(BuiltinDef { name, pkg, f: BuiltinFn::Special(Box::new(f)) });
+    }
+}
+
+static REGISTRY: Lazy<Registry> = Lazy::new(|| {
+    let mut reg = Registry {
+        by_key: HashMap::new(),
+        by_name: HashMap::new(),
+        packages: Vec::new(),
+    };
+    {
+        let mut r = Reg(&mut reg);
+        // Order matters for unqualified-name resolution: base first.
+        core::register(&mut r);
+        math::register(&mut r);
+        io::register(&mut r);
+        control::register(&mut r);
+        stats_rng::register(&mut r);
+        // Upper layers (same crate, higher-level modules).
+        crate::future_core::register_builtins(&mut r);
+        crate::transpile::register_builtins(&mut r);
+        crate::apis::register_builtins(&mut r);
+        crate::domains::register_builtins(&mut r);
+        crate::progress::register_builtins(&mut r);
+        crate::runtime::register_builtins(&mut r);
+    }
+    reg
+});
+
+pub fn registry() -> &'static Registry {
+    &REGISTRY
+}
+
+/// Resolve an unqualified name to its builtin (search-path order).
+pub fn lookup_builtin(name: &str) -> Option<&'static BuiltinDef> {
+    let key = REGISTRY.by_name.get(name)?;
+    REGISTRY.by_key.get(key)
+}
+
+/// Resolve `pkg::name`.
+pub fn lookup_builtin_ns(pkg: &str, name: &str) -> Option<&'static BuiltinDef> {
+    REGISTRY.by_key.get(&format!("{pkg}::{name}"))
+}
+
+/// Resolve a registry key (`"pkg::name"`).
+pub fn get_builtin(key: &str) -> Option<&'static BuiltinDef> {
+    REGISTRY.by_key.get(key)
+}
+
+/// The namespace a function name belongs to, if it is a builtin — used by
+/// the transpiler's function-identification step.
+pub fn namespace_of(name: &str) -> Option<&'static str> {
+    lookup_builtin(name).map(|d| d.pkg)
+}
+
+/// All functions registered under a package (for
+/// `futurize_supported_functions()` display and Table-1/2 coverage tests).
+pub fn functions_in_package(pkg: &str) -> Vec<&'static str> {
+    let mut out: Vec<&'static str> = REGISTRY
+        .by_key
+        .values()
+        .filter(|d| d.pkg == pkg)
+        .map(|d| d.name)
+        .collect();
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_registers_before_others() {
+        let d = lookup_builtin("lapply").expect("lapply registered");
+        assert_eq!(d.pkg, "base");
+    }
+
+    #[test]
+    fn namespaced_lookup() {
+        assert!(lookup_builtin_ns("base", "lapply").is_some());
+        assert!(lookup_builtin_ns("purrr", "map").is_some());
+        assert!(lookup_builtin_ns("nosuch", "lapply").is_none());
+    }
+
+    #[test]
+    fn args_bind_matches_r_semantics() {
+        let args = Args::new(vec![
+            (Some("n".into()), RVal::scalar_dbl(3.0)),
+            (None, RVal::scalar_dbl(2.0)),
+        ]);
+        let b = args.bind(&["x", "n"]);
+        assert_eq!(b.req(0, "x").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(b.req(1, "n").unwrap().as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn args_bind_collects_rest() {
+        let args = Args::new(vec![
+            (None, RVal::scalar_dbl(1.0)),
+            (None, RVal::scalar_dbl(2.0)),
+            (Some("extra".into()), RVal::scalar_bool(true)),
+        ]);
+        let b = args.bind(&["x"]);
+        assert_eq!(b.rest.len(), 2);
+    }
+}

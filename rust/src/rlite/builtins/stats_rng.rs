@@ -1,0 +1,185 @@
+//! Random-number builtins, backed by the MRG32k3a stream in the
+//! interpreter. Every call sets `rng_used`, which is how the futureverse
+//! detects "RNG used without `seed = TRUE`" misuse (paper §5.2).
+
+use super::{Args, Reg};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::RVal;
+use crate::rng::RngStream;
+
+pub fn register(r: &mut Reg) {
+    r.normal("base", "set.seed", set_seed_fn);
+    r.normal("stats", "rnorm", rnorm_fn);
+    r.normal("stats", "runif", runif_fn);
+    r.normal("stats", "rexp", rexp_fn);
+    r.normal("stats", "rbinom", rbinom_fn);
+    r.normal("stats", "rpois", rpois_fn);
+    r.normal("base", "sample", sample_fn);
+    r.normal("base", "sample.int", sample_int_fn);
+}
+
+fn set_seed_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let seed = args.bind(&["seed"]).req(0, "seed")?.as_i64().map_err(Signal::error)?;
+    i.rng = RngStream::from_seed(seed as u64);
+    Ok(RVal::Null)
+}
+
+fn rnorm_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["n", "mean", "sd"]);
+    let n = b.req(0, "n")?.as_usize().map_err(Signal::error)?;
+    let mean = b.opt(1).map(|v| v.as_f64()).transpose().map_err(Signal::error)?.unwrap_or(0.0);
+    let sd = b.opt(2).map(|v| v.as_f64()).transpose().map_err(Signal::error)?.unwrap_or(1.0);
+    i.rng_used = true;
+    let out: Vec<f64> = (0..n).map(|_| mean + sd * i.rng.next_normal()).collect();
+    Ok(RVal::dbl(out))
+}
+
+fn runif_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["n", "min", "max"]);
+    let n = b.req(0, "n")?.as_usize().map_err(Signal::error)?;
+    let lo = b.opt(1).map(|v| v.as_f64()).transpose().map_err(Signal::error)?.unwrap_or(0.0);
+    let hi = b.opt(2).map(|v| v.as_f64()).transpose().map_err(Signal::error)?.unwrap_or(1.0);
+    i.rng_used = true;
+    let out: Vec<f64> = (0..n).map(|_| lo + (hi - lo) * i.rng.next_f64()).collect();
+    Ok(RVal::dbl(out))
+}
+
+fn rexp_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["n", "rate"]);
+    let n = b.req(0, "n")?.as_usize().map_err(Signal::error)?;
+    let rate = b.opt(1).map(|v| v.as_f64()).transpose().map_err(Signal::error)?.unwrap_or(1.0);
+    i.rng_used = true;
+    let out: Vec<f64> = (0..n).map(|_| -i.rng.next_f64().ln() / rate).collect();
+    Ok(RVal::dbl(out))
+}
+
+fn rbinom_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["n", "size", "prob"]);
+    let n = b.req(0, "n")?.as_usize().map_err(Signal::error)?;
+    let size = b.req(1, "size")?.as_usize().map_err(Signal::error)?;
+    let prob = b.req(2, "prob")?.as_f64().map_err(Signal::error)?;
+    i.rng_used = true;
+    let out: Vec<f64> = (0..n)
+        .map(|_| (0..size).filter(|_| i.rng.next_f64() < prob).count() as f64)
+        .collect();
+    Ok(RVal::dbl(out))
+}
+
+fn rpois_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["n", "lambda"]);
+    let n = b.req(0, "n")?.as_usize().map_err(Signal::error)?;
+    let lambda = b.req(1, "lambda")?.as_f64().map_err(Signal::error)?;
+    i.rng_used = true;
+    // Knuth's algorithm (fine for the small lambdas in examples).
+    let out: Vec<f64> = (0..n)
+        .map(|_| {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= i.rng.next_f64();
+                if p <= l {
+                    break;
+                }
+                k += 1;
+            }
+            k as f64
+        })
+        .collect();
+    Ok(RVal::dbl(out))
+}
+
+fn sample_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "size", "replace"]);
+    let x = b.req(0, "x")?;
+    // sample(n) == sample(1:n) for scalar n > 1.
+    let pool: Vec<RVal> = if x.len() == 1 && matches!(x, RVal::Dbl(_) | RVal::Int(_)) {
+        let n = x.as_usize().map_err(Signal::error)?;
+        (1..=n as i64).map(RVal::scalar_int).collect()
+    } else {
+        x.iter_elements()
+    };
+    let size = b
+        .opt(1)
+        .filter(|v| !v.is_null())
+        .map(|v| v.as_usize())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or(pool.len());
+    let replace =
+        b.opt(2).map(|v| v.as_bool()).transpose().map_err(Signal::error)?.unwrap_or(false);
+    i.rng_used = true;
+    if pool.is_empty() {
+        return Ok(RVal::Null);
+    }
+    let mut out: Vec<RVal> = Vec::with_capacity(size);
+    if replace {
+        for _ in 0..size {
+            out.push(pool[i.rng.next_below(pool.len())].clone());
+        }
+    } else {
+        if size > pool.len() {
+            return Err(Signal::error("cannot take a sample larger than the population"));
+        }
+        // Fisher-Yates over indices.
+        let mut idx: Vec<usize> = (0..pool.len()).collect();
+        for k in 0..size {
+            let j = k + i.rng.next_below(idx.len() - k);
+            idx.swap(k, j);
+            out.push(pool[idx[k]].clone());
+        }
+    }
+    super::core::combine(out.into_iter().map(|v| (None, v)).collect())
+}
+
+fn sample_int_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
+    sample_fn(i, args, env)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn set_seed_reproduces() {
+        let a = run("set.seed(42)\nrnorm(5)");
+        let b = run("set.seed(42)\nrnorm(5)");
+        assert_eq!(a, b);
+        let c = run("set.seed(43)\nrnorm(5)");
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn runif_in_range() {
+        let v = run("set.seed(1)\nrunif(100, 2, 3)").as_dbl_vec().unwrap();
+        assert!(v.iter().all(|&x| (2.0..3.0).contains(&x)));
+    }
+
+    #[test]
+    fn sample_without_replacement_is_permutation() {
+        let mut v = run("set.seed(1)\nsample(10)").as_dbl_vec().unwrap();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(v, (1..=10).map(|x| x as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_with_replacement_size() {
+        let v = run("set.seed(1)\nsample(3, size = 50, replace = TRUE)").as_dbl_vec().unwrap();
+        assert_eq!(v.len(), 50);
+        assert!(v.iter().all(|&x| (1.0..=3.0).contains(&x)));
+    }
+
+    #[test]
+    fn rng_used_flag_set() {
+        let mut i = Interp::new();
+        assert!(!i.rng_used);
+        i.eval_program("rnorm(1)").unwrap();
+        assert!(i.rng_used);
+    }
+}

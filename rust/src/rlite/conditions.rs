@@ -1,0 +1,178 @@
+//! The rlite condition system.
+//!
+//! Section 4.9 of the paper ("Familiar behavior of stdout and condition
+//! handling") is a headline feature of the future ecosystem: output and
+//! conditions produced on parallel workers are captured there and
+//! *relayed as-is* in the parent session, where they can be handled with
+//! the ordinary sequential tools (`suppressMessages()`, `tryCatch()`,
+//! ...). This module defines the condition objects, the capture record a
+//! worker produces, and the severity taxonomy; the handler stack lives in
+//! the interpreter ([`crate::rlite::eval`]).
+
+use serde_derive::{Deserialize, Serialize};
+
+/// Condition severity (drives default side effects and relay behaviour).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Serialize, Deserialize)]
+pub enum Severity {
+    /// `message()` — printed to stderr, continues.
+    Message,
+    /// `warning()` — collected, continues.
+    Warning,
+    /// `stop()` — aborts evaluation.
+    Error,
+    /// A custom signaled condition (e.g. progress updates) — inert unless
+    /// a handler/collector is interested.
+    Custom,
+}
+
+/// A condition object. `classes` mirrors R's condition class vector,
+/// most-specific first (e.g. `["progress", "condition"]`).
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub struct RCondition {
+    pub severity: Severity,
+    pub message: String,
+    pub classes: Vec<String>,
+    /// Call text for error messages ("Error in f(x): ..."), if known.
+    pub call: Option<String>,
+    /// Structured payload for custom conditions (e.g. progress step).
+    pub data: Option<crate::wire::JsonValue>,
+}
+
+impl RCondition {
+    pub fn message_cond(msg: impl Into<String>) -> Self {
+        RCondition {
+            severity: Severity::Message,
+            message: msg.into(),
+            classes: vec!["simpleMessage".into(), "message".into(), "condition".into()],
+            call: None,
+            data: None,
+        }
+    }
+
+    pub fn warning_cond(msg: impl Into<String>) -> Self {
+        RCondition {
+            severity: Severity::Warning,
+            message: msg.into(),
+            classes: vec!["simpleWarning".into(), "warning".into(), "condition".into()],
+            call: None,
+            data: None,
+        }
+    }
+
+    pub fn error_cond(msg: impl Into<String>) -> Self {
+        RCondition {
+            severity: Severity::Error,
+            message: msg.into(),
+            classes: vec!["simpleError".into(), "error".into(), "condition".into()],
+            call: None,
+            data: None,
+        }
+    }
+
+    pub fn custom(class: &str, msg: impl Into<String>, data: Option<crate::wire::JsonValue>) -> Self {
+        RCondition {
+            severity: Severity::Custom,
+            message: msg.into(),
+            classes: vec![class.to_string(), "condition".into()],
+            call: None,
+            data,
+        }
+    }
+
+    pub fn with_call(mut self, call: impl Into<String>) -> Self {
+        self.call = Some(call.into());
+        self
+    }
+
+    /// Most specific class.
+    pub fn primary_class(&self) -> &str {
+        self.classes.first().map(String::as_str).unwrap_or("condition")
+    }
+
+    /// Does this condition inherit from `class`?
+    pub fn inherits(&self, class: &str) -> bool {
+        self.classes.iter().any(|c| c == class)
+    }
+
+    /// Render the default display (what an unhandled condition prints).
+    pub fn render(&self) -> String {
+        match self.severity {
+            Severity::Message => self.message.clone(),
+            Severity::Warning => format!("Warning message:\n{}", self.message),
+            Severity::Error => match &self.call {
+                Some(call) => format!("Error in {}: {}", call, self.message),
+                None => format!("Error: {}", self.message),
+            },
+            Severity::Custom => self.message.clone(),
+        }
+    }
+}
+
+/// Everything a worker captured while evaluating a task, shipped back to
+/// the parent verbatim so it can be relayed "as-is" (paper §4.9). This is
+/// the future-ecosystem `FutureResult` analog.
+#[derive(Clone, Debug, Default, PartialEq, Serialize, Deserialize)]
+pub struct CaptureLog {
+    /// Captured stdout, in order (from `cat()`, `print()`, ...).
+    pub stdout: String,
+    /// Captured conditions, in signal order (messages, warnings, custom
+    /// conditions such as progress updates).
+    pub conditions: Vec<RCondition>,
+    /// Whether the task consumed random numbers (for the paper's
+    /// "RNG used without seed = TRUE" misuse warning).
+    pub rng_used: bool,
+}
+
+impl CaptureLog {
+    pub fn is_empty(&self) -> bool {
+        self.stdout.is_empty() && self.conditions.is_empty()
+    }
+
+    pub fn merge(&mut self, other: CaptureLog) {
+        self.stdout.push_str(&other.stdout);
+        self.conditions.extend(other.conditions);
+        self.rng_used |= other.rng_used;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inherits_and_primary_class() {
+        let c = RCondition::message_cond("hi");
+        assert!(c.inherits("message"));
+        assert!(c.inherits("condition"));
+        assert!(!c.inherits("warning"));
+        assert_eq!(c.primary_class(), "simpleMessage");
+    }
+
+    #[test]
+    fn error_render_with_call() {
+        let c = RCondition::error_cond("boom").with_call("f(x)");
+        assert_eq!(c.render(), "Error in f(x): boom");
+    }
+
+    #[test]
+    fn capture_log_merge() {
+        let mut a = CaptureLog { stdout: "a".into(), ..Default::default() };
+        let b = CaptureLog {
+            stdout: "b".into(),
+            conditions: vec![RCondition::warning_cond("w")],
+            rng_used: true,
+        };
+        a.merge(b);
+        assert_eq!(a.stdout, "ab");
+        assert_eq!(a.conditions.len(), 1);
+        assert!(a.rng_used);
+    }
+
+    #[test]
+    fn serde_roundtrip() {
+        let c = RCondition::custom("progress", "step", Some(crate::wire::JsonValue::obj(vec![("amount", crate::wire::JsonValue::num(1.0))])));
+        let s = crate::wire::to_string(&c).unwrap();
+        let back: RCondition = crate::wire::from_str(&s).unwrap();
+        assert_eq!(c, back);
+    }
+}

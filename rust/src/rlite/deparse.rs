@@ -1,0 +1,148 @@
+//! Deparse: render an [`Expr`] back to source text.
+//!
+//! Used by `futurize(eval = FALSE)` — the paper's introspection hook that
+//! returns the transpiled call without evaluating it — and by error
+//! messages ("Error in f(x): ...").
+
+use super::ast::{Arg, Expr};
+
+/// Render an expression as (approximately) the source that produced it.
+pub fn deparse(e: &Expr) -> String {
+    match e {
+        Expr::Null => "NULL".into(),
+        Expr::Bool(b) => if *b { "TRUE" } else { "FALSE" }.into(),
+        Expr::Int(v) => format!("{v}L"),
+        Expr::Num(v) => super::value::format_dbl(*v),
+        Expr::Str(s) => format!("{s:?}"),
+        Expr::Sym(s) => s.clone(),
+        Expr::Ns { pkg, name } => format!("{pkg}::{name}"),
+        Expr::Dots => "...".into(),
+        Expr::Missing => String::new(),
+        Expr::Break => "break".into(),
+        Expr::Next => "next".into(),
+        Expr::Call { func, args } => deparse_call(func, args),
+        Expr::Function { params, body } => {
+            let ps = params
+                .iter()
+                .map(|p| match &p.default {
+                    Some(d) => format!("{} = {}", p.name, deparse(d)),
+                    None => p.name.clone(),
+                })
+                .collect::<Vec<_>>()
+                .join(", ");
+            format!("function({ps}) {}", deparse(body))
+        }
+        Expr::Block(stmts) => {
+            let inner = stmts.iter().map(deparse).collect::<Vec<_>>().join("; ");
+            format!("{{ {inner} }}")
+        }
+        Expr::If { cond, then, els } => match els {
+            Some(e2) => format!("if ({}) {} else {}", deparse(cond), deparse(then), deparse(e2)),
+            None => format!("if ({}) {}", deparse(cond), deparse(then)),
+        },
+        Expr::For { var, seq, body } => {
+            format!("for ({var} in {}) {}", deparse(seq), deparse(body))
+        }
+        Expr::While { cond, body } => format!("while ({}) {}", deparse(cond), deparse(body)),
+        Expr::Assign { target, value } => format!("{} <- {}", deparse(target), deparse(value)),
+        Expr::SuperAssign { target, value } => {
+            format!("{} <<- {}", deparse(target), deparse(value))
+        }
+        Expr::Index { obj, args, double } => {
+            let inner = args.iter().map(deparse_arg).collect::<Vec<_>>().join(", ");
+            if *double {
+                format!("{}[[{}]]", deparse(obj), inner)
+            } else {
+                format!("{}[{}]", deparse(obj), inner)
+            }
+        }
+        Expr::Dollar { obj, name } => format!("{}${}", deparse(obj), name),
+    }
+}
+
+fn deparse_arg(a: &Arg) -> String {
+    match &a.name {
+        Some(n) => format!("{n} = {}", deparse(&a.value)),
+        None => deparse(&a.value),
+    }
+}
+
+const BINARY_OPS: &[&str] = &[
+    "+", "-", "*", "/", "^", "==", "!=", "<", ">", "<=", ">=", "&", "&&", "|", "||", ":",
+];
+
+fn deparse_call(func: &Expr, args: &[Arg]) -> String {
+    if let Expr::Sym(name) = func {
+        // Binary / unary operators print in infix form.
+        if BINARY_OPS.contains(&name.as_str()) && args.len() == 2 {
+            return format!("{} {} {}", deparse(&args[0].value), name, deparse(&args[1].value));
+        }
+        if (name == "-" || name == "!" || name == "+") && args.len() == 1 {
+            return format!("{name}{}", deparse(&args[0].value));
+        }
+        if name.starts_with('%') && name.ends_with('%') && args.len() == 2 {
+            return format!("{} {} {}", deparse(&args[0].value), name, deparse(&args[1].value));
+        }
+        if name == "(" && args.len() == 1 {
+            return format!("({})", deparse(&args[0].value));
+        }
+    }
+    let inner = args.iter().map(deparse_arg).collect::<Vec<_>>().join(", ");
+    format!("{}({})", deparse(func), inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse_expr;
+    use super::*;
+
+    fn roundtrip(src: &str) -> String {
+        deparse(&parse_expr(src).unwrap())
+    }
+
+    #[test]
+    fn deparses_calls() {
+        assert_eq!(roundtrip("lapply(xs, fcn)"), "lapply(xs, fcn)");
+        assert_eq!(roundtrip("map(xs, f, n = 10)"), "map(xs, f, n = 10)");
+    }
+
+    #[test]
+    fn deparses_namespaced() {
+        assert_eq!(
+            roundtrip("future.apply::future_lapply(xs, fcn)"),
+            "future.apply::future_lapply(xs, fcn)"
+        );
+    }
+
+    #[test]
+    fn deparses_infix() {
+        assert_eq!(roundtrip("x + y * 2"), "x + y * 2");
+        assert_eq!(roundtrip("foreach(x = xs) %do% { f(x) }"), "foreach(x = xs) %do% { f(x) }");
+    }
+
+    #[test]
+    fn deparses_function() {
+        assert_eq!(roundtrip("function(x) x^2"), "function(x) x ^ 2");
+    }
+
+    #[test]
+    fn pipe_deparses_in_desugared_form() {
+        // The pipe desugars at parse time, as in R; deparse shows the call.
+        assert_eq!(roundtrip("xs |> f()"), "f(xs)");
+    }
+
+    #[test]
+    fn reparse_of_deparse_is_stable() {
+        for src in [
+            "lapply(xs, function(x) x + 1)",
+            "if (a > 1) f(a) else g(a)",
+            "for (i in 1:10) s <- s + i",
+            "x[[2]]",
+            "df$col",
+        ] {
+            let once = roundtrip(src);
+            let twice = deparse(&parse_expr(&once).unwrap());
+            assert_eq!(once, twice);
+        }
+    }
+}

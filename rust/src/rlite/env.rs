@@ -1,0 +1,97 @@
+//! Lexically scoped environments.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::value::RVal;
+
+/// A single environment frame: bindings plus an optional parent.
+#[derive(Debug, Default)]
+pub struct Env {
+    pub vars: HashMap<String, RVal>,
+    pub parent: Option<EnvRef>,
+}
+
+pub type EnvRef = Rc<RefCell<Env>>;
+
+impl Env {
+    pub fn new_ref() -> EnvRef {
+        Rc::new(RefCell::new(Env::default()))
+    }
+
+    pub fn child_of(parent: &EnvRef) -> EnvRef {
+        Rc::new(RefCell::new(Env { vars: HashMap::new(), parent: Some(parent.clone()) }))
+    }
+}
+
+/// Look a symbol up through the environment chain.
+pub fn lookup(env: &EnvRef, name: &str) -> Option<RVal> {
+    let mut cur = env.clone();
+    loop {
+        if let Some(v) = cur.borrow().vars.get(name) {
+            return Some(v.clone());
+        }
+        let parent = cur.borrow().parent.clone();
+        match parent {
+            Some(p) => cur = p,
+            None => return None,
+        }
+    }
+}
+
+/// Bind `name` in the *current* frame (R's `<-` at local scope).
+pub fn define(env: &EnvRef, name: &str, val: RVal) {
+    env.borrow_mut().vars.insert(name.to_string(), val);
+}
+
+/// `exists()` through the chain.
+pub fn exists(env: &EnvRef, name: &str) -> bool {
+    lookup(env, name).is_some()
+}
+
+/// All bindings visible from `env` (outermost shadowed by innermost);
+/// used by `eapply()` and globals export.
+pub fn flatten(env: &EnvRef) -> Vec<(String, RVal)> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    let mut cur = Some(env.clone());
+    while let Some(e) = cur {
+        for (k, v) in e.borrow().vars.iter() {
+            if seen.insert(k.clone()) {
+                out.push((k.clone(), v.clone()));
+            }
+        }
+        cur = e.borrow().parent.clone();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_walks_chain() {
+        let root = Env::new_ref();
+        define(&root, "x", RVal::scalar_dbl(1.0));
+        let child = Env::child_of(&root);
+        assert_eq!(lookup(&child, "x"), Some(RVal::scalar_dbl(1.0)));
+        define(&child, "x", RVal::scalar_dbl(2.0));
+        assert_eq!(lookup(&child, "x"), Some(RVal::scalar_dbl(2.0)));
+        assert_eq!(lookup(&root, "x"), Some(RVal::scalar_dbl(1.0)));
+    }
+
+    #[test]
+    fn flatten_shadows() {
+        let root = Env::new_ref();
+        define(&root, "x", RVal::scalar_dbl(1.0));
+        define(&root, "y", RVal::scalar_dbl(3.0));
+        let child = Env::child_of(&root);
+        define(&child, "x", RVal::scalar_dbl(2.0));
+        let flat = flatten(&child);
+        let x = flat.iter().find(|(k, _)| k == "x").unwrap();
+        assert_eq!(x.1, RVal::scalar_dbl(2.0));
+        assert_eq!(flat.len(), 2);
+    }
+}

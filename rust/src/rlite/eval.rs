@@ -1,0 +1,1034 @@
+//! The rlite evaluator.
+//!
+//! Eager, environment-based evaluation with:
+//!
+//! - special forms (unevaluated-argument builtins) — the hook that makes
+//!   `futurize()` possible: it receives the raw [`Expr`] of its first
+//!   argument, exactly like R's `substitute()` capture;
+//! - a condition-handler stack (suppressors, calling handlers, exiting
+//!   `tryCatch` handlers, and capture collectors used on workers);
+//! - a capturable stdout sink stack;
+//! - an RNG context (MRG32k3a) with use-tracking for the paper's
+//!   "RNG used without `seed = TRUE`" misuse warning.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::ast::{Arg, Expr};
+use super::builtins::{self, Args, BuiltinFn};
+use super::conditions::{CaptureLog, RCondition, Severity};
+use super::deparse::deparse;
+use super::env::{self, Env, EnvRef};
+use super::value::{RClosure, RList, RVal};
+use crate::future_core::SessionState;
+use crate::rng::RngStream;
+
+/// Non-local control flow.
+#[derive(Clone, Debug)]
+pub enum Signal {
+    /// `stop()` or a runtime error.
+    Error(RCondition),
+    /// An exiting condition handler (tryCatch) matched: unwind to frame `id`.
+    Unwind { cond: RCondition, id: u64 },
+    Break,
+    Next,
+    Return(RVal),
+}
+
+impl Signal {
+    pub fn error(msg: impl Into<String>) -> Signal {
+        Signal::Error(RCondition::error_cond(msg))
+    }
+}
+
+pub type EvalResult = Result<RVal, Signal>;
+
+/// Where `cat()`/`print()` output goes.
+pub enum OutSink {
+    /// Real process stdout.
+    Real,
+    /// Captured into a buffer (worker tasks, `capture.output`-style tests).
+    Capture(Rc<RefCell<String>>),
+    /// Discarded.
+    Sink,
+}
+
+/// A frame on the condition-handler stack.
+pub enum HandlerFrame {
+    /// `suppressMessages()` / `suppressWarnings()`: muffle matching classes.
+    Suppress { classes: Vec<String> },
+    /// Worker-side capture: collect (and muffle) matching conditions so the
+    /// parent can relay them as-is.
+    Collect { classes: Vec<String>, sink: Rc<RefCell<Vec<RCondition>>> },
+    /// `withCallingHandlers(class = f)`: invoke `f` in place, continue.
+    Calling { class: String, func: RVal },
+    /// A Rust-side calling handler (used by backends to stream progress
+    /// conditions to the parent near-live, paper §4.10).
+    Native {
+        class: String,
+        #[allow(clippy::type_complexity)]
+        hook: Rc<RefCell<dyn FnMut(&RCondition)>>,
+    },
+    /// `tryCatch(class = f)`: unwind to the tryCatch frame with `id`.
+    Exiting { classes: Vec<String>, id: u64 },
+}
+
+/// Interpreter configuration.
+#[derive(Clone, Debug)]
+pub struct InterpConfig {
+    /// Multiplier applied to `Sys.sleep()` durations. The paper's examples
+    /// use 1-second tasks; benches scale this down to keep runs fast while
+    /// preserving the *shape* of the timing results.
+    pub time_scale: f64,
+    /// Upper bound on loop iterations (runaway-guard for property tests).
+    pub max_iter: usize,
+}
+
+impl Default for InterpConfig {
+    fn default() -> Self {
+        InterpConfig { time_scale: 1.0, max_iter: 50_000_000 }
+    }
+}
+
+/// The rlite interpreter. One per session / per worker task.
+pub struct Interp {
+    pub global: EnvRef,
+    pub out: Vec<OutSink>,
+    pub handlers: Vec<HandlerFrame>,
+    pub config: InterpConfig,
+    /// Current RNG stream (L'Ecuyer MRG32k3a).
+    pub rng: RngStream,
+    /// Set when any RNG-consuming builtin runs (misuse detection).
+    pub rng_used: bool,
+    /// futurize() global toggle (paper §2.1 "Global disable/enable").
+    pub futurize_enabled: bool,
+    /// future-ecosystem state: plan stack, backend cache, task trace.
+    pub session: SessionState,
+    /// Monotone counter for tryCatch frame ids.
+    next_frame_id: u64,
+}
+
+impl Default for Interp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Interp {
+    pub fn new() -> Self {
+        let global = Env::new_ref();
+        // Base constants.
+        env::define(&global, "pi", RVal::scalar_dbl(std::f64::consts::PI));
+        env::define(&global, "T", RVal::scalar_bool(true));
+        env::define(&global, "F", RVal::scalar_bool(false));
+        let letters: Vec<String> = ('a'..='z').map(|c| c.to_string()).collect();
+        env::define(
+            &global,
+            "LETTERS",
+            RVal::chr(letters.iter().map(|s| s.to_uppercase()).collect()),
+        );
+        env::define(&global, "letters", RVal::chr(letters));
+        Interp {
+            global,
+            out: vec![OutSink::Real],
+            handlers: Vec::new(),
+            config: InterpConfig::default(),
+            rng: RngStream::from_seed(42),
+            rng_used: false,
+            futurize_enabled: true,
+            session: SessionState::default(),
+            next_frame_id: 0,
+        }
+    }
+
+    pub fn with_config(config: InterpConfig) -> Self {
+        let mut i = Self::new();
+        i.config = config;
+        i
+    }
+
+    pub fn fresh_frame_id(&mut self) -> u64 {
+        self.next_frame_id += 1;
+        self.next_frame_id
+    }
+
+    // ---- output ---------------------------------------------------------
+
+    /// Write to the innermost stdout sink.
+    pub fn write_out(&mut self, s: &str) {
+        match self.out.last().unwrap_or(&OutSink::Real) {
+            OutSink::Real => print!("{s}"),
+            OutSink::Capture(buf) => buf.borrow_mut().push_str(s),
+            OutSink::Sink => {}
+        }
+    }
+
+    /// Run `f` with stdout captured; returns (result, captured-text).
+    pub fn capture_stdout<T>(&mut self, f: impl FnOnce(&mut Interp) -> T) -> (T, String) {
+        let buf = Rc::new(RefCell::new(String::new()));
+        self.out.push(OutSink::Capture(buf.clone()));
+        let r = f(self);
+        self.out.pop();
+        let text = buf.borrow().clone();
+        (r, text)
+    }
+
+    // ---- conditions -------------------------------------------------------
+
+    /// Signal a non-error condition through the handler stack. Returns
+    /// `Err(Signal::Unwind ...)` if an exiting (tryCatch) handler matched.
+    pub fn signal_condition(&mut self, cond: RCondition) -> Result<(), Signal> {
+        // Walk innermost-out. Calling handlers run in place; the first
+        // Suppress/Collect/Exiting match decides the disposition.
+        // Native hooks (infrastructure streaming/display) observe every
+        // matching condition no matter where they sit on the stack; the
+        // R-visible handlers keep innermost-first, first-match-muffles
+        // semantics.
+        let mut native: Vec<Rc<RefCell<dyn FnMut(&RCondition)>>> = Vec::new();
+        for frame in self.handlers.iter() {
+            if let HandlerFrame::Native { class, hook } = frame {
+                if cond.inherits(class) {
+                    native.push(hook.clone());
+                }
+            }
+        }
+        let mut calling: Vec<RVal> = Vec::new();
+        let mut disposition: Option<Result<(), Signal>> = None;
+        for frame in self.handlers.iter().rev() {
+            match frame {
+                HandlerFrame::Calling { class, func } if cond.inherits(class) => {
+                    calling.push(func.clone());
+                }
+                HandlerFrame::Suppress { classes } if classes.iter().any(|c| cond.inherits(c)) => {
+                    disposition = Some(Ok(()));
+                    break;
+                }
+                HandlerFrame::Collect { classes, sink }
+                    if classes.iter().any(|c| cond.inherits(c)) =>
+                {
+                    sink.borrow_mut().push(cond.clone());
+                    disposition = Some(Ok(()));
+                    break;
+                }
+                HandlerFrame::Exiting { classes, id }
+                    if classes.iter().any(|c| cond.inherits(c)) =>
+                {
+                    disposition = Some(Err(Signal::Unwind { cond: cond.clone(), id: *id }));
+                    break;
+                }
+                _ => {}
+            }
+        }
+        // Native hooks first (progress streaming), then calling handlers.
+        for h in native {
+            (h.borrow_mut())(&cond);
+        }
+        // Invoke calling handlers (outermost-last order is fine here).
+        for f in calling {
+            let arg = RVal::Cond(Box::new(cond.clone()));
+            let genv = self.global.clone();
+            let _ = self.call_function(&f, vec![(None, arg)], &genv)?;
+        }
+        match disposition {
+            Some(d) => d,
+            None => {
+                // Unhandled: default side effect.
+                match cond.severity {
+                    Severity::Message => {
+                        let msg = cond.message.clone();
+                        self.write_err(&msg);
+                    }
+                    Severity::Warning => {
+                        let msg = format!("Warning message:\n{}\n", cond.message);
+                        self.write_err(&msg);
+                    }
+                    Severity::Custom => { /* inert */ }
+                    Severity::Error => unreachable!("errors do not pass through signal_condition"),
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// stderr-ish output (messages/warnings). Captured together with
+    /// stdout when a Capture sink is active, since the future framework
+    /// relays both.
+    pub fn write_err(&mut self, s: &str) {
+        match self.out.last().unwrap_or(&OutSink::Real) {
+            OutSink::Real => eprint!("{s}"),
+            OutSink::Capture(buf) => buf.borrow_mut().push_str(s),
+            OutSink::Sink => {}
+        }
+    }
+
+    /// Evaluate an expression while capturing stdout + all non-error
+    /// conditions (the worker-side half of "relay as-is", §4.9).
+    pub fn eval_captured(&mut self, expr: &Expr, env: &EnvRef) -> (EvalResult, CaptureLog) {
+        let sink = Rc::new(RefCell::new(Vec::new()));
+        let buf = Rc::new(RefCell::new(String::new()));
+        self.handlers.push(HandlerFrame::Collect {
+            classes: vec!["condition".into()],
+            sink: sink.clone(),
+        });
+        self.out.push(OutSink::Capture(buf.clone()));
+        let rng_before = self.rng_used;
+        self.rng_used = false;
+        let r = self.eval(expr, env);
+        let rng_used = self.rng_used;
+        self.rng_used = rng_before || rng_used;
+        self.out.pop();
+        self.handlers.pop();
+        let log = CaptureLog {
+            stdout: buf.borrow().clone(),
+            conditions: sink.borrow().clone(),
+            rng_used,
+        };
+        (r, log)
+    }
+
+    /// Relay a worker capture log in this (parent) interpreter: stdout is
+    /// re-emitted, conditions are re-signaled so parent handlers
+    /// (`suppressMessages()`, `tryCatch`, progress collectors) see them.
+    pub fn relay(&mut self, log: &CaptureLog) -> Result<(), Signal> {
+        if !log.stdout.is_empty() {
+            let s = log.stdout.clone();
+            self.write_out(&s);
+        }
+        for cond in &log.conditions {
+            self.signal_condition(cond.clone())?;
+        }
+        Ok(())
+    }
+
+    // ---- program evaluation ----------------------------------------------
+
+    pub fn eval_program(&mut self, src: &str) -> Result<RVal, Signal> {
+        let exprs = super::parse_program(src).map_err(Signal::error)?;
+        let genv = self.global.clone();
+        let mut last = RVal::Null;
+        for e in &exprs {
+            last = self.eval(e, &genv)?;
+        }
+        Ok(last)
+    }
+
+    pub fn eval(&mut self, expr: &Expr, env: &EnvRef) -> EvalResult {
+        match expr {
+            Expr::Null => Ok(RVal::Null),
+            Expr::Bool(b) => Ok(RVal::scalar_bool(*b)),
+            Expr::Int(v) => Ok(RVal::scalar_int(*v)),
+            Expr::Num(v) => Ok(RVal::scalar_dbl(*v)),
+            Expr::Str(s) => Ok(RVal::scalar_str(s.clone())),
+            Expr::Missing => Ok(RVal::Null),
+            Expr::Dots => {
+                env::lookup(env, "...").ok_or_else(|| Signal::error("'...' used out of context"))
+            }
+            Expr::Sym(name) => env::lookup(env, name)
+                .or_else(|| builtins::lookup_builtin(name).map(|d| RVal::Builtin(d.key())))
+                .ok_or_else(|| Signal::error(format!("object '{name}' not found"))),
+            Expr::Ns { pkg, name } => builtins::lookup_builtin_ns(pkg, name)
+                .map(|d| RVal::Builtin(d.key()))
+                .ok_or_else(|| {
+                    Signal::error(format!("object '{name}' not found in namespace '{pkg}'"))
+                }),
+            Expr::Function { params, body } => Ok(RVal::Closure(Rc::new(RClosure {
+                params: params.clone(),
+                body: (**body).clone(),
+                env: env.clone(),
+            }))),
+            Expr::Block(stmts) => {
+                let mut last = RVal::Null;
+                for s in stmts {
+                    last = self.eval(s, env)?;
+                }
+                Ok(last)
+            }
+            Expr::If { cond, then, els } => {
+                let c = self.eval(cond, env)?.as_bool().map_err(Signal::error)?;
+                if c {
+                    self.eval(then, env)
+                } else if let Some(e) = els {
+                    self.eval(e, env)
+                } else {
+                    Ok(RVal::Null)
+                }
+            }
+            Expr::For { var, seq, body } => {
+                let seqv = self.eval(seq, env)?;
+                for item in seqv.iter_elements() {
+                    env::define(env, var, item);
+                    match self.eval(body, env) {
+                        Ok(_) => {}
+                        Err(Signal::Break) => break,
+                        Err(Signal::Next) => continue,
+                        Err(e) => return Err(e),
+                    }
+                }
+                Ok(RVal::Null)
+            }
+            Expr::While { cond, body } => {
+                let mut iters = 0usize;
+                loop {
+                    let c = self.eval(cond, env)?.as_bool().map_err(Signal::error)?;
+                    if !c {
+                        break;
+                    }
+                    iters += 1;
+                    if iters > self.config.max_iter {
+                        return Err(Signal::error("while loop exceeded max_iter"));
+                    }
+                    match self.eval(body, env) {
+                        Ok(_) => {}
+                        Err(Signal::Break) => break,
+                        Err(Signal::Next) => continue,
+                        Err(e) => return Err(e),
+                    }
+                }
+                Ok(RVal::Null)
+            }
+            Expr::Break => Err(Signal::Break),
+            Expr::Next => Err(Signal::Next),
+            Expr::Assign { target, value } => {
+                let v = self.eval(value, env)?;
+                self.assign(target, v.clone(), env)?;
+                Ok(v)
+            }
+            Expr::SuperAssign { target, value } => {
+                let v = self.eval(value, env)?;
+                match target.as_ref() {
+                    Expr::Sym(name) => {
+                        // Find the nearest enclosing frame (excluding the
+                        // current one) that binds `name`; else global.
+                        let start = env.borrow().parent.clone();
+                        let mut cur = start;
+                        let mut placed = false;
+                        while let Some(e) = cur {
+                            if e.borrow().vars.contains_key(name) {
+                                e.borrow_mut().vars.insert(name.clone(), v.clone());
+                                placed = true;
+                                break;
+                            }
+                            let parent = e.borrow().parent.clone();
+                            cur = parent;
+                        }
+                        if !placed {
+                            env::define(&self.global, name, v.clone());
+                        }
+                        Ok(v)
+                    }
+                    other => Err(Signal::error(format!(
+                        "invalid <<- target: {}",
+                        deparse(other)
+                    ))),
+                }
+            }
+            Expr::Index { obj, args, double } => {
+                let o = self.eval(obj, env)?;
+                let idx: Vec<RVal> = args
+                    .iter()
+                    .map(|a| self.eval(&a.value, env))
+                    .collect::<Result<_, _>>()?;
+                index_get(&o, &idx, *double).map_err(Signal::error)
+            }
+            Expr::Dollar { obj, name } => {
+                let o = self.eval(obj, env)?;
+                match &o {
+                    RVal::List(l) => Ok(l.get(name).cloned().unwrap_or(RVal::Null)),
+                    RVal::Env(e) => Ok(env::lookup(e, name).unwrap_or(RVal::Null)),
+                    other => Err(Signal::error(format!("$ operator invalid for {}", other.class()))),
+                }
+            }
+            Expr::Call { func, args } => self.eval_call(expr, func, args, env),
+        }
+    }
+
+    fn eval_call(&mut self, call: &Expr, func: &Expr, args: &[Arg], env: &EnvRef) -> EvalResult {
+        // Resolve callee without evaluating arguments yet: special forms
+        // receive raw expressions.
+        let callee: RVal = match func {
+            Expr::Sym(name) => match env::lookup(env, name) {
+                Some(v) => v,
+                None => match builtins::lookup_builtin(name) {
+                    Some(d) => RVal::Builtin(d.key()),
+                    None => {
+                        return Err(Signal::Error(
+                            RCondition::error_cond(format!("could not find function \"{name}\""))
+                                .with_call(deparse(call)),
+                        ))
+                    }
+                },
+            },
+            Expr::Ns { pkg, name } => match builtins::lookup_builtin_ns(pkg, name) {
+                Some(d) => RVal::Builtin(d.key()),
+                None => {
+                    return Err(Signal::error(format!(
+                        "could not find function \"{pkg}::{name}\""
+                    )))
+                }
+            },
+            other => self.eval(other, env)?,
+        };
+
+        if let RVal::Builtin(key) = &callee {
+            let def = builtins::get_builtin(key)
+                .ok_or_else(|| Signal::error(format!("unknown builtin {key}")))?;
+            match &def.f {
+                BuiltinFn::Special(f) => return f(self, args, env),
+                BuiltinFn::Normal(f) => {
+                    let vals = self.eval_args(args, env)?;
+                    let r = f(self, Args::new(vals), env);
+                    // Attach call text to otherwise-anonymous errors.
+                    return r.map_err(|sig| match sig {
+                        Signal::Error(mut c) if c.call.is_none() => {
+                            c.call = Some(deparse(call));
+                            Signal::Error(c)
+                        }
+                        other => other,
+                    });
+                }
+            }
+        }
+
+        let vals = self.eval_args(args, env)?;
+        self.call_function(&callee, vals, env).map_err(|sig| match sig {
+            Signal::Error(mut c) if c.call.is_none() => {
+                c.call = Some(deparse(call));
+                Signal::Error(c)
+            }
+            other => other,
+        })
+    }
+
+    /// Evaluate an argument list, splicing `...`.
+    pub fn eval_args(
+        &mut self,
+        args: &[Arg],
+        env: &EnvRef,
+    ) -> Result<Vec<(Option<String>, RVal)>, Signal> {
+        let mut out = Vec::with_capacity(args.len());
+        for a in args {
+            if matches!(a.value, Expr::Dots) {
+                if let Some(RVal::List(l)) = env::lookup(env, "...") {
+                    let names = l.names.clone();
+                    for (i, v) in l.vals.into_iter().enumerate() {
+                        let nm = names
+                            .as_ref()
+                            .and_then(|ns| ns.get(i))
+                            .filter(|s| !s.is_empty())
+                            .cloned();
+                        out.push((nm, v));
+                    }
+                } // absent `...` splices nothing
+            } else if matches!(a.value, Expr::Missing) {
+                out.push((a.name.clone(), RVal::Null));
+            } else {
+                let v = self.eval(&a.value, env)?;
+                out.push((a.name.clone(), v));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Call a function value with already-evaluated arguments.
+    pub fn call_function(
+        &mut self,
+        f: &RVal,
+        args: Vec<(Option<String>, RVal)>,
+        env: &EnvRef,
+    ) -> EvalResult {
+        match f {
+            RVal::Closure(c) => self.call_closure(c, args),
+            RVal::Builtin(key) => {
+                let def = builtins::get_builtin(key)
+                    .ok_or_else(|| Signal::error(format!("unknown builtin {key}")))?;
+                match &def.f {
+                    BuiltinFn::Normal(func) => func(self, Args::new(args), env),
+                    BuiltinFn::Special(_) => Err(Signal::error(format!(
+                        "special form '{}' cannot be called indirectly",
+                        def.name
+                    ))),
+                }
+            }
+            other => Err(Signal::error(format!("attempt to apply non-function ({})", other.class()))),
+        }
+    }
+
+    pub fn call_closure(
+        &mut self,
+        c: &RClosure,
+        args: Vec<(Option<String>, RVal)>,
+    ) -> EvalResult {
+        let fenv = Env::child_of(&c.env);
+        // Partition: named args match params by name; positionals fill the
+        // rest in order; excess goes to `...` if present.
+        let mut bound = vec![false; c.params.len()];
+        let mut positional: Vec<RVal> = Vec::new();
+        let mut dots: Vec<(Option<String>, RVal)> = Vec::new();
+        let has_dots = c.params.iter().any(|p| p.name == "...");
+
+        for (name, val) in args {
+            match name {
+                Some(n) => {
+                    if let Some(idx) = c.params.iter().position(|p| p.name == n) {
+                        env::define(&fenv, &n, val);
+                        bound[idx] = true;
+                    } else if has_dots {
+                        dots.push((Some(n), val));
+                    } else {
+                        return Err(Signal::error(format!("unused argument ({n} = ...)")));
+                    }
+                }
+                None => positional.push(val),
+            }
+        }
+        let mut pos_iter = positional.into_iter();
+        for (idx, p) in c.params.iter().enumerate() {
+            if p.name == "..." {
+                // Everything remaining goes to dots.
+                for v in pos_iter.by_ref() {
+                    dots.push((None, v));
+                }
+                continue;
+            }
+            if bound[idx] {
+                continue;
+            }
+            if let Some(v) = pos_iter.next() {
+                env::define(&fenv, &p.name, v);
+                bound[idx] = true;
+            }
+        }
+        // Leftover positionals without a `...` param: error (R semantics).
+        if !has_dots {
+            let leftovers: Vec<RVal> = pos_iter.collect();
+            if !leftovers.is_empty() {
+                return Err(Signal::error("unused arguments in call"));
+            }
+        }
+        if has_dots {
+            let names: Vec<String> =
+                dots.iter().map(|(n, _)| n.clone().unwrap_or_default()).collect();
+            let vals: Vec<RVal> = dots.into_iter().map(|(_, v)| v).collect();
+            let named = names.iter().any(|n| !n.is_empty());
+            env::define(
+                &fenv,
+                "...",
+                RVal::List(RList { vals, names: if named { Some(names) } else { None }, class: None }),
+            );
+        }
+        // Defaults for still-unbound params (evaluated in the new frame).
+        for (idx, p) in c.params.iter().enumerate() {
+            if p.name == "..." || bound[idx] {
+                continue;
+            }
+            match &p.default {
+                Some(d) => {
+                    let v = self.eval(d, &fenv)?;
+                    env::define(&fenv, &p.name, v);
+                }
+                None => { /* missing — error only on use */ }
+            }
+        }
+        match self.eval(&c.body, &fenv) {
+            Ok(v) => Ok(v),
+            Err(Signal::Return(v)) => Ok(v),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn assign(&mut self, target: &Expr, value: RVal, env: &EnvRef) -> Result<(), Signal> {
+        match target {
+            Expr::Sym(name) | Expr::Str(name) => {
+                env::define(env, name, value);
+                Ok(())
+            }
+            Expr::Index { obj, args, double } => {
+                let mut base = self.eval(obj, env)?;
+                let idx: Vec<RVal> = args
+                    .iter()
+                    .map(|a| self.eval(&a.value, env))
+                    .collect::<Result<_, _>>()?;
+                index_set(&mut base, &idx, *double, value).map_err(Signal::error)?;
+                self.assign(obj, base, env)
+            }
+            Expr::Dollar { obj, name } => {
+                let base = self.eval(obj, env)?;
+                match base {
+                    RVal::List(mut l) => {
+                        l.set(name, value);
+                        self.assign(obj, RVal::List(l), env)
+                    }
+                    RVal::Env(e) => {
+                        env::define(&e, name, value);
+                        Ok(())
+                    }
+                    other => {
+                        Err(Signal::error(format!("$<- invalid for {}", other.class())))
+                    }
+                }
+            }
+            Expr::Call { func, args } if matches!(func.as_ref(), Expr::Sym(s) if s == "names") => {
+                // names(x) <- value
+                let inner = &args[0].value;
+                let mut base = self.eval(inner, env)?;
+                let names = if value.is_null() {
+                    None
+                } else {
+                    Some(value.as_str_vec().map_err(Signal::error)?)
+                };
+                base.set_names(names);
+                self.assign(inner, base, env)
+            }
+            other => Err(Signal::error(format!("invalid assignment target: {}", deparse(other)))),
+        }
+    }
+}
+
+// ---- indexing helpers ------------------------------------------------------
+
+fn resolve_indices(idx: &RVal, len: usize, names: Option<&[String]>) -> Result<Vec<usize>, String> {
+    match idx {
+        RVal::Lgl(mask) => {
+            let mut out = Vec::new();
+            for (i, &b) in mask.vals.iter().enumerate() {
+                if b {
+                    out.push(i);
+                }
+            }
+            // Recycle mask if shorter than vector.
+            if mask.len() < len && !mask.vals.is_empty() {
+                out.clear();
+                for i in 0..len {
+                    if mask.vals[i % mask.vals.len()] {
+                        out.push(i);
+                    }
+                }
+            }
+            Ok(out)
+        }
+        RVal::Chr(keys) => {
+            let names = names.ok_or("cannot index unnamed vector by name")?;
+            keys.vals
+                .iter()
+                .map(|k| {
+                    names
+                        .iter()
+                        .position(|n| n == k)
+                        .ok_or_else(|| format!("subscript '{k}' out of bounds"))
+                })
+                .collect()
+        }
+        other => {
+            let nums = other.as_dbl_vec()?;
+            // All-negative: exclusion.
+            if !nums.is_empty() && nums.iter().all(|&x| x < 0.0) {
+                let excl: std::collections::HashSet<usize> =
+                    nums.iter().map(|&x| (-x) as usize - 1).collect();
+                return Ok((0..len).filter(|i| !excl.contains(i)).collect());
+            }
+            nums.iter()
+                .map(|&x| {
+                    let i = x as i64;
+                    if i < 1 || i as usize > len {
+                        Err(format!("subscript out of bounds ({i} of {len})"))
+                    } else {
+                        Ok(i as usize - 1)
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+/// `x[i]` and `x[[i]]`.
+pub fn index_get(obj: &RVal, idx: &[RVal], double: bool) -> Result<RVal, String> {
+    if idx.len() != 1 {
+        // Multi-dim indexing: support df[i, j] for data.frame-ish lists.
+        if let RVal::List(l) = obj {
+            if idx.len() == 2 {
+                // columns first
+                let cols: Vec<usize> = match &idx[1] {
+                    RVal::Null => (0..l.len()).collect(),
+                    other => resolve_indices(other, l.len(), l.names.as_deref())?,
+                };
+                let nrow = l.vals.first().map(|c| c.len()).unwrap_or(0);
+                let rows: Vec<usize> = match &idx[0] {
+                    RVal::Null => (0..nrow).collect(),
+                    other => resolve_indices(other, nrow, None)?,
+                };
+                let mut out_vals = Vec::new();
+                let mut out_names = Vec::new();
+                for &c in &cols {
+                    let col = &l.vals[c];
+                    let picked = index_get(
+                        col,
+                        &[RVal::dbl(rows.iter().map(|&r| (r + 1) as f64).collect())],
+                        false,
+                    )?;
+                    out_vals.push(picked);
+                    if let Some(ns) = &l.names {
+                        out_names.push(ns[c].clone());
+                    }
+                }
+                let mut out = RList::plain(out_vals);
+                if !out_names.is_empty() {
+                    out.names = Some(out_names);
+                }
+                out.class = l.class.clone();
+                return Ok(RVal::List(out));
+            }
+        }
+        return Err(format!("unsupported index arity {}", idx.len()));
+    }
+    let i = &idx[0];
+    match obj {
+        RVal::List(l) => {
+            let ids = resolve_indices(i, l.len(), l.names.as_deref())?;
+            if double {
+                let id = *ids.first().ok_or("subscript out of bounds")?;
+                Ok(l.vals[id].clone())
+            } else {
+                let vals: Vec<RVal> = ids.iter().map(|&i| l.vals[i].clone()).collect();
+                let names = l.names.as_ref().map(|ns| ids.iter().map(|&i| ns[i].clone()).collect());
+                Ok(RVal::List(RList { vals, names, class: None }))
+            }
+        }
+        RVal::Dbl(v) => {
+            let ids = resolve_indices(i, v.len(), v.names.as_deref())?;
+            pick_vec(&v.vals, v.names.as_deref(), &ids, double, RVal::Dbl)
+        }
+        RVal::Int(v) => {
+            let ids = resolve_indices(i, v.len(), v.names.as_deref())?;
+            pick_vec(&v.vals, v.names.as_deref(), &ids, double, RVal::Int)
+        }
+        RVal::Chr(v) => {
+            let ids = resolve_indices(i, v.len(), v.names.as_deref())?;
+            pick_vec(&v.vals, v.names.as_deref(), &ids, double, RVal::Chr)
+        }
+        RVal::Lgl(v) => {
+            let ids = resolve_indices(i, v.len(), v.names.as_deref())?;
+            pick_vec(&v.vals, v.names.as_deref(), &ids, double, RVal::Lgl)
+        }
+        other => Err(format!("cannot index {}", other.class())),
+    }
+}
+
+fn pick_vec<T: Clone>(
+    vals: &[T],
+    names: Option<&[String]>,
+    ids: &[usize],
+    double: bool,
+    wrap: fn(super::value::RVec<T>) -> RVal,
+) -> Result<RVal, String> {
+    if double {
+        let id = *ids.first().ok_or("subscript out of bounds")?;
+        Ok(wrap(super::value::RVec::plain(vec![vals[id].clone()])))
+    } else {
+        let picked: Vec<T> = ids.iter().map(|&i| vals[i].clone()).collect();
+        let nm = names.map(|ns| ids.iter().map(|&i| ns[i].clone()).collect());
+        Ok(wrap(super::value::RVec { vals: picked, names: nm }))
+    }
+}
+
+/// `x[i] <- v` / `x[[i]] <- v`.
+pub fn index_set(obj: &mut RVal, idx: &[RVal], _double: bool, value: RVal) -> Result<(), String> {
+    if idx.len() != 1 {
+        return Err("unsupported assignment index arity".into());
+    }
+    match obj {
+        RVal::List(l) => {
+            let ids = resolve_indices(&idx[0], l.len().max(1), l.names.as_deref())
+                .or_else(|_| -> Result<Vec<usize>, String> {
+                    // Appending beyond the end: x[[n+1]] <- v
+                    let n = idx[0].as_usize().map_err(|e| e)?;
+                    Ok(vec![n - 1])
+                })?;
+            for &id in &ids {
+                while l.vals.len() <= id {
+                    l.vals.push(RVal::Null);
+                    if let Some(ns) = &mut l.names {
+                        ns.push(String::new());
+                    }
+                }
+                l.vals[id] = value.clone();
+            }
+            Ok(())
+        }
+        RVal::Dbl(v) => {
+            let ids = resolve_indices(&idx[0], v.len(), v.names.as_deref()).or_else(
+                |_| -> Result<Vec<usize>, String> { Ok(vec![idx[0].as_usize()? - 1]) },
+            )?;
+            let val = value.as_f64()?;
+            for &id in &ids {
+                while v.vals.len() <= id {
+                    v.vals.push(f64::NAN);
+                }
+                v.vals[id] = val;
+            }
+            Ok(())
+        }
+        RVal::Int(v) => {
+            let ids = resolve_indices(&idx[0], v.len(), v.names.as_deref())?;
+            let val = value.as_i64()?;
+            for &id in &ids {
+                v.vals[id] = val;
+            }
+            Ok(())
+        }
+        RVal::Null => {
+            // NULL grows into a list on assignment, as in R.
+            let mut l = RList::plain(vec![]);
+            let id = idx[0].as_usize()? - 1;
+            while l.vals.len() <= id {
+                l.vals.push(RVal::Null);
+            }
+            l.vals[id] = value;
+            *obj = RVal::List(l);
+            Ok(())
+        }
+        other => Err(format!("cannot assign into {}", other.class())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str) -> RVal {
+        let mut i = Interp::new();
+        i.eval_program(src).unwrap_or_else(|e| panic!("eval error in {src:?}: {e:?}"))
+    }
+
+    #[test]
+    fn arithmetic_and_assignment() {
+        assert_eq!(run("x <- 2\nx + 3"), RVal::scalar_dbl(5.0));
+        assert_eq!(run("x <- 1:3\nsum(x)"), RVal::scalar_dbl(6.0));
+    }
+
+    #[test]
+    fn closures_capture_lexically() {
+        assert_eq!(run("a <- 10\nf <- function(x) x + a\nf(1)"), RVal::scalar_dbl(11.0));
+    }
+
+    #[test]
+    fn default_arguments() {
+        assert_eq!(run("f <- function(x, n = 2) x^n\nf(3)"), RVal::scalar_dbl(9.0));
+        assert_eq!(run("f <- function(x, n = 2) x^n\nf(2, n = 3)"), RVal::scalar_dbl(8.0));
+    }
+
+    #[test]
+    fn dots_forwarding() {
+        assert_eq!(
+            run("f <- function(...) sum(...)\nf(1, 2, 3)"),
+            RVal::scalar_dbl(6.0)
+        );
+    }
+
+    #[test]
+    fn for_loop_accumulates() {
+        assert_eq!(run("s <- 0\nfor (i in 1:10) s <- s + i\ns"), RVal::scalar_dbl(55.0));
+    }
+
+    #[test]
+    fn while_with_break() {
+        assert_eq!(
+            run("i <- 0\nwhile (TRUE) { i <- i + 1\nif (i >= 5) break }\ni"),
+            RVal::scalar_dbl(5.0)
+        );
+    }
+
+    #[test]
+    fn indexing_reads() {
+        assert_eq!(run("x <- c(10, 20, 30)\nx[2]"), RVal::scalar_dbl(20.0));
+        assert_eq!(run("x <- list(1, \"a\")\nx[[2]]"), RVal::scalar_str("a"));
+        assert_eq!(run("x <- c(a = 1, b = 2)\nx[\"b\"]").as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn negative_indexing_excludes() {
+        assert_eq!(run("x <- c(1, 2, 3)\nsum(x[-1])"), RVal::scalar_dbl(5.0));
+    }
+
+    #[test]
+    fn index_assignment() {
+        assert_eq!(run("x <- c(1, 2, 3)\nx[2] <- 9\nsum(x)"), RVal::scalar_dbl(13.0));
+    }
+
+    #[test]
+    fn lambda_and_pipe() {
+        assert_eq!(run("f <- \\(x) x * 2\nf(4)"), RVal::scalar_dbl(8.0));
+        assert_eq!(run("4 |> sqrt()"), RVal::scalar_dbl(2.0));
+    }
+
+    #[test]
+    fn super_assignment_mutates_enclosing() {
+        assert_eq!(
+            run("counter <- 0\nbump <- function() counter <<- counter + 1\nbump()\nbump()\ncounter"),
+            RVal::scalar_dbl(2.0)
+        );
+    }
+
+    #[test]
+    fn error_signal_has_message() {
+        let mut i = Interp::new();
+        let err = i.eval_program("stop(\"boom\")").unwrap_err();
+        match err {
+            Signal::Error(c) => assert_eq!(c.message, "boom"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn object_not_found() {
+        let mut i = Interp::new();
+        let err = i.eval_program("nosuch + 1").unwrap_err();
+        match err {
+            Signal::Error(c) => assert!(c.message.contains("not found")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn captured_eval_collects_output_and_conditions() {
+        let mut i = Interp::new();
+        let exprs = super::super::parse_program("{ cat(\"hi\")\nmessage(\"m1\")\n42 }").unwrap();
+        let genv = i.global.clone();
+        let (r, log) = i.eval_captured(&exprs[0], &genv);
+        assert_eq!(r.unwrap(), RVal::scalar_dbl(42.0));
+        assert_eq!(log.stdout, "hi");
+        assert_eq!(log.conditions.len(), 1);
+        assert!(log.conditions[0].inherits("message"));
+    }
+
+    #[test]
+    fn relay_resignals_through_suppress() {
+        let mut i = Interp::new();
+        // Capture a message...
+        let exprs = super::super::parse_program("message(\"x = 1\")").unwrap();
+        let genv = i.global.clone();
+        let (_, log) = i.eval_captured(&exprs[0], &genv);
+        // ...relay under an active suppressor: nothing escapes.
+        i.handlers.push(HandlerFrame::Suppress { classes: vec!["message".into()] });
+        let ((), err_out) = {
+            let (r, captured) = i.capture_stdout(|i| i.relay(&log).unwrap());
+            (r, captured)
+        };
+        i.handlers.pop();
+        assert_eq!(err_out, "");
+    }
+
+    #[test]
+    fn data_frame_two_dim_index() {
+        let v = run("df <- data.frame(a = 1:4, b = c(\"w\",\"x\",\"y\",\"z\"))\ndf[2, 1]");
+        match v {
+            RVal::List(l) => assert_eq!(l.vals[0].as_f64().unwrap(), 2.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn names_assignment() {
+        let v = run("x <- c(1, 2)\nnames(x) <- c(\"a\", \"b\")\nx[\"a\"]");
+        assert_eq!(v.as_f64().unwrap(), 1.0);
+    }
+}

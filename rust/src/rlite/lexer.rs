@@ -1,0 +1,466 @@
+//! Lexer for rlite source text.
+//!
+//! Token-level compatibility with the R subset used throughout the paper:
+//! numeric literals (`1`, `2.5`, `1e3`, `42L`), strings with escapes,
+//! identifiers (including dotted names like `cv.glmnet` and
+//! backtick-quoted names), the native pipe `|>`, user infix operators
+//! `%do%`/`%dofuture%`/`%%`/`%/%`/`%in%`, lambdas `\(x)`, and both
+//! assignment arrows.
+
+/// A lexical token with its source position (for error messages).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub kind: Tok,
+    pub line: usize,
+    pub col: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Ident(String),
+    /// `%op%` user infix (the full text including percent signs)
+    Infix(String),
+    /// Keywords
+    Function,
+    Backslash, // \(x) lambda introducer
+    If,
+    Else,
+    For,
+    While,
+    In,
+    Break,
+    Next,
+    True,
+    False,
+    Null,
+    Na,
+    Inf,
+    NaN,
+    /// Punctuation / operators
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,        // [
+    RBracket,        // ]
+    DoubleLBracket,  // [[
+    DoubleRBracket,  // ]]
+    Comma,
+    Semi,
+    Newline,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Caret,
+    Question,
+    Tilde,
+    Bang,
+    Eq,       // =
+    EqEq,     // ==
+    Neq,      // !=
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    And,      // &
+    AndAnd,   // &&
+    Or,       // |
+    OrOr,     // ||
+    Pipe,     // |>
+    LeftAssign,   // <-
+    SuperAssign,  // <<-
+    RightAssign,  // ->
+    DoubleColon,  // ::
+    Colon,        // :
+    Dollar,
+    Dots,     // ...
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+    col: usize,
+}
+
+impl<'a> Lexer<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+    fn peek2(&self) -> Option<u8> {
+        self.src.get(self.pos + 1).copied()
+    }
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+    fn err(&self, msg: &str) -> String {
+        format!("lex error at {}:{}: {}", self.line, self.col, msg)
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'.' || c == b'_'
+}
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'.' || c == b'_'
+}
+
+/// Tokenize `src` into a flat token stream. Newlines are kept as tokens
+/// (they terminate statements, as in R) and comments are stripped.
+pub fn lex(src: &str) -> Result<Vec<Token>, String> {
+    let mut lx = Lexer { src: src.as_bytes(), pos: 0, line: 1, col: 1 };
+    let mut out = Vec::new();
+    loop {
+        let (line, col) = (lx.line, lx.col);
+        let c = match lx.peek() {
+            None => break,
+            Some(c) => c,
+        };
+        let kind = match c {
+            b' ' | b'\t' | b'\r' => {
+                lx.bump();
+                continue;
+            }
+            b'#' => {
+                while let Some(c) = lx.peek() {
+                    if c == b'\n' {
+                        break;
+                    }
+                    lx.bump();
+                }
+                continue;
+            }
+            b'\n' => {
+                lx.bump();
+                Tok::Newline
+            }
+            b'(' => { lx.bump(); Tok::LParen }
+            b')' => { lx.bump(); Tok::RParen }
+            b'{' => { lx.bump(); Tok::LBrace }
+            b'}' => { lx.bump(); Tok::RBrace }
+            b'[' => {
+                lx.bump();
+                if lx.peek() == Some(b'[') {
+                    lx.bump();
+                    Tok::DoubleLBracket
+                } else {
+                    Tok::LBracket
+                }
+            }
+            b']' => {
+                lx.bump();
+                if lx.peek() == Some(b']') {
+                    lx.bump();
+                    Tok::DoubleRBracket
+                } else {
+                    Tok::RBracket
+                }
+            }
+            b',' => { lx.bump(); Tok::Comma }
+            b';' => { lx.bump(); Tok::Semi }
+            b'+' => { lx.bump(); Tok::Plus }
+            b'*' => { lx.bump(); Tok::Star }
+            b'/' => { lx.bump(); Tok::Slash }
+            b'^' => { lx.bump(); Tok::Caret }
+            b'?' => { lx.bump(); Tok::Question }
+            b'~' => { lx.bump(); Tok::Tilde }
+            b'$' => { lx.bump(); Tok::Dollar }
+            b'\\' => { lx.bump(); Tok::Backslash }
+            b'-' => {
+                lx.bump();
+                if lx.peek() == Some(b'>') {
+                    lx.bump();
+                    Tok::RightAssign
+                } else {
+                    Tok::Minus
+                }
+            }
+            b'!' => {
+                lx.bump();
+                if lx.peek() == Some(b'=') {
+                    lx.bump();
+                    Tok::Neq
+                } else {
+                    Tok::Bang
+                }
+            }
+            b'=' => {
+                lx.bump();
+                if lx.peek() == Some(b'=') {
+                    lx.bump();
+                    Tok::EqEq
+                } else {
+                    Tok::Eq
+                }
+            }
+            b'<' => {
+                lx.bump();
+                match lx.peek() {
+                    Some(b'-') => { lx.bump(); Tok::LeftAssign }
+                    Some(b'=') => { lx.bump(); Tok::Le }
+                    Some(b'<') if lx.peek2() == Some(b'-') => {
+                        lx.bump();
+                        lx.bump();
+                        Tok::SuperAssign
+                    }
+                    _ => Tok::Lt,
+                }
+            }
+            b'>' => {
+                lx.bump();
+                if lx.peek() == Some(b'=') {
+                    lx.bump();
+                    Tok::Ge
+                } else {
+                    Tok::Gt
+                }
+            }
+            b'&' => {
+                lx.bump();
+                if lx.peek() == Some(b'&') {
+                    lx.bump();
+                    Tok::AndAnd
+                } else {
+                    Tok::And
+                }
+            }
+            b'|' => {
+                lx.bump();
+                match lx.peek() {
+                    Some(b'|') => { lx.bump(); Tok::OrOr }
+                    Some(b'>') => { lx.bump(); Tok::Pipe }
+                    _ => Tok::Or,
+                }
+            }
+            b':' => {
+                lx.bump();
+                if lx.peek() == Some(b':') {
+                    lx.bump();
+                    Tok::DoubleColon
+                } else {
+                    Tok::Colon
+                }
+            }
+            b'%' => {
+                // user infix: %...%
+                lx.bump();
+                let mut name = String::from("%");
+                loop {
+                    match lx.bump() {
+                        Some(b'%') => {
+                            name.push('%');
+                            break;
+                        }
+                        Some(c) => name.push(c as char),
+                        None => return Err(lx.err("unterminated %infix%")),
+                    }
+                }
+                Tok::Infix(name)
+            }
+            b'"' | b'\'' => {
+                let quote = c;
+                lx.bump();
+                let mut s = String::new();
+                loop {
+                    match lx.bump() {
+                        Some(c) if c == quote => break,
+                        Some(b'\\') => match lx.bump() {
+                            Some(b'n') => s.push('\n'),
+                            Some(b't') => s.push('\t'),
+                            Some(b'\\') => s.push('\\'),
+                            Some(b'"') => s.push('"'),
+                            Some(b'\'') => s.push('\''),
+                            Some(c) => s.push(c as char),
+                            None => return Err(lx.err("unterminated string")),
+                        },
+                        Some(c) => s.push(c as char),
+                        None => return Err(lx.err("unterminated string")),
+                    }
+                }
+                Tok::Str(s)
+            }
+            b'`' => {
+                lx.bump();
+                let mut s = String::new();
+                loop {
+                    match lx.bump() {
+                        Some(b'`') => break,
+                        Some(c) => s.push(c as char),
+                        None => return Err(lx.err("unterminated backtick name")),
+                    }
+                }
+                Tok::Ident(s)
+            }
+            c if c.is_ascii_digit()
+                || (c == b'.' && lx.peek2().map_or(false, |d| d.is_ascii_digit())) =>
+            {
+                let start = lx.pos;
+                while let Some(c) = lx.peek() {
+                    if c.is_ascii_digit() || c == b'.' {
+                        lx.bump();
+                    } else if c == b'e' || c == b'E' {
+                        // exponent
+                        let save = lx.pos;
+                        lx.bump();
+                        if matches!(lx.peek(), Some(b'+') | Some(b'-')) {
+                            lx.bump();
+                        }
+                        if lx.peek().map_or(false, |d| d.is_ascii_digit()) {
+                            while lx.peek().map_or(false, |d| d.is_ascii_digit()) {
+                                lx.bump();
+                            }
+                        } else {
+                            lx.pos = save;
+                            break;
+                        }
+                    } else {
+                        break;
+                    }
+                }
+                let text = std::str::from_utf8(&lx.src[start..lx.pos]).unwrap();
+                if lx.peek() == Some(b'L') {
+                    lx.bump();
+                    let v: i64 = text
+                        .parse::<f64>()
+                        .map_err(|e| lx.err(&format!("bad integer {text}: {e}")))?
+                        as i64;
+                    Tok::Int(v)
+                } else {
+                    let v: f64 =
+                        text.parse().map_err(|e| lx.err(&format!("bad number {text}: {e}")))?;
+                    Tok::Num(v)
+                }
+            }
+            c if is_ident_start(c) => {
+                let start = lx.pos;
+                while lx.peek().map_or(false, is_ident_cont) {
+                    lx.bump();
+                }
+                let text = std::str::from_utf8(&lx.src[start..lx.pos]).unwrap().to_string();
+                match text.as_str() {
+                    "function" => Tok::Function,
+                    "if" => Tok::If,
+                    "else" => Tok::Else,
+                    "for" => Tok::For,
+                    "while" => Tok::While,
+                    "in" => Tok::In,
+                    "break" => Tok::Break,
+                    "next" => Tok::Next,
+                    "TRUE" => Tok::True,
+                    "FALSE" => Tok::False,
+                    "NULL" => Tok::Null,
+                    "NA" => Tok::Na,
+                    "Inf" => Tok::Inf,
+                    "NaN" => Tok::NaN,
+                    "..." => Tok::Dots,
+                    _ => {
+                        if text == "..." {
+                            Tok::Dots
+                        } else {
+                            Tok::Ident(text)
+                        }
+                    }
+                }
+            }
+            other => return Err(lx.err(&format!("unexpected character {:?}", other as char))),
+        };
+        out.push(Token { kind, line, col });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn lexes_pipe_and_infix() {
+        assert_eq!(
+            kinds("lapply(xs, fcn) |> futurize()"),
+            vec![
+                Tok::Ident("lapply".into()),
+                Tok::LParen,
+                Tok::Ident("xs".into()),
+                Tok::Comma,
+                Tok::Ident("fcn".into()),
+                Tok::RParen,
+                Tok::Pipe,
+                Tok::Ident("futurize".into()),
+                Tok::LParen,
+                Tok::RParen,
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_do_infix() {
+        let ks = kinds("foreach(x = xs) %do% { slow_fcn(x) }");
+        assert!(ks.contains(&Tok::Infix("%do%".into())));
+    }
+
+    #[test]
+    fn lexes_numbers() {
+        assert_eq!(kinds("42L"), vec![Tok::Int(42)]);
+        assert_eq!(kinds("1e3"), vec![Tok::Num(1000.0)]);
+        assert_eq!(kinds("2.5"), vec![Tok::Num(2.5)]);
+    }
+
+    #[test]
+    fn lexes_dotted_idents_and_namespace() {
+        assert_eq!(
+            kinds("glmnet::cv.glmnet"),
+            vec![
+                Tok::Ident("glmnet".into()),
+                Tok::DoubleColon,
+                Tok::Ident("cv.glmnet".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_lambda_and_arrows() {
+        let ks = kinds("ys <- \\(x) x + 1");
+        assert_eq!(ks[1], Tok::LeftAssign);
+        assert_eq!(ks[2], Tok::Backslash);
+    }
+
+    #[test]
+    fn strips_comments() {
+        assert_eq!(kinds("x # comment\n"), vec![Tok::Ident("x".into()), Tok::Newline]);
+    }
+
+    #[test]
+    fn lexes_strings_with_escapes() {
+        assert_eq!(kinds(r#""a\nb""#), vec![Tok::Str("a\nb".into())]);
+        assert_eq!(kinds("'sq'"), vec![Tok::Str("sq".into())]);
+    }
+
+    #[test]
+    fn lexes_double_brackets() {
+        assert_eq!(
+            kinds("x[[1]]"),
+            vec![
+                Tok::Ident("x".into()),
+                Tok::DoubleLBracket,
+                Tok::Num(1.0),
+                Tok::DoubleRBracket
+            ]
+        );
+    }
+}

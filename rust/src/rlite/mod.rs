@@ -1,0 +1,52 @@
+//! rlite — the mini-R language substrate.
+//!
+//! The futurize paper's mechanism is *expression* manipulation: capture an
+//! unevaluated call, identify its head function and namespace, rewrite it,
+//! evaluate the rewritten form in the caller's environment. Reproducing
+//! that faithfully requires a language whose programs are data. rlite is
+//! that substrate: a small, eagerly-evaluated R dialect with
+//!
+//! - vectors (logical/integer/double/character) with names,
+//! - lists, closures, `NULL`,
+//! - `<-`/`=` assignment, `if`/`for`/`while`, `function(x, y = 1)` and
+//!   `\(x)` lambdas, `{ }` blocks,
+//! - the native pipe `|>` (desugared at parse time, exactly as in R 4.1),
+//! - user infix operators `%op%` (notably `%do%` / `%dofuture%`),
+//! - `pkg::name` namespace access,
+//! - a condition system (`message`, `warning`, `stop`, custom condition
+//!   classes, `suppressMessages`/`suppressWarnings`, `tryCatch`,
+//!   `withCallingHandlers`) and capturable stdout,
+//! - a builtin library large enough to express every example in the
+//!   paper (Sections 4.1-4.10).
+
+pub mod ast;
+pub mod builtins;
+pub mod conditions;
+pub mod deparse;
+pub mod env;
+pub mod eval;
+pub mod lexer;
+pub mod parser;
+pub mod serialize;
+pub mod value;
+
+pub use ast::{Arg, Expr, Param};
+pub use env::{Env, EnvRef};
+pub use eval::{EvalResult, Interp, Signal};
+pub use value::RVal;
+
+/// Parse a complete program (sequence of expressions).
+pub fn parse_program(src: &str) -> Result<Vec<Expr>, String> {
+    let toks = lexer::lex(src)?;
+    parser::Parser::new(toks).parse_program()
+}
+
+/// Parse a single expression.
+pub fn parse_expr(src: &str) -> Result<Expr, String> {
+    let exprs = parse_program(src)?;
+    match exprs.len() {
+        1 => Ok(exprs.into_iter().next().unwrap()),
+        0 => Err("empty input".into()),
+        n => Err(format!("expected a single expression, got {n}")),
+    }
+}

@@ -1,0 +1,802 @@
+//! Recursive-descent parser for rlite.
+//!
+//! Operator precedence follows R (low → high):
+//!
+//! `<- = ->`  <  `| ||`  <  `& &&`  <  `!`  <  comparisons  <  `+ -`
+//! <  `* /`  <  `%op%` and `|>`  <  `:`  <  unary `-`  <  `^`
+//! <  postfix (`f()`, `x[..]`, `x[[..]]`, `$`, `::`).
+//!
+//! The native pipe is desugared at parse time exactly as in R 4.1:
+//! `lhs |> f(a, b)` becomes `f(lhs, a, b)`; `lhs |> f` becomes `f(lhs)`.
+//! Newlines terminate statements at top level but are transparent inside
+//! any bracketed context and after a binary operator.
+
+use super::ast::{Arg, Expr, Param};
+use super::lexer::{Tok, Token};
+
+pub struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+    /// Nesting depth of `(`, `[`, `[[` — newlines are transparent when > 0.
+    depth: usize,
+}
+
+impl Parser {
+    pub fn new(toks: Vec<Token>) -> Self {
+        Parser { toks, pos: 0, depth: 0 }
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|t| &t.kind)
+    }
+
+    fn peek_at(&self, n: usize) -> Option<&Tok> {
+        self.toks.get(self.pos + n).map(|t| &t.kind)
+    }
+
+    fn bump(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).map(|t| t.kind.clone());
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err(&self, msg: &str) -> String {
+        match self.toks.get(self.pos) {
+            Some(t) => format!("parse error at {}:{}: {} (found {:?})", t.line, t.col, msg, t.kind),
+            None => format!("parse error at end of input: {msg}"),
+        }
+    }
+
+    fn eat(&mut self, want: &Tok, what: &str) -> Result<(), String> {
+        if self.peek() == Some(want) {
+            self.bump();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {what}")))
+        }
+    }
+
+    fn skip_newlines(&mut self) {
+        while matches!(self.peek(), Some(Tok::Newline)) {
+            self.bump();
+        }
+    }
+
+    fn skip_separators(&mut self) {
+        while matches!(self.peek(), Some(Tok::Newline) | Some(Tok::Semi)) {
+            self.bump();
+        }
+    }
+
+    /// Peek the next token, looking through newlines when inside brackets.
+    fn peek_op(&mut self) -> Option<&Tok> {
+        if self.depth > 0 {
+            self.skip_newlines();
+        }
+        self.peek()
+    }
+
+    pub fn parse_program(&mut self) -> Result<Vec<Expr>, String> {
+        let mut out = Vec::new();
+        loop {
+            self.skip_separators();
+            if self.peek().is_none() {
+                break;
+            }
+            out.push(self.parse_expr()?);
+            // An expression must be followed by a separator or EOF.
+            match self.peek() {
+                None | Some(Tok::Newline) | Some(Tok::Semi) => {}
+                Some(_) => return Err(self.err("expected end of statement")),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse_expr(&mut self) -> Result<Expr, String> {
+        self.parse_assign()
+    }
+
+    fn parse_assign(&mut self) -> Result<Expr, String> {
+        let lhs = self.parse_formula()?;
+        match self.peek_op() {
+            Some(Tok::LeftAssign) | Some(Tok::Eq) => {
+                self.bump();
+                self.skip_newlines();
+                let rhs = self.parse_assign()?;
+                Ok(Expr::Assign { target: Box::new(lhs), value: Box::new(rhs) })
+            }
+            Some(Tok::SuperAssign) => {
+                self.bump();
+                self.skip_newlines();
+                let rhs = self.parse_assign()?;
+                Ok(Expr::SuperAssign { target: Box::new(lhs), value: Box::new(rhs) })
+            }
+            Some(Tok::RightAssign) => {
+                self.bump();
+                self.skip_newlines();
+                let target = self.parse_formula()?;
+                Ok(Expr::Assign { target: Box::new(target), value: Box::new(lhs) })
+            }
+            _ => Ok(lhs),
+        }
+    }
+
+    /// `lhs ~ rhs` and unary `~ rhs` (model formulas). Lower precedence
+    /// than `|`/`||` so `y ~ x + (1 | g)` groups as expected.
+    fn parse_formula(&mut self) -> Result<Expr, String> {
+        if matches!(self.peek(), Some(Tok::Tilde)) {
+            self.bump();
+            self.skip_newlines();
+            let rhs = self.parse_or()?;
+            return Ok(Expr::call("~", vec![Arg::pos(rhs)]));
+        }
+        let lhs = self.parse_or()?;
+        if matches!(self.peek_op(), Some(Tok::Tilde)) {
+            self.bump();
+            self.skip_newlines();
+            let rhs = self.parse_or()?;
+            return Ok(Expr::call("~", vec![Arg::pos(lhs), Arg::pos(rhs)]));
+        }
+        Ok(lhs)
+    }
+
+    fn parse_or(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.parse_and()?;
+        loop {
+            let op = match self.peek_op() {
+                Some(Tok::Or) => "|",
+                Some(Tok::OrOr) => "||",
+                _ => break,
+            };
+            self.bump();
+            self.skip_newlines();
+            let rhs = self.parse_and()?;
+            lhs = Expr::call(op, vec![Arg::pos(lhs), Arg::pos(rhs)]);
+        }
+        Ok(lhs)
+    }
+
+    fn parse_and(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.parse_not()?;
+        loop {
+            let op = match self.peek_op() {
+                Some(Tok::And) => "&",
+                Some(Tok::AndAnd) => "&&",
+                _ => break,
+            };
+            self.bump();
+            self.skip_newlines();
+            let rhs = self.parse_not()?;
+            lhs = Expr::call(op, vec![Arg::pos(lhs), Arg::pos(rhs)]);
+        }
+        Ok(lhs)
+    }
+
+    fn parse_not(&mut self) -> Result<Expr, String> {
+        if matches!(self.peek(), Some(Tok::Bang)) {
+            self.bump();
+            self.skip_newlines();
+            let e = self.parse_not()?;
+            Ok(Expr::call("!", vec![Arg::pos(e)]))
+        } else {
+            self.parse_cmp()
+        }
+    }
+
+    fn parse_cmp(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.parse_add()?;
+        loop {
+            let op = match self.peek_op() {
+                Some(Tok::EqEq) => "==",
+                Some(Tok::Neq) => "!=",
+                Some(Tok::Lt) => "<",
+                Some(Tok::Gt) => ">",
+                Some(Tok::Le) => "<=",
+                Some(Tok::Ge) => ">=",
+                _ => break,
+            };
+            self.bump();
+            self.skip_newlines();
+            let rhs = self.parse_add()?;
+            lhs = Expr::call(op, vec![Arg::pos(lhs), Arg::pos(rhs)]);
+        }
+        Ok(lhs)
+    }
+
+    fn parse_add(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.parse_mul()?;
+        loop {
+            let op = match self.peek_op() {
+                Some(Tok::Plus) => "+",
+                Some(Tok::Minus) => "-",
+                _ => break,
+            };
+            self.bump();
+            self.skip_newlines();
+            let rhs = self.parse_mul()?;
+            lhs = Expr::call(op, vec![Arg::pos(lhs), Arg::pos(rhs)]);
+        }
+        Ok(lhs)
+    }
+
+    fn parse_mul(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.parse_special()?;
+        loop {
+            let op = match self.peek_op() {
+                Some(Tok::Star) => "*",
+                Some(Tok::Slash) => "/",
+                _ => break,
+            };
+            self.bump();
+            self.skip_newlines();
+            let rhs = self.parse_special()?;
+            lhs = Expr::call(op, vec![Arg::pos(lhs), Arg::pos(rhs)]);
+        }
+        Ok(lhs)
+    }
+
+    /// `%op%` user infixes and the native pipe `|>` share a precedence
+    /// level (left-associative), as in R.
+    fn parse_special(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.parse_range()?;
+        loop {
+            match self.peek_op().cloned() {
+                Some(Tok::Infix(name)) => {
+                    self.bump();
+                    self.skip_newlines();
+                    let rhs = self.parse_range()?;
+                    lhs = Expr::call(&name, vec![Arg::pos(lhs), Arg::pos(rhs)]);
+                }
+                Some(Tok::Pipe) => {
+                    self.bump();
+                    self.skip_newlines();
+                    let rhs = self.parse_range()?;
+                    lhs = desugar_pipe(lhs, rhs)?;
+                }
+                _ => break,
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn parse_range(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.parse_unary()?;
+        while matches!(self.peek_op(), Some(Tok::Colon)) {
+            self.bump();
+            self.skip_newlines();
+            let rhs = self.parse_unary()?;
+            lhs = Expr::call(":", vec![Arg::pos(lhs), Arg::pos(rhs)]);
+        }
+        Ok(lhs)
+    }
+
+    fn parse_unary(&mut self) -> Result<Expr, String> {
+        match self.peek() {
+            Some(Tok::Minus) => {
+                self.bump();
+                let e = self.parse_unary()?;
+                // Constant-fold negative literals for readable deparse.
+                Ok(match e {
+                    Expr::Num(v) => Expr::Num(-v),
+                    Expr::Int(v) => Expr::Int(-v),
+                    other => Expr::call("-", vec![Arg::pos(other)]),
+                })
+            }
+            Some(Tok::Plus) => {
+                self.bump();
+                self.parse_unary()
+            }
+            _ => self.parse_power(),
+        }
+    }
+
+    fn parse_power(&mut self) -> Result<Expr, String> {
+        let base = self.parse_postfix()?;
+        if matches!(self.peek_op(), Some(Tok::Caret)) {
+            self.bump();
+            self.skip_newlines();
+            let exp = self.parse_unary()?; // right-assoc
+            Ok(Expr::call("^", vec![Arg::pos(base), Arg::pos(exp)]))
+        } else {
+            Ok(base)
+        }
+    }
+
+    fn parse_postfix(&mut self) -> Result<Expr, String> {
+        let mut e = self.parse_primary()?;
+        loop {
+            match self.peek() {
+                Some(Tok::LParen) => {
+                    self.bump();
+                    self.depth += 1;
+                    let args = self.parse_args(&Tok::RParen)?;
+                    self.depth -= 1;
+                    self.eat(&Tok::RParen, ")")?;
+                    e = Expr::Call { func: Box::new(e), args };
+                }
+                Some(Tok::LBracket) => {
+                    self.bump();
+                    self.depth += 1;
+                    let args = self.parse_args(&Tok::RBracket)?;
+                    self.depth -= 1;
+                    self.eat(&Tok::RBracket, "]")?;
+                    e = Expr::Index { obj: Box::new(e), args, double: false };
+                }
+                Some(Tok::DoubleLBracket) => {
+                    self.bump();
+                    self.depth += 1;
+                    let args = self.parse_args(&Tok::DoubleRBracket)?;
+                    self.depth -= 1;
+                    self.eat(&Tok::DoubleRBracket, "]]")?;
+                    e = Expr::Index { obj: Box::new(e), args, double: true };
+                }
+                Some(Tok::Dollar) => {
+                    self.bump();
+                    match self.bump() {
+                        Some(Tok::Ident(name)) => {
+                            e = Expr::Dollar { obj: Box::new(e), name };
+                        }
+                        Some(Tok::Str(name)) => {
+                            e = Expr::Dollar { obj: Box::new(e), name };
+                        }
+                        _ => return Err(self.err("expected name after $")),
+                    }
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    /// Parse a comma-separated argument list up to (not including) `end`.
+    /// Handles named arguments (`n = 10`), elided arguments, and `...`.
+    fn parse_args(&mut self, end: &Tok) -> Result<Vec<Arg>, String> {
+        let mut args = Vec::new();
+        self.skip_newlines();
+        if self.peek() == Some(end) {
+            return Ok(args);
+        }
+        loop {
+            self.skip_newlines();
+            // Elided argument: `x[, 1]` or trailing `f(a, )`.
+            if self.peek() == Some(&Tok::Comma) || self.peek() == Some(end) {
+                args.push(Arg::pos(Expr::Missing));
+            } else {
+                // Named argument lookahead: Ident/Str `=` (but not `==`).
+                let named = match (self.peek(), self.peek_at(1)) {
+                    (Some(Tok::Ident(_)), Some(Tok::Eq)) | (Some(Tok::Str(_)), Some(Tok::Eq)) => {
+                        true
+                    }
+                    _ => false,
+                };
+                if named {
+                    let name = match self.bump() {
+                        Some(Tok::Ident(n)) | Some(Tok::Str(n)) => n,
+                        _ => unreachable!(),
+                    };
+                    self.bump(); // =
+                    self.skip_newlines();
+                    let value = self.parse_or_missing(end)?;
+                    args.push(Arg { name: Some(name), value });
+                } else {
+                    let value = self.parse_expr()?;
+                    args.push(Arg::pos(value));
+                }
+            }
+            self.skip_newlines();
+            if self.peek() == Some(&Tok::Comma) {
+                self.bump();
+                self.skip_newlines();
+                if self.peek() == Some(end) {
+                    break; // trailing comma
+                }
+            } else {
+                break;
+            }
+        }
+        Ok(args)
+    }
+
+    fn parse_or_missing(&mut self, end: &Tok) -> Result<Expr, String> {
+        if self.peek() == Some(&Tok::Comma) || self.peek() == Some(end) {
+            Ok(Expr::Missing)
+        } else {
+            self.parse_expr()
+        }
+    }
+
+    fn parse_params(&mut self) -> Result<Vec<Param>, String> {
+        self.eat(&Tok::LParen, "( after function")?;
+        self.depth += 1;
+        let mut params = Vec::new();
+        self.skip_newlines();
+        while self.peek() != Some(&Tok::RParen) {
+            let name = match self.bump() {
+                Some(Tok::Ident(n)) => n,
+                Some(Tok::Dots) => "...".to_string(),
+                _ => {
+                    self.depth -= 1;
+                    return Err(self.err("expected parameter name"));
+                }
+            };
+            let default = if self.peek() == Some(&Tok::Eq) {
+                self.bump();
+                self.skip_newlines();
+                Some(self.parse_expr()?)
+            } else {
+                None
+            };
+            params.push(Param { name, default });
+            self.skip_newlines();
+            if self.peek() == Some(&Tok::Comma) {
+                self.bump();
+                self.skip_newlines();
+            } else {
+                break;
+            }
+        }
+        self.depth -= 1;
+        self.eat(&Tok::RParen, ") after parameters")?;
+        Ok(params)
+    }
+
+    fn parse_primary(&mut self) -> Result<Expr, String> {
+        match self.peek().cloned() {
+            Some(Tok::Num(v)) => {
+                self.bump();
+                Ok(Expr::Num(v))
+            }
+            Some(Tok::Int(v)) => {
+                self.bump();
+                Ok(Expr::Int(v))
+            }
+            Some(Tok::Str(s)) => {
+                self.bump();
+                Ok(Expr::Str(s))
+            }
+            Some(Tok::True) => {
+                self.bump();
+                Ok(Expr::Bool(true))
+            }
+            Some(Tok::False) => {
+                self.bump();
+                Ok(Expr::Bool(false))
+            }
+            Some(Tok::Null) => {
+                self.bump();
+                Ok(Expr::Null)
+            }
+            Some(Tok::Na) => {
+                self.bump();
+                Ok(Expr::Num(f64::NAN)) // simplified NA model
+            }
+            Some(Tok::Inf) => {
+                self.bump();
+                Ok(Expr::Num(f64::INFINITY))
+            }
+            Some(Tok::NaN) => {
+                self.bump();
+                Ok(Expr::Num(f64::NAN))
+            }
+            Some(Tok::Dots) => {
+                self.bump();
+                Ok(Expr::Dots)
+            }
+            Some(Tok::Break) => {
+                self.bump();
+                Ok(Expr::Break)
+            }
+            Some(Tok::Next) => {
+                self.bump();
+                Ok(Expr::Next)
+            }
+            Some(Tok::Ident(name)) => {
+                self.bump();
+                if self.peek() == Some(&Tok::DoubleColon) {
+                    self.bump();
+                    match self.bump() {
+                        Some(Tok::Ident(fname)) => Ok(Expr::Ns { pkg: name, name: fname }),
+                        _ => Err(self.err("expected name after ::")),
+                    }
+                } else if name == "..." {
+                    Ok(Expr::Dots)
+                } else {
+                    Ok(Expr::Sym(name))
+                }
+            }
+            Some(Tok::LParen) => {
+                self.bump();
+                self.depth += 1;
+                self.skip_newlines();
+                let e = self.parse_expr()?;
+                self.skip_newlines();
+                self.depth -= 1;
+                self.eat(&Tok::RParen, ")")?;
+                // `( e )` is semantically transparent but kept as a call so
+                // the transpiler can unwrap it, mirroring R's `(`.
+                Ok(Expr::call("(", vec![Arg::pos(e)]))
+            }
+            Some(Tok::LBrace) => {
+                self.bump();
+                // Inside a block, newlines separate statements again even
+                // if the block itself sits inside parentheses.
+                let saved_depth = std::mem::take(&mut self.depth);
+                let mut body = Vec::new();
+                loop {
+                    self.skip_separators();
+                    if self.peek() == Some(&Tok::RBrace) {
+                        break;
+                    }
+                    if self.peek().is_none() {
+                        return Err(self.err("unterminated { block"));
+                    }
+                    body.push(self.parse_expr()?);
+                    match self.peek() {
+                        Some(Tok::Newline) | Some(Tok::Semi) | Some(Tok::RBrace) => {}
+                        _ => return Err(self.err("expected end of statement in block")),
+                    }
+                }
+                self.eat(&Tok::RBrace, "}")?;
+                self.depth = saved_depth;
+                Ok(Expr::Block(body))
+            }
+            Some(Tok::Function) => {
+                self.bump();
+                let params = self.parse_params()?;
+                self.skip_newlines();
+                let body = self.parse_expr()?;
+                Ok(Expr::Function { params, body: Box::new(body) })
+            }
+            Some(Tok::Backslash) => {
+                self.bump();
+                let params = self.parse_params()?;
+                self.skip_newlines();
+                let body = self.parse_expr()?;
+                Ok(Expr::Function { params, body: Box::new(body) })
+            }
+            Some(Tok::If) => {
+                self.bump();
+                self.eat(&Tok::LParen, "( after if")?;
+                self.depth += 1;
+                self.skip_newlines();
+                let cond = self.parse_expr()?;
+                self.skip_newlines();
+                self.depth -= 1;
+                self.eat(&Tok::RParen, ") after if condition")?;
+                self.skip_newlines();
+                let then = self.parse_expr()?;
+                // Allow `else` after newline (R allows this inside blocks;
+                // we allow it everywhere for simplicity).
+                let save = self.pos;
+                self.skip_newlines();
+                let els = if self.peek() == Some(&Tok::Else) {
+                    self.bump();
+                    self.skip_newlines();
+                    Some(Box::new(self.parse_expr()?))
+                } else {
+                    self.pos = save;
+                    None
+                };
+                Ok(Expr::If { cond: Box::new(cond), then: Box::new(then), els })
+            }
+            Some(Tok::For) => {
+                self.bump();
+                self.eat(&Tok::LParen, "( after for")?;
+                let var = match self.bump() {
+                    Some(Tok::Ident(n)) => n,
+                    _ => return Err(self.err("expected loop variable")),
+                };
+                self.eat(&Tok::In, "in")?;
+                self.depth += 1;
+                let seq = self.parse_expr()?;
+                self.depth -= 1;
+                self.eat(&Tok::RParen, ") after for")?;
+                self.skip_newlines();
+                let body = self.parse_expr()?;
+                Ok(Expr::For { var, seq: Box::new(seq), body: Box::new(body) })
+            }
+            Some(Tok::While) => {
+                self.bump();
+                self.eat(&Tok::LParen, "( after while")?;
+                self.depth += 1;
+                let cond = self.parse_expr()?;
+                self.depth -= 1;
+                self.eat(&Tok::RParen, ") after while")?;
+                self.skip_newlines();
+                let body = self.parse_expr()?;
+                Ok(Expr::While { cond: Box::new(cond), body: Box::new(body) })
+            }
+            _ => Err(self.err("expected expression")),
+        }
+    }
+}
+
+/// R 4.1 native-pipe desugaring: `lhs |> f(a)` → `f(lhs, a)`;
+/// `lhs |> pkg::f()` → `pkg::f(lhs)`; a bare function name is also
+/// accepted (`lhs |> f` → `f(lhs)`).
+fn desugar_pipe(lhs: Expr, rhs: Expr) -> Result<Expr, String> {
+    match rhs {
+        Expr::Call { func, mut args } => {
+            args.insert(0, Arg::pos(lhs));
+            Ok(Expr::Call { func, args })
+        }
+        f @ (Expr::Sym(_) | Expr::Ns { .. }) => {
+            Ok(Expr::Call { func: Box::new(f), args: vec![Arg::pos(lhs)] })
+        }
+        other => Err(format!("invalid rhs of |>: {:?}", other)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{parse_expr, parse_program};
+    use super::*;
+
+    #[test]
+    fn parses_pipe_to_futurize() {
+        let e = parse_expr("lapply(xs, fcn) |> futurize()").unwrap();
+        assert_eq!(e.call_name(), Some("futurize"));
+        let (_, args) = e.as_call().unwrap();
+        assert_eq!(args.len(), 1);
+        assert_eq!(args[0].value.call_name(), Some("lapply"));
+    }
+
+    #[test]
+    fn pipe_bare_function() {
+        let e = parse_expr("x |> sqrt").unwrap();
+        assert_eq!(e.call_name(), Some("sqrt"));
+    }
+
+    #[test]
+    fn pipe_inserts_first() {
+        let e = parse_expr("xs |> map(f, n = 10)").unwrap();
+        let (_, args) = e.as_call().unwrap();
+        assert_eq!(args.len(), 3);
+        assert_eq!(args[0].value, Expr::Sym("xs".into()));
+        assert_eq!(args[2].name.as_deref(), Some("n"));
+    }
+
+    #[test]
+    fn do_infix_binds_before_pipe_left_assoc() {
+        // ((foreach(x = xs) %do% { ... }) |> futurize())
+        let e = parse_expr("foreach(x = xs) %do% { slow_fcn(x) } |> futurize()").unwrap();
+        assert_eq!(e.call_name(), Some("futurize"));
+        let (_, args) = e.as_call().unwrap();
+        assert_eq!(args[0].value.call_name(), Some("%do%"));
+    }
+
+    #[test]
+    fn range_binds_tighter_than_pipe() {
+        let e = parse_expr("1:100 |> map(f)").unwrap();
+        let (_, args) = e.as_call().unwrap();
+        assert_eq!(args[0].value.call_name(), Some(":"));
+    }
+
+    #[test]
+    fn assignment_and_multiline_pipeline() {
+        let prog = parse_program(
+            "ys <- 1:100 |>\n  map(rnorm, n = 10) |> futurize(seed = TRUE) |>\n  map_dbl(mean) |> futurize()\n",
+        )
+        .unwrap();
+        assert_eq!(prog.len(), 1);
+        match &prog[0] {
+            Expr::Assign { value, .. } => assert_eq!(value.call_name(), Some("futurize")),
+            other => panic!("expected assign, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn function_definition_with_default() {
+        let e = parse_expr("function(x, n = 10) { x + n }").unwrap();
+        match e {
+            Expr::Function { params, .. } => {
+                assert_eq!(params.len(), 2);
+                assert_eq!(params[1].default, Some(Expr::Num(10.0)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn lambda_shorthand() {
+        let e = parse_expr(r"\(x) sqrt(x)").unwrap();
+        assert!(matches!(e, Expr::Function { .. }));
+    }
+
+    #[test]
+    fn namespaced_call() {
+        let e = parse_expr("purrr::map(xs, f)").unwrap();
+        assert_eq!(e.call_name(), Some("map"));
+        assert_eq!(e.call_namespace(), Some("purrr"));
+    }
+
+    #[test]
+    fn precedence_power_and_unary() {
+        // -x^2 parses as -(x^2)
+        let e = parse_expr("-x^2").unwrap();
+        assert_eq!(e.call_name(), Some("-"));
+        let (_, args) = e.as_call().unwrap();
+        assert_eq!(args[0].value.call_name(), Some("^"));
+    }
+
+    #[test]
+    fn block_with_statements() {
+        let e = parse_expr("{\n a <- 1\n b <- 2\n a + b\n}").unwrap();
+        match e {
+            Expr::Block(stmts) => assert_eq!(stmts.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn if_else_and_for() {
+        let e = parse_expr("if (x > 1) 1 else 2").unwrap();
+        assert!(matches!(e, Expr::If { els: Some(_), .. }));
+        let e = parse_expr("for (i in 1:10) { s <- s + i }").unwrap();
+        assert!(matches!(e, Expr::For { .. }));
+    }
+
+    #[test]
+    fn double_bracket_index() {
+        let e = parse_expr("xs[[3]]").unwrap();
+        assert!(matches!(e, Expr::Index { double: true, .. }));
+        let e = parse_expr("df$a").unwrap();
+        assert!(matches!(e, Expr::Dollar { .. }));
+    }
+
+    #[test]
+    fn right_assign() {
+        let e = parse_expr("1 + 2 -> y").unwrap();
+        match e {
+            Expr::Assign { target, .. } => assert_eq!(*target, Expr::Sym("y".into())),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn elided_args() {
+        let e = parse_expr("x[, 1]").unwrap();
+        match e {
+            Expr::Index { args, .. } => {
+                assert_eq!(args.len(), 2);
+                assert_eq!(args[0].value, Expr::Missing);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn program_with_library_calls() {
+        let prog = parse_program(
+            "library(future)\nplan(multisession)\nxs <- 1:100\nys <- lapply(xs, slow_fcn) |> futurize()\n",
+        )
+        .unwrap();
+        assert_eq!(prog.len(), 4);
+    }
+
+    #[test]
+    fn times_do_pipe_chain() {
+        let e = parse_expr("times(100) %do% rnorm(10) |> futurize()").unwrap();
+        assert_eq!(e.call_name(), Some("futurize"));
+        let (_, args) = e.as_call().unwrap();
+        assert_eq!(args[0].value.call_name(), Some("%do%"));
+    }
+
+    #[test]
+    fn trailing_else_after_newline() {
+        let e = parse_expr("{ if (x) 1\n else 2 }").unwrap();
+        match e {
+            Expr::Block(v) => assert!(matches!(v[0], Expr::If { els: Some(_), .. })),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn suppress_wrapper_chain_parses() {
+        let e = parse_expr("{ lapply(xs, fcn) } |> suppressMessages() |> futurize()").unwrap();
+        assert_eq!(e.call_name(), Some("futurize"));
+    }
+}

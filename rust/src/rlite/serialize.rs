@@ -1,0 +1,181 @@
+//! Wire format for shipping values (including closures) to worker
+//! processes.
+//!
+//! [`RVal`] is not directly serializable because closures hold live
+//! environment references. Following the future framework's semantics,
+//! closures cross the process boundary *by value*: we statically identify
+//! the free variables of the closure body and snapshot their current
+//! values (recursively). This is exactly what `future()` does when it
+//! exports globals to a PSOCK worker.
+
+use serde_derive::{Deserialize, Serialize};
+
+use super::ast::{Expr, Param};
+use super::conditions::RCondition;
+use super::env::{self, Env, EnvRef};
+use super::value::{RClosure, RList, RVal, RVec};
+use crate::globals;
+
+/// Serializable mirror of [`RVal`].
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub enum WireVal {
+    Null,
+    Lgl(Vec<bool>, Option<Vec<String>>),
+    Int(Vec<i64>, Option<Vec<String>>),
+    Dbl(Vec<f64>, Option<Vec<String>>),
+    Chr(Vec<String>, Option<Vec<String>>),
+    List(Vec<WireVal>, Option<Vec<String>>, Option<String>),
+    Closure { params: Vec<Param>, body: Expr, captured: Vec<(String, WireVal)> },
+    Builtin(String),
+    Cond(RCondition),
+}
+
+impl WireVal {
+    /// Rough serialized footprint (bytes), for export-size accounting.
+    pub fn approx_size(&self) -> usize {
+        match self {
+            WireVal::Null => 4,
+            WireVal::Lgl(v, _) => v.len() + 8,
+            WireVal::Int(v, _) => v.len() * 8 + 8,
+            WireVal::Dbl(v, _) => v.len() * 8 + 8,
+            WireVal::Chr(v, _) => v.iter().map(|s| s.len() + 8).sum::<usize>() + 8,
+            WireVal::List(v, _, _) => v.iter().map(|x| x.approx_size()).sum::<usize>() + 16,
+            WireVal::Closure { captured, .. } => {
+                256 + captured.iter().map(|(n, v)| n.len() + v.approx_size()).sum::<usize>()
+            }
+            WireVal::Builtin(n) => n.len() + 8,
+            WireVal::Cond(c) => c.message.len() + 64,
+        }
+    }
+}
+
+/// Convert a value to wire form. Closures capture their free variables by
+/// value; environments and other live handles are rejected (they cannot
+/// meaningfully cross a process boundary — same restriction as R).
+pub fn to_wire(v: &RVal) -> Result<WireVal, String> {
+    match v {
+        RVal::Null => Ok(WireVal::Null),
+        RVal::Lgl(x) => Ok(WireVal::Lgl(x.vals.clone(), x.names.clone())),
+        RVal::Int(x) => Ok(WireVal::Int(x.vals.clone(), x.names.clone())),
+        RVal::Dbl(x) => Ok(WireVal::Dbl(x.vals.clone(), x.names.clone())),
+        RVal::Chr(x) => Ok(WireVal::Chr(x.vals.clone(), x.names.clone())),
+        RVal::List(l) => {
+            let vals: Result<Vec<WireVal>, String> = l.vals.iter().map(to_wire).collect();
+            Ok(WireVal::List(vals?, l.names.clone(), l.class.clone()))
+        }
+        RVal::Builtin(key) => Ok(WireVal::Builtin(key.clone())),
+        RVal::Cond(c) => Ok(WireVal::Cond((**c).clone())),
+        RVal::Closure(c) => {
+            let mut captured = Vec::new();
+            // Snapshot free variables of the body (minus the params).
+            let body_fn = Expr::Function {
+                params: c.params.clone(),
+                body: Box::new(c.body.clone()),
+            };
+            for name in globals::free_variables(&body_fn) {
+                if let Some(val) = env::lookup(&c.env, &name) {
+                    if matches!(val, RVal::Builtin(_)) {
+                        continue;
+                    }
+                    captured.push((name.clone(), to_wire(&val)?));
+                }
+                // Builtins and not-found symbols resolve on the worker.
+            }
+            Ok(WireVal::Closure { params: c.params.clone(), body: c.body.clone(), captured })
+        }
+        RVal::Env(_) => Err("cannot serialize an environment across processes".into()),
+    }
+}
+
+/// Reconstruct a value on the worker side. Closures are re-rooted on a
+/// fresh environment seeded with their captured variables, whose parent
+/// is `base_env` (the worker's global environment).
+pub fn from_wire(w: &WireVal, base_env: &EnvRef) -> RVal {
+    match w {
+        WireVal::Null => RVal::Null,
+        WireVal::Lgl(v, n) => RVal::Lgl(RVec { vals: v.clone(), names: n.clone() }),
+        WireVal::Int(v, n) => RVal::Int(RVec { vals: v.clone(), names: n.clone() }),
+        WireVal::Dbl(v, n) => RVal::Dbl(RVec { vals: v.clone(), names: n.clone() }),
+        WireVal::Chr(v, n) => RVal::Chr(RVec { vals: v.clone(), names: n.clone() }),
+        WireVal::List(v, n, class) => RVal::List(RList {
+            vals: v.iter().map(|x| from_wire(x, base_env)).collect(),
+            names: n.clone(),
+            class: class.clone(),
+        }),
+        WireVal::Builtin(key) => RVal::Builtin(key.clone()),
+        WireVal::Cond(c) => RVal::Cond(Box::new(c.clone())),
+        WireVal::Closure { params, body, captured } => {
+            let env = Env::child_of(base_env);
+            for (name, val) in captured {
+                env::define(&env, name, from_wire(val, base_env));
+            }
+            RVal::Closure(std::rc::Rc::new(RClosure {
+                params: params.clone(),
+                body: body.clone(),
+                env,
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rlite::eval::Interp;
+    use crate::rlite::env::define;
+
+    #[test]
+    fn atomic_roundtrip() {
+        let v = RVal::dbl(vec![1.0, 2.0]);
+        let w = to_wire(&v).unwrap();
+        let base = Env::new_ref();
+        assert_eq!(from_wire(&w, &base), v);
+    }
+
+    #[test]
+    fn closure_captures_free_vars_by_value() {
+        let mut i = Interp::new();
+        i.eval_program("a <- 10\nf <- function(x) x + a").unwrap();
+        let f = env::lookup(&i.global, "f").unwrap();
+        let w = to_wire(&f).unwrap();
+        // Mutate `a` after capture: the wire copy must keep the old value.
+        i.eval_program("a <- 999").unwrap();
+        let mut worker = Interp::new();
+        let g = from_wire(&w, &worker.global);
+        let genv = worker.global.clone();
+        define(&genv, "g", g);
+        let r = worker.eval_program("g(5)").unwrap();
+        assert_eq!(r, RVal::scalar_dbl(15.0));
+    }
+
+    #[test]
+    fn nested_closure_capture() {
+        let mut i = Interp::new();
+        i.eval_program("b <- 2\ninner <- function(y) y * b\nf <- function(x) inner(x) + 1")
+            .unwrap();
+        let f = env::lookup(&i.global, "f").unwrap();
+        let w = to_wire(&f).unwrap();
+        let mut worker = Interp::new();
+        let g = from_wire(&w, &worker.global);
+        define(&worker.global.clone(), "g", g);
+        assert_eq!(worker.eval_program("g(4)").unwrap(), RVal::scalar_dbl(9.0));
+    }
+
+    #[test]
+    fn env_is_rejected() {
+        let env = Env::new_ref();
+        assert!(to_wire(&RVal::Env(env)).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_of_wire() {
+        let w = WireVal::List(
+            vec![WireVal::Dbl(vec![1.0], None), WireVal::Chr(vec!["a".into()], None)],
+            Some(vec!["x".into(), "y".into()]),
+            None,
+        );
+        let s = crate::wire::to_string(&w).unwrap();
+        let back: WireVal = crate::wire::from_str(&s).unwrap();
+        assert_eq!(w, back);
+    }
+}

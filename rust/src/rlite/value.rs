@@ -1,0 +1,472 @@
+//! Runtime values for rlite.
+//!
+//! The model mirrors the R types the paper's examples need: typed vectors
+//! with optional names, heterogeneous lists (also used for data.frames),
+//! closures, builtins, and condition objects. Scalars are length-1
+//! vectors, as in R.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::rc::Rc;
+
+use super::ast::{Expr, Param};
+use super::conditions::RCondition;
+use super::env::EnvRef;
+
+/// A typed vector with optional element names.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct RVec<T> {
+    pub vals: Vec<T>,
+    pub names: Option<Vec<String>>,
+}
+
+impl<T> RVec<T> {
+    pub fn plain(vals: Vec<T>) -> Self {
+        RVec { vals, names: None }
+    }
+    pub fn named(vals: Vec<T>, names: Vec<String>) -> Self {
+        RVec { vals, names: Some(names) }
+    }
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+}
+
+/// A heterogeneous list, optionally named. Data-frame-like values are
+/// lists of equal-length column vectors with names plus the
+/// `"data.frame"` class attribute.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct RList {
+    pub vals: Vec<RVal>,
+    pub names: Option<Vec<String>>,
+    /// S3-style class attribute (e.g. `"data.frame"`, `"boot"`).
+    pub class: Option<String>,
+}
+
+impl RList {
+    pub fn plain(vals: Vec<RVal>) -> Self {
+        RList { vals, names: None, class: None }
+    }
+    pub fn named(vals: Vec<RVal>, names: Vec<String>) -> Self {
+        RList { vals, names: Some(names), class: None }
+    }
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+    pub fn get(&self, name: &str) -> Option<&RVal> {
+        let names = self.names.as_ref()?;
+        let idx = names.iter().position(|n| n == name)?;
+        self.vals.get(idx)
+    }
+    pub fn set(&mut self, name: &str, val: RVal) {
+        if self.names.is_none() {
+            self.names = Some(vec![String::new(); self.vals.len()]);
+        }
+        let names = self.names.as_mut().unwrap();
+        if let Some(idx) = names.iter().position(|n| n == name) {
+            self.vals[idx] = val;
+        } else {
+            names.push(name.to_string());
+            self.vals.push(val);
+        }
+    }
+}
+
+/// A user-defined closure: formals + body + defining environment.
+#[derive(Clone, Debug)]
+pub struct RClosure {
+    pub params: Vec<Param>,
+    pub body: Expr,
+    pub env: EnvRef,
+}
+
+impl PartialEq for RClosure {
+    fn eq(&self, other: &Self) -> bool {
+        self.params == other.params && self.body == other.body
+    }
+}
+
+/// An rlite runtime value.
+#[derive(Clone, Debug)]
+pub enum RVal {
+    Null,
+    Lgl(RVec<bool>),
+    Int(RVec<i64>),
+    Dbl(RVec<f64>),
+    Chr(RVec<String>),
+    List(RList),
+    Closure(Rc<RClosure>),
+    /// A builtin function, identified by name in the builtin registry.
+    Builtin(String),
+    /// A condition object (error/warning/message/custom), first-class so
+    /// `tryCatch(..., error = function(e) e)` can return it.
+    Cond(Box<RCondition>),
+    /// An environment as a value (used by `local()`, `environment()`).
+    Env(EnvRef),
+}
+
+impl PartialEq for RVal {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (RVal::Null, RVal::Null) => true,
+            (RVal::Lgl(a), RVal::Lgl(b)) => a == b,
+            (RVal::Int(a), RVal::Int(b)) => a == b,
+            (RVal::Dbl(a), RVal::Dbl(b)) => a == b,
+            (RVal::Chr(a), RVal::Chr(b)) => a == b,
+            (RVal::List(a), RVal::List(b)) => a == b,
+            (RVal::Closure(a), RVal::Closure(b)) => a == b,
+            (RVal::Builtin(a), RVal::Builtin(b)) => a == b,
+            (RVal::Cond(a), RVal::Cond(b)) => a == b,
+            // Environments compare by identity, as in R.
+            (RVal::Env(a), RVal::Env(b)) => std::rc::Rc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+}
+
+impl RVal {
+    // ---- constructors ---------------------------------------------------
+
+    pub fn scalar_dbl(v: f64) -> RVal {
+        RVal::Dbl(RVec::plain(vec![v]))
+    }
+    pub fn scalar_int(v: i64) -> RVal {
+        RVal::Int(RVec::plain(vec![v]))
+    }
+    pub fn scalar_bool(v: bool) -> RVal {
+        RVal::Lgl(RVec::plain(vec![v]))
+    }
+    pub fn scalar_str(v: impl Into<String>) -> RVal {
+        RVal::Chr(RVec::plain(vec![v.into()]))
+    }
+    pub fn dbl(vals: Vec<f64>) -> RVal {
+        RVal::Dbl(RVec::plain(vals))
+    }
+    pub fn int(vals: Vec<i64>) -> RVal {
+        RVal::Int(RVec::plain(vals))
+    }
+    pub fn chr(vals: Vec<String>) -> RVal {
+        RVal::Chr(RVec::plain(vals))
+    }
+    pub fn lgl(vals: Vec<bool>) -> RVal {
+        RVal::Lgl(RVec::plain(vals))
+    }
+    pub fn list(vals: Vec<RVal>) -> RVal {
+        RVal::List(RList::plain(vals))
+    }
+
+    // ---- inspection ------------------------------------------------------
+
+    /// `length()` semantics.
+    pub fn len(&self) -> usize {
+        match self {
+            RVal::Null => 0,
+            RVal::Lgl(v) => v.len(),
+            RVal::Int(v) => v.len(),
+            RVal::Dbl(v) => v.len(),
+            RVal::Chr(v) => v.len(),
+            RVal::List(l) => l.len(),
+            _ => 1,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, RVal::Null)
+    }
+
+    pub fn is_function(&self) -> bool {
+        matches!(self, RVal::Closure(_) | RVal::Builtin(_))
+    }
+
+    /// The R `class()` of this value.
+    pub fn class(&self) -> &str {
+        match self {
+            RVal::Null => "NULL",
+            RVal::Lgl(_) => "logical",
+            RVal::Int(_) => "integer",
+            RVal::Dbl(_) => "numeric",
+            RVal::Chr(_) => "character",
+            RVal::List(l) => l.class.as_deref().unwrap_or("list"),
+            RVal::Closure(_) | RVal::Builtin(_) => "function",
+            RVal::Cond(c) => c.primary_class(),
+            RVal::Env(_) => "environment",
+        }
+    }
+
+    /// Names attribute, if any.
+    pub fn names(&self) -> Option<&[String]> {
+        match self {
+            RVal::Lgl(v) => v.names.as_deref(),
+            RVal::Int(v) => v.names.as_deref(),
+            RVal::Dbl(v) => v.names.as_deref(),
+            RVal::Chr(v) => v.names.as_deref(),
+            RVal::List(l) => l.names.as_deref(),
+            _ => None,
+        }
+    }
+
+    pub fn set_names(&mut self, names: Option<Vec<String>>) {
+        match self {
+            RVal::Lgl(v) => v.names = names,
+            RVal::Int(v) => v.names = names,
+            RVal::Dbl(v) => v.names = names,
+            RVal::Chr(v) => v.names = names,
+            RVal::List(l) => l.names = names,
+            _ => {}
+        }
+    }
+
+    // ---- coercions -------------------------------------------------------
+
+    /// Coerce to a double vector (`as.numeric` semantics for the types we
+    /// support). Lists of length-1 numerics also flatten, supporting
+    /// `sapply`-style simplification.
+    pub fn as_dbl_vec(&self) -> Result<Vec<f64>, String> {
+        match self {
+            RVal::Null => Ok(vec![]),
+            RVal::Dbl(v) => Ok(v.vals.clone()),
+            RVal::Int(v) => Ok(v.vals.iter().map(|&x| x as f64).collect()),
+            RVal::Lgl(v) => Ok(v.vals.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect()),
+            RVal::List(l) => {
+                let mut out = Vec::with_capacity(l.len());
+                for v in &l.vals {
+                    let d = v.as_dbl_vec()?;
+                    out.extend(d);
+                }
+                Ok(out)
+            }
+            other => Err(format!("cannot coerce {} to numeric", other.class())),
+        }
+    }
+
+    /// First element as f64 (scalar contexts).
+    pub fn as_f64(&self) -> Result<f64, String> {
+        match self {
+            RVal::Dbl(v) if !v.is_empty() => Ok(v.vals[0]),
+            RVal::Int(v) if !v.is_empty() => Ok(v.vals[0] as f64),
+            RVal::Lgl(v) if !v.is_empty() => Ok(if v.vals[0] { 1.0 } else { 0.0 }),
+            other => Err(format!("expected a numeric scalar, got {}", other.class())),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, String> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 && f.fract().abs() > 1e-9 {
+            return Err(format!("expected a non-negative integer, got {f}"));
+        }
+        Ok(f as usize)
+    }
+
+    pub fn as_i64(&self) -> Result<i64, String> {
+        Ok(self.as_f64()? as i64)
+    }
+
+    pub fn as_bool(&self) -> Result<bool, String> {
+        match self {
+            RVal::Lgl(v) if !v.is_empty() => Ok(v.vals[0]),
+            RVal::Int(v) if !v.is_empty() => Ok(v.vals[0] != 0),
+            RVal::Dbl(v) if !v.is_empty() => Ok(v.vals[0] != 0.0),
+            other => Err(format!("expected a logical scalar, got {}", other.class())),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<String, String> {
+        match self {
+            RVal::Chr(v) if !v.is_empty() => Ok(v.vals[0].clone()),
+            other => Err(format!("expected a character scalar, got {}", other.class())),
+        }
+    }
+
+    pub fn as_str_vec(&self) -> Result<Vec<String>, String> {
+        match self {
+            RVal::Null => Ok(vec![]),
+            RVal::Chr(v) => Ok(v.vals.clone()),
+            RVal::Dbl(v) => Ok(v.vals.iter().map(|x| format_dbl(*x)).collect()),
+            RVal::Int(v) => Ok(v.vals.iter().map(|x| x.to_string()).collect()),
+            RVal::Lgl(v) => {
+                Ok(v.vals.iter().map(|b| if *b { "TRUE" } else { "FALSE" }.to_string()).collect())
+            }
+            other => Err(format!("cannot coerce {} to character", other.class())),
+        }
+    }
+
+    /// Split into per-element values for iteration: a list iterates its
+    /// elements; an atomic vector iterates scalars; a data.frame iterates
+    /// its *columns* (as R's `lapply` over a data.frame does).
+    pub fn iter_elements(&self) -> Vec<RVal> {
+        match self {
+            RVal::Null => vec![],
+            RVal::Lgl(v) => v.vals.iter().map(|&b| RVal::scalar_bool(b)).collect(),
+            RVal::Int(v) => v.vals.iter().map(|&x| RVal::scalar_int(x)).collect(),
+            RVal::Dbl(v) => v.vals.iter().map(|&x| RVal::scalar_dbl(x)).collect(),
+            RVal::Chr(v) => v.vals.iter().map(|s| RVal::scalar_str(s.clone())).collect(),
+            RVal::List(l) => l.vals.clone(),
+            other => vec![other.clone()],
+        }
+    }
+
+    /// Element names for iteration (used by `imap()` and friends).
+    pub fn element_names(&self) -> Option<Vec<String>> {
+        self.names().map(|n| n.to_vec())
+    }
+
+    /// Simplify a list to an atomic vector if every element is an atomic
+    /// scalar of a common type (the `sapply`/`map_dbl` rule). Equal-length
+    /// numeric vectors simplify to one column-major vector (R's
+    /// matrix-result rule for `sapply`/`replicate`, flattened — our matrix
+    /// model is a flat column-major vector).
+    pub fn simplify(list: Vec<RVal>, names: Option<Vec<String>>) -> RVal {
+        let all_scalar_num = list
+            .iter()
+            .all(|v| matches!(v, RVal::Dbl(x) if x.len() == 1) || matches!(v, RVal::Int(x) if x.len() == 1));
+        if !list.is_empty() && all_scalar_num {
+            let vals: Vec<f64> = list.iter().map(|v| v.as_f64().unwrap()).collect();
+            return RVal::Dbl(RVec { vals, names });
+        }
+        // Equal-length (>1) numeric columns → flat column-major vector.
+        let common_len = match list.first() {
+            Some(RVal::Dbl(x)) if x.len() > 1 => Some(x.len()),
+            Some(RVal::Int(x)) if x.len() > 1 => Some(x.len()),
+            _ => None,
+        };
+        if let Some(k) = common_len {
+            let all_cols = list.iter().all(|v| {
+                matches!(v, RVal::Dbl(x) if x.len() == k)
+                    || matches!(v, RVal::Int(x) if x.len() == k)
+            });
+            if all_cols {
+                let mut vals = Vec::with_capacity(k * list.len());
+                for v in &list {
+                    vals.extend(v.as_dbl_vec().unwrap());
+                }
+                return RVal::dbl(vals);
+            }
+        }
+        let all_scalar_lgl = list.iter().all(|v| matches!(v, RVal::Lgl(x) if x.len() == 1));
+        if !list.is_empty() && all_scalar_lgl {
+            let vals: Vec<bool> = list.iter().map(|v| v.as_bool().unwrap()).collect();
+            return RVal::Lgl(RVec { vals, names });
+        }
+        let all_scalar_chr = list.iter().all(|v| matches!(v, RVal::Chr(x) if x.len() == 1));
+        if !list.is_empty() && all_scalar_chr {
+            let vals: Vec<String> = list.iter().map(|v| v.as_str().unwrap()).collect();
+            return RVal::Chr(RVec { vals, names });
+        }
+        RVal::List(RList { vals: list, names, class: None })
+    }
+}
+
+/// Format a double the way R prints it in vectors (compact).
+pub fn format_dbl(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".into()
+    } else if x.is_infinite() {
+        if x > 0.0 { "Inf".into() } else { "-Inf".into() }
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        let s = format!("{:.6}", x);
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    }
+}
+
+impl fmt::Display for RVal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RVal::Null => write!(f, "NULL"),
+            RVal::Dbl(v) => write!(
+                f,
+                "[1] {}",
+                v.vals.iter().map(|x| format_dbl(*x)).collect::<Vec<_>>().join(" ")
+            ),
+            RVal::Int(v) => write!(
+                f,
+                "[1] {}",
+                v.vals.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(" ")
+            ),
+            RVal::Lgl(v) => write!(
+                f,
+                "[1] {}",
+                v.vals
+                    .iter()
+                    .map(|b| if *b { "TRUE" } else { "FALSE" })
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            ),
+            RVal::Chr(v) => write!(
+                f,
+                "[1] {}",
+                v.vals.iter().map(|s| format!("{s:?}")).collect::<Vec<_>>().join(" ")
+            ),
+            RVal::List(l) => {
+                write!(f, "list of {}", l.len())?;
+                if let Some(cls) = &l.class {
+                    write!(f, " <{cls}>")?;
+                }
+                Ok(())
+            }
+            RVal::Closure(_) => write!(f, "<closure>"),
+            RVal::Builtin(name) => write!(f, "<builtin: {name}>"),
+            RVal::Cond(c) => write!(f, "<condition: {}>", c.message),
+            RVal::Env(_) => write!(f, "<environment>"),
+        }
+    }
+}
+
+/// Shared mutable cell used for environments-as-values.
+pub type Cell<T> = Rc<RefCell<T>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simplify_scalars_to_dbl() {
+        let v = RVal::simplify(vec![RVal::scalar_dbl(1.0), RVal::scalar_int(2)], None);
+        assert_eq!(v, RVal::dbl(vec![1.0, 2.0]));
+    }
+
+    #[test]
+    fn simplify_keeps_list_when_mixed() {
+        let v = RVal::simplify(vec![RVal::scalar_dbl(1.0), RVal::dbl(vec![1.0, 2.0])], None);
+        assert!(matches!(v, RVal::List(_)));
+    }
+
+    #[test]
+    fn iter_elements_atomic() {
+        let v = RVal::int(vec![1, 2, 3]);
+        assert_eq!(v.iter_elements().len(), 3);
+    }
+
+    #[test]
+    fn named_list_get_set() {
+        let mut l = RList::named(vec![RVal::scalar_dbl(1.0)], vec!["a".into()]);
+        l.set("b", RVal::scalar_dbl(2.0));
+        assert_eq!(l.get("b"), Some(&RVal::scalar_dbl(2.0)));
+        l.set("a", RVal::scalar_dbl(9.0));
+        assert_eq!(l.get("a"), Some(&RVal::scalar_dbl(9.0)));
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn class_names() {
+        assert_eq!(RVal::scalar_dbl(1.0).class(), "numeric");
+        assert_eq!(RVal::list(vec![]).class(), "list");
+        let mut l = RList::plain(vec![]);
+        l.class = Some("data.frame".into());
+        assert_eq!(RVal::List(l).class(), "data.frame");
+    }
+
+    #[test]
+    fn format_dbl_compact() {
+        assert_eq!(format_dbl(2.0), "2");
+        assert_eq!(format_dbl(1.5), "1.5");
+        assert_eq!(format_dbl(1.414214), "1.414214");
+    }
+}

@@ -1,0 +1,208 @@
+//! Kernel entry points: PJRT artifact first, bit-equivalent native
+//! fallback second.
+//!
+//! Shapes are fixed at AOT time (PJRT requires static shapes); inputs are
+//! zero-padded to the block size and outputs truncated back. The Pallas
+//! kernels use masking so padding never contaminates results.
+
+use super::{pjrt_execute, BOOT_N, CHUNK_N, GRAM_N, GRAM_P};
+
+/// Elementwise 3x² + 2x + 1 (the "slow_fcn" compute payload).
+pub fn chunk_map(x: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(x.len());
+    for block in x.chunks(CHUNK_N) {
+        let mut buf = [0f32; CHUNK_N];
+        for (i, &v) in block.iter().enumerate() {
+            buf[i] = v as f32;
+        }
+        match pjrt_execute("chunk_map", &[(&buf, &[CHUNK_N])]) {
+            Some(res) => out.extend(res[..block.len()].iter().map(|&v| v as f64)),
+            None => out.extend(block.iter().map(|&v| 3.0 * v * v + 2.0 * v + 1.0)),
+        }
+    }
+    out
+}
+
+/// Weighted ratio statistic sum(w·x)/sum(w·u) — the `boot` bigcity
+/// statistic (ratio of urban 1930 to 1920 populations under resampling
+/// weights).
+pub fn boot_stat(x: &[f64], u: &[f64], w: &[f64]) -> Result<f64, String> {
+    if x.len() != u.len() || x.len() != w.len() {
+        return Err("boot_stat: x, u, w must have equal length".into());
+    }
+    if x.len() <= BOOT_N {
+        let mut bx = [0f32; BOOT_N];
+        let mut bu = [0f32; BOOT_N];
+        let mut bw = [0f32; BOOT_N];
+        for i in 0..x.len() {
+            bx[i] = x[i] as f32;
+            bu[i] = u[i] as f32;
+            bw[i] = w[i] as f32; // padding keeps w = 0 → no contribution
+        }
+        if let Some(res) =
+            pjrt_execute("boot_stat", &[(&bx, &[BOOT_N]), (&bu, &[BOOT_N]), (&bw, &[BOOT_N])])
+        {
+            // Artifact returns (num, den) so the division stays exact in f64.
+            if res.len() >= 2 && res[1] != 0.0 {
+                return Ok(res[0] as f64 / res[1] as f64);
+            }
+        }
+    }
+    let num: f64 = x.iter().zip(w).map(|(a, b)| a * b).sum();
+    let den: f64 = u.iter().zip(w).map(|(a, b)| a * b).sum();
+    if den == 0.0 {
+        return Err("boot_stat: zero denominator".into());
+    }
+    Ok(num / den)
+}
+
+/// Gram matrix X^T X (p×p, row-major) and X^T y for a column-major design
+/// matrix. The PJRT path requires n ≤ 256 and p ≤ 32 (the AOT block);
+/// larger problems use the native path.
+pub fn gram(cols: &[Vec<f64>], y: &[f64]) -> Result<(Vec<f64>, Vec<f64>), String> {
+    let p = cols.len();
+    if p == 0 {
+        return Err("gram: empty design matrix".into());
+    }
+    let n = cols[0].len();
+    if cols.iter().any(|c| c.len() != n) || y.len() != n {
+        return Err("gram: ragged design matrix".into());
+    }
+    if n <= GRAM_N && p <= GRAM_P {
+        // Pack row-major padded f32[GRAM_N, GRAM_P].
+        let mut xbuf = vec![0f32; GRAM_N * GRAM_P];
+        for (j, col) in cols.iter().enumerate() {
+            for (i, &v) in col.iter().enumerate() {
+                xbuf[i * GRAM_P + j] = v as f32;
+            }
+        }
+        let mut ybuf = [0f32; GRAM_N];
+        for (i, &v) in y.iter().enumerate() {
+            ybuf[i] = v as f32;
+        }
+        if let Some(res) =
+            pjrt_execute("gram", &[(&xbuf, &[GRAM_N, GRAM_P]), (&ybuf, &[GRAM_N])])
+        {
+            if res.len() >= GRAM_P * GRAM_P + GRAM_P {
+                let mut g = vec![0f64; p * p];
+                for i in 0..p {
+                    for j in 0..p {
+                        g[i * p + j] = res[i * GRAM_P + j] as f64;
+                    }
+                }
+                let xty: Vec<f64> =
+                    (0..p).map(|j| res[GRAM_P * GRAM_P + j] as f64).collect();
+                return Ok((g, xty));
+            }
+        }
+    }
+    // Native fallback.
+    let mut g = vec![0f64; p * p];
+    for i in 0..p {
+        for j in i..p {
+            let s: f64 = cols[i].iter().zip(&cols[j]).map(|(a, b)| a * b).sum();
+            g[i * p + j] = s;
+            g[j * p + i] = s;
+        }
+    }
+    let xty: Vec<f64> =
+        cols.iter().map(|c| c.iter().zip(y).map(|(a, b)| a * b).sum()).collect();
+    Ok((g, xty))
+}
+
+/// Solve the (small, symmetric positive-definite) system `(G + λI) β = b`
+/// by Cholesky — the cheap O(p³) half kept native by design (the heavy
+/// O(n·p²) gram runs on XLA).
+pub fn ridge_solve(g: &[f64], b: &[f64], lambda: f64) -> Result<Vec<f64>, String> {
+    let p = b.len();
+    if g.len() != p * p {
+        return Err("ridge_solve: dimension mismatch".into());
+    }
+    // A = G + λI
+    let mut a = g.to_vec();
+    for i in 0..p {
+        a[i * p + i] += lambda;
+    }
+    // Cholesky: A = L L^T
+    let mut l = vec![0f64; p * p];
+    for i in 0..p {
+        for j in 0..=i {
+            let mut s = a[i * p + j];
+            for k in 0..j {
+                s -= l[i * p + k] * l[j * p + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err("ridge_solve: matrix not positive definite".into());
+                }
+                l[i * p + i] = s.sqrt();
+            } else {
+                l[i * p + j] = s / l[j * p + j];
+            }
+        }
+    }
+    // Forward/back substitution.
+    let mut z = vec![0f64; p];
+    for i in 0..p {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * p + k] * z[k];
+        }
+        z[i] = s / l[i * p + i];
+    }
+    let mut beta = vec![0f64; p];
+    for i in (0..p).rev() {
+        let mut s = z[i];
+        for k in (i + 1)..p {
+            s -= l[k * p + i] * beta[k];
+        }
+        beta[i] = s / l[i * p + i];
+    }
+    Ok(beta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_map_handles_multi_block() {
+        let x: Vec<f64> = (0..300).map(|i| i as f64 / 10.0).collect();
+        let y = chunk_map(&x);
+        assert_eq!(y.len(), 300);
+        for (xi, yi) in x.iter().zip(&y) {
+            assert!((yi - (3.0 * xi * xi + 2.0 * xi + 1.0)).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gram_matches_naive() {
+        let cols = vec![vec![1.0, 2.0, 3.0], vec![0.5, -1.0, 2.0]];
+        let y = vec![1.0, 0.0, 1.0];
+        let (g, xty) = gram(&cols, &y).unwrap();
+        assert!((g[0] - 14.0).abs() < 1e-4); // 1+4+9
+        assert!((g[1] - 4.5).abs() < 1e-4); // 0.5-2+6
+        assert!((g[3] - 5.25).abs() < 1e-4); // 0.25+1+4
+        assert!((xty[0] - 4.0).abs() < 1e-4);
+        assert!((xty[1] - 2.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn ridge_solve_recovers_identity() {
+        // G = I, b = [1, 2], λ = 0 → β = b.
+        let beta = ridge_solve(&[1.0, 0.0, 0.0, 1.0], &[1.0, 2.0], 0.0).unwrap();
+        assert!((beta[0] - 1.0).abs() < 1e-12);
+        assert!((beta[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ridge_regularization_shrinks() {
+        let cols = vec![vec![1.0, 2.0, 3.0, 4.0]];
+        let y = vec![2.0, 4.0, 6.0, 8.0];
+        let (g, xty) = gram(&cols, &y).unwrap();
+        let b0 = ridge_solve(&g, &xty, 0.0).unwrap()[0];
+        let b1 = ridge_solve(&g, &xty, 10.0).unwrap()[0];
+        assert!((b0 - 2.0).abs() < 1e-4);
+        assert!(b1 < b0);
+    }
+}

@@ -1,0 +1,230 @@
+//! PJRT runtime: load the AOT JAX/Pallas artifacts (`artifacts/*.hlo.txt`)
+//! once, execute them from map-task bodies via the `hlo_*()` builtins.
+//!
+//! Python is build-time only (`make artifacts`); at run time the rust
+//! binary is self-contained. Each artifact has a registered *native
+//! fallback* implementing the same math in Rust, used when artifacts are
+//! absent (hermetic tests) or the crate is built without the `pjrt`
+//! feature; correctness tests assert PJRT and native agree
+//! (`rust/tests/pjrt_artifacts.rs`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::RVal;
+
+pub mod kernels;
+
+/// Fixed shapes of the compiled artifacts (must match python/compile).
+pub const CHUNK_N: usize = 128; // chunk_map: f32[128] -> f32[128]
+pub const BOOT_N: usize = 64; //   boot_stat: f32[64], f32[64], f32[64] -> f32[2]
+pub const GRAM_N: usize = 256; //  gram: f32[256,32], f32[256] -> (f32[32,32], f32[32])
+pub const GRAM_P: usize = 32;
+
+/// A loaded, compiled artifact.
+enum Compiled {
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtLoadedExecutable),
+    Missing,
+}
+
+struct Engine {
+    client_ok: bool,
+    artifacts: HashMap<String, Compiled>,
+    dir: std::path::PathBuf,
+    #[cfg(feature = "pjrt")]
+    client: Option<xla::PjRtClient>,
+}
+
+// PJRT handles are not Send (Rc-based), so each thread owns its own
+// client + compiled-executable cache. Compilation happens once per
+// thread per artifact; worker pools are persistent, so this amortizes.
+thread_local! {
+    static ENGINE: RefCell<Engine> = RefCell::new(Engine {
+        client_ok: false,
+        artifacts: HashMap::new(),
+        dir: std::env::var("FUTURIZE_ARTIFACTS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|_| std::path::PathBuf::from("artifacts")),
+        #[cfg(feature = "pjrt")]
+        client: None,
+    });
+}
+
+/// Execute artifact `name` with f32 input buffers. Outputs are returned
+/// flattened in row-major order; `None` means the artifact or the PJRT
+/// path is unavailable (callers fall back to the native kernels).
+/// Engine preference: `FUTURIZE_ENGINE=pjrt` (default) executes the AOT
+/// artifacts via PJRT; `native` short-circuits to the bit-checked Rust
+/// kernels. Measured on this CPU testbed the interpret-mode Pallas
+/// artifacts carry ~20ms/call of grid-interpretation overhead (they are
+/// compile targets for TPU, not CPU hot paths) — see EXPERIMENTS.md
+/// §Perf for the numbers and the TPU roofline estimate.
+fn engine_pref() -> bool {
+    static PREF: once_cell::sync::Lazy<bool> = once_cell::sync::Lazy::new(|| {
+        std::env::var("FUTURIZE_ENGINE").map(|v| v != "native").unwrap_or(true)
+    });
+    *PREF
+}
+
+pub fn pjrt_execute(name: &str, inputs: &[(&[f32], &[usize])]) -> Option<Vec<f32>> {
+    if !engine_pref() {
+        return None;
+    }
+    #[cfg(feature = "pjrt")]
+    {
+        ENGINE.with(|cell| {
+            let mut eng = cell.borrow_mut();
+            if !eng.client_ok {
+                eng.client = xla::PjRtClient::cpu().ok();
+                eng.client_ok = true;
+            }
+            eng.client.as_ref()?;
+            if !eng.artifacts.contains_key(name) {
+                let path = eng.dir.join(format!("{name}.hlo.txt"));
+                let compiled = if path.exists() {
+                    match xla::HloModuleProto::from_text_file(path.to_str()?) {
+                        Ok(proto) => {
+                            let comp = xla::XlaComputation::from_proto(&proto);
+                            match eng.client.as_ref().unwrap().compile(&comp) {
+                                Ok(exe) => Compiled::Pjrt(exe),
+                                Err(e) => {
+                                    eprintln!("futurize: compile {name} failed: {e}");
+                                    Compiled::Missing
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("futurize: load {name} failed: {e}");
+                            Compiled::Missing
+                        }
+                    }
+                } else {
+                    Compiled::Missing
+                };
+                eng.artifacts.insert(name.to_string(), compiled);
+            }
+            match eng.artifacts.get(name) {
+                Some(Compiled::Pjrt(exe)) => {
+                    let mut literals = Vec::with_capacity(inputs.len());
+                    for (data, shape) in inputs {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        let lit = xla::Literal::vec1(data).reshape(&dims).ok()?;
+                        literals.push(lit);
+                    }
+                    let result = exe.execute::<xla::Literal>(&literals).ok()?;
+                    let out = result[0][0].to_literal_sync().ok()?;
+                    // Single-output artifacts have a plain root; multi-
+                    // output ones a tuple root. Flatten either in order.
+                    let is_tuple = matches!(out.shape(), Ok(xla::Shape::Tuple(_)));
+                    if is_tuple {
+                        let parts = out.to_tuple().ok()?;
+                        let mut flat = Vec::new();
+                        for p in parts {
+                            flat.extend(p.to_vec::<f32>().ok()?);
+                        }
+                        Some(flat)
+                    } else {
+                        out.to_vec::<f32>().ok()
+                    }
+                }
+                _ => None,
+            }
+        })
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = (name, inputs);
+        None
+    }
+}
+
+/// Whether PJRT artifacts are live (reported by examples/benches).
+pub fn pjrt_available() -> bool {
+    pjrt_execute("chunk_map", &[(&[0f32; CHUNK_N], &[CHUNK_N])]).is_some()
+}
+
+pub fn register_builtins(r: &mut Reg) {
+    r.normal("futurize", "hlo_chunk_map", hlo_chunk_map_fn);
+    r.normal("futurize", "hlo_boot_stat", hlo_boot_stat_fn);
+    r.normal("futurize", "hlo_gram", hlo_gram_fn);
+    r.normal("futurize", "hlo_available", |_i, _a, _e| {
+        Ok(RVal::scalar_bool(pjrt_available()))
+    });
+}
+
+/// `hlo_chunk_map(x)`: the L1 Pallas "chunk map" kernel — elementwise
+/// 3x^2 + 2x + 1 over a padded f32[128] block.
+fn hlo_chunk_map_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let x = args.bind(&["x"]).req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    Ok(RVal::dbl(kernels::chunk_map(&x)))
+}
+
+/// `hlo_boot_stat(x, u, w)`: weighted ratio statistic sum(w*x)/sum(w*u)
+/// — the boot/bigcity statistic, on the padded f32[64] block.
+fn hlo_boot_stat_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "u", "w"]);
+    let x = b.req(0, "x")?.as_dbl_vec().map_err(Signal::error)?;
+    let u = b.req(1, "u")?.as_dbl_vec().map_err(Signal::error)?;
+    let w = b.req(2, "w")?.as_dbl_vec().map_err(Signal::error)?;
+    Ok(RVal::scalar_dbl(kernels::boot_stat(&x, &u, &w).map_err(Signal::error)?))
+}
+
+/// `hlo_gram(x_cols, y)`: X^T X and X^T y for a design matrix given as a
+/// list of column vectors — the ridge/GAM fold solver's heavy half.
+/// Returns `list(row_1, ..., row_p, xty)`.
+fn hlo_gram_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "y"]);
+    let xv = b.req(0, "x")?;
+    let cols: Vec<Vec<f64>> = match &xv {
+        RVal::List(l) => l
+            .vals
+            .iter()
+            .map(|c| c.as_dbl_vec())
+            .collect::<Result<_, _>>()
+            .map_err(Signal::error)?,
+        other => vec![other.as_dbl_vec().map_err(Signal::error)?],
+    };
+    let y = b.req(1, "y")?.as_dbl_vec().map_err(Signal::error)?;
+    let (gram, xty) = kernels::gram(&cols, &y).map_err(Signal::error)?;
+    let p = cols.len();
+    let mut out = Vec::with_capacity(p + 1);
+    for row in gram.chunks(p) {
+        out.push(RVal::dbl(row.to_vec()));
+    }
+    out.push(RVal::dbl(xty));
+    Ok(RVal::list(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rlite::eval::Interp;
+    use crate::rlite::value::RVal;
+
+    fn run(src: &str) -> RVal {
+        Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+    }
+
+    #[test]
+    fn chunk_map_polynomial() {
+        let v = run("hlo_chunk_map(c(0, 1, 2))");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![1.0, 6.0, 17.0]);
+    }
+
+    #[test]
+    fn boot_stat_ratio() {
+        let v = run("hlo_boot_stat(c(2, 4), c(1, 1), c(1, 1))");
+        assert!((v.as_f64().unwrap() - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gram_small() {
+        let v = run("g <- hlo_gram(list(c(1, 0), c(0, 2)), c(3, 4))\ng[[3]]");
+        let xty = v.as_dbl_vec().unwrap();
+        assert!((xty[0] - 3.0).abs() < 1e-5);
+        assert!((xty[1] - 8.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,110 @@
+//! Chunking and load balancing (`scheduling` / `chunk_size`, paper §2.4).
+//!
+//! Mirrors future.apply's semantics: by default each worker gets one
+//! chunk (`scheduling = 1`); `scheduling = k` makes ~k chunks per worker
+//! (finer-grained balancing at higher messaging cost); `chunk_size`
+//! overrides directly. Chunks are contiguous index ranges so results
+//! reassemble in input order regardless of completion order.
+
+/// How to split `n` elements over `workers` workers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChunkPolicy {
+    pub chunk_size: Option<usize>,
+    /// Average number of chunks per worker (future.apply's
+    /// `future.scheduling`). `f64::INFINITY` means one element per chunk.
+    pub scheduling: f64,
+}
+
+impl Default for ChunkPolicy {
+    fn default() -> Self {
+        ChunkPolicy { chunk_size: None, scheduling: 1.0 }
+    }
+}
+
+/// Compute contiguous chunk ranges `[start, end)` covering `0..n`.
+pub fn make_chunks(n: usize, workers: usize, policy: &ChunkPolicy) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return vec![];
+    }
+    let workers = workers.max(1);
+    let n_chunks = match policy.chunk_size {
+        Some(cs) => n.div_ceil(cs.max(1)),
+        None => {
+            if policy.scheduling.is_infinite() {
+                n
+            } else {
+                let target = (workers as f64 * policy.scheduling.max(0.0)).round() as usize;
+                target.clamp(1, n)
+            }
+        }
+    };
+    let n_chunks = n_chunks.clamp(1, n);
+    // Balanced split: first (n % n_chunks) chunks get one extra element.
+    let base = n / n_chunks;
+    let extra = n % n_chunks;
+    let mut out = Vec::with_capacity(n_chunks);
+    let mut start = 0;
+    for i in 0..n_chunks {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_one_chunk_per_worker() {
+        let chunks = make_chunks(100, 4, &ChunkPolicy::default());
+        assert_eq!(chunks.len(), 4);
+        assert_eq!(chunks[0], (0, 25));
+        assert_eq!(chunks[3], (75, 100));
+    }
+
+    #[test]
+    fn chunk_size_overrides() {
+        let chunks =
+            make_chunks(10, 4, &ChunkPolicy { chunk_size: Some(2), scheduling: 1.0 });
+        assert_eq!(chunks.len(), 5);
+        assert!(chunks.iter().all(|(s, e)| e - s == 2));
+    }
+
+    #[test]
+    fn infinite_scheduling_is_one_element_chunks() {
+        let chunks =
+            make_chunks(7, 2, &ChunkPolicy { chunk_size: None, scheduling: f64::INFINITY });
+        assert_eq!(chunks.len(), 7);
+    }
+
+    #[test]
+    fn covers_all_elements_exactly_once() {
+        for n in [1usize, 2, 3, 7, 100, 101] {
+            for w in [1usize, 2, 3, 8] {
+                for sched in [0.5, 1.0, 2.0, 4.0] {
+                    let chunks =
+                        make_chunks(n, w, &ChunkPolicy { chunk_size: None, scheduling: sched });
+                    let total: usize = chunks.iter().map(|(s, e)| e - s).sum();
+                    assert_eq!(total, n, "n={n} w={w} sched={sched}");
+                    for win in chunks.windows(2) {
+                        assert_eq!(win[0].1, win[1].0, "contiguous");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_chunks_than_elements_clamps() {
+        let chunks = make_chunks(2, 8, &ChunkPolicy::default());
+        assert_eq!(chunks.len(), 2);
+    }
+
+    #[test]
+    fn empty_input_no_chunks() {
+        assert!(make_chunks(0, 4, &ChunkPolicy::default()).is_empty());
+    }
+}

@@ -1,0 +1,569 @@
+//! `futurize()` — the paper's contribution: a source-to-source transpiler
+//! from sequential map-reduce calls to their future-ecosystem
+//! equivalents.
+//!
+//! Implementation follows paper §3.2 step by step:
+//!
+//! 1. **Expression capture** — `futurize` is a special form; it receives
+//!    the unevaluated [`Expr`] of its first argument (R's `substitute()`).
+//! 2. **Function identification** — the call head is resolved to a
+//!    `(namespace, name)` pair via the builtin registry (explicit
+//!    `pkg::fn` qualification wins).
+//! 3. **Transpiler lookup** — an internal registry maps `(namespace,
+//!    name)` to a transpiler.
+//! 4. **Expression rewriting** — the transpiler rewrites the call,
+//!    mapping the *unified* options (`seed`, `chunk_size`, `scheduling`,
+//!    `stdout`, `conditions`, `globals`, `packages`) onto the target
+//!    API's own conventions (`future.seed=`, `furrr_options()`,
+//!    `.options.future=`, domain sub-APIs).
+//! 5. **Evaluation** — the rewritten expression is evaluated in the
+//!    caller's environment.
+//!
+//! Wrapper expressions (`{}`, `()`, `local()`, `I()`, `identity()`,
+//! `suppressMessages()`, `suppressWarnings()`) are unwrapped per §3.3 —
+//! the transpiler descends to the transpilable call and rewrites it *in
+//! place*, preserving the wrappers.
+
+pub mod registry;
+
+use std::collections::HashMap;
+
+use once_cell::sync::Lazy;
+
+use crate::future_core::driver::{MapOptions, SeedOption};
+use crate::rlite::ast::{Arg, Expr};
+use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::deparse::deparse;
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::RVal;
+use crate::scheduling::ChunkPolicy;
+
+/// The unified options surface of `futurize()` (paper §2.4).
+#[derive(Clone, Debug)]
+pub struct FuturizeOptions {
+    pub seed: Option<SeedSetting>,
+    pub chunk_size: Option<usize>,
+    pub scheduling: Option<f64>,
+    pub stdout: Option<bool>,
+    pub conditions: Option<bool>,
+    /// `globals = FALSE` disables automatic identification (advanced).
+    pub globals: Option<bool>,
+    /// Extra packages to require on workers.
+    pub packages: Vec<String>,
+    /// `eval = FALSE`: return the transpiled call unevaluated (deparsed).
+    pub eval: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SeedSetting {
+    True,
+    False,
+    Value(u64),
+}
+
+impl Default for FuturizeOptions {
+    fn default() -> Self {
+        FuturizeOptions {
+            seed: None,
+            chunk_size: None,
+            scheduling: None,
+            stdout: None,
+            conditions: None,
+            globals: None,
+            packages: vec![],
+            eval: true,
+        }
+    }
+}
+
+impl FuturizeOptions {
+    /// Distill into execution options, given the per-function default for
+    /// `seed` (e.g. `replicate()`/`times()` default to `seed = TRUE`,
+    /// paper §4.1/§4.3).
+    pub fn to_map_options(&self, seed_default: bool) -> MapOptions {
+        let seed = match self.seed {
+            Some(SeedSetting::True) => SeedOption::True,
+            Some(SeedSetting::Value(v)) => SeedOption::Seed(v),
+            Some(SeedSetting::False) => SeedOption::False,
+            None => {
+                if seed_default {
+                    SeedOption::True
+                } else {
+                    SeedOption::False
+                }
+            }
+        };
+        MapOptions {
+            seed,
+            policy: ChunkPolicy {
+                chunk_size: self.chunk_size,
+                scheduling: self.scheduling.unwrap_or(1.0),
+            },
+            stdout: self.stdout.unwrap_or(true),
+            conditions: self.conditions.unwrap_or(true),
+        }
+    }
+}
+
+/// A transpiler: rewrite one call per the unified options.
+pub type TranspilerFn = fn(&Expr, &FuturizeOptions) -> Result<Expr, String>;
+
+pub(crate) static TRANSPILERS: Lazy<HashMap<(&'static str, &'static str), TranspilerFn>> =
+    Lazy::new(registry::build);
+
+pub fn register_builtins(r: &mut Reg) {
+    r.special("futurize", "futurize", futurize_fn);
+    r.normal("futurize", "futurize_supported_packages", supported_packages_fn);
+    r.normal("futurize", "futurize_supported_functions", supported_functions_fn);
+    r.normal("furrr", "furrr_options", furrr_options_fn);
+}
+
+/// The `futurize()` special form.
+fn futurize_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    // Global toggle: futurize(TRUE) / futurize(FALSE) (paper §2.1).
+    if args.len() == 1 && args[0].name.is_none() {
+        if let Expr::Bool(b) = args[0].value {
+            i.futurize_enabled = b;
+            return Ok(RVal::scalar_bool(b));
+        }
+    }
+    let Some(first) = args.first().filter(|a| a.name.is_none()) else {
+        return Err(Signal::error("futurize: nothing to futurize"));
+    };
+    let opts = parse_options(i, &args[1..], env)?;
+
+    if !i.futurize_enabled {
+        // Disabled: pass through as if `|> futurize()` were absent.
+        return i.eval(&first.value, env);
+    }
+
+    let rewritten = transpile_expr(&first.value, &opts).map_err(Signal::error)?;
+    if !opts.eval {
+        return Ok(RVal::scalar_str(deparse(&rewritten)));
+    }
+    i.eval(&rewritten, env)
+}
+
+/// Parse the unified option arguments of a `futurize()` call.
+fn parse_options(i: &mut Interp, args: &[Arg], env: &EnvRef) -> Result<FuturizeOptions, Signal> {
+    let mut o = FuturizeOptions::default();
+    for a in args {
+        let Some(name) = a.name.as_deref() else {
+            return Err(Signal::error(
+                "futurize: unexpected unnamed argument (options must be named)",
+            ));
+        };
+        let v = i.eval(&a.value, env)?;
+        match name {
+            "seed" => {
+                o.seed = Some(match &v {
+                    RVal::Lgl(b) if !b.vals.is_empty() => {
+                        if b.vals[0] {
+                            SeedSetting::True
+                        } else {
+                            SeedSetting::False
+                        }
+                    }
+                    other => SeedSetting::Value(other.as_i64().map_err(Signal::error)? as u64),
+                });
+            }
+            "chunk_size" => o.chunk_size = Some(v.as_usize().map_err(Signal::error)?),
+            "scheduling" => o.scheduling = Some(v.as_f64().map_err(Signal::error)?),
+            "stdout" => o.stdout = Some(v.as_bool().map_err(Signal::error)?),
+            "conditions" => o.conditions = Some(v.as_bool().map_err(Signal::error)?),
+            "globals" => o.globals = Some(v.as_bool().map_err(Signal::error)?),
+            "packages" => o.packages = v.as_str_vec().map_err(Signal::error)?,
+            "eval" => o.eval = v.as_bool().map_err(Signal::error)?,
+            other => {
+                return Err(Signal::error(format!("futurize: unknown option '{other}'")))
+            }
+        }
+    }
+    Ok(o)
+}
+
+/// Wrappers the transpiler descends through (paper §3.3).
+const UNWRAPPABLE: &[&str] =
+    &["(", "local", "I", "identity", "suppressMessages", "suppressWarnings"];
+
+/// Transpile `expr`, descending through wrapper constructs and rewriting
+/// the innermost transpilable call in place.
+pub fn transpile_expr(expr: &Expr, opts: &FuturizeOptions) -> Result<Expr, String> {
+    // Direct hit?
+    if let Some(t) = lookup_transpiler(expr) {
+        return t(expr, opts);
+    }
+    // Unwrap one level and recurse, preserving the wrapper.
+    match expr {
+        Expr::Block(stmts) if !stmts.is_empty() => {
+            let mut out = stmts.clone();
+            let last = out.len() - 1;
+            out[last] = transpile_expr(&out[last], opts)?;
+            Ok(Expr::Block(out))
+        }
+        Expr::Call { func, args } if !args.is_empty() => {
+            let head = match func.as_ref() {
+                Expr::Sym(s) => Some(s.as_str()),
+                Expr::Ns { name, .. } => Some(name.as_str()),
+                _ => None,
+            };
+            match head {
+                Some(h) if UNWRAPPABLE.contains(&h) => {
+                    let mut new_args = args.clone();
+                    new_args[0].value = transpile_expr(&args[0].value, opts)?;
+                    Ok(Expr::Call { func: func.clone(), args: new_args })
+                }
+                Some(h) => Err(format!(
+                    "futurize: don't know how to futurize '{h}()'; see futurize_supported_packages()"
+                )),
+                None => Err(format!(
+                    "futurize: cannot futurize expression: {}",
+                    deparse(expr)
+                )),
+            }
+        }
+        other => Err(format!("futurize: cannot futurize expression: {}", deparse(other))),
+    }
+}
+
+/// Step 2 + 3: identify the function and look up its transpiler.
+fn lookup_transpiler(expr: &Expr) -> Option<&'static TranspilerFn> {
+    let name = expr.call_name()?;
+    let ns = match expr.call_namespace() {
+        Some(ns) => ns.to_string(),
+        None => crate::rlite::builtins::namespace_of(name)?.to_string(),
+    };
+    // `Box::leak`-free lookup: registry keys are 'static strs; match on
+    // string content.
+    TRANSPILERS
+        .iter()
+        .find(|((p, n), _)| *p == ns && *n == name)
+        .map(|(_, f)| f)
+}
+
+/// Is `(pkg, name)` transpilable? (Used by coverage tests.)
+pub fn is_supported(pkg: &str, name: &str) -> bool {
+    TRANSPILERS.keys().any(|(p, n)| *p == pkg && *n == name)
+}
+
+/// All packages with at least one registered transpiler, sorted —
+/// `futurize_supported_packages()` in the paper.
+pub fn supported_packages() -> Vec<&'static str> {
+    let mut pkgs: Vec<&'static str> = TRANSPILERS.keys().map(|(p, _)| *p).collect();
+    pkgs.sort();
+    pkgs.dedup();
+    pkgs
+}
+
+/// All supported functions in a package, sorted.
+pub fn supported_functions(pkg: &str) -> Vec<&'static str> {
+    let mut fns: Vec<&'static str> =
+        TRANSPILERS.keys().filter(|(p, _)| *p == pkg).map(|(_, n)| *n).collect();
+    fns.sort();
+    fns
+}
+
+fn supported_packages_fn(_i: &mut Interp, _args: Args, _env: &EnvRef) -> EvalResult {
+    Ok(RVal::chr(supported_packages().iter().map(|s| s.to_string()).collect()))
+}
+
+fn supported_functions_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let pkg = args.bind(&["package"]).req(0, "package")?.as_str().map_err(Signal::error)?;
+    Ok(RVal::chr(supported_functions(&pkg).iter().map(|s| s.to_string()).collect()))
+}
+
+/// `furrr_options(seed = , chunk_size = , scheduling = )` — furrr's own
+/// options object, produced by the transpiler when targeting furrr.
+fn furrr_options_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let mut l = crate::rlite::value::RList::default();
+    for (name, v) in &args.items {
+        if let Some(n) = name {
+            l.set(n, v.clone());
+        }
+    }
+    l.class = Some("furrr_options".into());
+    Ok(RVal::List(l))
+}
+
+// ---------------------------------------------------------------------------
+// Shared option-mapping helpers used by the registry's transpilers.
+// ---------------------------------------------------------------------------
+
+/// Append `future.*`-style options (future.apply's convention).
+pub(crate) fn future_dot_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
+    if let Some(seed) = opts.seed {
+        args.push(Arg::named("future.seed", seed_expr(seed)));
+    }
+    if let Some(cs) = opts.chunk_size {
+        args.push(Arg::named("future.chunk.size", Expr::Num(cs as f64)));
+    }
+    if let Some(s) = opts.scheduling {
+        args.push(Arg::named("future.scheduling", Expr::Num(s)));
+    }
+    if let Some(b) = opts.stdout {
+        args.push(Arg::named("future.stdout", Expr::Bool(b)));
+    }
+    if let Some(b) = opts.conditions {
+        args.push(Arg::named("future.conditions", Expr::Bool(b)));
+    }
+    if !opts.packages.is_empty() {
+        args.push(Arg::named("future.packages", packages_expr(&opts.packages)));
+    }
+}
+
+/// Append `.options = furrr_options(...)` (furrr's convention).
+pub(crate) fn furrr_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
+    let mut inner: Vec<Arg> = Vec::new();
+    if let Some(seed) = opts.seed {
+        inner.push(Arg::named("seed", seed_expr(seed)));
+    }
+    if let Some(cs) = opts.chunk_size {
+        inner.push(Arg::named("chunk_size", Expr::Num(cs as f64)));
+    }
+    if let Some(s) = opts.scheduling {
+        inner.push(Arg::named("scheduling", Expr::Num(s)));
+    }
+    if let Some(b) = opts.stdout {
+        inner.push(Arg::named("stdout", Expr::Bool(b)));
+    }
+    if let Some(b) = opts.conditions {
+        inner.push(Arg::named("conditions", Expr::Bool(b)));
+    }
+    if !opts.packages.is_empty() {
+        inner.push(Arg::named("packages", packages_expr(&opts.packages)));
+    }
+    if !inner.is_empty() {
+        args.push(Arg::named(".options", Expr::ns_call("furrr", "furrr_options", inner)));
+    }
+}
+
+/// Append `.options.future = list(...)` (doFuture's `%dofuture%`
+/// convention) to a foreach() call's arguments.
+pub(crate) fn dofuture_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
+    let mut inner: Vec<Arg> = Vec::new();
+    if let Some(seed) = opts.seed {
+        inner.push(Arg::named("seed", seed_expr(seed)));
+    }
+    if let Some(cs) = opts.chunk_size {
+        inner.push(Arg::named("chunk.size", Expr::Num(cs as f64)));
+    }
+    if let Some(s) = opts.scheduling {
+        inner.push(Arg::named("scheduling", Expr::Num(s)));
+    }
+    if let Some(b) = opts.stdout {
+        inner.push(Arg::named("stdout", Expr::Bool(b)));
+    }
+    if let Some(b) = opts.conditions {
+        inner.push(Arg::named("conditions", Expr::Bool(b)));
+    }
+    if !opts.packages.is_empty() {
+        inner.push(Arg::named("packages", packages_expr(&opts.packages)));
+    }
+    if !inner.is_empty() {
+        args.push(Arg::named(".options.future", Expr::call("list", inner)));
+    }
+}
+
+/// Append `.futurize_opts = list(...)` (the internal sub-API the domain
+/// packages consume; analogous to boot's parallel/ncpus/cl or mgcv's
+/// cluster argument, which futurize hides).
+pub(crate) fn domain_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
+    let mut inner: Vec<Arg> = Vec::new();
+    if let Some(seed) = opts.seed {
+        inner.push(Arg::named("seed", seed_expr(seed)));
+    }
+    if let Some(cs) = opts.chunk_size {
+        inner.push(Arg::named("chunk.size", Expr::Num(cs as f64)));
+    }
+    if let Some(s) = opts.scheduling {
+        inner.push(Arg::named("scheduling", Expr::Num(s)));
+    }
+    args.push(Arg::named(".futurize_opts", Expr::call("list", inner)));
+}
+
+fn seed_expr(seed: SeedSetting) -> Expr {
+    match seed {
+        SeedSetting::True => Expr::Bool(true),
+        SeedSetting::False => Expr::Bool(false),
+        SeedSetting::Value(v) => Expr::Num(v as f64),
+    }
+}
+
+fn packages_expr(pkgs: &[String]) -> Expr {
+    Expr::call(
+        "c",
+        pkgs.iter().map(|p| Arg::pos(Expr::Str(p.clone()))).collect(),
+    )
+}
+
+/// Parse an options value produced by the option-mapping helpers back into
+/// [`FuturizeOptions`] — used by the target implementations
+/// (future_lapply's `future.*` args, furrr's `.options`, `%dofuture%`'s
+/// `.options.future`, the domains' `.futurize_opts`).
+pub fn options_from_pairs(pairs: &[(String, RVal)]) -> FuturizeOptions {
+    let mut o = FuturizeOptions::default();
+    for (name, v) in pairs {
+        let key = name.trim_start_matches("future.").replace(['.', '-'], "_");
+        match key.as_str() {
+            "seed" => {
+                o.seed = Some(match v {
+                    RVal::Lgl(b) if !b.vals.is_empty() && b.vals[0] => SeedSetting::True,
+                    RVal::Lgl(_) => SeedSetting::False,
+                    other => SeedSetting::Value(other.as_i64().unwrap_or(0) as u64),
+                })
+            }
+            "chunk_size" => o.chunk_size = v.as_usize().ok(),
+            "scheduling" => o.scheduling = v.as_f64().ok(),
+            "stdout" => o.stdout = v.as_bool().ok(),
+            "conditions" => o.conditions = v.as_bool().ok(),
+            "packages" => o.packages = v.as_str_vec().unwrap_or_default(),
+            _ => {}
+        }
+    }
+    o
+}
+
+/// Extract option pairs from a named-list RVal (furrr_options result,
+/// `.options.future` list, `.futurize_opts` list).
+pub fn options_from_value(v: &RVal) -> FuturizeOptions {
+    match v {
+        RVal::List(l) => {
+            let pairs: Vec<(String, RVal)> = l
+                .names
+                .iter()
+                .flatten()
+                .cloned()
+                .zip(l.vals.iter().cloned())
+                .collect();
+            options_from_pairs(&pairs)
+        }
+        _ => FuturizeOptions::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rlite::eval::Interp;
+    use crate::rlite::parse_expr;
+
+    /// Transpile `src` with `opts` (unified options text) and return the
+    /// deparsed rewritten call via `eval = FALSE`.
+    fn transpiled_with(src: &str, opts: &str) -> String {
+        let mut i = Interp::new();
+        let program = if opts.is_empty() {
+            format!("{src} |> futurize(eval = FALSE)")
+        } else {
+            format!("{src} |> futurize(eval = FALSE, {opts})")
+        };
+        let v = i.eval_program(&program).unwrap_or_else(|e| panic!("{src}: {e:?}"));
+        v.as_str().unwrap()
+    }
+
+    fn transpiled(src: &str) -> String {
+        transpiled_with(src, "")
+    }
+
+    #[test]
+    fn lapply_transpiles_to_future_lapply() {
+        let mut i = Interp::new();
+        i.eval_program("xs <- 1:3\nfcn <- function(x) x").unwrap();
+        let got = {
+            let v = i
+                .eval_program("lapply(xs, fcn) |> futurize(eval = FALSE)")
+                .unwrap();
+            v.as_str().unwrap()
+        };
+        assert_eq!(got, "future.apply::future_lapply(xs, fcn)");
+    }
+
+    #[test]
+    fn options_map_to_future_dot_convention() {
+        let got = transpiled_with("lapply(xs, fcn)", "seed = TRUE, chunk_size = 2");
+        assert!(got.contains("future.seed = TRUE"), "{got}");
+        assert!(got.contains("future.chunk.size = 2"), "{got}");
+    }
+
+    #[test]
+    fn map_transpiles_to_furrr_with_options() {
+        let got = transpiled_with("map(xs, fcn)", "seed = TRUE");
+        assert!(got.starts_with("furrr::future_map(xs, fcn"), "{got}");
+        assert!(got.contains("furrr::furrr_options(seed = TRUE)"), "{got}");
+    }
+
+    #[test]
+    fn foreach_do_transpiles_to_dofuture() {
+        let got = transpiled("foreach(x = xs) %do% { f(x) }");
+        assert!(got.contains("%dofuture%"), "{got}");
+    }
+
+    #[test]
+    fn unwraps_suppress_messages() {
+        let got = transpiled("{ lapply(xs, fcn) } |> suppressMessages()");
+        // The wrapper chain is preserved around the rewritten call.
+        assert!(got.contains("suppressMessages"), "{got}");
+        assert!(got.contains("future_lapply"), "{got}");
+    }
+
+    #[test]
+    fn unwraps_local_blocks() {
+        let got = transpiled("local({ p <- 1\nlapply(xs, fcn) })");
+        assert!(got.contains("local"), "{got}");
+        assert!(got.contains("future_lapply"), "{got}");
+        assert!(got.contains("p <- 1"), "{got}");
+    }
+
+    #[test]
+    fn unsupported_function_errors_helpfully() {
+        let mut i = Interp::new();
+        let err = i.eval_program("print(1) |> futurize()").unwrap_err();
+        match err {
+            Signal::Error(c) => {
+                assert!(c.message.contains("don't know how to futurize"), "{}", c.message)
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn global_toggle_passes_through() {
+        let mut i = Interp::new();
+        let v = i
+            .eval_program(
+                "futurize(FALSE)\nxs <- 1:3\nr <- lapply(xs, function(x) x * 2) |> futurize()\nfuturize(TRUE)\nunlist(r)",
+            )
+            .unwrap();
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn supported_packages_matches_paper_table() {
+        let pkgs = supported_packages();
+        for expected in [
+            "base", "BiocParallel", "boot", "caret", "crossmap", "foreach", "glmnet", "lme4",
+            "mgcv", "plyr", "purrr", "stats", "tm",
+        ] {
+            assert!(pkgs.contains(&expected), "missing {expected}: {pkgs:?}");
+        }
+    }
+
+    #[test]
+    fn namespaced_calls_transpile() {
+        let got = transpiled("purrr::map(xs, fcn)");
+        assert!(got.starts_with("furrr::future_map"), "{got}");
+    }
+
+    #[test]
+    fn replicate_defaults_seed_true() {
+        // §4.1: futurize() defaults to seed = TRUE for replicate().
+        let got = transpiled("replicate(100, rnorm(10))");
+        assert!(got.contains("future.seed = TRUE"), "{got}");
+    }
+
+    #[test]
+    fn parse_expr_roundtrip_of_transpiled_output() {
+        let got = transpiled_with("lapply(xs, fcn)", "seed = TRUE");
+        assert!(parse_expr(&got).is_ok(), "{got}");
+    }
+}

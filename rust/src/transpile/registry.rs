@@ -1,0 +1,277 @@
+//! The transpiler registry — one entry per function in the paper's
+//! Table 1 (map-reduce APIs) and Table 2 (domain-specific APIs).
+
+use std::collections::HashMap;
+
+use super::{
+    dofuture_option_args, domain_option_args, furrr_option_args, future_dot_args,
+    FuturizeOptions, SeedSetting, TranspilerFn,
+};
+use crate::rlite::ast::{Arg, Expr};
+
+/// Build the full registry.
+pub fn build() -> HashMap<(&'static str, &'static str), TranspilerFn> {
+    let mut m: HashMap<(&'static str, &'static str), TranspilerFn> = HashMap::new();
+
+    // ---- Table 1: base R → future.apply ---------------------------------
+    for name in BASE_FUNCTIONS {
+        m.insert(("base", name), base_transpiler as TranspilerFn);
+    }
+    m.insert(("stats", "kernapply"), base_transpiler as TranspilerFn);
+
+    // ---- Table 1: purrr → furrr ------------------------------------------
+    for name in PURRR_FUNCTIONS {
+        m.insert(("purrr", name), purrr_transpiler as TranspilerFn);
+    }
+
+    // ---- Table 1: crossmap (futurizes itself) ----------------------------
+    for name in CROSSMAP_FUNCTIONS {
+        m.insert(("crossmap", name), crossmap_transpiler as TranspilerFn);
+    }
+
+    // ---- Table 1: foreach %do% → %dofuture% ------------------------------
+    m.insert(("foreach", "%do%"), foreach_transpiler as TranspilerFn);
+
+    // ---- Table 1: plyr → .parallel = TRUE + doFuture ----------------------
+    for name in PLYR_FUNCTIONS {
+        m.insert(("plyr", name), plyr_transpiler as TranspilerFn);
+    }
+
+    // ---- Table 1: BiocParallel → FutureParam -----------------------------
+    for name in BIOCPARALLEL_FUNCTIONS {
+        m.insert(("BiocParallel", name), biocparallel_transpiler as TranspilerFn);
+    }
+
+    // ---- Table 2: domain-specific packages --------------------------------
+    for name in ["boot", "censboot", "tsboot"] {
+        m.insert(("boot", name), domain_seeded_transpiler as TranspilerFn);
+    }
+    for name in ["bag", "gafs", "nearZeroVar", "rfe", "safs", "sbf", "train"] {
+        m.insert(("caret", name), domain_transpiler as TranspilerFn);
+    }
+    m.insert(("glmnet", "cv.glmnet"), domain_transpiler as TranspilerFn);
+    for name in ["allFit", "bootMer"] {
+        m.insert(("lme4", name), domain_seeded_transpiler as TranspilerFn);
+    }
+    for name in ["bam", "predict.bam"] {
+        m.insert(("mgcv", name), domain_transpiler as TranspilerFn);
+    }
+    for name in ["TermDocumentMatrix", "tm_index", "tm_map"] {
+        m.insert(("tm", name), domain_transpiler as TranspilerFn);
+    }
+
+    m
+}
+
+/// base-R functions transpiled to future.apply (paper Table 1 row 1).
+pub const BASE_FUNCTIONS: &[&str] = &[
+    "lapply", "sapply", "tapply", "vapply", "mapply", ".mapply", "Map", "eapply", "apply", "by",
+    "replicate", "Filter",
+];
+
+/// purrr functions transpiled to furrr (Table 1).
+pub const PURRR_FUNCTIONS: &[&str] = &[
+    "map", "map_chr", "map_dbl", "map_int", "map_lgl", "map2", "map2_chr", "map2_dbl",
+    "map2_int", "map2_lgl", "pmap", "pmap_dbl", "pmap_chr", "imap", "imap_dbl", "imap_chr",
+    "modify", "modify_if", "modify_at", "map_if", "map_at", "invoke_map", "walk",
+];
+
+/// crossmap functions (Table 1).
+pub const CROSSMAP_FUNCTIONS: &[&str] = &[
+    "xmap", "xmap_dbl", "xmap_chr", "xwalk", "map_vec", "map2_vec", "pmap_vec", "imap_vec",
+];
+
+/// plyr functions (Table 1).
+pub const PLYR_FUNCTIONS: &[&str] = &[
+    "aaply", "adply", "alply", "daply", "ddply", "dlply", "laply", "ldply", "llply", "maply",
+    "mdply", "mlply",
+];
+
+/// BiocParallel functions (Table 1).
+pub const BIOCPARALLEL_FUNCTIONS: &[&str] =
+    &["bplapply", "bpmapply", "bpvec", "bpiterate", "bpaggregate"];
+
+/// Functions whose futurization defaults to `seed = TRUE` because they
+/// exist for resampling (paper §4.1: replicate; §4.3: times).
+pub const SEED_DEFAULT_TRUE: &[&str] =
+    &["replicate", "times", "boot", "censboot", "tsboot", "bootMer", "allFit"];
+
+fn call_parts(expr: &Expr) -> Result<(&str, Vec<Arg>), String> {
+    let name = expr.call_name().ok_or("not a call")?;
+    match expr {
+        Expr::Call { args, .. } => Ok((name, args.clone())),
+        _ => Err("not a call".into()),
+    }
+}
+
+/// Effective options: apply per-function seed defaults.
+fn with_seed_default(name: &str, opts: &FuturizeOptions) -> FuturizeOptions {
+    let mut o = opts.clone();
+    if o.seed.is_none() && SEED_DEFAULT_TRUE.contains(&name) {
+        o.seed = Some(SeedSetting::True);
+    }
+    o
+}
+
+/// base::lapply(xs, f) → future.apply::future_lapply(xs, f, future.seed=...).
+fn base_transpiler(expr: &Expr, opts: &FuturizeOptions) -> Result<Expr, String> {
+    let (name, mut args) = call_parts(expr)?;
+    let opts = with_seed_default(name, opts);
+    // `.mapply` keeps its dot: its dots-list signature differs from
+    // `mapply`, so it has a dedicated future form.
+    let target = format!("future_{name}");
+    future_dot_args(&opts, &mut args);
+    Ok(Expr::Call {
+        func: Box::new(Expr::Ns {
+            pkg: "future.apply".into(),
+            name: target,
+        }),
+        args,
+    })
+}
+
+/// purrr::map(xs, f) → furrr::future_map(xs, f, .options = furrr_options(...)).
+fn purrr_transpiler(expr: &Expr, opts: &FuturizeOptions) -> Result<Expr, String> {
+    let (name, mut args) = call_parts(expr)?;
+    let opts = with_seed_default(name, opts);
+    furrr_option_args(&opts, &mut args);
+    Ok(Expr::Call {
+        func: Box::new(Expr::Ns { pkg: "furrr".into(), name: format!("future_{name}") }),
+        args,
+    })
+}
+
+/// crossmap::xmap(...) → crossmap::future_xmap(...) (crossmap hosts its
+/// own future variants; "Requires: (itself)" in Table 1).
+fn crossmap_transpiler(expr: &Expr, opts: &FuturizeOptions) -> Result<Expr, String> {
+    let (name, mut args) = call_parts(expr)?;
+    let opts = with_seed_default(name, opts);
+    furrr_option_args(&opts, &mut args);
+    Ok(Expr::Call {
+        func: Box::new(Expr::Ns { pkg: "crossmap".into(), name: format!("future_{name}") }),
+        args,
+    })
+}
+
+/// `foreach(...) %do% body` → `foreach(..., .options.future = list(...))
+/// %dofuture% body`. Also handles `times(n) %do% body` (seed defaults to
+/// TRUE for times, §4.3).
+fn foreach_transpiler(expr: &Expr, opts: &FuturizeOptions) -> Result<Expr, String> {
+    let Expr::Call { args, .. } = expr else { return Err("not a call".into()) };
+    if args.len() != 2 {
+        return Err("%do% expects lhs and rhs".into());
+    }
+    let lhs = &args[0].value;
+    let body = args[1].value.clone();
+    let lhs_name = lhs.call_name().unwrap_or("");
+    let opts = with_seed_default(lhs_name, opts);
+    // Attach options to the foreach()/times() call.
+    let new_lhs = match lhs {
+        Expr::Call { func, args: fargs } => {
+            let mut fargs = fargs.clone();
+            dofuture_option_args(&opts, &mut fargs);
+            Expr::Call { func: func.clone(), args: fargs }
+        }
+        other => other.clone(),
+    };
+    Ok(Expr::call("%dofuture%", vec![Arg::pos(new_lhs), Arg::pos(body)]))
+}
+
+/// plyr::llply(...) → plyr::llply(..., .parallel = TRUE): plyr's own
+/// sub-API, served by the doFuture adapter underneath.
+fn plyr_transpiler(expr: &Expr, opts: &FuturizeOptions) -> Result<Expr, String> {
+    let (_name, mut args) = call_parts(expr)?;
+    args.push(Arg::named(".parallel", Expr::Bool(true)));
+    domain_option_args(opts, &mut args);
+    let Expr::Call { func, .. } = expr else { return Err("not a call".into()) };
+    Ok(Expr::Call { func: func.clone(), args })
+}
+
+/// BiocParallel::bplapply(...) → bplapply(..., BPPARAM = FutureParam(...)).
+fn biocparallel_transpiler(expr: &Expr, opts: &FuturizeOptions) -> Result<Expr, String> {
+    let (_name, mut args) = call_parts(expr)?;
+    let mut inner = Vec::new();
+    if let Some(seed) = opts.seed {
+        inner.push(Arg::named(
+            "seed",
+            match seed {
+                SeedSetting::True => Expr::Bool(true),
+                SeedSetting::False => Expr::Bool(false),
+                SeedSetting::Value(v) => Expr::Num(v as f64),
+            },
+        ));
+    }
+    if let Some(cs) = opts.chunk_size {
+        inner.push(Arg::named("chunk.size", Expr::Num(cs as f64)));
+    }
+    args.push(Arg::named("BPPARAM", Expr::ns_call("BiocParallel", "FutureParam", inner)));
+    let Expr::Call { func, .. } = expr else { return Err("not a call".into()) };
+    Ok(Expr::Call { func: func.clone(), args })
+}
+
+/// Domain functions: keep the call, inject the internal `.futurize_opts`
+/// sub-API (the transpiler hides the package's own parallel/ncpus/cl
+/// knobs, paper §4.6).
+fn domain_transpiler(expr: &Expr, opts: &FuturizeOptions) -> Result<Expr, String> {
+    let (_name, mut args) = call_parts(expr)?;
+    domain_option_args(opts, &mut args);
+    let Expr::Call { func, .. } = expr else { return Err("not a call".into()) };
+    Ok(Expr::Call { func: func.clone(), args })
+}
+
+/// Domain functions that resample (boot, bootMer, ...): seed defaults to
+/// TRUE.
+fn domain_seeded_transpiler(expr: &Expr, opts: &FuturizeOptions) -> Result<Expr, String> {
+    let (name, mut args) = call_parts(expr)?;
+    let opts = with_seed_default(name, opts);
+    domain_option_args(&opts, &mut args);
+    let Expr::Call { func, .. } = expr else { return Err("not a call".into()) };
+    Ok(Expr::Call { func: func.clone(), args })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_table1_and_table2() {
+        let m = build();
+        // Spot-check one function per Table-1 row and per Table-2 row.
+        for key in [
+            ("base", "lapply"),
+            ("stats", "kernapply"),
+            ("purrr", "map"),
+            ("crossmap", "xmap"),
+            ("foreach", "%do%"),
+            ("plyr", "llply"),
+            ("BiocParallel", "bplapply"),
+            ("boot", "boot"),
+            ("caret", "train"),
+            ("glmnet", "cv.glmnet"),
+            ("lme4", "allFit"),
+            ("mgcv", "bam"),
+            ("tm", "tm_map"),
+        ] {
+            assert!(m.contains_key(&key), "missing transpiler for {key:?}");
+        }
+    }
+
+    #[test]
+    fn registry_size_matches_tables() {
+        let m = build();
+        let expected = BASE_FUNCTIONS.len()
+            + 1 // kernapply
+            + PURRR_FUNCTIONS.len()
+            + CROSSMAP_FUNCTIONS.len()
+            + 1 // %do%
+            + PLYR_FUNCTIONS.len()
+            + BIOCPARALLEL_FUNCTIONS.len()
+            + 3 // boot
+            + 7 // caret
+            + 1 // glmnet
+            + 2 // lme4
+            + 2 // mgcv
+            + 3; // tm
+        assert_eq!(m.len(), expected);
+    }
+}

@@ -1,0 +1,364 @@
+//! Self-describing JSON `serde::Deserializer`.
+
+use serde::de::{
+    DeserializeSeed, EnumAccess, IntoDeserializer, MapAccess, SeqAccess, VariantAccess, Visitor,
+};
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error: {}", self.0)
+    }
+}
+impl std::error::Error for Error {}
+impl serde::de::Error for Error {
+    fn custom<T: std::fmt::Display>(msg: T) -> Self {
+        Error(msg.to_string())
+    }
+}
+
+/// Deserialize a value from JSON text.
+pub fn from_str<'a, T: serde::Deserialize<'a>>(s: &'a str) -> Result<T, Error> {
+    let mut de = De { input: s.as_bytes(), pos: 0 };
+    let v = T::deserialize(&mut de)?;
+    de.skip_ws();
+    if de.pos != de.input.len() {
+        return Err(Error(format!("trailing characters at byte {}", de.pos)));
+    }
+    Ok(v)
+}
+
+struct De<'a> {
+    input: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> De<'a> {
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.input.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.input.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn bump(&mut self) -> Result<u8, Error> {
+        let c = self
+            .input
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| Error("unexpected end of input".into()))?;
+        self.pos += 1;
+        Ok(c)
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), Error> {
+        self.skip_ws();
+        let got = self.bump()?;
+        if got != c {
+            return Err(Error(format!(
+                "expected '{}' at byte {}, found '{}'",
+                c as char,
+                self.pos - 1,
+                got as char
+            )));
+        }
+        Ok(())
+    }
+
+    fn expect_keyword(&mut self, kw: &str) -> Result<(), Error> {
+        for &b in kw.as_bytes() {
+            if self.bump()? != b {
+                return Err(Error(format!("invalid literal (expected {kw})")));
+            }
+        }
+        Ok(())
+    }
+
+    fn parse_string(&mut self) -> Result<String, Error> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.bump()?;
+            match c {
+                b'"' => break,
+                b'\\' => match self.bump()? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self.bump()?;
+                            code = code * 16
+                                + (d as char)
+                                    .to_digit(16)
+                                    .ok_or_else(|| Error("bad \\u escape".into()))?;
+                        }
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    other => return Err(Error(format!("bad escape \\{}", other as char))),
+                },
+                // Multi-byte UTF-8: copy raw continuation bytes.
+                c if c >= 0x80 => {
+                    let start = self.pos - 1;
+                    let len = if c >= 0xF0 {
+                        4
+                    } else if c >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    for _ in 1..len {
+                        self.bump()?;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.input[start..start + len])
+                            .map_err(|e| Error(e.to_string()))?,
+                    );
+                }
+                c => out.push(c as char),
+            }
+        }
+        Ok(out)
+    }
+
+    fn parse_number(&mut self) -> Result<f64, Error> {
+        self.skip_ws();
+        let start = self.pos;
+        if matches!(self.input.get(self.pos), Some(b'-')) {
+            self.pos += 1;
+        }
+        while matches!(
+            self.input.get(self.pos),
+            Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.input[start..self.pos])
+            .map_err(|e| Error(e.to_string()))?;
+        text.parse::<f64>().map_err(|e| Error(format!("bad number '{text}': {e}")))
+    }
+}
+
+/// Non-finite float escape hatch (see ser.rs fmt_f64).
+fn special_float(s: &str) -> Option<f64> {
+    match s {
+        "__f64_nan__" => Some(f64::NAN),
+        "__f64_inf__" => Some(f64::INFINITY),
+        "__f64_ninf__" => Some(f64::NEG_INFINITY),
+        _ => None,
+    }
+}
+
+impl<'de> serde::Deserializer<'de> for &mut De<'_> {
+    type Error = Error;
+
+    fn deserialize_any<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        match self.peek() {
+            Some(b'n') => {
+                self.expect_keyword("null")?;
+                visitor.visit_unit()
+            }
+            Some(b't') => {
+                self.expect_keyword("true")?;
+                visitor.visit_bool(true)
+            }
+            Some(b'f') => {
+                self.expect_keyword("false")?;
+                visitor.visit_bool(false)
+            }
+            Some(b'"') => {
+                let s = self.parse_string()?;
+                if let Some(f) = special_float(&s) {
+                    return visitor.visit_f64(f);
+                }
+                visitor.visit_string(s)
+            }
+            Some(b'[') => {
+                self.expect(b'[')?;
+                let v = visitor.visit_seq(Elems { de: self, first: true })?;
+                self.expect(b']')?;
+                Ok(v)
+            }
+            Some(b'{') => {
+                self.expect(b'{')?;
+                let v = visitor.visit_map(Fields { de: self, first: true })?;
+                self.expect(b'}')?;
+                Ok(v)
+            }
+            Some(_) => {
+                let n = self.parse_number()?;
+                if n == n.trunc() && n.abs() < 9.0e18 {
+                    if n < 0.0 {
+                        visitor.visit_i64(n as i64)
+                    } else {
+                        visitor.visit_u64(n as u64)
+                    }
+                } else {
+                    visitor.visit_f64(n)
+                }
+            }
+            None => Err(Error("unexpected end of input".into())),
+        }
+    }
+
+    fn deserialize_option<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        if self.peek() == Some(b'n') {
+            self.expect_keyword("null")?;
+            visitor.visit_none()
+        } else {
+            visitor.visit_some(self)
+        }
+    }
+
+    fn deserialize_f64<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        match self.peek() {
+            Some(b'"') => {
+                let s = self.parse_string()?;
+                match special_float(&s) {
+                    Some(f) => visitor.visit_f64(f),
+                    None => Err(Error(format!("expected number, got \"{s}\""))),
+                }
+            }
+            _ => visitor.visit_f64(self.parse_number()?),
+        }
+    }
+
+    fn deserialize_f32<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        self.deserialize_f64(visitor)
+    }
+
+    fn deserialize_enum<V: Visitor<'de>>(
+        self,
+        _name: &'static str,
+        _variants: &'static [&'static str],
+        visitor: V,
+    ) -> Result<V::Value, Error> {
+        match self.peek() {
+            // Unit variant: "Name"
+            Some(b'"') => {
+                let s = self.parse_string()?;
+                visitor.visit_enum(s.into_deserializer())
+            }
+            // Data variant: {"Name": payload}
+            Some(b'{') => {
+                self.expect(b'{')?;
+                let v = visitor.visit_enum(Enum { de: self })?;
+                self.expect(b'}')?;
+                Ok(v)
+            }
+            other => Err(Error(format!("expected enum, found {other:?}"))),
+        }
+    }
+
+    serde::forward_to_deserialize_any! {
+        bool i8 i16 i32 i64 i128 u8 u16 u32 u64 u128 char str string bytes
+        byte_buf unit unit_struct newtype_struct seq tuple tuple_struct map
+        struct identifier ignored_any
+    }
+}
+
+struct Elems<'a, 'b> {
+    de: &'a mut De<'b>,
+    first: bool,
+}
+
+impl<'de> SeqAccess<'de> for Elems<'_, '_> {
+    type Error = Error;
+    fn next_element_seed<T: DeserializeSeed<'de>>(
+        &mut self,
+        seed: T,
+    ) -> Result<Option<T::Value>, Error> {
+        if self.de.peek() == Some(b']') {
+            return Ok(None);
+        }
+        if !self.first {
+            self.de.expect(b',')?;
+        }
+        self.first = false;
+        if self.de.peek() == Some(b']') {
+            return Err(Error("trailing comma in array".into()));
+        }
+        seed.deserialize(&mut *self.de).map(Some)
+    }
+}
+
+struct Fields<'a, 'b> {
+    de: &'a mut De<'b>,
+    first: bool,
+}
+
+impl<'de> MapAccess<'de> for Fields<'_, '_> {
+    type Error = Error;
+    fn next_key_seed<K: DeserializeSeed<'de>>(
+        &mut self,
+        seed: K,
+    ) -> Result<Option<K::Value>, Error> {
+        if self.de.peek() == Some(b'}') {
+            return Ok(None);
+        }
+        if !self.first {
+            self.de.expect(b',')?;
+        }
+        self.first = false;
+        let key = self.de.parse_string()?;
+        seed.deserialize(key.into_deserializer()).map(Some)
+    }
+    fn next_value_seed<V: DeserializeSeed<'de>>(&mut self, seed: V) -> Result<V::Value, Error> {
+        self.de.expect(b':')?;
+        seed.deserialize(&mut *self.de)
+    }
+}
+
+struct Enum<'a, 'b> {
+    de: &'a mut De<'b>,
+}
+
+impl<'de, 'a, 'b> EnumAccess<'de> for Enum<'a, 'b> {
+    type Error = Error;
+    type Variant = Variant<'a, 'b>;
+    fn variant_seed<V: DeserializeSeed<'de>>(
+        self,
+        seed: V,
+    ) -> Result<(V::Value, Self::Variant), Error> {
+        let name = self.de.parse_string()?;
+        self.de.expect(b':')?;
+        let v = seed.deserialize(name.into_deserializer())?;
+        Ok((v, Variant { de: self.de }))
+    }
+}
+
+struct Variant<'a, 'b> {
+    de: &'a mut De<'b>,
+}
+
+impl<'de> VariantAccess<'de> for Variant<'_, '_> {
+    type Error = Error;
+    fn unit_variant(self) -> Result<(), Error> {
+        self.de.expect_keyword("null")
+    }
+    fn newtype_variant_seed<T: DeserializeSeed<'de>>(self, seed: T) -> Result<T::Value, Error> {
+        seed.deserialize(&mut *self.de)
+    }
+    fn tuple_variant<V: Visitor<'de>>(self, _len: usize, visitor: V) -> Result<V::Value, Error> {
+        serde::Deserializer::deserialize_any(&mut *self.de, visitor)
+    }
+    fn struct_variant<V: Visitor<'de>>(
+        self,
+        _fields: &'static [&'static str],
+        visitor: V,
+    ) -> Result<V::Value, Error> {
+        serde::Deserializer::deserialize_any(&mut *self.de, visitor)
+    }
+}

@@ -1,0 +1,131 @@
+//! Minimal JSON substrate (serde_json is unavailable offline).
+//!
+//! Provides three things, enough for the whole stack:
+//!
+//! - [`JsonValue`] — a dynamic JSON value (used for structured condition
+//!   payloads such as progress amounts);
+//! - [`to_string`] — serialize any `serde::Serialize` type to compact
+//!   JSON (a full `serde::Serializer`);
+//! - [`from_str`] — deserialize any `serde::Deserialize` type from JSON
+//!   (a full self-describing `serde::Deserializer`).
+//!
+//! Enum representation matches serde's default externally-tagged form,
+//! so the worker protocol is derive-compatible: unit variants are
+//! strings, data variants are `{"Variant": ...}` objects.
+
+mod de;
+mod ser;
+mod value;
+
+pub use de::from_str;
+pub use ser::to_string;
+pub use value::JsonValue;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use serde_derive::{Deserialize, Serialize};
+
+    #[derive(Serialize, Deserialize, Debug, PartialEq)]
+    enum Kind {
+        Unit,
+        New(f64),
+        Tup(i64, String),
+        Struct { xs: Vec<f64>, name: Option<String> },
+    }
+
+    #[derive(Serialize, Deserialize, Debug, PartialEq)]
+    struct Payload {
+        id: u64,
+        kind: Kind,
+        tags: Vec<String>,
+        nested: Option<Box<Payload>>,
+    }
+
+    fn roundtrip<T: serde::Serialize + for<'a> serde::Deserialize<'a> + PartialEq + std::fmt::Debug>(
+        v: &T,
+    ) {
+        let s = to_string(v).unwrap();
+        let back: T = from_str(&s).unwrap_or_else(|e| panic!("{e}: {s}"));
+        assert_eq!(&back, v, "json was: {s}");
+    }
+
+    #[test]
+    fn roundtrips_enums_and_structs() {
+        roundtrip(&Kind::Unit);
+        roundtrip(&Kind::New(2.5));
+        roundtrip(&Kind::Tup(-3, "a \"quoted\" string\nwith newline".into()));
+        roundtrip(&Kind::Struct { xs: vec![1.0, -2.5, 1e-8], name: None });
+        roundtrip(&Payload {
+            id: 42,
+            kind: Kind::Struct { xs: vec![], name: Some("x".into()) },
+            tags: vec!["a".into(), "b".into()],
+            nested: Some(Box::new(Payload {
+                id: 1,
+                kind: Kind::Unit,
+                tags: vec![],
+                nested: None,
+            })),
+        });
+    }
+
+    #[test]
+    fn roundtrips_collections() {
+        roundtrip(&vec![1i64, 2, 3]);
+        roundtrip(&vec![(Some("k".to_string()), 1.5f64)]);
+        roundtrip(&Some(vec![true, false]));
+        let m: std::collections::BTreeMap<String, i64> =
+            [("a".to_string(), 1i64), ("b".to_string(), 2)].into_iter().collect();
+        roundtrip(&m);
+    }
+
+    #[test]
+    fn special_floats_and_unicode() {
+        roundtrip(&vec![f64::MAX, f64::MIN_POSITIVE, 0.1 + 0.2]);
+        roundtrip(&"héllo ✓ world".to_string());
+    }
+
+    #[test]
+    fn json_value_roundtrip() {
+        let v = JsonValue::Object(vec![
+            ("amount".into(), JsonValue::Number(1.0)),
+            ("total".into(), JsonValue::Number(100.0)),
+            ("tags".into(), JsonValue::Array(vec![JsonValue::String("x".into())])),
+            ("none".into(), JsonValue::Null),
+            ("ok".into(), JsonValue::Bool(true)),
+        ]);
+        roundtrip(&v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_str::<Vec<i64>>("[1, 2,").is_err());
+        assert!(from_str::<Vec<i64>>("{").is_err());
+        assert!(from_str::<f64>("nope").is_err());
+    }
+
+    #[test]
+    fn real_payload_roundtrips() {
+        // The actual worker-protocol types.
+        use crate::future_core::{TaskKind, TaskPayload};
+        let t = TaskPayload {
+            id: 9,
+            kind: TaskKind::Expr {
+                expr: crate::rlite::parse_expr("lapply(xs, function(x) x + 1)").unwrap(),
+                globals: vec![(
+                    "xs".into(),
+                    crate::rlite::serialize::WireVal::Dbl(vec![1.0, 2.0], None),
+                )],
+            },
+            time_scale: 0.5,
+            capture_stdout: true,
+        };
+        let s = to_string(&t).unwrap();
+        let back: TaskPayload = from_str(&s).unwrap();
+        assert_eq!(back.id, 9);
+        match back.kind {
+            TaskKind::Expr { globals, .. } => assert_eq!(globals.len(), 1),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,346 @@
+//! Compact-JSON `serde::Serializer`.
+
+use std::fmt::Write as _;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json serialize error: {}", self.0)
+    }
+}
+impl std::error::Error for Error {}
+impl serde::ser::Error for Error {
+    fn custom<T: std::fmt::Display>(msg: T) -> Self {
+        Error(msg.to_string())
+    }
+}
+
+/// Serialize any `Serialize` value to compact JSON text.
+pub fn to_string<T: serde::Serialize + ?Sized>(value: &T) -> Result<String, Error> {
+    let mut s = Ser { out: String::new() };
+    value.serialize(&mut s)?;
+    Ok(s.out)
+}
+
+pub(crate) fn escape_into(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn fmt_f64(out: &mut String, v: f64) {
+    if v.is_nan() || v.is_infinite() {
+        // JSON has no NaN/Inf; encode as tagged strings the deserializer
+        // understands (used by rlite's NA-as-NaN model).
+        if v.is_nan() {
+            out.push_str("\"__f64_nan__\"");
+        } else if v > 0.0 {
+            out.push_str("\"__f64_inf__\"");
+        } else {
+            out.push_str("\"__f64_ninf__\"");
+        }
+    } else if v == v.trunc() && v.abs() < 9.0e15 {
+        let _ = write!(out, "{:.1}", v); // keep float-ness: "2.0"
+    } else {
+        // Round-trippable shortest representation.
+        let _ = write!(out, "{v:?}");
+    }
+}
+
+struct Ser {
+    out: String,
+}
+
+pub struct SeqSer<'a> {
+    ser: &'a mut Ser,
+    first: bool,
+    close: &'static str,
+}
+
+impl<'a> SeqSer<'a> {
+    fn comma(&mut self) {
+        if self.first {
+            self.first = false;
+        } else {
+            self.ser.out.push(',');
+        }
+    }
+}
+
+impl<'a> serde::Serializer for &'a mut Ser {
+    type Ok = ();
+    type Error = Error;
+    type SerializeSeq = SeqSer<'a>;
+    type SerializeTuple = SeqSer<'a>;
+    type SerializeTupleStruct = SeqSer<'a>;
+    type SerializeTupleVariant = SeqSer<'a>;
+    type SerializeMap = SeqSer<'a>;
+    type SerializeStruct = SeqSer<'a>;
+    type SerializeStructVariant = SeqSer<'a>;
+
+    fn serialize_bool(self, v: bool) -> Result<(), Error> {
+        self.out.push_str(if v { "true" } else { "false" });
+        Ok(())
+    }
+    fn serialize_i8(self, v: i8) -> Result<(), Error> {
+        self.serialize_i64(v as i64)
+    }
+    fn serialize_i16(self, v: i16) -> Result<(), Error> {
+        self.serialize_i64(v as i64)
+    }
+    fn serialize_i32(self, v: i32) -> Result<(), Error> {
+        self.serialize_i64(v as i64)
+    }
+    fn serialize_i64(self, v: i64) -> Result<(), Error> {
+        let _ = write!(self.out, "{v}");
+        Ok(())
+    }
+    fn serialize_u8(self, v: u8) -> Result<(), Error> {
+        self.serialize_u64(v as u64)
+    }
+    fn serialize_u16(self, v: u16) -> Result<(), Error> {
+        self.serialize_u64(v as u64)
+    }
+    fn serialize_u32(self, v: u32) -> Result<(), Error> {
+        self.serialize_u64(v as u64)
+    }
+    fn serialize_u64(self, v: u64) -> Result<(), Error> {
+        let _ = write!(self.out, "{v}");
+        Ok(())
+    }
+    fn serialize_f32(self, v: f32) -> Result<(), Error> {
+        self.serialize_f64(v as f64)
+    }
+    fn serialize_f64(self, v: f64) -> Result<(), Error> {
+        fmt_f64(&mut self.out, v);
+        Ok(())
+    }
+    fn serialize_char(self, v: char) -> Result<(), Error> {
+        escape_into(&mut self.out, &v.to_string());
+        Ok(())
+    }
+    fn serialize_str(self, v: &str) -> Result<(), Error> {
+        escape_into(&mut self.out, v);
+        Ok(())
+    }
+    fn serialize_bytes(self, v: &[u8]) -> Result<(), Error> {
+        use serde::ser::SerializeSeq;
+        let mut seq = self.serialize_seq(Some(v.len()))?;
+        for b in v {
+            seq.serialize_element(b)?;
+        }
+        seq.end()
+    }
+    fn serialize_none(self) -> Result<(), Error> {
+        self.out.push_str("null");
+        Ok(())
+    }
+    fn serialize_some<T: serde::Serialize + ?Sized>(self, value: &T) -> Result<(), Error> {
+        value.serialize(self)
+    }
+    fn serialize_unit(self) -> Result<(), Error> {
+        self.out.push_str("null");
+        Ok(())
+    }
+    fn serialize_unit_struct(self, _name: &'static str) -> Result<(), Error> {
+        self.serialize_unit()
+    }
+    fn serialize_unit_variant(
+        self,
+        _name: &'static str,
+        _idx: u32,
+        variant: &'static str,
+    ) -> Result<(), Error> {
+        escape_into(&mut self.out, variant);
+        Ok(())
+    }
+    fn serialize_newtype_struct<T: serde::Serialize + ?Sized>(
+        self,
+        _name: &'static str,
+        value: &T,
+    ) -> Result<(), Error> {
+        value.serialize(self)
+    }
+    fn serialize_newtype_variant<T: serde::Serialize + ?Sized>(
+        self,
+        _name: &'static str,
+        _idx: u32,
+        variant: &'static str,
+        value: &T,
+    ) -> Result<(), Error> {
+        self.out.push('{');
+        escape_into(&mut self.out, variant);
+        self.out.push(':');
+        value.serialize(&mut *self)?;
+        self.out.push('}');
+        Ok(())
+    }
+    fn serialize_seq(self, _len: Option<usize>) -> Result<SeqSer<'a>, Error> {
+        self.out.push('[');
+        Ok(SeqSer { ser: self, first: true, close: "]" })
+    }
+    fn serialize_tuple(self, len: usize) -> Result<SeqSer<'a>, Error> {
+        self.serialize_seq(Some(len))
+    }
+    fn serialize_tuple_struct(
+        self,
+        _name: &'static str,
+        len: usize,
+    ) -> Result<SeqSer<'a>, Error> {
+        self.serialize_seq(Some(len))
+    }
+    fn serialize_tuple_variant(
+        self,
+        _name: &'static str,
+        _idx: u32,
+        variant: &'static str,
+        _len: usize,
+    ) -> Result<SeqSer<'a>, Error> {
+        self.out.push('{');
+        escape_into(&mut self.out, variant);
+        self.out.push_str(":[");
+        Ok(SeqSer { ser: self, first: true, close: "]}" })
+    }
+    fn serialize_map(self, _len: Option<usize>) -> Result<SeqSer<'a>, Error> {
+        self.out.push('{');
+        Ok(SeqSer { ser: self, first: true, close: "}" })
+    }
+    fn serialize_struct(
+        self,
+        _name: &'static str,
+        _len: usize,
+    ) -> Result<SeqSer<'a>, Error> {
+        self.out.push('{');
+        Ok(SeqSer { ser: self, first: true, close: "}" })
+    }
+    fn serialize_struct_variant(
+        self,
+        _name: &'static str,
+        _idx: u32,
+        variant: &'static str,
+        _len: usize,
+    ) -> Result<SeqSer<'a>, Error> {
+        self.out.push('{');
+        escape_into(&mut self.out, variant);
+        self.out.push_str(":{");
+        Ok(SeqSer { ser: self, first: true, close: "}}" })
+    }
+}
+
+impl serde::ser::SerializeSeq for SeqSer<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_element<T: serde::Serialize + ?Sized>(&mut self, value: &T) -> Result<(), Error> {
+        self.comma();
+        value.serialize(&mut *self.ser)
+    }
+    fn end(self) -> Result<(), Error> {
+        self.ser.out.push_str(self.close);
+        Ok(())
+    }
+}
+
+impl serde::ser::SerializeTuple for SeqSer<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_element<T: serde::Serialize + ?Sized>(&mut self, value: &T) -> Result<(), Error> {
+        serde::ser::SerializeSeq::serialize_element(self, value)
+    }
+    fn end(self) -> Result<(), Error> {
+        serde::ser::SerializeSeq::end(self)
+    }
+}
+
+impl serde::ser::SerializeTupleStruct for SeqSer<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_field<T: serde::Serialize + ?Sized>(&mut self, value: &T) -> Result<(), Error> {
+        serde::ser::SerializeSeq::serialize_element(self, value)
+    }
+    fn end(self) -> Result<(), Error> {
+        serde::ser::SerializeSeq::end(self)
+    }
+}
+
+impl serde::ser::SerializeTupleVariant for SeqSer<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_field<T: serde::Serialize + ?Sized>(&mut self, value: &T) -> Result<(), Error> {
+        serde::ser::SerializeSeq::serialize_element(self, value)
+    }
+    fn end(self) -> Result<(), Error> {
+        serde::ser::SerializeSeq::end(self)
+    }
+}
+
+impl serde::ser::SerializeMap for SeqSer<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_key<T: serde::Serialize + ?Sized>(&mut self, key: &T) -> Result<(), Error> {
+        self.comma();
+        // Keys must be strings in JSON; serialize then ensure quoting.
+        let k = to_string(key)?;
+        if k.starts_with('"') {
+            self.ser.out.push_str(&k);
+        } else {
+            escape_into(&mut self.ser.out, &k);
+        }
+        Ok(())
+    }
+    fn serialize_value<T: serde::Serialize + ?Sized>(&mut self, value: &T) -> Result<(), Error> {
+        self.ser.out.push(':');
+        value.serialize(&mut *self.ser)
+    }
+    fn end(self) -> Result<(), Error> {
+        self.ser.out.push_str(self.close);
+        Ok(())
+    }
+}
+
+impl serde::ser::SerializeStruct for SeqSer<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_field<T: serde::Serialize + ?Sized>(
+        &mut self,
+        key: &'static str,
+        value: &T,
+    ) -> Result<(), Error> {
+        self.comma();
+        escape_into(&mut self.ser.out, key);
+        self.ser.out.push(':');
+        value.serialize(&mut *self.ser)
+    }
+    fn end(self) -> Result<(), Error> {
+        self.ser.out.push_str(self.close);
+        Ok(())
+    }
+}
+
+impl serde::ser::SerializeStructVariant for SeqSer<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_field<T: serde::Serialize + ?Sized>(
+        &mut self,
+        key: &'static str,
+        value: &T,
+    ) -> Result<(), Error> {
+        serde::ser::SerializeStruct::serialize_field(self, key, value)
+    }
+    fn end(self) -> Result<(), Error> {
+        serde::ser::SerializeStruct::end(self)
+    }
+}

@@ -1,0 +1,147 @@
+//! Dynamic JSON value with hand-written serde impls.
+
+use std::fmt;
+
+/// A JSON value. Object keys keep insertion order (Vec of pairs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<JsonValue>),
+    Object(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Object(pairs) => {
+                pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|f| *f >= 0.0).map(|f| f as u64)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Convenience constructor for small objects.
+    pub fn obj(pairs: Vec<(&str, JsonValue)>) -> JsonValue {
+        JsonValue::Object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn num(n: f64) -> JsonValue {
+        JsonValue::Number(n)
+    }
+}
+
+impl fmt::Display for JsonValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", super::to_string(self).unwrap_or_default())
+    }
+}
+
+impl serde::Serialize for JsonValue {
+    fn serialize<S: serde::Serializer>(&self, s: S) -> Result<S::Ok, S::Error> {
+        use serde::ser::{SerializeMap, SerializeSeq};
+        match self {
+            JsonValue::Null => s.serialize_unit(),
+            JsonValue::Bool(b) => s.serialize_bool(*b),
+            JsonValue::Number(n) => s.serialize_f64(*n),
+            JsonValue::String(x) => s.serialize_str(x),
+            JsonValue::Array(items) => {
+                let mut seq = s.serialize_seq(Some(items.len()))?;
+                for it in items {
+                    seq.serialize_element(it)?;
+                }
+                seq.end()
+            }
+            JsonValue::Object(pairs) => {
+                let mut map = s.serialize_map(Some(pairs.len()))?;
+                for (k, v) in pairs {
+                    map.serialize_entry(k, v)?;
+                }
+                map.end()
+            }
+        }
+    }
+}
+
+impl<'de> serde::Deserialize<'de> for JsonValue {
+    fn deserialize<D: serde::Deserializer<'de>>(d: D) -> Result<Self, D::Error> {
+        struct V;
+        impl<'de> serde::de::Visitor<'de> for V {
+            type Value = JsonValue;
+            fn expecting(&self, f: &mut fmt::Formatter) -> fmt::Result {
+                write!(f, "any JSON value")
+            }
+            fn visit_unit<E>(self) -> Result<JsonValue, E> {
+                Ok(JsonValue::Null)
+            }
+            fn visit_none<E>(self) -> Result<JsonValue, E> {
+                Ok(JsonValue::Null)
+            }
+            fn visit_some<D2: serde::Deserializer<'de>>(
+                self,
+                d: D2,
+            ) -> Result<JsonValue, D2::Error> {
+                serde::Deserialize::deserialize(d)
+            }
+            fn visit_bool<E>(self, v: bool) -> Result<JsonValue, E> {
+                Ok(JsonValue::Bool(v))
+            }
+            fn visit_i64<E>(self, v: i64) -> Result<JsonValue, E> {
+                Ok(JsonValue::Number(v as f64))
+            }
+            fn visit_u64<E>(self, v: u64) -> Result<JsonValue, E> {
+                Ok(JsonValue::Number(v as f64))
+            }
+            fn visit_f64<E>(self, v: f64) -> Result<JsonValue, E> {
+                Ok(JsonValue::Number(v))
+            }
+            fn visit_str<E>(self, v: &str) -> Result<JsonValue, E> {
+                Ok(JsonValue::String(v.to_string()))
+            }
+            fn visit_string<E>(self, v: String) -> Result<JsonValue, E> {
+                Ok(JsonValue::String(v))
+            }
+            fn visit_seq<A: serde::de::SeqAccess<'de>>(
+                self,
+                mut seq: A,
+            ) -> Result<JsonValue, A::Error> {
+                let mut out = Vec::new();
+                while let Some(v) = seq.next_element::<JsonValue>()? {
+                    out.push(v);
+                }
+                Ok(JsonValue::Array(out))
+            }
+            fn visit_map<A: serde::de::MapAccess<'de>>(
+                self,
+                mut map: A,
+            ) -> Result<JsonValue, A::Error> {
+                let mut out = Vec::new();
+                while let Some((k, v)) = map.next_entry::<String, JsonValue>()? {
+                    out.push((k, v));
+                }
+                Ok(JsonValue::Object(out))
+            }
+        }
+        d.deserialize_any(V)
+    }
+}

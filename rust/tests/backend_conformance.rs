@@ -1,0 +1,170 @@
+//! The future.tests analog (paper §2.1 footnote 2): every backend must
+//! be compliant with the Future API. One conformance suite, run against
+//! all five backends.
+
+use futurize::prelude::*;
+
+fn worker_env() {
+    // Integration tests run inside the libtest harness binary, which
+    // cannot host workers; point multisession at the real CLI binary.
+    std::env::set_var(
+        futurize::backend::worker::WORKER_BIN_ENV,
+        env!("CARGO_BIN_EXE_futurize-rs"),
+    );
+}
+
+const PLANS: &[&str] = &[
+    "sequential",
+    "multicore, workers = 2",
+    "multisession, workers = 2",
+    "cluster, workers = c(\"n1\", \"n2\"), latency_ms = 0.1",
+    "future.batchtools::batchtools_slurm, workers = 2, poll_ms = 2",
+];
+
+fn for_each_plan(f: impl Fn(&mut Session, &str)) {
+    worker_env();
+    for plan in PLANS {
+        let mut s = Session::new();
+        s.eval_str(&format!("plan({plan})")).unwrap();
+        f(&mut s, plan);
+    }
+}
+
+#[test]
+fn values_match_sequential_reference() {
+    worker_env();
+    let reference = Session::new()
+        .eval_str("unlist(lapply(1:12, function(x) x^2 + 1))")
+        .unwrap();
+    for_each_plan(|s, plan| {
+        let v = s
+            .eval_str("unlist(lapply(1:12, function(x) x^2 + 1) |> futurize())")
+            .unwrap_or_else(|e| panic!("{plan}: {e}"));
+        assert_eq!(v, reference, "{plan}");
+    });
+}
+
+#[test]
+fn globals_are_exported_by_value() {
+    for_each_plan(|s, plan| {
+        let v = s
+            .eval_str(
+                "a <- 10\nf <- function(x) x + a\nr <- lapply(1:3, f) |> futurize()\na <- 999\nunlist(r)",
+            )
+            .unwrap_or_else(|e| panic!("{plan}: {e}"));
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![11.0, 12.0, 13.0], "{plan}");
+    });
+}
+
+#[test]
+fn errors_preserve_the_original_condition() {
+    // The paper's §1 critique: mclapply/parLapply lose the error object.
+    for_each_plan(|s, plan| {
+        let v = s
+            .eval_str(
+                "r <- tryCatch(\n  lapply(1:4, function(x) if (x == 3) stop(\"original message\") else x) |> futurize(),\n  error = function(e) conditionMessage(e))\nr",
+            )
+            .unwrap_or_else(|e| panic!("{plan}: {e}"));
+        assert_eq!(v.as_str().unwrap(), "original message", "{plan}");
+    });
+}
+
+#[test]
+fn stdout_and_messages_relay() {
+    for_each_plan(|s, plan| {
+        let (r, out) = s.eval_captured(
+            "ys <- lapply(1:2, function(x) { cat(\"o\", x, \"\")\nmessage(\"m\", x)\nx }) |> futurize()\nunlist(ys)",
+        );
+        let v = r.unwrap_or_else(|e| panic!("{plan}: {e}"));
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![1.0, 2.0], "{plan}");
+        assert!(out.contains("o 1"), "{plan}: stdout lost: {out:?}");
+        assert!(out.contains("m1"), "{plan}: message lost: {out:?}");
+    });
+}
+
+#[test]
+fn warnings_relay_and_are_suppressible() {
+    for_each_plan(|s, plan| {
+        let (_, noisy) = s.eval_captured(
+            "ys <- lapply(1:2, function(x) { warning(\"w\", x)\nx }) |> futurize()",
+        );
+        assert!(noisy.contains("w1"), "{plan}: warning lost: {noisy:?}");
+        let (_, quiet) = s.eval_captured(
+            "ys <- lapply(1:2, function(x) { warning(\"w\", x)\nx }) |> suppressWarnings() |> futurize()",
+        );
+        assert!(!quiet.contains("w1"), "{plan}: suppression failed: {quiet:?}");
+    });
+}
+
+#[test]
+fn seed_true_reproducible_per_backend() {
+    worker_env();
+    let reference = {
+        let mut s = Session::new();
+        s.eval_str("futureSeed(31)").unwrap();
+        s.eval_str("unlist(lapply(1:8, function(x) rnorm(1)) |> futurize(seed = TRUE))")
+            .unwrap()
+    };
+    for_each_plan(|s, plan| {
+        s.eval_str("futureSeed(31)").unwrap();
+        let v = s
+            .eval_str("unlist(lapply(1:8, function(x) rnorm(1)) |> futurize(seed = TRUE))")
+            .unwrap_or_else(|e| panic!("{plan}: {e}"));
+        assert_eq!(v, reference, "{plan}: RNG streams must be backend-invariant");
+    });
+}
+
+#[test]
+fn chunking_options_respected() {
+    for_each_plan(|s, plan| {
+        for opts in ["chunk_size = 1", "chunk_size = 5", "scheduling = Inf", "scheduling = 2"] {
+            let v = s
+                .eval_str(&format!(
+                    "unlist(lapply(1:10, function(x) x * 2) |> futurize({opts}))"
+                ))
+                .unwrap_or_else(|e| panic!("{plan}/{opts}: {e}"));
+            assert_eq!(
+                v.as_dbl_vec().unwrap(),
+                (1..=10).map(|x| (x * 2) as f64).collect::<Vec<_>>(),
+                "{plan}/{opts}"
+            );
+        }
+    });
+}
+
+#[test]
+fn low_level_future_api_works_everywhere() {
+    for_each_plan(|s, plan| {
+        let v = s
+            .eval_str("f1 <- future(1 + 1)\nf2 <- future(2 + 2)\nvalue(f1) + value(f2)")
+            .unwrap_or_else(|e| panic!("{plan}: {e}"));
+        assert_eq!(v.as_f64().unwrap(), 6.0, "{plan}");
+    });
+}
+
+#[test]
+fn empty_input_yields_empty_result() {
+    for_each_plan(|s, plan| {
+        let v = s
+            .eval_str("r <- lapply(NULL, function(x) x) |> futurize()\nlength(r)")
+            .unwrap_or_else(|e| panic!("{plan}: {e}"));
+        assert_eq!(v.as_f64().unwrap(), 0.0, "{plan}");
+    });
+}
+
+#[test]
+fn plan_switching_mid_session() {
+    worker_env();
+    let mut s = Session::new();
+    let mut results = Vec::new();
+    for plan in PLANS {
+        s.eval_str(&format!("plan({plan})")).unwrap();
+        results.push(
+            s.eval_str("sum(unlist(lapply(1:5, function(x) x) |> futurize()))")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+        );
+    }
+    assert!(results.iter().all(|&v| v == 15.0), "{results:?}");
+}

@@ -1,0 +1,127 @@
+//! End-to-end over real worker subprocesses: scripts exercising the
+//! full stack (parser → transpiler → process backend → PJRT payloads →
+//! relay), including the paper's §4.9/§4.10 behaviours across the
+//! process boundary.
+
+use futurize::prelude::*;
+
+fn session() -> Session {
+    std::env::set_var(
+        futurize::backend::worker::WORKER_BIN_ENV,
+        env!("CARGO_BIN_EXE_futurize-rs"),
+    );
+    let mut s = Session::new();
+    s.eval_str("plan(multisession, workers = 2)").unwrap();
+    s
+}
+
+#[test]
+fn closures_with_captured_state_cross_the_process_boundary() {
+    let mut s = session();
+    let v = s
+        .eval_str(
+            "base_val <- 100\nscale <- 3\nf <- function(x) (x + base_val) * scale\nunlist(lapply(1:4, f) |> futurize())",
+        )
+        .unwrap();
+    assert_eq!(v.as_dbl_vec().unwrap(), vec![303.0, 306.0, 309.0, 312.0]);
+}
+
+#[test]
+fn nested_closures_serialize() {
+    let mut s = session();
+    let v = s
+        .eval_str(
+            "make_adder <- function(k) function(x) x + k\nadd7 <- make_adder(7)\nunlist(lapply(1:3, add7) |> futurize())",
+        )
+        .unwrap();
+    assert_eq!(v.as_dbl_vec().unwrap(), vec![8.0, 9.0, 10.0]);
+}
+
+#[test]
+fn pjrt_kernels_run_inside_workers() {
+    let mut s = session();
+    let v = s
+        .eval_str("unlist(lapply(list(c(0, 1), c(2, 3)), function(ch) sum(hlo_chunk_map(ch))) |> futurize())")
+        .unwrap();
+    // 3x^2+2x+1 at 0,1,2,3 = 1, 6, 17, 34.
+    assert_eq!(v.as_dbl_vec().unwrap(), vec![7.0, 51.0]);
+}
+
+#[test]
+fn progress_streams_near_live_from_processes() {
+    let mut s = session();
+    let exprs = futurize::rlite::parse_program(
+        "xs <- 1:6\nys <- local({\n  p <- progressor(along = xs)\n  lapply(xs, function(x) { p()\nx })\n}) |> futurize()\nlength(ys)",
+    )
+    .unwrap();
+    let genv = s.interp.global.clone();
+    let mut progressions = 0;
+    let mut last = RVal::Null;
+    for e in &exprs {
+        let (r, log) = s.interp.eval_captured(e, &genv);
+        last = r.unwrap();
+        progressions += log.conditions.iter().filter(|c| c.inherits("progression")).count();
+    }
+    assert_eq!(last.as_f64().unwrap(), 6.0);
+    assert_eq!(progressions, 6, "one near-live progression per element");
+}
+
+#[test]
+fn worker_crash_isolation_error_reported() {
+    let mut s = session();
+    // A task error must not poison the pool: subsequent calls succeed.
+    let err = s
+        .eval_str("lapply(1:2, function(x) stop(\"task-level failure\")) |> futurize()")
+        .unwrap_err();
+    assert!(err.contains("task-level failure"), "{err}");
+    let v = s.eval_str("unlist(lapply(1:2, function(x) x) |> futurize())").unwrap();
+    assert_eq!(v.as_dbl_vec().unwrap(), vec![1.0, 2.0]);
+}
+
+#[test]
+fn boot_pipeline_end_to_end() {
+    let mut s = session();
+    s.eval_str("futureSeed(123)").unwrap();
+    let v = s
+        .eval_str(
+            "data(bigcity)\nratio <- function(d, w) hlo_boot_stat(d$x, d$u, w)\n\
+             b <- boot(bigcity, statistic = ratio, R = 60, stype = \"w\") |> futurize()\n\
+             c(length(b$t), sum(b$t > 1), b$t0 > 1)",
+        )
+        .unwrap();
+    let stats = v.as_dbl_vec().unwrap();
+    assert_eq!(stats[0], 60.0);
+    assert!(stats[1] > 50.0, "growth ratios should exceed 1: {stats:?}");
+    assert_eq!(stats[2], 1.0);
+}
+
+#[test]
+fn cli_run_subcommand_works() {
+    let dir = std::env::temp_dir().join(format!("futurize-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let script = dir.join("demo.R");
+    std::fs::write(
+        &script,
+        "plan(multisession, workers = 2)\nsum(unlist(lapply(1:10, function(x) x^2) |> futurize()))\n",
+    )
+    .unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_futurize-rs"))
+        .args(["run", script.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("385"), "stdout: {stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cli_supported_matches_paper_listing() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_futurize-rs"))
+        .args(["supported"])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for pkg in ["base", "purrr", "foreach", "plyr", "BiocParallel", "boot", "tm"] {
+        assert!(stdout.contains(pkg), "missing {pkg} in: {stdout}");
+    }
+}

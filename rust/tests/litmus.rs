@@ -1,0 +1,173 @@
+//! Exp X3 — the paper's §5.2 "parallelization litmus test" as property
+//! tests: `rev(lapply(rev(xs), fcn))` must equal `lapply(xs, fcn)`, and
+//! futurized results must be invariant to worker count, chunking, and
+//! element order. Randomized inputs are generated with the crate's own
+//! MRG32k3a (proptest is not available offline).
+
+use futurize::prelude::*;
+use futurize::rng::RngStream;
+
+fn worker_env() {
+    std::env::set_var(
+        futurize::backend::worker::WORKER_BIN_ENV,
+        env!("CARGO_BIN_EXE_futurize-rs"),
+    );
+}
+
+fn random_vector(g: &mut RngStream, n: usize) -> String {
+    let vals: Vec<String> =
+        (0..n).map(|_| format!("{:.4}", g.next_f64() * 200.0 - 100.0)).collect();
+    format!("c({})", vals.join(", "))
+}
+
+/// Pure functions to map with (no RNG — order-independent).
+const FCNS: &[&str] = &[
+    "function(x) x^2",
+    "function(x) sqrt(abs(x)) + 1",
+    "function(x) if (x > 0) x else -x",
+    "function(x) sum(hlo_chunk_map(c(x, x)))",
+];
+
+#[test]
+fn litmus_reverse_invariance_sequential() {
+    let mut g = RngStream::from_seed(101);
+    for trial in 0..20 {
+        let n = 1 + g.next_below(12);
+        let xs = random_vector(&mut g, n);
+        let f = FCNS[g.next_below(FCNS.len())];
+        let mut s = Session::new();
+        s.eval_str(&format!("xs <- {xs}\nfcn <- {f}")).unwrap();
+        let a = s.eval_str("unlist(lapply(xs, fcn))").unwrap();
+        let b = s.eval_str("unlist(rev(lapply(rev(xs), fcn)))").unwrap();
+        assert_eq!(a, b, "trial {trial}: fcn={f} xs={xs}");
+    }
+}
+
+#[test]
+fn litmus_futurized_equals_sequential() {
+    let mut g = RngStream::from_seed(202);
+    for trial in 0..20 {
+        let n = 1 + g.next_below(16);
+        let xs = random_vector(&mut g, n);
+        let f = FCNS[g.next_below(FCNS.len())];
+        let workers = 1 + g.next_below(4);
+        let mut s = Session::new();
+        s.eval_str(&format!("xs <- {xs}\nfcn <- {f}")).unwrap();
+        let seq = s.eval_str("unlist(lapply(xs, fcn))").unwrap();
+        s.eval_str(&format!("plan(multicore, workers = {workers})")).unwrap();
+        let fut = s.eval_str("unlist(lapply(xs, fcn) |> futurize())").unwrap();
+        assert_eq!(seq, fut, "trial {trial}: workers={workers} fcn={f}");
+    }
+}
+
+#[test]
+fn litmus_chunking_invariance() {
+    let mut g = RngStream::from_seed(303);
+    for trial in 0..15 {
+        let n = 2 + g.next_below(20);
+        let xs = random_vector(&mut g, n);
+        let chunk = 1 + g.next_below(n);
+        let mut s = Session::new();
+        s.eval_str(&format!("plan(multicore, workers = 3)\nxs <- {xs}")).unwrap();
+        let a = s
+            .eval_str("unlist(lapply(xs, function(x) x * 3) |> futurize())")
+            .unwrap();
+        let b = s
+            .eval_str(&format!(
+                "unlist(lapply(xs, function(x) x * 3) |> futurize(chunk_size = {chunk}))"
+            ))
+            .unwrap();
+        assert_eq!(a, b, "trial {trial}: chunk_size={chunk} n={n}");
+    }
+}
+
+#[test]
+fn litmus_rng_reverse_with_per_element_streams() {
+    // With seed = TRUE the paper's exception disappears: element k gets
+    // stream k regardless of processing order, so even *random* numbers
+    // satisfy the reverse-invariance property elementwise.
+    let mut s = Session::new();
+    s.eval_str("plan(multicore, workers = 3)").unwrap();
+    s.eval_str("futureSeed(99)").unwrap();
+    let fwd = s
+        .eval_str("unlist(lapply(1:8, function(x) rnorm(1)) |> futurize(seed = TRUE))")
+        .unwrap();
+    s.eval_str("futureSeed(99)").unwrap();
+    let scrambled = s
+        .eval_str(
+            "unlist(lapply(1:8, function(x) rnorm(1)) |> futurize(seed = TRUE, scheduling = Inf))",
+        )
+        .unwrap();
+    assert_eq!(fwd, scrambled);
+}
+
+#[test]
+fn litmus_multisession_matches_multicore() {
+    worker_env();
+    let mut g = RngStream::from_seed(404);
+    for _ in 0..5 {
+        let n = 1 + g.next_below(10);
+        let xs = random_vector(&mut g, n);
+        let mut s = Session::new();
+        s.eval_str(&format!("xs <- {xs}")).unwrap();
+        s.eval_str("plan(multicore, workers = 2)").unwrap();
+        let a = s.eval_str("unlist(lapply(xs, function(x) x / 3) |> futurize())").unwrap();
+        s.eval_str("plan(multisession, workers = 2)").unwrap();
+        let b = s.eval_str("unlist(lapply(xs, function(x) x / 3) |> futurize())").unwrap();
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn scheduling_policy_properties() {
+    // make_chunks: total coverage, contiguity, count bounds — swept over
+    // random (n, workers, policy).
+    use futurize::scheduling::{make_chunks, ChunkPolicy};
+    let mut g = RngStream::from_seed(505);
+    for _ in 0..500 {
+        let n = g.next_below(200);
+        let workers = 1 + g.next_below(16);
+        let policy = match g.next_below(3) {
+            0 => ChunkPolicy { chunk_size: Some(1 + g.next_below(20)), scheduling: 1.0 },
+            1 => ChunkPolicy { chunk_size: None, scheduling: 0.25 + g.next_f64() * 8.0 },
+            _ => ChunkPolicy { chunk_size: None, scheduling: f64::INFINITY },
+        };
+        let chunks = make_chunks(n, workers, &policy);
+        let total: usize = chunks.iter().map(|(s, e)| e - s).sum();
+        assert_eq!(total, n);
+        for w in chunks.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+        if n > 0 {
+            assert!(!chunks.is_empty());
+            assert!(chunks.len() <= n);
+        }
+    }
+}
+
+#[test]
+fn wire_roundtrip_of_random_values() {
+    // Serialization substrate property: to_wire/from_wire/JSON roundtrip
+    // over randomized nested values built in rlite.
+    let mut g = RngStream::from_seed(606);
+    for _ in 0..30 {
+        let n = 1 + g.next_below(6);
+        let src = format!(
+            "list(a = {}, b = \"s{}\", c = list(inner = {}), d = c({} > 0))",
+            g.next_f64() * 10.0,
+            g.next_below(100),
+            random_vector(&mut g, n),
+            g.next_f64() - 0.5,
+        );
+        let mut s = Session::new();
+        let v = s.eval_str(&src).unwrap();
+        let w = futurize::rlite::serialize::to_wire(&v).unwrap();
+        let json = futurize::wire::to_string(&w).unwrap();
+        let back: futurize::rlite::serialize::WireVal =
+            futurize::wire::from_str(&json).unwrap();
+        assert_eq!(w, back, "{src}");
+        let env = futurize::rlite::env::Env::new_ref();
+        let v2 = futurize::rlite::serialize::from_wire(&back, &env);
+        assert_eq!(v, v2, "{src}");
+    }
+}

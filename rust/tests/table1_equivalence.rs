@@ -1,0 +1,200 @@
+//! Exp T1 — Table-1 equivalence as a test (the bench regenerates the
+//! timing table; this locks in the correctness half): every supported
+//! map-reduce function yields identical results futurized vs sequential,
+//! and the transpiler registry covers exactly the paper's tables.
+
+use futurize::prelude::*;
+
+#[test]
+fn registry_lists_match_paper_tables() {
+    use futurize::transpile::{is_supported, supported_functions, supported_packages};
+
+    // §3.4: futurize_supported_packages() output.
+    assert_eq!(
+        supported_packages(),
+        vec![
+            "BiocParallel",
+            "base",
+            "boot",
+            "caret",
+            "crossmap",
+            "foreach",
+            "glmnet",
+            "lme4",
+            "mgcv",
+            "plyr",
+            "purrr",
+            "stats",
+            "tm",
+        ]
+    );
+
+    // Table 1, base row (§3.4 example shows the base list).
+    for f in [
+        "lapply", "sapply", "tapply", "vapply", "mapply", ".mapply", "Map", "eapply", "apply",
+        "by", "replicate", "Filter",
+    ] {
+        assert!(is_supported("base", f), "base::{f}");
+    }
+    assert!(is_supported("stats", "kernapply"));
+    assert!(is_supported("foreach", "%do%"));
+    // Table 2 rows.
+    for (pkg, f) in [
+        ("boot", "boot"),
+        ("boot", "censboot"),
+        ("boot", "tsboot"),
+        ("caret", "train"),
+        ("caret", "bag"),
+        ("caret", "gafs"),
+        ("caret", "nearZeroVar"),
+        ("caret", "rfe"),
+        ("caret", "safs"),
+        ("caret", "sbf"),
+        ("glmnet", "cv.glmnet"),
+        ("lme4", "allFit"),
+        ("lme4", "bootMer"),
+        ("mgcv", "bam"),
+        ("mgcv", "predict.bam"),
+        ("tm", "TermDocumentMatrix"),
+        ("tm", "tm_index"),
+        ("tm", "tm_map"),
+    ] {
+        assert!(is_supported(pkg, f), "{pkg}::{f}");
+    }
+    // Spot check function listings are sorted and non-empty.
+    let fns = supported_functions("purrr");
+    assert!(fns.len() >= 20, "purrr variants: {fns:?}");
+    let mut sorted = fns.clone();
+    sorted.sort();
+    assert_eq!(fns, sorted);
+}
+
+/// Every transpilable function must have a registered implementation for
+/// both its sequential name and its transpile target — i.e. futurize()
+/// of a supported call must *evaluate*, not just rewrite.
+#[test]
+fn every_table1_function_futurizes_and_matches() {
+    let fixture = "
+        f <- function(x) x^2
+        g2 <- function(a, b) a + b
+        xs <- 1:6
+        ys <- 11:16
+        vals <- c(1, 5, 2, 8, 3, 9)
+        grp <- c(\"a\", \"b\", \"a\", \"b\", \"a\", \"b\")
+        m <- matrix(1:12, nrow = 3)
+        df <- data.frame(g = grp, v = vals)
+        e <- new.env()
+        e$a <- 1
+        k3 <- c(0.25, 0.5, 0.25)
+        named <- c(p = 1, q = 2)
+    ";
+    let cases = [
+        "lapply(xs, f)",
+        "sapply(xs, f)",
+        "vapply(xs, f, numeric(1))",
+        "mapply(g2, xs, ys)",
+        ".mapply(g2, list(xs, ys), NULL)",
+        "Map(g2, xs, ys)",
+        "apply(m, 2, sum)",
+        "apply(m, 1, sum)",
+        "tapply(vals, grp, sum)",
+        "by(df, grp, function(d) sum(d$v))",
+        "eapply(e, f)",
+        "Filter(function(x) x > 2, xs)",
+        "kernapply(vals, k3)",
+        "map(xs, f)",
+        "map_dbl(xs, f)",
+        "map_lgl(xs, function(x) x > 3)",
+        "map_int(xs, function(x) x * 2L)",
+        "map2(xs, ys, g2)",
+        "map2_dbl(xs, ys, g2)",
+        "pmap(list(xs, ys), g2)",
+        "pmap_dbl(list(xs, ys), g2)",
+        "imap(named, function(x, nm) paste0(nm, x))",
+        "imap_chr(named, function(x, nm) paste0(nm, x))",
+        "modify(xs, f)",
+        "modify_if(xs, function(x) x > 3, f)",
+        "modify_at(xs, c(1, 2), f)",
+        "map_if(xs, function(x) x > 3, f)",
+        "map_at(xs, c(2, 3), f)",
+        "invoke_map(list(function() 1, function() 2))",
+        "walk(xs, f)",
+        "crossmap::xmap(list(1:3, 1:2), g2)",
+        "crossmap::xmap_dbl(list(1:3, 1:2), g2)",
+        "crossmap::map_vec(xs, f)",
+        "crossmap::map2_vec(xs, ys, g2)",
+        "crossmap::pmap_vec(list(xs, ys), g2)",
+        "crossmap::imap_vec(named, function(x, nm) x * 2)",
+        "foreach(x = xs, .combine = c) %do% { f(x) }",
+        "foreach(a = xs, b = ys) %do% { a + b }",
+        "llply(xs, f)",
+        "laply(xs, f)",
+        "ldply(xs, function(x) list(v = x, w = x * 2))",
+        "alply(xs, f)",
+        "aaply(xs, f)",
+        "adply(xs, function(x) list(v = x))",
+        "ddply(df, \"g\", function(d) list(s = sum(d$v)))",
+        "dlply(df, \"g\", function(d) sum(d$v))",
+        "daply(df, \"g\", function(d) sum(d$v))",
+        "mlply(data.frame(a = 1:3, b = 4:6), g2)",
+        "maply(data.frame(a = 1:3, b = 4:6), g2)",
+        "mdply(data.frame(a = 1:3, b = 4:6), function(a, b) list(s = a + b))",
+        "bplapply(xs, f)",
+        "bpmapply(g2, xs, ys)",
+        "bpvec(vals, function(v) v * 2)",
+        "bpaggregate(vals, grp, sum)",
+    ];
+    for case in cases {
+        let mut s1 = Session::new();
+        s1.eval_str(fixture).unwrap();
+        let seq = s1.eval_str(case).unwrap_or_else(|e| panic!("{case} (seq): {e}"));
+
+        let mut s2 = Session::new();
+        s2.eval_str("plan(multicore, workers = 3)").unwrap();
+        s2.eval_str(fixture).unwrap();
+        let fut = s2
+            .eval_str(&format!("{case} |> futurize()"))
+            .unwrap_or_else(|e| panic!("{case} (futurized): {e}"));
+        assert_eq!(seq, fut, "futurized result differs for: {case}");
+    }
+}
+
+/// Seeded (resampling) functions: reproducible under futurize, not
+/// equal to the sequential session-RNG draw (documented difference —
+/// same as future.apply).
+#[test]
+fn seeded_functions_are_reproducible() {
+    for case in [
+        "replicate(5, rnorm(3))",
+        "times(5) %do% rnorm(3)",
+    ] {
+        let draw = |workers: usize| {
+            let mut s = Session::new();
+            s.eval_str(&format!("plan(multicore, workers = {workers})")).unwrap();
+            s.eval_str("futureSeed(17)").unwrap();
+            s.eval_str(&format!("{case} |> futurize()")).unwrap()
+        };
+        assert_eq!(draw(1), draw(3), "{case}");
+    }
+}
+
+#[test]
+fn unified_options_accepted_by_every_family() {
+    let fixture = "xs <- 1:8\nf <- function(x) x + 1";
+    for case in [
+        "lapply(xs, f)",
+        "map(xs, f)",
+        "foreach(x = xs) %do% { f(x) }",
+        "llply(xs, f)",
+        "bplapply(xs, f)",
+    ] {
+        let mut s = Session::new();
+        s.eval_str("plan(multicore, workers = 2)").unwrap();
+        s.eval_str(fixture).unwrap();
+        // The same unified options work across all APIs (§2.4).
+        s.eval_str(&format!(
+            "{case} |> futurize(seed = TRUE, chunk_size = 2, scheduling = 1, stdout = TRUE, conditions = TRUE)"
+        ))
+        .unwrap_or_else(|e| panic!("{case}: {e}"));
+    }
+}
