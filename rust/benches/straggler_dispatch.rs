@@ -1,0 +1,95 @@
+//! Exp X4 — static vs. adaptive dispatch on an imbalanced workload.
+//!
+//! Table 1 (walltime, multicore): 32 elements on 4 workers; element 1
+//! costs 8 units, the rest 1 unit (the "one slow element" straggler
+//! case). Three arms:
+//!
+//! - `scheduling = 1` — the default static policy: the straggler chunk
+//!   also drags ⌈n/w⌉−1 cheap elements behind the slow one (~15 units
+//!   of wall).
+//! - `scheduling = Inf` — per-element chunks: best static balance
+//!   (~10–11 units) but n messages per call.
+//! - `scheduling = "adaptive"` — guided chunks via the streaming
+//!   dispatch core: straggler lands in a small early chunk (~11 units)
+//!   at a fraction of the messages.
+//!
+//! Table 2 (wire bytes, multisession — the only plan here that actually
+//! serializes): per-element static chunking embeds every payload in
+//! every message, while the shared-context protocol ships the
+//! function/globals once per worker, so serialized volume drops from
+//! O(chunks × payload) to O(workers × payload). Measured via the
+//! wire-layer byte counter.
+
+use futurize::bench_harness as bh;
+use futurize::prelude::*;
+
+const UNIT: f64 = 0.02;
+
+fn timed_arm(label: &str, opts: &str) -> f64 {
+    let mut session = Session::with_config(SessionConfig { time_scale: UNIT });
+    session.eval_str("plan(multicore, workers = 4)").unwrap();
+    session
+        .eval_str("f <- function(x) { Sys.sleep(if (x == 1) 8 else 1)\nx }")
+        .unwrap();
+    session.eval_str("invisible(lapply(1:4, function(x) x) |> futurize())").unwrap(); // warm pool
+    let st = bh::bench("straggler", label, 0, 3, || {
+        session
+            .eval_str(&format!("ys <- lapply(1:32, f) |> futurize({opts})"))
+            .unwrap();
+    });
+    st.mean_s
+}
+
+fn bytes_arm(opts: &str) -> u64 {
+    let mut session = Session::new();
+    session.eval_str("plan(multisession, workers = 2)").unwrap();
+    // A closure over a sizeable global — the payload the shared-context
+    // protocol stops copying into every chunk.
+    session.eval_str("big <- 1:10000\nf <- function(x) x + length(big) * 0").unwrap();
+    session.eval_str("invisible(lapply(1:2, f) |> futurize())").unwrap(); // warm pool
+    futurize::wire::stats::reset();
+    session.eval_str(&format!("ys <- lapply(1:48, f) |> futurize({opts})")).unwrap();
+    futurize::wire::stats::bytes()
+}
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+
+    bh::table_header(
+        "straggler dispatch (32 tasks, one 8x-cost element, 4 workers, multicore)",
+        &["policy", "walltime"],
+    );
+    let arms = [
+        ("scheduling = 1 (static)", "scheduling = 1"),
+        ("scheduling = Inf (per-element)", "scheduling = Inf"),
+        ("adaptive (guided)", "scheduling = \"adaptive\""),
+    ];
+    let mut results = Vec::new();
+    for (label, opts) in arms {
+        let mean_s = timed_arm(label, opts);
+        bh::table_row(&[label.to_string(), format!("{mean_s:.3}s")]);
+        results.push(mean_s);
+    }
+    println!(
+        "\nadaptive speedup over static scheduling = 1: {:.2}x",
+        results[0] / results[2].max(1e-9)
+    );
+
+    bh::table_header(
+        "serialized bytes per map call (48 tasks, ~80kB shared payload, multisession x2)",
+        &["policy", "wire bytes/call"],
+    );
+    for (label, opts) in [
+        ("scheduling = Inf (48 chunks)", "scheduling = Inf"),
+        ("adaptive (guided chunks)", "scheduling = \"adaptive\""),
+        ("scheduling = 1 (2 chunks)", "scheduling = 1"),
+    ] {
+        let bytes = bytes_arm(opts);
+        bh::table_row(&[label.to_string(), format!("{bytes}")]);
+    }
+    println!(
+        "\nexpected shape: static pins ~15 cost-units on the straggler's worker while \
+         adaptive and per-element land at ~10-11; wire bytes stay O(workers x payload) \
+         for every policy because the shared context ships once per worker"
+    );
+}

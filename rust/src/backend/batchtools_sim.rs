@@ -18,7 +18,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::{Backend, BackendEvent};
-use crate::future_core::TaskPayload;
+use crate::future_core::{TaskContext, TaskPayload};
 
 pub struct BatchtoolsSimBackend {
     spool: PathBuf,
@@ -27,7 +27,6 @@ pub struct BatchtoolsSimBackend {
     shutdown: Arc<AtomicBool>,
     scheduler: Option<JoinHandle<()>>,
     workers: usize,
-    seq: u64,
 }
 
 impl BatchtoolsSimBackend {
@@ -43,6 +42,7 @@ impl BatchtoolsSimBackend {
         ));
         std::fs::create_dir_all(spool.join("jobs")).map_err(|e| e.to_string())?;
         std::fs::create_dir_all(spool.join("running")).map_err(|e| e.to_string())?;
+        std::fs::create_dir_all(spool.join("contexts")).map_err(|e| e.to_string())?;
         let (tx, rx) = channel::<BackendEvent>();
         let shutdown = Arc::new(AtomicBool::new(false));
 
@@ -80,15 +80,31 @@ impl BatchtoolsSimBackend {
                             continue;
                         }
                         let tx = tx.clone();
+                        let spool = spool.clone();
                         running.push(std::thread::spawn(move || {
                             let Ok(text) = std::fs::read_to_string(&claimed) else { return };
                             let Ok(task) = crate::wire::from_str::<TaskPayload>(&text) else {
                                 return;
                             };
+                            // Shared contexts live as spool files written
+                            // once per map call; job threads read them
+                            // locally (a filesystem read, not a
+                            // serialization trip).
+                            let ctx = task.kind.context_id().and_then(|id| {
+                                let p = spool.join("contexts").join(format!("{id}.ctx"));
+                                std::fs::read_to_string(p)
+                                    .ok()
+                                    .and_then(|t| crate::wire::from_str::<TaskContext>(&t).ok())
+                            });
                             // batchtools jobs cannot stream conditions
                             // live; progress arrives with the result, as
                             // on a real scheduler without a side channel.
-                            let outcome = crate::backend::task_runner::run_task(&task, 0, None);
+                            let outcome = crate::backend::task_runner::run_task(
+                                &task,
+                                ctx.as_ref(),
+                                0,
+                                None,
+                            );
                             let _ = std::fs::remove_file(&claimed);
                             let _ = tx.send(BackendEvent::Done(outcome));
                         }));
@@ -108,7 +124,6 @@ impl BatchtoolsSimBackend {
             shutdown,
             scheduler: Some(scheduler),
             workers,
-            seq: 0,
         })
     }
 }
@@ -122,10 +137,31 @@ impl Backend for BatchtoolsSimBackend {
         self.workers
     }
 
+    fn register_context(&mut self, ctx: Arc<TaskContext>) -> Result<(), String> {
+        // One context file per map call — the batchtools analog of
+        // shipping shared data to the scheduler's shared filesystem once
+        // instead of embedding it in every job file.
+        let tmp = self.spool.join("contexts").join(format!("{}.tmp", ctx.id));
+        let fin = self.spool.join("contexts").join(format!("{}.ctx", ctx.id));
+        let text = crate::wire::to_string(&*ctx).map_err(|e| e.to_string())?;
+        std::fs::write(&tmp, text).map_err(|e| e.to_string())?;
+        // Atomic publish so a job thread never reads a partial file.
+        std::fs::rename(&tmp, &fin).map_err(|e| e.to_string())?;
+        Ok(())
+    }
+
+    fn drop_context(&mut self, ctx_id: u64) -> Result<(), String> {
+        let _ = std::fs::remove_file(self.spool.join("contexts").join(format!("{ctx_id}.ctx")));
+        Ok(())
+    }
+
     fn submit(&mut self, task: TaskPayload) -> Result<(), String> {
-        self.seq += 1;
-        let tmp = self.spool.join("jobs").join(format!("{:08}.tmp", self.seq));
-        let fin = self.spool.join("jobs").join(format!("{:08}.job", self.seq));
+        // Job files are named by zero-padded task id: ids are issued
+        // monotonically, so the scheduler's sorted pickup preserves
+        // submission order and `cancel_queued` can report exactly which
+        // tasks it removed.
+        let tmp = self.spool.join("jobs").join(format!("{:016}.tmp", task.id));
+        let fin = self.spool.join("jobs").join(format!("{:016}.job", task.id));
         let text = crate::wire::to_string(&task).map_err(|e| e.to_string())?;
         std::fs::write(&tmp, text).map_err(|e| e.to_string())?;
         // Atomic publish so the scheduler never reads a partial file.
@@ -145,17 +181,27 @@ impl Backend for BatchtoolsSimBackend {
         }
     }
 
-    fn cancel_queued(&mut self) -> usize {
+    fn cancel_queued(&mut self) -> Vec<u64> {
         // Delete not-yet-claimed job files — `scancel` for queued jobs.
-        let mut n = 0;
+        // A job the scheduler claims concurrently wins the rename race,
+        // is not removed here, and therefore still runs (and is not
+        // reported as cancelled).
+        let mut ids = Vec::new();
         if let Ok(rd) = std::fs::read_dir(self.spool.join("jobs")) {
             for e in rd.filter_map(|e| e.ok()) {
-                if std::fs::remove_file(e.path()).is_ok() {
-                    n += 1;
+                let path = e.path();
+                let id = path
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .and_then(|s| s.parse::<u64>().ok());
+                if let Some(id) = id {
+                    if std::fs::remove_file(&path).is_ok() {
+                        ids.push(id);
+                    }
                 }
             }
         }
-        n
+        ids
     }
 }
 

@@ -7,11 +7,12 @@
 //! that matters for the evaluation: the chunking/scheduling trade-off
 //! (few large chunks amortize latency; many small chunks balance load).
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use super::multisession::MultisessionBackend;
 use super::{Backend, BackendEvent};
-use crate::future_core::TaskPayload;
+use crate::future_core::{TaskContext, TaskPayload};
 
 pub struct ClusterSimBackend {
     inner: MultisessionBackend,
@@ -34,6 +35,19 @@ impl Backend for ClusterSimBackend {
 
     fn workers(&self) -> usize {
         self.inner.workers()
+    }
+
+    fn register_context(&mut self, ctx: Arc<TaskContext>) -> Result<(), String> {
+        // One registration message travels to each remote node; it is a
+        // single trip (the nodes are written to in parallel in spirit),
+        // so charge one latency, not one per worker.
+        std::thread::sleep(self.latency);
+        self.inner.register_context(ctx)
+    }
+
+    fn drop_context(&mut self, ctx_id: u64) -> Result<(), String> {
+        std::thread::sleep(self.latency);
+        self.inner.drop_context(ctx_id)
     }
 
     fn submit(&mut self, task: TaskPayload) -> Result<(), String> {
@@ -59,7 +73,7 @@ impl Backend for ClusterSimBackend {
         Ok(ev)
     }
 
-    fn cancel_queued(&mut self) -> usize {
+    fn cancel_queued(&mut self) -> Vec<u64> {
         self.inner.cancel_queued()
     }
 }

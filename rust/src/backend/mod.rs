@@ -12,6 +12,30 @@
 //! Every backend implements [`Backend`] and must pass the conformance
 //! suite in `rust/tests/backend_conformance.rs` — the future.tests
 //! analog the paper cites for guaranteeing Future-API compliance.
+//!
+//! ## The streaming pipeline and the `TaskContext` protocol
+//!
+//! The dispatch core (`future_core::dispatch`) drives every backend the
+//! same way:
+//!
+//! 1. [`Backend::register_context`] ships the map call's shared
+//!    [`TaskContext`] (function, extra args, globals) **once**. Process
+//!    backends forward it to each persistent worker as a
+//!    `ParentMsg::RegisterContext` message; the worker caches it by id.
+//!    In-process backends just store the `Arc`. Serialized volume per
+//!    map call is therefore O(workers × payload), not O(chunks ×
+//!    payload).
+//! 2. [`Backend::submit`] receives chunk payloads *incrementally* —
+//!    only ~`scheduling × workers` are in flight at once — whose
+//!    `TaskKind::MapSlice`/`ForeachSlice` reference the context by id.
+//! 3. [`Backend::next_event`] streams `Progress` conditions near-live
+//!    and `Done` outcomes as they complete; the dispatch core feeds the
+//!    next chunk on each `Done`.
+//! 4. On a worker error under `stop_on_error`, the dispatch core calls
+//!    [`Backend::cancel_queued`]; queued-but-unstarted tasks must never
+//!    execute afterwards (the conformance suite asserts this).
+//! 5. [`Backend::drop_context`] releases the context when the map call
+//!    finishes (success *or* error), so worker-side caches don't leak.
 
 pub mod batchtools_sim;
 pub mod cluster_sim;
@@ -21,7 +45,9 @@ pub mod sequential;
 pub mod task_runner;
 pub mod worker;
 
-use crate::future_core::{TaskOutcome, TaskPayload};
+use std::sync::Arc;
+
+use crate::future_core::{TaskContext, TaskOutcome, TaskPayload};
 use crate::rlite::conditions::RCondition;
 
 /// Which backend family a plan names.
@@ -147,6 +173,15 @@ pub enum BackendEvent {
 pub trait Backend: Send {
     fn name(&self) -> &'static str;
     fn workers(&self) -> usize;
+    /// Make a shared [`TaskContext`] available to every worker before
+    /// slice tasks referencing it are submitted. Ships the context once
+    /// per worker (process backends) or stores the `Arc` (in-process
+    /// backends).
+    fn register_context(&mut self, ctx: Arc<TaskContext>) -> Result<(), String>;
+    /// Release a context registered with [`Backend::register_context`].
+    /// Called by the dispatch core once the map call has fully resolved;
+    /// no task referencing the context is in flight at that point.
+    fn drop_context(&mut self, ctx_id: u64) -> Result<(), String>;
     /// Queue a task for execution. Must not block on task completion
     /// (sequential backends may run the task inline).
     fn submit(&mut self, task: TaskPayload) -> Result<(), String>;
@@ -154,9 +189,12 @@ pub trait Backend: Send {
     fn next_event(&mut self) -> Result<BackendEvent, String>;
     /// Non-blocking poll.
     fn try_next_event(&mut self) -> Result<Option<BackendEvent>, String>;
-    /// Best-effort cancellation of queued (not yet running) tasks —
-    /// structured-concurrency support (paper §5.3).
-    fn cancel_queued(&mut self) -> usize;
+    /// Cancellation of queued (not yet running) tasks — structured
+    /// concurrency support (paper §5.3), invoked by the dispatch core's
+    /// fail-fast path. Cancelled tasks must never execute and never
+    /// produce events; returns the ids of the cancelled tasks so the
+    /// caller can stop waiting on them.
+    fn cancel_queued(&mut self) -> Vec<u64>;
 }
 
 /// Instantiate the backend for a plan.

@@ -4,19 +4,24 @@
 //! Tasks still cross the boundary in wire form (closures captured by
 //! value), preserving the future framework's by-value globals semantics:
 //! a forked R worker sees a *copy-on-write snapshot*, not live state.
+//! Shared [`TaskContext`]s are the one exception the protocol makes
+//! deliberate: the context is an immutable `Arc` every worker thread
+//! reads — registered once, never serialized.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use super::{Backend, BackendEvent};
-use crate::future_core::TaskPayload;
+use crate::future_core::{TaskContext, TaskPayload};
 
 struct Shared {
     queue: Mutex<VecDeque<TaskPayload>>,
     cv: Condvar,
     shutdown: Mutex<bool>,
+    /// Contexts visible to all worker threads, keyed by context id.
+    contexts: Mutex<HashMap<u64, Arc<TaskContext>>>,
 }
 
 pub struct MulticoreBackend {
@@ -34,6 +39,7 @@ impl MulticoreBackend {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: Mutex::new(false),
+            contexts: Mutex::new(HashMap::new()),
         });
         let (tx, rx) = channel::<BackendEvent>();
         let mut handles = Vec::with_capacity(workers);
@@ -53,9 +59,14 @@ impl MulticoreBackend {
                         q = shared.cv.wait(q).unwrap();
                     }
                 };
+                let ctx = task
+                    .kind
+                    .context_id()
+                    .and_then(|id| shared.contexts.lock().unwrap().get(&id).cloned());
                 let tx_progress = tx.clone();
                 let outcome = super::task_runner::run_task(
                     &task,
+                    ctx.as_deref(),
                     w,
                     Some(&mut |task_id, cond| {
                         let _ = tx_progress.send(BackendEvent::Progress { task_id, cond });
@@ -79,6 +90,16 @@ impl Backend for MulticoreBackend {
         self.workers
     }
 
+    fn register_context(&mut self, ctx: Arc<TaskContext>) -> Result<(), String> {
+        self.shared.contexts.lock().unwrap().insert(ctx.id, ctx);
+        Ok(())
+    }
+
+    fn drop_context(&mut self, ctx_id: u64) -> Result<(), String> {
+        self.shared.contexts.lock().unwrap().remove(&ctx_id);
+        Ok(())
+    }
+
     fn submit(&mut self, task: TaskPayload) -> Result<(), String> {
         self.shared.queue.lock().unwrap().push_back(task);
         self.shared.cv.notify_one();
@@ -97,11 +118,9 @@ impl Backend for MulticoreBackend {
         }
     }
 
-    fn cancel_queued(&mut self) -> usize {
+    fn cancel_queued(&mut self) -> Vec<u64> {
         let mut q = self.shared.queue.lock().unwrap();
-        let n = q.len();
-        q.clear();
-        n
+        q.drain(..).map(|t| t.id).collect()
     }
 }
 
@@ -166,11 +185,54 @@ mod tests {
         b.submit(payload(2, "2")).unwrap();
         b.submit(payload(3, "3")).unwrap();
         let cancelled = b.cancel_queued();
-        assert!(cancelled >= 1, "expected queued tasks to be cancellable, got {cancelled}");
+        assert!(
+            !cancelled.is_empty(),
+            "expected queued tasks to be cancellable, got {cancelled:?}"
+        );
+        assert!(cancelled.contains(&2) || cancelled.contains(&3), "{cancelled:?}");
         // First task still completes.
         match b.next_event().unwrap() {
             BackendEvent::Done(o) => assert_eq!(o.id, 1),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn slice_tasks_resolve_registered_contexts() {
+        use crate::future_core::ContextBody;
+        let mut b = MulticoreBackend::new(2);
+        let f = {
+            let mut i = crate::rlite::eval::Interp::new();
+            i.eval_program("__f <- function(x) x * 5").unwrap();
+            let v = crate::rlite::env::lookup(&i.global, "__f").unwrap();
+            crate::rlite::serialize::to_wire(&v).unwrap()
+        };
+        b.register_context(Arc::new(TaskContext {
+            id: 11,
+            body: ContextBody::Map { f, extra: vec![] },
+            globals: vec![],
+        }))
+        .unwrap();
+        b.submit(TaskPayload {
+            id: 1,
+            kind: TaskKind::MapSlice {
+                ctx: 11,
+                items: vec![WireVal::Dbl(vec![3.0], None)],
+                seeds: None,
+            },
+            time_scale: 0.0,
+            capture_stdout: true,
+        })
+        .unwrap();
+        loop {
+            if let BackendEvent::Done(o) = b.next_event().unwrap() {
+                match &o.values.unwrap()[0] {
+                    WireVal::Dbl(v, _) => assert_eq!(v[0], 15.0),
+                    other => panic!("{other:?}"),
+                }
+                break;
+            }
+        }
+        b.drop_context(11).unwrap();
     }
 }

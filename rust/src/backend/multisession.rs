@@ -2,16 +2,23 @@
 //! *subprocesses* speaking the JSON stdio protocol — the PSOCK-cluster
 //! analog, with true process isolation. Also backs the paper's
 //! `future.callr::callr` and `future.mirai::mirai_multisession` plans.
+//!
+//! Shared task contexts are serialized **once** and the same line is
+//! written to every worker's stdin (`RegisterContext`), so the per-map
+//! serialized volume for the function/extras/globals is O(workers), not
+//! O(chunks). Worker processes cache contexts by id (see
+//! [`super::worker`]).
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::process::{Child, ChildStdin, Command, Stdio};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::worker::{ParentMsg, WorkerMsg, WORKER_SENTINEL};
 use super::{Backend, BackendEvent};
-use crate::future_core::TaskPayload;
+use crate::future_core::{TaskContext, TaskPayload};
 
 struct WorkerProc {
     child: Child,
@@ -76,6 +83,20 @@ impl MultisessionBackend {
         Ok(MultisessionBackend { workers, rx, _tx: tx, queue: VecDeque::new(), name })
     }
 
+    /// Write an already-serialized protocol line to every worker.
+    fn broadcast(&mut self, line: &str) -> Result<(), String> {
+        for (k, w) in self.workers.iter_mut().enumerate() {
+            // The line was serialized once; every extra worker copy still
+            // crosses the process boundary, so account for it.
+            if k > 0 {
+                crate::wire::stats::record(line.len());
+            }
+            writeln!(w.stdin, "{line}").map_err(|e| format!("worker write: {e}"))?;
+            w.stdin.flush().map_err(|e| format!("worker flush: {e}"))?;
+        }
+        Ok(())
+    }
+
     fn dispatch(&mut self) -> Result<(), String> {
         while let Some(idle) = self.workers.iter().position(|w| !w.busy) {
             let Some(task) = self.queue.pop_front() else { break };
@@ -112,6 +133,18 @@ impl Backend for MultisessionBackend {
         self.workers.len()
     }
 
+    fn register_context(&mut self, ctx: Arc<TaskContext>) -> Result<(), String> {
+        let msg = crate::wire::to_string(&ParentMsg::RegisterContext((*ctx).clone()))
+            .map_err(|e| format!("serialize context: {e}"))?;
+        self.broadcast(&msg)
+    }
+
+    fn drop_context(&mut self, ctx_id: u64) -> Result<(), String> {
+        let msg = crate::wire::to_string(&ParentMsg::DropContext(ctx_id))
+            .map_err(|e| format!("serialize context drop: {e}"))?;
+        self.broadcast(&msg)
+    }
+
     fn submit(&mut self, task: TaskPayload) -> Result<(), String> {
         self.queue.push_back(task);
         self.dispatch()
@@ -131,10 +164,8 @@ impl Backend for MultisessionBackend {
         }
     }
 
-    fn cancel_queued(&mut self) -> usize {
-        let n = self.queue.len();
-        self.queue.clear();
-        n
+    fn cancel_queued(&mut self) -> Vec<u64> {
+        self.queue.drain(..).map(|t| t.id).collect()
     }
 }
 

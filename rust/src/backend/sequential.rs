@@ -3,18 +3,20 @@
 //! so code validated here behaves identically under `multisession` —
 //! the property future.tests checks).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 use super::{Backend, BackendEvent};
-use crate::future_core::TaskPayload;
+use crate::future_core::{TaskContext, TaskPayload};
 
 pub struct SequentialBackend {
     events: VecDeque<BackendEvent>,
+    contexts: HashMap<u64, Arc<TaskContext>>,
 }
 
 impl SequentialBackend {
     pub fn new() -> Self {
-        SequentialBackend { events: VecDeque::new() }
+        SequentialBackend { events: VecDeque::new(), contexts: HashMap::new() }
     }
 }
 
@@ -33,13 +35,25 @@ impl Backend for SequentialBackend {
         1
     }
 
+    fn register_context(&mut self, ctx: Arc<TaskContext>) -> Result<(), String> {
+        self.contexts.insert(ctx.id, ctx);
+        Ok(())
+    }
+
+    fn drop_context(&mut self, ctx_id: u64) -> Result<(), String> {
+        self.contexts.remove(&ctx_id);
+        Ok(())
+    }
+
     fn submit(&mut self, task: TaskPayload) -> Result<(), String> {
         // Run inline; progress conditions become queued Progress events so
         // ordering matches the parallel backends (progress before done).
+        let ctx = task.kind.context_id().and_then(|id| self.contexts.get(&id)).cloned();
         let mut progress: Vec<BackendEvent> = Vec::new();
-        let outcome = super::task_runner::run_task(&task, 0, Some(&mut |task_id, cond| {
-            progress.push(BackendEvent::Progress { task_id, cond });
-        }));
+        let outcome =
+            super::task_runner::run_task(&task, ctx.as_deref(), 0, Some(&mut |task_id, cond| {
+                progress.push(BackendEvent::Progress { task_id, cond });
+            }));
         self.events.extend(progress);
         self.events.push_back(BackendEvent::Done(outcome));
         Ok(())
@@ -53,8 +67,8 @@ impl Backend for SequentialBackend {
         Ok(self.events.pop_front())
     }
 
-    fn cancel_queued(&mut self) -> usize {
-        0 // nothing is ever queued
+    fn cancel_queued(&mut self) -> Vec<u64> {
+        vec![] // nothing is ever queued
     }
 }
 

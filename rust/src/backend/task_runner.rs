@@ -5,11 +5,18 @@
 //! conditions are captured for as-is relay in the parent (paper §4.9);
 //! progress-class conditions are additionally streamed through
 //! `progress_hook` the moment they are signaled (paper §4.10).
+//!
+//! Slice tasks ([`TaskKind::MapSlice`] / [`TaskKind::ForeachSlice`])
+//! carry only their elements; the function/extras/globals they execute
+//! against live in a [`TaskContext`] the backend registered beforehand
+//! and resolves for [`run_task`]. A slice arriving for an unknown
+//! context is a protocol violation and yields an error outcome rather
+//! than a panic.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use crate::future_core::{TaskKind, TaskOutcome, TaskPayload};
+use crate::future_core::{ContextBody, TaskContext, TaskKind, TaskOutcome, TaskPayload};
 use crate::rlite::conditions::{CaptureLog, RCondition};
 use crate::rlite::env::{define, Env};
 use crate::rlite::eval::{HandlerFrame, Interp, InterpConfig, Signal};
@@ -22,9 +29,12 @@ use crate::rng::RngStream;
 pub const LIVE_CLASSES: &[&str] = &["progression", "immediateCondition"];
 
 /// Execute one payload, invoking `progress_hook` for every live-class
-/// condition as it is signaled.
+/// condition as it is signaled. `ctx` must be the registered
+/// [`TaskContext`] matching `payload.kind.context_id()` (or `None` for
+/// context-free tasks).
 pub fn run_task(
     payload: &TaskPayload,
+    ctx: Option<&TaskContext>,
     worker_idx: usize,
     mut progress_hook: Option<&mut dyn FnMut(u64, RCondition)>,
 ) -> TaskOutcome {
@@ -49,7 +59,7 @@ pub fn run_task(
     }
 
     let genv = interp.global.clone();
-    let (result, mut log) = execute_kind(&mut interp, &payload.kind, &genv);
+    let (result, mut log) = execute_kind(&mut interp, &payload.kind, ctx, &genv);
 
     // Drain streamed conditions through the hook and strip them from the
     // log (they have already reached the parent).
@@ -76,6 +86,7 @@ pub fn run_task(
 fn execute_kind(
     interp: &mut Interp,
     kind: &TaskKind,
+    ctx: Option<&TaskContext>,
     genv: &crate::rlite::env::EnvRef,
 ) -> (Result<Vec<WireVal>, RCondition>, CaptureLog) {
     match kind {
@@ -84,8 +95,14 @@ fn execute_kind(
             let (r, log) = interp.eval_captured(expr, genv);
             (wrap_single(r), log)
         }
-        TaskKind::MapChunk { f, items, extra, seeds, globals } => {
-            install_globals(genv, globals);
+        TaskKind::MapSlice { ctx: ctx_id, items, seeds } => {
+            let Some(ctx) = ctx else {
+                return (Err(missing_context(*ctx_id)), CaptureLog::default());
+            };
+            let ContextBody::Map { f, extra } = &ctx.body else {
+                return (Err(context_mismatch(*ctx_id, "MapSlice")), CaptureLog::default());
+            };
+            install_globals(genv, &ctx.globals);
             let func = from_wire(f, genv);
             let extra_vals: Vec<(Option<String>, RVal)> =
                 extra.iter().map(|(n, w)| (n.clone(), from_wire(w, genv))).collect();
@@ -110,8 +127,14 @@ fn execute_kind(
             }
             (Ok(out), log)
         }
-        TaskKind::ForeachChunk { bindings, body, seeds, globals } => {
-            install_globals(genv, globals);
+        TaskKind::ForeachSlice { ctx: ctx_id, bindings, seeds } => {
+            let Some(ctx) = ctx else {
+                return (Err(missing_context(*ctx_id)), CaptureLog::default());
+            };
+            let ContextBody::Foreach { body } = &ctx.body else {
+                return (Err(context_mismatch(*ctx_id, "ForeachSlice")), CaptureLog::default());
+            };
+            install_globals(genv, &ctx.globals);
             let mut out = Vec::with_capacity(bindings.len());
             let mut log = CaptureLog::default();
             for (k, bs) in bindings.iter().enumerate() {
@@ -135,6 +158,18 @@ fn execute_kind(
             (Ok(out), log)
         }
     }
+}
+
+fn missing_context(id: u64) -> RCondition {
+    RCondition::error_cond(format!(
+        "futurize internal error: task references unregistered TaskContext {id}"
+    ))
+}
+
+fn context_mismatch(id: u64, kind: &str) -> RCondition {
+    RCondition::error_cond(format!(
+        "futurize internal error: TaskContext {id} has the wrong body kind for a {kind} task"
+    ))
 }
 
 fn capture_call(
@@ -190,7 +225,7 @@ fn install_globals(genv: &crate::rlite::env::EnvRef, globals: &[(String, WireVal
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::future_core::{TaskKind, TaskPayload};
+    use crate::future_core::{ContextBody, TaskContext, TaskKind, TaskPayload};
     use crate::rlite::parse_expr;
 
     fn expr_task(src: &str, globals: Vec<(String, WireVal)>) -> TaskPayload {
@@ -205,7 +240,7 @@ mod tests {
     #[test]
     fn expr_task_returns_value_and_log() {
         let t = expr_task("{ cat(\"out\")\nmessage(\"msg\")\n6 * 7 }", vec![]);
-        let o = run_task(&t, 0, None);
+        let o = run_task(&t, None, 0, None);
         let vals = o.values.unwrap();
         assert_eq!(vals.len(), 1);
         assert_eq!(o.log.stdout, "out");
@@ -215,7 +250,7 @@ mod tests {
     #[test]
     fn expr_task_error_keeps_condition() {
         let t = expr_task("stop(\"task failed\")", vec![]);
-        let o = run_task(&t, 0, None);
+        let o = run_task(&t, None, 0, None);
         let err = o.values.unwrap_err();
         assert_eq!(err.message, "task failed");
         assert!(err.inherits("error"));
@@ -225,7 +260,7 @@ mod tests {
     fn globals_are_installed() {
         let g = vec![("a".to_string(), WireVal::Dbl(vec![5.0], None))];
         let t = expr_task("a * 2", g);
-        let o = run_task(&t, 0, None);
+        let o = run_task(&t, None, 0, None);
         match &o.values.unwrap()[0] {
             WireVal::Dbl(v, _) => assert_eq!(v[0], 10.0),
             other => panic!("{other:?}"),
@@ -239,7 +274,7 @@ mod tests {
             vec![],
         );
         let mut seen = Vec::new();
-        let o = run_task(&t, 0, Some(&mut |_, c| seen.push(c)));
+        let o = run_task(&t, None, 0, Some(&mut |_, c| seen.push(c)));
         assert_eq!(seen.len(), 1);
         assert_eq!(seen[0].message, "tick");
         // Streamed conditions do not reappear in the final log.
@@ -250,12 +285,58 @@ mod tests {
     fn tasks_are_isolated() {
         // A task cannot see variables from a previous task's interpreter.
         let t1 = expr_task("leak <- 99", vec![]);
-        run_task(&t1, 0, None);
+        run_task(&t1, None, 0, None);
         let t2 = expr_task("exists(\"leak\")", vec![]);
-        let o = run_task(&t2, 0, None);
+        let o = run_task(&t2, None, 0, None);
         match &o.values.unwrap()[0] {
             WireVal::Lgl(v, _) => assert!(!v[0]),
             other => panic!("{other:?}"),
         }
+    }
+
+    fn map_context(id: u64, f_src: &str) -> TaskContext {
+        let mut i = Interp::new();
+        i.eval_program(&format!("__f <- {f_src}")).unwrap();
+        let f = crate::rlite::env::lookup(&i.global, "__f").unwrap();
+        TaskContext {
+            id,
+            body: ContextBody::Map { f: to_wire(&f).unwrap(), extra: vec![] },
+            globals: vec![],
+        }
+    }
+
+    #[test]
+    fn map_slice_executes_against_context() {
+        let ctx = map_context(7, "function(x) x + 100");
+        let t = TaskPayload {
+            id: 2,
+            kind: TaskKind::MapSlice {
+                ctx: 7,
+                items: vec![WireVal::Dbl(vec![1.0], None), WireVal::Dbl(vec![2.0], None)],
+                seeds: None,
+            },
+            time_scale: 0.0,
+            capture_stdout: true,
+        };
+        let o = run_task(&t, Some(&ctx), 0, None);
+        let vals = o.values.unwrap();
+        assert_eq!(vals.len(), 2);
+        match &vals[1] {
+            WireVal::Dbl(v, _) => assert_eq!(v[0], 102.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn map_slice_without_context_is_an_error_outcome() {
+        let t = TaskPayload {
+            id: 3,
+            kind: TaskKind::MapSlice { ctx: 99, items: vec![], seeds: None },
+            time_scale: 0.0,
+            capture_stdout: true,
+        };
+        let o = run_task(&t, None, 0, None);
+        let err = o.values.unwrap_err();
+        assert!(err.message.contains("unregistered TaskContext"), "{}", err.message);
     }
 }

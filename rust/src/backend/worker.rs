@@ -5,12 +5,19 @@
 //! newline-delimited JSON [`ParentMsg`] on stdin; worker → parent
 //! messages are [`WorkerMsg`] on stdout. Task stdout is captured by the
 //! task runner, so the protocol channel stays clean.
+//!
+//! Shared task contexts: `RegisterContext` ships a map call's
+//! [`TaskContext`] once per worker; the worker caches it by id and
+//! resolves it for every `MapSlice`/`ForeachSlice` task that follows.
+//! `DropContext` evicts it when the map call resolves. stdin delivery is
+//! ordered, so a context always arrives before any task referencing it.
 
+use std::collections::HashMap;
 use std::io::{BufRead, Write};
 
 use serde_derive::{Deserialize, Serialize};
 
-use crate::future_core::{TaskOutcome, TaskPayload};
+use crate::future_core::{TaskContext, TaskOutcome, TaskPayload};
 use crate::rlite::conditions::RCondition;
 
 /// argv[1] sentinel that switches a process into worker mode.
@@ -24,6 +31,10 @@ pub const WORKER_BIN_ENV: &str = "FUTURIZE_WORKER_BIN";
 #[derive(Debug, Serialize, Deserialize)]
 pub enum ParentMsg {
     Task(TaskPayload),
+    /// Cache a shared task context for subsequent slice tasks.
+    RegisterContext(TaskContext),
+    /// Evict a cached context (its map call has fully resolved).
+    DropContext(u64),
     Shutdown,
 }
 
@@ -50,6 +61,7 @@ pub fn worker_main() {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     let mut out = stdout.lock();
+    let mut contexts: HashMap<u64, TaskContext> = HashMap::new();
     for line in stdin.lock().lines() {
         let line = match line {
             Ok(l) => l,
@@ -67,17 +79,25 @@ pub fn worker_main() {
         };
         match msg {
             ParentMsg::Shutdown => break,
+            ParentMsg::RegisterContext(ctx) => {
+                contexts.insert(ctx.id, ctx);
+            }
+            ParentMsg::DropContext(id) => {
+                contexts.remove(&id);
+            }
             ParentMsg::Task(task) => {
                 let worker_idx = std::env::var("FUTURIZE_WORKER_IDX")
                     .ok()
                     .and_then(|s| s.parse().ok())
                     .unwrap_or(0);
+                let ctx = task.kind.context_id().and_then(|id| contexts.get(&id));
                 // Progress messages must flush immediately for near-live
                 // relay across the process boundary.
                 let outcome = {
                     let out_cell = std::cell::RefCell::new(&mut out);
                     super::task_runner::run_task(
                         &task,
+                        ctx,
                         worker_idx,
                         Some(&mut |task_id, cond| {
                             let mut o = out_cell.borrow_mut();
@@ -123,6 +143,32 @@ mod tests {
         let back: ParentMsg = crate::wire::from_str(&s).unwrap();
         match back {
             ParentMsg::Task(t) => assert_eq!(t.id, 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn context_messages_roundtrip() {
+        use crate::future_core::{ContextBody, TaskContext};
+        let ctx = TaskContext {
+            id: 12,
+            body: ContextBody::Foreach { body: parse_expr("x + 1").unwrap() },
+            globals: vec![(
+                "a".into(),
+                crate::rlite::serialize::WireVal::Dbl(vec![1.5], None),
+            )],
+        };
+        let s = crate::wire::to_string(&ParentMsg::RegisterContext(ctx)).unwrap();
+        match crate::wire::from_str::<ParentMsg>(&s).unwrap() {
+            ParentMsg::RegisterContext(c) => {
+                assert_eq!(c.id, 12);
+                assert_eq!(c.globals.len(), 1);
+            }
+            other => panic!("{other:?}"),
+        }
+        let s = crate::wire::to_string(&ParentMsg::DropContext(12)).unwrap();
+        match crate::wire::from_str::<ParentMsg>(&s).unwrap() {
+            ParentMsg::DropContext(id) => assert_eq!(id, 12),
             other => panic!("{other:?}"),
         }
     }

@@ -1,0 +1,467 @@
+//! The streaming dispatch core: an incremental, backpressured
+//! [`FutureSet`] that replaces the old batch-synchronous `run_chunks`
+//! loop.
+//!
+//! Differences from the batch driver it replaces:
+//!
+//! - **Shared task contexts.** The function, extra arguments, and
+//!   globals of a map call are registered with the backend once as a
+//!   [`TaskContext`](super::TaskContext) (process backends forward it
+//!   once per worker); chunk payloads reference it by id. Serialized
+//!   payload volume drops from O(chunks × payload) to O(workers ×
+//!   payload).
+//! - **Incremental dispatch with backpressure.** Only
+//!   [`ChunkPolicy::in_flight_cap`] chunks (≈ `scheduling × workers`)
+//!   are in flight at a time; the next chunk is fed to the backend as
+//!   each `Done` event arrives. Late chunks are therefore assigned to
+//!   whichever worker frees up first — which is what makes
+//!   [`ChunkPolicy::Adaptive`] (large chunks early, small chunks late)
+//!   eliminate stragglers without per-element messaging cost.
+//! - **Streaming reduction.** Outcomes are folded into the result
+//!   vector the moment they arrive instead of being buffered until the
+//!   last chunk completes; captured logs are relayed incrementally, in
+//!   input order, as each prefix of chunks completes.
+//! - **Fail-fast cancellation.** With `stop_on_error`, the first worker
+//!   error triggers `Backend::cancel_queued()`, in-flight tasks are
+//!   drained, and the error surfaces without executing the remaining
+//!   queued chunks (structured concurrency, paper §5.3).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::driver::{now_unix, MapOptions, SeedOption};
+use super::{ContextBody, TaskContext, TaskKind, TaskOutcome, TaskPayload, TraceEvent};
+use crate::backend::BackendEvent;
+use crate::rlite::conditions::RCondition;
+use crate::rlite::eval::{Interp, Signal};
+use crate::rlite::serialize::{from_wire, WireVal};
+use crate::rlite::value::RVal;
+use crate::rng::RngState;
+use crate::scheduling::make_chunks;
+
+/// The per-element inputs of one map call, sliced into chunk payloads on
+/// demand (at submit time, not upfront).
+pub enum ElementSource {
+    /// Items for `ContextBody::Map`.
+    Items(Vec<WireVal>),
+    /// Per-iteration bindings for `ContextBody::Foreach`.
+    Bindings(Vec<Vec<(String, WireVal)>>),
+}
+
+impl ElementSource {
+    pub fn len(&self) -> usize {
+        match self {
+            ElementSource::Items(v) => v.len(),
+            ElementSource::Bindings(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn slice_kind(
+        &self,
+        ctx: u64,
+        start: usize,
+        end: usize,
+        seeds: &Option<Vec<RngState>>,
+    ) -> TaskKind {
+        let seeds = seeds.as_ref().map(|s| s[start..end].to_vec());
+        match self {
+            ElementSource::Items(items) => {
+                TaskKind::MapSlice { ctx, items: items[start..end].to_vec(), seeds }
+            }
+            ElementSource::Bindings(bindings) => {
+                TaskKind::ForeachSlice { ctx, bindings: bindings[start..end].to_vec(), seeds }
+            }
+        }
+    }
+}
+
+/// A set of futures covering one map call: owns the chunk plan, the
+/// in-flight window, and the incremental reduction state.
+pub struct FutureSet {
+    ctx: Arc<TaskContext>,
+    source: ElementSource,
+    seeds: Option<Vec<RngState>>,
+    /// Sys.sleep scale, stamped onto every chunk payload.
+    time_scale: f64,
+    /// Relay stdout? Stamped onto every chunk payload.
+    capture_stdout: bool,
+    /// Contiguous chunk ranges, in input order.
+    chunks: Vec<(usize, usize)>,
+    /// Backpressure: max chunks submitted but not yet `Done`.
+    cap: usize,
+    /// Next chunk index to submit.
+    next_chunk: usize,
+    /// task id → (chunk index, chunk start).
+    in_flight: HashMap<u64, (usize, usize)>,
+    /// Completed chunks not yet relayed (waiting on an earlier chunk),
+    /// keyed by chunk index.
+    pending_relay: HashMap<usize, TaskOutcome>,
+    /// Next chunk index due for ordered relay.
+    relay_cursor: usize,
+    /// Per-element results, filled as outcomes stream in.
+    out: Vec<Option<RVal>>,
+    /// First worker error in input order. Set exclusively by the
+    /// ordered relay, which visits chunks in ascending index order, so
+    /// first-set wins and the result is deterministic under races.
+    first_error: Option<RCondition>,
+    /// Any error observed at all — set at arrival time, before the
+    /// ordered relay catches up, so fail-fast cancellation is prompt.
+    error_seen: bool,
+    /// Set once `cancel_queued` has fired; no further chunks are fed.
+    cancelled: bool,
+    trace: Vec<TraceEvent>,
+    t0: f64,
+}
+
+impl FutureSet {
+    pub fn new(
+        ctx: Arc<TaskContext>,
+        source: ElementSource,
+        seeds: Option<Vec<RngState>>,
+        workers: usize,
+        time_scale: f64,
+        opts: &MapOptions,
+    ) -> Self {
+        let n = source.len();
+        let chunks = make_chunks(n, workers, &opts.policy);
+        let cap = opts.policy.in_flight_cap(workers);
+        FutureSet {
+            ctx,
+            source,
+            seeds,
+            time_scale,
+            capture_stdout: opts.stdout,
+            chunks,
+            cap,
+            next_chunk: 0,
+            in_flight: HashMap::new(),
+            pending_relay: HashMap::new(),
+            relay_cursor: 0,
+            out: (0..n).map(|_| None).collect(),
+            first_error: None,
+            error_seen: false,
+            cancelled: false,
+            trace: Vec::new(),
+            t0: now_unix(),
+        }
+    }
+
+    /// Drive the set to completion on the session's backend: register
+    /// the shared context, stream chunks under backpressure, reduce
+    /// outcomes incrementally, and fail fast on worker errors when
+    /// `stop_on_error` is set. Returns per-element values in input
+    /// order.
+    pub fn run(mut self, i: &mut Interp, opts: &MapOptions) -> Result<Vec<RVal>, Signal> {
+        let n = self.source.len();
+        if n == 0 {
+            // No chunks ran: the trace of this call is empty, not the
+            // previous call's.
+            i.session.last_trace.clear();
+            return Ok(vec![]);
+        }
+        {
+            let backend = i.session.backend().map_err(Signal::error)?;
+            backend.register_context(self.ctx.clone()).map_err(Signal::error)?;
+        }
+        let result = self.drive(i, opts);
+        // Always release the context, even on the error path: process
+        // workers cache contexts by id and would otherwise leak them.
+        let ctx_id = self.ctx.id;
+        if let Ok(backend) = i.session.backend() {
+            let _ = backend.drop_context(ctx_id);
+        }
+        i.session.last_trace = std::mem::take(&mut self.trace);
+        i.session.last_trace.sort_by(|a, b| a.task_id.cmp(&b.task_id));
+        let () = result?;
+        if let Some(cond) = self.first_error.take() {
+            return Err(Signal::Error(cond));
+        }
+        if self.error_seen {
+            // Unreachable in practice (the erroring chunk always relays
+            // before the drain finishes), but never panic on the expect
+            // below if that invariant is ever broken.
+            return Err(Signal::error("a future failed but its error was lost"));
+        }
+        Ok(self
+            .out
+            .into_iter()
+            .map(|v| v.expect("all elements resolved"))
+            .collect())
+    }
+
+    /// The event loop: fill the in-flight window, consume one event,
+    /// repeat until every submitted chunk has resolved and nothing is
+    /// left to submit.
+    fn drive(&mut self, i: &mut Interp, opts: &MapOptions) -> Result<(), Signal> {
+        loop {
+            if let Err(sig) = self.fill_window(i) {
+                self.abort(i);
+                return Err(sig);
+            }
+            // Reclaim outcomes a nested dispatch (a futurized map run
+            // from inside a condition handler) stole off the shared
+            // event channel and stashed for us.
+            if let Err(sig) = self.reclaim_stashed(i, opts) {
+                self.abort(i);
+                return Err(sig);
+            }
+            self.maybe_cancel(i, opts);
+            if self.in_flight.is_empty() {
+                // Nothing running and (all chunks submitted, or feeding
+                // stopped after cancellation) — done.
+                return Ok(());
+            }
+            let ev = {
+                let backend = i.session.backend().map_err(Signal::error)?;
+                backend.next_event().map_err(Signal::error)?
+            };
+            match ev {
+                BackendEvent::Progress { cond, .. } => {
+                    // Near-live relay (paper §4.10): progress conditions
+                    // pass through the parent handler stack immediately.
+                    if let Err(sig) = i.signal_condition(cond) {
+                        self.abort(i);
+                        return Err(sig);
+                    }
+                }
+                BackendEvent::Done(outcome) => {
+                    if let Err(sig) = self.absorb(i, outcome, opts) {
+                        self.abort(i);
+                        return Err(sig);
+                    }
+                }
+            }
+            self.maybe_cancel(i, opts);
+        }
+    }
+
+    /// Fail fast: once an error has been observed under `stop_on_error`,
+    /// cancel everything queued; in-flight tasks drain through the
+    /// normal loop.
+    fn maybe_cancel(&mut self, i: &mut Interp, opts: &MapOptions) {
+        if opts.stop_on_error && self.error_seen && !self.cancelled {
+            self.cancelled = true;
+            let ids = match i.session.backend() {
+                Ok(backend) => backend.cancel_queued(),
+                Err(_) => vec![],
+            };
+            self.forget_cancelled(&ids);
+        }
+    }
+
+    /// Absorb any of this set's outcomes that a nested dispatch pulled
+    /// off the backend channel and parked in `session.pending`.
+    fn reclaim_stashed(&mut self, i: &mut Interp, opts: &MapOptions) -> Result<(), Signal> {
+        loop {
+            let Some(id) = self
+                .in_flight
+                .keys()
+                .copied()
+                .find(|id| matches!(i.session.pending.get(id), Some(Some(_))))
+            else {
+                return Ok(());
+            };
+            let Some(Some(outcome)) = i.session.pending.remove(&id) else {
+                return Ok(());
+            };
+            self.absorb(i, outcome, opts)?;
+        }
+    }
+
+    /// Submit chunks until the backpressure cap is reached (or feeding
+    /// has been cancelled).
+    fn fill_window(&mut self, i: &mut Interp) -> Result<(), Signal> {
+        while !self.cancelled
+            && self.next_chunk < self.chunks.len()
+            && self.in_flight.len() < self.cap
+        {
+            let (start, end) = self.chunks[self.next_chunk];
+            let id = i.session.fresh_task_id();
+            let payload = TaskPayload {
+                id,
+                kind: self.source.slice_kind(self.ctx.id, start, end, &self.seeds),
+                time_scale: self.time_scale,
+                capture_stdout: self.capture_stdout,
+            };
+            let chunk_idx = self.next_chunk;
+            let backend = i.session.backend().map_err(Signal::error)?;
+            backend.submit(payload).map_err(Signal::error)?;
+            // Only after a successful submit: a failed submit must not
+            // leave a task id the drain loop would wait on forever.
+            self.in_flight.insert(id, (chunk_idx, start));
+            self.next_chunk += 1;
+        }
+        Ok(())
+    }
+
+    /// Fold one outcome into the result vector and relay any newly
+    /// contiguous prefix of chunk logs, preserving the input-order relay
+    /// contract of the batch driver.
+    fn absorb(
+        &mut self,
+        i: &mut Interp,
+        outcome: TaskOutcome,
+        opts: &MapOptions,
+    ) -> Result<(), Signal> {
+        let Some((chunk_idx, start)) = self.in_flight.remove(&outcome.id) else {
+            // Not ours: an outstanding low-level future(), or a chunk of
+            // an enclosing map call whose events we pulled off the
+            // shared channel (nested dispatch from a condition handler).
+            // Stash it in the session's pending table; wait_for() and
+            // the enclosing drive loop both reclaim from there.
+            stash_foreign_outcome(i, outcome);
+            return Ok(());
+        };
+        self.trace.push(TraceEvent {
+            task_id: outcome.id,
+            worker: outcome.worker,
+            start: outcome.started_unix - self.t0,
+            end: outcome.finished_unix - self.t0,
+        });
+        // Streaming reduction: values land in their slots immediately.
+        match &outcome.values {
+            Ok(vals) => {
+                for (k, w) in vals.iter().enumerate() {
+                    self.out[start + k] = Some(from_wire(w, &i.global));
+                }
+            }
+            Err(_) => self.error_seen = true,
+        }
+        self.pending_relay.insert(chunk_idx, outcome);
+        self.relay_ready(i, opts)
+    }
+
+    /// Relay logs (and record errors) for every chunk whose predecessors
+    /// have all been relayed.
+    fn relay_ready(&mut self, i: &mut Interp, opts: &MapOptions) -> Result<(), Signal> {
+        while let Some(outcome) = self.pending_relay.remove(&self.relay_cursor) {
+            self.relay_cursor += 1;
+            if opts.stdout || opts.conditions {
+                let mut log = outcome.log.clone();
+                if !opts.stdout {
+                    log.stdout.clear();
+                }
+                if !opts.conditions {
+                    log.conditions.clear();
+                }
+                i.relay(&log)?;
+            }
+            // RNG misuse detection (paper §5.2 recommendation 3).
+            if outcome.log.rng_used && matches!(opts.seed, SeedOption::False) {
+                i.signal_condition(RCondition::warning_cond(
+                    "UNRELIABLE VALUE: one of the futures unexpectedly generated random numbers \
+                     without declaring so. Use 'seed = TRUE' to resolve this."
+                        .to_string(),
+                ))?;
+            }
+            if let Err(cond) = outcome.values {
+                if self.first_error.is_none() {
+                    self.first_error = Some(cond);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Stop waiting on tasks the backend confirmed it cancelled —
+    /// without this, the drive/drain loops would block forever on
+    /// `Done` events that can no longer arrive.
+    fn forget_cancelled(&mut self, ids: &[u64]) {
+        for id in ids {
+            self.in_flight.remove(id);
+        }
+    }
+
+    /// Best-effort teardown after a relay/handler error: cancel the
+    /// queue and drain in-flight tasks so the persistent backend is
+    /// clean for the next map call.
+    fn abort(&mut self, i: &mut Interp) {
+        self.cancelled = true;
+        let ids = match i.session.backend() {
+            Ok(backend) => backend.cancel_queued(),
+            Err(_) => return,
+        };
+        self.forget_cancelled(&ids);
+        // Discard outcomes of ours that a nested dispatch already
+        // stashed — they will never arrive as fresh events.
+        let stashed: Vec<u64> = self
+            .in_flight
+            .keys()
+            .copied()
+            .filter(|id| matches!(i.session.pending.get(id), Some(Some(_))))
+            .collect();
+        for id in stashed {
+            i.session.pending.remove(&id);
+            self.in_flight.remove(&id);
+        }
+        while !self.in_flight.is_empty() {
+            let ev = match i.session.backend() {
+                Ok(backend) => backend.next_event(),
+                Err(_) => break,
+            };
+            match ev {
+                Ok(BackendEvent::Done(outcome)) => {
+                    if self.in_flight.remove(&outcome.id).is_none() {
+                        stash_foreign_outcome(i, outcome);
+                    }
+                }
+                Ok(BackendEvent::Progress { .. }) => {}
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+/// Route a `Done` event that doesn't belong to the current `FutureSet`
+/// into the session's pending table: a low-level `future()` handle's
+/// `value()`/`resolved()` looks there, and an enclosing map call's
+/// drive loop reclaims its own ids from there (nested dispatch).
+fn stash_foreign_outcome(i: &mut Interp, outcome: TaskOutcome) {
+    i.session.pending.insert(outcome.id, Some(outcome));
+}
+
+/// Build and run a [`FutureSet`] for a map-style call.
+#[allow(clippy::too_many_arguments)]
+pub fn run_map(
+    i: &mut Interp,
+    f: WireVal,
+    items: Vec<WireVal>,
+    extra: Vec<(Option<String>, WireVal)>,
+    globals: Vec<(String, WireVal)>,
+    seeds: Option<Vec<RngState>>,
+    opts: &MapOptions,
+) -> Result<Vec<RVal>, Signal> {
+    let ctx = Arc::new(TaskContext {
+        id: i.session.fresh_context_id(),
+        body: ContextBody::Map { f, extra },
+        globals,
+    });
+    let workers = i.session.workers();
+    let time_scale = i.config.time_scale;
+    FutureSet::new(ctx, ElementSource::Items(items), seeds, workers, time_scale, opts)
+        .run(i, opts)
+}
+
+/// Build and run a [`FutureSet`] for a foreach-style call.
+pub fn run_foreach(
+    i: &mut Interp,
+    body: crate::rlite::ast::Expr,
+    bindings: Vec<Vec<(String, WireVal)>>,
+    globals: Vec<(String, WireVal)>,
+    seeds: Option<Vec<RngState>>,
+    opts: &MapOptions,
+) -> Result<Vec<RVal>, Signal> {
+    let ctx = Arc::new(TaskContext {
+        id: i.session.fresh_context_id(),
+        body: ContextBody::Foreach { body },
+        globals,
+    });
+    let workers = i.session.workers();
+    let time_scale = i.config.time_scale;
+    FutureSet::new(ctx, ElementSource::Bindings(bindings), seeds, workers, time_scale, opts)
+        .run(i, opts)
+}

@@ -1,18 +1,26 @@
-//! The chunked map driver — the engine every `future_*` function and
-//! every futurized domain function delegates to.
+//! The map driver — the engine every `future_*` function and every
+//! futurized domain function delegates to.
 //!
 //! Pipeline: identify + export globals → derive per-element RNG streams
-//! (`seed = TRUE`) → chunk per the scheduling policy → submit chunks to
-//! the plan's backend → stream progress conditions near-live → collect
-//! outcomes → relay captured stdout/conditions *in input order* → reduce
-//! back to per-element values.
+//! (`seed = TRUE`) → build one shared [`TaskContext`](super::TaskContext)
+//! holding the function/extras/globals → hand the element stream to the
+//! [`dispatch`](super::dispatch) core, which registers the context with
+//! the plan's backend (shipped once per worker, not once per chunk),
+//! feeds chunk slices incrementally under backpressure, streams progress
+//! conditions near-live, folds outcomes into the result vector as they
+//! arrive, and relays captured stdout/conditions *in input order*.
+//!
+//! Error handling: by default every chunk runs and the earliest error in
+//! input order is reported (the batch driver's semantics). With
+//! [`MapOptions::stop_on_error`], the first worker error triggers
+//! `Backend::cancel_queued()` so remaining queued chunks never execute,
+//! in-flight chunks drain, and the error surfaces immediately.
 
-use super::{TaskKind, TaskOutcome, TaskPayload, TraceEvent};
+use super::dispatch;
 use crate::rlite::ast::Expr;
-use crate::rlite::conditions::RCondition;
 use crate::rlite::env::EnvRef;
 use crate::rlite::eval::{Interp, Signal};
-use crate::rlite::serialize::{from_wire, to_wire, WireVal};
+use crate::rlite::serialize::{to_wire, WireVal};
 use crate::rlite::value::RVal;
 use crate::rng::{make_streams, RngState};
 use crate::scheduling::ChunkPolicy;
@@ -26,6 +34,9 @@ pub struct MapOptions {
     pub stdout: bool,
     /// Relay conditions from workers (future's `conditions` option).
     pub conditions: bool,
+    /// Fail fast: cancel queued chunks and surface the first worker
+    /// error immediately instead of running the whole input.
+    pub stop_on_error: bool,
 }
 
 impl Default for MapOptions {
@@ -35,6 +46,7 @@ impl Default for MapOptions {
             policy: ChunkPolicy::default(),
             stdout: true,
             conditions: true,
+            stop_on_error: false,
         }
     }
 }
@@ -53,7 +65,7 @@ pub enum SeedOption {
 /// current plan. Returns per-element results in input order.
 pub fn map_elements(
     i: &mut Interp,
-    env: &EnvRef,
+    _env: &EnvRef,
     items: Vec<RVal>,
     f: &RVal,
     extra: Vec<(Option<String>, RVal)>,
@@ -61,6 +73,7 @@ pub fn map_elements(
 ) -> Result<Vec<RVal>, Signal> {
     let n = items.len();
     if n == 0 {
+        i.session.last_trace.clear();
         return Ok(vec![]);
     }
     let f_wire = to_wire(f).map_err(Signal::error)?;
@@ -71,35 +84,13 @@ pub fn map_elements(
         extra_wire.push((name.clone(), to_wire(v).map_err(Signal::error)?));
     }
     let seeds = element_seeds(i, opts, n);
-    let workers = i.session.workers();
-    let chunks = crate::scheduling::make_chunks(n, workers, &opts.policy);
-
-    let mut payloads = Vec::with_capacity(chunks.len());
-    for &(start, end) in &chunks {
-        let id = i.session.fresh_task_id();
-        payloads.push((
-            id,
-            start,
-            TaskPayload {
-                id,
-                kind: TaskKind::MapChunk {
-                    f: f_wire.clone(),
-                    items: items_wire[start..end].to_vec(),
-                    extra: extra_wire.clone(),
-                    seeds: seeds.as_ref().map(|s| s[start..end].to_vec()),
-                    globals: vec![],
-                },
-                time_scale: i.config.time_scale,
-                capture_stdout: opts.stdout,
-            },
-        ));
-    }
-    run_chunks(i, env, payloads, opts, n)
+    dispatch::run_map(i, f_wire, items_wire, extra_wire, vec![], seeds, opts)
 }
 
 /// Foreach-style execution: per element, bind iteration variables then
 /// evaluate `body`. `globals` are the free variables of `body` minus the
-/// binding names, resolved in `env`.
+/// binding names, resolved in `env` and shipped once in the shared
+/// context.
 pub fn foreach_elements(
     i: &mut Interp,
     env: &EnvRef,
@@ -109,6 +100,7 @@ pub fn foreach_elements(
 ) -> Result<Vec<RVal>, Signal> {
     let n = bindings.len();
     if n == 0 {
+        i.session.last_trace.clear();
         return Ok(vec![]);
     }
     // Globals: free vars of body minus per-iteration bindings.
@@ -138,28 +130,7 @@ pub fn foreach_elements(
         bindings_wire.push(row);
     }
     let seeds = element_seeds(i, opts, n);
-    let workers = i.session.workers();
-    let chunks = crate::scheduling::make_chunks(n, workers, &opts.policy);
-    let mut payloads = Vec::with_capacity(chunks.len());
-    for &(start, end) in &chunks {
-        let id = i.session.fresh_task_id();
-        payloads.push((
-            id,
-            start,
-            TaskPayload {
-                id,
-                kind: TaskKind::ForeachChunk {
-                    bindings: bindings_wire[start..end].to_vec(),
-                    body: body.clone(),
-                    seeds: seeds.as_ref().map(|s| s[start..end].to_vec()),
-                    globals: globals.clone(),
-                },
-                time_scale: i.config.time_scale,
-                capture_stdout: opts.stdout,
-            },
-        ));
-    }
-    run_chunks(i, env, payloads, opts, n)
+    dispatch::run_foreach(i, body.clone(), bindings_wire, globals, seeds, opts)
 }
 
 fn element_seeds(i: &Interp, opts: &MapOptions, n: usize) -> Option<Vec<RngState>> {
@@ -168,98 +139,6 @@ fn element_seeds(i: &Interp, opts: &MapOptions, n: usize) -> Option<Vec<RngState
         SeedOption::True => Some(make_streams(i.session.rng_root_seed, n)),
         SeedOption::Seed(s) => Some(make_streams(s, n)),
     }
-}
-
-/// Submit all payloads, stream progress, collect outcomes, relay logs in
-/// chunk order, reassemble per-element values in input order.
-fn run_chunks(
-    i: &mut Interp,
-    _env: &EnvRef,
-    payloads: Vec<(u64, usize, TaskPayload)>,
-    opts: &MapOptions,
-    n: usize,
-) -> Result<Vec<RVal>, Signal> {
-    use std::collections::HashMap;
-
-    let order: Vec<(u64, usize)> = payloads.iter().map(|(id, start, _)| (*id, *start)).collect();
-    let expected: usize = payloads.len();
-    {
-        let backend = i.session.backend().map_err(Signal::error)?;
-        for (_, _, p) in payloads {
-            backend.submit(p).map_err(Signal::error)?;
-        }
-    }
-    let mut outcomes: HashMap<u64, TaskOutcome> = HashMap::with_capacity(expected);
-    let t0 = now_unix();
-    while outcomes.len() < expected {
-        let ev = {
-            let backend = i.session.backend().map_err(Signal::error)?;
-            backend.next_event().map_err(Signal::error)?
-        };
-        match ev {
-            super::BackendEvent::Progress { cond, .. } => {
-                // Near-live relay (paper §4.10): progress conditions pass
-                // through the parent handler stack immediately.
-                i.signal_condition(cond)?;
-            }
-            super::BackendEvent::Done(outcome) => {
-                outcomes.insert(outcome.id, outcome);
-            }
-        }
-    }
-    // Trace for Figure 1.
-    i.session.last_trace = outcomes
-        .values()
-        .map(|o| TraceEvent {
-            task_id: o.id,
-            worker: o.worker,
-            start: o.started_unix - t0,
-            end: o.finished_unix - t0,
-        })
-        .collect();
-    i.session.last_trace.sort_by(|a, b| a.task_id.cmp(&b.task_id));
-
-    // Relay + reassemble in input (chunk) order.
-    let genv = i.global.clone();
-    let mut out: Vec<Option<RVal>> = (0..n).map(|_| None).collect();
-    let mut first_error: Option<RCondition> = None;
-    for (id, start) in &order {
-        let outcome = outcomes.remove(id).expect("outcome present");
-        if opts.stdout || opts.conditions {
-            let mut log = outcome.log.clone();
-            if !opts.stdout {
-                log.stdout.clear();
-            }
-            if !opts.conditions {
-                log.conditions.clear();
-            }
-            i.relay(&log)?;
-        }
-        // RNG misuse detection (paper §5.2 recommendation 3).
-        if outcome.log.rng_used && matches!(opts.seed, SeedOption::False) {
-            i.signal_condition(RCondition::warning_cond(
-                "UNRELIABLE VALUE: one of the futures unexpectedly generated random numbers \
-                 without declaring so. Use 'seed = TRUE' to resolve this."
-                    .to_string(),
-            ))?;
-        }
-        match outcome.values {
-            Ok(vals) => {
-                for (k, w) in vals.iter().enumerate() {
-                    out[start + k] = Some(from_wire(w, &genv));
-                }
-            }
-            Err(cond) => {
-                if first_error.is_none() {
-                    first_error = Some(cond);
-                }
-            }
-        }
-    }
-    if let Some(cond) = first_error {
-        return Err(Signal::Error(cond));
-    }
-    Ok(out.into_iter().map(|v| v.expect("all elements resolved")).collect())
 }
 
 pub fn now_unix() -> f64 {
@@ -307,28 +186,26 @@ mod tests {
     fn seed_true_is_chunking_invariant() {
         // Same per-element streams regardless of worker count/chunking —
         // the property behind the paper's litmus test.
-        let draw = |workers: usize, chunk_size: Option<usize>| -> Vec<f64> {
+        let draw = |workers: usize, policy: ChunkPolicy| -> Vec<f64> {
             let mut i = Interp::new();
             i.eval_program(&format!("plan(multicore, workers = {workers})")).unwrap();
             let f = make_closure(&mut i, "function(x) rnorm(1)");
             let items: Vec<RVal> = (1..=8).map(|k| RVal::scalar_dbl(k as f64)).collect();
             let genv = i.global.clone();
-            let opts = MapOptions {
-                seed: SeedOption::Seed(123),
-                policy: ChunkPolicy { chunk_size, scheduling: 1.0 },
-                ..Default::default()
-            };
+            let opts = MapOptions { seed: SeedOption::Seed(123), policy, ..Default::default() };
             map_elements(&mut i, &genv, items, &f, vec![], &opts)
                 .unwrap()
                 .iter()
                 .map(|v| v.as_f64().unwrap())
                 .collect()
         };
-        let a = draw(1, None);
-        let b = draw(4, None);
-        let c = draw(2, Some(1));
+        let a = draw(1, ChunkPolicy::default());
+        let b = draw(4, ChunkPolicy::default());
+        let c = draw(2, ChunkPolicy::Static { chunk_size: Some(1), scheduling: 1.0 });
+        let d = draw(3, ChunkPolicy::adaptive());
         assert_eq!(a, b);
         assert_eq!(a, c);
+        assert_eq!(a, d);
     }
 
     #[test]
@@ -361,6 +238,55 @@ mod tests {
     }
 
     #[test]
+    fn earliest_error_wins_regardless_of_completion_order() {
+        // Two failing elements; the one earlier in input order must be
+        // reported even if the later one finishes first.
+        let mut i = Interp::new();
+        i.eval_program("plan(multicore, workers = 2)").unwrap();
+        let f = make_closure(
+            &mut i,
+            "function(x) if (x == 2) { Sys.sleep(0.05)\nstop(\"early\") } else if (x == 7) stop(\"late\") else x",
+        );
+        let items: Vec<RVal> = (1..=8).map(|k| RVal::scalar_dbl(k as f64)).collect();
+        let genv = i.global.clone();
+        let opts = MapOptions {
+            policy: ChunkPolicy::Static { chunk_size: None, scheduling: f64::INFINITY },
+            ..Default::default()
+        };
+        let err = map_elements(&mut i, &genv, items, &f, vec![], &opts).unwrap_err();
+        match err {
+            Signal::Error(c) => assert_eq!(c.message, "early"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stop_on_error_surfaces_error() {
+        let mut i = Interp::new();
+        i.eval_program("plan(multicore, workers = 2)").unwrap();
+        let f = make_closure(&mut i, "function(x) if (x == 1) stop(\"fail fast\") else x");
+        let items: Vec<RVal> = (1..=12).map(|k| RVal::scalar_dbl(k as f64)).collect();
+        let genv = i.global.clone();
+        let opts = MapOptions {
+            stop_on_error: true,
+            policy: ChunkPolicy::Static { chunk_size: None, scheduling: f64::INFINITY },
+            ..Default::default()
+        };
+        let err = map_elements(&mut i, &genv, items, &f, vec![], &opts).unwrap_err();
+        match err {
+            Signal::Error(c) => assert_eq!(c.message, "fail fast"),
+            other => panic!("{other:?}"),
+        }
+        // The backend must be clean for the next call.
+        let g = make_closure(&mut i, "function(x) x + 1");
+        let items: Vec<RVal> = (1..=4).map(|k| RVal::scalar_dbl(k as f64)).collect();
+        let out =
+            map_elements(&mut i, &genv, items, &g, vec![], &MapOptions::default()).unwrap();
+        let got: Vec<f64> = out.iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(got, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
     fn extra_args_forwarded() {
         let mut i = Interp::new();
         let f = make_closure(&mut i, "function(x, n) x + n");
@@ -390,5 +316,18 @@ mod tests {
             foreach_elements(&mut i, &genv, bindings, &body, &MapOptions::default()).unwrap();
         let got: Vec<f64> = out.iter().map(|v| v.as_f64().unwrap()).collect();
         assert_eq!(got, vec![102.0, 104.0, 106.0]);
+    }
+
+    #[test]
+    fn adaptive_policy_end_to_end() {
+        let mut i = Interp::new();
+        i.eval_program("plan(multicore, workers = 4)").unwrap();
+        let f = make_closure(&mut i, "function(x) x * 2");
+        let items: Vec<RVal> = (1..=33).map(|k| RVal::scalar_dbl(k as f64)).collect();
+        let genv = i.global.clone();
+        let opts = MapOptions { policy: ChunkPolicy::adaptive(), ..Default::default() };
+        let out = map_elements(&mut i, &genv, items, &f, vec![], &opts).unwrap();
+        let got: Vec<f64> = out.iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(got, (1..=33).map(|k| (k * 2) as f64).collect::<Vec<_>>());
     }
 }

@@ -1,13 +1,15 @@
-//! The future abstraction: `plan()`, task payloads, future handles, and
-//! the chunked map driver every `future_*` function delegates to.
+//! The future abstraction: `plan()`, task payloads, shared task
+//! contexts, future handles, and the streaming map driver every
+//! `future_*` function delegates to ([`driver`] + [`dispatch`]).
 //!
 //! This module is the rlite-facing half of the "future ecosystem" the
 //! paper builds on: it owns the *what-to-run* representation
-//! ([`TaskPayload`]) and the developer-visible lifecycle
-//! (`future()` → `resolved()` → `value()`), while [`crate::backend`]
-//! owns the *how/where* (the paper's end-user concern, selected via
-//! `plan()`).
+//! ([`TaskPayload`], [`TaskContext`]) and the developer-visible
+//! lifecycle (`future()` → `resolved()` → `value()`), while
+//! [`crate::backend`] owns the *how/where* (the paper's end-user
+//! concern, selected via `plan()`).
 
+pub mod dispatch;
 pub mod driver;
 
 use std::collections::HashMap;
@@ -30,24 +32,56 @@ pub enum TaskKind {
     /// A single expression with exported globals (low-level `future()`,
     /// domain functions).
     Expr { expr: Expr, globals: Vec<(String, WireVal)> },
-    /// A chunk of map elements: run `f(item, extra...)` per element.
-    /// `seeds` carries one pre-allocated L'Ecuyer stream per element
-    /// (`seed = TRUE`), making results invariant to chunking and order.
-    MapChunk {
-        f: WireVal,
-        items: Vec<WireVal>,
-        extra: Vec<(Option<String>, WireVal)>,
-        seeds: Option<Vec<RngState>>,
-        globals: Vec<(String, WireVal)>,
-    },
-    /// A chunk of foreach iterations: per element, bind the iteration
-    /// variables then evaluate `body`.
-    ForeachChunk {
+    /// A slice of map elements, executed against a [`TaskContext`]
+    /// previously registered with the backend: run `ctx.f(item,
+    /// ctx.extra...)` per element. `seeds` carries one pre-allocated
+    /// L'Ecuyer stream per element (`seed = TRUE`), making results
+    /// invariant to chunking and order.
+    MapSlice { ctx: u64, items: Vec<WireVal>, seeds: Option<Vec<RngState>> },
+    /// A slice of foreach iterations against a registered context: per
+    /// element, bind the iteration variables then evaluate `ctx.body`.
+    ForeachSlice {
+        ctx: u64,
         bindings: Vec<Vec<(String, WireVal)>>,
-        body: Expr,
         seeds: Option<Vec<RngState>>,
-        globals: Vec<(String, WireVal)>,
     },
+}
+
+impl TaskKind {
+    /// The shared [`TaskContext`] this task references, if any.
+    pub fn context_id(&self) -> Option<u64> {
+        match self {
+            TaskKind::Expr { .. } => None,
+            TaskKind::MapSlice { ctx, .. } | TaskKind::ForeachSlice { ctx, .. } => Some(*ctx),
+        }
+    }
+}
+
+/// The per-map-call state every chunk of the call shares: the function
+/// (or foreach body), its extra arguments, and the exported globals.
+///
+/// The batch driver used to deep-copy all of this into every chunk
+/// payload — O(chunks × payload) serialized bytes. A `TaskContext` is
+/// instead registered with the backend **once per map call** (process
+/// backends ship it once per *worker*; see `ParentMsg::RegisterContext`)
+/// and chunk payloads reference it by `id`, so per-chunk messages carry
+/// only the elements themselves.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct TaskContext {
+    pub id: u64,
+    pub body: ContextBody,
+    /// Exported globals, installed into the worker's fresh interpreter
+    /// before each task of this context runs.
+    pub globals: Vec<(String, WireVal)>,
+}
+
+/// What a context's tasks execute per element.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub enum ContextBody {
+    /// `f(item, extra...)` per element.
+    Map { f: WireVal, extra: Vec<(Option<String>, WireVal)> },
+    /// Bind iteration variables, then evaluate `body`.
+    Foreach { body: Expr },
 }
 
 /// A unit of work shipped to a backend.
@@ -94,6 +128,7 @@ pub struct SessionState {
     /// Pending low-level futures: id → resolved outcome (if arrived).
     pending: HashMap<u64, Option<TaskOutcome>>,
     next_task_id: u64,
+    next_context_id: u64,
     /// Trace of the most recent futurized map call.
     pub last_trace: Vec<TraceEvent>,
     /// Session RNG seed used to derive per-element streams.
@@ -107,6 +142,7 @@ impl Default for SessionState {
             backend: None,
             pending: HashMap::new(),
             next_task_id: 0,
+            next_context_id: 0,
             last_trace: Vec::new(),
             rng_root_seed: 42,
         }
@@ -125,6 +161,18 @@ impl SessionState {
     pub fn fresh_task_id(&mut self) -> u64 {
         self.next_task_id += 1;
         self.next_task_id
+    }
+
+    pub fn fresh_context_id(&mut self) -> u64 {
+        self.next_context_id += 1;
+        self.next_context_id
+    }
+
+    /// Install a specific backend instance for the current plan —
+    /// embedder hook for custom [`Backend`] implementations (and the
+    /// dispatch-core test suite's instrumented probe backends).
+    pub fn install_backend(&mut self, backend: Box<dyn Backend>) {
+        self.backend = Some(backend);
     }
 
     /// Instantiate (or reuse) the backend for the current plan.

@@ -15,7 +15,9 @@
 //! - [`globals`] — static free-variable analysis used to identify and
 //!   export globals to parallel workers.
 //! - [`future_core`] — the future abstraction: handles, lifecycle,
-//!   `plan()` stack, structured-concurrency scope.
+//!   `plan()` stack, and the streaming dispatch core (`FutureSet`):
+//!   shared task contexts, incremental backpressured chunk feeding,
+//!   fail-fast cancellation (structured concurrency).
 //! - [`backend`] — execution backends: `sequential`, `multicore`
 //!   (threads), `multisession` (worker subprocesses over stdio),
 //!   `cluster_sim` (latency-injected processes) and `batchtools_sim`

@@ -1,56 +1,137 @@
 //! Chunking and load balancing (`scheduling` / `chunk_size`, paper §2.4).
 //!
-//! Mirrors future.apply's semantics: by default each worker gets one
-//! chunk (`scheduling = 1`); `scheduling = k` makes ~k chunks per worker
-//! (finer-grained balancing at higher messaging cost); `chunk_size`
-//! overrides directly. Chunks are contiguous index ranges so results
-//! reassemble in input order regardless of completion order.
+//! Two policies:
+//!
+//! - [`ChunkPolicy::Static`] mirrors future.apply's semantics: by default
+//!   each worker gets one chunk (`scheduling = 1`); `scheduling = k`
+//!   makes ~k chunks per worker (finer-grained balancing at higher
+//!   messaging cost); `chunk_size` overrides directly.
+//! - [`ChunkPolicy::Adaptive`] is guided self-scheduling: early chunks
+//!   are large (`remaining / (GUIDED_FACTOR × workers)` elements), later
+//!   chunks decay geometrically down to `min_chunk`. Combined with the
+//!   dispatch core's incremental submission this eliminates stragglers —
+//!   a slow element only ever delays the (small, late) chunk it lands in
+//!   — without paying per-element messaging cost for the whole input.
+//!
+//! Chunks are contiguous index ranges in both policies, so results
+//! reassemble in input order regardless of completion order, and
+//! `seed = TRUE` per-element RNG streams stay chunking-invariant.
 
 /// How to split `n` elements over `workers` workers.
 #[derive(Clone, Copy, Debug, PartialEq)]
-pub struct ChunkPolicy {
-    pub chunk_size: Option<usize>,
-    /// Average number of chunks per worker (future.apply's
-    /// `future.scheduling`). `f64::INFINITY` means one element per chunk.
-    pub scheduling: f64,
+pub enum ChunkPolicy {
+    /// Pre-sized contiguous chunks (future.apply's `future.chunk.size` /
+    /// `future.scheduling` semantics).
+    Static {
+        chunk_size: Option<usize>,
+        /// Average number of chunks per worker (future.apply's
+        /// `future.scheduling`). `f64::INFINITY` means one element per
+        /// chunk.
+        scheduling: f64,
+    },
+    /// Guided self-scheduling: chunk sizes decay from
+    /// `n / (GUIDED_FACTOR × workers)` down to `min_chunk`.
+    Adaptive {
+        /// Smallest chunk the decay is allowed to reach (≥ 1).
+        min_chunk: usize,
+    },
 }
+
+/// Decay divisor for guided chunks: next chunk covers
+/// `remaining / (GUIDED_FACTOR × workers)` elements.
+pub const GUIDED_FACTOR: f64 = 2.0;
 
 impl Default for ChunkPolicy {
     fn default() -> Self {
-        ChunkPolicy { chunk_size: None, scheduling: 1.0 }
+        ChunkPolicy::Static { chunk_size: None, scheduling: 1.0 }
+    }
+}
+
+impl ChunkPolicy {
+    /// The static policy as future.apply spells it.
+    pub fn balanced(chunk_size: Option<usize>, scheduling: f64) -> Self {
+        ChunkPolicy::Static { chunk_size, scheduling }
+    }
+
+    /// Guided self-scheduling with single-element minimum chunks.
+    pub fn adaptive() -> Self {
+        ChunkPolicy::Adaptive { min_chunk: 1 }
+    }
+
+    /// How many chunks the dispatch core keeps in flight (submitted but
+    /// not yet `Done`) at once — the backpressure cap. Roughly
+    /// `scheduling × workers`, but never below `2 × workers`
+    /// (double-buffering: each worker has one chunk running and one
+    /// queued, so a Done→refill round trip never starves the pool —
+    /// this matters on high-latency backends like batchtools).
+    pub fn in_flight_cap(&self, workers: usize) -> usize {
+        let w = workers.max(1);
+        match self {
+            ChunkPolicy::Static { scheduling, .. } if scheduling.is_finite() => {
+                (((w as f64) * scheduling.max(1.0)).ceil() as usize).max(2 * w)
+            }
+            _ => 2 * w,
+        }
     }
 }
 
 /// Compute contiguous chunk ranges `[start, end)` covering `0..n`.
+///
+/// For [`ChunkPolicy::Adaptive`] the *sizes* are deterministic (they
+/// depend only on `n` and `workers`, not on completion order); the
+/// dynamic part of adaptive scheduling is that the dispatch core feeds
+/// these chunks to the backend incrementally, so whichever worker frees
+/// up first takes the next (smaller) chunk.
 pub fn make_chunks(n: usize, workers: usize, policy: &ChunkPolicy) -> Vec<(usize, usize)> {
     if n == 0 {
         return vec![];
     }
     let workers = workers.max(1);
-    let n_chunks = match policy.chunk_size {
-        Some(cs) => n.div_ceil(cs.max(1)),
-        None => {
-            if policy.scheduling.is_infinite() {
-                n
-            } else {
-                let target = (workers as f64 * policy.scheduling.max(0.0)).round() as usize;
-                target.clamp(1, n)
+    match policy {
+        ChunkPolicy::Static { chunk_size, scheduling } => {
+            let n_chunks = match chunk_size {
+                Some(cs) => n.div_ceil((*cs).max(1)),
+                None => {
+                    if scheduling.is_infinite() {
+                        n
+                    } else {
+                        let target = (workers as f64 * scheduling.max(0.0)).round() as usize;
+                        target.clamp(1, n)
+                    }
+                }
+            };
+            let n_chunks = n_chunks.clamp(1, n);
+            // Balanced split: first (n % n_chunks) chunks get one extra element.
+            let base = n / n_chunks;
+            let extra = n % n_chunks;
+            let mut out = Vec::with_capacity(n_chunks);
+            let mut start = 0;
+            for i in 0..n_chunks {
+                let len = base + usize::from(i < extra);
+                out.push((start, start + len));
+                start += len;
             }
+            debug_assert_eq!(start, n);
+            out
         }
-    };
-    let n_chunks = n_chunks.clamp(1, n);
-    // Balanced split: first (n % n_chunks) chunks get one extra element.
-    let base = n / n_chunks;
-    let extra = n % n_chunks;
-    let mut out = Vec::with_capacity(n_chunks);
-    let mut start = 0;
-    for i in 0..n_chunks {
-        let len = base + usize::from(i < extra);
-        out.push((start, start + len));
-        start += len;
+        ChunkPolicy::Adaptive { min_chunk } => {
+            let min_chunk = (*min_chunk).max(1);
+            let divisor = (workers as f64 * GUIDED_FACTOR).max(1.0);
+            let mut out = Vec::new();
+            let mut start = 0;
+            while start < n {
+                let remaining = n - start;
+                let guided = ((remaining as f64) / divisor).ceil() as usize;
+                // min_chunk floor first, then cap at what's left — the
+                // tail remainder may be smaller than min_chunk.
+                let len = guided.max(min_chunk).min(remaining);
+                out.push((start, start + len));
+                start += len;
+            }
+            debug_assert_eq!(start, n);
+            out
+        }
     }
-    debug_assert_eq!(start, n);
-    out
 }
 
 #[cfg(test)]
@@ -68,15 +149,18 @@ mod tests {
     #[test]
     fn chunk_size_overrides() {
         let chunks =
-            make_chunks(10, 4, &ChunkPolicy { chunk_size: Some(2), scheduling: 1.0 });
+            make_chunks(10, 4, &ChunkPolicy::Static { chunk_size: Some(2), scheduling: 1.0 });
         assert_eq!(chunks.len(), 5);
         assert!(chunks.iter().all(|(s, e)| e - s == 2));
     }
 
     #[test]
     fn infinite_scheduling_is_one_element_chunks() {
-        let chunks =
-            make_chunks(7, 2, &ChunkPolicy { chunk_size: None, scheduling: f64::INFINITY });
+        let chunks = make_chunks(
+            7,
+            2,
+            &ChunkPolicy::Static { chunk_size: None, scheduling: f64::INFINITY },
+        );
         assert_eq!(chunks.len(), 7);
     }
 
@@ -85,8 +169,11 @@ mod tests {
         for n in [1usize, 2, 3, 7, 100, 101] {
             for w in [1usize, 2, 3, 8] {
                 for sched in [0.5, 1.0, 2.0, 4.0] {
-                    let chunks =
-                        make_chunks(n, w, &ChunkPolicy { chunk_size: None, scheduling: sched });
+                    let chunks = make_chunks(
+                        n,
+                        w,
+                        &ChunkPolicy::Static { chunk_size: None, scheduling: sched },
+                    );
                     let total: usize = chunks.iter().map(|(s, e)| e - s).sum();
                     assert_eq!(total, n, "n={n} w={w} sched={sched}");
                     for win in chunks.windows(2) {
@@ -98,6 +185,70 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_covers_all_elements_exactly_once() {
+        for n in [1usize, 2, 3, 7, 48, 100, 101, 1000] {
+            for w in [1usize, 2, 4, 8] {
+                for min_chunk in [1usize, 2, 5] {
+                    let chunks = make_chunks(n, w, &ChunkPolicy::Adaptive { min_chunk });
+                    let total: usize = chunks.iter().map(|(s, e)| e - s).sum();
+                    assert_eq!(total, n, "n={n} w={w} min={min_chunk}");
+                    for win in chunks.windows(2) {
+                        assert_eq!(win[0].1, win[1].0, "contiguous");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_chunk_sizes_decay() {
+        let chunks = make_chunks(128, 4, &ChunkPolicy::adaptive());
+        let sizes: Vec<usize> = chunks.iter().map(|(s, e)| e - s).collect();
+        // Guided: monotonically non-increasing, starting at n/(2·workers).
+        assert_eq!(sizes[0], 16);
+        for win in sizes.windows(2) {
+            assert!(win[0] >= win[1], "sizes must decay: {sizes:?}");
+        }
+        // Tail reaches the minimum chunk size.
+        assert_eq!(*sizes.last().unwrap(), 1);
+        // Far fewer messages than per-element chunking.
+        assert!(chunks.len() < 128 / 2, "guided should need ≪ n chunks: {}", chunks.len());
+    }
+
+    #[test]
+    fn adaptive_respects_min_chunk() {
+        let chunks = make_chunks(100, 4, &ChunkPolicy::Adaptive { min_chunk: 5 });
+        // Every chunk except possibly the last is ≥ min_chunk.
+        for (i, (s, e)) in chunks.iter().enumerate() {
+            if i + 1 < chunks.len() {
+                assert!(e - s >= 5, "chunk {i} too small: {chunks:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn in_flight_cap_tracks_scheduling() {
+        // Every policy double-buffers per worker at minimum.
+        assert_eq!(ChunkPolicy::default().in_flight_cap(4), 8);
+        assert_eq!(
+            ChunkPolicy::Static { chunk_size: None, scheduling: 2.0 }.in_flight_cap(4),
+            8
+        );
+        assert_eq!(
+            ChunkPolicy::Static { chunk_size: None, scheduling: 4.0 }.in_flight_cap(4),
+            16
+        );
+        assert_eq!(
+            ChunkPolicy::Static { chunk_size: None, scheduling: f64::INFINITY }.in_flight_cap(4),
+            8
+        );
+        assert_eq!(ChunkPolicy::adaptive().in_flight_cap(4), 8);
+        assert!(
+            ChunkPolicy::Static { chunk_size: Some(1), scheduling: 0.1 }.in_flight_cap(4) >= 8
+        );
+    }
+
+    #[test]
     fn more_chunks_than_elements_clamps() {
         let chunks = make_chunks(2, 8, &ChunkPolicy::default());
         assert_eq!(chunks.len(), 2);
@@ -106,5 +257,6 @@ mod tests {
     #[test]
     fn empty_input_no_chunks() {
         assert!(make_chunks(0, 4, &ChunkPolicy::default()).is_empty());
+        assert!(make_chunks(0, 4, &ChunkPolicy::adaptive()).is_empty());
     }
 }

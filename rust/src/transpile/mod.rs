@@ -45,8 +45,13 @@ pub struct FuturizeOptions {
     pub seed: Option<SeedSetting>,
     pub chunk_size: Option<usize>,
     pub scheduling: Option<f64>,
+    /// `scheduling = "adaptive"`: guided self-scheduling (large chunks
+    /// early, small chunks late) via the streaming dispatch core.
+    pub adaptive: Option<bool>,
     pub stdout: Option<bool>,
     pub conditions: Option<bool>,
+    /// Fail fast: cancel queued chunks on the first worker error.
+    pub stop_on_error: Option<bool>,
     /// `globals = FALSE` disables automatic identification (advanced).
     pub globals: Option<bool>,
     /// Extra packages to require on workers.
@@ -68,8 +73,10 @@ impl Default for FuturizeOptions {
             seed: None,
             chunk_size: None,
             scheduling: None,
+            adaptive: None,
             stdout: None,
             conditions: None,
+            stop_on_error: None,
             globals: None,
             packages: vec![],
             eval: true,
@@ -94,14 +101,20 @@ impl FuturizeOptions {
                 }
             }
         };
-        MapOptions {
-            seed,
-            policy: ChunkPolicy {
+        let policy = if self.adaptive.unwrap_or(false) {
+            ChunkPolicy::adaptive()
+        } else {
+            ChunkPolicy::Static {
                 chunk_size: self.chunk_size,
                 scheduling: self.scheduling.unwrap_or(1.0),
-            },
+            }
+        };
+        MapOptions {
+            seed,
+            policy,
             stdout: self.stdout.unwrap_or(true),
             conditions: self.conditions.unwrap_or(true),
+            stop_on_error: self.stop_on_error.unwrap_or(false),
         }
     }
 }
@@ -169,9 +182,18 @@ fn parse_options(i: &mut Interp, args: &[Arg], env: &EnvRef) -> Result<FuturizeO
                 });
             }
             "chunk_size" => o.chunk_size = Some(v.as_usize().map_err(Signal::error)?),
-            "scheduling" => o.scheduling = Some(v.as_f64().map_err(Signal::error)?),
+            "scheduling" => match v.as_str().ok().as_deref() {
+                Some("adaptive") => o.adaptive = Some(true),
+                Some(other) => {
+                    return Err(Signal::error(format!(
+                        "futurize: scheduling must be a number or \"adaptive\", got \"{other}\""
+                    )))
+                }
+                None => o.scheduling = Some(v.as_f64().map_err(Signal::error)?),
+            },
             "stdout" => o.stdout = Some(v.as_bool().map_err(Signal::error)?),
             "conditions" => o.conditions = Some(v.as_bool().map_err(Signal::error)?),
+            "stop_on_error" => o.stop_on_error = Some(v.as_bool().map_err(Signal::error)?),
             "globals" => o.globals = Some(v.as_bool().map_err(Signal::error)?),
             "packages" => o.packages = v.as_str_vec().map_err(Signal::error)?,
             "eval" => o.eval = v.as_bool().map_err(Signal::error)?,
@@ -301,11 +323,17 @@ pub(crate) fn future_dot_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     if let Some(s) = opts.scheduling {
         args.push(Arg::named("future.scheduling", Expr::Num(s)));
     }
+    if opts.adaptive.unwrap_or(false) {
+        args.push(Arg::named("future.scheduling", Expr::Str("adaptive".into())));
+    }
     if let Some(b) = opts.stdout {
         args.push(Arg::named("future.stdout", Expr::Bool(b)));
     }
     if let Some(b) = opts.conditions {
         args.push(Arg::named("future.conditions", Expr::Bool(b)));
+    }
+    if let Some(b) = opts.stop_on_error {
+        args.push(Arg::named("future.stop.on.error", Expr::Bool(b)));
     }
     if !opts.packages.is_empty() {
         args.push(Arg::named("future.packages", packages_expr(&opts.packages)));
@@ -324,11 +352,17 @@ pub(crate) fn furrr_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     if let Some(s) = opts.scheduling {
         inner.push(Arg::named("scheduling", Expr::Num(s)));
     }
+    if opts.adaptive.unwrap_or(false) {
+        inner.push(Arg::named("scheduling", Expr::Str("adaptive".into())));
+    }
     if let Some(b) = opts.stdout {
         inner.push(Arg::named("stdout", Expr::Bool(b)));
     }
     if let Some(b) = opts.conditions {
         inner.push(Arg::named("conditions", Expr::Bool(b)));
+    }
+    if let Some(b) = opts.stop_on_error {
+        inner.push(Arg::named("stop_on_error", Expr::Bool(b)));
     }
     if !opts.packages.is_empty() {
         inner.push(Arg::named("packages", packages_expr(&opts.packages)));
@@ -351,11 +385,17 @@ pub(crate) fn dofuture_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) 
     if let Some(s) = opts.scheduling {
         inner.push(Arg::named("scheduling", Expr::Num(s)));
     }
+    if opts.adaptive.unwrap_or(false) {
+        inner.push(Arg::named("scheduling", Expr::Str("adaptive".into())));
+    }
     if let Some(b) = opts.stdout {
         inner.push(Arg::named("stdout", Expr::Bool(b)));
     }
     if let Some(b) = opts.conditions {
         inner.push(Arg::named("conditions", Expr::Bool(b)));
+    }
+    if let Some(b) = opts.stop_on_error {
+        inner.push(Arg::named("stop.on.error", Expr::Bool(b)));
     }
     if !opts.packages.is_empty() {
         inner.push(Arg::named("packages", packages_expr(&opts.packages)));
@@ -378,6 +418,12 @@ pub(crate) fn domain_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     }
     if let Some(s) = opts.scheduling {
         inner.push(Arg::named("scheduling", Expr::Num(s)));
+    }
+    if opts.adaptive.unwrap_or(false) {
+        inner.push(Arg::named("scheduling", Expr::Str("adaptive".into())));
+    }
+    if let Some(b) = opts.stop_on_error {
+        inner.push(Arg::named("stop.on.error", Expr::Bool(b)));
     }
     args.push(Arg::named(".futurize_opts", Expr::call("list", inner)));
 }
@@ -414,9 +460,14 @@ pub fn options_from_pairs(pairs: &[(String, RVal)]) -> FuturizeOptions {
                 })
             }
             "chunk_size" => o.chunk_size = v.as_usize().ok(),
-            "scheduling" => o.scheduling = v.as_f64().ok(),
+            "scheduling" => match v.as_str().ok().as_deref() {
+                Some("adaptive") => o.adaptive = Some(true),
+                Some(_) => {}
+                None => o.scheduling = v.as_f64().ok(),
+            },
             "stdout" => o.stdout = v.as_bool().ok(),
             "conditions" => o.conditions = v.as_bool().ok(),
+            "stop_on_error" => o.stop_on_error = v.as_bool().ok(),
             "packages" => o.packages = v.as_str_vec().unwrap_or_default(),
             _ => {}
         }
@@ -546,6 +597,26 @@ mod tests {
         ] {
             assert!(pkgs.contains(&expected), "missing {expected}: {pkgs:?}");
         }
+    }
+
+    #[test]
+    fn stop_on_error_and_adaptive_map_through() {
+        let got = transpiled_with(
+            "lapply(xs, fcn)",
+            "stop_on_error = TRUE, scheduling = \"adaptive\"",
+        );
+        assert!(got.contains("future.stop.on.error = TRUE"), "{got}");
+        assert!(got.contains("adaptive"), "{got}");
+        // And the round trip back into unified options.
+        let o = options_from_pairs(&[
+            ("future.stop.on.error".into(), crate::rlite::value::RVal::scalar_bool(true)),
+            ("future.scheduling".into(), crate::rlite::value::RVal::scalar_str("adaptive")),
+        ]);
+        assert_eq!(o.stop_on_error, Some(true));
+        assert_eq!(o.adaptive, Some(true));
+        let mo = o.to_map_options(false);
+        assert!(mo.stop_on_error);
+        assert_eq!(mo.policy, crate::scheduling::ChunkPolicy::adaptive());
     }
 
     #[test]

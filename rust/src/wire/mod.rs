@@ -21,6 +21,32 @@ pub use de::from_str;
 pub use ser::to_string;
 pub use value::JsonValue;
 
+/// Serialized-byte accounting, used by benches and the dispatch tests to
+/// assert the O(chunks × payload) → O(workers × payload) reduction the
+/// shared-context protocol delivers. Every [`to_string`] records its
+/// output length here; backends that re-send an already-serialized line
+/// (the multisession context broadcast) record the extra copies
+/// explicitly.
+pub mod stats {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static BYTES: AtomicU64 = AtomicU64::new(0);
+
+    /// Add `n` serialized bytes to the session-wide counter.
+    pub fn record(n: usize) {
+        BYTES.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Total serialized bytes since process start (or the last `reset`).
+    pub fn bytes() -> u64 {
+        BYTES.load(Ordering::Relaxed)
+    }
+
+    pub fn reset() {
+        BYTES.store(0, Ordering::Relaxed);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -21,6 +21,7 @@ impl serde::ser::Error for Error {
 pub fn to_string<T: serde::Serialize + ?Sized>(value: &T) -> Result<String, Error> {
     let mut s = Ser { out: String::new() };
     value.serialize(&mut s)?;
+    super::stats::record(s.out.len());
     Ok(s.out)
 }
 

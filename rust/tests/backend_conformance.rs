@@ -2,6 +2,7 @@
 //! be compliant with the Future API. One conformance suite, run against
 //! all five backends.
 
+use futurize::backend::Backend;
 use futurize::prelude::*;
 
 fn worker_env() {
@@ -150,6 +151,164 @@ fn empty_input_yields_empty_result() {
             .unwrap_or_else(|e| panic!("{plan}: {e}"));
         assert_eq!(v.as_f64().unwrap(), 0.0, "{plan}");
     });
+}
+
+// ---------------------------------------------------------------------------
+// Backend-level conformance for the streaming dispatch protocol:
+// cancellation and shared-context registration, exercised on the raw
+// Backend trait for every plan kind.
+// ---------------------------------------------------------------------------
+
+fn raw_backends() -> Vec<(String, Box<dyn Backend>)> {
+    worker_env();
+    PLANS
+        .iter()
+        .map(|plan| {
+            let name = plan.split(',').next().unwrap().trim().to_string();
+            let workers = Some(2);
+            let spec = futurize::backend::PlanSpec::from_name(
+                &name,
+                workers,
+                vec![],
+                Some(0.1),
+                Some(2.0),
+            )
+            .unwrap();
+            (name, futurize::backend::instantiate(&spec).unwrap())
+        })
+        .collect()
+}
+
+fn sleep_task(id: u64, seconds: f64) -> futurize::future_core::TaskPayload {
+    futurize::future_core::TaskPayload {
+        id,
+        kind: futurize::future_core::TaskKind::Expr {
+            expr: futurize::rlite::parse_expr(&format!("Sys.sleep({seconds})")).unwrap(),
+            globals: vec![],
+        },
+        time_scale: 1.0,
+        capture_stdout: true,
+    }
+}
+
+#[test]
+fn cancelled_tasks_never_execute() {
+    for (name, mut b) in raw_backends() {
+        let workers = b.workers();
+        // Occupy every worker with a slow task...
+        for id in 1..=workers as u64 {
+            b.submit(sleep_task(id, 0.5)).unwrap();
+        }
+        // ...give the backend time to hand them out...
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        // ...then queue quick tasks behind them and cancel the queue.
+        let queued = 6u64;
+        for id in 0..queued {
+            b.submit(sleep_task(100 + id, 0.0)).unwrap();
+        }
+        let cancelled = b.cancel_queued();
+        if name == "sequential" {
+            // Sequential runs inline at submit; nothing is ever queued.
+            assert!(cancelled.is_empty(), "{name}: {cancelled:?}");
+        } else {
+            assert!(!cancelled.is_empty(), "{name}: expected cancellable queued tasks");
+            // Only queued (never started) tasks may be cancelled.
+            for id in &cancelled {
+                assert!(*id >= 100, "{name}: cancelled a running task: {id}");
+            }
+        }
+        let expect_done = workers + queued as usize - cancelled.len();
+        let mut done = 0;
+        while done < expect_done {
+            if let futurize::backend::BackendEvent::Done(_) = b.next_event().unwrap() {
+                done += 1;
+            }
+        }
+        // A cancelled task must never execute → no further events, ever.
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        let extra = b.try_next_event().unwrap();
+        assert!(extra.is_none(), "{name}: cancelled task produced an event: {extra:?}");
+    }
+}
+
+#[test]
+fn contexts_register_resolve_and_drop() {
+    use futurize::future_core::{ContextBody, TaskContext, TaskKind, TaskPayload};
+    for (name, mut b) in raw_backends() {
+        let f_wire = {
+            let mut s = Session::new();
+            s.eval_str("__f <- function(x) x + 40").unwrap();
+            let f = futurize::rlite::env::lookup(&s.interp.global, "__f").unwrap();
+            futurize::rlite::serialize::to_wire(&f).unwrap()
+        };
+        b.register_context(std::sync::Arc::new(TaskContext {
+            id: 1,
+            body: ContextBody::Map { f: f_wire, extra: vec![] },
+            globals: vec![],
+        }))
+        .unwrap();
+        b.submit(TaskPayload {
+            id: 1,
+            kind: TaskKind::MapSlice {
+                ctx: 1,
+                items: vec![futurize::rlite::serialize::WireVal::Dbl(vec![2.0], None)],
+                seeds: None,
+            },
+            time_scale: 0.0,
+            capture_stdout: true,
+        })
+        .unwrap();
+        loop {
+            match b.next_event().unwrap() {
+                futurize::backend::BackendEvent::Done(o) => {
+                    let vals = o.values.unwrap_or_else(|e| panic!("{name}: {}", e.message));
+                    match &vals[0] {
+                        futurize::rlite::serialize::WireVal::Dbl(v, _) => {
+                            assert_eq!(v[0], 42.0, "{name}")
+                        }
+                        other => panic!("{name}: {other:?}"),
+                    }
+                    break;
+                }
+                futurize::backend::BackendEvent::Progress { .. } => {}
+            }
+        }
+        b.drop_context(1).unwrap();
+    }
+}
+
+#[test]
+fn stop_on_error_cancels_remaining_work() {
+    worker_env();
+    // 24 one-per-element chunks of 0.2 scaled-units each on 2 workers:
+    // running everything costs ≥ 2.4 time-units; failing fast on the
+    // first element must come in far below that.
+    let mut s = Session::with_config(SessionConfig { time_scale: 0.25 });
+    s.eval_str("plan(multicore, workers = 2)").unwrap();
+    let t0 = std::time::Instant::now();
+    let err = s
+        .eval_str(
+            "lapply(1:24, function(x) { if (x == 1) stop(\"fail fast\")\nSys.sleep(0.2)\nx }) \
+             |> futurize(scheduling = Inf, stop_on_error = TRUE)",
+        )
+        .unwrap_err();
+    let elapsed = t0.elapsed().as_secs_f64();
+    assert!(err.contains("fail fast"), "{err}");
+    // Full execution would need ≥ 0.6s wall (24 × 0.05s / 2 workers);
+    // fail-fast drains only the in-flight window.
+    assert!(
+        elapsed < 0.45,
+        "stop_on_error did not cancel queued chunks: took {elapsed:.2}s"
+    );
+    // Without stop_on_error the same input runs to completion and
+    // reports the same (first-in-input-order) error.
+    let err2 = s
+        .eval_str(
+            "lapply(1:24, function(x) { if (x == 1) stop(\"fail fast\")\nSys.sleep(0.01)\nx }) \
+             |> futurize(scheduling = Inf)",
+        )
+        .unwrap_err();
+    assert!(err2.contains("fail fast"), "{err2}");
 }
 
 #[test]

@@ -1,0 +1,218 @@
+//! Tests for the streaming dispatch core (`future_core::dispatch`):
+//! backpressure invariant, straggler elimination under adaptive
+//! chunking, chunking-invariance of `seed = TRUE`, and the O(workers)
+//! serialized-payload property of shared task contexts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use futurize::backend::{Backend, BackendEvent};
+use futurize::future_core::{TaskContext, TaskPayload};
+use futurize::prelude::*;
+
+fn worker_env() {
+    std::env::set_var(
+        futurize::backend::worker::WORKER_BIN_ENV,
+        env!("CARGO_BIN_EXE_futurize-rs"),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Backpressure: in-flight chunks never exceed the policy cap.
+// ---------------------------------------------------------------------------
+
+/// A delegating backend that records the maximum number of tasks
+/// submitted-but-not-yet-done at any point.
+struct ProbeBackend {
+    inner: Box<dyn Backend>,
+    in_flight: Arc<AtomicUsize>,
+    max_in_flight: Arc<AtomicUsize>,
+}
+
+impl ProbeBackend {
+    fn new(inner: Box<dyn Backend>) -> (Self, Arc<AtomicUsize>) {
+        let max = Arc::new(AtomicUsize::new(0));
+        (
+            ProbeBackend {
+                inner,
+                in_flight: Arc::new(AtomicUsize::new(0)),
+                max_in_flight: max.clone(),
+            },
+            max,
+        )
+    }
+
+    fn track(&self, ev: &BackendEvent) {
+        if let BackendEvent::Done(_) = ev {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+impl Backend for ProbeBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+
+    fn register_context(&mut self, ctx: Arc<TaskContext>) -> Result<(), String> {
+        self.inner.register_context(ctx)
+    }
+
+    fn drop_context(&mut self, ctx_id: u64) -> Result<(), String> {
+        self.inner.drop_context(ctx_id)
+    }
+
+    fn submit(&mut self, task: TaskPayload) -> Result<(), String> {
+        let now = self.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+        self.max_in_flight.fetch_max(now, Ordering::SeqCst);
+        self.inner.submit(task)
+    }
+
+    fn next_event(&mut self) -> Result<BackendEvent, String> {
+        let ev = self.inner.next_event()?;
+        self.track(&ev);
+        Ok(ev)
+    }
+
+    fn try_next_event(&mut self) -> Result<Option<BackendEvent>, String> {
+        let ev = self.inner.try_next_event()?;
+        if let Some(ev) = &ev {
+            self.track(ev);
+        }
+        Ok(ev)
+    }
+
+    fn cancel_queued(&mut self) -> Vec<u64> {
+        let ids = self.inner.cancel_queued();
+        self.in_flight.fetch_sub(ids.len(), Ordering::SeqCst);
+        ids
+    }
+}
+
+fn probe_session(workers: usize) -> (Session, Arc<AtomicUsize>) {
+    let mut s = Session::new();
+    s.eval_str(&format!("plan(multicore, workers = {workers})")).unwrap();
+    let (probe, max) =
+        ProbeBackend::new(Box::new(futurize::backend::multicore::MulticoreBackend::new(workers)));
+    s.interp.session.install_backend(Box::new(probe));
+    (s, max)
+}
+
+#[test]
+fn backpressure_bounds_in_flight_chunks() {
+    // 64 single-element chunks on 4 workers: the old batch driver put
+    // all 64 in flight at once; the streaming core must stay within the
+    // policy cap (2 × workers for per-element chunking).
+    let (mut s, max) = probe_session(4);
+    let v = s
+        .eval_str("unlist(lapply(1:64, function(x) x + 1) |> futurize(scheduling = Inf))")
+        .unwrap();
+    assert_eq!(v.len(), 64);
+    let cap = 2 * 4;
+    let seen = max.load(Ordering::SeqCst);
+    assert!(seen >= 2, "expected concurrent chunks, saw max {seen}");
+    assert!(seen <= cap, "in-flight chunks exceeded cap: {seen} > {cap}");
+}
+
+#[test]
+fn backpressure_bounds_adaptive_chunks() {
+    let (mut s, max) = probe_session(3);
+    let v = s
+        .eval_str(
+            "unlist(lapply(1:100, function(x) x * 2) |> futurize(scheduling = \"adaptive\"))",
+        )
+        .unwrap();
+    assert_eq!(v.len(), 100);
+    let seen = max.load(Ordering::SeqCst);
+    assert!(seen <= 2 * 3, "adaptive in-flight exceeded cap: {seen}");
+}
+
+// ---------------------------------------------------------------------------
+// Straggler scenario: adaptive chunking beats one-chunk-per-worker.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adaptive_beats_static_on_straggler_workload() {
+    // 32 elements, 4 workers. Element 1 costs 8 units, the rest 1 unit.
+    // Static `scheduling = 1` pins the straggler plus 7 cheap elements
+    // on one worker (15 units of wall); guided chunks put it in a
+    // 4-element first chunk (~11 units) while the other workers absorb
+    // the remainder. Use generous margins: timing test.
+    let unit = 0.03; // seconds per cost unit via time_scale
+    let run = |opts: &str| -> f64 {
+        let mut s = Session::with_config(SessionConfig { time_scale: unit });
+        s.eval_str("plan(multicore, workers = 4)").unwrap();
+        s.eval_str("f <- function(x) { Sys.sleep(if (x == 1) 8 else 1)\nx }").unwrap();
+        // Warm the pool so thread spawn cost is out of the measurement.
+        s.eval_str("invisible(lapply(1:4, function(x) x) |> futurize())").unwrap();
+        let t0 = std::time::Instant::now();
+        let v = s.eval_str(&format!("unlist(lapply(1:32, f) |> futurize({opts}))")).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(v.len(), 32);
+        dt
+    };
+    let static_t = run("scheduling = 1");
+    let adaptive_t = run("scheduling = \"adaptive\"");
+    assert!(
+        adaptive_t < static_t * 0.85,
+        "adaptive should beat static scheduling on a straggler workload: \
+         adaptive {adaptive_t:.2}s vs static {static_t:.2}s"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// seed = TRUE must be invariant to adaptive chunking.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seed_true_invariant_under_adaptive_chunking() {
+    let draw = |opts: &str, workers: usize| -> RVal {
+        let mut s = Session::new();
+        s.eval_str(&format!("plan(multicore, workers = {workers})")).unwrap();
+        s.eval_str("futureSeed(1234)").unwrap();
+        s.eval_str(&format!(
+            "unlist(lapply(1:16, function(x) rnorm(1)) |> futurize(seed = TRUE{opts}))"
+        ))
+        .unwrap()
+    };
+    let reference = draw("", 1);
+    assert_eq!(draw(", scheduling = \"adaptive\"", 2), reference);
+    assert_eq!(draw(", scheduling = \"adaptive\"", 4), reference);
+    assert_eq!(draw(", scheduling = Inf", 3), reference);
+}
+
+// ---------------------------------------------------------------------------
+// Shared contexts: serialized bytes per map call are O(workers), not
+// O(chunks).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn context_payload_serializes_per_worker_not_per_chunk() {
+    worker_env();
+    // A closure over a ~80 kB global, mapped over 48 per-element chunks
+    // on 2 process workers. The old protocol embedded the global in
+    // every chunk payload (~48 × 80 kB ≈ 3.8 MB); the shared-context
+    // protocol ships it once per worker (~2 × 80 kB).
+    let mut s = Session::new();
+    s.eval_str("plan(multisession, workers = 2)").unwrap();
+    s.eval_str("big <- 1:10000").unwrap();
+    s.eval_str("f <- function(x) x + length(big) * 0").unwrap();
+    // Warm the worker pool before measuring.
+    s.eval_str("invisible(lapply(1:2, f) |> futurize())").unwrap();
+    futurize::wire::stats::reset();
+    let v = s
+        .eval_str("unlist(lapply(1:48, f) |> futurize(scheduling = Inf))")
+        .unwrap();
+    assert_eq!(v.len(), 48);
+    let bytes = futurize::wire::stats::bytes();
+    // One context per worker plus 48 small slices plus 48 outcomes. The
+    // old O(chunks × payload) regime would be well above 3 MB here.
+    assert!(
+        bytes < 1_500_000,
+        "serialized bytes should be O(workers), got {bytes} (≈O(chunks × payload)?)"
+    );
+}

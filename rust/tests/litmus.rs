@@ -82,6 +82,27 @@ fn litmus_chunking_invariance() {
 }
 
 #[test]
+fn litmus_adaptive_dispatch_invariance() {
+    // Guided (adaptive) chunking must not change values or order.
+    let mut g = RngStream::from_seed(707);
+    for trial in 0..10 {
+        let n = 2 + g.next_below(24);
+        let xs = random_vector(&mut g, n);
+        let mut s = Session::new();
+        s.eval_str(&format!("plan(multicore, workers = 3)\nxs <- {xs}")).unwrap();
+        let a = s
+            .eval_str("unlist(lapply(xs, function(x) x * 3) |> futurize())")
+            .unwrap();
+        let b = s
+            .eval_str(
+                "unlist(lapply(xs, function(x) x * 3) |> futurize(scheduling = \"adaptive\"))",
+            )
+            .unwrap();
+        assert_eq!(a, b, "trial {trial}: n={n}");
+    }
+}
+
+#[test]
 fn litmus_rng_reverse_with_per_element_streams() {
     // With seed = TRUE the paper's exception disappears: element k gets
     // stream k regardless of processing order, so even *random* numbers
@@ -127,10 +148,17 @@ fn scheduling_policy_properties() {
     for _ in 0..500 {
         let n = g.next_below(200);
         let workers = 1 + g.next_below(16);
-        let policy = match g.next_below(3) {
-            0 => ChunkPolicy { chunk_size: Some(1 + g.next_below(20)), scheduling: 1.0 },
-            1 => ChunkPolicy { chunk_size: None, scheduling: 0.25 + g.next_f64() * 8.0 },
-            _ => ChunkPolicy { chunk_size: None, scheduling: f64::INFINITY },
+        let policy = match g.next_below(4) {
+            0 => ChunkPolicy::Static {
+                chunk_size: Some(1 + g.next_below(20)),
+                scheduling: 1.0,
+            },
+            1 => ChunkPolicy::Static {
+                chunk_size: None,
+                scheduling: 0.25 + g.next_f64() * 8.0,
+            },
+            2 => ChunkPolicy::Static { chunk_size: None, scheduling: f64::INFINITY },
+            _ => ChunkPolicy::Adaptive { min_chunk: 1 + g.next_below(5) },
         };
         let chunks = make_chunks(n, workers, &policy);
         let total: usize = chunks.iter().map(|(s, e)| e - s).sum();
