@@ -1,0 +1,182 @@
+//! Exp X5 — wire-transport cost: JSON text codec vs. compact binary
+//! codec vs. the in-process zero-copy fast path.
+//!
+//! Measures, on a bulk numeric payload (1e6 full-precision doubles;
+//! 1e4 in `BENCH_SMOKE=1` mode) and on a realistic multisession
+//! protocol stream (shared context + 48 single-element chunks + 48
+//! outcomes):
+//!
+//! - bytes per call for each codec (binary ≈ 8 B/elem on doubles vs
+//!   ~19 B/elem JSON; ≥3× total shrink on the protocol stream where
+//!   field names/envelopes dominate);
+//! - encode+decode ns per element;
+//! - the zero-copy path (`WireSlice::shared` windows over `Arc`-frozen
+//!   storage), whose per-chunk transport cost is an `Arc` bump — bytes
+//!   moved: 0.
+//!
+//! Results land in `BENCH_wire.json` for the repo's recorded perf
+//! trajectory; CI runs the smoke mode on every push.
+
+use std::sync::Arc;
+
+use futurize::bench_harness as bh;
+use futurize::future_core::{ContextBody, TaskContext, TaskKind, TaskOutcome, TaskPayload};
+use futurize::rlite::serialize::{WireSlice, WireVal};
+use futurize::wire::{bin, WireCodec};
+
+fn protocol_stream() -> (Vec<TaskPayload>, Vec<TaskOutcome>, TaskContext) {
+    let ctx = TaskContext {
+        id: 1,
+        body: ContextBody::Map {
+            f: WireVal::Builtin("identity".into()),
+            extra: vec![],
+        },
+        globals: vec![(
+            "w".to_string(),
+            WireVal::Dbl((0..64).map(|k| (k as f64).sin()).collect(), None),
+        )],
+    };
+    let mut tasks = Vec::new();
+    let mut outcomes = Vec::new();
+    for k in 0..48u64 {
+        tasks.push(TaskPayload {
+            id: k,
+            kind: TaskKind::MapSlice {
+                ctx: 1,
+                items: vec![WireVal::Dbl(vec![(k as f64).cos()], None)].into(),
+                seeds: None,
+            },
+            time_scale: 0.0,
+            capture_stdout: true,
+        });
+        outcomes.push(TaskOutcome {
+            id: k,
+            values: Ok(vec![WireVal::Dbl(vec![2.0 * (k as f64).cos()], None)]),
+            log: Default::default(),
+            worker: (k % 2) as usize,
+            started_unix: 1.769e9 + k as f64,
+            finished_unix: 1.769e9 + 0.3 + k as f64,
+        });
+    }
+    (tasks, outcomes, ctx)
+}
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+    let smoke = bh::smoke_mode();
+    let n_elems: usize = if smoke { 10_000 } else { 1_000_000 };
+    let iters = if smoke { 2 } else { 5 };
+    let mut report = bh::JsonReport::new("BENCH_wire.json");
+    report.push_num("payload_elems", n_elems as f64);
+    report.push(
+        "mode",
+        futurize::wire::JsonValue::String(if smoke { "smoke" } else { "full" }.into()),
+    );
+
+    // -----------------------------------------------------------------
+    // Arm 1: bulk numeric payload (the context-global shipping cost).
+    // -----------------------------------------------------------------
+    let payload = WireVal::Dbl((0..n_elems).map(|k| (k as f64).sin()).collect(), None);
+
+    let json_bytes = futurize::wire::to_string(&payload).unwrap().len();
+    let bin_bytes = bin::to_bytes(&payload).unwrap().len();
+    bh::table_header(
+        "bulk payload bytes (full-precision doubles)",
+        &["codec", "bytes/call", "bytes/elem"],
+    );
+    for (name, bytes) in [("json", json_bytes), ("binary", bin_bytes), ("zero-copy", 0)] {
+        bh::table_row(&[
+            name.to_string(),
+            format!("{bytes}"),
+            format!("{:.2}", bytes as f64 / n_elems as f64),
+        ]);
+    }
+    report.push_num("bulk_dbl_json_bytes", json_bytes as f64);
+    report.push_num("bulk_dbl_binary_bytes", bin_bytes as f64);
+    report.push_num("bulk_dbl_zero_copy_bytes", 0.0);
+    report.push_num("bulk_dbl_shrink_vs_json", json_bytes as f64 / bin_bytes as f64);
+
+    let st = bh::bench("wire", "json_encode_decode", 1, iters, || {
+        let s = futurize::wire::to_string(&payload).unwrap();
+        let back: WireVal = futurize::wire::from_str(&s).unwrap();
+        std::hint::black_box(back);
+    });
+    report.push_num("bulk_dbl_json_ns_per_elem", st.mean_s * 1e9 / n_elems as f64);
+
+    let st = bh::bench("wire", "binary_encode_decode", 1, iters, || {
+        let b = bin::to_bytes(&payload).unwrap();
+        let back: WireVal = bin::from_bytes(&b).unwrap();
+        std::hint::black_box(back);
+    });
+    report.push_num("bulk_dbl_binary_ns_per_elem", st.mean_s * 1e9 / n_elems as f64);
+
+    // Zero-copy handoff: what multicore/sequential do per chunk — wrap
+    // the frozen storage in shared windows, no encode, no clone.
+    let frozen = Arc::new(vec![payload.clone()]);
+    let st = bh::bench("wire", "zero_copy_handoff", 1, iters.max(3), || {
+        for _ in 0..64 {
+            let slice = WireSlice::shared(frozen.clone(), 0, 1);
+            std::hint::black_box(slice.len());
+        }
+    });
+    report.push_num("bulk_dbl_zero_copy_ns_per_elem", st.mean_s * 1e9 / 64.0 / n_elems as f64);
+
+    // -----------------------------------------------------------------
+    // Arm 2: the multisession protocol stream (context + 48 chunks +
+    // 48 outcomes) — where envelopes and field names dominate JSON.
+    // -----------------------------------------------------------------
+    let (tasks, outcomes, ctx) = protocol_stream();
+    let mut json_total = 0usize;
+    let mut bin_total = 0usize;
+    json_total += futurize::wire::to_string(&ctx).unwrap().len();
+    bin_total += bin::to_bytes(&ctx).unwrap().len();
+    for t in &tasks {
+        json_total += futurize::wire::to_string(t).unwrap().len();
+        bin_total += bin::to_bytes(t).unwrap().len();
+    }
+    for o in &outcomes {
+        json_total += futurize::wire::to_string(o).unwrap().len();
+        bin_total += bin::to_bytes(o).unwrap().len();
+    }
+    bh::table_header(
+        "multisession protocol stream (context + 48 chunks + 48 outcomes)",
+        &["codec", "bytes/map-call"],
+    );
+    bh::table_row(&["json".into(), format!("{json_total}")]);
+    bh::table_row(&["binary".into(), format!("{bin_total}")]);
+    let shrink = json_total as f64 / bin_total as f64;
+    println!("\nbinary shrink over JSON on the protocol stream: {shrink:.2}x (target ≥ 3x)");
+    report.push_num("stream_json_bytes", json_total as f64);
+    report.push_num("stream_binary_bytes", bin_total as f64);
+    report.push_num("stream_shrink_vs_json", shrink);
+
+    // -----------------------------------------------------------------
+    // Arm 3: end-to-end wire bytes per map call, per backend family.
+    // -----------------------------------------------------------------
+    let sessions: &[(&str, &str)] = &[
+        ("multicore (zero-copy)", "plan(multicore, workers = 2)"),
+        ("multisession (binary frames)", "plan(multisession, workers = 2)"),
+    ];
+    bh::table_header(
+        "physical wire bytes per map call (24 chunks over a 5k-int global)",
+        &["backend", "bytes/call"],
+    );
+    for (label, plan) in sessions {
+        let mut s = futurize::coordinator::Session::new();
+        s.eval_str(plan).unwrap();
+        s.eval_str("big <- 1:5000\nf <- function(x) x + length(big) * 0").unwrap();
+        s.eval_str("invisible(lapply(1:2, f) |> futurize())").unwrap(); // warm pool
+        futurize::wire::stats::reset();
+        s.eval_str("invisible(lapply(1:24, f) |> futurize(scheduling = Inf))").unwrap();
+        let bytes = futurize::wire::stats::bytes();
+        bh::table_row(&[label.to_string(), format!("{bytes}")]);
+        let key = if label.starts_with("multicore") {
+            "e2e_multicore_bytes"
+        } else {
+            "e2e_multisession_bytes"
+        };
+        report.push_num(key, bytes as f64);
+    }
+
+    report.write().unwrap();
+}

@@ -133,7 +133,12 @@ fn dot_mapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
     let f = as_function(&b.req(0, "FUN")?, env)?;
     let dots = match b.req(1, "dots")? {
         RVal::List(l) => l,
-        other => return Err(Signal::error(format!(".mapply: dots must be a list, got {}", other.class()))),
+        other => {
+            return Err(Signal::error(format!(
+                ".mapply: dots must be a list, got {}",
+                other.class()
+            )))
+        }
     };
     let seqs: Vec<Vec<RVal>> = dots.vals.iter().map(|v| v.iter_elements()).collect();
     let n = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
@@ -267,7 +272,9 @@ fn eapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
     let b = args.bind(&["env", "FUN"]);
     let target = match b.req(0, "env")? {
         RVal::Env(e) => e,
-        other => return Err(Signal::error(format!("eapply: not an environment: {}", other.class()))),
+        other => {
+            return Err(Signal::error(format!("eapply: not an environment: {}", other.class())))
+        }
     };
     let f = as_function(&b.req(1, "FUN")?, env)?;
     let mut bindings: Vec<(String, RVal)> = target.borrow().vars.clone().into_iter().collect();
@@ -315,7 +322,8 @@ fn filter_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
     let elems = x.iter_elements();
     let mut keep = Vec::with_capacity(elems.len());
     for e in &elems {
-        keep.push(i.call_function(&f, vec![(None, e.clone())], env)?.as_bool().map_err(Signal::error)?);
+        let v = i.call_function(&f, vec![(None, e.clone())], env)?;
+        keep.push(v.as_bool().map_err(Signal::error)?);
     }
     let kept: Vec<RVal> =
         elems.into_iter().zip(&keep).filter(|(_, &k)| k).map(|(e, _)| e).collect();

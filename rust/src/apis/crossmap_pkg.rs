@@ -64,7 +64,9 @@ fn xmap_impl(i: &mut Interp, args: Args, env: &EnvRef, want: &str, parallel: boo
     let b = args.bind(&[".l", ".f"]);
     let l = match b.req(0, ".l")? {
         RVal::List(l) => l,
-        other => return Err(Signal::error(format!("xmap: .l must be a list, got {}", other.class()))),
+        other => {
+            return Err(Signal::error(format!("xmap: .l must be a list, got {}", other.class())))
+        }
     };
     let f = as_function(&b.req(1, ".f")?, env)?;
     let seqs: Vec<Vec<RVal>> = l.vals.iter().map(|v| v.iter_elements()).collect();

@@ -78,7 +78,9 @@ fn iter_ctor(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
 }
 
 /// Expand a foreach spec into per-iteration variable bindings.
-pub(crate) fn expand_bindings(spec: &RVal) -> Result<(Vec<Vec<(String, RVal)>>, RVal, RVal), Signal> {
+pub(crate) fn expand_bindings(
+    spec: &RVal,
+) -> Result<(Vec<Vec<(String, RVal)>>, RVal, RVal), Signal> {
     let RVal::List(l) = spec else {
         return Err(Signal::error("%do%: lhs must be a foreach() or times() object"));
     };

@@ -108,7 +108,8 @@ fn fut_vapply(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
     }
     let mut pos = positional.into_iter();
     let x = x.or_else(|| pos.next()).ok_or_else(|| Signal::error("missing X"))?;
-    let f = as_function(&f.or_else(|| pos.next()).ok_or_else(|| Signal::error("missing FUN"))?, env)?;
+    let f = f.or_else(|| pos.next()).ok_or_else(|| Signal::error("missing FUN"))?;
+    let f = as_function(&f, env)?;
     let proto =
         proto.or_else(|| pos.next()).ok_or_else(|| Signal::error("missing FUN.VALUE"))?;
     for v in pos {
@@ -275,7 +276,8 @@ fn fut_apply_matrix(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
         .ok_or_else(|| Signal::error("missing MARGIN"))?
         .as_usize()
         .map_err(Signal::error)?;
-    let f = as_function(&f.or_else(|| pos.next()).ok_or_else(|| Signal::error("missing FUN"))?, env)?;
+    let f = f.or_else(|| pos.next()).ok_or_else(|| Signal::error("missing FUN"))?;
+    let f = as_function(&f, env)?;
     let cols = match &x {
         RVal::List(l) => l.vals.clone(),
         other => vec![other.clone()],
@@ -334,8 +336,11 @@ fn fut_tapply_like_by(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
         .collect::<Vec<_>>()
         .into_iter();
     let data = pos.next().ok_or_else(|| Signal::error("missing data"))?;
-    let idx =
-        pos.next().ok_or_else(|| Signal::error("missing INDICES"))?.as_str_vec().map_err(Signal::error)?;
+    let idx = pos
+        .next()
+        .ok_or_else(|| Signal::error("missing INDICES"))?
+        .as_str_vec()
+        .map_err(Signal::error)?;
     let f = as_function(&pos.next().ok_or_else(|| Signal::error("missing FUN"))?, env)?;
     let RVal::List(df) = &data else {
         return Err(Signal::error("future_by: data must be a data.frame"));
@@ -468,8 +473,9 @@ fn fut_kernapply(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
         items.push(RVal::dbl(x[s..(e + m - 1)].to_vec()));
         s = e;
     }
-    let shim = i
-        .eval(&crate::rlite::parse_expr("function(chunk, k) kernapply(chunk, k)").map_err(Signal::error)?, env)?;
+    let shim_expr = crate::rlite::parse_expr("function(chunk, k) kernapply(chunk, k)")
+        .map_err(Signal::error)?;
+    let shim = i.eval(&shim_expr, env)?;
     let results = map_elements(
         i,
         env,

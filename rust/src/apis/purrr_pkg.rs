@@ -102,7 +102,12 @@ pub(crate) fn map_variant(
             let b = args.bind(&[".l", ".f"]);
             let l = match b.req(0, ".l")? {
                 RVal::List(l) => l,
-                other => return Err(Signal::error(format!("pmap: .l must be a list, got {}", other.class()))),
+                other => {
+                    return Err(Signal::error(format!(
+                        "pmap: .l must be a list, got {}",
+                        other.class()
+                    )))
+                }
             };
             let f = as_function(&b.req(1, ".f")?, env)?;
             let seqs: Vec<Vec<RVal>> = l.vals.iter().map(|v| v.iter_elements()).collect();

@@ -19,8 +19,10 @@ use std::time::Duration;
 
 use super::{Backend, BackendEvent};
 use crate::future_core::{TaskContext, TaskPayload};
+use crate::wire::WireCodec;
 
 pub struct BatchtoolsSimBackend {
+    codec: WireCodec,
     spool: PathBuf,
     rx: Receiver<BackendEvent>,
     _tx: Sender<BackendEvent>,
@@ -32,6 +34,9 @@ pub struct BatchtoolsSimBackend {
 impl BatchtoolsSimBackend {
     pub fn new(workers: usize, poll_ms: f64) -> Result<Self, String> {
         let workers = workers.max(1);
+        // Job and context spool files carry the session codec's frames
+        // (binary by default); the scheduler decodes with the same one.
+        let codec = WireCodec::active();
         let spool = std::env::temp_dir().join(format!(
             "futurize-batchtools-{}-{}",
             std::process::id(),
@@ -82,8 +87,8 @@ impl BatchtoolsSimBackend {
                         let tx = tx.clone();
                         let spool = spool.clone();
                         running.push(std::thread::spawn(move || {
-                            let Ok(text) = std::fs::read_to_string(&claimed) else { return };
-                            let Ok(task) = crate::wire::from_str::<TaskPayload>(&text) else {
+                            let Ok(bytes) = std::fs::read(&claimed) else { return };
+                            let Ok(task) = codec.decode::<TaskPayload>(&bytes) else {
                                 return;
                             };
                             // Shared contexts live as spool files written
@@ -92,9 +97,9 @@ impl BatchtoolsSimBackend {
                             // serialization trip).
                             let ctx = task.kind.context_id().and_then(|id| {
                                 let p = spool.join("contexts").join(format!("{id}.ctx"));
-                                std::fs::read_to_string(p)
+                                std::fs::read(p)
                                     .ok()
-                                    .and_then(|t| crate::wire::from_str::<TaskContext>(&t).ok())
+                                    .and_then(|b| codec.decode::<TaskContext>(&b).ok())
                             });
                             // batchtools jobs cannot stream conditions
                             // live; progress arrives with the result, as
@@ -118,6 +123,7 @@ impl BatchtoolsSimBackend {
         };
 
         Ok(BatchtoolsSimBackend {
+            codec,
             spool,
             rx,
             _tx: tx,
@@ -143,8 +149,9 @@ impl Backend for BatchtoolsSimBackend {
         // instead of embedding it in every job file.
         let tmp = self.spool.join("contexts").join(format!("{}.tmp", ctx.id));
         let fin = self.spool.join("contexts").join(format!("{}.ctx", ctx.id));
-        let text = crate::wire::to_string(&*ctx).map_err(|e| e.to_string())?;
-        std::fs::write(&tmp, text).map_err(|e| e.to_string())?;
+        let bytes = self.codec.encode(&*ctx)?;
+        std::fs::write(&tmp, &bytes).map_err(|e| e.to_string())?;
+        crate::wire::stats::record_physical(bytes.len());
         // Atomic publish so a job thread never reads a partial file.
         std::fs::rename(&tmp, &fin).map_err(|e| e.to_string())?;
         Ok(())
@@ -162,8 +169,9 @@ impl Backend for BatchtoolsSimBackend {
         // tasks it removed.
         let tmp = self.spool.join("jobs").join(format!("{:016}.tmp", task.id));
         let fin = self.spool.join("jobs").join(format!("{:016}.job", task.id));
-        let text = crate::wire::to_string(&task).map_err(|e| e.to_string())?;
-        std::fs::write(&tmp, text).map_err(|e| e.to_string())?;
+        let bytes = self.codec.encode(&task)?;
+        std::fs::write(&tmp, &bytes).map_err(|e| e.to_string())?;
+        crate::wire::stats::record_physical(bytes.len());
         // Atomic publish so the scheduler never reads a partial file.
         std::fs::rename(&tmp, &fin).map_err(|e| e.to_string())?;
         Ok(())

@@ -2,10 +2,11 @@
 //!
 //! The paper's ad-hoc clusters run PSOCK workers on *remote* machines;
 //! we have one machine, so per the substitution rule we keep the real
-//! process workers and inject a configurable per-message network latency
-//! on both the submit and the result path. This preserves the property
-//! that matters for the evaluation: the chunking/scheduling trade-off
-//! (few large chunks amortize latency; many small chunks balance load).
+//! process workers (framed binary transport, same as multisession) and
+//! inject a configurable per-message network latency on both the submit
+//! and the result path. This preserves the property that matters for
+//! the evaluation: the chunking/scheduling trade-off (few large chunks
+//! amortize latency; many small chunks balance load).
 
 use std::sync::Arc;
 use std::time::Duration;

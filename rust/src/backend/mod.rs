@@ -20,11 +20,14 @@
 //!
 //! 1. [`Backend::register_context`] ships the map call's shared
 //!    [`TaskContext`] (function, extra args, globals) **once**. Process
-//!    backends forward it to each persistent worker as a
-//!    `ParentMsg::RegisterContext` message; the worker caches it by id.
-//!    In-process backends just store the `Arc`. Serialized volume per
-//!    map call is therefore O(workers × payload), not O(chunks ×
-//!    payload).
+//!    backends encode it with the session's wire codec (compact binary
+//!    by default; see [`crate::wire::codec`]) and forward the frame to
+//!    each persistent worker as a `ParentMsg::RegisterContext` message;
+//!    the worker caches it by id. In-process backends just store the
+//!    `Arc` — nothing is encoded at all on the zero-copy fast path.
+//!    Serialized volume per map call is therefore O(workers × payload),
+//!    not O(chunks × payload), and exactly zero for
+//!    `sequential`/`multicore`.
 //! 2. [`Backend::submit`] receives chunk payloads *incrementally* —
 //!    only ~`scheduling × workers` are in flight at once — whose
 //!    `TaskKind::MapSlice`/`ForeachSlice` reference the context by id.
@@ -145,7 +148,8 @@ impl PlanSpec {
         Ok(PlanSpec {
             workers: workers.unwrap_or(default_workers).max(1),
             worker_names,
-            latency_ms: latency_ms.unwrap_or(if kind == BackendKind::ClusterSim { 1.0 } else { 0.0 }),
+            latency_ms: latency_ms
+                .unwrap_or(if kind == BackendKind::ClusterSim { 1.0 } else { 0.0 }),
             poll_ms: poll_ms.unwrap_or(if kind == BackendKind::BatchtoolsSim { 20.0 } else { 0.0 }),
             display: name.to_string(),
             kind,

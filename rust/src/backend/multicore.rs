@@ -1,12 +1,16 @@
 //! The `plan(multicore)` backend: a native thread pool (the fork analog —
 //! shared-memory workers on the local machine).
 //!
-//! Tasks still cross the boundary in wire form (closures captured by
-//! value), preserving the future framework's by-value globals semantics:
-//! a forked R worker sees a *copy-on-write snapshot*, not live state.
-//! Shared [`TaskContext`]s are the one exception the protocol makes
-//! deliberate: the context is an immutable `Arc` every worker thread
-//! reads — registered once, never serialized.
+//! Tasks cross the boundary in wire form (closures captured by value),
+//! preserving the future framework's by-value globals semantics: a
+//! forked R worker sees a *copy-on-write snapshot*, not live state.
+//! Nothing is ever *encoded* though — this is the zero-copy fast path:
+//! shared [`TaskContext`]s are immutable `Arc`s every worker thread
+//! reads (registered once, never serialized), and chunk payloads carry
+//! `WireSlice::Shared` windows into the dispatch core's `Arc`-frozen
+//! element storage, so submitting a chunk moves two indices and an
+//! `Arc` bump instead of cloning or serializing elements. The wire
+//! byte counters stay at exactly zero on this backend.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -217,7 +221,7 @@ mod tests {
             id: 1,
             kind: TaskKind::MapSlice {
                 ctx: 11,
-                items: vec![WireVal::Dbl(vec![3.0], None)],
+                items: vec![WireVal::Dbl(vec![3.0], None)].into(),
                 seeds: None,
             },
             time_scale: 0.0,

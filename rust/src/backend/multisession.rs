@@ -1,24 +1,32 @@
 //! The `plan(multisession)` backend: a pool of persistent worker
-//! *subprocesses* speaking the JSON stdio protocol — the PSOCK-cluster
+//! *subprocesses* speaking the framed stdio protocol — the PSOCK-cluster
 //! analog, with true process isolation. Also backs the paper's
 //! `future.callr::callr` and `future.mirai::mirai_multisession` plans.
 //!
-//! Shared task contexts are serialized **once** and the same line is
+//! Transport: length-prefixed frames whose payload is the backend's
+//! [`WireCodec`] — compact binary by default, JSON when debugging (see
+//! [`crate::wire::codec`]). The codec is captured once at construction
+//! and stamped into each worker's environment, so parent and workers
+//! always agree.
+//!
+//! Shared task contexts are encoded **once** and the same frame is
 //! written to every worker's stdin (`RegisterContext`), so the per-map
-//! serialized volume for the function/extras/globals is O(workers), not
-//! O(chunks). Worker processes cache contexts by id (see
-//! [`super::worker`]).
+//! logical volume for the function/extras/globals is O(1) and the
+//! physical volume O(workers), not O(chunks). Worker processes cache
+//! contexts by id (see [`super::worker`]).
 
 use std::collections::VecDeque;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufReader, Write};
 use std::process::{Child, ChildStdin, Command, Stdio};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use super::worker::{ParentMsg, WorkerMsg, WORKER_SENTINEL};
+use super::worker::{ParentMsg, ParentMsgRef, WorkerMsg, WORKER_SENTINEL};
 use super::{Backend, BackendEvent};
 use crate::future_core::{TaskContext, TaskPayload};
+use crate::wire::codec::{read_frame, write_frame, WIRE_CODEC_ENV};
+use crate::wire::WireCodec;
 
 struct WorkerProc {
     child: Child,
@@ -28,6 +36,7 @@ struct WorkerProc {
 }
 
 pub struct MultisessionBackend {
+    codec: WireCodec,
     workers: Vec<WorkerProc>,
     /// (worker_idx, msg) events from reader threads.
     rx: Receiver<(usize, WorkerMsg)>,
@@ -42,6 +51,12 @@ impl MultisessionBackend {
     }
 
     pub fn with_name(n: usize, name: &'static str) -> Result<Self, String> {
+        Self::with_codec(n, name, WireCodec::active())
+    }
+
+    /// Construct with an explicit codec — used by tests and benches that
+    /// compare transports without touching the process environment.
+    pub fn with_codec(n: usize, name: &'static str, codec: WireCodec) -> Result<Self, String> {
         let n = n.max(1);
         let bin = super::worker::worker_binary()?;
         let (tx, rx) = channel::<(usize, WorkerMsg)>();
@@ -50,6 +65,7 @@ impl MultisessionBackend {
             let mut child = Command::new(&bin)
                 .arg(WORKER_SENTINEL)
                 .env("FUTURIZE_WORKER_IDX", idx.to_string())
+                .env(WIRE_CODEC_ENV, codec.env_value())
                 .stdin(Stdio::piped())
                 .stdout(Stdio::piped())
                 .stderr(Stdio::inherit())
@@ -59,16 +75,17 @@ impl MultisessionBackend {
             let stdout = child.stdout.take().ok_or("no stdout")?;
             let tx = tx.clone();
             let reader = std::thread::spawn(move || {
-                let br = BufReader::new(stdout);
-                for line in br.lines() {
-                    let line = match line {
-                        Ok(l) => l,
-                        Err(_) => break,
+                let mut br = BufReader::new(stdout);
+                loop {
+                    let frame = match read_frame(&mut br) {
+                        Ok(Some(f)) => f,
+                        Ok(None) => break,
+                        Err(e) => {
+                            eprintln!("futurize: worker stream broke: {e}");
+                            break;
+                        }
                     };
-                    if line.trim().is_empty() {
-                        continue;
-                    }
-                    match crate::wire::from_str::<WorkerMsg>(&line) {
+                    match codec.decode::<WorkerMsg>(&frame) {
                         Ok(msg) => {
                             if tx.send((idx, msg)).is_err() {
                                 break;
@@ -80,18 +97,16 @@ impl MultisessionBackend {
             });
             workers.push(WorkerProc { child, stdin, busy: false, _reader: reader });
         }
-        Ok(MultisessionBackend { workers, rx, _tx: tx, queue: VecDeque::new(), name })
+        Ok(MultisessionBackend { codec, workers, rx, _tx: tx, queue: VecDeque::new(), name })
     }
 
-    /// Write an already-serialized protocol line to every worker.
-    fn broadcast(&mut self, line: &str) -> Result<(), String> {
-        for (k, w) in self.workers.iter_mut().enumerate() {
-            // The line was serialized once; every extra worker copy still
-            // crosses the process boundary, so account for it.
-            if k > 0 {
-                crate::wire::stats::record(line.len());
-            }
-            writeln!(w.stdin, "{line}").map_err(|e| format!("worker write: {e}"))?;
+    /// Write an already-encoded protocol frame to every worker. The
+    /// message was encoded (and its logical bytes recorded) once; each
+    /// worker copy still crosses the process boundary, so `write_frame`
+    /// accounts one physical copy per worker.
+    fn broadcast(&mut self, payload: &[u8]) -> Result<(), String> {
+        for w in self.workers.iter_mut() {
+            write_frame(&mut w.stdin, payload).map_err(|e| format!("worker write: {e}"))?;
             w.stdin.flush().map_err(|e| format!("worker flush: {e}"))?;
         }
         Ok(())
@@ -100,10 +115,12 @@ impl MultisessionBackend {
     fn dispatch(&mut self) -> Result<(), String> {
         while let Some(idle) = self.workers.iter().position(|w| !w.busy) {
             let Some(task) = self.queue.pop_front() else { break };
-            let w = &mut self.workers[idle];
-            let msg = crate::wire::to_string(&ParentMsg::Task(task))
+            let payload = self
+                .codec
+                .encode(&ParentMsg::Task(task))
                 .map_err(|e| format!("serialize task: {e}"))?;
-            writeln!(w.stdin, "{msg}").map_err(|e| format!("worker write: {e}"))?;
+            let w = &mut self.workers[idle];
+            write_frame(&mut w.stdin, &payload).map_err(|e| format!("worker write: {e}"))?;
             w.stdin.flush().map_err(|e| format!("worker flush: {e}"))?;
             w.busy = true;
         }
@@ -134,15 +151,20 @@ impl Backend for MultisessionBackend {
     }
 
     fn register_context(&mut self, ctx: Arc<TaskContext>) -> Result<(), String> {
-        let msg = crate::wire::to_string(&ParentMsg::RegisterContext((*ctx).clone()))
+        // Borrowing mirror: encode straight out of the Arc, no deep clone.
+        let payload = self
+            .codec
+            .encode(&ParentMsgRef::RegisterContext(&ctx))
             .map_err(|e| format!("serialize context: {e}"))?;
-        self.broadcast(&msg)
+        self.broadcast(&payload)
     }
 
     fn drop_context(&mut self, ctx_id: u64) -> Result<(), String> {
-        let msg = crate::wire::to_string(&ParentMsg::DropContext(ctx_id))
+        let payload = self
+            .codec
+            .encode(&ParentMsg::DropContext(ctx_id))
             .map_err(|e| format!("serialize context drop: {e}"))?;
-        self.broadcast(&msg)
+        self.broadcast(&payload)
     }
 
     fn submit(&mut self, task: TaskPayload) -> Result<(), String> {
@@ -171,9 +193,11 @@ impl Backend for MultisessionBackend {
 
 impl Drop for MultisessionBackend {
     fn drop(&mut self) {
-        for w in &mut self.workers {
-            let _ = writeln!(w.stdin, "{}", crate::wire::to_string(&ParentMsg::Shutdown).unwrap());
-            let _ = w.stdin.flush();
+        if let Ok(payload) = self.codec.encode(&ParentMsg::Shutdown) {
+            for w in &mut self.workers {
+                let _ = write_frame(&mut w.stdin, &payload);
+                let _ = w.stdin.flush();
+            }
         }
         for w in &mut self.workers {
             let _ = w.child.wait();

@@ -1,7 +1,9 @@
 //! The `plan(sequential)` backend: tasks run inline at submit time, in a
 //! fresh interpreter (same isolation semantics as the parallel backends,
 //! so code validated here behaves identically under `multisession` —
-//! the property future.tests checks).
+//! the property future.tests checks). Like `multicore`, it rides the
+//! zero-copy fast path: contexts are shared `Arc`s and chunk payloads
+//! are `WireSlice` windows, so no wire bytes are ever encoded.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;

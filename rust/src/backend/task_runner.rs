@@ -7,11 +7,14 @@
 //! `progress_hook` the moment they are signaled (paper §4.10).
 //!
 //! Slice tasks ([`TaskKind::MapSlice`] / [`TaskKind::ForeachSlice`])
-//! carry only their elements; the function/extras/globals they execute
-//! against live in a [`TaskContext`] the backend registered beforehand
-//! and resolves for [`run_task`]. A slice arriving for an unknown
-//! context is a protocol violation and yields an error outcome rather
-//! than a panic.
+//! carry only their elements — as `WireSlice` windows that read
+//! straight out of the dispatch core's `Arc`-shared storage on
+//! in-process backends (the zero-copy fast path) and arrive as owned
+//! decoded vectors on process workers. The function/extras/globals they
+//! execute against live in a [`TaskContext`] the backend registered
+//! beforehand and resolves for [`run_task`]. A slice arriving for an
+//! unknown context is a protocol violation and yields an error outcome
+//! rather than a panic.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -212,7 +215,9 @@ fn signal_to_cond(sig: Signal) -> RCondition {
     match sig {
         Signal::Error(c) => c,
         Signal::Unwind { cond, .. } => cond,
-        other => RCondition::error_cond(format!("non-error control signal escaped task: {other:?}")),
+        other => {
+            RCondition::error_cond(format!("non-error control signal escaped task: {other:?}"))
+        }
     }
 }
 
@@ -312,7 +317,8 @@ mod tests {
             id: 2,
             kind: TaskKind::MapSlice {
                 ctx: 7,
-                items: vec![WireVal::Dbl(vec![1.0], None), WireVal::Dbl(vec![2.0], None)],
+                items: vec![WireVal::Dbl(vec![1.0], None), WireVal::Dbl(vec![2.0], None)]
+                    .into(),
                 seeds: None,
             },
             time_scale: 0.0,
@@ -331,7 +337,7 @@ mod tests {
     fn map_slice_without_context_is_an_error_outcome() {
         let t = TaskPayload {
             id: 3,
-            kind: TaskKind::MapSlice { ctx: 99, items: vec![], seeds: None },
+            kind: TaskKind::MapSlice { ctx: 99, items: vec![].into(), seeds: None },
             time_scale: 0.0,
             capture_stdout: true,
         };

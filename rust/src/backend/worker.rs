@@ -2,9 +2,14 @@
 //!
 //! A worker is this same binary re-executed with the sentinel first
 //! argument [`WORKER_SENTINEL`]. Parent → worker messages are
-//! newline-delimited JSON [`ParentMsg`] on stdin; worker → parent
-//! messages are [`WorkerMsg`] on stdout. Task stdout is captured by the
-//! task runner, so the protocol channel stays clean.
+//! length-prefixed [`ParentMsg`] frames on stdin; worker → parent
+//! messages are [`WorkerMsg`] frames on stdout (see
+//! [`crate::wire::codec`] for the frame layout). Frame payloads use the
+//! compact binary codec by default; `FUTURIZE_WIRE_CODEC=json` switches
+//! both sides to human-readable JSON for debugging — the parent stamps
+//! its codec choice into the spawned worker's environment, so the two
+//! can never disagree. Task stdout is captured by the task runner, so
+//! the protocol channel stays clean.
 //!
 //! Shared task contexts: `RegisterContext` ships a map call's
 //! [`TaskContext`] once per worker; the worker caches it by id and
@@ -13,12 +18,14 @@
 //! ordered, so a context always arrives before any task referencing it.
 
 use std::collections::HashMap;
-use std::io::{BufRead, Write};
+use std::io::Write;
 
 use serde_derive::{Deserialize, Serialize};
 
 use crate::future_core::{TaskContext, TaskOutcome, TaskPayload};
 use crate::rlite::conditions::RCondition;
+use crate::wire::codec::{read_frame, write_frame};
+use crate::wire::WireCodec;
 
 /// argv[1] sentinel that switches a process into worker mode.
 pub const WORKER_SENTINEL: &str = "__futurize_worker__";
@@ -35,6 +42,23 @@ pub enum ParentMsg {
     RegisterContext(TaskContext),
     /// Evict a cached context (its map call has fully resolved).
     DropContext(u64),
+    Shutdown,
+}
+
+/// Encode-only borrowing mirror of [`ParentMsg`]: lets the parent
+/// serialize a context straight out of its `Arc` without deep-cloning
+/// the whole function/globals payload first. Variant names and order
+/// MUST match [`ParentMsg`] exactly — both codecs tag enums by variant
+/// (index or name), so the two encode byte-identically (pinned by the
+/// `ref_mirror_encodes_identically` test).
+#[derive(Serialize)]
+pub enum ParentMsgRef<'a> {
+    #[allow(dead_code)]
+    Task(&'a TaskPayload),
+    RegisterContext(&'a TaskContext),
+    #[allow(dead_code)]
+    DropContext(u64),
+    #[allow(dead_code)]
     Shutdown,
 }
 
@@ -58,19 +82,23 @@ pub fn maybe_worker() {
 
 /// The worker main loop.
 pub fn worker_main() {
+    // The parent stamps its codec into our environment at spawn time.
+    let codec = WireCodec::active();
     let stdin = std::io::stdin();
+    let mut input = stdin.lock();
     let stdout = std::io::stdout();
     let mut out = stdout.lock();
     let mut contexts: HashMap<u64, TaskContext> = HashMap::new();
-    for line in stdin.lock().lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
+    loop {
+        let frame = match read_frame(&mut input) {
+            Ok(Some(f)) => f,
+            Ok(None) => break,
+            Err(e) => {
+                eprintln!("futurize worker: protocol read failed: {e}");
+                break;
+            }
         };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let msg: ParentMsg = match crate::wire::from_str(&line) {
+        let msg: ParentMsg = match codec.decode(&frame) {
             Ok(m) => m,
             Err(e) => {
                 eprintln!("futurize worker: bad message: {e}");
@@ -102,13 +130,16 @@ pub fn worker_main() {
                         Some(&mut |task_id, cond| {
                             let mut o = out_cell.borrow_mut();
                             let msg = WorkerMsg::Progress { task_id, cond };
-                            let _ = writeln!(o, "{}", crate::wire::to_string(&msg).unwrap());
-                            let _ = o.flush();
+                            if let Ok(bytes) = codec.encode(&msg) {
+                                let _ = write_frame(&mut **o, &bytes);
+                                let _ = o.flush();
+                            }
                         }),
                     )
                 };
                 let msg = WorkerMsg::Done(outcome);
-                if writeln!(out, "{}", crate::wire::to_string(&msg).unwrap()).is_err() {
+                let Ok(bytes) = codec.encode(&msg) else { break };
+                if write_frame(&mut out, &bytes).is_err() {
                     break;
                 }
                 let _ = out.flush();
@@ -139,11 +170,13 @@ mod tests {
             time_scale: 1.0,
             capture_stdout: true,
         };
-        let s = crate::wire::to_string(&ParentMsg::Task(task)).unwrap();
-        let back: ParentMsg = crate::wire::from_str(&s).unwrap();
-        match back {
-            ParentMsg::Task(t) => assert_eq!(t.id, 3),
-            other => panic!("{other:?}"),
+        for codec in [WireCodec::Binary, WireCodec::Json] {
+            let bytes = codec.encode(&ParentMsg::Task(task.clone())).unwrap();
+            let back: ParentMsg = codec.decode(&bytes).unwrap();
+            match back {
+                ParentMsg::Task(t) => assert_eq!(t.id, 3, "{codec:?}"),
+                other => panic!("{codec:?}: {other:?}"),
+            }
         }
     }
 
@@ -158,18 +191,64 @@ mod tests {
                 crate::rlite::serialize::WireVal::Dbl(vec![1.5], None),
             )],
         };
-        let s = crate::wire::to_string(&ParentMsg::RegisterContext(ctx)).unwrap();
-        match crate::wire::from_str::<ParentMsg>(&s).unwrap() {
-            ParentMsg::RegisterContext(c) => {
-                assert_eq!(c.id, 12);
-                assert_eq!(c.globals.len(), 1);
+        for codec in [WireCodec::Binary, WireCodec::Json] {
+            let bytes = codec.encode(&ParentMsg::RegisterContext(ctx.clone())).unwrap();
+            match codec.decode::<ParentMsg>(&bytes).unwrap() {
+                ParentMsg::RegisterContext(c) => {
+                    assert_eq!(c.id, 12, "{codec:?}");
+                    assert_eq!(c.globals.len(), 1, "{codec:?}");
+                }
+                other => panic!("{codec:?}: {other:?}"),
             }
-            other => panic!("{other:?}"),
+            let bytes = codec.encode(&ParentMsg::DropContext(12)).unwrap();
+            match codec.decode::<ParentMsg>(&bytes).unwrap() {
+                ParentMsg::DropContext(id) => assert_eq!(id, 12, "{codec:?}"),
+                other => panic!("{codec:?}: {other:?}"),
+            }
         }
-        let s = crate::wire::to_string(&ParentMsg::DropContext(12)).unwrap();
-        match crate::wire::from_str::<ParentMsg>(&s).unwrap() {
-            ParentMsg::DropContext(id) => assert_eq!(id, 12),
-            other => panic!("{other:?}"),
+    }
+
+    #[test]
+    fn ref_mirror_encodes_identically() {
+        use crate::future_core::{ContextBody, TaskContext};
+        let ctx = TaskContext {
+            id: 7,
+            body: ContextBody::Foreach { body: parse_expr("x * 2").unwrap() },
+            globals: vec![(
+                "g".into(),
+                crate::rlite::serialize::WireVal::Dbl(vec![1.0, 2.0], None),
+            )],
+        };
+        for codec in [WireCodec::Binary, WireCodec::Json] {
+            let owned = codec.encode(&ParentMsg::RegisterContext(ctx.clone())).unwrap();
+            let borrowed = codec.encode(&ParentMsgRef::RegisterContext(&ctx)).unwrap();
+            assert_eq!(owned, borrowed, "{codec:?}: mirror drifted from ParentMsg");
         }
+    }
+
+    #[test]
+    fn binary_protocol_is_compact() {
+        // The per-chunk hot path: a one-element MapSlice task message.
+        // Binary must stay well under half the JSON footprint (the
+        // BENCH_wire bench records the exact ratio).
+        let task = TaskPayload {
+            id: 12,
+            kind: TaskKind::MapSlice {
+                ctx: 3,
+                items: vec![crate::rlite::serialize::WireVal::Dbl(vec![5.0], None)].into(),
+                seeds: None,
+            },
+            time_scale: 0.0,
+            capture_stdout: true,
+        };
+        let msg = ParentMsg::Task(task);
+        let bin = WireCodec::Binary.encode(&msg).unwrap();
+        let json = WireCodec::Json.encode(&msg).unwrap();
+        assert!(
+            bin.len() * 3 <= json.len(),
+            "binary ({}) should be ≤ 1/3 of JSON ({}) on protocol messages",
+            bin.len(),
+            json.len()
+        );
     }
 }

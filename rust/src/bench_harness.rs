@@ -81,6 +81,43 @@ pub fn table_row(cells: &[String]) {
     println!("{}", cells.join("\t"));
 }
 
+/// Is the bench running in CI smoke mode (`BENCH_SMOKE=1`)? Smoke runs
+/// shrink payloads/iterations so the perf jobs finish in seconds while
+/// still exercising every measured code path.
+pub fn smoke_mode() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// A machine-readable benchmark report, accumulated as JSON and written
+/// to disk so the repo's perf trajectory has recorded datapoints (e.g.
+/// `BENCH_wire.json`).
+pub struct JsonReport {
+    path: String,
+    entries: Vec<(String, crate::wire::JsonValue)>,
+}
+
+impl JsonReport {
+    pub fn new(path: &str) -> JsonReport {
+        JsonReport { path: path.to_string(), entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, key: &str, value: crate::wire::JsonValue) {
+        self.entries.push((key.to_string(), value));
+    }
+
+    pub fn push_num(&mut self, key: &str, value: f64) {
+        self.push(key, crate::wire::JsonValue::Number(value));
+    }
+
+    /// Write the report as plain JSON; returns the rendered text.
+    pub fn write(&self) -> std::io::Result<String> {
+        let text = crate::wire::JsonValue::Object(self.entries.clone()).render();
+        std::fs::write(&self.path, &text)?;
+        println!("wrote {} ({} entries)", self.path, self.entries.len());
+        Ok(text)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -35,8 +35,12 @@ fn parse_boot_args(i: &mut Interp, args: &Args, env: &EnvRef) -> Result<BootArgs
     let data = b.req(0, "data")?;
     let statistic = super::super::apis::as_function(&b.req(1, "statistic")?, env)?;
     let r = b.req(2, "R")?.as_usize().map_err(Signal::error)?;
-    let stype =
-        b.opt(3).map(|v| v.as_str()).transpose().map_err(Signal::error)?.unwrap_or_else(|| "i".into());
+    let stype = b
+        .opt(3)
+        .map(|v| v.as_str())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or_else(|| "i".into());
     // The package's own sub-API (what futurize hides): parallel only
     // happens when parallel != "no" AND ncpus > 1 — the footgun the
     // paper's §4.6 footnote documents.
@@ -185,7 +189,8 @@ fn boot_ci_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
     let RVal::List(l) = &obj else {
         return Err(Signal::error("boot.ci: not a boot object"));
     };
-    let mut t = l.get("t").ok_or_else(|| Signal::error("no t"))?.as_dbl_vec().map_err(Signal::error)?;
+    let t = l.get("t").ok_or_else(|| Signal::error("no t"))?;
+    let mut t = t.as_dbl_vec().map_err(Signal::error)?;
     t.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
     let alpha = (1.0 - conf) / 2.0;
     let lo = t[((t.len() as f64 - 1.0) * alpha) as usize];

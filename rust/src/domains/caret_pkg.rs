@@ -30,8 +30,12 @@ pub fn register(r: &mut Reg) {
 
 fn train_control_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
     let b = args.bind(&["method", "number"]);
-    let method =
-        b.opt(0).map(|v| v.as_str()).transpose().map_err(Signal::error)?.unwrap_or_else(|| "cv".into());
+    let method = b
+        .opt(0)
+        .map(|v| v.as_str())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or_else(|| "cv".into());
     let number = b.opt(1).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(10);
     let mut l = RList::named(
         vec![RVal::scalar_str(method), RVal::scalar_int(number as i64)],

@@ -24,8 +24,15 @@ pub fn register(r: &mut Reg) {
 }
 
 /// The optimizer roster allFit() tries (lme4's actual set).
-pub const OPTIMIZERS: &[&str] =
-    &["bobyqa", "Nelder_Mead", "nlminbwrap", "nmkbw", "optimx.L-BFGS-B", "nloptwrap.NLOPT_LN_NELDERMEAD", "nloptwrap.NLOPT_LN_BOBYQA"];
+pub const OPTIMIZERS: &[&str] = &[
+    "bobyqa",
+    "Nelder_Mead",
+    "nlminbwrap",
+    "nmkbw",
+    "optimx.L-BFGS-B",
+    "nloptwrap.NLOPT_LN_NELDERMEAD",
+    "nloptwrap.NLOPT_LN_BOBYQA",
+];
 
 /// Profiled-likelihood LMM fit: y = Xβ + b_g + ε, b ~ N(0, σ²θ).
 /// Golden-section search over the variance ratio θ; GLS per θ.

@@ -34,18 +34,23 @@ use super::{ContextBody, TaskContext, TaskKind, TaskOutcome, TaskPayload, TraceE
 use crate::backend::BackendEvent;
 use crate::rlite::conditions::RCondition;
 use crate::rlite::eval::{Interp, Signal};
-use crate::rlite::serialize::{from_wire, WireVal};
+use crate::rlite::serialize::{from_wire, WireSlice, WireVal};
 use crate::rlite::value::RVal;
 use crate::rng::RngState;
 use crate::scheduling::make_chunks;
 
-/// The per-element inputs of one map call, sliced into chunk payloads on
-/// demand (at submit time, not upfront).
+/// The per-element inputs of one map call, frozen once behind an `Arc`
+/// and sliced into chunk payloads on demand (at submit time, not
+/// upfront). Each chunk gets a [`WireSlice::shared`] window into the
+/// same storage — the zero-copy fast path: submitting a chunk to an
+/// in-process backend moves an `Arc` bump and two indices, never the
+/// elements themselves. Process backends serialize the window contents
+/// at write time, so nothing changes for them semantically.
 pub enum ElementSource {
     /// Items for `ContextBody::Map`.
-    Items(Vec<WireVal>),
+    Items(Arc<Vec<WireVal>>),
     /// Per-iteration bindings for `ContextBody::Foreach`.
-    Bindings(Vec<Vec<(String, WireVal)>>),
+    Bindings(Arc<Vec<Vec<(String, WireVal)>>>),
 }
 
 impl ElementSource {
@@ -69,12 +74,16 @@ impl ElementSource {
     ) -> TaskKind {
         let seeds = seeds.as_ref().map(|s| s[start..end].to_vec());
         match self {
-            ElementSource::Items(items) => {
-                TaskKind::MapSlice { ctx, items: items[start..end].to_vec(), seeds }
-            }
-            ElementSource::Bindings(bindings) => {
-                TaskKind::ForeachSlice { ctx, bindings: bindings[start..end].to_vec(), seeds }
-            }
+            ElementSource::Items(items) => TaskKind::MapSlice {
+                ctx,
+                items: WireSlice::shared(items.clone(), start, end),
+                seeds,
+            },
+            ElementSource::Bindings(bindings) => TaskKind::ForeachSlice {
+                ctx,
+                bindings: WireSlice::shared(bindings.clone(), start, end),
+                seeds,
+            },
         }
     }
 }
@@ -442,7 +451,7 @@ pub fn run_map(
     });
     let workers = i.session.workers();
     let time_scale = i.config.time_scale;
-    FutureSet::new(ctx, ElementSource::Items(items), seeds, workers, time_scale, opts)
+    FutureSet::new(ctx, ElementSource::Items(Arc::new(items)), seeds, workers, time_scale, opts)
         .run(i, opts)
 }
 
@@ -462,6 +471,13 @@ pub fn run_foreach(
     });
     let workers = i.session.workers();
     let time_scale = i.config.time_scale;
-    FutureSet::new(ctx, ElementSource::Bindings(bindings), seeds, workers, time_scale, opts)
-        .run(i, opts)
+    FutureSet::new(
+        ctx,
+        ElementSource::Bindings(Arc::new(bindings)),
+        seeds,
+        workers,
+        time_scale,
+        opts,
+    )
+    .run(i, opts)
 }

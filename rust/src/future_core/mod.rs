@@ -22,11 +22,17 @@ use crate::rlite::builtins::{Args, Reg};
 use crate::rlite::conditions::{CaptureLog, RCondition};
 use crate::rlite::env::EnvRef;
 use crate::rlite::eval::{EvalResult, Interp, Signal};
-use crate::rlite::serialize::WireVal;
+use crate::rlite::serialize::{WireSlice, WireVal};
 use crate::rlite::value::{RList, RVal};
 use crate::rng::RngState;
 
 /// What a worker should execute.
+///
+/// Slice payloads are [`WireSlice`]s: the dispatch core hands every
+/// chunk a zero-copy window into the map call's `Arc`-frozen element
+/// storage. In-process backends consume the window directly (no
+/// cloning, no encoding); process backends serialize it as a plain
+/// element sequence.
 #[derive(Clone, Debug, Serialize, Deserialize)]
 pub enum TaskKind {
     /// A single expression with exported globals (low-level `future()`,
@@ -37,12 +43,12 @@ pub enum TaskKind {
     /// ctx.extra...)` per element. `seeds` carries one pre-allocated
     /// L'Ecuyer stream per element (`seed = TRUE`), making results
     /// invariant to chunking and order.
-    MapSlice { ctx: u64, items: Vec<WireVal>, seeds: Option<Vec<RngState>> },
+    MapSlice { ctx: u64, items: WireSlice<WireVal>, seeds: Option<Vec<RngState>> },
     /// A slice of foreach iterations against a registered context: per
     /// element, bind the iteration variables then evaluate `ctx.body`.
     ForeachSlice {
         ctx: u64,
-        bindings: Vec<Vec<(String, WireVal)>>,
+        bindings: WireSlice<Vec<(String, WireVal)>>,
         seeds: Option<Vec<RngState>>,
     },
 }

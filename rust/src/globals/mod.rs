@@ -152,7 +152,10 @@ pub fn export_size_bytes(export: &GlobalsExport) -> usize {
     export
         .values
         .iter()
-        .map(|(n, v)| n.len() + crate::rlite::serialize::to_wire(v).map(|w| w.approx_size()).unwrap_or(0))
+        .map(|(n, v)| {
+            n.len()
+                + crate::rlite::serialize::to_wire(v).map(|w| w.approx_size()).unwrap_or(0)
+        })
         .sum()
 }
 

@@ -52,7 +52,10 @@ fn progress_step_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
     let cond = RCondition::custom(
         "progression",
         msg,
-        Some(crate::wire::JsonValue::obj(vec![("amount", crate::wire::JsonValue::num(1.0)), ("total", crate::wire::JsonValue::num(total as f64))])),
+        Some(crate::wire::JsonValue::obj(vec![
+            ("amount", crate::wire::JsonValue::num(1.0)),
+            ("total", crate::wire::JsonValue::num(total as f64)),
+        ])),
     );
     i.signal_condition(cond)?;
     Ok(RVal::Null)

@@ -454,28 +454,57 @@ fn as_list_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
 }
 
 fn numeric_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
-    let n = args.bind(&["length"]).opt(0).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(0);
+    let n = args
+        .bind(&["length"])
+        .opt(0)
+        .map(|v| v.as_usize())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or(0);
     Ok(RVal::dbl(vec![0.0; n]))
 }
 
 fn integer_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
-    let n = args.bind(&["length"]).opt(0).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(0);
+    let n = args
+        .bind(&["length"])
+        .opt(0)
+        .map(|v| v.as_usize())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or(0);
     Ok(RVal::int(vec![0; n]))
 }
 
 fn character_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
-    let n = args.bind(&["length"]).opt(0).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(0);
+    let n = args
+        .bind(&["length"])
+        .opt(0)
+        .map(|v| v.as_usize())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or(0);
     Ok(RVal::chr(vec![String::new(); n]))
 }
 
 fn logical_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
-    let n = args.bind(&["length"]).opt(0).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(0);
+    let n = args
+        .bind(&["length"])
+        .opt(0)
+        .map(|v| v.as_usize())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or(0);
     Ok(RVal::lgl(vec![false; n]))
 }
 
 fn vector_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
     let b = args.bind(&["mode", "length"]);
-    let mode = b.opt(0).map(|v| v.as_str()).transpose().map_err(Signal::error)?.unwrap_or_else(|| "logical".into());
+    let mode = b
+        .opt(0)
+        .map(|v| v.as_str())
+        .transpose()
+        .map_err(Signal::error)?
+        .unwrap_or_else(|| "logical".into());
     let n = b.opt(1).map(|v| v.as_usize()).transpose().map_err(Signal::error)?.unwrap_or(0);
     Ok(match mode.as_str() {
         "numeric" | "double" => RVal::dbl(vec![0.0; n]),

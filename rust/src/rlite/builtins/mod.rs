@@ -101,7 +101,9 @@ impl Bound {
         self.vals
             .get(i)
             .and_then(|v| v.clone())
-            .ok_or_else(|| Signal::error(format!("argument \"{what}\" is missing, with no default")))
+            .ok_or_else(|| {
+                Signal::error(format!("argument \"{what}\" is missing, with no default"))
+            })
     }
     pub fn opt(&self, i: usize) -> Option<RVal> {
         self.vals.get(i).and_then(|v| v.clone())

@@ -69,7 +69,11 @@ impl RCondition {
         }
     }
 
-    pub fn custom(class: &str, msg: impl Into<String>, data: Option<crate::wire::JsonValue>) -> Self {
+    pub fn custom(
+        class: &str,
+        msg: impl Into<String>,
+        data: Option<crate::wire::JsonValue>,
+    ) -> Self {
         RCondition {
             severity: Severity::Custom,
             message: msg.into(),
@@ -170,7 +174,9 @@ mod tests {
 
     #[test]
     fn serde_roundtrip() {
-        let c = RCondition::custom("progress", "step", Some(crate::wire::JsonValue::obj(vec![("amount", crate::wire::JsonValue::num(1.0))])));
+        let data =
+            crate::wire::JsonValue::obj(vec![("amount", crate::wire::JsonValue::num(1.0))]);
+        let c = RCondition::custom("progress", "step", Some(data));
         let s = crate::wire::to_string(&c).unwrap();
         let back: RCondition = crate::wire::from_str(&s).unwrap();
         assert_eq!(c, back);

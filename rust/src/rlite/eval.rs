@@ -435,7 +435,9 @@ impl Interp {
                 match &o {
                     RVal::List(l) => Ok(l.get(name).cloned().unwrap_or(RVal::Null)),
                     RVal::Env(e) => Ok(env::lookup(e, name).unwrap_or(RVal::Null)),
-                    other => Err(Signal::error(format!("$ operator invalid for {}", other.class()))),
+                    other => {
+                        Err(Signal::error(format!("$ operator invalid for {}", other.class())))
+                    }
                 }
             }
             Expr::Call { func, args } => self.eval_call(expr, func, args, env),
@@ -549,7 +551,9 @@ impl Interp {
                     ))),
                 }
             }
-            other => Err(Signal::error(format!("attempt to apply non-function ({})", other.class()))),
+            other => {
+                Err(Signal::error(format!("attempt to apply non-function ({})", other.class())))
+            }
         }
     }
 
@@ -613,7 +617,11 @@ impl Interp {
             env::define(
                 &fenv,
                 "...",
-                RVal::List(RList { vals, names: if named { Some(names) } else { None }, class: None }),
+                RVal::List(RList {
+                    vals,
+                    names: if named { Some(names) } else { None },
+                    class: None,
+                }),
             );
         }
         // Defaults for still-unbound params (evaluated in the new frame).

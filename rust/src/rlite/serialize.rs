@@ -8,6 +8,8 @@
 //! values (recursively). This is exactly what `future()` does when it
 //! exports globals to a PSOCK worker.
 
+use std::sync::Arc;
+
 use serde_derive::{Deserialize, Serialize};
 
 use super::ast::{Expr, Param};
@@ -15,6 +17,7 @@ use super::conditions::RCondition;
 use super::env::{self, Env, EnvRef};
 use super::value::{RClosure, RList, RVal, RVec};
 use crate::globals;
+use crate::wire::bin::{uvarint_len, zigzag};
 
 /// Serializable mirror of [`RVal`].
 #[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
@@ -30,22 +33,152 @@ pub enum WireVal {
     Cond(RCondition),
 }
 
+/// Binary-codec size of an encoded string: varint length + UTF-8 bytes.
+fn str_size(s: &str) -> usize {
+    uvarint_len(s.len() as u64) + s.len()
+}
+
+/// Binary-codec size of an `Option<Vec<String>>` names attribute.
+fn names_size(names: &Option<Vec<String>>) -> usize {
+    match names {
+        None => 1,
+        Some(v) => {
+            1 + uvarint_len(v.len() as u64) + v.iter().map(|s| str_size(s)).sum::<usize>()
+        }
+    }
+}
+
 impl WireVal {
-    /// Rough serialized footprint (bytes), for export-size accounting.
+    /// Serialized footprint in bytes under the default binary codec
+    /// ([`crate::wire::bin`]), used for export-size accounting and the
+    /// dispatch core's byte budgeting. Exact for data variants (the
+    /// formulas mirror the codec: variant tag + varint length prefix +
+    /// little-endian/varint elements + names); `Closure` bodies and
+    /// `Cond` payloads are estimated (an exact answer would require
+    /// encoding the AST). A regression test in `tests/wire_codec.rs`
+    /// pins this against real encoded lengths.
     pub fn approx_size(&self) -> usize {
         match self {
-            WireVal::Null => 4,
-            WireVal::Lgl(v, _) => v.len() + 8,
-            WireVal::Int(v, _) => v.len() * 8 + 8,
-            WireVal::Dbl(v, _) => v.len() * 8 + 8,
-            WireVal::Chr(v, _) => v.iter().map(|s| s.len() + 8).sum::<usize>() + 8,
-            WireVal::List(v, _, _) => v.iter().map(|x| x.approx_size()).sum::<usize>() + 16,
-            WireVal::Closure { captured, .. } => {
-                256 + captured.iter().map(|(n, v)| n.len() + v.approx_size()).sum::<usize>()
+            WireVal::Null => 1,
+            WireVal::Lgl(v, n) => 1 + uvarint_len(v.len() as u64) + v.len() + names_size(n),
+            WireVal::Int(v, n) => {
+                1 + uvarint_len(v.len() as u64)
+                    + v.iter().map(|&x| uvarint_len(zigzag(x))).sum::<usize>()
+                    + names_size(n)
             }
-            WireVal::Builtin(n) => n.len() + 8,
-            WireVal::Cond(c) => c.message.len() + 64,
+            WireVal::Dbl(v, n) => 1 + uvarint_len(v.len() as u64) + v.len() * 8 + names_size(n),
+            WireVal::Chr(v, n) => {
+                1 + uvarint_len(v.len() as u64)
+                    + v.iter().map(|s| str_size(s)).sum::<usize>()
+                    + names_size(n)
+            }
+            WireVal::List(v, n, class) => {
+                1 + uvarint_len(v.len() as u64)
+                    + v.iter().map(|x| x.approx_size()).sum::<usize>()
+                    + names_size(n)
+                    + match class {
+                        None => 1,
+                        Some(c) => 1 + str_size(c),
+                    }
+            }
+            WireVal::Closure { params, body, captured } => {
+                // The body estimate leans on deparse: rlite source text
+                // and the binary AST encoding are within a small factor
+                // of each other.
+                1 + uvarint_len(params.len() as u64)
+                    + params.iter().map(|p| 8 + p.name.len()).sum::<usize>()
+                    + super::deparse::deparse(body).len()
+                    + uvarint_len(captured.len() as u64)
+                    + captured
+                        .iter()
+                        .map(|(n, v)| str_size(n) + v.approx_size())
+                        .sum::<usize>()
+            }
+            WireVal::Builtin(n) => 1 + str_size(n),
+            WireVal::Cond(c) => {
+                16 + c.message.len() + c.classes.iter().map(|s| str_size(s)).sum::<usize>()
+            }
         }
+    }
+}
+
+/// A possibly-shared view of the per-chunk element payload inside
+/// [`TaskKind`](crate::future_core::TaskKind) slice tasks — the
+/// zero-copy fast path for in-process backends.
+///
+/// The dispatch core freezes a map call's elements once
+/// (`Arc<Vec<T>>`) and hands every chunk a `Shared` window into that
+/// storage: an `Arc` bump plus two indices, no per-chunk cloning or
+/// encoding. This preserves the future framework's by-value snapshot
+/// semantics because the shared storage is already an immutable
+/// [`WireVal`] snapshot of the caller's values.
+///
+/// On the wire the two forms are indistinguishable: `Shared` serializes
+/// as the plain element sequence its window covers, and deserializing
+/// always produces `Owned` (the receiving process has no one to share
+/// with).
+#[derive(Clone, Debug)]
+pub enum WireSlice<T> {
+    Owned(Vec<T>),
+    Shared { source: Arc<Vec<T>>, start: usize, end: usize },
+}
+
+impl<T> WireSlice<T> {
+    /// A zero-copy window `source[start..end]`.
+    pub fn shared(source: Arc<Vec<T>>, start: usize, end: usize) -> Self {
+        debug_assert!(start <= end && end <= source.len());
+        WireSlice::Shared { source, start, end }
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            WireSlice::Owned(v) => v,
+            WireSlice::Shared { source, start, end } => &source[*start..*end],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, T> {
+        self.as_slice().iter()
+    }
+}
+
+impl<T> From<Vec<T>> for WireSlice<T> {
+    fn from(v: Vec<T>) -> Self {
+        WireSlice::Owned(v)
+    }
+}
+
+impl<T: PartialEq> PartialEq for WireSlice<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<'a, T> IntoIterator for &'a WireSlice<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+impl<T: serde::Serialize> serde::Serialize for WireSlice<T> {
+    fn serialize<S: serde::Serializer>(&self, s: S) -> Result<S::Ok, S::Error> {
+        self.as_slice().serialize(s)
+    }
+}
+
+impl<'de, T: serde::Deserialize<'de>> serde::Deserialize<'de> for WireSlice<T> {
+    fn deserialize<D: serde::Deserializer<'de>>(d: D) -> Result<Self, D::Error> {
+        Ok(WireSlice::Owned(Vec::<T>::deserialize(d)?))
     }
 }
 
@@ -165,6 +298,27 @@ mod tests {
     fn env_is_rejected() {
         let env = Env::new_ref();
         assert!(to_wire(&RVal::Env(env)).is_err());
+    }
+
+    #[test]
+    fn wire_slice_shared_serializes_like_owned() {
+        let source = Arc::new(vec![
+            WireVal::Dbl(vec![1.0], None),
+            WireVal::Dbl(vec![2.0], None),
+            WireVal::Dbl(vec![3.0], None),
+        ]);
+        let shared = WireSlice::shared(source.clone(), 1, 3);
+        let owned: WireSlice<WireVal> = WireSlice::Owned(source[1..3].to_vec());
+        assert_eq!(shared, owned);
+        assert_eq!(
+            crate::wire::bin::to_bytes(&shared).unwrap(),
+            crate::wire::bin::to_bytes(&owned).unwrap(),
+            "shared and owned windows must be wire-identical"
+        );
+        let bytes = crate::wire::bin::to_bytes(&shared).unwrap();
+        let back: WireSlice<WireVal> = crate::wire::bin::from_bytes(&bytes).unwrap();
+        assert_eq!(back, shared);
+        assert!(matches!(back, WireSlice::Owned(_)), "decode always owns");
     }
 
     #[test]

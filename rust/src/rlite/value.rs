@@ -322,9 +322,9 @@ impl RVal {
     /// matrix-result rule for `sapply`/`replicate`, flattened — our matrix
     /// model is a flat column-major vector).
     pub fn simplify(list: Vec<RVal>, names: Option<Vec<String>>) -> RVal {
-        let all_scalar_num = list
-            .iter()
-            .all(|v| matches!(v, RVal::Dbl(x) if x.len() == 1) || matches!(v, RVal::Int(x) if x.len() == 1));
+        let all_scalar_num = list.iter().all(|v| {
+            matches!(v, RVal::Dbl(x) if x.len() == 1) || matches!(v, RVal::Int(x) if x.len() == 1)
+        });
         if !list.is_empty() && all_scalar_num {
             let vals: Vec<f64> = list.iter().map(|v| v.as_f64().unwrap()).collect();
             return RVal::Dbl(RVec { vals, names });

@@ -1,0 +1,723 @@
+//! `wire::bin` — the compact binary wire codec.
+//!
+//! A non-self-describing (bincode-style) serde codec used as the default
+//! transport encoding for the worker protocol. Layout:
+//!
+//! - **bool** — one byte (`0`/`1`);
+//! - **unsigned ints** (ids, lengths, enum variant tags, chars) —
+//!   ULEB128 varints;
+//! - **signed ints** — zigzag-mapped ULEB128 varints (small magnitudes,
+//!   the common case for R integer vectors, stay 1–2 bytes);
+//! - **f64/f32** — raw little-endian bits (8/4 bytes), so a
+//!   `Vec<f64>` is a length prefix followed by a flat little-endian
+//!   array and NaN/±Inf round-trip bit-exactly (no `"__f64_nan__"`
+//!   tagging as in the JSON codec);
+//! - **strings/bytes** — varint length + raw UTF-8/bytes;
+//! - **Option** — one tag byte, then the value if present;
+//! - **sequences/maps** — varint element count + elements;
+//! - **tuples/structs** — fields in declaration order, no tags, no
+//!   names (the count is statically known on both sides);
+//! - **enums** — varint variant index + payload (externally tagged by
+//!   *index*, compatible with the same derive-generated impls the JSON
+//!   codec uses — both sides of the pipe are always the same build).
+//!
+//! Because the format is not self-describing, `deserialize_any` is
+//! unsupported; every protocol type (including [`crate::wire::JsonValue`])
+//! therefore uses derived, hint-driven impls.
+
+use serde::de::{DeserializeSeed, EnumAccess, IntoDeserializer, MapAccess, SeqAccess, Visitor};
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "binary wire codec error: {}", self.0)
+    }
+}
+impl std::error::Error for Error {}
+impl serde::ser::Error for Error {
+    fn custom<T: std::fmt::Display>(msg: T) -> Self {
+        Error(msg.to_string())
+    }
+}
+impl serde::de::Error for Error {
+    fn custom<T: std::fmt::Display>(msg: T) -> Self {
+        Error(msg.to_string())
+    }
+}
+
+/// Serialize any `Serialize` value to the compact binary form.
+pub fn to_bytes<T: serde::Serialize + ?Sized>(value: &T) -> Result<Vec<u8>, Error> {
+    let mut s = Ser { out: Vec::new() };
+    value.serialize(&mut s)?;
+    Ok(s.out)
+}
+
+/// Deserialize a value from the compact binary form. The whole input
+/// must be consumed (a length-prefixed frame holds exactly one value).
+pub fn from_bytes<'a, T: serde::Deserialize<'a>>(bytes: &'a [u8]) -> Result<T, Error> {
+    let mut de = De { input: bytes, pos: 0 };
+    let v = T::deserialize(&mut de)?;
+    if de.pos != de.input.len() {
+        return Err(Error(format!(
+            "trailing bytes: consumed {} of {}",
+            de.pos,
+            de.input.len()
+        )));
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Varint helpers (shared with `WireVal::approx_size`, which mirrors this
+// codec's actual sizes).
+// ---------------------------------------------------------------------------
+
+pub(crate) fn put_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Encoded size of a ULEB128 varint, in bytes.
+pub(crate) fn uvarint_len(v: u64) -> usize {
+    if v == 0 {
+        1
+    } else {
+        (64 - v.leading_zeros() as usize).div_ceil(7)
+    }
+}
+
+/// Zigzag-map a signed integer onto the unsigned varint space.
+pub(crate) fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+pub(crate) fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+// ---------------------------------------------------------------------------
+// Serializer
+// ---------------------------------------------------------------------------
+
+struct Ser {
+    out: Vec<u8>,
+}
+
+pub struct Compound<'a> {
+    ser: &'a mut Ser,
+}
+
+impl<'a> serde::Serializer for &'a mut Ser {
+    type Ok = ();
+    type Error = Error;
+    type SerializeSeq = Compound<'a>;
+    type SerializeTuple = Compound<'a>;
+    type SerializeTupleStruct = Compound<'a>;
+    type SerializeTupleVariant = Compound<'a>;
+    type SerializeMap = Compound<'a>;
+    type SerializeStruct = Compound<'a>;
+    type SerializeStructVariant = Compound<'a>;
+
+    fn is_human_readable(&self) -> bool {
+        false
+    }
+
+    fn serialize_bool(self, v: bool) -> Result<(), Error> {
+        self.out.push(v as u8);
+        Ok(())
+    }
+    fn serialize_i8(self, v: i8) -> Result<(), Error> {
+        self.serialize_i64(v as i64)
+    }
+    fn serialize_i16(self, v: i16) -> Result<(), Error> {
+        self.serialize_i64(v as i64)
+    }
+    fn serialize_i32(self, v: i32) -> Result<(), Error> {
+        self.serialize_i64(v as i64)
+    }
+    fn serialize_i64(self, v: i64) -> Result<(), Error> {
+        put_uvarint(&mut self.out, zigzag(v));
+        Ok(())
+    }
+    fn serialize_u8(self, v: u8) -> Result<(), Error> {
+        self.serialize_u64(v as u64)
+    }
+    fn serialize_u16(self, v: u16) -> Result<(), Error> {
+        self.serialize_u64(v as u64)
+    }
+    fn serialize_u32(self, v: u32) -> Result<(), Error> {
+        self.serialize_u64(v as u64)
+    }
+    fn serialize_u64(self, v: u64) -> Result<(), Error> {
+        put_uvarint(&mut self.out, v);
+        Ok(())
+    }
+    fn serialize_f32(self, v: f32) -> Result<(), Error> {
+        self.out.extend_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+    fn serialize_f64(self, v: f64) -> Result<(), Error> {
+        self.out.extend_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+    fn serialize_char(self, v: char) -> Result<(), Error> {
+        put_uvarint(&mut self.out, v as u64);
+        Ok(())
+    }
+    fn serialize_str(self, v: &str) -> Result<(), Error> {
+        put_uvarint(&mut self.out, v.len() as u64);
+        self.out.extend_from_slice(v.as_bytes());
+        Ok(())
+    }
+    fn serialize_bytes(self, v: &[u8]) -> Result<(), Error> {
+        put_uvarint(&mut self.out, v.len() as u64);
+        self.out.extend_from_slice(v);
+        Ok(())
+    }
+    fn serialize_none(self) -> Result<(), Error> {
+        self.out.push(0);
+        Ok(())
+    }
+    fn serialize_some<T: serde::Serialize + ?Sized>(self, value: &T) -> Result<(), Error> {
+        self.out.push(1);
+        value.serialize(self)
+    }
+    fn serialize_unit(self) -> Result<(), Error> {
+        Ok(())
+    }
+    fn serialize_unit_struct(self, _name: &'static str) -> Result<(), Error> {
+        Ok(())
+    }
+    fn serialize_unit_variant(
+        self,
+        _name: &'static str,
+        idx: u32,
+        _variant: &'static str,
+    ) -> Result<(), Error> {
+        put_uvarint(&mut self.out, idx as u64);
+        Ok(())
+    }
+    fn serialize_newtype_struct<T: serde::Serialize + ?Sized>(
+        self,
+        _name: &'static str,
+        value: &T,
+    ) -> Result<(), Error> {
+        value.serialize(self)
+    }
+    fn serialize_newtype_variant<T: serde::Serialize + ?Sized>(
+        self,
+        _name: &'static str,
+        idx: u32,
+        _variant: &'static str,
+        value: &T,
+    ) -> Result<(), Error> {
+        put_uvarint(&mut self.out, idx as u64);
+        value.serialize(self)
+    }
+    fn serialize_seq(self, len: Option<usize>) -> Result<Compound<'a>, Error> {
+        let len = len.ok_or_else(|| {
+            Error("sequences of unknown length are unsupported".into())
+        })?;
+        put_uvarint(&mut self.out, len as u64);
+        Ok(Compound { ser: self })
+    }
+    fn serialize_tuple(self, _len: usize) -> Result<Compound<'a>, Error> {
+        Ok(Compound { ser: self })
+    }
+    fn serialize_tuple_struct(
+        self,
+        _name: &'static str,
+        _len: usize,
+    ) -> Result<Compound<'a>, Error> {
+        Ok(Compound { ser: self })
+    }
+    fn serialize_tuple_variant(
+        self,
+        _name: &'static str,
+        idx: u32,
+        _variant: &'static str,
+        _len: usize,
+    ) -> Result<Compound<'a>, Error> {
+        put_uvarint(&mut self.out, idx as u64);
+        Ok(Compound { ser: self })
+    }
+    fn serialize_map(self, len: Option<usize>) -> Result<Compound<'a>, Error> {
+        let len =
+            len.ok_or_else(|| Error("maps of unknown length are unsupported".into()))?;
+        put_uvarint(&mut self.out, len as u64);
+        Ok(Compound { ser: self })
+    }
+    fn serialize_struct(self, _name: &'static str, _len: usize) -> Result<Compound<'a>, Error> {
+        Ok(Compound { ser: self })
+    }
+    fn serialize_struct_variant(
+        self,
+        _name: &'static str,
+        idx: u32,
+        _variant: &'static str,
+        _len: usize,
+    ) -> Result<Compound<'a>, Error> {
+        put_uvarint(&mut self.out, idx as u64);
+        Ok(Compound { ser: self })
+    }
+}
+
+impl serde::ser::SerializeSeq for Compound<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_element<T: serde::Serialize + ?Sized>(&mut self, value: &T) -> Result<(), Error> {
+        value.serialize(&mut *self.ser)
+    }
+    fn end(self) -> Result<(), Error> {
+        Ok(())
+    }
+}
+
+impl serde::ser::SerializeTuple for Compound<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_element<T: serde::Serialize + ?Sized>(&mut self, value: &T) -> Result<(), Error> {
+        value.serialize(&mut *self.ser)
+    }
+    fn end(self) -> Result<(), Error> {
+        Ok(())
+    }
+}
+
+impl serde::ser::SerializeTupleStruct for Compound<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_field<T: serde::Serialize + ?Sized>(&mut self, value: &T) -> Result<(), Error> {
+        value.serialize(&mut *self.ser)
+    }
+    fn end(self) -> Result<(), Error> {
+        Ok(())
+    }
+}
+
+impl serde::ser::SerializeTupleVariant for Compound<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_field<T: serde::Serialize + ?Sized>(&mut self, value: &T) -> Result<(), Error> {
+        value.serialize(&mut *self.ser)
+    }
+    fn end(self) -> Result<(), Error> {
+        Ok(())
+    }
+}
+
+impl serde::ser::SerializeMap for Compound<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_key<T: serde::Serialize + ?Sized>(&mut self, key: &T) -> Result<(), Error> {
+        key.serialize(&mut *self.ser)
+    }
+    fn serialize_value<T: serde::Serialize + ?Sized>(&mut self, value: &T) -> Result<(), Error> {
+        value.serialize(&mut *self.ser)
+    }
+    fn end(self) -> Result<(), Error> {
+        Ok(())
+    }
+}
+
+impl serde::ser::SerializeStruct for Compound<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_field<T: serde::Serialize + ?Sized>(
+        &mut self,
+        _key: &'static str,
+        value: &T,
+    ) -> Result<(), Error> {
+        value.serialize(&mut *self.ser)
+    }
+    fn end(self) -> Result<(), Error> {
+        Ok(())
+    }
+}
+
+impl serde::ser::SerializeStructVariant for Compound<'_> {
+    type Ok = ();
+    type Error = Error;
+    fn serialize_field<T: serde::Serialize + ?Sized>(
+        &mut self,
+        _key: &'static str,
+        value: &T,
+    ) -> Result<(), Error> {
+        value.serialize(&mut *self.ser)
+    }
+    fn end(self) -> Result<(), Error> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deserializer
+// ---------------------------------------------------------------------------
+
+struct De<'de> {
+    input: &'de [u8],
+    pos: usize,
+}
+
+impl<'de> De<'de> {
+    fn take(&mut self, n: usize) -> Result<&'de [u8], Error> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.input.len())
+            .ok_or_else(|| {
+                Error(format!("unexpected end of input (want {n} bytes at {})", self.pos))
+            })?;
+        let s = &self.input[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn byte(&mut self) -> Result<u8, Error> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn uvarint(&mut self) -> Result<u64, Error> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.byte()?;
+            // The 10th byte holds only bit 64 of the value: any higher
+            // payload bit or a continuation bit is an overlong/overflowing
+            // encoding and must error rather than silently lose bits.
+            if shift >= 64 || (shift == 63 && b & 0xfe != 0) {
+                return Err(Error("varint overflows u64".into()));
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    fn ivarint(&mut self) -> Result<i64, Error> {
+        Ok(unzigzag(self.uvarint()?))
+    }
+
+    fn str_slice(&mut self) -> Result<&'de str, Error> {
+        let n = self.uvarint()? as usize;
+        let bytes = self.take(n)?;
+        std::str::from_utf8(bytes).map_err(|e| Error(format!("invalid UTF-8 string: {e}")))
+    }
+}
+
+impl<'de> serde::Deserializer<'de> for &mut De<'de> {
+    type Error = Error;
+
+    fn is_human_readable(&self) -> bool {
+        false
+    }
+
+    fn deserialize_any<V: Visitor<'de>>(self, _visitor: V) -> Result<V::Value, Error> {
+        Err(Error("the binary codec is not self-describing (deserialize_any)".into()))
+    }
+
+    fn deserialize_ignored_any<V: Visitor<'de>>(self, _visitor: V) -> Result<V::Value, Error> {
+        Err(Error("the binary codec cannot skip unknown fields".into()))
+    }
+
+    fn deserialize_bool<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        match self.byte()? {
+            0 => visitor.visit_bool(false),
+            1 => visitor.visit_bool(true),
+            other => Err(Error(format!("invalid bool byte {other}"))),
+        }
+    }
+
+    fn deserialize_i8<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let v = self.ivarint()?;
+        visitor.visit_i64(v)
+    }
+    fn deserialize_i16<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let v = self.ivarint()?;
+        visitor.visit_i64(v)
+    }
+    fn deserialize_i32<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let v = self.ivarint()?;
+        visitor.visit_i64(v)
+    }
+    fn deserialize_i64<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let v = self.ivarint()?;
+        visitor.visit_i64(v)
+    }
+    fn deserialize_u8<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let v = self.uvarint()?;
+        visitor.visit_u64(v)
+    }
+    fn deserialize_u16<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let v = self.uvarint()?;
+        visitor.visit_u64(v)
+    }
+    fn deserialize_u32<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let v = self.uvarint()?;
+        visitor.visit_u64(v)
+    }
+    fn deserialize_u64<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let v = self.uvarint()?;
+        visitor.visit_u64(v)
+    }
+    fn deserialize_f32<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let b = self.take(4)?;
+        visitor.visit_f32(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn deserialize_f64<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let b = self.take(8)?;
+        visitor.visit_f64(f64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+    fn deserialize_char<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let v = self.uvarint()?;
+        let c = u32::try_from(v)
+            .ok()
+            .and_then(char::from_u32)
+            .ok_or_else(|| Error(format!("invalid char scalar {v}")))?;
+        visitor.visit_char(c)
+    }
+    fn deserialize_str<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let s = self.str_slice()?;
+        visitor.visit_borrowed_str(s)
+    }
+    fn deserialize_string<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        self.deserialize_str(visitor)
+    }
+    fn deserialize_bytes<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let n = self.uvarint()? as usize;
+        let bytes = self.take(n)?;
+        visitor.visit_borrowed_bytes(bytes)
+    }
+    fn deserialize_byte_buf<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        self.deserialize_bytes(visitor)
+    }
+    fn deserialize_option<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        match self.byte()? {
+            0 => visitor.visit_none(),
+            1 => visitor.visit_some(self),
+            other => Err(Error(format!("invalid option tag {other}"))),
+        }
+    }
+    fn deserialize_unit<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        visitor.visit_unit()
+    }
+    fn deserialize_unit_struct<V: Visitor<'de>>(
+        self,
+        _name: &'static str,
+        visitor: V,
+    ) -> Result<V::Value, Error> {
+        visitor.visit_unit()
+    }
+    fn deserialize_newtype_struct<V: Visitor<'de>>(
+        self,
+        _name: &'static str,
+        visitor: V,
+    ) -> Result<V::Value, Error> {
+        visitor.visit_newtype_struct(self)
+    }
+    fn deserialize_seq<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let len = self.uvarint()? as usize;
+        visitor.visit_seq(Elems { de: self, remaining: len })
+    }
+    fn deserialize_tuple<V: Visitor<'de>>(self, len: usize, visitor: V) -> Result<V::Value, Error> {
+        visitor.visit_seq(Elems { de: self, remaining: len })
+    }
+    fn deserialize_tuple_struct<V: Visitor<'de>>(
+        self,
+        _name: &'static str,
+        len: usize,
+        visitor: V,
+    ) -> Result<V::Value, Error> {
+        visitor.visit_seq(Elems { de: self, remaining: len })
+    }
+    fn deserialize_map<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let len = self.uvarint()? as usize;
+        visitor.visit_map(Pairs { de: self, remaining: len })
+    }
+    fn deserialize_struct<V: Visitor<'de>>(
+        self,
+        _name: &'static str,
+        fields: &'static [&'static str],
+        visitor: V,
+    ) -> Result<V::Value, Error> {
+        visitor.visit_seq(Elems { de: self, remaining: fields.len() })
+    }
+    fn deserialize_enum<V: Visitor<'de>>(
+        self,
+        _name: &'static str,
+        _variants: &'static [&'static str],
+        visitor: V,
+    ) -> Result<V::Value, Error> {
+        visitor.visit_enum(Variant { de: self })
+    }
+    fn deserialize_identifier<V: Visitor<'de>>(self, visitor: V) -> Result<V::Value, Error> {
+        let v = self.uvarint()?;
+        visitor.visit_u64(v)
+    }
+}
+
+struct Elems<'a, 'de> {
+    de: &'a mut De<'de>,
+    remaining: usize,
+}
+
+impl<'de> SeqAccess<'de> for Elems<'_, 'de> {
+    type Error = Error;
+    fn next_element_seed<T: DeserializeSeed<'de>>(
+        &mut self,
+        seed: T,
+    ) -> Result<Option<T::Value>, Error> {
+        if self.remaining == 0 {
+            return Ok(None);
+        }
+        self.remaining -= 1;
+        seed.deserialize(&mut *self.de).map(Some)
+    }
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.remaining)
+    }
+}
+
+struct Pairs<'a, 'de> {
+    de: &'a mut De<'de>,
+    remaining: usize,
+}
+
+impl<'de> MapAccess<'de> for Pairs<'_, 'de> {
+    type Error = Error;
+    fn next_key_seed<K: DeserializeSeed<'de>>(
+        &mut self,
+        seed: K,
+    ) -> Result<Option<K::Value>, Error> {
+        if self.remaining == 0 {
+            return Ok(None);
+        }
+        self.remaining -= 1;
+        seed.deserialize(&mut *self.de).map(Some)
+    }
+    fn next_value_seed<V: DeserializeSeed<'de>>(&mut self, seed: V) -> Result<V::Value, Error> {
+        seed.deserialize(&mut *self.de)
+    }
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.remaining)
+    }
+}
+
+struct Variant<'a, 'de> {
+    de: &'a mut De<'de>,
+}
+
+impl<'de> EnumAccess<'de> for Variant<'_, 'de> {
+    type Error = Error;
+    type Variant = Self;
+    fn variant_seed<V: DeserializeSeed<'de>>(self, seed: V) -> Result<(V::Value, Self), Error> {
+        let idx = self.de.uvarint()?;
+        let idx = u32::try_from(idx)
+            .map_err(|_| Error(format!("enum variant tag {idx} out of range")))?;
+        let val = seed.deserialize(idx.into_deserializer())?;
+        Ok((val, self))
+    }
+}
+
+impl<'de> serde::de::VariantAccess<'de> for Variant<'_, 'de> {
+    type Error = Error;
+    fn unit_variant(self) -> Result<(), Error> {
+        Ok(())
+    }
+    fn newtype_variant_seed<T: DeserializeSeed<'de>>(self, seed: T) -> Result<T::Value, Error> {
+        seed.deserialize(&mut *self.de)
+    }
+    fn tuple_variant<V: Visitor<'de>>(self, len: usize, visitor: V) -> Result<V::Value, Error> {
+        visitor.visit_seq(Elems { de: self.de, remaining: len })
+    }
+    fn struct_variant<V: Visitor<'de>>(
+        self,
+        fields: &'static [&'static str],
+        visitor: V,
+    ) -> Result<V::Value, Error> {
+        visitor.visit_seq(Elems { de: self.de, remaining: fields.len() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_edge_cases() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            put_uvarint(&mut buf, v);
+            assert_eq!(buf.len(), uvarint_len(v), "len mismatch for {v}");
+            let mut de = De { input: &buf, pos: 0 };
+            assert_eq!(de.uvarint().unwrap(), v);
+            assert_eq!(de.pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [0i64, 1, -1, 63, -64, 1 << 40, i64::MIN, i64::MAX] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        // Small magnitudes stay small on the wire.
+        assert_eq!(uvarint_len(zigzag(-1)), 1);
+        assert_eq!(uvarint_len(zigzag(63)), 1);
+    }
+
+    #[test]
+    fn overlong_varint_is_an_error_not_silent_truncation() {
+        // 10th byte carrying payload above bit 64 would lose bits.
+        let bad = [0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x7e];
+        let mut de = De { input: &bad, pos: 0 };
+        assert!(de.uvarint().is_err());
+        // Continuation bit on the 10th byte is equally invalid.
+        let bad = [0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x81, 0x00];
+        let mut de = De { input: &bad, pos: 0 };
+        assert!(de.uvarint().is_err());
+        // u64::MAX itself (9 × 0xFF + 0x01) still decodes.
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, u64::MAX);
+        let mut de = De { input: &buf, pos: 0 };
+        assert_eq!(de.uvarint().unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn truncated_input_is_an_error() {
+        let bytes = to_bytes(&vec![1.0f64, 2.0]).unwrap();
+        assert!(from_bytes::<Vec<f64>>(&bytes[..bytes.len() - 1]).is_err());
+        assert!(from_bytes::<Vec<f64>>(&[]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_are_an_error() {
+        let mut bytes = to_bytes(&42u64).unwrap();
+        bytes.push(0);
+        assert!(from_bytes::<u64>(&bytes).is_err());
+    }
+
+    #[test]
+    fn doubles_are_flat_little_endian() {
+        let xs = vec![1.5f64, -2.25, f64::NAN];
+        let bytes = to_bytes(&xs).unwrap();
+        // 1-byte length prefix + 8 bytes per element.
+        assert_eq!(bytes.len(), 1 + 8 * xs.len());
+        let back: Vec<f64> = from_bytes(&bytes).unwrap();
+        assert_eq!(back[0], 1.5);
+        assert_eq!(back[1], -2.25);
+        assert!(back[2].is_nan());
+    }
+}

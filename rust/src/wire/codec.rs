@@ -1,0 +1,168 @@
+//! Codec selection and transport framing for the worker protocol.
+//!
+//! Every process-crossing message (`ParentMsg`/`WorkerMsg` on worker
+//! pipes, job/context spool files) is encoded by a [`WireCodec`] and
+//! carried as a length-prefixed frame (4-byte little-endian payload
+//! length + payload). The frame layer is codec-agnostic: the payload is
+//! compact binary by default ([`crate::wire::bin`]) and JSON text when
+//! debugging with `FUTURIZE_WIRE_CODEC=json` (human-readable traces at
+//! the cost of 3–6× the bytes).
+//!
+//! The codec is captured **once per backend instance** at construction
+//! and forced onto spawned workers through the same environment
+//! variable, so a parent and its workers can never disagree mid-stream.
+//!
+//! Byte accounting: [`WireCodec::encode`] records *logical* bytes (one
+//! encode per message) and [`write_frame`] records *physical* bytes
+//! (once per transport copy — a context broadcast to N workers costs N
+//! physical copies of one logical encode). See [`crate::wire::stats`].
+
+use std::io::{Read, Write};
+
+/// Environment variable selecting the wire codec (`json` forces the
+/// debug codec; anything else, or unset, selects binary).
+pub const WIRE_CODEC_ENV: &str = "FUTURIZE_WIRE_CODEC";
+
+/// The message-payload encoding used by a process transport.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireCodec {
+    /// Compact binary ([`crate::wire::bin`]) — the default.
+    Binary,
+    /// Compact JSON ([`crate::wire::to_string`]) — human-readable debug
+    /// transport, selected with `FUTURIZE_WIRE_CODEC=json`.
+    Json,
+}
+
+impl WireCodec {
+    /// Resolve the session-wide default from the environment.
+    pub fn active() -> WireCodec {
+        match std::env::var(WIRE_CODEC_ENV) {
+            Ok(v) if v.eq_ignore_ascii_case("json") => WireCodec::Json,
+            _ => WireCodec::Binary,
+        }
+    }
+
+    /// The value to set [`WIRE_CODEC_ENV`] to when spawning a worker
+    /// that must speak this codec.
+    pub fn env_value(&self) -> &'static str {
+        match self {
+            WireCodec::Binary => "binary",
+            WireCodec::Json => "json",
+        }
+    }
+
+    /// Encode one protocol message; records the logical byte count.
+    pub fn encode<T: serde::Serialize + ?Sized>(&self, value: &T) -> Result<Vec<u8>, String> {
+        let bytes = match self {
+            WireCodec::Binary => {
+                super::bin::to_bytes(value).map_err(|e| e.to_string())?
+            }
+            WireCodec::Json => super::to_string(value).map_err(|e| e.to_string())?.into_bytes(),
+        };
+        super::stats::record_logical(bytes.len());
+        Ok(bytes)
+    }
+
+    /// Decode one protocol message.
+    pub fn decode<T: for<'a> serde::Deserialize<'a>>(&self, bytes: &[u8]) -> Result<T, String> {
+        match self {
+            WireCodec::Binary => super::bin::from_bytes(bytes).map_err(|e| e.to_string()),
+            WireCodec::Json => {
+                let s = std::str::from_utf8(bytes)
+                    .map_err(|e| format!("non-UTF-8 JSON frame: {e}"))?;
+                super::from_str(s).map_err(|e| e.to_string())
+            }
+        }
+    }
+}
+
+/// Write one length-prefixed frame; records the physical byte count.
+/// Header and payload are written back-to-back without building a
+/// combined buffer — every transport has exactly one writer (serialized
+/// by `&mut`), so frames cannot interleave and the copy would be pure
+/// overhead (an N-worker context broadcast would otherwise re-copy the
+/// whole payload N times).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
+    let len = u32::try_from(payload.len()).map_err(|_| {
+        std::io::Error::new(std::io::ErrorKind::InvalidInput, "wire frame over 4 GiB")
+    })?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    super::stats::record_physical(4 + payload.len());
+    Ok(())
+}
+
+/// Read one length-prefixed frame. Returns `Ok(None)` on a clean EOF
+/// (no header bytes at all); a mid-frame EOF is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<Vec<u8>>> {
+    let mut hdr = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None)
+                } else {
+                    Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "truncated wire frame header",
+                    ))
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(hdr) as usize;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_over_a_buffer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[0u8, 10, 13, 255]).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), vec![0u8, 10, 13, 255]);
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"payload").unwrap();
+        let mut r = &buf[..buf.len() - 2];
+        assert!(read_frame(&mut r).is_err());
+        let mut r = &buf[..2];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn both_codecs_roundtrip_protocol_messages() {
+        let v = vec![(String::from("x"), 1.5f64), (String::from("y"), f64::INFINITY)];
+        for codec in [WireCodec::Binary, WireCodec::Json] {
+            let bytes = codec.encode(&v).unwrap();
+            let back: Vec<(String, f64)> = codec.decode(&bytes).unwrap();
+            assert_eq!(back, v, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn binary_is_the_default_codec() {
+        // The env override is exercised end-to-end by the multisession
+        // tests; here we only pin the default.
+        if std::env::var(WIRE_CODEC_ENV).is_err() {
+            assert_eq!(WireCodec::active(), WireCodec::Binary);
+        }
+    }
+}

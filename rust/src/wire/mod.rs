@@ -1,49 +1,87 @@
-//! Minimal JSON substrate (serde_json is unavailable offline).
+//! Wire-format substrate for the worker protocol.
 //!
-//! Provides three things, enough for the whole stack:
+//! Two codecs share the same derive-based protocol types:
 //!
-//! - [`JsonValue`] — a dynamic JSON value (used for structured condition
-//!   payloads such as progress amounts);
-//! - [`to_string`] — serialize any `serde::Serialize` type to compact
-//!   JSON (a full `serde::Serializer`);
-//! - [`from_str`] — deserialize any `serde::Deserialize` type from JSON
-//!   (a full self-describing `serde::Deserializer`).
+//! - [`bin`] — the **default transport**: a compact, non-self-describing
+//!   binary codec (length-prefixed little-endian doubles, varint-packed
+//!   integers/lengths/tags). See [`bin`] for the exact layout.
+//! - JSON — the original hand-rolled text codec ([`to_string`] /
+//!   [`from_str`]; serde_json is unavailable offline), kept as a
+//!   human-readable debug transport behind `FUTURIZE_WIRE_CODEC=json`
+//!   and for structured-text uses (trace rendering, bench reports).
 //!
-//! Enum representation matches serde's default externally-tagged form,
-//! so the worker protocol is derive-compatible: unit variants are
-//! strings, data variants are `{"Variant": ...}` objects.
+//! [`codec`] selects between them per backend instance and owns the
+//! length-prefixed frame layer every process transport uses.
+//!
+//! Enum representation matches serde's default externally-tagged form
+//! in JSON (unit variants are strings, data variants are
+//! `{"Variant": ...}` objects) and tagged-by-index in binary, so the
+//! worker protocol is derive-compatible under both.
 
+pub mod bin;
+pub mod codec;
 mod de;
 mod ser;
 mod value;
 
+pub use codec::WireCodec;
 pub use de::from_str;
 pub use ser::to_string;
 pub use value::JsonValue;
 
-/// Serialized-byte accounting, used by benches and the dispatch tests to
-/// assert the O(chunks × payload) → O(workers × payload) reduction the
-/// shared-context protocol delivers. Every [`to_string`] records its
-/// output length here; backends that re-send an already-serialized line
-/// (the multisession context broadcast) record the extra copies
-/// explicitly.
+/// Serialized-byte accounting, used by the benches and the dispatch
+/// tests to assert the transport properties the protocol promises:
+/// O(workers × payload) context shipping, ~0 bytes on the in-process
+/// zero-copy fast path, and the binary codec's shrink over JSON.
+///
+/// Two counters are kept:
+///
+/// - **logical** bytes — one record per message *encode*
+///   ([`WireCodec::encode`]), independent of how many transport copies
+///   are made;
+/// - **physical** bytes — one record per transport *write*
+///   ([`codec::write_frame`], spool-file writes), so a context
+///   broadcast to N workers costs N physical copies of one logical
+///   encode.
+///
+/// Counters are **thread-local**. All encoding and transport writes of
+/// a session happen on the thread driving it (worker subprocesses keep
+/// their own, invisible counters), so concurrently running `cargo test`
+/// threads no longer race each other's byte-bound assertions — each
+/// test observes exactly the traffic of the session it drives.
 pub mod stats {
-    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::cell::Cell;
 
-    static BYTES: AtomicU64 = AtomicU64::new(0);
-
-    /// Add `n` serialized bytes to the session-wide counter.
-    pub fn record(n: usize) {
-        BYTES.fetch_add(n as u64, Ordering::Relaxed);
+    thread_local! {
+        static LOGICAL: Cell<u64> = const { Cell::new(0) };
+        static PHYSICAL: Cell<u64> = const { Cell::new(0) };
     }
 
-    /// Total serialized bytes since process start (or the last `reset`).
+    /// Record `n` encoded payload bytes (one per message encode).
+    pub fn record_logical(n: usize) {
+        LOGICAL.with(|c| c.set(c.get() + n as u64));
+    }
+
+    /// Record `n` bytes written to a process transport (one per copy).
+    pub fn record_physical(n: usize) {
+        PHYSICAL.with(|c| c.set(c.get() + n as u64));
+    }
+
+    /// Logical encoded bytes on this thread since start (or `reset`).
+    pub fn logical_bytes() -> u64 {
+        LOGICAL.with(|c| c.get())
+    }
+
+    /// Physical transport bytes on this thread since start (or `reset`).
+    /// This is the headline "bytes crossing a process boundary" number;
+    /// the in-process fast path keeps it at zero.
     pub fn bytes() -> u64 {
-        BYTES.load(Ordering::Relaxed)
+        PHYSICAL.with(|c| c.get())
     }
 
     pub fn reset() {
-        BYTES.store(0, Ordering::Relaxed);
+        LOGICAL.with(|c| c.set(0));
+        PHYSICAL.with(|c| c.set(0));
     }
 }
 
@@ -68,12 +106,18 @@ mod tests {
         nested: Option<Box<Payload>>,
     }
 
-    fn roundtrip<T: serde::Serialize + for<'a> serde::Deserialize<'a> + PartialEq + std::fmt::Debug>(
-        v: &T,
-    ) {
+    /// Roundtrip through *both* codecs — the protocol types must be
+    /// representable identically under JSON and binary.
+    fn roundtrip<T>(v: &T)
+    where
+        T: serde::Serialize + for<'a> serde::Deserialize<'a> + PartialEq + std::fmt::Debug,
+    {
         let s = to_string(v).unwrap();
         let back: T = from_str(&s).unwrap_or_else(|e| panic!("{e}: {s}"));
         assert_eq!(&back, v, "json was: {s}");
+        let b = bin::to_bytes(v).unwrap();
+        let back: T = bin::from_bytes(&b).unwrap_or_else(|e| panic!("{e} (json form: {s})"));
+        assert_eq!(&back, v, "binary roundtrip (json form: {s})");
     }
 
     #[test]
@@ -146,12 +190,29 @@ mod tests {
             time_scale: 0.5,
             capture_stdout: true,
         };
-        let s = to_string(&t).unwrap();
-        let back: TaskPayload = from_str(&s).unwrap();
-        assert_eq!(back.id, 9);
-        match back.kind {
-            TaskKind::Expr { globals, .. } => assert_eq!(globals.len(), 1),
-            other => panic!("{other:?}"),
+        for codec in [WireCodec::Binary, WireCodec::Json] {
+            let bytes = codec.encode(&t).unwrap();
+            let back: TaskPayload = codec.decode(&bytes).unwrap();
+            assert_eq!(back.id, 9, "{codec:?}");
+            match back.kind {
+                TaskKind::Expr { globals, .. } => assert_eq!(globals.len(), 1, "{codec:?}"),
+                other => panic!("{codec:?}: {other:?}"),
+            }
         }
+    }
+
+    #[test]
+    fn stats_split_logical_and_physical() {
+        stats::reset();
+        let payload = WireCodec::Binary.encode(&vec![1.0f64; 16]).unwrap();
+        assert_eq!(stats::logical_bytes(), payload.len() as u64);
+        assert_eq!(stats::bytes(), 0, "no transport write yet");
+        let mut sink = Vec::new();
+        codec::write_frame(&mut sink, &payload).unwrap();
+        codec::write_frame(&mut sink, &payload).unwrap();
+        assert_eq!(stats::bytes(), 2 * (payload.len() as u64 + 4), "two physical copies");
+        stats::reset();
+        assert_eq!(stats::logical_bytes(), 0);
+        assert_eq!(stats::bytes(), 0);
     }
 }

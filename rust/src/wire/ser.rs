@@ -17,11 +17,13 @@ impl serde::ser::Error for Error {
     }
 }
 
-/// Serialize any `Serialize` value to compact JSON text.
+/// Serialize any `Serialize` value to compact JSON text. Byte
+/// accounting happens in [`super::codec`], which wraps this for
+/// protocol transport; direct callers (trace rendering, tests) don't
+/// count against the wire stats.
 pub fn to_string<T: serde::Serialize + ?Sized>(value: &T) -> Result<String, Error> {
     let mut s = Ser { out: String::new() };
     value.serialize(&mut s)?;
-    super::stats::record(s.out.len());
     Ok(s.out)
 }
 
@@ -43,7 +45,7 @@ pub(crate) fn escape_into(out: &mut String, s: &str) {
     out.push('"');
 }
 
-fn fmt_f64(out: &mut String, v: f64) {
+pub(crate) fn fmt_f64(out: &mut String, v: f64) {
     if v.is_nan() || v.is_infinite() {
         // JSON has no NaN/Inf; encode as tagged strings the deserializer
         // understands (used by rlite's NA-as-NaN model).

@@ -1,9 +1,21 @@
-//! Dynamic JSON value with hand-written serde impls.
+//! Dynamic JSON value.
+//!
+//! On the wire, `JsonValue` travels like every other protocol type:
+//! derive-generated, externally-tagged serde impls (`{"Number":1.0}` in
+//! the JSON codec, a varint variant tag in the binary codec). The
+//! hand-written `deserialize_any`-based impls it used to have were
+//! incompatible with the non-self-describing binary codec.
+//!
+//! [`JsonValue::render`] produces *plain* (untagged) JSON text for
+//! human-facing output — `Display`, bench reports — where the value is
+//! a document, not a protocol message.
 
 use std::fmt;
 
+use serde_derive::{Deserialize, Serialize};
+
 /// A JSON value. Object keys keep insertion order (Vec of pairs).
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
 pub enum JsonValue {
     Null,
     Bool(bool),
@@ -49,99 +61,67 @@ impl JsonValue {
     pub fn num(n: f64) -> JsonValue {
         JsonValue::Number(n)
     }
+
+    /// Render as compact plain JSON text (the untagged document form,
+    /// not the tagged protocol form `to_string` would produce).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Number(n) => super::ser::fmt_f64(out, *n),
+            JsonValue::String(s) => super::ser::escape_into(out, s),
+            JsonValue::Array(items) => {
+                out.push('[');
+                for (k, it) in items.iter().enumerate() {
+                    if k > 0 {
+                        out.push(',');
+                    }
+                    it.render_into(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Object(pairs) => {
+                out.push('{');
+                for (k, (key, v)) in pairs.iter().enumerate() {
+                    if k > 0 {
+                        out.push(',');
+                    }
+                    super::ser::escape_into(out, key);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
 }
 
 impl fmt::Display for JsonValue {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}", super::to_string(self).unwrap_or_default())
+        write!(f, "{}", self.render())
     }
 }
 
-impl serde::Serialize for JsonValue {
-    fn serialize<S: serde::Serializer>(&self, s: S) -> Result<S::Ok, S::Error> {
-        use serde::ser::{SerializeMap, SerializeSeq};
-        match self {
-            JsonValue::Null => s.serialize_unit(),
-            JsonValue::Bool(b) => s.serialize_bool(*b),
-            JsonValue::Number(n) => s.serialize_f64(*n),
-            JsonValue::String(x) => s.serialize_str(x),
-            JsonValue::Array(items) => {
-                let mut seq = s.serialize_seq(Some(items.len()))?;
-                for it in items {
-                    seq.serialize_element(it)?;
-                }
-                seq.end()
-            }
-            JsonValue::Object(pairs) => {
-                let mut map = s.serialize_map(Some(pairs.len()))?;
-                for (k, v) in pairs {
-                    map.serialize_entry(k, v)?;
-                }
-                map.end()
-            }
-        }
-    }
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-impl<'de> serde::Deserialize<'de> for JsonValue {
-    fn deserialize<D: serde::Deserializer<'de>>(d: D) -> Result<Self, D::Error> {
-        struct V;
-        impl<'de> serde::de::Visitor<'de> for V {
-            type Value = JsonValue;
-            fn expecting(&self, f: &mut fmt::Formatter) -> fmt::Result {
-                write!(f, "any JSON value")
-            }
-            fn visit_unit<E>(self) -> Result<JsonValue, E> {
-                Ok(JsonValue::Null)
-            }
-            fn visit_none<E>(self) -> Result<JsonValue, E> {
-                Ok(JsonValue::Null)
-            }
-            fn visit_some<D2: serde::Deserializer<'de>>(
-                self,
-                d: D2,
-            ) -> Result<JsonValue, D2::Error> {
-                serde::Deserialize::deserialize(d)
-            }
-            fn visit_bool<E>(self, v: bool) -> Result<JsonValue, E> {
-                Ok(JsonValue::Bool(v))
-            }
-            fn visit_i64<E>(self, v: i64) -> Result<JsonValue, E> {
-                Ok(JsonValue::Number(v as f64))
-            }
-            fn visit_u64<E>(self, v: u64) -> Result<JsonValue, E> {
-                Ok(JsonValue::Number(v as f64))
-            }
-            fn visit_f64<E>(self, v: f64) -> Result<JsonValue, E> {
-                Ok(JsonValue::Number(v))
-            }
-            fn visit_str<E>(self, v: &str) -> Result<JsonValue, E> {
-                Ok(JsonValue::String(v.to_string()))
-            }
-            fn visit_string<E>(self, v: String) -> Result<JsonValue, E> {
-                Ok(JsonValue::String(v))
-            }
-            fn visit_seq<A: serde::de::SeqAccess<'de>>(
-                self,
-                mut seq: A,
-            ) -> Result<JsonValue, A::Error> {
-                let mut out = Vec::new();
-                while let Some(v) = seq.next_element::<JsonValue>()? {
-                    out.push(v);
-                }
-                Ok(JsonValue::Array(out))
-            }
-            fn visit_map<A: serde::de::MapAccess<'de>>(
-                self,
-                mut map: A,
-            ) -> Result<JsonValue, A::Error> {
-                let mut out = Vec::new();
-                while let Some((k, v)) = map.next_entry::<String, JsonValue>()? {
-                    out.push((k, v));
-                }
-                Ok(JsonValue::Object(out))
-            }
-        }
-        d.deserialize_any(V)
+    #[test]
+    fn render_is_plain_json() {
+        let v = JsonValue::obj(vec![
+            ("amount", JsonValue::num(1.0)),
+            ("label", JsonValue::String("a \"b\"".into())),
+            ("xs", JsonValue::Array(vec![JsonValue::Bool(true), JsonValue::Null])),
+        ]);
+        assert_eq!(
+            v.render(),
+            "{\"amount\":1.0,\"label\":\"a \\\"b\\\"\",\"xs\":[true,null]}"
+        );
     }
 }

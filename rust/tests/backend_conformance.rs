@@ -251,7 +251,7 @@ fn contexts_register_resolve_and_drop() {
             id: 1,
             kind: TaskKind::MapSlice {
                 ctx: 1,
-                items: vec![futurize::rlite::serialize::WireVal::Dbl(vec![2.0], None)],
+                items: vec![futurize::rlite::serialize::WireVal::Dbl(vec![2.0], None)].into(),
                 seeds: None,
             },
             time_scale: 0.0,

@@ -193,10 +193,15 @@ fn seed_true_invariant_under_adaptive_chunking() {
 #[test]
 fn context_payload_serializes_per_worker_not_per_chunk() {
     worker_env();
-    // A closure over a ~80 kB global, mapped over 48 per-element chunks
-    // on 2 process workers. The old protocol embedded the global in
-    // every chunk payload (~48 × 80 kB ≈ 3.8 MB); the shared-context
-    // protocol ships it once per worker (~2 × 80 kB).
+    // A closure over a 10k-element integer global, mapped over 48
+    // per-element chunks on 2 process workers. The old batch protocol
+    // embedded the global in every chunk payload (O(chunks × payload));
+    // the shared-context protocol encodes it once (logical) and ships
+    // one copy per worker (physical). Under the default binary codec
+    // the global is ~22 kB of varints, so the whole call stays well
+    // under 200 kB where the per-chunk regime would be megabytes.
+    // (Byte counters are thread-local, so concurrent tests don't
+    // inflate this.)
     let mut s = Session::new();
     s.eval_str("plan(multisession, workers = 2)").unwrap();
     s.eval_str("big <- 1:10000").unwrap();
@@ -208,11 +213,56 @@ fn context_payload_serializes_per_worker_not_per_chunk() {
         .eval_str("unlist(lapply(1:48, f) |> futurize(scheduling = Inf))")
         .unwrap();
     assert_eq!(v.len(), 48);
-    let bytes = futurize::wire::stats::bytes();
-    // One context per worker plus 48 small slices plus 48 outcomes. The
-    // old O(chunks × payload) regime would be well above 3 MB here.
+    let physical = futurize::wire::stats::bytes();
+    let logical = futurize::wire::stats::logical_bytes();
     assert!(
-        bytes < 1_500_000,
-        "serialized bytes should be O(workers), got {bytes} (≈O(chunks × payload)?)"
+        physical < 200_000,
+        "physical bytes should be O(workers), got {physical} (≈O(chunks × payload)?)"
     );
+    // The context is encoded once but written twice (one copy per
+    // worker), so physical must exceed logical here.
+    assert!(
+        logical < physical,
+        "expected broadcast copies to make physical ({physical}) > logical ({logical})"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy fast path: in-process backends never encode anything.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn multicore_fast_path_moves_zero_wire_bytes() {
+    let mut s = Session::new();
+    s.eval_str("plan(multicore, workers = 2)").unwrap();
+    s.eval_str("big <- 1:10000").unwrap();
+    s.eval_str("f <- function(x) x + length(big) * 0").unwrap();
+    futurize::wire::stats::reset();
+    let v = s
+        .eval_str("unlist(lapply(1:32, f) |> futurize(scheduling = Inf))")
+        .unwrap();
+    assert_eq!(v.len(), 32);
+    assert_eq!(
+        futurize::wire::stats::bytes(),
+        0,
+        "multicore must not move any physical wire bytes"
+    );
+    assert_eq!(
+        futurize::wire::stats::logical_bytes(),
+        0,
+        "multicore must not encode any payload at all"
+    );
+}
+
+#[test]
+fn sequential_fast_path_moves_zero_wire_bytes() {
+    let mut s = Session::new();
+    s.eval_str("plan(sequential)").unwrap();
+    futurize::wire::stats::reset();
+    let v = s
+        .eval_str("unlist(lapply(1:16, function(x) x + 1) |> futurize())")
+        .unwrap();
+    assert_eq!(v.len(), 16);
+    assert_eq!(futurize::wire::stats::bytes(), 0);
+    assert_eq!(futurize::wire::stats::logical_bytes(), 0);
 }

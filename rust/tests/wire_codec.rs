@@ -1,0 +1,343 @@
+//! Tests for the binary wire codec (`wire::bin`), the codec switch, and
+//! the zero-copy `WireSlice` fast path:
+//!
+//! - exhaustive roundtrips over every `WireVal` variant (closures with
+//!   captured bindings, conditions, NaN/±Inf doubles, non-ASCII
+//!   strings) through both codecs;
+//! - cross-codec agreement (JSON and binary decode to equal values);
+//! - `WireVal::approx_size` regression against real encoded lengths;
+//! - byte-reduction of binary over JSON on protocol streams;
+//! - end-to-end multisession runs under the forced JSON debug codec.
+
+use std::sync::Arc;
+
+use futurize::backend::multisession::MultisessionBackend;
+use futurize::prelude::*;
+use futurize::rlite::serialize::{to_wire, WireSlice, WireVal};
+use futurize::wire::{bin, WireCodec};
+
+fn worker_env() {
+    std::env::set_var(
+        futurize::backend::worker::WORKER_BIN_ENV,
+        env!("CARGO_BIN_EXE_futurize-rs"),
+    );
+}
+
+/// Structural equality that treats NaN == NaN (WireVal's derived
+/// `PartialEq` follows IEEE semantics, which would reject a perfectly
+/// faithful NaN roundtrip).
+fn wire_eq(a: &WireVal, b: &WireVal) -> bool {
+    fn dbl_eq(x: &[f64], y: &[f64]) -> bool {
+        x.len() == y.len()
+            && x.iter().zip(y).all(|(a, b)| a.to_bits() == b.to_bits() || a == b)
+    }
+    match (a, b) {
+        (WireVal::Dbl(x, nx), WireVal::Dbl(y, ny)) => dbl_eq(x, y) && nx == ny,
+        (WireVal::List(x, nx, cx), WireVal::List(y, ny, cy)) => {
+            nx == ny
+                && cx == cy
+                && x.len() == y.len()
+                && x.iter().zip(y).all(|(a, b)| wire_eq(a, b))
+        }
+        (
+            WireVal::Closure { params: pa, body: ba, captured: ca },
+            WireVal::Closure { params: pb, body: bb, captured: cb },
+        ) => {
+            pa == pb
+                && ba == bb
+                && ca.len() == cb.len()
+                && ca
+                    .iter()
+                    .zip(cb)
+                    .all(|((na, va), (nb, vb))| na == nb && wire_eq(va, vb))
+        }
+        _ => a == b,
+    }
+}
+
+/// One sample per `WireVal` variant, exercising the tricky corners.
+/// Integer extremes stay within f64-exact range because the *JSON*
+/// codec routes numbers through f64 (a pre-existing limitation of the
+/// debug codec); full i64 range is covered by the binary-only test.
+fn sample_values() -> Vec<WireVal> {
+    let closure = {
+        let mut i = futurize::rlite::eval::Interp::new();
+        i.eval_program("a <- 10.5\nf <- function(z, k = 2) z * k + a").unwrap();
+        let f = futurize::rlite::env::lookup(&i.global, "f").unwrap();
+        to_wire(&f).unwrap()
+    };
+    let cond = WireVal::Cond(RCondition::custom(
+        "progression",
+        "étape ✓",
+        Some(futurize::wire::JsonValue::obj(vec![
+            ("amount", futurize::wire::JsonValue::num(1.0)),
+            ("total", futurize::wire::JsonValue::num(10.0)),
+        ])),
+    ));
+    vec![
+        WireVal::Null,
+        WireVal::Lgl(vec![], None),
+        WireVal::Lgl(vec![true, false, true], Some(vec!["a".into(), "b".into(), "c".into()])),
+        WireVal::Int(vec![0, -1, 1, 127, -128, 1 << 40, -(1 << 40), 1 << 62], None),
+        WireVal::Dbl(
+            vec![0.0, -0.0, 1.5, f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 1e-308],
+            Some((1..=7).map(|k| format!("n{k}")).collect()),
+        ),
+        WireVal::Chr(
+            vec![
+                "plain".into(),
+                "non-ASCII: ✓ héllo 日本語".into(),
+                "esc \"\\\n\t".into(),
+                String::new(),
+            ],
+            None,
+        ),
+        WireVal::List(
+            vec![
+                WireVal::Dbl(vec![1.0], None),
+                WireVal::List(vec![WireVal::Null], None, Some("inner".into())),
+            ],
+            Some(vec!["x".into(), "y".into()]),
+            Some("data.frame".into()),
+        ),
+        closure,
+        WireVal::Builtin("sum".into()),
+        cond,
+    ]
+}
+
+#[test]
+fn every_wireval_variant_roundtrips_in_binary() {
+    for w in sample_values() {
+        let bytes = bin::to_bytes(&w).unwrap_or_else(|e| panic!("{w:?}: {e}"));
+        let back: WireVal = bin::from_bytes(&bytes).unwrap_or_else(|e| panic!("{w:?}: {e}"));
+        assert!(wire_eq(&w, &back), "binary roundtrip changed value:\n{w:?}\n{back:?}");
+    }
+}
+
+#[test]
+fn binary_roundtrips_full_i64_range() {
+    // The JSON debug codec routes numbers through f64 and cannot
+    // represent the i64 extremes; the binary codec must.
+    let w = WireVal::Int(vec![i64::MIN, i64::MIN + 1, -1, 0, 1, i64::MAX - 1, i64::MAX], None);
+    let back: WireVal = bin::from_bytes(&bin::to_bytes(&w).unwrap()).unwrap();
+    assert_eq!(back, w);
+}
+
+#[test]
+fn json_and_binary_decode_to_equal_values() {
+    for w in sample_values() {
+        let json = futurize::wire::to_string(&w).unwrap();
+        let from_json: WireVal = futurize::wire::from_str(&json).unwrap();
+        let from_bin: WireVal = bin::from_bytes(&bin::to_bytes(&w).unwrap()).unwrap();
+        assert!(
+            wire_eq(&from_json, &from_bin),
+            "codecs disagree:\njson → {from_json:?}\nbin  → {from_bin:?}"
+        );
+    }
+}
+
+#[test]
+fn closure_semantics_survive_binary_transport() {
+    // Capture-by-value across the codec: mutate the global after
+    // capture, decode on a "worker", and check the old value was kept.
+    let mut i = futurize::rlite::eval::Interp::new();
+    i.eval_program("a <- 10\nf <- function(x) x + a").unwrap();
+    let f = futurize::rlite::env::lookup(&i.global, "f").unwrap();
+    let w = to_wire(&f).unwrap();
+    i.eval_program("a <- 999").unwrap();
+    let decoded: WireVal = bin::from_bytes(&bin::to_bytes(&w).unwrap()).unwrap();
+    let mut worker = futurize::rlite::eval::Interp::new();
+    let g = futurize::rlite::serialize::from_wire(&decoded, &worker.global);
+    futurize::rlite::env::define(&worker.global.clone(), "g", g);
+    assert_eq!(worker.eval_program("g(5)").unwrap(), RVal::scalar_dbl(15.0));
+}
+
+// ---------------------------------------------------------------------------
+// approx_size regression: the estimate must track real encoded lengths.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn approx_size_tracks_binary_encoded_length() {
+    // Data variants use exact formulas; allow a small slack anyway so
+    // the test pins behaviour, not byte-level trivia.
+    let data_samples = vec![
+        WireVal::Lgl(vec![true; 1000], None),
+        WireVal::Lgl(vec![false; 10], Some((0..10).map(|k| format!("name{k}")).collect())),
+        WireVal::Int((0..5000).collect(), None),
+        WireVal::Int(vec![i64::MIN, i64::MAX, 0], None),
+        WireVal::Dbl((0..2000).map(|k| k as f64 * 0.123456789).collect(), None),
+        WireVal::Chr((0..200).map(|k| format!("string-{k}-✓")).collect(), None),
+        WireVal::List(
+            vec![
+                WireVal::Dbl(vec![1.0; 64], None),
+                WireVal::Int(vec![1, 2, 3], Some(vec!["a".into(), "b".into(), "c".into()])),
+            ],
+            Some(vec!["col1".into(), "col2".into()]),
+            Some("data.frame".into()),
+        ),
+        WireVal::Null,
+        WireVal::Builtin("sum".into()),
+    ];
+    for w in data_samples {
+        let enc = bin::to_bytes(&w).unwrap().len() as i64;
+        let approx = w.approx_size() as i64;
+        let slack = (enc / 10).max(8);
+        assert!(
+            (approx - enc).abs() <= slack,
+            "approx_size {approx} vs encoded {enc} (> {slack} off) for {w:?}"
+        );
+    }
+    // Lgl must no longer undercount relative to its real footprint, and
+    // names must be counted: a named vector is strictly bigger.
+    let unnamed = WireVal::Lgl(vec![true; 100], None);
+    let named = WireVal::Lgl(vec![true; 100], Some((0..100).map(|k| format!("n{k}")).collect()));
+    assert!(named.approx_size() > unnamed.approx_size() + 300);
+    // Estimated variants (closures, conditions) stay within a loose band.
+    for w in sample_values() {
+        let enc = bin::to_bytes(&w).unwrap().len() as f64;
+        let approx = w.approx_size() as f64;
+        assert!(
+            approx >= enc * 0.25 - 64.0 && approx <= enc * 4.0 + 64.0,
+            "approx_size {approx} wildly off encoded {enc} for {w:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Byte reduction: binary vs JSON on what multisession actually sends.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn binary_shrinks_the_protocol_stream_by_3x() {
+    use futurize::backend::worker::{ParentMsg, WorkerMsg};
+    use futurize::future_core::{ContextBody, TaskContext, TaskKind, TaskOutcome, TaskPayload};
+    // A realistic numeric map call: one shared context (closure + a
+    // 64-double global), 48 single-element chunks, 48 outcomes.
+    let f = {
+        let mut i = futurize::rlite::eval::Interp::new();
+        i.eval_program("f <- function(x) x * 2").unwrap();
+        to_wire(&futurize::rlite::env::lookup(&i.global, "f").unwrap()).unwrap()
+    };
+    let globals = vec![(
+        "w".to_string(),
+        WireVal::Dbl((0..64).map(|k| (k as f64).sin()).collect(), None),
+    )];
+    let ctx = TaskContext { id: 1, body: ContextBody::Map { f, extra: vec![] }, globals };
+    let mut msgs_parent: Vec<ParentMsg> = vec![ParentMsg::RegisterContext(ctx)];
+    let mut msgs_worker: Vec<WorkerMsg> = Vec::new();
+    for k in 0..48u64 {
+        msgs_parent.push(ParentMsg::Task(TaskPayload {
+            id: k,
+            kind: TaskKind::MapSlice {
+                ctx: 1,
+                items: vec![WireVal::Dbl(vec![(k as f64).cos()], None)].into(),
+                seeds: None,
+            },
+            time_scale: 0.0,
+            capture_stdout: true,
+        }));
+        msgs_worker.push(WorkerMsg::Done(TaskOutcome {
+            id: k,
+            values: Ok(vec![WireVal::Dbl(vec![2.0 * (k as f64).cos()], None)]),
+            log: Default::default(),
+            worker: (k % 2) as usize,
+            started_unix: 1_769_000_000.123 + k as f64,
+            finished_unix: 1_769_000_000.456 + k as f64,
+        }));
+    }
+    let mut json_total = 0usize;
+    let mut bin_total = 0usize;
+    for m in &msgs_parent {
+        json_total += WireCodec::Json.encode(m).unwrap().len();
+        bin_total += WireCodec::Binary.encode(m).unwrap().len();
+    }
+    for m in &msgs_worker {
+        json_total += WireCodec::Json.encode(m).unwrap().len();
+        bin_total += WireCodec::Binary.encode(m).unwrap().len();
+    }
+    assert!(
+        bin_total * 3 <= json_total,
+        "expected ≥3× shrink: binary {bin_total} vs JSON {json_total}"
+    );
+}
+
+#[test]
+fn binary_shrinks_bulk_numeric_vectors() {
+    // Bulk full-precision doubles: 8 B/elem binary vs ~19 B/elem JSON.
+    let dbl = WireVal::Dbl((0..10_000).map(|k| (k as f64).sin()).collect(), None);
+    let json = futurize::wire::to_string(&dbl).unwrap().len();
+    let bin_len = bin::to_bytes(&dbl).unwrap().len();
+    assert!(bin_len * 2 <= json, "doubles: binary {bin_len} vs JSON {json}");
+    // Logical masks: 1 B/elem binary vs ~6 B/elem JSON.
+    let lgl = WireVal::Lgl((0..10_000).map(|k| k % 3 == 0).collect(), None);
+    let json = futurize::wire::to_string(&lgl).unwrap().len();
+    let bin_len = bin::to_bytes(&lgl).unwrap().len();
+    assert!(bin_len * 4 <= json, "logicals: binary {bin_len} vs JSON {json}");
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy WireSlice: shared windows alias the frozen storage.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shared_wire_slices_alias_their_source() {
+    let elems: Vec<WireVal> = (0..100).map(|k| WireVal::Dbl(vec![k as f64], None)).collect();
+    let source = Arc::new(elems);
+    let slice = WireSlice::shared(source.clone(), 10, 20);
+    assert_eq!(slice.len(), 10);
+    // The window reads the very same elements — no clone happened.
+    assert!(std::ptr::eq(&source[10], &slice.as_slice()[0]));
+    assert!(std::ptr::eq(&source[19], &slice.as_slice()[9]));
+    // Many windows over one source cost Arc bumps only.
+    let windows: Vec<_> =
+        (0..10).map(|k| WireSlice::shared(source.clone(), k * 10, (k + 1) * 10)).collect();
+    assert_eq!(Arc::strong_count(&source), 12); // source + slice + 10 windows
+    drop(windows);
+    drop(slice);
+    assert_eq!(Arc::strong_count(&source), 1);
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: the forced JSON debug codec still passes the pipeline.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn multisession_works_under_forced_json_codec() {
+    worker_env();
+    let reference = Session::new()
+        .eval_str("unlist(lapply(1:12, function(x) x^2 + 1))")
+        .unwrap();
+    for codec in [WireCodec::Binary, WireCodec::Json] {
+        let mut s = Session::new();
+        s.eval_str("plan(multisession, workers = 2)").unwrap();
+        let backend = MultisessionBackend::with_codec(2, "multisession", codec).unwrap();
+        s.interp.session.install_backend(Box::new(backend));
+        let v = s
+            .eval_str("unlist(lapply(1:12, function(x) x^2 + 1) |> futurize())")
+            .unwrap_or_else(|e| panic!("{codec:?}: {e}"));
+        assert_eq!(v, reference, "{codec:?}");
+    }
+}
+
+#[test]
+fn json_codec_costs_more_bytes_than_binary_end_to_end() {
+    worker_env();
+    let run = |codec: WireCodec| -> u64 {
+        let mut s = Session::new();
+        s.eval_str("plan(multisession, workers = 2)").unwrap();
+        let backend = MultisessionBackend::with_codec(2, "multisession", codec).unwrap();
+        s.interp.session.install_backend(Box::new(backend));
+        s.eval_str("big <- 1:5000\nf <- function(x) x + length(big) * 0").unwrap();
+        s.eval_str("invisible(lapply(1:2, f) |> futurize())").unwrap(); // warm pool
+        futurize::wire::stats::reset();
+        s.eval_str("invisible(lapply(1:24, f) |> futurize(scheduling = Inf))").unwrap();
+        futurize::wire::stats::bytes()
+    };
+    let bin_bytes = run(WireCodec::Binary);
+    let json_bytes = run(WireCodec::Json);
+    assert!(
+        bin_bytes * 2 <= json_bytes,
+        "binary transport should cost well under half of JSON: {bin_bytes} vs {json_bytes}"
+    );
+}
