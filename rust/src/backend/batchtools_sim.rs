@@ -10,7 +10,7 @@
 //! are large) is what the paper's `chunk_size`/`scheduling` options
 //! exist for.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -18,8 +18,20 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::{Backend, BackendEvent};
-use crate::future_core::{TaskContext, TaskPayload};
+use crate::future_core::{TaskContext, TaskOutcome, TaskPayload};
+use crate::rlite::conditions::{CaptureLog, RCondition};
 use crate::wire::WireCodec;
+
+/// A claimed job being executed by a scheduler-owned thread. The
+/// executor slot, task id, and claimed-file path are known *outside*
+/// the thread, so the scheduler can still account for the job if its
+/// executor dies without reporting back.
+struct RunningJob {
+    slot: usize,
+    task_id: u64,
+    claimed: PathBuf,
+    handle: JoinHandle<()>,
+}
 
 pub struct BatchtoolsSimBackend {
     codec: WireCodec,
@@ -52,19 +64,41 @@ impl BatchtoolsSimBackend {
         let shutdown = Arc::new(AtomicBool::new(false));
 
         // The scheduler: polls the job dir, launches up to `workers`
-        // concurrent job threads, each writing its result back through tx.
+        // concurrent job threads (each pinned to an executor *slot*),
+        // each writing its result back through tx. The scheduler also
+        // supervises: a job whose claimed `running/` file has a dead
+        // executor (the thread panicked and never sent a `Done`) is
+        // cleaned up and reported as a [`BackendEvent::WorkerLost`] so
+        // the dispatch core can resubmit or raise — never hang.
         let scheduler = {
             let spool = spool.clone();
             let shutdown = shutdown.clone();
             let tx = tx.clone();
             let poll = Duration::from_secs_f64((poll_ms.max(0.1)) / 1000.0);
             std::thread::spawn(move || {
-                let mut running: Vec<JoinHandle<()>> = Vec::new();
+                let mut running: Vec<RunningJob> = Vec::new();
                 loop {
                     if shutdown.load(Ordering::Relaxed) {
                         break;
                     }
-                    running.retain(|h| !h.is_finished());
+                    // Reap finished executors. A panicked executor is a
+                    // dead worker: its claimed job file is still in
+                    // running/ and no Done was ever sent.
+                    let mut k = 0;
+                    while k < running.len() {
+                        if running[k].handle.is_finished() {
+                            let job = running.remove(k);
+                            if job.handle.join().is_err() {
+                                let _ = std::fs::remove_file(&job.claimed);
+                                let _ = tx.send(BackendEvent::WorkerLost {
+                                    worker: job.slot,
+                                    task: Some(job.task_id),
+                                });
+                            }
+                        } else {
+                            k += 1;
+                        }
+                    }
                     // Pick up queued job files, oldest first.
                     let mut jobs: Vec<PathBuf> = std::fs::read_dir(spool.join("jobs"))
                         .map(|rd| {
@@ -79,17 +113,61 @@ impl BatchtoolsSimBackend {
                         if running.len() >= workers {
                             break;
                         }
+                        // Job files are named by zero-padded task id;
+                        // knowing the id before execution is what lets
+                        // the scheduler report exactly which task a dead
+                        // executor took down.
+                        let task_id = job
+                            .file_stem()
+                            .and_then(|s| s.to_str())
+                            .and_then(|s| s.parse::<u64>().ok())
+                            .unwrap_or(0);
                         // Claim: move into running/.
                         let claimed = spool.join("running").join(job.file_name().unwrap());
                         if std::fs::rename(&job, &claimed).is_err() {
                             continue;
                         }
+                        let slot = (0..workers)
+                            .find(|s| running.iter().all(|r| r.slot != *s))
+                            .unwrap_or(0);
                         let tx = tx.clone();
                         let spool = spool.clone();
-                        running.push(std::thread::spawn(move || {
-                            let Ok(bytes) = std::fs::read(&claimed) else { return };
-                            let Ok(task) = codec.decode::<TaskPayload>(&bytes) else {
-                                return;
+                        let claimed_in = claimed.clone();
+                        let handle = std::thread::spawn(move || {
+                            // Every exit path cleans up the claimed file
+                            // and sends an event — an unreadable or
+                            // undecodable job must surface as an error
+                            // outcome, never a silent drop that hangs
+                            // the dispatch loop.
+                            let fail = |msg: String| {
+                                let _ = std::fs::remove_file(&claimed_in);
+                                let now = crate::future_core::driver::now_unix();
+                                let _ = tx.send(BackendEvent::Done(TaskOutcome {
+                                    id: task_id,
+                                    values: Err(RCondition::error_cond(msg)),
+                                    log: CaptureLog::default(),
+                                    worker: slot,
+                                    started_unix: now,
+                                    finished_unix: now,
+                                }));
+                            };
+                            let bytes = match std::fs::read(&claimed_in) {
+                                Ok(b) => b,
+                                Err(e) => {
+                                    return fail(format!(
+                                        "batchtools: failed to read job file for task \
+                                         {task_id}: {e}"
+                                    ))
+                                }
+                            };
+                            let task = match codec.decode::<TaskPayload>(&bytes) {
+                                Ok(t) => t,
+                                Err(e) => {
+                                    return fail(format!(
+                                        "batchtools: failed to decode job file for task \
+                                         {task_id}: {e}"
+                                    ))
+                                }
                             };
                             // Shared contexts live as spool files written
                             // once per map call; job threads read them
@@ -107,17 +185,18 @@ impl BatchtoolsSimBackend {
                             let outcome = crate::backend::task_runner::run_task(
                                 &task,
                                 ctx.as_ref(),
-                                0,
+                                slot,
                                 None,
                             );
-                            let _ = std::fs::remove_file(&claimed);
+                            let _ = std::fs::remove_file(&claimed_in);
                             let _ = tx.send(BackendEvent::Done(outcome));
-                        }));
+                        });
+                        running.push(RunningJob { slot, task_id, claimed, handle });
                     }
                     std::thread::sleep(poll);
                 }
-                for h in running {
-                    let _ = h.join();
+                for job in running {
+                    let _ = job.handle.join();
                 }
             })
         };
@@ -131,6 +210,13 @@ impl BatchtoolsSimBackend {
             scheduler: Some(scheduler),
             workers,
         })
+    }
+
+    /// The spool directory (`jobs/`, `running/`, `contexts/`) — exposed
+    /// so fault-injection tests can plant corrupt job files and assert
+    /// claimed files are cleaned up on failure paths.
+    pub fn spool_dir(&self) -> &Path {
+        &self.spool
     }
 }
 

@@ -59,8 +59,10 @@ impl Backend for ClusterSimBackend {
 
     fn next_event(&mut self) -> Result<BackendEvent, String> {
         let ev = self.inner.next_event()?;
-        if matches!(ev, BackendEvent::Done(_)) {
-            // Result travels back over the wire.
+        if matches!(ev, BackendEvent::Done(_) | BackendEvent::WorkerLost { .. }) {
+            // Results — and the news that a remote node died — travel
+            // back over the wire. Supervision itself (respawn + context
+            // replay) is inherited from the inner process pool.
             std::thread::sleep(self.latency);
         }
         Ok(ev)
@@ -68,7 +70,7 @@ impl Backend for ClusterSimBackend {
 
     fn try_next_event(&mut self) -> Result<Option<BackendEvent>, String> {
         let ev = self.inner.try_next_event()?;
-        if matches!(ev, Some(BackendEvent::Done(_))) {
+        if matches!(ev, Some(BackendEvent::Done(_) | BackendEvent::WorkerLost { .. })) {
             std::thread::sleep(self.latency);
         }
         Ok(ev)

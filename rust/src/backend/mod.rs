@@ -39,6 +39,15 @@
 //!    execute afterwards (the conformance suite asserts this).
 //! 5. [`Backend::drop_context`] releases the context when the map call
 //!    finishes (success *or* error), so worker-side caches don't leak.
+//! 6. **Supervision.** A process backend must never let a dead worker
+//!    wedge the session: worker death is detected (reader-thread exit,
+//!    dead job-thread executor), the worker is reaped, a replacement is
+//!    spawned with all active contexts replayed, and a
+//!    [`BackendEvent::WorkerLost`] names the casualty so the dispatch
+//!    core can resubmit (under `futurize(retries = N)`) or raise a
+//!    `FutureError`-style condition. The conformance suite kills
+//!    workers mid-map and asserts completion-or-error within a bounded
+//!    wall clock.
 
 pub mod batchtools_sim;
 pub mod cluster_sim;
@@ -171,6 +180,17 @@ pub enum BackendEvent {
     Progress { task_id: u64, cond: RCondition },
     /// A task finished (successfully or not).
     Done(TaskOutcome),
+    /// A worker died (crash, OOM-kill, `exit()`, protocol desync) and a
+    /// `Done` for `task` will therefore never arrive. Process backends
+    /// emit this from their supervision path after reaping the worker
+    /// and (where the pool is persistent) spawning a replacement that
+    /// has every active [`TaskContext`] replayed to it. The dispatch
+    /// core decides recovery: resubmit the lost chunk while the map
+    /// call's `retries` budget lasts, otherwise raise a
+    /// `FutureError`-style condition naming the worker and task.
+    /// `task` is `None` when the worker was idle at death (nothing was
+    /// lost — the event is informational and the pool has healed).
+    WorkerLost { worker: usize, task: Option<u64> },
 }
 
 /// The Future-API surface every backend must provide.

@@ -14,13 +14,31 @@
 //! logical volume for the function/extras/globals is O(1) and the
 //! physical volume O(workers), not O(chunks). Worker processes cache
 //! contexts by id (see [`super::worker`]).
+//!
+//! ## Supervision
+//!
+//! A worker that dies mid-task (OOM-kill, segfault, `exit()`) must
+//! never wedge the session. The parent tracks which task each worker is
+//! running; every reader thread sends an [`PipeEvent::Exit`] sentinel
+//! when its stream ends (clean EOF, broken pipe, or a frame that fails
+//! to decode — a desynced protocol is treated as a dead worker, not
+//! skipped over). On a loss the backend reaps the child, spawns a
+//! replacement into the same slot with a bumped *generation* (stale
+//! events from the previous incumbent are discarded by generation
+//! stamp), replays every active [`TaskContext`] frame from a
+//! parent-side cache to it, and emits [`BackendEvent::WorkerLost`]
+//! naming the slot and the orphaned task so the dispatch core can
+//! resubmit or raise a `FutureError`. Broadcast and task writes that
+//! fail mid-stream route through the same path — the one dead worker is
+//! replaced instead of the whole map call failing.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, Write};
+use std::path::{Path, PathBuf};
 use std::process::{Child, ChildStdin, Command, Stdio};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use super::worker::{ParentMsg, ParentMsgRef, WorkerMsg, WORKER_SENTINEL};
 use super::{Backend, BackendEvent};
@@ -28,21 +46,123 @@ use crate::future_core::{TaskContext, TaskPayload};
 use crate::wire::codec::{read_frame, write_frame, WIRE_CODEC_ENV};
 use crate::wire::WireCodec;
 
+/// What a reader thread forwards to the backend: a decoded protocol
+/// message, or the news that the stream is over and the worker is gone.
+enum PipeEvent {
+    Msg(WorkerMsg),
+    /// The reader terminated: clean EOF, broken stream, or a frame that
+    /// failed to decode (protocol desync). In every case the worker is
+    /// unusable and must be supervised.
+    Exit { reason: String },
+}
+
 struct WorkerProc {
     child: Child,
     stdin: ChildStdin,
-    busy: bool,
-    _reader: JoinHandle<()>,
+    /// Task currently executing on this worker, if any — the knowledge
+    /// that turns "a worker died" into "task N was lost".
+    running: Option<u64>,
+    /// Incarnation counter for this slot. Events stamped with an older
+    /// generation belong to a reaped predecessor and are dropped.
+    gen: u64,
+    /// False once the slot's process is gone and could not be replaced
+    /// (or, during `Drop`, once it has been reaped).
+    alive: bool,
+    /// Reader thread, joined during supervision so every event the
+    /// worker managed to deliver is on the channel before the slot's
+    /// generation is bumped (a completed task must never be
+    /// misreported as lost just because its `Done` was still queued).
+    reader: Option<std::thread::JoinHandle<()>>,
 }
 
 pub struct MultisessionBackend {
     codec: WireCodec,
+    /// Worker binary, kept for respawns.
+    bin: PathBuf,
     workers: Vec<WorkerProc>,
-    /// (worker_idx, msg) events from reader threads.
-    rx: Receiver<(usize, WorkerMsg)>,
-    _tx: Sender<(usize, WorkerMsg)>,
+    /// (worker_idx, generation, event) from reader threads.
+    rx: Receiver<(usize, u64, PipeEvent)>,
+    tx: Sender<(usize, u64, PipeEvent)>,
     queue: VecDeque<TaskPayload>,
+    /// Parent-side cache of the encoded `RegisterContext` frame of every
+    /// active context, replayed to replacement workers at respawn.
+    contexts: HashMap<u64, Vec<u8>>,
+    /// Events produced outside the reader channel (losses detected on
+    /// the write path, outcomes salvaged during supervision), drained
+    /// ahead of it.
+    local_events: VecDeque<BackendEvent>,
+    /// Raw reader events pulled off `rx` while salvaging a dying
+    /// worker's deliveries; re-processed ahead of `rx` so per-worker
+    /// ordering is preserved.
+    pipe_stash: VecDeque<(usize, u64, PipeEvent)>,
     name: &'static str,
+}
+
+/// Spawn one worker process into slot `idx` at generation `gen` and
+/// start its reader thread.
+fn spawn_worker(
+    bin: &Path,
+    codec: WireCodec,
+    tx: &Sender<(usize, u64, PipeEvent)>,
+    idx: usize,
+    gen: u64,
+) -> Result<WorkerProc, String> {
+    let mut child = Command::new(bin)
+        .arg(WORKER_SENTINEL)
+        .env("FUTURIZE_WORKER_IDX", idx.to_string())
+        .env(WIRE_CODEC_ENV, codec.env_value())
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .map_err(|e| format!("failed to spawn worker {}: {e}", bin.display()))?;
+    let stdin = child.stdin.take().ok_or("no stdin")?;
+    let stdout = child.stdout.take().ok_or("no stdout")?;
+    let tx = tx.clone();
+    let reader = std::thread::spawn(move || {
+        let mut br = BufReader::new(stdout);
+        loop {
+            let frame = match read_frame(&mut br) {
+                Ok(Some(f)) => f,
+                Ok(None) => {
+                    let _ = tx.send((
+                        idx,
+                        gen,
+                        PipeEvent::Exit { reason: "worker process exited".into() },
+                    ));
+                    return;
+                }
+                Err(e) => {
+                    let _ = tx.send((
+                        idx,
+                        gen,
+                        PipeEvent::Exit { reason: format!("worker stream broke: {e}") },
+                    ));
+                    return;
+                }
+            };
+            match codec.decode::<WorkerMsg>(&frame) {
+                Ok(msg) => {
+                    if tx.send((idx, gen, PipeEvent::Msg(msg))).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    // A frame that fails to decode leaves the stream
+                    // state untrustworthy; continuing would read a
+                    // misaligned protocol forever. Report the worker as
+                    // failed and stop.
+                    let _ = tx.send((
+                        idx,
+                        gen,
+                        PipeEvent::Exit { reason: format!("protocol desync: {e}") },
+                    ));
+                    return;
+                }
+            }
+        }
+    });
+    Ok(WorkerProc { child, stdin, running: None, gen, alive: true, reader: Some(reader) })
 }
 
 impl MultisessionBackend {
@@ -59,83 +179,199 @@ impl MultisessionBackend {
     pub fn with_codec(n: usize, name: &'static str, codec: WireCodec) -> Result<Self, String> {
         let n = n.max(1);
         let bin = super::worker::worker_binary()?;
-        let (tx, rx) = channel::<(usize, WorkerMsg)>();
+        let (tx, rx) = channel::<(usize, u64, PipeEvent)>();
         let mut workers = Vec::with_capacity(n);
         for idx in 0..n {
-            let mut child = Command::new(&bin)
-                .arg(WORKER_SENTINEL)
-                .env("FUTURIZE_WORKER_IDX", idx.to_string())
-                .env(WIRE_CODEC_ENV, codec.env_value())
-                .stdin(Stdio::piped())
-                .stdout(Stdio::piped())
-                .stderr(Stdio::inherit())
-                .spawn()
-                .map_err(|e| format!("failed to spawn worker {}: {e}", bin.display()))?;
-            let stdin = child.stdin.take().ok_or("no stdin")?;
-            let stdout = child.stdout.take().ok_or("no stdout")?;
-            let tx = tx.clone();
-            let reader = std::thread::spawn(move || {
-                let mut br = BufReader::new(stdout);
-                loop {
-                    let frame = match read_frame(&mut br) {
-                        Ok(Some(f)) => f,
-                        Ok(None) => break,
-                        Err(e) => {
-                            eprintln!("futurize: worker stream broke: {e}");
-                            break;
-                        }
-                    };
-                    match codec.decode::<WorkerMsg>(&frame) {
-                        Ok(msg) => {
-                            if tx.send((idx, msg)).is_err() {
-                                break;
-                            }
-                        }
-                        Err(e) => eprintln!("futurize: bad worker message: {e}"),
-                    }
-                }
-            });
-            workers.push(WorkerProc { child, stdin, busy: false, _reader: reader });
+            workers.push(spawn_worker(&bin, codec, &tx, idx, 0)?);
         }
-        Ok(MultisessionBackend { codec, workers, rx, _tx: tx, queue: VecDeque::new(), name })
+        Ok(MultisessionBackend {
+            codec,
+            bin,
+            workers,
+            rx,
+            tx,
+            queue: VecDeque::new(),
+            contexts: HashMap::new(),
+            local_events: VecDeque::new(),
+            pipe_stash: VecDeque::new(),
+            name,
+        })
     }
 
-    /// Write an already-encoded protocol frame to every worker. The
+    /// Reap a lost worker, spawn a replacement (next generation) into
+    /// the same slot, and replay every active context frame to it.
+    /// Returns the task the worker was running when it died, if any.
+    /// The caller is responsible for surfacing the matching
+    /// [`BackendEvent::WorkerLost`].
+    fn supervise(&mut self, idx: usize, reason: &str) -> Option<u64> {
+        // Reap the process, then join its reader: after the join, every
+        // event the worker managed to deliver is on the channel.
+        let (reader, cur_gen) = {
+            let w = &mut self.workers[idx];
+            let _ = w.child.kill();
+            let _ = w.child.wait();
+            w.alive = false;
+            (w.reader.take(), w.gen)
+        };
+        if let Some(h) = reader {
+            let _ = h.join();
+        }
+        // Salvage the casualty's already-delivered events before bumping
+        // the generation would discard them: a task whose Done was
+        // queued but unread *completed* — it must not be reported lost
+        // (and, under retries, re-executed). Other workers' events are
+        // stashed and re-processed ahead of the channel, preserving
+        // their order.
+        while let Ok((i2, g2, ev)) = self.rx.try_recv() {
+            if i2 == idx && g2 == cur_gen {
+                match ev {
+                    PipeEvent::Msg(WorkerMsg::Done(outcome)) => {
+                        self.workers[idx].running = None;
+                        self.local_events.push_back(BackendEvent::Done(outcome));
+                    }
+                    PipeEvent::Msg(WorkerMsg::Progress { task_id, cond }) => {
+                        self.local_events.push_back(BackendEvent::Progress { task_id, cond });
+                    }
+                    // The loss is what we are handling right now.
+                    PipeEvent::Exit { .. } => {}
+                }
+            } else {
+                self.pipe_stash.push_back((i2, g2, ev));
+            }
+        }
+        let (lost, gen) = {
+            let w = &mut self.workers[idx];
+            (w.running.take(), w.gen + 1)
+        };
+        eprintln!("futurize: {} worker {idx} lost ({reason}); spawning replacement", self.name);
+        match spawn_worker(&self.bin, self.codec, &self.tx, idx, gen) {
+            Ok(mut proc) => {
+                // Replay active shared contexts so in-flight map calls
+                // can keep submitting slices to the replacement.
+                for payload in self.contexts.values() {
+                    if write_frame(&mut proc.stdin, payload)
+                        .and_then(|()| proc.stdin.flush())
+                        .is_err()
+                    {
+                        let _ = proc.child.kill();
+                        let _ = proc.child.wait();
+                        proc.alive = false;
+                        break;
+                    }
+                }
+                self.workers[idx] = proc;
+            }
+            Err(e) => {
+                eprintln!("futurize: could not respawn {} worker {idx}: {e}", self.name);
+                // Retire the slot; stale events from the reaped child
+                // must still be discarded.
+                self.workers[idx].gen = gen;
+            }
+        }
+        lost
+    }
+
+    /// Write an already-encoded protocol frame to every live worker. The
     /// message was encoded (and its logical bytes recorded) once; each
     /// worker copy still crosses the process boundary, so `write_frame`
-    /// accounts one physical copy per worker.
+    /// accounts one physical copy per worker. A worker that dies
+    /// mid-broadcast is supervised (replaced, contexts replayed) and
+    /// reported via [`BackendEvent::WorkerLost`] instead of failing the
+    /// whole call — the healthy workers already received the frame.
     fn broadcast(&mut self, payload: &[u8]) -> Result<(), String> {
-        for w in self.workers.iter_mut() {
-            write_frame(&mut w.stdin, payload).map_err(|e| format!("worker write: {e}"))?;
-            w.stdin.flush().map_err(|e| format!("worker flush: {e}"))?;
+        let mut lost_any = false;
+        for idx in 0..self.workers.len() {
+            if !self.workers[idx].alive {
+                continue;
+            }
+            let ok = {
+                let w = &mut self.workers[idx];
+                write_frame(&mut w.stdin, payload).and_then(|()| w.stdin.flush()).is_ok()
+            };
+            if !ok {
+                // The replacement receives this frame too: register
+                // frames are cached before broadcast and replayed by
+                // supervise(); a drop frame for a context it never had
+                // is a no-op on the worker.
+                let lost = self.supervise(idx, "broadcast write failed");
+                self.local_events.push_back(BackendEvent::WorkerLost { worker: idx, task: lost });
+                lost_any = true;
+            }
+        }
+        if lost_any {
+            // The replacement is idle; hand it any queued work.
+            self.dispatch()?;
         }
         Ok(())
     }
 
     fn dispatch(&mut self) -> Result<(), String> {
-        while let Some(idle) = self.workers.iter().position(|w| !w.busy) {
+        let mut respawns = 0usize;
+        loop {
+            let Some(idle) = self.workers.iter().position(|w| w.alive && w.running.is_none())
+            else {
+                break;
+            };
             let Some(task) = self.queue.pop_front() else { break };
             let payload = self
                 .codec
-                .encode(&ParentMsg::Task(task))
+                .encode(&ParentMsgRef::Task(&task))
                 .map_err(|e| format!("serialize task: {e}"))?;
+            let id = task.id;
             let w = &mut self.workers[idle];
-            write_frame(&mut w.stdin, &payload).map_err(|e| format!("worker write: {e}"))?;
-            w.stdin.flush().map_err(|e| format!("worker flush: {e}"))?;
-            w.busy = true;
+            match write_frame(&mut w.stdin, &payload).and_then(|()| w.stdin.flush()) {
+                Ok(()) => {
+                    w.running = Some(id);
+                }
+                Err(_) => {
+                    // The worker died between events. The task was never
+                    // delivered — put it back and hand it to the
+                    // replacement on the next turn of the loop.
+                    self.queue.push_front(task);
+                    respawns += 1;
+                    if respawns > self.workers.len() * 2 {
+                        return Err(
+                            "multisession: workers are dying faster than they can be respawned"
+                                .into(),
+                        );
+                    }
+                    let lost = self.supervise(idle, "task write failed");
+                    self.local_events
+                        .push_back(BackendEvent::WorkerLost { worker: idle, task: lost });
+                }
+            }
         }
         Ok(())
     }
 
-    fn handle(&mut self, idx: usize, msg: WorkerMsg) -> Result<BackendEvent, String> {
-        match msg {
-            WorkerMsg::Progress { task_id, cond } => {
-                Ok(BackendEvent::Progress { task_id, cond })
+    /// Process one reader-channel event. `None` means the event was
+    /// internal (stale generation, or fully absorbed) and the caller
+    /// should keep polling.
+    fn handle(
+        &mut self,
+        idx: usize,
+        gen: u64,
+        ev: PipeEvent,
+    ) -> Result<Option<BackendEvent>, String> {
+        if self.workers[idx].gen != gen {
+            // An event from a reaped predecessor of this slot (its loss
+            // was already handled on the write path). Nothing it says
+            // can be trusted or matched to current state.
+            return Ok(None);
+        }
+        match ev {
+            PipeEvent::Msg(WorkerMsg::Progress { task_id, cond }) => {
+                Ok(Some(BackendEvent::Progress { task_id, cond }))
             }
-            WorkerMsg::Done(outcome) => {
-                self.workers[idx].busy = false;
+            PipeEvent::Msg(WorkerMsg::Done(outcome)) => {
+                self.workers[idx].running = None;
                 self.dispatch()?;
-                Ok(BackendEvent::Done(outcome))
+                Ok(Some(BackendEvent::Done(outcome)))
+            }
+            PipeEvent::Exit { reason } => {
+                let lost = self.supervise(idx, &reason);
+                self.dispatch()?;
+                Ok(Some(BackendEvent::WorkerLost { worker: idx, task: lost }))
             }
         }
     }
@@ -156,10 +392,14 @@ impl Backend for MultisessionBackend {
             .codec
             .encode(&ParentMsgRef::RegisterContext(&ctx))
             .map_err(|e| format!("serialize context: {e}"))?;
+        // Cache before broadcasting: a worker replaced during (or after)
+        // the broadcast gets the frame replayed from this cache.
+        self.contexts.insert(ctx.id, payload.clone());
         self.broadcast(&payload)
     }
 
     fn drop_context(&mut self, ctx_id: u64) -> Result<(), String> {
+        self.contexts.remove(&ctx_id);
         let payload = self
             .codec
             .encode(&ParentMsg::DropContext(ctx_id))
@@ -173,16 +413,52 @@ impl Backend for MultisessionBackend {
     }
 
     fn next_event(&mut self) -> Result<BackendEvent, String> {
-        let (idx, msg) =
-            self.rx.recv().map_err(|e| format!("multisession backend: {e}"))?;
-        self.handle(idx, msg)
+        loop {
+            if let Some(ev) = self.local_events.pop_front() {
+                return Ok(ev);
+            }
+            if let Some((idx, gen, ev)) = self.pipe_stash.pop_front() {
+                if let Some(ev) = self.handle(idx, gen, ev)? {
+                    return Ok(ev);
+                }
+                continue;
+            }
+            if !self.workers.iter().any(|w| w.alive) {
+                // Every slot is dead and respawning failed: erroring out
+                // beats blocking on a channel no one will ever write to.
+                return Err(format!(
+                    "{}: all workers lost and none could be respawned",
+                    self.name
+                ));
+            }
+            let (idx, gen, ev) =
+                self.rx.recv().map_err(|e| format!("multisession backend: {e}"))?;
+            if let Some(ev) = self.handle(idx, gen, ev)? {
+                return Ok(ev);
+            }
+        }
     }
 
     fn try_next_event(&mut self) -> Result<Option<BackendEvent>, String> {
-        match self.rx.try_recv() {
-            Ok((idx, msg)) => Ok(Some(self.handle(idx, msg)?)),
-            Err(std::sync::mpsc::TryRecvError::Empty) => Ok(None),
-            Err(e) => Err(format!("multisession backend: {e}")),
+        loop {
+            if let Some(ev) = self.local_events.pop_front() {
+                return Ok(Some(ev));
+            }
+            if let Some((idx, gen, ev)) = self.pipe_stash.pop_front() {
+                if let Some(ev) = self.handle(idx, gen, ev)? {
+                    return Ok(Some(ev));
+                }
+                continue;
+            }
+            match self.rx.try_recv() {
+                Ok((idx, gen, ev)) => {
+                    if let Some(ev) = self.handle(idx, gen, ev)? {
+                        return Ok(Some(ev));
+                    }
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => return Ok(None),
+                Err(e) => return Err(format!("multisession backend: {e}")),
+            }
         }
     }
 
@@ -194,12 +470,30 @@ impl Backend for MultisessionBackend {
 impl Drop for MultisessionBackend {
     fn drop(&mut self) {
         if let Ok(payload) = self.codec.encode(&ParentMsg::Shutdown) {
-            for w in &mut self.workers {
+            for w in self.workers.iter_mut().filter(|w| w.alive) {
                 let _ = write_frame(&mut w.stdin, &payload);
                 let _ = w.stdin.flush();
             }
         }
-        for w in &mut self.workers {
+        // Grace period, then kill: a wedged worker (stuck mid-task, never
+        // reading the Shutdown) must not hang session teardown forever.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            let mut pending = false;
+            for w in self.workers.iter_mut().filter(|w| w.alive) {
+                match w.child.try_wait() {
+                    Ok(Some(_)) => w.alive = false,
+                    Ok(None) => pending = true,
+                    Err(_) => w.alive = false,
+                }
+            }
+            if !pending || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        for w in self.workers.iter_mut().filter(|w| w.alive) {
+            let _ = w.child.kill();
             let _ = w.child.wait();
         }
     }

@@ -53,7 +53,6 @@ pub enum ParentMsg {
 /// `ref_mirror_encodes_identically` test).
 #[derive(Serialize)]
 pub enum ParentMsgRef<'a> {
-    #[allow(dead_code)]
     Task(&'a TaskPayload),
     RegisterContext(&'a TaskContext),
     #[allow(dead_code)]
@@ -101,8 +100,11 @@ pub fn worker_main() {
         let msg: ParentMsg = match codec.decode(&frame) {
             Ok(m) => m,
             Err(e) => {
-                eprintln!("futurize worker: bad message: {e}");
-                continue;
+                // Parent and worker state have diverged; there is no safe
+                // way to continue. Exit so the parent's supervision
+                // replaces this worker.
+                eprintln!("futurize worker: undecodable message, exiting: {e}");
+                break;
             }
         };
         match msg {

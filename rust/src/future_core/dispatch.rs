@@ -25,6 +25,12 @@
 //!   error triggers `Backend::cancel_queued()`, in-flight tasks are
 //!   drained, and the error surfaces without executing the remaining
 //!   queued chunks (structured concurrency, paper §5.3).
+//! - **Worker-loss recovery.** A [`BackendEvent::WorkerLost`] for an
+//!   in-flight chunk either resubmits it (same elements, same seeds,
+//!   fresh task id) while the `futurize(retries = N)` budget lasts, or
+//!   surfaces a `FutureError`-style condition naming the lost worker
+//!   and task — the map call completes or errors, it never hangs on a
+//!   `Done` that cannot arrive.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -122,6 +128,10 @@ pub struct FutureSet {
     error_seen: bool,
     /// Set once `cancel_queued` has fired; no further chunks are fed.
     cancelled: bool,
+    /// Worker-crash resubmissions consumed so far, per chunk index —
+    /// the `futurize(retries = N)` budget is per chunk, so one flaky
+    /// worker can't starve an unrelated straggler of its retries.
+    attempts: HashMap<usize, u32>,
     trace: Vec<TraceEvent>,
     t0: f64,
 }
@@ -154,6 +164,7 @@ impl FutureSet {
             first_error: None,
             error_seen: false,
             cancelled: false,
+            attempts: HashMap::new(),
             trace: Vec::new(),
             t0: now_unix(),
         }
@@ -243,6 +254,12 @@ impl FutureSet {
                         return Err(sig);
                     }
                 }
+                BackendEvent::WorkerLost { worker, task } => {
+                    if let Err(sig) = self.handle_worker_lost(i, worker, task, opts) {
+                        self.abort(i);
+                        return Err(sig);
+                    }
+                }
             }
             self.maybe_cancel(i, opts);
         }
@@ -262,9 +279,96 @@ impl FutureSet {
         }
     }
 
+    /// Worker-loss recovery (the supervision contract's dispatch half):
+    /// while the chunk's `retries` budget lasts, resubmit it — same
+    /// elements, same per-element seeds (so `seed = TRUE` results are
+    /// invariant across the resubmit), fresh task id; once exhausted,
+    /// surface a `FutureError`-style condition naming the worker and
+    /// task, routed through the ordered relay like any chunk error.
+    fn handle_worker_lost(
+        &mut self,
+        i: &mut Interp,
+        worker: usize,
+        task: Option<u64>,
+        opts: &MapOptions,
+    ) -> Result<(), Signal> {
+        let Some(id) = task else {
+            // The worker was idle: nothing of anyone's was lost and the
+            // backend has already replaced it.
+            return Ok(());
+        };
+        let Some((chunk_idx, _start)) = self.in_flight.remove(&id) else {
+            // Not ours: a low-level future() or an enclosing map call —
+            // record the loss for its owner (see SessionState::lost_tasks).
+            i.session.lost_tasks.insert(id, worker);
+            return Ok(());
+        };
+        let attempts = self.attempts.entry(chunk_idx).or_insert(0);
+        if !self.cancelled && *attempts < opts.retries {
+            *attempts += 1;
+            let attempt = *attempts;
+            i.signal_condition(RCondition::warning_cond(format!(
+                "futurize: worker {worker} was lost while running task {id}; \
+                 resubmitting its chunk (retry {attempt} of {})",
+                opts.retries
+            )))?;
+            return self.submit_chunk(i, chunk_idx);
+        }
+        self.error_seen = true;
+        let backend = i.session.backend().map(|b| b.name()).unwrap_or("future");
+        let cond = super::worker_lost_condition(backend, worker, id, Some(opts.retries));
+        let now = now_unix();
+        self.pending_relay.insert(
+            chunk_idx,
+            TaskOutcome {
+                id,
+                values: Err(cond),
+                log: Default::default(),
+                worker,
+                started_unix: now,
+                finished_unix: now,
+            },
+        );
+        self.relay_ready(i, opts)
+    }
+
+    /// Submit chunk `chunk_idx` (first attempt or crash resubmission):
+    /// build the slice payload under a fresh task id, hand it to the
+    /// backend, and track it in flight — only after a successful submit,
+    /// so a failed submit never leaves a task id the drain loop would
+    /// wait on forever.
+    fn submit_chunk(&mut self, i: &mut Interp, chunk_idx: usize) -> Result<(), Signal> {
+        let (start, end) = self.chunks[chunk_idx];
+        let id = i.session.fresh_task_id();
+        let payload = TaskPayload {
+            id,
+            kind: self.source.slice_kind(self.ctx.id, start, end, &self.seeds),
+            time_scale: self.time_scale,
+            capture_stdout: self.capture_stdout,
+        };
+        let backend = i.session.backend().map_err(Signal::error)?;
+        backend.submit(payload).map_err(Signal::error)?;
+        self.in_flight.insert(id, (chunk_idx, start));
+        Ok(())
+    }
+
     /// Absorb any of this set's outcomes that a nested dispatch pulled
     /// off the backend channel and parked in `session.pending`.
     fn reclaim_stashed(&mut self, i: &mut Interp, opts: &MapOptions) -> Result<(), Signal> {
+        // Losses of ours another event loop observed on the shared
+        // channel and recorded in the session-wide ledger.
+        loop {
+            let Some(id) = self
+                .in_flight
+                .keys()
+                .copied()
+                .find(|id| i.session.lost_tasks.contains_key(id))
+            else {
+                break;
+            };
+            let worker = i.session.lost_tasks.remove(&id).unwrap_or(0);
+            self.handle_worker_lost(i, worker, Some(id), opts)?;
+        }
         loop {
             let Some(id) = self
                 .in_flight
@@ -288,20 +392,7 @@ impl FutureSet {
             && self.next_chunk < self.chunks.len()
             && self.in_flight.len() < self.cap
         {
-            let (start, end) = self.chunks[self.next_chunk];
-            let id = i.session.fresh_task_id();
-            let payload = TaskPayload {
-                id,
-                kind: self.source.slice_kind(self.ctx.id, start, end, &self.seeds),
-                time_scale: self.time_scale,
-                capture_stdout: self.capture_stdout,
-            };
-            let chunk_idx = self.next_chunk;
-            let backend = i.session.backend().map_err(Signal::error)?;
-            backend.submit(payload).map_err(Signal::error)?;
-            // Only after a successful submit: a failed submit must not
-            // leave a task id the drain loop would wait on forever.
-            self.in_flight.insert(id, (chunk_idx, start));
+            self.submit_chunk(i, self.next_chunk)?;
             self.next_chunk += 1;
         }
         Ok(())
@@ -419,6 +510,16 @@ impl FutureSet {
                     }
                 }
                 Ok(BackendEvent::Progress { .. }) => {}
+                Ok(BackendEvent::WorkerLost { worker, task }) => {
+                    // No retry during teardown: the lost task will never
+                    // produce a Done, so just stop waiting on it (or
+                    // record the loss for its owner).
+                    if let Some(id) = task {
+                        if self.in_flight.remove(&id).is_none() {
+                            i.session.lost_tasks.insert(id, worker);
+                        }
+                    }
+                }
                 Err(_) => break,
             }
         }

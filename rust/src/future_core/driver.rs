@@ -37,6 +37,12 @@ pub struct MapOptions {
     /// Fail fast: cancel queued chunks and surface the first worker
     /// error immediately instead of running the whole input.
     pub stop_on_error: bool,
+    /// How many times a chunk whose worker *died* (crash/OOM/exit — not
+    /// an ordinary R error) may be resubmitted before the map call
+    /// raises a `FutureError`-style condition. 0 (the default) fails
+    /// fast, matching R future's unreliable-worker behaviour; rush-style
+    /// bounded retry is opt-in via `futurize(retries = N)`.
+    pub retries: u32,
 }
 
 impl Default for MapOptions {
@@ -47,6 +53,7 @@ impl Default for MapOptions {
             stdout: true,
             conditions: true,
             stop_on_error: false,
+            retries: 0,
         }
     }
 }

@@ -19,7 +19,7 @@ use serde_derive::{Deserialize, Serialize};
 use crate::backend::{Backend, BackendEvent, BackendKind, PlanSpec};
 use crate::rlite::ast::{Arg, Expr};
 use crate::rlite::builtins::{Args, Reg};
-use crate::rlite::conditions::{CaptureLog, RCondition};
+use crate::rlite::conditions::{CaptureLog, RCondition, Severity};
 use crate::rlite::env::EnvRef;
 use crate::rlite::eval::{EvalResult, Interp, Signal};
 use crate::rlite::serialize::{WireSlice, WireVal};
@@ -116,6 +116,36 @@ pub struct TaskOutcome {
     pub finished_unix: f64,
 }
 
+/// Build the `FutureError`-style condition raised when a worker dies
+/// while running a task — the analog of R future's "Failed to retrieve
+/// the result of MultisessionFuture" `FutureError`, but naming the lost
+/// worker and task. `retries` is the exhausted budget, mentioned in the
+/// message when it was non-zero (`None` for low-level futures, which
+/// have no retry budget).
+pub fn worker_lost_condition(
+    backend: &str,
+    worker: usize,
+    task: u64,
+    retries: Option<u32>,
+) -> RCondition {
+    let suffix = match retries {
+        Some(n) if n > 0 => {
+            format!(" (retries = {n} exhausted)")
+        }
+        _ => String::new(),
+    };
+    RCondition {
+        severity: Severity::Error,
+        message: format!(
+            "FutureError: failed to retrieve the result of task {task} — \
+             {backend} worker {worker} terminated unexpectedly{suffix}"
+        ),
+        classes: vec!["FutureError".into(), "error".into(), "condition".into()],
+        call: None,
+        data: None,
+    }
+}
+
 /// One entry of the execution trace (regenerates the paper's Figure 1).
 #[derive(Clone, Debug, Serialize)]
 pub struct TraceEvent {
@@ -133,6 +163,13 @@ pub struct SessionState {
     backend: Option<Box<dyn Backend>>,
     /// Pending low-level futures: id → resolved outcome (if arrived).
     pending: HashMap<u64, Option<TaskOutcome>>,
+    /// Tasks reported lost by a [`BackendEvent::WorkerLost`] that the
+    /// event's receiver did not own: task id → worker index. A map
+    /// call's drive loop reclaims its own ids from here (and retries
+    /// them); `value()` raises a `FutureError` for a lost low-level
+    /// future. Without this ledger a loss observed by the "wrong" event
+    /// loop would strand the owner waiting forever.
+    pub lost_tasks: HashMap<u64, usize>,
     next_task_id: u64,
     next_context_id: u64,
     /// Trace of the most recent futurized map call.
@@ -147,6 +184,7 @@ impl Default for SessionState {
             plan: PlanSpec::sequential(),
             backend: None,
             pending: HashMap::new(),
+            lost_tasks: HashMap::new(),
             next_task_id: 0,
             next_context_id: 0,
             last_trace: Vec::new(),
@@ -329,12 +367,20 @@ fn future_id(v: &RVal) -> Result<u64, Signal> {
 }
 
 /// Block until task `id` resolves; relay its output; return its value.
+/// A worker that dies while running `id` surfaces as a `FutureError`
+/// condition (R future's semantics for an unreliable worker) — the wait
+/// never hangs on a `Done` that can no longer arrive.
 fn wait_for(i: &mut Interp, id: u64, env: &EnvRef) -> EvalResult {
     loop {
         if let Some(Some(outcome)) = i.session.pending.get(&id) {
             let outcome = outcome.clone();
             i.session.pending.remove(&id);
             return finish_outcome(i, outcome, env);
+        }
+        if let Some(worker) = i.session.lost_tasks.remove(&id) {
+            i.session.pending.remove(&id);
+            let backend = i.session.backend().map(|b| b.name()).unwrap_or("future");
+            return Err(Signal::Error(worker_lost_condition(backend, worker, id, None)));
         }
         let ev = i
             .session
@@ -352,6 +398,14 @@ fn wait_for(i: &mut Interp, id: u64, env: &EnvRef) -> EvalResult {
                     return finish_outcome(i, outcome, env);
                 }
                 i.session.pending.insert(outcome.id, Some(outcome));
+            }
+            BackendEvent::WorkerLost { worker, task } => {
+                // Record the loss (ours included — picked up at the top
+                // of the next iteration); the backend has already healed
+                // its pool.
+                if let Some(tid) = task {
+                    i.session.lost_tasks.insert(tid, worker);
+                }
             }
         }
     }
@@ -390,9 +444,19 @@ fn resolved_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
             BackendEvent::Done(outcome) => {
                 i.session.pending.insert(outcome.id, Some(outcome));
             }
+            BackendEvent::WorkerLost { worker, task } => {
+                if let Some(tid) = task {
+                    i.session.lost_tasks.insert(tid, worker);
+                }
+            }
         }
     }
-    Ok(RVal::scalar_bool(matches!(i.session.pending.get(&id), Some(Some(_)))))
+    // A lost future is resolved in R's sense: its (error) result is
+    // ready to collect — `value()` raises the FutureError.
+    Ok(RVal::scalar_bool(
+        matches!(i.session.pending.get(&id), Some(Some(_)))
+            || i.session.lost_tasks.contains_key(&id),
+    ))
 }
 
 /// `futureSeed(seed)` — set the root seed used to derive per-element

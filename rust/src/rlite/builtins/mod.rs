@@ -25,6 +25,7 @@ pub mod core;
 pub mod io;
 pub mod math;
 pub mod stats_rng;
+pub mod testhooks;
 
 /// Evaluated arguments of a Normal builtin call.
 #[derive(Clone, Debug)]
@@ -189,6 +190,7 @@ static REGISTRY: Lazy<Registry> = Lazy::new(|| {
         io::register(&mut r);
         control::register(&mut r);
         stats_rng::register(&mut r);
+        testhooks::register(&mut r);
         // Upper layers (same crate, higher-level modules).
         crate::future_core::register_builtins(&mut r);
         crate::transpile::register_builtins(&mut r);

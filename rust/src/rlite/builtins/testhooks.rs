@@ -1,0 +1,73 @@
+//! Failure-injection builtins backing the supervision conformance
+//! suite (`futurize::` namespace, underscore-prefixed style).
+//!
+//! The no-hang guarantee — "a killed worker either recovers or raises a
+//! `FutureError`, within a bounded wall clock" — can only be tested by
+//! actually killing workers from inside a task. These hooks are
+//! ordinary registered builtins (they ship in the binary like
+//! `tools::pskill` ships in R), but they are *test hooks*: calling them
+//! outside a kill-worker test tears down whatever executor runs them.
+//!
+//! - [`futurize_test_exit()`] hard-exits the current executor: in a
+//!   worker *process* (multisession/cluster — `FUTURIZE_WORKER_IDX` is
+//!   stamped at spawn) it is `exit(134)`, the OOM-kill analog; in a
+//!   scheduler-owned job *thread* (batchtools_sim) it panics, killing
+//!   just that executor thread — the dead-executor case the batchtools
+//!   scheduler must detect.
+//! - [`futurize_test_exit_once(path)`] same, but only for the first
+//!   caller to claim the marker file at `path` — lets `retries = 1`
+//!   tests crash exactly one attempt and let the resubmit succeed.
+//! - [`futurize_test_desync()`] writes a well-framed but undecodable
+//!   message to the process's *raw* stdout — i.e. into the middle of
+//!   the worker protocol stream — to exercise the desync-is-a-worker-
+//!   failure path.
+
+use super::{Args, Reg};
+use crate::rlite::env::EnvRef;
+use crate::rlite::eval::{EvalResult, Interp, Signal};
+use crate::rlite::value::RVal;
+
+pub fn register(r: &mut Reg) {
+    r.normal("futurize", "futurize_test_exit", test_exit_fn);
+    r.normal("futurize", "futurize_test_exit_once", test_exit_once_fn);
+    r.normal("futurize", "futurize_test_desync", test_desync_fn);
+}
+
+/// Die the way a crashed worker dies — without unwinding the task
+/// runner or sending a `Done`.
+fn hard_exit() -> ! {
+    if std::env::var("FUTURIZE_WORKER_IDX").is_ok() {
+        // A real worker subprocess: exit hard, like an OOM-kill.
+        std::process::exit(134);
+    }
+    // An in-process executor thread (batchtools_sim job thread): take
+    // down just this thread.
+    panic!("futurize_test_exit: simulated executor death");
+}
+
+fn test_exit_fn(_i: &mut Interp, _args: Args, _env: &EnvRef) -> EvalResult {
+    hard_exit()
+}
+
+fn test_exit_once_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let path = args.bind(&["path"]).req(0, "path")?.as_str().map_err(Signal::error)?;
+    // create_new is an atomic claim: exactly one attempt dies, even if
+    // the chunk is raced or resubmitted across fresh worker processes.
+    match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+        Ok(_) => hard_exit(),
+        Err(_) => Ok(RVal::Null),
+    }
+}
+
+fn test_desync_fn(_i: &mut Interp, _args: Args, _env: &EnvRef) -> EvalResult {
+    use std::io::Write;
+    // Bypass the task runner's stdout capture on purpose: in a worker
+    // process the raw fd *is* the protocol channel. The payload is a
+    // valid frame (so the parent's reader stays length-aligned and
+    // fails fast in decode) that no codec accepts: 0xFF/0xFE lead bytes
+    // are an over-long varint enum tag in binary and not JSON either.
+    let mut out = std::io::stdout().lock();
+    let _ = crate::wire::codec::write_frame(&mut out, b"\xff\xfe futurize-desync");
+    let _ = out.flush();
+    Ok(RVal::Null)
+}

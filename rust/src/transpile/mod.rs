@@ -52,6 +52,11 @@ pub struct FuturizeOptions {
     pub conditions: Option<bool>,
     /// Fail fast: cancel queued chunks on the first worker error.
     pub stop_on_error: Option<bool>,
+    /// Worker-crash resilience: how many times a chunk lost with a dead
+    /// worker may be resubmitted before the call raises a
+    /// `FutureError`-style condition. Default 0 = fail fast (R future's
+    /// unreliable-worker behaviour).
+    pub retries: Option<u32>,
     /// `globals = FALSE` disables automatic identification (advanced).
     pub globals: Option<bool>,
     /// Extra packages to require on workers.
@@ -77,6 +82,7 @@ impl Default for FuturizeOptions {
             stdout: None,
             conditions: None,
             stop_on_error: None,
+            retries: None,
             globals: None,
             packages: vec![],
             eval: true,
@@ -115,6 +121,7 @@ impl FuturizeOptions {
             stdout: self.stdout.unwrap_or(true),
             conditions: self.conditions.unwrap_or(true),
             stop_on_error: self.stop_on_error.unwrap_or(false),
+            retries: self.retries.unwrap_or(0),
         }
     }
 }
@@ -194,6 +201,7 @@ fn parse_options(i: &mut Interp, args: &[Arg], env: &EnvRef) -> Result<FuturizeO
             "stdout" => o.stdout = Some(v.as_bool().map_err(Signal::error)?),
             "conditions" => o.conditions = Some(v.as_bool().map_err(Signal::error)?),
             "stop_on_error" => o.stop_on_error = Some(v.as_bool().map_err(Signal::error)?),
+            "retries" => o.retries = Some(v.as_usize().map_err(Signal::error)? as u32),
             "globals" => o.globals = Some(v.as_bool().map_err(Signal::error)?),
             "packages" => o.packages = v.as_str_vec().map_err(Signal::error)?,
             "eval" => o.eval = v.as_bool().map_err(Signal::error)?,
@@ -335,6 +343,9 @@ pub(crate) fn future_dot_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     if let Some(b) = opts.stop_on_error {
         args.push(Arg::named("future.stop.on.error", Expr::Bool(b)));
     }
+    if let Some(n) = opts.retries {
+        args.push(Arg::named("future.retries", Expr::Num(n as f64)));
+    }
     if !opts.packages.is_empty() {
         args.push(Arg::named("future.packages", packages_expr(&opts.packages)));
     }
@@ -363,6 +374,9 @@ pub(crate) fn furrr_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     }
     if let Some(b) = opts.stop_on_error {
         inner.push(Arg::named("stop_on_error", Expr::Bool(b)));
+    }
+    if let Some(n) = opts.retries {
+        inner.push(Arg::named("retries", Expr::Num(n as f64)));
     }
     if !opts.packages.is_empty() {
         inner.push(Arg::named("packages", packages_expr(&opts.packages)));
@@ -397,6 +411,9 @@ pub(crate) fn dofuture_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) 
     if let Some(b) = opts.stop_on_error {
         inner.push(Arg::named("stop.on.error", Expr::Bool(b)));
     }
+    if let Some(n) = opts.retries {
+        inner.push(Arg::named("retries", Expr::Num(n as f64)));
+    }
     if !opts.packages.is_empty() {
         inner.push(Arg::named("packages", packages_expr(&opts.packages)));
     }
@@ -424,6 +441,9 @@ pub(crate) fn domain_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     }
     if let Some(b) = opts.stop_on_error {
         inner.push(Arg::named("stop.on.error", Expr::Bool(b)));
+    }
+    if let Some(n) = opts.retries {
+        inner.push(Arg::named("retries", Expr::Num(n as f64)));
     }
     args.push(Arg::named(".futurize_opts", Expr::call("list", inner)));
 }
@@ -468,6 +488,7 @@ pub fn options_from_pairs(pairs: &[(String, RVal)]) -> FuturizeOptions {
             "stdout" => o.stdout = v.as_bool().ok(),
             "conditions" => o.conditions = v.as_bool().ok(),
             "stop_on_error" => o.stop_on_error = v.as_bool().ok(),
+            "retries" => o.retries = v.as_usize().ok().map(|n| n as u32),
             "packages" => o.packages = v.as_str_vec().unwrap_or_default(),
             _ => {}
         }
@@ -617,6 +638,26 @@ mod tests {
         let mo = o.to_map_options(false);
         assert!(mo.stop_on_error);
         assert_eq!(mo.policy, crate::scheduling::ChunkPolicy::adaptive());
+    }
+
+    #[test]
+    fn retries_maps_through_every_convention() {
+        // future.apply convention.
+        let got = transpiled_with("lapply(xs, fcn)", "retries = 2");
+        assert!(got.contains("future.retries = 2"), "{got}");
+        // furrr convention.
+        let got = transpiled_with("map(xs, fcn)", "retries = 1");
+        assert!(got.contains("retries = 1"), "{got}");
+        // Round trip back into unified options and MapOptions.
+        let o = options_from_pairs(&[(
+            "future.retries".into(),
+            crate::rlite::value::RVal::scalar_dbl(2.0),
+        )]);
+        assert_eq!(o.retries, Some(2));
+        let mo = o.to_map_options(false);
+        assert_eq!(mo.retries, 2);
+        // Default is fail-fast.
+        assert_eq!(FuturizeOptions::default().to_map_options(false).retries, 0);
     }
 
     #[test]

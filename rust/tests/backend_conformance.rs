@@ -2,17 +2,11 @@
 //! be compliant with the Future API. One conformance suite, run against
 //! all five backends.
 
+mod common;
+
+use common::{within, worker_env};
 use futurize::backend::Backend;
 use futurize::prelude::*;
-
-fn worker_env() {
-    // Integration tests run inside the libtest harness binary, which
-    // cannot host workers; point multisession at the real CLI binary.
-    std::env::set_var(
-        futurize::backend::worker::WORKER_BIN_ENV,
-        env!("CARGO_BIN_EXE_futurize-rs"),
-    );
-}
 
 const PLANS: &[&str] = &[
     "sequential",
@@ -271,6 +265,7 @@ fn contexts_register_resolve_and_drop() {
                     break;
                 }
                 futurize::backend::BackendEvent::Progress { .. } => {}
+                other => panic!("{name}: unexpected event: {other:?}"),
             }
         }
         b.drop_context(1).unwrap();
@@ -309,6 +304,66 @@ fn stop_on_error_cancels_remaining_work() {
         )
         .unwrap_err();
     assert!(err2.contains("fail fast"), "{err2}");
+}
+
+// ---------------------------------------------------------------------------
+// Kill-worker conformance: a worker that dies mid-map must never hang
+// the session — every process backend either recovers (retries ≥ 1) or
+// raises a FutureError-style condition, within a bounded wall clock.
+// ---------------------------------------------------------------------------
+
+const PROCESS_PLANS: &[&str] = &[
+    "multisession, workers = 2",
+    "cluster, workers = c(\"n1\", \"n2\"), latency_ms = 0.1",
+    "future.batchtools::batchtools_slurm, workers = 2, poll_ms = 2",
+];
+
+#[test]
+fn killed_worker_raises_future_error_not_hang() {
+    // Default retries = 0: fail fast with a FutureError naming the lost
+    // worker, exactly like R future's unreliable-worker behaviour.
+    for &plan in PROCESS_PLANS {
+        let plan_owned = plan.to_string();
+        let err = within(60, plan, move || {
+            worker_env();
+            let mut s = Session::new();
+            s.eval_str(&format!("plan({plan_owned})")).unwrap();
+            s.eval_str(
+                "lapply(1:6, function(x) { if (x == 4) futurize_test_exit()\nx }) \
+                 |> futurize(chunk_size = 1)",
+            )
+            .unwrap_err()
+        });
+        assert!(err.contains("terminated unexpectedly"), "{plan}: {err}");
+        assert!(err.contains("worker"), "{plan}: should name the worker: {err}");
+    }
+}
+
+#[test]
+fn killed_worker_recovers_with_retries() {
+    // retries = 1 with exactly one induced crash: the lost chunk is
+    // resubmitted and the map call still returns correct input-ordered
+    // results.
+    for (k, &plan) in PROCESS_PLANS.iter().enumerate() {
+        let marker = std::env::temp_dir()
+            .join(format!("futurize-kill-once-{}-{k}", std::process::id()));
+        let _ = std::fs::remove_file(&marker);
+        let plan_owned = plan.to_string();
+        let marker_str = marker.display().to_string();
+        let got = within(60, plan, move || {
+            worker_env();
+            let mut s = Session::new();
+            s.eval_str(&format!("plan({plan_owned})")).unwrap();
+            let (r, _out) = s.eval_captured(&format!(
+                "unlist(lapply(1:6, function(x) {{ \
+                 if (x == 4) futurize_test_exit_once(\"{marker_str}\")\nx * 3 }}) \
+                 |> futurize(chunk_size = 1, retries = 1))"
+            ));
+            r.unwrap().as_dbl_vec().unwrap()
+        });
+        let _ = std::fs::remove_file(&marker);
+        assert_eq!(got, (1..=6).map(|x| (x * 3) as f64).collect::<Vec<_>>(), "{plan}");
+    }
 }
 
 #[test]

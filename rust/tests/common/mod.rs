@@ -1,0 +1,29 @@
+//! Helpers shared by the integration-test binaries.
+
+/// Integration tests run inside the libtest harness binary, which
+/// cannot host workers; point process backends at the real CLI binary.
+pub fn worker_env() {
+    std::env::set_var(
+        futurize::backend::worker::WORKER_BIN_ENV,
+        env!("CARGO_BIN_EXE_futurize-rs"),
+    );
+}
+
+/// Run `f` on a fresh thread under a hard wall-clock bound. A hang is
+/// the exact bug the supervision suites exist to prevent, so exceeding
+/// the bound fails the test immediately instead of stalling the
+/// harness.
+pub fn within<T: Send + 'static>(
+    secs: u64,
+    what: &str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(std::time::Duration::from_secs(secs)) {
+        Ok(v) => v,
+        Err(_) => panic!("{what}: no completion or error within {secs}s — hang"),
+    }
+}

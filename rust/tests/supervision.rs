@@ -1,0 +1,277 @@
+//! Supervision + retry regression suite: worker crashes must surface as
+//! recovery (`retries ≥ 1`) or a `FutureError`-style condition — never
+//! as a hang. Covers the dispatch core deterministically (a scriptable
+//! lossy backend), the real process backends (kill/desync hooks), the
+//! batchtools failure exit paths, and bounded teardown.
+
+mod common;
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use common::{within, worker_env};
+use futurize::backend::multicore::MulticoreBackend;
+use futurize::backend::multisession::MultisessionBackend;
+use futurize::backend::{Backend, BackendEvent};
+use futurize::future_core::driver::{map_elements, MapOptions};
+use futurize::future_core::{TaskContext, TaskKind, TaskPayload};
+use futurize::prelude::*;
+use futurize::rlite::eval::Signal;
+
+// ---------------------------------------------------------------------------
+// Deterministic dispatch-core coverage: a backend that "loses" the
+// first N submitted tasks (they never run; a WorkerLost is emitted
+// instead of their Done), exactly like a worker dying at pickup.
+// ---------------------------------------------------------------------------
+
+struct LoseFirstBackend {
+    inner: Box<dyn Backend>,
+    losses_left: usize,
+    pending_loss: VecDeque<u64>,
+}
+
+impl LoseFirstBackend {
+    fn new(inner: Box<dyn Backend>, losses: usize) -> Self {
+        LoseFirstBackend { inner, losses_left: losses, pending_loss: VecDeque::new() }
+    }
+}
+
+impl Backend for LoseFirstBackend {
+    fn name(&self) -> &'static str {
+        "lose-first"
+    }
+
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+
+    fn register_context(&mut self, ctx: Arc<TaskContext>) -> Result<(), String> {
+        self.inner.register_context(ctx)
+    }
+
+    fn drop_context(&mut self, ctx_id: u64) -> Result<(), String> {
+        self.inner.drop_context(ctx_id)
+    }
+
+    fn submit(&mut self, task: TaskPayload) -> Result<(), String> {
+        if self.losses_left > 0 {
+            self.losses_left -= 1;
+            self.pending_loss.push_back(task.id);
+            return Ok(());
+        }
+        self.inner.submit(task)
+    }
+
+    fn next_event(&mut self) -> Result<BackendEvent, String> {
+        if let Some(id) = self.pending_loss.pop_front() {
+            return Ok(BackendEvent::WorkerLost { worker: 0, task: Some(id) });
+        }
+        self.inner.next_event()
+    }
+
+    fn try_next_event(&mut self) -> Result<Option<BackendEvent>, String> {
+        if let Some(id) = self.pending_loss.pop_front() {
+            return Ok(Some(BackendEvent::WorkerLost { worker: 0, task: Some(id) }));
+        }
+        self.inner.try_next_event()
+    }
+
+    fn cancel_queued(&mut self) -> Vec<u64> {
+        self.inner.cancel_queued()
+    }
+}
+
+fn lossy_session(losses: usize) -> Session {
+    let mut s = Session::new();
+    s.interp.session.install_backend(Box::new(LoseFirstBackend::new(
+        Box::new(MulticoreBackend::new(2)),
+        losses,
+    )));
+    s
+}
+
+fn closure(s: &mut Session, src: &str) -> RVal {
+    s.eval_str(&format!("__f <- {src}")).unwrap();
+    futurize::rlite::env::lookup(&s.interp.global, "__f").unwrap()
+}
+
+#[test]
+fn lost_chunk_is_resubmitted_under_retry_budget() {
+    let mut s = lossy_session(1);
+    let f = closure(&mut s, "function(x) x * 2");
+    let items: Vec<RVal> = (1..=8).map(|k| RVal::scalar_dbl(k as f64)).collect();
+    let genv = s.interp.global.clone();
+    let opts = MapOptions { retries: 1, ..Default::default() };
+    let (out, log) = s.interp.capture_stdout(move |i| {
+        let genv2 = genv.clone();
+        map_elements(i, &genv2, items, &f, vec![], &opts)
+    });
+    let out = out.unwrap();
+    let got: Vec<f64> = out.iter().map(|v| v.as_f64().unwrap()).collect();
+    assert_eq!(got, (1..=8).map(|k| (k * 2) as f64).collect::<Vec<_>>());
+    // The resubmission is announced, not silent.
+    assert!(log.contains("resubmitting"), "expected a retry warning, got: {log:?}");
+}
+
+#[test]
+fn lost_chunk_without_retries_raises_future_error() {
+    let mut s = lossy_session(1);
+    let f = closure(&mut s, "function(x) x * 2");
+    let items: Vec<RVal> = (1..=8).map(|k| RVal::scalar_dbl(k as f64)).collect();
+    let genv = s.interp.global.clone();
+    let err = map_elements(
+        &mut s.interp,
+        &genv,
+        items,
+        &f,
+        vec![],
+        &MapOptions::default(),
+    )
+    .unwrap_err();
+    match err {
+        Signal::Error(c) => {
+            assert!(c.inherits("FutureError"), "{:?}", c.classes);
+            assert!(c.message.contains("terminated unexpectedly"), "{}", c.message);
+            assert!(c.message.contains("worker 0"), "{}", c.message);
+        }
+        other => panic!("{other:?}"),
+    }
+    // The session stays usable: the next map call on the same backend
+    // runs normally.
+    let g = closure(&mut s, "function(x) x + 1");
+    let items: Vec<RVal> = (1..=4).map(|k| RVal::scalar_dbl(k as f64)).collect();
+    let out =
+        map_elements(&mut s.interp, &genv, items, &g, vec![], &MapOptions::default()).unwrap();
+    assert_eq!(out.len(), 4);
+}
+
+#[test]
+fn lost_low_level_future_raises_future_error() {
+    let mut s = lossy_session(1);
+    let err = s.eval_str("f <- future(21 * 2)\nvalue(f)").unwrap_err();
+    assert!(err.contains("terminated unexpectedly"), "{err}");
+    assert!(err.contains("worker"), "{err}");
+    // resolved() reports the lost future as resolved (its error is
+    // ready to collect), so poll loops terminate.
+    let mut s = lossy_session(1);
+    let v = s.eval_str("f <- future(1)\nresolved(f)").unwrap();
+    assert_eq!(v, RVal::scalar_bool(true));
+}
+
+// ---------------------------------------------------------------------------
+// Real process backends.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn multisession_drop_with_wedged_worker_is_bounded() {
+    // A worker stuck mid-task never reads the Shutdown message; Drop
+    // must fall back to kill() after a short grace period instead of
+    // wait()ing forever.
+    let elapsed = within(30, "multisession drop", || {
+        worker_env();
+        let mut b = MultisessionBackend::new(1).unwrap();
+        b.submit(TaskPayload {
+            id: 1,
+            kind: TaskKind::Expr {
+                expr: futurize::rlite::parse_expr("Sys.sleep(600)").unwrap(),
+                globals: vec![],
+            },
+            time_scale: 1.0,
+            capture_stdout: true,
+        })
+        .unwrap();
+        // Let the worker pick the task up and wedge.
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        let t0 = std::time::Instant::now();
+        drop(b);
+        t0.elapsed().as_secs_f64()
+    });
+    assert!(elapsed < 10.0, "drop took {elapsed:.1}s — grace period not enforced");
+}
+
+#[test]
+fn batchtools_corrupt_job_file_is_an_error_outcome() {
+    // An undecodable job file must produce a Done-with-error (and clean
+    // up its claimed file), not a silent drop that hangs the dispatch
+    // loop forever.
+    let (msg, leftovers) = within(20, "batchtools corrupt job", || {
+        let mut b =
+            futurize::backend::batchtools_sim::BatchtoolsSimBackend::new(1, 2.0).unwrap();
+        let jobs = b.spool_dir().join("jobs");
+        let tmp = jobs.join("0000000000000042.tmp");
+        let fin = jobs.join("0000000000000042.job");
+        std::fs::write(&tmp, b"this is not a wire frame").unwrap();
+        std::fs::rename(&tmp, &fin).unwrap();
+        let msg = loop {
+            match b.next_event().unwrap() {
+                BackendEvent::Done(o) => {
+                    assert_eq!(o.id, 42);
+                    break o.values.unwrap_err().message;
+                }
+                BackendEvent::Progress { .. } => {}
+                other => panic!("unexpected event: {other:?}"),
+            }
+        };
+        // Give the filesystem a beat, then check nothing leaked into
+        // running/.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let leftovers = std::fs::read_dir(b.spool_dir().join("running"))
+            .map(|rd| rd.count())
+            .unwrap_or(0);
+        (msg, leftovers)
+    });
+    assert!(msg.contains("decode"), "{msg}");
+    assert_eq!(leftovers, 0, "failed job leaked its claimed file");
+}
+
+#[test]
+fn protocol_desync_is_treated_as_worker_failure() {
+    // Garbage injected into the middle of the worker protocol stream
+    // must route through supervision (worker replaced, task reported
+    // lost) instead of leaving the reader on a misaligned stream.
+    let err = within(60, "multisession desync", || {
+        worker_env();
+        let mut s = Session::new();
+        s.eval_str("plan(multisession, workers = 2)").unwrap();
+        s.eval_str(
+            "lapply(1:4, function(x) { if (x == 2) futurize_test_desync()\nx }) \
+             |> futurize(chunk_size = 1)",
+        )
+        .unwrap_err()
+    });
+    assert!(err.contains("terminated unexpectedly"), "{err}");
+}
+
+#[test]
+fn retry_preserves_seed_invariance_across_resubmit() {
+    // seed = TRUE results must be identical whether or not a worker
+    // crash forced a chunk to be resubmitted: per-element L'Ecuyer
+    // streams travel with the chunk, so the replay draws the same
+    // numbers.
+    let reference: Vec<f64> = {
+        let mut s = Session::new();
+        s.eval_str("futureSeed(77)").unwrap();
+        s.eval_str("unlist(lapply(1:8, function(x) rnorm(1)) |> futurize(seed = TRUE))")
+            .unwrap()
+            .as_dbl_vec()
+            .unwrap()
+    };
+    let marker =
+        std::env::temp_dir().join(format!("futurize-seed-kill-{}", std::process::id()));
+    let _ = std::fs::remove_file(&marker);
+    let marker_str = marker.display().to_string();
+    let got = within(60, "multisession seeded retry", move || {
+        worker_env();
+        let mut s = Session::new();
+        s.eval_str("plan(multisession, workers = 2)").unwrap();
+        s.eval_str("futureSeed(77)").unwrap();
+        let (r, _out) = s.eval_captured(&format!(
+            "unlist(lapply(1:8, function(x) {{ \
+             if (x == 5) futurize_test_exit_once(\"{marker_str}\")\nrnorm(1) }}) \
+             |> futurize(seed = TRUE, chunk_size = 1, retries = 1))"
+        ));
+        r.unwrap().as_dbl_vec().unwrap()
+    });
+    let _ = std::fs::remove_file(&marker);
+    assert_eq!(got, reference, "resubmitted chunk drew different random numbers");
+}
