@@ -1,0 +1,145 @@
+//! Exp I1 micro — per-element rlite evaluation cost in the worker map
+//! loop, the hot path ISSUE 4 overhauled (COW values, interned symbols,
+//! frame reuse, hoisted capture).
+//!
+//! Three representative map bodies are timed through the real
+//! [`run_task`] slice path (what every backend executes per chunk):
+//!
+//! - `scalar_arith`    — `function(x) x * 2 + 1` over scalars;
+//! - `vector_slice`    — `function(x) sum(x[2:9]) / 8` over 16-elem
+//!   vectors (indexing + reduction);
+//! - `closure_capture` — a body that defines a nested closure, which
+//!   disqualifies frame reuse (exercises the escape-analysis fallback).
+//!
+//! Each body is measured twice: in the optimized loop and with
+//! `FUTURIZE_INTERP_COMPAT=1`, which restores the pre-overhaul loop
+//! *shape* (fresh iteration frame + per-element capture scope). The
+//! compat numbers under-state the true merge-base cost — COW lookups,
+//! interned dispatch and the scalar arithmetic fast path cannot be
+//! toggled off — so `speedup_vs_compat` is a conservative lower bound
+//! on the ns/elem improvement vs. the merge-base binary. Results land
+//! in `BENCH_interp.json` (`BENCH_SMOKE=1` shrinks sizes for CI).
+
+use futurize::backend::task_runner::run_task;
+use futurize::bench_harness as bh;
+use futurize::future_core::{ContextBody, TaskContext, TaskKind, TaskPayload};
+use futurize::rlite::env::frames_allocated;
+use futurize::rlite::eval::Interp;
+use futurize::rlite::serialize::{to_wire, WireVal};
+use futurize::wire::JsonValue;
+
+fn map_context(id: u64, f_src: &str) -> TaskContext {
+    let mut i = Interp::new();
+    i.eval_program(&format!("__f <- {f_src}")).unwrap();
+    let f = futurize::rlite::env::lookup(&i.global, "__f").unwrap();
+    TaskContext { id, body: ContextBody::Map { f: to_wire(&f).unwrap(), extra: vec![] }, globals: vec![] }
+}
+
+fn slice_task(ctx: u64, items: Vec<WireVal>) -> TaskPayload {
+    TaskPayload {
+        id: 1,
+        kind: TaskKind::MapSlice { ctx, items: items.into(), seeds: None },
+        time_scale: 0.0,
+        capture_stdout: true,
+    }
+}
+
+struct Case {
+    name: &'static str,
+    f_src: &'static str,
+    items: fn(usize) -> Vec<WireVal>,
+}
+
+fn scalar_items(n: usize) -> Vec<WireVal> {
+    (0..n).map(|k| WireVal::Dbl(vec![k as f64], None)).collect()
+}
+
+fn vector_items(n: usize) -> Vec<WireVal> {
+    (0..n)
+        .map(|k| WireVal::Dbl((0..16).map(|j| (k * 16 + j) as f64).collect(), None))
+        .collect()
+}
+
+const CASES: &[Case] = &[
+    Case { name: "scalar_arith", f_src: "function(x) x * 2 + 1", items: scalar_items },
+    Case { name: "vector_slice", f_src: "function(x) sum(x[2:9]) / 8", items: vector_items },
+    Case {
+        name: "closure_capture",
+        f_src: "function(x) { g <- function(y) y + x\ng(x) }",
+        items: scalar_items,
+    },
+];
+
+/// ns/elem for one case in the current mode (compat toggled by env).
+fn measure(case: &Case, n: usize, reps: usize) -> f64 {
+    let ctx = map_context(1, case.f_src);
+    let task = slice_task(1, (case.items)(n));
+    // Warmup (also forces interner/registry initialization).
+    let o = run_task(&task, Some(&ctx), 0, None);
+    assert!(o.values.is_ok(), "{}: {:?}", case.name, o.values);
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let o = run_task(&task, Some(&ctx), 0, None);
+        std::hint::black_box(&o);
+    }
+    t0.elapsed().as_secs_f64() * 1e9 / (n * reps) as f64
+}
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+    let smoke = bh::smoke_mode();
+    let (n, reps) = if smoke { (64, 4) } else { (2048, 40) };
+
+    let mut report = bh::JsonReport::new("BENCH_interp.json");
+    report.push("schema", JsonValue::String("interp_micro/v1".into()));
+    report.push_num("smoke", if smoke { 1.0 } else { 0.0 });
+    report.push_num("elements", n as f64);
+
+    bh::table_header(
+        "per-element map-loop eval cost",
+        &["body", "ns/elem", "compat ns/elem", "speedup"],
+    );
+    for case in CASES {
+        std::env::remove_var("FUTURIZE_INTERP_COMPAT");
+        let fast = measure(case, n, reps);
+        std::env::set_var("FUTURIZE_INTERP_COMPAT", "1");
+        let compat = measure(case, n, reps);
+        std::env::remove_var("FUTURIZE_INTERP_COMPAT");
+        let speedup = compat / fast;
+        bh::table_row(&[
+            case.name.to_string(),
+            format!("{fast:.0}"),
+            format!("{compat:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        report.push(
+            case.name,
+            JsonValue::obj(vec![
+                ("ns_per_elem", JsonValue::num(fast)),
+                ("compat_ns_per_elem", JsonValue::num(compat)),
+                ("speedup_vs_compat", JsonValue::num(speedup)),
+            ]),
+        );
+    }
+
+    // Frame allocations per element for the non-capturing body: must be
+    // ~0 (the per-slice setup frames amortize to nothing).
+    let ctx = map_context(2, CASES[0].f_src);
+    let task = slice_task(2, scalar_items(n));
+    let before = frames_allocated();
+    let o = run_task(&task, Some(&ctx), 0, None);
+    assert!(o.values.is_ok());
+    let per_elem = (frames_allocated() - before) as f64 / n as f64;
+    println!("\nframe allocs/elem (non-capturing body): {per_elem:.4}");
+    report.push_num("frame_allocs_per_elem", per_elem);
+    report.push(
+        "note",
+        JsonValue::String(
+            "compat = FUTURIZE_INTERP_COMPAT=1 (pre-overhaul loop shape: fresh frame + \
+             per-element capture); COW/interning gains are not toggleable, so speedup_vs_compat \
+             is a lower bound on the improvement vs. the merge-base binary"
+                .into(),
+        ),
+    );
+    report.write().unwrap();
+}

@@ -52,7 +52,7 @@ fn sapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
     let names = x.element_names().or_else(|| {
         // sapply over character vectors uses the values as names, as in R.
         match &x {
-            RVal::Chr(v) => Some(v.vals.clone()),
+            RVal::Chr(v) => Some(v.vals.to_vec()),
             _ => None,
         }
     });
@@ -277,7 +277,7 @@ fn eapply_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
         }
     };
     let f = as_function(&b.req(1, "FUN")?, env)?;
-    let mut bindings: Vec<(String, RVal)> = target.borrow().vars.clone().into_iter().collect();
+    let mut bindings: Vec<(String, RVal)> = crate::rlite::env::local_bindings(&target);
     bindings.sort_by(|a, b| a.0.cmp(&b.0));
     let names: Vec<String> = bindings.iter().map(|(n, _)| n.clone()).collect();
     let items: Vec<RVal> = bindings.into_iter().map(|(_, v)| v).collect();

@@ -83,7 +83,7 @@ fn fut_apply(i: &mut Interp, args: Args, env: &EnvRef, want: &str) -> EvalResult
     let f = as_function(f.ok_or_else(|| Signal::error("missing FUN"))?, env)?;
     let results = map_elements(i, env, x.iter_elements(), &f, rest, &opts.to_map_options(false))?;
     let names = x.element_names().or(match (&x, want) {
-        (RVal::Chr(v), "auto") => Some(v.vals.clone()),
+        (RVal::Chr(v), "auto") => Some(v.vals.to_vec()),
         _ => None,
     });
     simplify_to(results, names, want)
@@ -384,7 +384,7 @@ fn fut_eapply(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
         other => return Err(Signal::error(format!("not an environment: {}", other.class()))),
     };
     let f = as_function(f.ok_or_else(|| Signal::error("missing FUN"))?, env)?;
-    let mut bindings: Vec<(String, RVal)> = target.borrow().vars.clone().into_iter().collect();
+    let mut bindings: Vec<(String, RVal)> = crate::rlite::env::local_bindings(&target);
     bindings.sort_by(|a, b| a.0.cmp(&b.0));
     let names: Vec<String> = bindings.iter().map(|(n, _)| n.clone()).collect();
     let items: Vec<RVal> = bindings.into_iter().map(|(_, v)| v).collect();

@@ -67,7 +67,7 @@ pub(crate) fn as_function(v: &RVal, env: &EnvRef) -> Result<RVal, Signal> {
             let name = v.as_str().map_err(Signal::error)?;
             crate::rlite::env::lookup(env, &name)
                 .or_else(|| {
-                    crate::rlite::builtins::lookup_builtin(&name).map(|d| RVal::Builtin(d.key()))
+                    crate::rlite::builtins::lookup_builtin(&name).map(|d| RVal::Builtin(d.id))
                 })
                 .ok_or_else(|| Signal::error(format!("could not find function \"{name}\"")))
         }
@@ -103,12 +103,12 @@ pub(crate) fn simplify_to(
                 vals.push(r.as_f64().map_err(Signal::error)?);
             }
             if want == "int" {
-                Ok(RVal::Int(crate::rlite::value::RVec {
-                    vals: vals.into_iter().map(|x| x as i64).collect(),
+                Ok(RVal::Int(crate::rlite::value::RVec::with_names(
+                    vals.into_iter().map(|x| x as i64).collect(),
                     names,
-                }))
+                )))
             } else {
-                Ok(RVal::Dbl(crate::rlite::value::RVec { vals, names }))
+                Ok(RVal::Dbl(crate::rlite::value::RVec::with_names(vals, names)))
             }
         }
         "chr" => {
@@ -119,7 +119,7 @@ pub(crate) fn simplify_to(
                 }
                 vals.push(r.as_str_vec().map_err(Signal::error)?.remove(0));
             }
-            Ok(RVal::Chr(crate::rlite::value::RVec { vals, names }))
+            Ok(RVal::Chr(crate::rlite::value::RVec::with_names(vals, names)))
         }
         "lgl" => {
             let mut vals = Vec::with_capacity(results.len());
@@ -129,7 +129,7 @@ pub(crate) fn simplify_to(
                 }
                 vals.push(r.as_bool().map_err(Signal::error)?);
             }
-            Ok(RVal::Lgl(crate::rlite::value::RVec { vals, names }))
+            Ok(RVal::Lgl(crate::rlite::value::RVec::with_names(vals, names)))
         }
         other => Err(Signal::error(format!("unknown simplification '{other}'"))),
     }

@@ -21,15 +21,95 @@ use std::rc::Rc;
 
 use crate::future_core::{ContextBody, TaskContext, TaskKind, TaskOutcome, TaskPayload};
 use crate::rlite::conditions::{CaptureLog, RCondition};
-use crate::rlite::env::{define, Env};
-use crate::rlite::eval::{HandlerFrame, Interp, InterpConfig, Signal};
-use crate::rlite::serialize::{from_wire, to_wire, WireVal};
+use crate::rlite::env::{define, Env, EnvRef};
+use crate::rlite::eval::{HandlerFrame, Interp, InterpConfig, OutSink, Signal};
+use crate::rlite::serialize::{from_wire, to_wire_owned, WireVal};
 use crate::rlite::value::RVal;
 use crate::rng::RngStream;
 
 /// Condition classes streamed near-live instead of relayed at resolve
 /// time. Mirrors progressr's `progression` condition class.
 pub const LIVE_CLASSES: &[&str] = &["progression", "immediateCondition"];
+
+/// `FUTURIZE_INTERP_COMPAT=1` disables the per-element fast paths
+/// (iteration-frame reuse and hoisted capture), restoring the
+/// allocate-per-element loop shape this PR replaced. Used by
+/// `benches/interp_micro.rs` to measure the optimization in one binary.
+fn compat_mode() -> bool {
+    std::env::var("FUTURIZE_INTERP_COMPAT").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Per-slice capture scope: the Collect handler + stdout sink are pushed
+/// once per slice (not once per element) and drained into a single
+/// [`CaptureLog`], which is exactly what the per-element merge produced.
+struct SliceCapture {
+    sink: Rc<RefCell<Vec<RCondition>>>,
+    buf: Rc<RefCell<String>>,
+    rng_before: bool,
+}
+
+impl SliceCapture {
+    fn begin(interp: &mut Interp) -> SliceCapture {
+        let sink: Rc<RefCell<Vec<RCondition>>> = Rc::new(RefCell::new(Vec::new()));
+        let buf: Rc<RefCell<String>> = Rc::new(RefCell::new(String::new()));
+        interp
+            .handlers
+            .push(HandlerFrame::Collect { classes: vec!["condition".into()], sink: sink.clone() });
+        interp.out.push(OutSink::Capture(buf.clone()));
+        let rng_before = interp.rng_used;
+        interp.rng_used = false;
+        SliceCapture { sink, buf, rng_before }
+    }
+
+    fn finish(self, interp: &mut Interp) -> CaptureLog {
+        interp.out.pop();
+        interp.handlers.pop();
+        let rng_used = interp.rng_used;
+        interp.rng_used = self.rng_before || rng_used;
+        CaptureLog {
+            stdout: std::mem::take(&mut *self.buf.borrow_mut()),
+            conditions: std::mem::take(&mut *self.sink.borrow_mut()),
+            rng_used,
+        }
+    }
+}
+
+/// An iteration-frame pool of size one: hands out a cleared child frame
+/// of `parent` per element, reusing the allocation as long as nothing
+/// kept a reference to it (checked via `Rc::strong_count` after each
+/// call — the belt to the static escape analysis' braces).
+struct FrameReuse {
+    parent: EnvRef,
+    /// The reusable frame, absent while lent out or after an escape.
+    spare: Option<EnvRef>,
+    enabled: bool,
+}
+
+impl FrameReuse {
+    fn new(parent: EnvRef, enabled: bool) -> FrameReuse {
+        FrameReuse { parent, spare: None, enabled }
+    }
+
+    fn take(&mut self) -> EnvRef {
+        match self.spare.take() {
+            Some(e) => {
+                e.borrow_mut().vars.clear();
+                e
+            }
+            None => Env::child_of(&self.parent),
+        }
+    }
+
+    fn give_back(&mut self, fenv: EnvRef) {
+        // Reuse only when we hold the sole reference: a closure created
+        // in the frame, an `environment()` capture, or an escaped child
+        // env all keep the count above 1, and such a frame must survive
+        // untouched (R frames are garbage-collected, not recycled).
+        if self.enabled && Rc::strong_count(&fenv) == 1 {
+            self.spare = Some(fenv);
+        }
+    }
+}
 
 /// Execute one payload, invoking `progress_hook` for every live-class
 /// condition as it is signaled. `ctx` must be the registered
@@ -109,26 +189,82 @@ fn execute_kind(
             let func = from_wire(f, genv);
             let extra_vals: Vec<(Option<String>, RVal)> =
                 extra.iter().map(|(n, w)| (n.clone(), from_wire(w, genv))).collect();
+            let compat = compat_mode();
+            // Frame reuse: a non-env-capturing closure body gets one
+            // iteration frame for the whole slice (zero per-element
+            // frame allocations), guarded at runtime by the Rc count.
+            // Closures always route through the pool — with reuse
+            // disabled (escaping body, or compat mode restoring the
+            // legacy fresh-frame shape) it simply allocates per call.
+            let closure = match &func {
+                RVal::Closure(c) => Some(c.clone()),
+                _ => None,
+            };
+            let mut reuse = FrameReuse::new(
+                closure.as_ref().map(|c| c.env.clone()).unwrap_or_else(|| genv.clone()),
+                closure
+                    .as_ref()
+                    .is_some_and(|c| !compat && !crate::globals::env_may_escape(&c.body)),
+            );
+
             let mut out = Vec::with_capacity(items.len());
             let mut log = CaptureLog::default();
+            let slice_capture = if compat { None } else { Some(SliceCapture::begin(interp)) };
+            let mut err: Option<RCondition> = None;
+            // One argument buffer for the whole slice on the closure
+            // path: call_closure_in drains it, so refilling reuses its
+            // capacity (extra-arg values are Rc-cheap clones; only
+            // named-extra Strings copy). A builtin callee consumes an
+            // owned Vec per call, as before this PR.
+            let mut call_args: Vec<(Option<String>, RVal)> =
+                Vec::with_capacity(1 + extra_vals.len());
             for (k, item_w) in items.iter().enumerate() {
                 if let Some(seeds) = seeds {
                     interp.rng = RngStream::new(seeds[k]);
                 }
                 let item = from_wire(item_w, genv);
-                let mut call_args = vec![(None, item)];
-                call_args.extend(extra_vals.clone());
-                let (r, elem_log) = capture_call(interp, &func, call_args, genv);
-                log.merge(elem_log);
+                let elem_capture = if compat { Some(SliceCapture::begin(interp)) } else { None };
+                let r = match &closure {
+                    Some(c) => {
+                        call_args.clear();
+                        call_args.push((None, item));
+                        call_args.extend(extra_vals.iter().cloned());
+                        let fenv = reuse.take();
+                        let r = interp.call_closure_in(c, &mut call_args, &fenv);
+                        reuse.give_back(fenv);
+                        r
+                    }
+                    None => {
+                        let mut args = Vec::with_capacity(1 + extra_vals.len());
+                        args.push((None, item));
+                        args.extend(extra_vals.iter().cloned());
+                        interp.call_function(&func, args, genv)
+                    }
+                };
+                if let Some(cap) = elem_capture {
+                    log.merge(cap.finish(interp));
+                }
                 match r {
-                    Ok(v) => match to_wire(&v) {
+                    Ok(v) => match to_wire_owned(v) {
                         Ok(w) => out.push(w),
-                        Err(e) => return (Err(RCondition::error_cond(e)), log),
+                        Err(e) => {
+                            err = Some(RCondition::error_cond(e));
+                            break;
+                        }
                     },
-                    Err(cond) => return (Err(cond), log),
+                    Err(sig) => {
+                        err = Some(signal_to_cond(sig));
+                        break;
+                    }
                 }
             }
-            (Ok(out), log)
+            if let Some(cap) = slice_capture {
+                log.merge(cap.finish(interp));
+            }
+            match err {
+                Some(cond) => (Err(cond), log),
+                None => (Ok(out), log),
+            }
         }
         TaskKind::ForeachSlice { ctx: ctx_id, bindings, seeds } => {
             let Some(ctx) = ctx else {
@@ -138,27 +274,50 @@ fn execute_kind(
                 return (Err(context_mismatch(*ctx_id, "ForeachSlice")), CaptureLog::default());
             };
             install_globals(genv, &ctx.globals);
+            let compat = compat_mode();
+            let mut reuse = FrameReuse::new(
+                genv.clone(),
+                !compat && !crate::globals::env_may_escape(body),
+            );
             let mut out = Vec::with_capacity(bindings.len());
             let mut log = CaptureLog::default();
+            let slice_capture = if compat { None } else { Some(SliceCapture::begin(interp)) };
+            let mut err: Option<RCondition> = None;
             for (k, bs) in bindings.iter().enumerate() {
                 if let Some(seeds) = seeds {
                     interp.rng = RngStream::new(seeds[k]);
                 }
-                let iter_env = Env::child_of(genv);
+                let iter_env = reuse.take();
                 for (name, w) in bs {
                     define(&iter_env, name, from_wire(w, genv));
                 }
-                let (r, elem_log) = interp.eval_captured(body, &iter_env);
-                log.merge(elem_log);
+                let elem_capture = if compat { Some(SliceCapture::begin(interp)) } else { None };
+                let r = interp.eval(body, &iter_env);
+                if let Some(cap) = elem_capture {
+                    log.merge(cap.finish(interp));
+                }
+                reuse.give_back(iter_env);
                 match r {
-                    Ok(v) => match to_wire(&v) {
+                    Ok(v) => match to_wire_owned(v) {
                         Ok(w) => out.push(w),
-                        Err(e) => return (Err(RCondition::error_cond(e)), log),
+                        Err(e) => {
+                            err = Some(RCondition::error_cond(e));
+                            break;
+                        }
                     },
-                    Err(sig) => return (Err(signal_to_cond(sig)), log),
+                    Err(sig) => {
+                        err = Some(signal_to_cond(sig));
+                        break;
+                    }
                 }
             }
-            (Ok(out), log)
+            if let Some(cap) = slice_capture {
+                log.merge(cap.finish(interp));
+            }
+            match err {
+                Some(cond) => (Err(cond), log),
+                None => (Ok(out), log),
+            }
         }
     }
 }
@@ -175,38 +334,11 @@ fn context_mismatch(id: u64, kind: &str) -> RCondition {
     ))
 }
 
-fn capture_call(
-    interp: &mut Interp,
-    func: &RVal,
-    args: Vec<(Option<String>, RVal)>,
-    genv: &crate::rlite::env::EnvRef,
-) -> (Result<RVal, RCondition>, CaptureLog) {
-    // Wrap the call in eval_captured semantics manually: we capture via a
-    // synthetic expression would lose the argument values, so replicate
-    // the capture plumbing around call_function.
-    let sink: Rc<RefCell<Vec<RCondition>>> = Rc::new(RefCell::new(Vec::new()));
-    let buf: Rc<RefCell<String>> = Rc::new(RefCell::new(String::new()));
-    interp
-        .handlers
-        .push(HandlerFrame::Collect { classes: vec!["condition".into()], sink: sink.clone() });
-    interp.out.push(crate::rlite::eval::OutSink::Capture(buf.clone()));
-    let rng_before = interp.rng_used;
-    interp.rng_used = false;
-    let r = interp.call_function(func, args, genv);
-    let rng_used = interp.rng_used;
-    interp.rng_used = rng_before || rng_used;
-    interp.out.pop();
-    interp.handlers.pop();
-    let log =
-        CaptureLog { stdout: buf.borrow().clone(), conditions: sink.borrow().clone(), rng_used };
-    (r.map_err(signal_to_cond), log)
-}
-
 fn wrap_single(
     r: Result<RVal, Signal>,
 ) -> Result<Vec<WireVal>, RCondition> {
     match r {
-        Ok(v) => to_wire(&v).map(|w| vec![w]).map_err(RCondition::error_cond),
+        Ok(v) => to_wire_owned(v).map(|w| vec![w]).map_err(RCondition::error_cond),
         Err(sig) => Err(signal_to_cond(sig)),
     }
 }
@@ -232,6 +364,7 @@ mod tests {
     use super::*;
     use crate::future_core::{ContextBody, TaskContext, TaskKind, TaskPayload};
     use crate::rlite::parse_expr;
+    use crate::rlite::serialize::to_wire;
 
     fn expr_task(src: &str, globals: Vec<(String, WireVal)>) -> TaskPayload {
         TaskPayload {
@@ -331,6 +464,76 @@ mod tests {
             WireVal::Dbl(v, _) => assert_eq!(v[0], 102.0),
             other => panic!("{other:?}"),
         }
+    }
+
+    fn map_slice_task(ctx_id: u64, n: usize) -> TaskPayload {
+        TaskPayload {
+            id: 10,
+            kind: TaskKind::MapSlice {
+                ctx: ctx_id,
+                items: (0..n)
+                    .map(|k| WireVal::Dbl(vec![k as f64], None))
+                    .collect::<Vec<_>>()
+                    .into(),
+                seeds: None,
+            },
+            time_scale: 0.0,
+            capture_stdout: true,
+        }
+    }
+
+    /// Frame allocations for one N-element slice of `f_src`.
+    fn frame_allocs(f_src: &str, n: usize) -> u64 {
+        let ctx = map_context(11, f_src);
+        let t = map_slice_task(11, n);
+        let before = crate::rlite::env::frames_allocated();
+        let o = run_task(&t, Some(&ctx), 0, None);
+        let delta = crate::rlite::env::frames_allocated() - before;
+        assert!(o.values.is_ok(), "{:?}", o.values);
+        delta
+    }
+
+    #[test]
+    fn map_loop_reuses_iteration_frame() {
+        // A non-capturing closure body must not allocate environment
+        // frames per element: the per-slice overhead (fresh interp
+        // global env, closure re-rooting, one reusable frame) is
+        // constant in N.
+        let small = frame_allocs("function(x) x * 2 + 1", 4);
+        let large = frame_allocs("function(x) x * 2 + 1", 128);
+        assert_eq!(
+            small, large,
+            "frame allocations must not scale with element count (got {small} for N=4, {large} for N=128)"
+        );
+    }
+
+    #[test]
+    fn map_loop_escaping_body_falls_back_to_fresh_frames() {
+        // A body that defines a closure captures its frame: reuse must
+        // back off (allocations scale with N) and results stay correct.
+        let small = frame_allocs("function(x) { g <- function(y) y + x\ng(1) }", 4);
+        let large = frame_allocs("function(x) { g <- function(y) y + x\ng(1) }", 64);
+        assert!(large > small, "escaping bodies must get fresh frames per element");
+        let ctx = map_context(12, "function(x) { g <- function(y) y + x\ng(1) }");
+        let o = run_task(&map_slice_task(12, 3), Some(&ctx), 0, None);
+        let vals = o.values.unwrap();
+        match &vals[2] {
+            WireVal::Dbl(v, _) => assert_eq!(v[0], 3.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn map_loop_super_assign_sees_fresh_frame_per_element() {
+        // Each element call must start from an empty frame even under
+        // reuse: a stale binding from element k must not leak into k+1.
+        let ctx = map_context(
+            13,
+            "function(x) { if (exists(\"stale\")) stop(\"leaked\")\nstale <- x\nstale * 2 }",
+        );
+        let o = run_task(&map_slice_task(13, 5), Some(&ctx), 0, None);
+        let vals = o.values.unwrap();
+        assert_eq!(vals.len(), 5);
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub fn register(r: &mut Reg) {
 
 fn data_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
     let name = match args.first().map(|a| &a.value) {
-        Some(crate::rlite::ast::Expr::Sym(s)) => s.clone(),
+        Some(crate::rlite::ast::Expr::Sym(s)) => s.to_string(),
         Some(crate::rlite::ast::Expr::Str(s)) => s.clone(),
         _ => return Err(Signal::error("data: expected a dataset name")),
     };

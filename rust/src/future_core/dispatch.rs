@@ -40,7 +40,7 @@ use super::{ContextBody, TaskContext, TaskKind, TaskOutcome, TaskPayload, TraceE
 use crate::backend::BackendEvent;
 use crate::rlite::conditions::RCondition;
 use crate::rlite::eval::{Interp, Signal};
-use crate::rlite::serialize::{from_wire, WireSlice, WireVal};
+use crate::rlite::serialize::{from_wire_owned, WireSlice, WireVal};
 use crate::rlite::value::RVal;
 use crate::rng::RngState;
 use crate::scheduling::make_chunks;
@@ -423,13 +423,20 @@ impl FutureSet {
             end: outcome.finished_unix - self.t0,
         });
         // Streaming reduction: values land in their slots immediately.
-        match &outcome.values {
+        // Values are taken out of the outcome (relay only needs the log
+        // and the error case), so the decoded buffers *move* into the
+        // result vector — zero re-copies on the in-process fast path.
+        let mut outcome = outcome;
+        match std::mem::replace(&mut outcome.values, Ok(vec![])) {
             Ok(vals) => {
-                for (k, w) in vals.iter().enumerate() {
-                    self.out[start + k] = Some(from_wire(w, &i.global));
+                for (k, w) in vals.into_iter().enumerate() {
+                    self.out[start + k] = Some(from_wire_owned(w, &i.global));
                 }
             }
-            Err(_) => self.error_seen = true,
+            Err(cond) => {
+                self.error_seen = true;
+                outcome.values = Err(cond);
+            }
         }
         self.pending_relay.insert(chunk_idx, outcome);
         self.relay_ready(i, opts)

@@ -84,8 +84,13 @@ pub fn map_elements(
         return Ok(vec![]);
     }
     let f_wire = to_wire(f).map_err(Signal::error)?;
-    let items_wire: Vec<WireVal> =
-        items.iter().map(to_wire).collect::<Result<_, _>>().map_err(Signal::error)?;
+    // Consuming conversion: per-element scalars are uniquely owned, so
+    // their COW buffers move into the wire payload instead of copying.
+    let items_wire: Vec<WireVal> = items
+        .into_iter()
+        .map(crate::rlite::serialize::to_wire_owned)
+        .collect::<Result<_, _>>()
+        .map_err(Signal::error)?;
     let mut extra_wire = Vec::with_capacity(extra.len());
     for (name, v) in &extra {
         extra_wire.push((name.clone(), to_wire(v).map_err(Signal::error)?));
@@ -113,18 +118,18 @@ pub fn foreach_elements(
     // Globals: free vars of body minus per-iteration bindings.
     let bound: Vec<&str> = bindings[0].iter().map(|(k, _)| k.as_str()).collect();
     let mut globals = Vec::new();
-    for name in crate::globals::free_variables(body) {
-        if bound.contains(&name.as_str()) {
+    for sym in crate::globals::free_variables(body) {
+        if bound.contains(&sym.as_str()) {
             continue;
         }
-        if let Some(v) = crate::rlite::env::lookup(env, &name) {
+        if let Some(v) = crate::rlite::env::lookup_sym(env, sym) {
             if matches!(v, RVal::Builtin(_)) {
                 continue;
             }
-            globals.push((name.clone(), to_wire(&v).map_err(Signal::error)?));
-        } else if crate::rlite::builtins::lookup_builtin(&name).is_none() {
+            globals.push((sym.to_string(), to_wire(&v).map_err(Signal::error)?));
+        } else if sym.builtin_id().is_none() {
             return Err(Signal::error(format!(
-                "Failed to identify a global variable: '{name}' is not defined"
+                "Failed to identify a global variable: '{sym}' is not defined"
             )));
         }
     }

@@ -259,7 +259,7 @@ fn plan_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
         return Ok(RVal::scalar_str(i.session.plan.describe()));
     };
     let kind_name = match &first.value {
-        Expr::Sym(s) => s.clone(),
+        Expr::Sym(s) => s.to_string(),
         Expr::Ns { pkg, name } => format!("{pkg}::{name}"),
         Expr::Str(s) => s.clone(),
         other => {
@@ -277,7 +277,7 @@ fn plan_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
                 let v = i.eval(&a.value, env)?;
                 match &v {
                     RVal::Chr(names) => {
-                        worker_names = names.vals.clone();
+                        worker_names = names.vals.to_vec();
                         workers = Some(names.vals.len());
                     }
                     other => workers = Some(other.as_usize().map_err(Signal::error)?),
@@ -324,7 +324,7 @@ fn future_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
 /// first use, i.e. immediately at bind time).
 fn future_assign_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
     let target = match &args[0].value {
-        Expr::Sym(s) => s.clone(),
+        Expr::Sym(s) => *s,
         other => {
             return Err(Signal::error(format!(
                 "invalid %<-% target: {}",
@@ -334,7 +334,7 @@ fn future_assign_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
     };
     let id = submit_expr(i, &args[1].value, env)?;
     let v = wait_for(i, id, env)?;
-    crate::rlite::env::define(env, &target, v.clone());
+    crate::rlite::env::define_sym(env, target, v.clone());
     Ok(v)
 }
 
@@ -417,8 +417,8 @@ fn finish_outcome(i: &mut Interp, outcome: TaskOutcome, _env: &EnvRef) -> EvalRe
         Ok(vals) => {
             let genv = i.global.clone();
             let mut out: Vec<RVal> = vals
-                .iter()
-                .map(|w| crate::rlite::serialize::from_wire(w, &genv))
+                .into_iter()
+                .map(|w| crate::rlite::serialize::from_wire_owned(w, &genv))
                 .collect();
             Ok(out.pop().unwrap_or(RVal::Null))
         }

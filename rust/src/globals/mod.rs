@@ -9,32 +9,38 @@
 //! symbols that resolve to builtins need no export (every "package"
 //! ships inside the worker binary — the `packages` option becomes a
 //! load-check rather than a code shipment).
+//!
+//! This module also hosts the *frame escape analysis* used by the
+//! per-element map loop: a closure body through which no reference to
+//! the call frame can leak may have its frame reused across elements
+//! ([`env_may_escape`]).
 
 use std::collections::HashSet;
 
 use crate::rlite::ast::{Arg, Expr};
 use crate::rlite::builtins;
 use crate::rlite::env::{self, EnvRef};
+use crate::rlite::intern::Symbol;
 use crate::rlite::value::RVal;
 
 /// Free variables of `expr`, in first-use order.
-pub fn free_variables(expr: &Expr) -> Vec<String> {
-    let mut bound: HashSet<String> = HashSet::new();
-    let mut free: Vec<String> = Vec::new();
-    let mut seen: HashSet<String> = HashSet::new();
+pub fn free_variables(expr: &Expr) -> Vec<Symbol> {
+    let mut bound: HashSet<Symbol> = HashSet::new();
+    let mut free: Vec<Symbol> = Vec::new();
+    let mut seen: HashSet<Symbol> = HashSet::new();
     walk(expr, &mut bound, &mut free, &mut seen);
     free
 }
 
-fn note(name: &str, bound: &HashSet<String>, free: &mut Vec<String>, seen: &mut HashSet<String>) {
-    if !bound.contains(name) && seen.insert(name.to_string()) {
-        free.push(name.to_string());
+fn note(sym: Symbol, bound: &HashSet<Symbol>, free: &mut Vec<Symbol>, seen: &mut HashSet<Symbol>) {
+    if !bound.contains(&sym) && seen.insert(sym) {
+        free.push(sym);
     }
 }
 
-fn walk(e: &Expr, bound: &mut HashSet<String>, free: &mut Vec<String>, seen: &mut HashSet<String>) {
+fn walk(e: &Expr, bound: &mut HashSet<Symbol>, free: &mut Vec<Symbol>, seen: &mut HashSet<Symbol>) {
     match e {
-        Expr::Sym(name) => note(name, bound, free, seen),
+        Expr::Sym(name) => note(*name, bound, free, seen),
         Expr::Call { func, args } => {
             walk(func, bound, free, seen);
             walk_args(args, bound, free, seen);
@@ -43,7 +49,7 @@ fn walk(e: &Expr, bound: &mut HashSet<String>, free: &mut Vec<String>, seen: &mu
             // Parameters bind inside the function body only.
             let mut inner = bound.clone();
             for p in params {
-                inner.insert(p.name.clone());
+                inner.insert(p.name);
             }
             for p in params {
                 if let Some(d) = &p.default {
@@ -66,7 +72,7 @@ fn walk(e: &Expr, bound: &mut HashSet<String>, free: &mut Vec<String>, seen: &mu
         }
         Expr::For { var, seq, body } => {
             walk(seq, bound, free, seen);
-            bound.insert(var.clone());
+            bound.insert(*var);
             walk(body, bound, free, seen);
         }
         Expr::While { cond, body } => {
@@ -78,7 +84,7 @@ fn walk(e: &Expr, bound: &mut HashSet<String>, free: &mut Vec<String>, seen: &mu
             walk(value, bound, free, seen);
             match target.as_ref() {
                 Expr::Sym(name) => {
-                    bound.insert(name.clone());
+                    bound.insert(*name);
                 }
                 other => walk(other, bound, free, seen),
             }
@@ -87,7 +93,7 @@ fn walk(e: &Expr, bound: &mut HashSet<String>, free: &mut Vec<String>, seen: &mu
             // `x <<- v` *reads* an enclosing binding: x stays free.
             walk(value, bound, free, seen);
             if let Expr::Sym(name) = target.as_ref() {
-                note(name, bound, free, seen);
+                note(*name, bound, free, seen);
             }
         }
         Expr::Index { obj, args, .. } => {
@@ -101,12 +107,67 @@ fn walk(e: &Expr, bound: &mut HashSet<String>, free: &mut Vec<String>, seen: &mu
 
 fn walk_args(
     args: &[Arg],
-    bound: &mut HashSet<String>,
-    free: &mut Vec<String>,
-    seen: &mut HashSet<String>,
+    bound: &mut HashSet<Symbol>,
+    free: &mut Vec<Symbol>,
+    seen: &mut HashSet<Symbol>,
 ) {
     for a in args {
         walk(&a.value, bound, free, seen);
+    }
+}
+
+/// Function names whose *call* can hand out a reference to the current
+/// evaluation frame (directly or via a child environment). A body
+/// containing any of these — or any nested `function`/`\(x)` definition,
+/// which closes over the frame — disqualifies frame reuse.
+const ENV_ESCAPE_FNS: &[&str] = &[
+    "environment",
+    "new.env",
+    "local",
+    "eval",
+    "evalq",
+    "sys.call",
+    "sys.function",
+    "parent.frame",
+    "delayedAssign",
+    "attach",
+];
+
+/// Conservative escape analysis for the per-element frame-reuse
+/// optimization: can evaluating `e` as a closure body leak a reference
+/// to the evaluation frame? True for nested function definitions (they
+/// capture the frame as their enclosing environment) and for calls to
+/// environment-reifying builtins. The map loop additionally guards with
+/// a runtime `Rc::strong_count` check, so this analysis only needs to be
+/// *usually* right to be profitable — but it must never be wrong in the
+/// "no escape" direction together with that guard.
+pub fn env_may_escape(e: &Expr) -> bool {
+    match e {
+        Expr::Function { .. } => true,
+        Expr::Call { func, args } => {
+            let head_escapes = match func.as_ref() {
+                Expr::Sym(s) => ENV_ESCAPE_FNS.contains(&s.as_str()),
+                Expr::Ns { name, .. } => ENV_ESCAPE_FNS.contains(&name.as_str()),
+                other => env_may_escape(other),
+            };
+            head_escapes || args.iter().any(|a| env_may_escape(&a.value))
+        }
+        Expr::Block(stmts) => stmts.iter().any(env_may_escape),
+        Expr::If { cond, then, els } => {
+            env_may_escape(cond)
+                || env_may_escape(then)
+                || els.as_deref().is_some_and(env_may_escape)
+        }
+        Expr::For { seq, body, .. } => env_may_escape(seq) || env_may_escape(body),
+        Expr::While { cond, body } => env_may_escape(cond) || env_may_escape(body),
+        Expr::Assign { target, value } | Expr::SuperAssign { target, value } => {
+            env_may_escape(target) || env_may_escape(value)
+        }
+        Expr::Index { obj, args, .. } => {
+            env_may_escape(obj) || args.iter().any(|a| env_may_escape(&a.value))
+        }
+        Expr::Dollar { obj, .. } => env_may_escape(obj),
+        _ => false,
     }
 }
 
@@ -125,18 +186,18 @@ pub struct GlobalsExport {
 pub fn identify_globals(expr: &Expr, env: &EnvRef) -> Result<GlobalsExport, String> {
     let mut out = GlobalsExport::default();
     let mut pkgs: HashSet<String> = HashSet::new();
-    for name in free_variables(expr) {
-        if let Some(v) = env::lookup(env, &name) {
+    for sym in free_variables(expr) {
+        if let Some(v) = env::lookup_sym(env, sym) {
             // Builtin references resolve implicitly on the worker.
             if let RVal::Builtin(_) = v {
                 continue;
             }
-            out.values.push((name, v));
-        } else if let Some(def) = builtins::lookup_builtin(&name) {
+            out.values.push((sym.to_string(), v));
+        } else if let Some(def) = builtins::lookup_builtin(sym.as_str()) {
             pkgs.insert(def.pkg.to_string());
         } else {
             return Err(format!(
-                "Failed to identify a global variable: '{name}' is not defined"
+                "Failed to identify a global variable: '{sym}' is not defined"
             ));
         }
     }
@@ -165,16 +226,20 @@ mod tests {
     use crate::rlite::env::{define, Env};
     use crate::rlite::parse_expr;
 
+    fn free_names(e: &Expr) -> Vec<String> {
+        free_variables(e).into_iter().map(|s| s.to_string()).collect()
+    }
+
     #[test]
     fn finds_free_variables() {
         let e = parse_expr("function(x) x + a + b").unwrap();
-        assert_eq!(free_variables(&e), vec!["+", "a", "b"]);
+        assert_eq!(free_names(&e), vec!["+", "a", "b"]);
     }
 
     #[test]
     fn params_and_locals_are_bound() {
         let e = parse_expr("function(x) { y <- x * 2\ny + x }").unwrap();
-        let frees = free_variables(&e);
+        let frees = free_names(&e);
         assert!(!frees.contains(&"x".to_string()));
         assert!(!frees.contains(&"y".to_string()));
     }
@@ -182,7 +247,7 @@ mod tests {
     #[test]
     fn loop_variable_is_bound() {
         let e = parse_expr("for (i in 1:10) s <- s + i").unwrap();
-        let frees = free_variables(&e);
+        let frees = free_names(&e);
         assert!(!frees.contains(&"i".to_string()));
         assert!(frees.contains(&"s".to_string()));
     }
@@ -191,7 +256,7 @@ mod tests {
     fn rhs_before_binding() {
         // `x <- x + 1` reads a global x before rebinding.
         let e = parse_expr("x <- x + 1").unwrap();
-        assert!(free_variables(&e).contains(&"x".to_string()));
+        assert!(free_names(&e).contains(&"x".to_string()));
     }
 
     #[test]
@@ -213,5 +278,36 @@ mod tests {
         let e = parse_expr("f(undefined_thing)").unwrap();
         let err = identify_globals(&e, &env).unwrap_err();
         assert!(err.contains("Failed to identify a global variable"), "{err}");
+    }
+
+    #[test]
+    fn escape_analysis_flags_env_reifiers() {
+        for src in [
+            "environment()",
+            "local({ x + 1 })",
+            "{ g <- function(y) y + x\ng(x) }",
+            "\\(y) y",
+            "eval(e)",
+            "new.env()",
+            "list(environment(), 1)",
+        ] {
+            let e = parse_expr(src).unwrap();
+            assert!(env_may_escape(&e), "{src} must be flagged as escaping");
+        }
+    }
+
+    #[test]
+    fn escape_analysis_clears_plain_bodies() {
+        for src in [
+            "x * 2 + 1",
+            "sum(x[1:10]) / 10",
+            "{ s <- 0\nfor (i in 1:5) s <- s + i\ns }",
+            "if (x > 0) sqrt(x) else -x",
+            "counter <<- counter + 1",
+            "get(\"x\")",
+        ] {
+            let e = parse_expr(src).unwrap();
+            assert!(!env_may_escape(&e), "{src} must be reusable");
+        }
     }
 }

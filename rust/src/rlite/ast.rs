@@ -8,6 +8,8 @@
 
 use serde_derive::{Deserialize, Serialize};
 
+use super::intern::Symbol;
+
 /// A call argument: optionally named, as in `f(x, n = 10)`.
 #[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
 pub struct Arg {
@@ -24,10 +26,12 @@ impl Arg {
     }
 }
 
-/// A formal parameter of a `function(...)` definition.
+/// A formal parameter of a `function(...)` definition. The name is an
+/// interned [`Symbol`] so per-call parameter binding is id comparison
+/// (it still serializes as the identifier text).
 #[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
 pub struct Param {
-    pub name: String,
+    pub name: Symbol,
     pub default: Option<Expr>,
 }
 
@@ -44,8 +48,8 @@ pub enum Expr {
     Num(f64),
     /// String literal
     Str(String),
-    /// Symbol (variable reference)
-    Sym(String),
+    /// Symbol (variable reference), interned at parse time
+    Sym(Symbol),
     /// Namespace access `pkg::name`
     Ns { pkg: String, name: String },
     /// Function call `f(a, b = 1)`. Infix operators, `[`/`[[` indexing and
@@ -58,7 +62,7 @@ pub enum Expr {
     /// `if (cond) then else els`
     If { cond: Box<Expr>, then: Box<Expr>, els: Option<Box<Expr>> },
     /// `for (var in seq) body`
-    For { var: String, seq: Box<Expr>, body: Box<Expr> },
+    For { var: Symbol, seq: Box<Expr>, body: Box<Expr> },
     /// `while (cond) body`
     While { cond: Box<Expr>, body: Box<Expr> },
     /// `target <- value` (also `=` at statement level and `->` reversed)
@@ -83,7 +87,7 @@ pub enum Expr {
 impl Expr {
     /// Convenience: build a call to a named function.
     pub fn call(name: &str, args: Vec<Arg>) -> Expr {
-        Expr::Call { func: Box::new(Expr::Sym(name.to_string())), args }
+        Expr::Call { func: Box::new(Expr::Sym(name.into())), args }
     }
 
     /// Convenience: build a namespaced call `pkg::name(args)`.
@@ -108,7 +112,7 @@ impl Expr {
     pub fn call_name(&self) -> Option<&str> {
         match self {
             Expr::Call { func, .. } => match func.as_ref() {
-                Expr::Sym(s) => Some(s),
+                Expr::Sym(s) => Some(s.as_str()),
                 Expr::Ns { name, .. } => Some(name),
                 _ => None,
             },

@@ -80,7 +80,7 @@ fn ifelse_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
 /// the builtin registry (all supported packages ship in-binary).
 fn library_fn(_i: &mut Interp, args: &[Arg], _env: &EnvRef) -> EvalResult {
     let pkg = match args.first().map(|a| &a.value) {
-        Some(crate::rlite::ast::Expr::Sym(s)) => s.clone(),
+        Some(crate::rlite::ast::Expr::Sym(s)) => s.to_string(),
         Some(crate::rlite::ast::Expr::Str(s)) => s.clone(),
         _ => return Err(Signal::error("library: missing package")),
     };
@@ -110,7 +110,7 @@ fn match_fun_fn(_i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
         RVal::Chr(_) => {
             let name = f.as_str().map_err(Signal::error)?;
             env::lookup(env, &name)
-                .or_else(|| super::lookup_builtin(&name).map(|d| RVal::Builtin(d.key())))
+                .or_else(|| super::lookup_builtin(&name).map(|d| RVal::Builtin(d.id)))
                 .ok_or_else(|| Signal::error(format!("could not find function \"{name}\"")))
         }
         _ if f.is_function() => Ok(f),

@@ -178,7 +178,7 @@ pub fn combine(items: Vec<(Option<String>, RVal)>) -> EvalResult {
             push_names(&mut names, n, v, s.len());
             vals.extend(s);
         }
-        return Ok(RVal::Chr(RVec { vals, names: if any_names { Some(names) } else { None } }));
+        return Ok(RVal::Chr(RVec::with_names(vals, if any_names { Some(names) } else { None })));
     }
     // All-logical stays logical (R's coercion hierarchy).
     let all_lgl = items.iter().all(|(_, v)| matches!(v, RVal::Lgl(_) | RVal::Null));
@@ -190,7 +190,7 @@ pub fn combine(items: Vec<(Option<String>, RVal)>) -> EvalResult {
                 vals.extend(b.vals.iter().copied());
             }
         }
-        return Ok(RVal::Lgl(RVec { vals, names: if any_names { Some(names) } else { None } }));
+        return Ok(RVal::Lgl(RVec::with_names(vals, if any_names { Some(names) } else { None })));
     }
     let mut vals = Vec::new();
     for (n, v) in &items {
@@ -198,7 +198,7 @@ pub fn combine(items: Vec<(Option<String>, RVal)>) -> EvalResult {
         push_names(&mut names, n, v, d.len());
         vals.extend(d);
     }
-    Ok(RVal::Dbl(RVec { vals, names: if any_names { Some(names) } else { None } }))
+    Ok(RVal::Dbl(RVec::with_names(vals, if any_names { Some(names) } else { None })))
 }
 
 fn list_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
@@ -231,28 +231,28 @@ fn rev_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
     let x = b.req(0, "x")?;
     Ok(match x {
         RVal::Dbl(mut v) => {
-            v.vals.reverse();
+            v.vals_mut().reverse();
             if let Some(n) = &mut v.names {
                 n.reverse();
             }
             RVal::Dbl(v)
         }
         RVal::Int(mut v) => {
-            v.vals.reverse();
+            v.vals_mut().reverse();
             if let Some(n) = &mut v.names {
                 n.reverse();
             }
             RVal::Int(v)
         }
         RVal::Chr(mut v) => {
-            v.vals.reverse();
+            v.vals_mut().reverse();
             if let Some(n) = &mut v.names {
                 n.reverse();
             }
             RVal::Chr(v)
         }
         RVal::Lgl(mut v) => {
-            v.vals.reverse();
+            v.vals_mut().reverse();
             if let Some(n) = &mut v.names {
                 n.reverse();
             }
@@ -788,7 +788,7 @@ fn do_call_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
         RVal::Chr(_) => {
             let name = what.as_str().map_err(Signal::error)?;
             env::lookup(env, &name)
-                .or_else(|| super::lookup_builtin(&name).map(|d| RVal::Builtin(d.key())))
+                .or_else(|| super::lookup_builtin(&name).map(|d| RVal::Builtin(d.id)))
                 .ok_or_else(|| Signal::error(format!("could not find function \"{name}\"")))?
         }
         other => other.clone(),
@@ -851,7 +851,7 @@ fn unique_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
     match x {
         RVal::Chr(v) => {
             let mut seen = std::collections::HashSet::new();
-            Ok(RVal::chr(v.vals.into_iter().filter(|s| seen.insert(s.clone())).collect()))
+            Ok(RVal::chr(v.take_vals().into_iter().filter(|s| seen.insert(s.clone())).collect()))
         }
         other => {
             let d = other.as_dbl_vec().map_err(Signal::error)?;
@@ -873,9 +873,10 @@ fn sort_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
     let x = b.req(0, "x")?;
     match x {
         RVal::Chr(mut v) => {
-            v.vals.sort();
+            let vals = v.vals_mut();
+            vals.sort();
             if decreasing {
-                v.vals.reverse();
+                vals.reverse();
             }
             v.names = None;
             Ok(RVal::Chr(v))
@@ -916,7 +917,7 @@ fn get_fn(_i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
         _ => env.clone(),
     };
     env::lookup(&target, &name)
-        .or_else(|| super::lookup_builtin(&name).map(|d| RVal::Builtin(d.key())))
+        .or_else(|| super::lookup_builtin(&name).map(|d| RVal::Builtin(d.id)))
         .ok_or_else(|| Signal::error(format!("object '{name}' not found")))
 }
 

@@ -52,10 +52,30 @@ pub fn register(r: &mut Reg) {
     r.normal("base", "pmax", pmax_fn);
 }
 
+/// Borrowed double view of an operand: zero-copy for `Dbl` values (the
+/// hot case under COW), a scratch coercion for everything else.
+fn dbl_view<'a>(v: &'a RVal, scratch: &'a mut Vec<f64>) -> Result<&'a [f64], Signal> {
+    match v.as_dbl_slice() {
+        Some(s) => Ok(s),
+        None => {
+            *scratch = v.as_dbl_vec().map_err(Signal::error)?;
+            Ok(scratch)
+        }
+    }
+}
+
 /// Elementwise binary op with R recycling and name preservation.
 fn binop(a: &RVal, b: &RVal, f: impl Fn(f64, f64) -> f64) -> EvalResult {
-    let av = a.as_dbl_vec().map_err(Signal::error)?;
-    let bv = b.as_dbl_vec().map_err(Signal::error)?;
+    // Scalar-scalar fast path: the dominant shape inside map bodies
+    // (`x * 2 + 1`) — no coercion buffers, no recycling arithmetic.
+    if let (RVal::Dbl(x), RVal::Dbl(y)) = (a, b) {
+        if x.len() == 1 && y.len() == 1 && x.names.is_none() && y.names.is_none() {
+            return Ok(RVal::scalar_dbl(f(x.vals[0], y.vals[0])));
+        }
+    }
+    let (mut sa, mut sb) = (Vec::new(), Vec::new());
+    let av = dbl_view(a, &mut sa)?;
+    let bv = dbl_view(b, &mut sb)?;
     if av.is_empty() || bv.is_empty() {
         return Ok(RVal::dbl(vec![]));
     }
@@ -69,12 +89,18 @@ fn binop(a: &RVal, b: &RVal, f: impl Fn(f64, f64) -> f64) -> EvalResult {
     } else {
         b.names().map(|x| x.to_vec())
     };
-    Ok(RVal::Dbl(RVec { vals: out, names }))
+    Ok(RVal::Dbl(RVec::with_names(out, names)))
 }
 
 fn cmpop(a: &RVal, b: &RVal, f: impl Fn(f64, f64) -> bool) -> EvalResult {
-    let av = a.as_dbl_vec().map_err(Signal::error)?;
-    let bv = b.as_dbl_vec().map_err(Signal::error)?;
+    if let (RVal::Dbl(x), RVal::Dbl(y)) = (a, b) {
+        if x.len() == 1 && y.len() == 1 {
+            return Ok(RVal::scalar_bool(f(x.vals[0], y.vals[0])));
+        }
+    }
+    let (mut sa, mut sb) = (Vec::new(), Vec::new());
+    let av = dbl_view(a, &mut sa)?;
+    let bv = dbl_view(b, &mut sb)?;
     if av.is_empty() || bv.is_empty() {
         return Ok(RVal::lgl(vec![]));
     }
@@ -150,7 +176,7 @@ fn eq_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
 
 fn neq_fn(i: &mut Interp, args: Args, env: &EnvRef) -> EvalResult {
     match eq_fn(i, args, env)? {
-        RVal::Lgl(v) => Ok(RVal::lgl(v.vals.into_iter().map(|b| !b).collect())),
+        RVal::Lgl(v) => Ok(RVal::lgl(v.vals.iter().map(|&b| !b).collect())),
         other => Ok(other),
     }
 }
@@ -219,7 +245,7 @@ macro_rules! unary {
             let x = args.bind(&["x"]).req(0, "x")?;
             let d = x.as_dbl_vec().map_err(Signal::error)?;
             let names = x.names().map(|n| n.to_vec());
-            Ok(RVal::Dbl(RVec { vals: d.into_iter().map($f).collect(), names }))
+            Ok(RVal::Dbl(RVec::with_names(d.into_iter().map($f).collect(), names)))
         }
     };
 }
@@ -257,8 +283,9 @@ fn round_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
 
 fn sum_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
     let mut s = 0.0;
+    let mut scratch = Vec::new();
     for (_, v) in &args.items {
-        for x in v.as_dbl_vec().map_err(Signal::error)? {
+        for x in dbl_view(v, &mut scratch)? {
             s += x;
         }
     }

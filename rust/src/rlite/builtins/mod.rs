@@ -119,10 +119,17 @@ pub enum BuiltinFn {
     Special(Box<dyn Fn(&mut Interp, &[Arg], &EnvRef) -> EvalResult + Send + Sync>),
 }
 
+/// Dense registry slot of a builtin. `RVal::Builtin` carries this, so
+/// call dispatch indexes a `Vec` instead of hashing a `"pkg::name"`
+/// string per call.
+pub type BuiltinId = u32;
+
 /// A registered builtin.
 pub struct BuiltinDef {
     pub name: &'static str,
     pub pkg: &'static str,
+    /// This def's slot in [`Registry::defs`].
+    pub id: BuiltinId,
     pub f: BuiltinFn,
 }
 
@@ -132,25 +139,30 @@ impl BuiltinDef {
     }
 }
 
-/// The global registry, keyed by `"pkg::name"`, plus an unqualified-name
-/// index (first registration wins — base R registers first, mirroring R's
-/// search path).
+/// The global registry: defs in registration order (indexed by
+/// [`BuiltinId`]), a `"pkg::name"` key index, and an unqualified-name
+/// index (first registration wins — base R registers first, mirroring
+/// R's search path).
 pub struct Registry {
-    pub by_key: HashMap<String, BuiltinDef>,
-    pub by_name: HashMap<&'static str, String>,
+    pub defs: Vec<BuiltinDef>,
+    pub by_key: HashMap<String, BuiltinId>,
+    pub by_name: HashMap<&'static str, BuiltinId>,
     /// Registration order of packages (for `futurize_supported_packages`).
     pub packages: Vec<&'static str>,
 }
 
 impl Registry {
-    fn register(&mut self, def: BuiltinDef) {
+    fn register(&mut self, mut def: BuiltinDef) {
         if !self.packages.contains(&def.pkg) {
             self.packages.push(def.pkg);
         }
-        self.by_name.entry(def.name).or_insert_with(|| def.key());
+        let id = self.defs.len() as BuiltinId;
+        def.id = id;
         let key = def.key();
-        let prev = self.by_key.insert(key.clone(), def);
+        self.by_name.entry(def.name).or_insert(id);
+        let prev = self.by_key.insert(key.clone(), id);
         debug_assert!(prev.is_none(), "duplicate builtin {key}");
+        self.defs.push(def);
     }
 }
 
@@ -164,7 +176,7 @@ impl<'a> Reg<'a> {
         name: &'static str,
         f: impl Fn(&mut Interp, Args, &EnvRef) -> EvalResult + Send + Sync + 'static,
     ) {
-        self.0.register(BuiltinDef { name, pkg, f: BuiltinFn::Normal(Box::new(f)) });
+        self.0.register(BuiltinDef { name, pkg, id: 0, f: BuiltinFn::Normal(Box::new(f)) });
     }
     pub fn special(
         &mut self,
@@ -172,12 +184,13 @@ impl<'a> Reg<'a> {
         name: &'static str,
         f: impl Fn(&mut Interp, &[Arg], &EnvRef) -> EvalResult + Send + Sync + 'static,
     ) {
-        self.0.register(BuiltinDef { name, pkg, f: BuiltinFn::Special(Box::new(f)) });
+        self.0.register(BuiltinDef { name, pkg, id: 0, f: BuiltinFn::Special(Box::new(f)) });
     }
 }
 
 static REGISTRY: Lazy<Registry> = Lazy::new(|| {
     let mut reg = Registry {
+        defs: Vec::new(),
         by_key: HashMap::new(),
         by_name: HashMap::new(),
         packages: Vec::new(),
@@ -208,18 +221,31 @@ pub fn registry() -> &'static Registry {
 
 /// Resolve an unqualified name to its builtin (search-path order).
 pub fn lookup_builtin(name: &str) -> Option<&'static BuiltinDef> {
-    let key = REGISTRY.by_name.get(name)?;
-    REGISTRY.by_key.get(key)
+    let id = *REGISTRY.by_name.get(name)?;
+    REGISTRY.defs.get(id as usize)
 }
 
 /// Resolve `pkg::name`.
 pub fn lookup_builtin_ns(pkg: &str, name: &str) -> Option<&'static BuiltinDef> {
-    REGISTRY.by_key.get(&format!("{pkg}::{name}"))
+    let id = *REGISTRY.by_key.get(&format!("{pkg}::{name}"))?;
+    REGISTRY.defs.get(id as usize)
 }
 
 /// Resolve a registry key (`"pkg::name"`).
 pub fn get_builtin(key: &str) -> Option<&'static BuiltinDef> {
-    REGISTRY.by_key.get(key)
+    let id = *REGISTRY.by_key.get(key)?;
+    REGISTRY.defs.get(id as usize)
+}
+
+/// Resolve a pre-assigned id to its def — the per-call dispatch path
+/// (array index, no hashing).
+pub fn builtin_by_id(id: BuiltinId) -> Option<&'static BuiltinDef> {
+    REGISTRY.defs.get(id as usize)
+}
+
+/// The id of a registry key, for wire decode.
+pub fn id_for_key(key: &str) -> Option<BuiltinId> {
+    REGISTRY.by_key.get(key).copied()
 }
 
 /// The namespace a function name belongs to, if it is a builtin — used by
@@ -231,12 +257,8 @@ pub fn namespace_of(name: &str) -> Option<&'static str> {
 /// All functions registered under a package (for
 /// `futurize_supported_functions()` display and Table-1/2 coverage tests).
 pub fn functions_in_package(pkg: &str) -> Vec<&'static str> {
-    let mut out: Vec<&'static str> = REGISTRY
-        .by_key
-        .values()
-        .filter(|d| d.pkg == pkg)
-        .map(|d| d.name)
-        .collect();
+    let mut out: Vec<&'static str> =
+        REGISTRY.defs.iter().filter(|d| d.pkg == pkg).map(|d| d.name).collect();
     out.sort();
     out
 }
@@ -249,6 +271,17 @@ mod tests {
     fn base_registers_before_others() {
         let d = lookup_builtin("lapply").expect("lapply registered");
         assert_eq!(d.pkg, "base");
+    }
+
+    #[test]
+    fn ids_are_dense_and_consistent() {
+        let reg = registry();
+        for (k, d) in reg.defs.iter().enumerate() {
+            assert_eq!(d.id as usize, k, "def {} has wrong id", d.key());
+        }
+        let d = lookup_builtin("sum").unwrap();
+        assert!(std::ptr::eq(builtin_by_id(d.id).unwrap(), d));
+        assert_eq!(id_for_key("base::sum"), Some(d.id));
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub fn deparse(e: &Expr) -> String {
         Expr::Int(v) => format!("{v}L"),
         Expr::Num(v) => super::value::format_dbl(*v),
         Expr::Str(s) => format!("{s:?}"),
-        Expr::Sym(s) => s.clone(),
+        Expr::Sym(s) => s.to_string(),
         Expr::Ns { pkg, name } => format!("{pkg}::{name}"),
         Expr::Dots => "...".into(),
         Expr::Missing => String::new(),
@@ -26,7 +26,7 @@ pub fn deparse(e: &Expr) -> String {
                 .iter()
                 .map(|p| match &p.default {
                     Some(d) => format!("{} = {}", p.name, deparse(d)),
-                    None => p.name.clone(),
+                    None => p.name.to_string(),
                 })
                 .collect::<Vec<_>>()
                 .join(", ");
@@ -80,7 +80,7 @@ fn deparse_call(func: &Expr, args: &[Arg]) -> String {
         if (name == "-" || name == "!" || name == "+") && args.len() == 1 {
             return format!("{name}{}", deparse(&args[0].value));
         }
-        if name.starts_with('%') && name.ends_with('%') && args.len() == 2 {
+        if name.as_str().starts_with('%') && name.as_str().ends_with('%') && args.len() == 2 {
             return format!("{} {} {}", deparse(&args[0].value), name, deparse(&args[1].value));
         }
         if name == "(" && args.len() == 1 {

@@ -1,35 +1,131 @@
 //! Lexically scoped environments.
+//!
+//! Frames are keyed by interned [`Symbol`]s. The common call frame has a
+//! handful of bindings, so storage is a linear-scan `Vec<(Symbol, RVal)>`
+//! (u32 compares, cache-friendly, zero hashing); frames that grow past
+//! [`SMALL_FRAME_MAX`] bindings (the global env, generated test
+//! environments) build a `Symbol → slot` hash index on the side. The
+//! `&str`-keyed entry points intern on the way in, so cold callers
+//! (builtins, tests, embedders) keep the old API while the evaluator's
+//! hot paths use the `_sym` variants.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 
+use super::intern::Symbol;
 use super::value::RVal;
+
+/// Bindings above which a frame builds a hash index.
+pub const SMALL_FRAME_MAX: usize = 8;
+
+/// Binding storage of one environment frame.
+#[derive(Debug, Default)]
+pub struct Frame {
+    /// Insertion-ordered bindings; the single source of truth.
+    entries: Vec<(Symbol, RVal)>,
+    /// `Symbol → entries index`, built once the frame outgrows the
+    /// linear-scan regime.
+    index: Option<Box<HashMap<Symbol, usize>>>,
+}
+
+impl Frame {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn slot(&self, sym: Symbol) -> Option<usize> {
+        match &self.index {
+            Some(ix) => ix.get(&sym).copied(),
+            None => self.entries.iter().position(|(s, _)| *s == sym),
+        }
+    }
+
+    pub fn get(&self, sym: Symbol) -> Option<&RVal> {
+        self.slot(sym).map(|i| &self.entries[i].1)
+    }
+
+    pub fn contains(&self, sym: Symbol) -> bool {
+        self.slot(sym).is_some()
+    }
+
+    pub fn insert(&mut self, sym: Symbol, val: RVal) {
+        match self.slot(sym) {
+            Some(i) => self.entries[i].1 = val,
+            None => {
+                let i = self.entries.len();
+                self.entries.push((sym, val));
+                if let Some(ix) = &mut self.index {
+                    ix.insert(sym, i);
+                } else if self.entries.len() > SMALL_FRAME_MAX {
+                    let mut ix = Box::new(HashMap::with_capacity(self.entries.len() * 2));
+                    for (k, (s, _)) in self.entries.iter().enumerate() {
+                        ix.insert(*s, k);
+                    }
+                    self.index = Some(ix);
+                }
+            }
+        }
+    }
+
+    /// Drop all bindings but keep the entry buffer's capacity — the
+    /// frame-reuse fast path in the per-element map loop.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.index = None;
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (Symbol, &RVal)> {
+        self.entries.iter().map(|(s, v)| (*s, v))
+    }
+}
 
 /// A single environment frame: bindings plus an optional parent.
 #[derive(Debug, Default)]
 pub struct Env {
-    pub vars: HashMap<String, RVal>,
+    pub vars: Frame,
     pub parent: Option<EnvRef>,
 }
 
 pub type EnvRef = Rc<RefCell<Env>>;
 
+thread_local! {
+    /// Count of environment frames heap-allocated on this thread — the
+    /// observable behind the "zero per-element frame allocations" claim
+    /// (asserted in tests and reported by `benches/interp_micro.rs`).
+    static FRAMES_ALLOCATED: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Frames allocated on this thread so far (monotone counter).
+pub fn frames_allocated() -> u64 {
+    FRAMES_ALLOCATED.with(|c| c.get())
+}
+
+fn count_frame_alloc() {
+    FRAMES_ALLOCATED.with(|c| c.set(c.get() + 1));
+}
+
 impl Env {
     pub fn new_ref() -> EnvRef {
+        count_frame_alloc();
         Rc::new(RefCell::new(Env::default()))
     }
 
     pub fn child_of(parent: &EnvRef) -> EnvRef {
-        Rc::new(RefCell::new(Env { vars: HashMap::new(), parent: Some(parent.clone()) }))
+        count_frame_alloc();
+        Rc::new(RefCell::new(Env { vars: Frame::default(), parent: Some(parent.clone()) }))
     }
 }
 
 /// Look a symbol up through the environment chain.
-pub fn lookup(env: &EnvRef, name: &str) -> Option<RVal> {
+pub fn lookup_sym(env: &EnvRef, sym: Symbol) -> Option<RVal> {
     let mut cur = env.clone();
     loop {
-        if let Some(v) = cur.borrow().vars.get(name) {
+        if let Some(v) = cur.borrow().vars.get(sym) {
             return Some(v.clone());
         }
         let parent = cur.borrow().parent.clone();
@@ -40,31 +136,69 @@ pub fn lookup(env: &EnvRef, name: &str) -> Option<RVal> {
     }
 }
 
-/// Bind `name` in the *current* frame (R's `<-` at local scope).
-pub fn define(env: &EnvRef, name: &str, val: RVal) {
-    env.borrow_mut().vars.insert(name.to_string(), val);
+/// `&str` entry point. A read probes the interner without inserting: a
+/// never-interned name cannot be bound anywhere, and probing keeps
+/// dynamic-name reads (`get(paste0(..))`) from leaking interner slots.
+pub fn lookup(env: &EnvRef, name: &str) -> Option<RVal> {
+    lookup_sym(env, Symbol::probe(name)?)
 }
 
-/// `exists()` through the chain.
+/// Bind `sym` in the *current* frame (R's `<-` at local scope).
+pub fn define_sym(env: &EnvRef, sym: Symbol, val: RVal) {
+    env.borrow_mut().vars.insert(sym, val);
+}
+
+/// `&str` entry point for [`define_sym`].
+pub fn define(env: &EnvRef, name: &str, val: RVal) {
+    define_sym(env, Symbol::intern(name), val);
+}
+
+/// `exists()` through the chain — a non-cloning walk (the found value is
+/// never materialized, unlike `lookup(..).is_some()`).
+pub fn exists_sym(env: &EnvRef, sym: Symbol) -> bool {
+    let mut cur = env.clone();
+    loop {
+        if cur.borrow().vars.contains(sym) {
+            return true;
+        }
+        let parent = cur.borrow().parent.clone();
+        match parent {
+            Some(p) => cur = p,
+            None => return false,
+        }
+    }
+}
+
+/// `&str` entry point for [`exists_sym`] (read-only interner probe).
 pub fn exists(env: &EnvRef, name: &str) -> bool {
-    lookup(env, name).is_some()
+    match Symbol::probe(name) {
+        Some(sym) => exists_sym(env, sym),
+        None => false,
+    }
 }
 
 /// All bindings visible from `env` (outermost shadowed by innermost);
-/// used by `eapply()` and globals export.
+/// used by `eapply()` and globals export. Values are snapshotted
+/// (cheaply, under copy-on-write) at call time.
 pub fn flatten(env: &EnvRef) -> Vec<(String, RVal)> {
     let mut seen = std::collections::HashSet::new();
     let mut out = Vec::new();
     let mut cur = Some(env.clone());
     while let Some(e) = cur {
-        for (k, v) in e.borrow().vars.iter() {
-            if seen.insert(k.clone()) {
-                out.push((k.clone(), v.clone()));
+        for (sym, v) in e.borrow().vars.iter() {
+            if seen.insert(sym) {
+                out.push((sym.to_string(), v.clone()));
             }
         }
         cur = e.borrow().parent.clone();
     }
     out
+}
+
+/// The bindings of `env`'s own frame only (no parents), as owned pairs —
+/// the `eapply()` surface.
+pub fn local_bindings(env: &EnvRef) -> Vec<(String, RVal)> {
+    env.borrow().vars.iter().map(|(s, v)| (s.to_string(), v.clone())).collect()
 }
 
 #[cfg(test)]
@@ -93,5 +227,66 @@ mod tests {
         let x = flat.iter().find(|(k, _)| k == "x").unwrap();
         assert_eq!(x.1, RVal::scalar_dbl(2.0));
         assert_eq!(flat.len(), 2);
+    }
+
+    #[test]
+    fn frame_spills_to_index_past_small_max() {
+        let env = Env::new_ref();
+        for k in 0..(SMALL_FRAME_MAX * 3) {
+            define(&env, &format!("v{k}"), RVal::scalar_int(k as i64));
+        }
+        for k in 0..(SMALL_FRAME_MAX * 3) {
+            assert_eq!(
+                lookup(&env, &format!("v{k}")),
+                Some(RVal::scalar_int(k as i64)),
+                "binding v{k} must survive the spill"
+            );
+        }
+        // Overwrite through the index path.
+        define(&env, "v3", RVal::scalar_int(-3));
+        assert_eq!(lookup(&env, "v3"), Some(RVal::scalar_int(-3)));
+        assert_eq!(env.borrow().vars.len(), SMALL_FRAME_MAX * 3);
+    }
+
+    #[test]
+    fn exists_without_cloning() {
+        let env = Env::new_ref();
+        define(&env, "big", RVal::dbl(vec![0.0; 4096]));
+        assert!(exists(&env, "big"));
+        assert!(!exists(&env, "missing"));
+    }
+
+    #[test]
+    fn read_paths_do_not_intern_missing_names() {
+        // Probing a never-bound name must not grow the interner: the
+        // probe comes back absent both before and after the lookup.
+        let env = Env::new_ref();
+        let name = "never_bound_probe_only_name_xyz";
+        assert!(Symbol::probe(name).is_none());
+        assert!(lookup(&env, name).is_none());
+        assert!(!exists(&env, name));
+        assert!(Symbol::probe(name).is_none(), "read must not intern");
+        // Defining interns as usual.
+        define(&env, name, RVal::scalar_dbl(1.0));
+        assert!(Symbol::probe(name).is_some());
+        assert!(exists(&env, name));
+    }
+
+    #[test]
+    fn clear_keeps_frame_usable() {
+        let env = Env::new_ref();
+        define(&env, "a", RVal::scalar_dbl(1.0));
+        env.borrow_mut().vars.clear();
+        assert!(lookup(&env, "a").is_none());
+        define(&env, "b", RVal::scalar_dbl(2.0));
+        assert_eq!(lookup(&env, "b"), Some(RVal::scalar_dbl(2.0)));
+    }
+
+    #[test]
+    fn allocation_counter_ticks() {
+        let before = frames_allocated();
+        let e = Env::new_ref();
+        let _c = Env::child_of(&e);
+        assert_eq!(frames_allocated() - before, 2);
     }
 }

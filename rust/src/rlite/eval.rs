@@ -19,6 +19,7 @@ use super::builtins::{self, Args, BuiltinFn};
 use super::conditions::{CaptureLog, RCondition, Severity};
 use super::deparse::deparse;
 use super::env::{self, Env, EnvRef};
+use super::intern::{sym_dots, Symbol};
 use super::value::{RClosure, RList, RVal};
 use crate::future_core::SessionState;
 use crate::rng::RngStream;
@@ -320,14 +321,13 @@ impl Interp {
             Expr::Num(v) => Ok(RVal::scalar_dbl(*v)),
             Expr::Str(s) => Ok(RVal::scalar_str(s.clone())),
             Expr::Missing => Ok(RVal::Null),
-            Expr::Dots => {
-                env::lookup(env, "...").ok_or_else(|| Signal::error("'...' used out of context"))
-            }
-            Expr::Sym(name) => env::lookup(env, name)
-                .or_else(|| builtins::lookup_builtin(name).map(|d| RVal::Builtin(d.key())))
+            Expr::Dots => env::lookup_sym(env, sym_dots())
+                .ok_or_else(|| Signal::error("'...' used out of context")),
+            Expr::Sym(name) => env::lookup_sym(env, *name)
+                .or_else(|| name.builtin_id().map(RVal::Builtin))
                 .ok_or_else(|| Signal::error(format!("object '{name}' not found"))),
             Expr::Ns { pkg, name } => builtins::lookup_builtin_ns(pkg, name)
-                .map(|d| RVal::Builtin(d.key()))
+                .map(|d| RVal::Builtin(d.id))
                 .ok_or_else(|| {
                     Signal::error(format!("object '{name}' not found in namespace '{pkg}'"))
                 }),
@@ -356,7 +356,7 @@ impl Interp {
             Expr::For { var, seq, body } => {
                 let seqv = self.eval(seq, env)?;
                 for item in seqv.iter_elements() {
-                    env::define(env, var, item);
+                    env::define_sym(env, *var, item);
                     match self.eval(body, env) {
                         Ok(_) => {}
                         Err(Signal::Break) => break,
@@ -399,12 +399,13 @@ impl Interp {
                     Expr::Sym(name) => {
                         // Find the nearest enclosing frame (excluding the
                         // current one) that binds `name`; else global.
+                        let sym = *name;
                         let start = env.borrow().parent.clone();
                         let mut cur = start;
                         let mut placed = false;
                         while let Some(e) = cur {
-                            if e.borrow().vars.contains_key(name) {
-                                e.borrow_mut().vars.insert(name.clone(), v.clone());
+                            if e.borrow().vars.contains(sym) {
+                                e.borrow_mut().vars.insert(sym, v.clone());
                                 placed = true;
                                 break;
                             }
@@ -412,7 +413,7 @@ impl Interp {
                             cur = parent;
                         }
                         if !placed {
-                            env::define(&self.global, name, v.clone());
+                            env::define_sym(&self.global, sym, v.clone());
                         }
                         Ok(v)
                     }
@@ -448,10 +449,10 @@ impl Interp {
         // Resolve callee without evaluating arguments yet: special forms
         // receive raw expressions.
         let callee: RVal = match func {
-            Expr::Sym(name) => match env::lookup(env, name) {
+            Expr::Sym(name) => match env::lookup_sym(env, *name) {
                 Some(v) => v,
-                None => match builtins::lookup_builtin(name) {
-                    Some(d) => RVal::Builtin(d.key()),
+                None => match name.builtin_id() {
+                    Some(id) => RVal::Builtin(id),
                     None => {
                         return Err(Signal::Error(
                             RCondition::error_cond(format!("could not find function \"{name}\""))
@@ -461,7 +462,7 @@ impl Interp {
                 },
             },
             Expr::Ns { pkg, name } => match builtins::lookup_builtin_ns(pkg, name) {
-                Some(d) => RVal::Builtin(d.key()),
+                Some(d) => RVal::Builtin(d.id),
                 None => {
                     return Err(Signal::error(format!(
                         "could not find function \"{pkg}::{name}\""
@@ -471,9 +472,9 @@ impl Interp {
             other => self.eval(other, env)?,
         };
 
-        if let RVal::Builtin(key) = &callee {
-            let def = builtins::get_builtin(key)
-                .ok_or_else(|| Signal::error(format!("unknown builtin {key}")))?;
+        if let RVal::Builtin(id) = &callee {
+            let def = builtins::builtin_by_id(*id)
+                .ok_or_else(|| Signal::error(format!("unknown builtin #{id}")))?;
             match &def.f {
                 BuiltinFn::Special(f) => return f(self, args, env),
                 BuiltinFn::Normal(f) => {
@@ -510,7 +511,7 @@ impl Interp {
         let mut out = Vec::with_capacity(args.len());
         for a in args {
             if matches!(a.value, Expr::Dots) {
-                if let Some(RVal::List(l)) = env::lookup(env, "...") {
+                if let Some(RVal::List(l)) = env::lookup_sym(env, sym_dots()) {
                     let names = l.names.clone();
                     for (i, v) in l.vals.into_iter().enumerate() {
                         let nm = names
@@ -540,9 +541,9 @@ impl Interp {
     ) -> EvalResult {
         match f {
             RVal::Closure(c) => self.call_closure(c, args),
-            RVal::Builtin(key) => {
-                let def = builtins::get_builtin(key)
-                    .ok_or_else(|| Signal::error(format!("unknown builtin {key}")))?;
+            RVal::Builtin(id) => {
+                let def = builtins::builtin_by_id(*id)
+                    .ok_or_else(|| Signal::error(format!("unknown builtin #{id}")))?;
                 match &def.f {
                     BuiltinFn::Normal(func) => func(self, Args::new(args), env),
                     BuiltinFn::Special(_) => Err(Signal::error(format!(
@@ -560,24 +561,74 @@ impl Interp {
     pub fn call_closure(
         &mut self,
         c: &RClosure,
-        args: Vec<(Option<String>, RVal)>,
+        mut args: Vec<(Option<String>, RVal)>,
     ) -> EvalResult {
         let fenv = Env::child_of(&c.env);
-        // Partition: named args match params by name; positionals fill the
-        // rest in order; excess goes to `...` if present.
+        self.call_closure_in(c, &mut args, &fenv)
+    }
+
+    /// Call `c` with its frame environment provided by the caller. The
+    /// frame must be an (empty) child of `c.env`; the per-element map
+    /// loop reuses one frame across elements instead of allocating an
+    /// `Rc<RefCell<..>>` per call. Arguments are *drained* out of
+    /// `args` (the vector is left empty with its capacity intact), so a
+    /// caller in a loop can refill one buffer instead of allocating a
+    /// fresh `Vec` per call.
+    pub fn call_closure_in(
+        &mut self,
+        c: &RClosure,
+        args: &mut Vec<(Option<String>, RVal)>,
+        fenv: &EnvRef,
+    ) -> EvalResult {
+        // `...` comparisons are u32 symbol compares, no interner access.
+        let dots = sym_dots();
+        let has_dots = c.params.iter().any(|p| p.name == dots);
+
+        // Fast path: all-positional call of a dots-free closure with no
+        // more arguments than parameters (the shape of virtually every
+        // map body call). Binds directly — no partition scratch vectors.
+        let simple =
+            !has_dots && args.len() <= c.params.len() && args.iter().all(|(n, _)| n.is_none());
+        if simple {
+            let n_args = args.len();
+            for (p, (_, val)) in c.params.iter().zip(args.drain(..)) {
+                env::define_sym(fenv, p.name, val);
+            }
+            for p in &c.params[n_args..] {
+                if let Some(d) = &p.default {
+                    let v = self.eval(d, fenv)?;
+                    env::define_sym(fenv, p.name, v);
+                }
+                // No default: missing — error only on use.
+            }
+            return match self.eval(&c.body, fenv) {
+                Ok(v) => Ok(v),
+                Err(Signal::Return(v)) => Ok(v),
+                Err(e) => Err(e),
+            };
+        }
+
+        // General path. Partition: named args match params by name;
+        // positionals fill the rest in order; excess goes to `...` if
+        // present.
         let mut bound = vec![false; c.params.len()];
         let mut positional: Vec<RVal> = Vec::new();
-        let mut dots: Vec<(Option<String>, RVal)> = Vec::new();
-        let has_dots = c.params.iter().any(|p| p.name == "...");
+        let mut dots_args: Vec<(Option<String>, RVal)> = Vec::new();
 
-        for (name, val) in args {
+        for (name, val) in args.drain(..) {
             match name {
                 Some(n) => {
-                    if let Some(idx) = c.params.iter().position(|p| p.name == n) {
-                        env::define(&fenv, &n, val);
+                    // Probe the interner once per named argument, then
+                    // match parameters by u32 id (a name that was never
+                    // interned cannot name a parameter).
+                    let n_sym = Symbol::probe(&n);
+                    let hit = n_sym
+                        .and_then(|s| c.params.iter().position(|p| p.name == s));
+                    if let Some(idx) = hit {
+                        env::define_sym(fenv, c.params[idx].name, val);
                         bound[idx] = true;
                     } else if has_dots {
-                        dots.push((Some(n), val));
+                        dots_args.push((Some(n), val));
                     } else {
                         return Err(Signal::error(format!("unused argument ({n} = ...)")));
                     }
@@ -587,10 +638,10 @@ impl Interp {
         }
         let mut pos_iter = positional.into_iter();
         for (idx, p) in c.params.iter().enumerate() {
-            if p.name == "..." {
-                // Everything remaining goes to dots.
+            if p.name == dots {
+                // Everything remaining goes to `...`.
                 for v in pos_iter.by_ref() {
-                    dots.push((None, v));
+                    dots_args.push((None, v));
                 }
                 continue;
             }
@@ -598,7 +649,7 @@ impl Interp {
                 continue;
             }
             if let Some(v) = pos_iter.next() {
-                env::define(&fenv, &p.name, v);
+                env::define_sym(fenv, p.name, v);
                 bound[idx] = true;
             }
         }
@@ -611,12 +662,12 @@ impl Interp {
         }
         if has_dots {
             let names: Vec<String> =
-                dots.iter().map(|(n, _)| n.clone().unwrap_or_default()).collect();
-            let vals: Vec<RVal> = dots.into_iter().map(|(_, v)| v).collect();
+                dots_args.iter().map(|(n, _)| n.clone().unwrap_or_default()).collect();
+            let vals: Vec<RVal> = dots_args.into_iter().map(|(_, v)| v).collect();
             let named = names.iter().any(|n| !n.is_empty());
-            env::define(
-                &fenv,
-                "...",
+            env::define_sym(
+                fenv,
+                dots,
                 RVal::List(RList {
                     vals,
                     names: if named { Some(names) } else { None },
@@ -626,18 +677,18 @@ impl Interp {
         }
         // Defaults for still-unbound params (evaluated in the new frame).
         for (idx, p) in c.params.iter().enumerate() {
-            if p.name == "..." || bound[idx] {
+            if p.name == dots || bound[idx] {
                 continue;
             }
             match &p.default {
                 Some(d) => {
-                    let v = self.eval(d, &fenv)?;
-                    env::define(&fenv, &p.name, v);
+                    let v = self.eval(d, fenv)?;
+                    env::define_sym(fenv, p.name, v);
                 }
                 None => { /* missing — error only on use */ }
             }
         }
-        match self.eval(&c.body, &fenv) {
+        match self.eval(&c.body, fenv) {
             Ok(v) => Ok(v),
             Err(Signal::Return(v)) => Ok(v),
             Err(e) => Err(e),
@@ -646,7 +697,11 @@ impl Interp {
 
     fn assign(&mut self, target: &Expr, value: RVal, env: &EnvRef) -> Result<(), Signal> {
         match target {
-            Expr::Sym(name) | Expr::Str(name) => {
+            Expr::Sym(name) => {
+                env::define_sym(env, *name, value);
+                Ok(())
+            }
+            Expr::Str(name) => {
                 env::define(env, name, value);
                 Ok(())
             }
@@ -834,7 +889,7 @@ fn pick_vec<T: Clone>(
     } else {
         let picked: Vec<T> = ids.iter().map(|&i| vals[i].clone()).collect();
         let nm = names.map(|ns| ids.iter().map(|&i| ns[i].clone()).collect());
-        Ok(wrap(super::value::RVec { vals: picked, names: nm }))
+        Ok(wrap(super::value::RVec::with_names(picked, nm)))
     }
 }
 
@@ -867,19 +922,22 @@ pub fn index_set(obj: &mut RVal, idx: &[RVal], _double: bool, value: RVal) -> Re
                 |_| -> Result<Vec<usize>, String> { Ok(vec![idx[0].as_usize()? - 1]) },
             )?;
             let val = value.as_f64()?;
+            // Copy-on-write: detach the payload once, iff shared.
+            let vals = v.vals_mut();
             for &id in &ids {
-                while v.vals.len() <= id {
-                    v.vals.push(f64::NAN);
+                while vals.len() <= id {
+                    vals.push(f64::NAN);
                 }
-                v.vals[id] = val;
+                vals[id] = val;
             }
             Ok(())
         }
         RVal::Int(v) => {
             let ids = resolve_indices(&idx[0], v.len(), v.names.as_deref())?;
             let val = value.as_i64()?;
+            let vals = v.vals_mut();
             for &id in &ids {
-                v.vals[id] = val;
+                vals[id] = val;
             }
             Ok(())
         }

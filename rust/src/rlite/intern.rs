@@ -1,0 +1,262 @@
+//! Symbol interning.
+//!
+//! Identifiers are interned once — at parse time, at deserialization
+//! time, or at the first `&str`-based env API call — into process-global
+//! `Symbol(u32)` handles. Everything the evaluator does per call after
+//! that (env frame lookups, parameter binding, builtin dispatch) is u32
+//! comparison and indexing instead of string hashing, which is what makes
+//! the per-element map loop cheap (ISSUE 4, tentpole layer 2).
+//!
+//! The interner is process-wide (symbols inside an [`Expr`] cross thread
+//! boundaries with in-process backends) and append-only; interned strings
+//! are leaked to `&'static str` so `as_str()` can hand out references
+//! without holding the lock.
+//!
+//! **Tradeoff:** append-only interning means every *distinct binding
+//! name* costs one permanent interner slot for the life of the process —
+//! read paths probe without interning ([`Symbol::probe`]), but
+//! `assign(paste0("v", i), ..)`-style data-dependent binding names grow
+//! the interner by design (identifier sets are small and static in real
+//! programs; a reclaiming interner would put refcount traffic on the
+//! hottest lookup path). Worker task isolation is unaffected: interner
+//! slots carry no values, only names.
+//!
+//! Builtin resolution is cached per symbol: the first unqualified lookup
+//! of a symbol that misses the environment chain resolves against the
+//! builtin registry and memoizes the `Option<BuiltinId>`, so steady-state
+//! call dispatch (`sqrt(x)`, `x * 2`) never hashes a string again.
+//!
+//! [`Expr`]: super::ast::Expr
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::RwLock;
+
+use once_cell::sync::Lazy;
+
+use super::builtins::BuiltinId;
+
+/// An interned identifier. Copyable, comparable and hashable as a plain
+/// `u32`; resolves back to its text via the global interner.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Symbol(u32);
+
+struct Interner {
+    map: HashMap<&'static str, u32>,
+    syms: Vec<&'static str>,
+}
+
+static INTERNER: Lazy<RwLock<Interner>> =
+    Lazy::new(|| RwLock::new(Interner { map: HashMap::new(), syms: Vec::new() }));
+
+/// Per-symbol memo of unqualified builtin resolution. Indexed by symbol
+/// id; `None` = not resolved yet, `Some(x)` = resolved (x is the
+/// registry answer, including "not a builtin"). Kept separate from the
+/// interner lock so resolving (which touches the builtin registry
+/// `Lazy`) never nests inside it.
+static BUILTIN_CACHE: Lazy<RwLock<Vec<Option<Option<BuiltinId>>>>> =
+    Lazy::new(|| RwLock::new(Vec::new()));
+
+impl Symbol {
+    /// Intern `s`, returning its stable process-wide handle.
+    pub fn intern(s: &str) -> Symbol {
+        if let Some(&id) = INTERNER.read().unwrap().map.get(s) {
+            return Symbol(id);
+        }
+        let mut w = INTERNER.write().unwrap();
+        // Re-check under the write lock (another thread may have won).
+        if let Some(&id) = w.map.get(s) {
+            return Symbol(id);
+        }
+        let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+        let id = w.syms.len() as u32;
+        w.syms.push(leaked);
+        w.map.insert(leaked, id);
+        Symbol(id)
+    }
+
+    /// Read-only probe: the symbol for `s` if it was ever interned,
+    /// without interning (and leaking) it. A name that was never
+    /// interned cannot be bound in any environment, so read paths
+    /// (`lookup`/`exists` by `&str`) use this to keep dynamic-name
+    /// probes from growing the interner unboundedly.
+    pub fn probe(s: &str) -> Option<Symbol> {
+        INTERNER.read().unwrap().map.get(s).map(|&id| Symbol(id))
+    }
+
+    /// The interned text. `'static` because interned strings are leaked.
+    pub fn as_str(self) -> &'static str {
+        INTERNER.read().unwrap().syms[self.0 as usize]
+    }
+
+    /// Raw id (useful for dense side tables).
+    pub fn id(self) -> u32 {
+        self.0
+    }
+
+    /// Memoized unqualified builtin resolution for this symbol (the
+    /// search-path answer of [`super::builtins::lookup_builtin`]).
+    pub fn builtin_id(self) -> Option<BuiltinId> {
+        {
+            let cache = BUILTIN_CACHE.read().unwrap();
+            if let Some(Some(resolved)) = cache.get(self.0 as usize) {
+                return *resolved;
+            }
+        }
+        // Resolve outside both locks, then memoize.
+        let resolved = super::builtins::lookup_builtin(self.as_str()).map(|d| d.id);
+        let mut cache = BUILTIN_CACHE.write().unwrap();
+        if cache.len() <= self.0 as usize {
+            cache.resize(self.0 as usize + 1, None);
+        }
+        cache[self.0 as usize] = Some(resolved);
+        resolved
+    }
+}
+
+/// The `...` symbol, pre-interned (hot in argument splicing).
+pub fn sym_dots() -> Symbol {
+    static DOTS: Lazy<Symbol> = Lazy::new(|| Symbol::intern("..."));
+    *DOTS
+}
+
+impl fmt::Display for Symbol {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl fmt::Debug for Symbol {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.as_str())
+    }
+}
+
+impl From<&str> for Symbol {
+    fn from(s: &str) -> Symbol {
+        Symbol::intern(s)
+    }
+}
+
+impl From<&String> for Symbol {
+    fn from(s: &String) -> Symbol {
+        Symbol::intern(s)
+    }
+}
+
+impl From<String> for Symbol {
+    fn from(s: String) -> Symbol {
+        Symbol::intern(&s)
+    }
+}
+
+impl PartialEq<str> for Symbol {
+    fn eq(&self, other: &str) -> bool {
+        self.as_str() == other
+    }
+}
+
+impl PartialEq<&str> for Symbol {
+    fn eq(&self, other: &&str) -> bool {
+        self.as_str() == *other
+    }
+}
+
+impl PartialEq<String> for Symbol {
+    fn eq(&self, other: &String) -> bool {
+        self.as_str() == other.as_str()
+    }
+}
+
+impl PartialEq<Symbol> for str {
+    fn eq(&self, other: &Symbol) -> bool {
+        self == other.as_str()
+    }
+}
+
+impl PartialEq<Symbol> for &str {
+    fn eq(&self, other: &Symbol) -> bool {
+        *self == other.as_str()
+    }
+}
+
+impl PartialEq<Symbol> for String {
+    fn eq(&self, other: &Symbol) -> bool {
+        self.as_str() == other.as_str()
+    }
+}
+
+// Symbols serialize as their text (wire format identical to the
+// pre-interning `String` representation) and re-intern on decode, so
+// ids never cross a process boundary.
+impl serde::Serialize for Symbol {
+    fn serialize<S: serde::Serializer>(&self, s: S) -> Result<S::Ok, S::Error> {
+        s.serialize_str(self.as_str())
+    }
+}
+
+impl<'de> serde::Deserialize<'de> for Symbol {
+    fn deserialize<D: serde::Deserializer<'de>>(d: D) -> Result<Self, D::Error> {
+        struct V;
+        impl<'de> serde::de::Visitor<'de> for V {
+            type Value = Symbol;
+            fn expecting(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.write_str("an identifier string")
+            }
+            fn visit_str<E: serde::de::Error>(self, v: &str) -> Result<Symbol, E> {
+                Ok(Symbol::intern(v))
+            }
+            fn visit_string<E: serde::de::Error>(self, v: String) -> Result<Symbol, E> {
+                Ok(Symbol::intern(&v))
+            }
+        }
+        d.deserialize_str(V)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_stable_and_deduplicating() {
+        let a = Symbol::intern("alpha_sym_test");
+        let b = Symbol::intern("alpha_sym_test");
+        let c = Symbol::intern("beta_sym_test");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.as_str(), "alpha_sym_test");
+        assert_eq!(a.id(), b.id());
+    }
+
+    #[test]
+    fn compares_against_strings() {
+        let s = Symbol::intern("gamma_sym_test");
+        assert!(s == "gamma_sym_test");
+        assert!(s == "gamma_sym_test".to_string());
+        assert!("gamma_sym_test" == s);
+        assert!(s != "delta_sym_test");
+    }
+
+    #[test]
+    fn builtin_resolution_memoized() {
+        let s = Symbol::intern("sqrt");
+        let first = s.builtin_id();
+        assert!(first.is_some(), "sqrt must resolve to a builtin");
+        assert_eq!(first, s.builtin_id());
+        let miss = Symbol::intern("no_such_function_xyz");
+        assert_eq!(miss.builtin_id(), None);
+    }
+
+    #[test]
+    fn serde_roundtrips_as_text() {
+        let s = Symbol::intern("wire_sym_test");
+        let json = crate::wire::to_string(&s).unwrap();
+        assert_eq!(json, "\"wire_sym_test\"");
+        let back: Symbol = crate::wire::from_str(&json).unwrap();
+        assert_eq!(s, back);
+        let bytes = crate::wire::bin::to_bytes(&s).unwrap();
+        let back2: Symbol = crate::wire::bin::from_bytes(&bytes).unwrap();
+        assert_eq!(s, back2);
+    }
+}

@@ -25,6 +25,7 @@ pub mod conditions;
 pub mod deparse;
 pub mod env;
 pub mod eval;
+pub mod intern;
 pub mod lexer;
 pub mod parser;
 pub mod serialize;
@@ -33,6 +34,7 @@ pub mod value;
 pub use ast::{Arg, Expr, Param};
 pub use env::{Env, EnvRef};
 pub use eval::{EvalResult, Interp, Signal};
+pub use intern::Symbol;
 pub use value::RVal;
 
 /// Parse a complete program (sequence of expressions).

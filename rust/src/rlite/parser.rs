@@ -429,7 +429,7 @@ impl Parser {
             } else {
                 None
             };
-            params.push(Param { name, default });
+            params.push(Param { name: name.into(), default });
             self.skip_newlines();
             if self.peek() == Some(&Tok::Comma) {
                 self.bump();
@@ -504,7 +504,7 @@ impl Parser {
                 } else if name == "..." {
                     Ok(Expr::Dots)
                 } else {
-                    Ok(Expr::Sym(name))
+                    Ok(Expr::Sym(name.into()))
                 }
             }
             Some(Tok::LParen) => {
@@ -596,7 +596,7 @@ impl Parser {
                 self.eat(&Tok::RParen, ") after for")?;
                 self.skip_newlines();
                 let body = self.parse_expr()?;
-                Ok(Expr::For { var, seq: Box::new(seq), body: Box::new(body) })
+                Ok(Expr::For { var: var.into(), seq: Box::new(seq), body: Box::new(body) })
             }
             Some(Tok::While) => {
                 self.bump();

@@ -86,7 +86,7 @@ impl WireVal {
                 // and the binary AST encoding are within a small factor
                 // of each other.
                 1 + uvarint_len(params.len() as u64)
-                    + params.iter().map(|p| 8 + p.name.len()).sum::<usize>()
+                    + params.iter().map(|p| 8 + p.name.as_str().len()).sum::<usize>()
                     + super::deparse::deparse(body).len()
                     + uvarint_len(captured.len() as u64)
                     + captured
@@ -182,60 +182,104 @@ impl<'de, T: serde::Deserialize<'de>> serde::Deserialize<'de> for WireSlice<T> {
     }
 }
 
-/// Convert a value to wire form. Closures capture their free variables by
-/// value; environments and other live handles are rejected (they cannot
-/// meaningfully cross a process boundary — same restriction as R).
+/// Convert a value to wire form, borrowing it (payload buffers are deep
+/// copied — use [`to_wire_owned`] when the value can be consumed).
+/// Closures capture their free variables by value; environments and
+/// other live handles are rejected (they cannot meaningfully cross a
+/// process boundary — same restriction as R).
 pub fn to_wire(v: &RVal) -> Result<WireVal, String> {
     match v {
         RVal::Null => Ok(WireVal::Null),
-        RVal::Lgl(x) => Ok(WireVal::Lgl(x.vals.clone(), x.names.clone())),
-        RVal::Int(x) => Ok(WireVal::Int(x.vals.clone(), x.names.clone())),
-        RVal::Dbl(x) => Ok(WireVal::Dbl(x.vals.clone(), x.names.clone())),
-        RVal::Chr(x) => Ok(WireVal::Chr(x.vals.clone(), x.names.clone())),
+        RVal::Lgl(x) => Ok(WireVal::Lgl(x.vals.to_vec(), x.names.clone())),
+        RVal::Int(x) => Ok(WireVal::Int(x.vals.to_vec(), x.names.clone())),
+        RVal::Dbl(x) => Ok(WireVal::Dbl(x.vals.to_vec(), x.names.clone())),
+        RVal::Chr(x) => Ok(WireVal::Chr(x.vals.to_vec(), x.names.clone())),
         RVal::List(l) => {
             let vals: Result<Vec<WireVal>, String> = l.vals.iter().map(to_wire).collect();
             Ok(WireVal::List(vals?, l.names.clone(), l.class.clone()))
         }
-        RVal::Builtin(key) => Ok(WireVal::Builtin(key.clone())),
+        RVal::Builtin(id) => Ok(WireVal::Builtin(builtin_key(*id))),
         RVal::Cond(c) => Ok(WireVal::Cond((**c).clone())),
-        RVal::Closure(c) => {
-            let mut captured = Vec::new();
-            // Snapshot free variables of the body (minus the params).
-            let body_fn = Expr::Function {
-                params: c.params.clone(),
-                body: Box::new(c.body.clone()),
-            };
-            for name in globals::free_variables(&body_fn) {
-                if let Some(val) = env::lookup(&c.env, &name) {
-                    if matches!(val, RVal::Builtin(_)) {
-                        continue;
-                    }
-                    captured.push((name.clone(), to_wire(&val)?));
-                }
-                // Builtins and not-found symbols resolve on the worker.
-            }
-            Ok(WireVal::Closure { params: c.params.clone(), body: c.body.clone(), captured })
-        }
+        RVal::Closure(c) => closure_to_wire(c),
         RVal::Env(_) => Err("cannot serialize an environment across processes".into()),
     }
 }
 
-/// Reconstruct a value on the worker side. Closures are re-rooted on a
-/// fresh environment seeded with their captured variables, whose parent
-/// is `base_env` (the worker's global environment).
+/// Convert a value to wire form, consuming it: uniquely-owned COW
+/// payload buffers *move* into the wire value instead of being deep
+/// copied. A worker encoding its per-element results (which are almost
+/// always freshly allocated, hence unique) pays zero buffer copies.
+pub fn to_wire_owned(v: RVal) -> Result<WireVal, String> {
+    match v {
+        RVal::Null => Ok(WireVal::Null),
+        RVal::Lgl(x) => {
+            let (vals, names) = x.into_parts();
+            Ok(WireVal::Lgl(vals, names))
+        }
+        RVal::Int(x) => {
+            let (vals, names) = x.into_parts();
+            Ok(WireVal::Int(vals, names))
+        }
+        RVal::Dbl(x) => {
+            let (vals, names) = x.into_parts();
+            Ok(WireVal::Dbl(vals, names))
+        }
+        RVal::Chr(x) => {
+            let (vals, names) = x.into_parts();
+            Ok(WireVal::Chr(vals, names))
+        }
+        RVal::List(l) => {
+            let vals: Result<Vec<WireVal>, String> =
+                l.vals.into_iter().map(to_wire_owned).collect();
+            Ok(WireVal::List(vals?, l.names, l.class))
+        }
+        RVal::Builtin(id) => Ok(WireVal::Builtin(builtin_key(id))),
+        RVal::Cond(c) => Ok(WireVal::Cond(*c)),
+        RVal::Closure(c) => closure_to_wire(&c),
+        RVal::Env(_) => Err("cannot serialize an environment across processes".into()),
+    }
+}
+
+fn builtin_key(id: crate::rlite::builtins::BuiltinId) -> String {
+    crate::rlite::builtins::builtin_by_id(id)
+        .map(|d| d.key())
+        .unwrap_or_else(|| format!("#invalid::{id}"))
+}
+
+fn closure_to_wire(c: &RClosure) -> Result<WireVal, String> {
+    let mut captured = Vec::new();
+    // Snapshot free variables of the body (minus the params).
+    let body_fn = Expr::Function { params: c.params.clone(), body: Box::new(c.body.clone()) };
+    for sym in globals::free_variables(&body_fn) {
+        if let Some(val) = env::lookup_sym(&c.env, sym) {
+            if matches!(val, RVal::Builtin(_)) {
+                continue;
+            }
+            captured.push((sym.to_string(), to_wire_owned(val)?));
+        }
+        // Builtins and not-found symbols resolve on the worker.
+    }
+    Ok(WireVal::Closure { params: c.params.clone(), body: c.body.clone(), captured })
+}
+
+/// Reconstruct a value on the worker side, borrowing the wire value
+/// (payload buffers are copied — use [`from_wire_owned`] when the wire
+/// value can be consumed). Closures are re-rooted on a fresh environment
+/// seeded with their captured variables, whose parent is `base_env` (the
+/// worker's global environment).
 pub fn from_wire(w: &WireVal, base_env: &EnvRef) -> RVal {
     match w {
         WireVal::Null => RVal::Null,
-        WireVal::Lgl(v, n) => RVal::Lgl(RVec { vals: v.clone(), names: n.clone() }),
-        WireVal::Int(v, n) => RVal::Int(RVec { vals: v.clone(), names: n.clone() }),
-        WireVal::Dbl(v, n) => RVal::Dbl(RVec { vals: v.clone(), names: n.clone() }),
-        WireVal::Chr(v, n) => RVal::Chr(RVec { vals: v.clone(), names: n.clone() }),
+        WireVal::Lgl(v, n) => RVal::Lgl(RVec::with_names(v.clone(), n.clone())),
+        WireVal::Int(v, n) => RVal::Int(RVec::with_names(v.clone(), n.clone())),
+        WireVal::Dbl(v, n) => RVal::Dbl(RVec::with_names(v.clone(), n.clone())),
+        WireVal::Chr(v, n) => RVal::Chr(RVec::with_names(v.clone(), n.clone())),
         WireVal::List(v, n, class) => RVal::List(RList {
             vals: v.iter().map(|x| from_wire(x, base_env)).collect(),
             names: n.clone(),
             class: class.clone(),
         }),
-        WireVal::Builtin(key) => RVal::Builtin(key.clone()),
+        WireVal::Builtin(key) => builtin_from_key(key, base_env),
         WireVal::Cond(c) => RVal::Cond(Box::new(c.clone())),
         WireVal::Closure { params, body, captured } => {
             let env = Env::child_of(base_env);
@@ -249,6 +293,52 @@ pub fn from_wire(w: &WireVal, base_env: &EnvRef) -> RVal {
             }))
         }
     }
+}
+
+/// Reconstruct a value on the worker side, consuming the wire value:
+/// decoded payload buffers *move* into the COW representation instead of
+/// being copied again — the worker-side half of the decode fast path.
+pub fn from_wire_owned(w: WireVal, base_env: &EnvRef) -> RVal {
+    match w {
+        WireVal::Null => RVal::Null,
+        WireVal::Lgl(v, n) => RVal::Lgl(RVec::with_names(v, n)),
+        WireVal::Int(v, n) => RVal::Int(RVec::with_names(v, n)),
+        WireVal::Dbl(v, n) => RVal::Dbl(RVec::with_names(v, n)),
+        WireVal::Chr(v, n) => RVal::Chr(RVec::with_names(v, n)),
+        WireVal::List(v, n, class) => RVal::List(RList {
+            vals: v.into_iter().map(|x| from_wire_owned(x, base_env)).collect(),
+            names: n,
+            class,
+        }),
+        WireVal::Builtin(key) => builtin_from_key(&key, base_env),
+        WireVal::Cond(c) => RVal::Cond(Box::new(c)),
+        WireVal::Closure { params, body, captured } => {
+            let env = Env::child_of(base_env);
+            for (name, val) in captured {
+                env::define(&env, &name, from_wire_owned(val, base_env));
+            }
+            RVal::Closure(std::rc::Rc::new(RClosure { params, body, env }))
+        }
+    }
+}
+
+fn builtin_from_key(key: &str, base_env: &EnvRef) -> RVal {
+    if let Some(id) = crate::rlite::builtins::id_for_key(key)
+        // Tolerate unqualified legacy keys ("sum" for "base::sum").
+        .or_else(|| crate::rlite::builtins::lookup_builtin(key).map(|d| d.id))
+    {
+        return RVal::Builtin(id);
+    }
+    // Same-binary protocol: a genuinely unknown key cannot normally
+    // occur (registry skew, renamed builtin). Preserve the old deferred
+    // semantics: the value stays a function (`is.function` is TRUE) and
+    // raises a named error when actually called.
+    let msg = format!("unknown builtin '{key}' in this worker's registry");
+    RVal::Closure(std::rc::Rc::new(RClosure {
+        params: vec![crate::rlite::ast::Param { name: "...".into(), default: None }],
+        body: Expr::call("stop", vec![crate::rlite::ast::Arg::pos(Expr::Str(msg))]),
+        env: base_env.clone(),
+    }))
 }
 
 #[cfg(test)]
@@ -298,6 +388,33 @@ mod tests {
     fn env_is_rejected() {
         let env = Env::new_ref();
         assert!(to_wire(&RVal::Env(env)).is_err());
+    }
+
+    #[test]
+    fn known_builtin_key_decodes_to_builtin() {
+        let base = Env::new_ref();
+        let v = from_wire(&WireVal::Builtin("base::sum".into()), &base);
+        assert!(matches!(v, RVal::Builtin(_)));
+        // Legacy unqualified keys resolve through the search path.
+        let v = from_wire(&WireVal::Builtin("sum".into()), &base);
+        assert!(matches!(v, RVal::Builtin(_)));
+    }
+
+    #[test]
+    fn unknown_builtin_key_decodes_to_error_raising_function() {
+        // Registry skew must surface as a *named* error at call time,
+        // not silently decode to NULL.
+        let mut i = Interp::new();
+        let base = i.global.clone();
+        let v = from_wire(&WireVal::Builtin("nosuchpkg::nosuchfn".into()), &base);
+        assert!(v.is_function(), "decoded value must still be a function");
+        let r = i.call_function(&v, vec![], &base);
+        match r {
+            Err(crate::rlite::eval::Signal::Error(c)) => {
+                assert!(c.message.contains("nosuchpkg::nosuchfn"), "{}", c.message)
+            }
+            other => panic!("expected a named error, got {other:?}"),
+        }
     }
 
     #[test]

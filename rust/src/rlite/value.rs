@@ -4,34 +4,74 @@
 //! with optional names, heterogeneous lists (also used for data.frames),
 //! closures, builtins, and condition objects. Scalars are length-1
 //! vectors, as in R.
+//!
+//! Vector payloads are **copy-on-write**: `RVec<T>` holds its elements
+//! behind a shared `Rc<Vec<T>>`, so cloning a value (environment lookup,
+//! argument passing, `y <- x`) is a refcount bump, while mutation goes
+//! through [`RVec::vals_mut`] (`Rc::make_mut`), which copies the buffer
+//! only when it is actually shared. That is exactly R's copy-on-modify
+//! semantics, made O(1) on the read side.
 
 use std::cell::RefCell;
 use std::fmt;
 use std::rc::Rc;
 
 use super::ast::{Expr, Param};
+use super::builtins::BuiltinId;
 use super::conditions::RCondition;
 use super::env::EnvRef;
 
-/// A typed vector with optional element names.
+/// A typed vector with optional element names. The payload is a shared
+/// copy-on-write buffer; names stay eagerly owned (they are rare and
+/// small on the hot paths).
 #[derive(Clone, Debug, PartialEq, Default)]
 pub struct RVec<T> {
-    pub vals: Vec<T>,
+    pub vals: Rc<Vec<T>>,
     pub names: Option<Vec<String>>,
 }
 
 impl<T> RVec<T> {
     pub fn plain(vals: Vec<T>) -> Self {
-        RVec { vals, names: None }
+        RVec { vals: Rc::new(vals), names: None }
     }
     pub fn named(vals: Vec<T>, names: Vec<String>) -> Self {
-        RVec { vals, names: Some(names) }
+        RVec { vals: Rc::new(vals), names: Some(names) }
+    }
+    pub fn with_names(vals: Vec<T>, names: Option<Vec<String>>) -> Self {
+        RVec { vals: Rc::new(vals), names }
+    }
+    /// Wrap an already-shared buffer without copying it.
+    pub fn from_shared(vals: Rc<Vec<T>>, names: Option<Vec<String>>) -> Self {
+        RVec { vals, names }
     }
     pub fn len(&self) -> usize {
         self.vals.len()
     }
     pub fn is_empty(&self) -> bool {
         self.vals.is_empty()
+    }
+    /// Do two vectors alias the same underlying buffer? (COW test hook.)
+    pub fn shares_buffer(&self, other: &RVec<T>) -> bool {
+        Rc::ptr_eq(&self.vals, &other.vals)
+    }
+}
+
+impl<T: Clone> RVec<T> {
+    /// Mutable access to the payload, copying it first iff shared —
+    /// R's copy-on-modify.
+    pub fn vals_mut(&mut self) -> &mut Vec<T> {
+        Rc::make_mut(&mut self.vals)
+    }
+    /// Take the payload out, moving the buffer when uniquely owned and
+    /// cloning otherwise.
+    pub fn take_vals(self) -> Vec<T> {
+        Rc::try_unwrap(self.vals).unwrap_or_else(|rc| (*rc).clone())
+    }
+    /// Decompose into (payload, names), moving both when possible —
+    /// the payload moves iff uniquely owned; names always move.
+    pub fn into_parts(self) -> (Vec<T>, Option<Vec<String>>) {
+        let RVec { vals, names } = self;
+        (Rc::try_unwrap(vals).unwrap_or_else(|rc| (*rc).clone()), names)
     }
 }
 
@@ -64,16 +104,21 @@ impl RList {
         let idx = names.iter().position(|n| n == name)?;
         self.vals.get(idx)
     }
+    /// Set (or append) a named element with a single name scan; a
+    /// freshly materialized names vector (all empty) skips the scan.
     pub fn set(&mut self, name: &str, val: RVal) {
-        if self.names.is_none() {
+        let fresh = self.names.is_none();
+        if fresh {
             self.names = Some(vec![String::new(); self.vals.len()]);
         }
         let names = self.names.as_mut().unwrap();
-        if let Some(idx) = names.iter().position(|n| n == name) {
-            self.vals[idx] = val;
-        } else {
-            names.push(name.to_string());
-            self.vals.push(val);
+        let found = if fresh { None } else { names.iter().position(|n| n == name) };
+        match found {
+            Some(idx) => self.vals[idx] = val,
+            None => {
+                names.push(name.to_string());
+                self.vals.push(val);
+            }
         }
     }
 }
@@ -102,8 +147,9 @@ pub enum RVal {
     Chr(RVec<String>),
     List(RList),
     Closure(Rc<RClosure>),
-    /// A builtin function, identified by name in the builtin registry.
-    Builtin(String),
+    /// A builtin function, pre-resolved to its registry slot — call
+    /// dispatch is an array index, not a string lookup.
+    Builtin(BuiltinId),
     /// A condition object (error/warning/message/custom), first-class so
     /// `tryCatch(..., error = function(e) e)` can return it.
     Cond(Box<RCondition>),
@@ -230,7 +276,7 @@ impl RVal {
     pub fn as_dbl_vec(&self) -> Result<Vec<f64>, String> {
         match self {
             RVal::Null => Ok(vec![]),
-            RVal::Dbl(v) => Ok(v.vals.clone()),
+            RVal::Dbl(v) => Ok(v.vals.to_vec()),
             RVal::Int(v) => Ok(v.vals.iter().map(|&x| x as f64).collect()),
             RVal::Lgl(v) => Ok(v.vals.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect()),
             RVal::List(l) => {
@@ -242,6 +288,15 @@ impl RVal {
                 Ok(out)
             }
             other => Err(format!("cannot coerce {} to numeric", other.class())),
+        }
+    }
+
+    /// Borrowed view of a double payload, when the value already is one
+    /// (the zero-copy fast path of vectorized arithmetic).
+    pub fn as_dbl_slice(&self) -> Option<&[f64]> {
+        match self {
+            RVal::Dbl(v) => Some(&v.vals),
+            _ => None,
         }
     }
 
@@ -286,7 +341,7 @@ impl RVal {
     pub fn as_str_vec(&self) -> Result<Vec<String>, String> {
         match self {
             RVal::Null => Ok(vec![]),
-            RVal::Chr(v) => Ok(v.vals.clone()),
+            RVal::Chr(v) => Ok(v.vals.to_vec()),
             RVal::Dbl(v) => Ok(v.vals.iter().map(|x| format_dbl(*x)).collect()),
             RVal::Int(v) => Ok(v.vals.iter().map(|x| x.to_string()).collect()),
             RVal::Lgl(v) => {
@@ -327,7 +382,7 @@ impl RVal {
         });
         if !list.is_empty() && all_scalar_num {
             let vals: Vec<f64> = list.iter().map(|v| v.as_f64().unwrap()).collect();
-            return RVal::Dbl(RVec { vals, names });
+            return RVal::Dbl(RVec::with_names(vals, names));
         }
         // Equal-length (>1) numeric columns → flat column-major vector.
         let common_len = match list.first() {
@@ -351,12 +406,12 @@ impl RVal {
         let all_scalar_lgl = list.iter().all(|v| matches!(v, RVal::Lgl(x) if x.len() == 1));
         if !list.is_empty() && all_scalar_lgl {
             let vals: Vec<bool> = list.iter().map(|v| v.as_bool().unwrap()).collect();
-            return RVal::Lgl(RVec { vals, names });
+            return RVal::Lgl(RVec::with_names(vals, names));
         }
         let all_scalar_chr = list.iter().all(|v| matches!(v, RVal::Chr(x) if x.len() == 1));
         if !list.is_empty() && all_scalar_chr {
             let vals: Vec<String> = list.iter().map(|v| v.as_str().unwrap()).collect();
-            return RVal::Chr(RVec { vals, names });
+            return RVal::Chr(RVec::with_names(vals, names));
         }
         RVal::List(RList { vals: list, names, class: None })
     }
@@ -412,7 +467,10 @@ impl fmt::Display for RVal {
                 Ok(())
             }
             RVal::Closure(_) => write!(f, "<closure>"),
-            RVal::Builtin(name) => write!(f, "<builtin: {name}>"),
+            RVal::Builtin(id) => match super::builtins::builtin_by_id(*id) {
+                Some(d) => write!(f, "<builtin: {}>", d.key()),
+                None => write!(f, "<builtin: #{id}>"),
+            },
             RVal::Cond(c) => write!(f, "<condition: {}>", c.message),
             RVal::Env(_) => write!(f, "<environment>"),
         }
@@ -455,6 +513,19 @@ mod tests {
     }
 
     #[test]
+    fn rlist_set_on_unnamed_list_appends_without_scan() {
+        let mut l = RList::plain(vec![RVal::scalar_dbl(1.0), RVal::scalar_dbl(2.0)]);
+        l.set("k", RVal::scalar_dbl(3.0));
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.names.as_ref().unwrap(), &["", "", "k"]);
+        assert_eq!(l.get("k"), Some(&RVal::scalar_dbl(3.0)));
+        // Updating the same key replaces in place, no duplicate entry.
+        l.set("k", RVal::scalar_dbl(4.0));
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.get("k"), Some(&RVal::scalar_dbl(4.0)));
+    }
+
+    #[test]
     fn class_names() {
         assert_eq!(RVal::scalar_dbl(1.0).class(), "numeric");
         assert_eq!(RVal::list(vec![]).class(), "list");
@@ -468,5 +539,28 @@ mod tests {
         assert_eq!(format_dbl(2.0), "2");
         assert_eq!(format_dbl(1.5), "1.5");
         assert_eq!(format_dbl(1.414214), "1.414214");
+    }
+
+    #[test]
+    fn clone_shares_buffer_until_write() {
+        let a = RVec::plain(vec![1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        assert!(a.shares_buffer(&b));
+        b.vals_mut()[0] = 99.0;
+        assert!(!a.shares_buffer(&b), "write must detach the shared buffer");
+        assert_eq!(a.vals[0], 1.0);
+        assert_eq!(b.vals[0], 99.0);
+    }
+
+    #[test]
+    fn take_vals_moves_when_unique() {
+        let a = RVec::plain(vec![1, 2, 3]);
+        let ptr = a.vals.as_ptr();
+        let v = a.take_vals();
+        assert_eq!(v.as_ptr(), ptr, "unique buffer must move, not copy");
+        let b = RVec::plain(vec![4, 5]);
+        let _keep = b.clone();
+        let w = b.take_vals();
+        assert_eq!(w, vec![4, 5]);
     }
 }

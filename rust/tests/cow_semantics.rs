@@ -1,0 +1,155 @@
+//! Copy-on-modify semantics under the COW value representation
+//! (ISSUE 4 satellite): sharing payload buffers behind `Rc` must be
+//! *unobservable* from R code — callee writes never leak into callers,
+//! `<-` into a shared binding copies, and snapshot surfaces
+//! (`env::flatten`, globals export) keep the values they saw.
+
+use futurize::prelude::*;
+use futurize::rlite::env;
+use futurize::rlite::eval::Interp;
+
+fn run(src: &str) -> RVal {
+    Interp::new().eval_program(src).unwrap_or_else(|e| panic!("{src}: {e:?}"))
+}
+
+#[test]
+fn callee_mutation_invisible_in_caller() {
+    let v = run(
+        "x <- c(1, 2, 3)\n\
+         f <- function(v) { v[1] <- 99\nv[1] }\n\
+         r <- f(x)\n\
+         c(r, x[1])",
+    );
+    assert_eq!(v.as_dbl_vec().unwrap(), vec![99.0, 1.0]);
+}
+
+#[test]
+fn assignment_into_shared_binding_copies() {
+    let v = run(
+        "x <- c(1, 2, 3)\n\
+         y <- x\n\
+         y[2] <- 9\n\
+         c(x[2], y[2])",
+    );
+    assert_eq!(v.as_dbl_vec().unwrap(), vec![2.0, 9.0]);
+}
+
+#[test]
+fn loop_mutation_of_alias_keeps_original() {
+    let v = run(
+        "x <- c(0, 0, 0, 0)\n\
+         y <- x\n\
+         for (i in 1:4) y[i] <- i\n\
+         c(sum(x), sum(y))",
+    );
+    assert_eq!(v.as_dbl_vec().unwrap(), vec![0.0, 10.0]);
+}
+
+#[test]
+fn lookup_shares_buffer_until_write() {
+    // White-box: two reads of the same binding alias one buffer (O(1)
+    // lookups); an R-level write detaches the writer only.
+    let mut i = Interp::new();
+    i.eval_program("x <- c(1, 2, 3, 4)").unwrap();
+    let a = env::lookup(&i.global, "x").unwrap();
+    let b = env::lookup(&i.global, "x").unwrap();
+    match (&a, &b) {
+        (RVal::Dbl(a), RVal::Dbl(b)) => assert!(a.shares_buffer(b), "reads must not copy"),
+        other => panic!("{other:?}"),
+    }
+    i.eval_program("x[1] <- 7").unwrap();
+    let c = env::lookup(&i.global, "x").unwrap();
+    assert_eq!(a.as_dbl_vec().unwrap(), vec![1.0, 2.0, 3.0, 4.0], "snapshot must survive");
+    assert_eq!(c.as_dbl_vec().unwrap(), vec![7.0, 2.0, 3.0, 4.0]);
+}
+
+#[test]
+fn super_assign_through_shared_value_is_isolated() {
+    let v = run(
+        "acc <- c(1, 1)\n\
+         snap <- acc\n\
+         bump <- function() acc[1] <<- acc[1] + 1\n\
+         bump()\nbump()\n\
+         c(acc[1], snap[1])",
+    );
+    assert_eq!(v.as_dbl_vec().unwrap(), vec![3.0, 1.0]);
+}
+
+#[test]
+fn env_flatten_snapshots_values() {
+    let mut i = Interp::new();
+    i.eval_program("z <- c(5, 6)").unwrap();
+    let flat = env::flatten(&i.global);
+    let z0 = flat.iter().find(|(k, _)| k == "z").unwrap().1.clone();
+    i.eval_program("z[1] <- -1").unwrap();
+    assert_eq!(z0.as_dbl_vec().unwrap(), vec![5.0, 6.0], "flatten snapshot must not follow writes");
+}
+
+#[test]
+fn globals_export_snapshots_before_later_mutation() {
+    // future() exports `a` by value at submit time; mutating `a` before
+    // value() must not change the worker's view (paper §2.4 semantics,
+    // preserved under buffer sharing).
+    let v = run(
+        "plan(multicore, workers = 2)\n\
+         a <- c(1, 2)\n\
+         f <- future(sum(a))\n\
+         a <- c(50, 50)\n\
+         value(f)",
+    );
+    assert_eq!(v.as_f64().unwrap(), 3.0);
+}
+
+#[test]
+fn futurized_map_with_mutating_callee_matches_sequential() {
+    let mut s = Session::new();
+    s.eval_str("xs <- 1:6\nfcn <- function(x) { x[1] <- x[1] * 10\nx[1] }").unwrap();
+    let seq = s.eval_str("unlist(lapply(xs, fcn))").unwrap();
+    s.eval_str("plan(multicore, workers = 3)").unwrap();
+    let fut = s.eval_str("unlist(lapply(xs, fcn) |> futurize())").unwrap();
+    assert_eq!(seq, fut);
+    assert_eq!(seq.as_dbl_vec().unwrap(), vec![10.0, 20.0, 30.0, 40.0, 50.0, 60.0]);
+}
+
+#[test]
+fn eapply_snapshot_not_affected_by_callee_writes() {
+    let v = run(
+        "e <- new.env()\n\
+         e$v <- c(2, 4)\n\
+         r <- eapply(e, function(col) { col[1] <- 0\nsum(col) })\n\
+         c(r[[1]], e$v[1])",
+    );
+    assert_eq!(v.as_dbl_vec().unwrap(), vec![4.0, 2.0]);
+}
+
+#[test]
+fn interned_ast_roundtrips_through_binary_wire() {
+    // Symbols/params serialize as identifier text: a closure shipped to
+    // a "worker" decodes to the same behavior.
+    let mut i = Interp::new();
+    i.eval_program("k <- 3\nf <- function(x, n = 2) x^n + k").unwrap();
+    let f = env::lookup(&i.global, "f").unwrap();
+    let w = futurize::rlite::serialize::to_wire(&f).unwrap();
+    let bytes = futurize::wire::bin::to_bytes(&w).unwrap();
+    let back: futurize::rlite::serialize::WireVal =
+        futurize::wire::bin::from_bytes(&bytes).unwrap();
+    let mut worker = Interp::new();
+    let g = futurize::rlite::serialize::from_wire_owned(back, &worker.global);
+    env::define(&worker.global.clone(), "g", g);
+    assert_eq!(worker.eval_program("g(2)").unwrap(), RVal::scalar_dbl(7.0));
+    assert_eq!(worker.eval_program("g(2, n = 3)").unwrap(), RVal::scalar_dbl(11.0));
+}
+
+#[test]
+fn deparse_is_stable_under_interning() {
+    for src in [
+        "lapply(xs, function(x) x + 1)",
+        "for (i in 1:10) s <- s + i",
+        "foreach(x = xs) %do% { f(x) }",
+    ] {
+        let e = futurize::rlite::parse_expr(src).unwrap();
+        let text = futurize::rlite::deparse::deparse(&e);
+        let e2 = futurize::rlite::parse_expr(&text).unwrap();
+        assert_eq!(e, e2, "{src}");
+    }
+}
