@@ -32,7 +32,12 @@ fn map_context(id: u64, f_src: &str) -> TaskContext {
     let mut i = Interp::new();
     i.eval_program(&format!("__f <- {f_src}")).unwrap();
     let f = futurize::rlite::env::lookup(&i.global, "__f").unwrap();
-    TaskContext { id, body: ContextBody::Map { f: to_wire(&f).unwrap(), extra: vec![] }, globals: vec![] }
+    TaskContext {
+        id,
+        body: ContextBody::Map { f: to_wire(&f).unwrap(), extra: vec![] },
+        globals: vec![],
+        nesting: Default::default(),
+    }
 }
 
 fn slice_task(ctx: u64, items: Vec<WireVal>) -> TaskPayload {

@@ -35,6 +35,7 @@ fn protocol_stream() -> (Vec<TaskPayload>, Vec<TaskOutcome>, TaskContext) {
             "w".to_string(),
             WireVal::Dbl((0..64).map(|k| (k as f64).sin()).collect(), None),
         )],
+        nesting: Default::default(),
     };
     let mut tasks = Vec::new();
     let mut outcomes = Vec::new();
@@ -56,6 +57,7 @@ fn protocol_stream() -> (Vec<TaskPayload>, Vec<TaskOutcome>, TaskContext) {
             worker: (k % 2) as usize,
             started_unix: 1.769e9 + k as f64,
             finished_unix: 1.769e9 + 0.3 + k as f64,
+            nested_workers: 0,
         });
     }
     (tasks, outcomes, ctx)

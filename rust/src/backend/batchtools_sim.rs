@@ -149,6 +149,7 @@ impl BatchtoolsSimBackend {
                                     worker: slot,
                                     started_unix: now,
                                     finished_unix: now,
+                                    nested_workers: 0,
                                 }));
                             };
                             let bytes = match std::fs::read(&claimed_in) {
@@ -324,6 +325,7 @@ mod tests {
                 kind: TaskKind::Expr {
                     expr: parse_expr(&format!("{id} + 100")).unwrap(),
                     globals: vec![],
+                    nesting: Default::default(),
                 },
                 time_scale: 0.0,
                 capture_stdout: true,

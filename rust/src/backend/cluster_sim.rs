@@ -7,6 +7,12 @@
 //! and the result path. This preserves the property that matters for
 //! the evaluation: the chunking/scheduling trade-off (few large chunks
 //! amortize latency; many small chunks balance load).
+//!
+//! Cluster-of-multicore (`plan(list(cluster(...), multicore(n)))`) —
+//! the paper's flagship nested topology — needs nothing special here:
+//! the inherited inner stack travels inside each `RegisterContext`
+//! frame of the wrapped process pool, and the latency model charges
+//! nested maps nothing extra (they run entirely on the remote node).
 
 use std::sync::Arc;
 use std::time::Duration;

@@ -59,11 +59,13 @@ pub mod worker;
 
 use std::sync::Arc;
 
+use serde_derive::{Deserialize, Serialize};
+
 use crate::future_core::{TaskContext, TaskOutcome, TaskPayload};
 use crate::rlite::conditions::RCondition;
 
 /// Which backend family a plan names.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
 pub enum BackendKind {
     Sequential,
     Multicore,
@@ -72,8 +74,12 @@ pub enum BackendKind {
     BatchtoolsSim,
 }
 
-/// A fully resolved `plan()`.
-#[derive(Clone, Debug, PartialEq)]
+/// One fully resolved level of a `plan()` stack. Serializable because
+/// the levels *below* the current one travel to workers inside every
+/// registered [`TaskContext`] (see `future_core::NestingInfo`), so a
+/// worker evaluating a nested futurized map can instantiate its own
+/// inner backend instead of silently degrading to sequential.
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
 pub struct PlanSpec {
     pub kind: BackendKind,
     /// Requested worker count (0 = all available cores).
@@ -87,6 +93,13 @@ pub struct PlanSpec {
     /// The plan name as the user wrote it (e.g.
     /// "future.mirai::mirai_multisession") for display.
     pub display: String,
+    /// True when the user wrote the worker count themselves (`workers =
+    /// n`, a node-name vector, or `backend(n)`). An *implicit* count is
+    /// re-derived when the level is inherited by a nested session: the
+    /// machine's cores are divided by the parallelism already in use
+    /// above it — the future-style guard that keeps an inherited
+    /// `multicore` level from oversubscribing cores² ways.
+    pub explicit_workers: bool,
 }
 
 impl PlanSpec {
@@ -98,6 +111,7 @@ impl PlanSpec {
             latency_ms: 0.0,
             poll_ms: 0.0,
             display: "sequential".into(),
+            explicit_workers: true,
         }
     }
 
@@ -109,6 +123,7 @@ impl PlanSpec {
             latency_ms: 0.0,
             poll_ms: 0.0,
             display: "multicore".into(),
+            explicit_workers: true,
         }
     }
 
@@ -120,6 +135,7 @@ impl PlanSpec {
             latency_ms: 0.0,
             poll_ms: 0.0,
             display: "multisession".into(),
+            explicit_workers: true,
         }
     }
 
@@ -154,6 +170,8 @@ impl PlanSpec {
             BackendKind::BatchtoolsSim => cores,
             _ => cores,
         };
+        let explicit_workers =
+            kind == BackendKind::Sequential || workers.is_some() || !worker_names.is_empty();
         Ok(PlanSpec {
             workers: workers.unwrap_or(default_workers).max(1),
             worker_names,
@@ -162,7 +180,27 @@ impl PlanSpec {
             poll_ms: poll_ms.unwrap_or(if kind == BackendKind::BatchtoolsSim { 20.0 } else { 0.0 }),
             display: name.to_string(),
             kind,
+            explicit_workers,
         })
+    }
+
+    /// The worker count this level actually gets in a session whose
+    /// enclosing plan levels already occupy `outer_workers`-way
+    /// parallelism. An explicit count is honored as written — the stack
+    /// author asked for outer×inner effective parallelism, which is
+    /// surfaced in trace events rather than blocked. An implicit count
+    /// (the "all cores" default) divides the machine's cores among the
+    /// outer workers, so an inherited level never silently
+    /// oversubscribes cores² ways.
+    pub fn effective_workers(&self, outer_workers: usize) -> usize {
+        if self.kind == BackendKind::Sequential {
+            return 1;
+        }
+        if self.explicit_workers || outer_workers <= 1 {
+            self.workers.max(1)
+        } else {
+            (self.workers / outer_workers.max(1)).max(1)
+        }
     }
 
     pub fn describe(&self) -> String {
@@ -221,22 +259,22 @@ pub trait Backend: Send {
     fn cancel_queued(&mut self) -> Vec<u64>;
 }
 
-/// Instantiate the backend for a plan.
-pub fn instantiate(plan: &PlanSpec) -> Result<Box<dyn Backend>, String> {
+/// Instantiate the backend for one plan level. `outer_workers` is the
+/// parallelism already in use by enclosing plan levels (1 in a
+/// top-level session); it scales implicit worker counts down via
+/// [`PlanSpec::effective_workers`].
+pub fn instantiate(plan: &PlanSpec, outer_workers: usize) -> Result<Box<dyn Backend>, String> {
+    let workers = plan.effective_workers(outer_workers);
     Ok(match plan.kind {
         BackendKind::Sequential => Box::new(sequential::SequentialBackend::new()),
-        BackendKind::Multicore => Box::new(multicore::MulticoreBackend::new(plan.workers)),
-        BackendKind::Multisession => {
-            Box::new(multisession::MultisessionBackend::new(plan.workers)?)
+        BackendKind::Multicore => Box::new(multicore::MulticoreBackend::new(workers)),
+        BackendKind::Multisession => Box::new(multisession::MultisessionBackend::new(workers)?),
+        BackendKind::ClusterSim => {
+            Box::new(cluster_sim::ClusterSimBackend::new(workers, plan.latency_ms)?)
         }
-        BackendKind::ClusterSim => Box::new(cluster_sim::ClusterSimBackend::new(
-            plan.workers,
-            plan.latency_ms,
-        )?),
-        BackendKind::BatchtoolsSim => Box::new(batchtools_sim::BatchtoolsSimBackend::new(
-            plan.workers,
-            plan.poll_ms,
-        )?),
+        BackendKind::BatchtoolsSim => {
+            Box::new(batchtools_sim::BatchtoolsSimBackend::new(workers, plan.poll_ms)?)
+        }
     })
 }
 
@@ -278,5 +316,20 @@ mod tests {
     fn sequential_defaults_to_one_worker() {
         let p = PlanSpec::from_name("sequential", None, vec![], None, None).unwrap();
         assert_eq!(p.workers, 1);
+    }
+
+    #[test]
+    fn implicit_worker_counts_divide_among_outer_levels() {
+        let mut p = PlanSpec::from_name("multicore", None, vec![], None, None).unwrap();
+        assert!(!p.explicit_workers, "defaulted count must not read as explicit");
+        p.workers = 8; // pretend an 8-core machine
+        assert_eq!(p.effective_workers(1), 8);
+        assert_eq!(p.effective_workers(4), 2);
+        assert_eq!(p.effective_workers(16), 1, "never drops below one worker");
+        // Explicit counts are honored as written, even nested.
+        let e = PlanSpec::multicore(2);
+        assert_eq!(e.effective_workers(4), 2);
+        // Sequential is always exactly one worker.
+        assert_eq!(PlanSpec::sequential().effective_workers(4), 1);
     }
 }

@@ -148,7 +148,11 @@ mod tests {
     fn payload(id: u64, src: &str) -> TaskPayload {
         TaskPayload {
             id,
-            kind: TaskKind::Expr { expr: parse_expr(src).unwrap(), globals: vec![] },
+            kind: TaskKind::Expr {
+                expr: parse_expr(src).unwrap(),
+                globals: vec![],
+                nesting: Default::default(),
+            },
             time_scale: 0.0,
             capture_stdout: true,
         }
@@ -215,6 +219,7 @@ mod tests {
             id: 11,
             body: ContextBody::Map { f, extra: vec![] },
             globals: vec![],
+            nesting: Default::default(),
         }))
         .unwrap();
         b.submit(TaskPayload {

@@ -13,7 +13,10 @@
 //! written to every worker's stdin (`RegisterContext`), so the per-map
 //! logical volume for the function/extras/globals is O(1) and the
 //! physical volume O(workers), not O(chunks). Worker processes cache
-//! contexts by id (see [`super::worker`]).
+//! contexts by id (see [`super::worker`]). The frame carries the plan
+//! stack's remaining levels (`TaskContext::nesting`); because respawn
+//! replays every cached context frame, a replacement worker inherits
+//! the same inner backend for nested futurized maps as the casualty.
 //!
 //! ## Supervision
 //!

@@ -4,6 +4,11 @@
 //! the property future.tests checks). Like `multicore`, it rides the
 //! zero-copy fast path: contexts are shared `Arc`s and chunk payloads
 //! are `WireSlice` windows, so no wire bytes are ever encoded.
+//!
+//! Plan stacks: the inline task still adopts `TaskContext::nesting`, so
+//! `plan(list(sequential, multicore(2)))` runs nested futurized maps on
+//! a real 2-thread inner backend — sequential level 1 does not flatten
+//! the levels below it.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -85,7 +90,11 @@ mod tests {
         let mut b = SequentialBackend::new();
         b.submit(TaskPayload {
             id: 7,
-            kind: TaskKind::Expr { expr: parse_expr("1 + 1").unwrap(), globals: vec![] },
+            kind: TaskKind::Expr {
+                expr: parse_expr("1 + 1").unwrap(),
+                globals: vec![],
+                nesting: Default::default(),
+            },
             time_scale: 0.0,
             capture_stdout: true,
         })

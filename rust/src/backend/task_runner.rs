@@ -126,6 +126,17 @@ pub fn run_task(
         time_scale: payload.time_scale,
         ..Default::default()
     });
+    // Inherit the plan-stack levels the parent did not consume: a
+    // nested futurized map inside the task body instantiates its own
+    // inner backend from this instead of degrading to sequential. An
+    // empty inherited stack means nested calls default to sequential
+    // (the implicit-inner nesting guard). Context-free Expr tasks
+    // (low-level future()) carry their nesting in the payload itself.
+    if let Some(ctx) = ctx {
+        interp.session.adopt_nesting(&ctx.nesting);
+    } else if let TaskKind::Expr { nesting, .. } = &payload.kind {
+        interp.session.adopt_nesting(nesting);
+    }
     // Stream live-class conditions through the hook; mark them so they are
     // not double-relayed from the final capture log.
     let streamed: Rc<RefCell<Vec<RCondition>>> = Rc::new(RefCell::new(Vec::new()));
@@ -163,6 +174,7 @@ pub fn run_task(
         worker: worker_idx,
         started_unix: started,
         finished_unix: crate::future_core::driver::now_unix(),
+        nested_workers: interp.session.peak_backend_workers,
     }
 }
 
@@ -173,7 +185,7 @@ fn execute_kind(
     genv: &crate::rlite::env::EnvRef,
 ) -> (Result<Vec<WireVal>, RCondition>, CaptureLog) {
     match kind {
-        TaskKind::Expr { expr, globals } => {
+        TaskKind::Expr { expr, globals, .. } => {
             install_globals(genv, globals);
             let (r, log) = interp.eval_captured(expr, genv);
             (wrap_single(r), log)
@@ -218,9 +230,29 @@ fn execute_kind(
             // owned Vec per call, as before this PR.
             let mut call_args: Vec<(Option<String>, RVal)> =
                 Vec::with_capacity(1 + extra_vals.len());
+            // Baseline for per-element nested-root resets on unseeded
+            // maps: the root inherited from the parent session via
+            // NestingInfo, so futureSeed() still steers nested seeded
+            // maps even when the outer map declares no seed.
+            let root0 = interp.session.rng_root_seed;
             for (k, item_w) in items.iter().enumerate() {
                 if let Some(seeds) = seeds {
                     interp.rng = RngStream::new(seeds[k]);
+                    // Fork the RNG tree per level: a nested seed = TRUE
+                    // map derives its per-element streams from *this*
+                    // element's stream, so nested draws depend only on
+                    // the outer root seed and element index — never on
+                    // topology, chunking, or worker placement.
+                    interp.session.rng_root_seed = crate::rng::nested_root_seed(&seeds[k]);
+                } else {
+                    // Unseeded outer map: re-pin the nested-root
+                    // baseline per element, so a nested seed = TRUE
+                    // map's draws do not depend on how many earlier
+                    // elements shared this task's session (chunking/
+                    // topology invariance); sibling nested maps within
+                    // one element still diverge via the per-call root
+                    // advance in element_seeds.
+                    interp.session.rng_root_seed = root0;
                 }
                 let item = from_wire(item_w, genv);
                 let elem_capture = if compat { Some(SliceCapture::begin(interp)) } else { None };
@@ -283,9 +315,17 @@ fn execute_kind(
             let mut log = CaptureLog::default();
             let slice_capture = if compat { None } else { Some(SliceCapture::begin(interp)) };
             let mut err: Option<RCondition> = None;
+            let root0 = interp.session.rng_root_seed;
             for (k, bs) in bindings.iter().enumerate() {
                 if let Some(seeds) = seeds {
                     interp.rng = RngStream::new(seeds[k]);
+                    // Same per-level RNG fork as the map-slice loop.
+                    interp.session.rng_root_seed = crate::rng::nested_root_seed(&seeds[k]);
+                } else {
+                    // Same per-element baseline re-pin as the map-slice
+                    // loop (chunking invariance for nested seeded maps
+                    // under an unseeded outer).
+                    interp.session.rng_root_seed = root0;
                 }
                 let iter_env = reuse.take();
                 for (name, w) in bs {
@@ -369,7 +409,11 @@ mod tests {
     fn expr_task(src: &str, globals: Vec<(String, WireVal)>) -> TaskPayload {
         TaskPayload {
             id: 1,
-            kind: TaskKind::Expr { expr: parse_expr(src).unwrap(), globals },
+            kind: TaskKind::Expr {
+                expr: parse_expr(src).unwrap(),
+                globals,
+                nesting: Default::default(),
+            },
             time_scale: 0.0,
             capture_stdout: true,
         }
@@ -440,6 +484,7 @@ mod tests {
             id,
             body: ContextBody::Map { f: to_wire(&f).unwrap(), extra: vec![] },
             globals: vec![],
+            nesting: Default::default(),
         }
     }
 
@@ -534,6 +579,88 @@ mod tests {
         let o = run_task(&map_slice_task(13, 5), Some(&ctx), 0, None);
         let vals = o.values.unwrap();
         assert_eq!(vals.len(), 5);
+    }
+
+    /// Frame allocations for one run_task of a *nested* session (depth
+    /// 1, inherited `[sequential]` stack) whose body runs an inner
+    /// futurized map of `inner_n` non-capturing elements.
+    fn nested_frame_allocs(inner_n: usize) -> u64 {
+        use crate::backend::PlanSpec;
+        use crate::future_core::NestingInfo;
+        let ctx = {
+            let mut i = Interp::new();
+            i.eval_program(&format!(
+                "__f <- function(x) sum(future_sapply(1:{inner_n}, function(y) y * 2 + x))"
+            ))
+            .unwrap();
+            let f = crate::rlite::env::lookup(&i.global, "__f").unwrap();
+            TaskContext {
+                id: 21,
+                body: ContextBody::Map { f: to_wire(&f).unwrap(), extra: vec![] },
+                globals: vec![],
+                nesting: NestingInfo {
+                    stack: vec![PlanSpec::sequential()],
+                    outer_workers: 2,
+                    depth: 1,
+                    root_seed: 42,
+                },
+            }
+        };
+        let t = TaskPayload {
+            id: 22,
+            kind: TaskKind::MapSlice {
+                ctx: 21,
+                items: vec![WireVal::Dbl(vec![1.0], None)].into(),
+                seeds: None,
+            },
+            time_scale: 0.0,
+            capture_stdout: true,
+        };
+        let before = crate::rlite::env::frames_allocated();
+        let o = run_task(&t, Some(&ctx), 0, None);
+        let delta = crate::rlite::env::frames_allocated() - before;
+        // sum over y of (2y + 1) = n(n+1) + n.
+        let expect = (inner_n * (inner_n + 1) + inner_n) as f64;
+        match &o.values.unwrap()[0] {
+            WireVal::Dbl(v, _) => assert_eq!(v[0], expect),
+            other => panic!("{other:?}"),
+        }
+        delta
+    }
+
+    #[test]
+    fn nested_map_keeps_zero_per_element_frame_allocs() {
+        // The inner map of a nested session (both levels sequential, so
+        // everything stays on this thread and the thread-local counter
+        // sees it) must still reuse its iteration frame: total frame
+        // allocations are constant in the inner element count.
+        let small = nested_frame_allocs(8);
+        let large = nested_frame_allocs(128);
+        assert_eq!(
+            small, large,
+            "nested-session frame allocations must not scale with inner element count \
+             (got {small} for N=8, {large} for N=128)"
+        );
+    }
+
+    #[test]
+    fn nested_session_dynamic_name_reads_do_not_intern() {
+        // The Symbol::probe read path (dynamic `exists()` of an unbound
+        // name) must not leak interner slots in nested worker sessions
+        // either — the adopted plan stack must not change lookup paths.
+        use crate::rlite::intern::Symbol;
+        let name = "nested_probe_only_name_zq";
+        assert!(Symbol::probe(name).is_none(), "test name already interned elsewhere");
+        let ctx = map_context(23, &format!("function(x) exists(\"{name}\")"));
+        let o = run_task(&map_slice_task(23, 2), Some(&ctx), 0, None);
+        match &o.values.unwrap()[0] {
+            WireVal::Lgl(v, _) => assert!(!v[0]),
+            other => panic!("{other:?}"),
+        }
+        assert!(
+            Symbol::probe(name).is_none(),
+            "nested-session dynamic read must probe, not intern"
+        );
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //! resolves it for every `MapSlice`/`ForeachSlice` task that follows.
 //! `DropContext` evicts it when the map call resolves. stdin delivery is
 //! ordered, so a context always arrives before any task referencing it.
+//! The context also carries the parent's *remaining plan stack*
+//! (`TaskContext::nesting`), which the task runner installs into the
+//! worker-side session so nested futurized maps instantiate their own
+//! inner backend — and which supervision replays to respawned workers
+//! along with the rest of the context cache.
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -168,7 +173,11 @@ mod tests {
     fn protocol_messages_roundtrip() {
         let task = TaskPayload {
             id: 3,
-            kind: TaskKind::Expr { expr: parse_expr("1 + 2").unwrap(), globals: vec![] },
+            kind: TaskKind::Expr {
+                expr: parse_expr("1 + 2").unwrap(),
+                globals: vec![],
+                nesting: Default::default(),
+            },
             time_scale: 1.0,
             capture_stdout: true,
         };
@@ -192,6 +201,7 @@ mod tests {
                 "a".into(),
                 crate::rlite::serialize::WireVal::Dbl(vec![1.5], None),
             )],
+            nesting: Default::default(),
         };
         for codec in [WireCodec::Binary, WireCodec::Json] {
             let bytes = codec.encode(&ParentMsg::RegisterContext(ctx.clone())).unwrap();
@@ -220,6 +230,7 @@ mod tests {
                 "g".into(),
                 crate::rlite::serialize::WireVal::Dbl(vec![1.0, 2.0], None),
             )],
+            nesting: Default::default(),
         };
         for codec in [WireCodec::Binary, WireCodec::Json] {
             let owned = codec.encode(&ParentMsg::RegisterContext(ctx.clone())).unwrap();

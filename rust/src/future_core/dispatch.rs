@@ -187,7 +187,13 @@ impl FutureSet {
             let backend = i.session.backend().map_err(Signal::error)?;
             backend.register_context(self.ctx.clone()).map_err(Signal::error)?;
         }
+        // Per-depth ledger bookkeeping: the drive loop below may stash
+        // outcomes for enclosing loops (and vice versa); registering the
+        // loop lets the ledger prune unclaimed strays once the last
+        // active loop exits.
+        i.session.pending.enter();
         let result = self.drive(i, opts);
+        i.session.pending.exit();
         // Always release the context, even on the error path: process
         // workers cache contexts by id and would otherwise leak them.
         let ctx_id = self.ctx.id;
@@ -327,6 +333,7 @@ impl FutureSet {
                 worker,
                 started_unix: now,
                 finished_unix: now,
+                nested_workers: 0,
             },
         );
         self.relay_ready(i, opts)
@@ -374,11 +381,11 @@ impl FutureSet {
                 .in_flight
                 .keys()
                 .copied()
-                .find(|id| matches!(i.session.pending.get(id), Some(Some(_))))
+                .find(|id| i.session.pending.is_ready(*id))
             else {
                 return Ok(());
             };
-            let Some(Some(outcome)) = i.session.pending.remove(&id) else {
+            let Some(outcome) = i.session.pending.take_ready(id) else {
                 return Ok(());
             };
             self.absorb(i, outcome, opts)?;
@@ -421,6 +428,7 @@ impl FutureSet {
             worker: outcome.worker,
             start: outcome.started_unix - self.t0,
             end: outcome.finished_unix - self.t0,
+            inner_workers: outcome.nested_workers,
         });
         // Streaming reduction: values land in their slots immediately.
         // Values are taken out of the outcome (relay only needs the log
@@ -499,10 +507,10 @@ impl FutureSet {
             .in_flight
             .keys()
             .copied()
-            .filter(|id| matches!(i.session.pending.get(id), Some(Some(_))))
+            .filter(|id| i.session.pending.is_ready(*id))
             .collect();
         for id in stashed {
-            i.session.pending.remove(&id);
+            i.session.pending.discard(id);
             self.in_flight.remove(&id);
         }
         while !self.in_flight.is_empty() {
@@ -538,7 +546,7 @@ impl FutureSet {
 /// `value()`/`resolved()` looks there, and an enclosing map call's
 /// drive loop reclaims its own ids from there (nested dispatch).
 fn stash_foreign_outcome(i: &mut Interp, outcome: TaskOutcome) {
-    i.session.pending.insert(outcome.id, Some(outcome));
+    i.session.pending.stash(outcome);
 }
 
 /// Build and run a [`FutureSet`] for a map-style call.
@@ -552,10 +560,12 @@ pub fn run_map(
     seeds: Option<Vec<RngState>>,
     opts: &MapOptions,
 ) -> Result<Vec<RVal>, Signal> {
+    let nesting = i.session.nesting_for_context();
     let ctx = Arc::new(TaskContext {
         id: i.session.fresh_context_id(),
         body: ContextBody::Map { f, extra },
         globals,
+        nesting,
     });
     let workers = i.session.workers();
     let time_scale = i.config.time_scale;
@@ -572,10 +582,12 @@ pub fn run_foreach(
     seeds: Option<Vec<RngState>>,
     opts: &MapOptions,
 ) -> Result<Vec<RVal>, Signal> {
+    let nesting = i.session.nesting_for_context();
     let ctx = Arc::new(TaskContext {
         id: i.session.fresh_context_id(),
         body: ContextBody::Foreach { body },
         globals,
+        nesting,
     });
     let workers = i.session.workers();
     let time_scale = i.config.time_scale;

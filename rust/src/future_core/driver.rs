@@ -145,10 +145,20 @@ pub fn foreach_elements(
     dispatch::run_foreach(i, body.clone(), bindings_wire, globals, seeds, opts)
 }
 
-fn element_seeds(i: &Interp, opts: &MapOptions, n: usize) -> Option<Vec<RngState>> {
+fn element_seeds(i: &mut Interp, opts: &MapOptions, n: usize) -> Option<Vec<RngState>> {
     match opts.seed {
         SeedOption::False => None,
-        SeedOption::True => Some(make_streams(i.session.rng_root_seed, n)),
+        SeedOption::True => {
+            // Consume root-seed state: a second seed = TRUE map in the
+            // same session (incl. sibling *nested* maps inside one
+            // element) derives a fresh, independent stream family —
+            // deterministically, so topology invariance is untouched.
+            let root = i.session.rng_root_seed;
+            i.session.rng_root_seed = crate::rng::advance_root_seed(root);
+            Some(make_streams(root, n))
+        }
+        // An explicit seed is self-contained and repeatable: it does
+        // not consume session state.
         SeedOption::Seed(s) => Some(make_streams(s, n)),
     }
 }

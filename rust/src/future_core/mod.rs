@@ -36,8 +36,11 @@ use crate::rng::RngState;
 #[derive(Clone, Debug, Serialize, Deserialize)]
 pub enum TaskKind {
     /// A single expression with exported globals (low-level `future()`,
-    /// domain functions).
-    Expr { expr: Expr, globals: Vec<(String, WireVal)> },
+    /// domain functions). Context-free tasks carry their own
+    /// [`NestingInfo`] so a `future()` consumes one plan level exactly
+    /// like a map call: nested futurized code inside it inherits the
+    /// remaining stack instead of degrading to sequential.
+    Expr { expr: Expr, globals: Vec<(String, WireVal)>, nesting: NestingInfo },
     /// A slice of map elements, executed against a [`TaskContext`]
     /// previously registered with the backend: run `ctx.f(item,
     /// ctx.extra...)` per element. `seeds` carries one pre-allocated
@@ -79,6 +82,44 @@ pub struct TaskContext {
     /// Exported globals, installed into the worker's fresh interpreter
     /// before each task of this context runs.
     pub globals: Vec<(String, WireVal)>,
+    /// The plan-stack levels *below* the one running this context's
+    /// tasks, inherited by worker sessions so nested futurized calls
+    /// instantiate their own inner backend (paper's `plan(list(...))`
+    /// topologies). Riding inside the context means supervision replays
+    /// it to respawned workers for free, along with everything else.
+    pub nesting: NestingInfo,
+}
+
+/// How a [`TaskContext`]'s tasks relate to the session's plan stack.
+///
+/// Shipped once per map call inside `RegisterContext`; the worker's
+/// fresh session adopts it (`SessionState::adopt_nesting`) before the
+/// first element runs, so a nested futurized map inside the task body
+/// sees the inherited stack instead of falling back to sequential.
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub struct NestingInfo {
+    /// Remaining plan levels. Empty means nested calls in the worker
+    /// default to sequential — the future framework's implicit-inner
+    /// guard against accidental recursive parallelism.
+    pub stack: Vec<PlanSpec>,
+    /// Product of the worker counts of every consumed level (≥ 1).
+    /// Inherited levels with an *implicit* worker count divide the
+    /// machine's cores by this, bounding total oversubscription.
+    pub outer_workers: usize,
+    /// Nesting depth of the session consuming this context (1 = a
+    /// worker of a top-level map call).
+    pub depth: usize,
+    /// The parent session's root RNG seed at context creation. Worker
+    /// sessions adopt it, so a nested `seed = TRUE` map under an
+    /// *unseeded* outer map still respects `futureSeed()` (the seeded
+    /// outer path overrides it per element with the stream fork).
+    pub root_seed: u64,
+}
+
+impl Default for NestingInfo {
+    fn default() -> Self {
+        NestingInfo { stack: vec![], outer_workers: 1, depth: 1, root_seed: 42 }
+    }
 }
 
 /// What a context's tasks execute per element.
@@ -114,6 +155,13 @@ pub struct TaskOutcome {
     /// wall-clock capture for tracing.
     pub started_unix: f64,
     pub finished_unix: f64,
+    /// Largest worker count of any *inner* backend the task's session
+    /// instantiated from its inherited plan stack — via a nested
+    /// futurized call or anything else that touches the backend, e.g.
+    /// `nbrOfWorkers()` (0 = the inherited plan was never used). Folded
+    /// into [`TraceEvent::inner_workers`] so outer×inner effective
+    /// parallelism is observable from the parent's trace.
+    pub nested_workers: usize,
 }
 
 /// Build the `FutureError`-style condition raised when a worker dies
@@ -153,16 +201,105 @@ pub struct TraceEvent {
     pub worker: usize,
     pub start: f64,
     pub end: f64,
+    /// Worker count of the largest inner backend the task's session
+    /// instantiated from its inherited plan stack (0 = the inherited
+    /// plan was never used; 1 can also mean a backend-touching call
+    /// like `nbrOfWorkers()` on the implicit sequential level). The map
+    /// call's effective parallelism under a plan stack is
+    /// `distinct(worker) × max(inner_workers, 1)`.
+    pub inner_workers: usize,
+}
+
+/// The per-depth outcome ledger — PR 1's flat `pending` map, grown to
+/// understand re-entrant dispatch. Entries are either *placeholders* a
+/// `future()` handle registered (owned until `value()` collects them,
+/// at whatever depth that happens) or *strays*: outcomes one drive loop
+/// pulled off the shared backend channel on behalf of another (a nested
+/// futurized map, `wait_for`, or an enclosing map call). The ledger
+/// counts how many drive loops are active; when the outermost one
+/// exits, strays nobody reclaimed (their owner aborted mid-call) are
+/// pruned, so an abandoned nested dispatch can never leak outcomes into
+/// the session for its lifetime.
+#[derive(Default)]
+pub struct PendingLedger {
+    entries: HashMap<u64, PendingEntry>,
+    depth: usize,
+}
+
+struct PendingEntry {
+    outcome: Option<TaskOutcome>,
+    /// True for `future()` placeholders: a live handle will collect
+    /// this entry eventually, so depth-0 pruning must keep it.
+    owned: bool,
+}
+
+impl PendingLedger {
+    /// Register a `future()` placeholder for `id`.
+    pub fn expect(&mut self, id: u64) {
+        self.entries.insert(id, PendingEntry { outcome: None, owned: true });
+    }
+
+    /// Park an outcome the current event loop does not own.
+    pub fn stash(&mut self, outcome: TaskOutcome) {
+        match self.entries.get_mut(&outcome.id) {
+            Some(e) => e.outcome = Some(outcome),
+            None => {
+                let id = outcome.id;
+                self.entries.insert(id, PendingEntry { outcome: Some(outcome), owned: false });
+            }
+        }
+    }
+
+    /// Take the outcome for `id` if it has arrived (placeholders whose
+    /// result is still in flight stay registered).
+    pub fn take_ready(&mut self, id: u64) -> Option<TaskOutcome> {
+        if self.is_ready(id) {
+            self.entries.remove(&id).and_then(|e| e.outcome)
+        } else {
+            None
+        }
+    }
+
+    pub fn is_ready(&self, id: u64) -> bool {
+        self.entries.get(&id).is_some_and(|e| e.outcome.is_some())
+    }
+
+    /// Drop all state for `id` (lost futures, aborted chunks).
+    pub fn discard(&mut self, id: u64) {
+        self.entries.remove(&id);
+    }
+
+    /// A drive loop (map-call dispatch or `future()` wait) is entering.
+    pub fn enter(&mut self) {
+        self.depth += 1;
+    }
+
+    /// The matching exit; at depth 0, prune unclaimed strays.
+    pub fn exit(&mut self) {
+        self.depth = self.depth.saturating_sub(1);
+        if self.depth == 0 {
+            self.entries.retain(|_, e| e.owned);
+        }
+    }
+
+    /// True when nothing is stashed or expected (used by tests to pin
+    /// the depth-0 pruning contract).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
 }
 
 /// Per-session future-ecosystem state, owned by the interpreter.
 pub struct SessionState {
-    /// The plan stack (`plan()` pushes/replaces the top).
-    pub plan: PlanSpec,
-    /// Lazily instantiated backend for the current plan.
+    /// The plan stack: level 0 is this session's backend, deeper levels
+    /// are inherited by workers for nested futurized calls. Never
+    /// empty — `[sequential]` is the base state.
+    plan_stack: Vec<PlanSpec>,
+    /// Lazily instantiated backend for the stack's top level.
     backend: Option<Box<dyn Backend>>,
-    /// Pending low-level futures: id → resolved outcome (if arrived).
-    pending: HashMap<u64, Option<TaskOutcome>>,
+    /// Outcomes in flight between re-entrant event loops and `future()`
+    /// handles, tracked per dispatch depth.
+    pub pending: PendingLedger,
     /// Tasks reported lost by a [`BackendEvent::WorkerLost`] that the
     /// event's receiver did not own: task id → worker index. A map
     /// call's drive loop reclaims its own ids from here (and retries
@@ -176,30 +313,89 @@ pub struct SessionState {
     pub last_trace: Vec<TraceEvent>,
     /// Session RNG seed used to derive per-element streams.
     pub rng_root_seed: u64,
+    /// Worker-count product of the plan levels enclosing sessions have
+    /// already consumed (1 in a top-level session).
+    pub outer_workers: usize,
+    /// How many plan levels enclosing sessions consumed (0 at the top
+    /// level, 1 inside a worker of a top-level map call, …).
+    pub nest_depth: usize,
+    /// Largest worker count of any backend this session instantiated —
+    /// worker sessions report it in [`TaskOutcome::nested_workers`] so
+    /// parents can trace effective nested parallelism.
+    pub peak_backend_workers: usize,
 }
 
 impl Default for SessionState {
     fn default() -> Self {
         SessionState {
-            plan: PlanSpec::sequential(),
+            plan_stack: vec![PlanSpec::sequential()],
             backend: None,
-            pending: HashMap::new(),
+            pending: PendingLedger::default(),
             lost_tasks: HashMap::new(),
             next_task_id: 0,
             next_context_id: 0,
             last_trace: Vec::new(),
             rng_root_seed: 42,
+            outer_workers: 1,
+            nest_depth: 0,
+            peak_backend_workers: 0,
         }
     }
 }
 
 impl SessionState {
+    /// The plan level this session executes on.
+    pub fn plan(&self) -> &PlanSpec {
+        &self.plan_stack[0]
+    }
+
+    /// The full plan stack (level 0 first).
+    pub fn plan_stack(&self) -> &[PlanSpec] {
+        &self.plan_stack
+    }
+
     pub fn set_plan(&mut self, plan: PlanSpec) {
-        if self.plan != plan {
+        self.set_plan_stack(vec![plan]);
+    }
+
+    /// Install a plan stack (`plan(list(...))`). An empty stack resets
+    /// to `[sequential]`.
+    pub fn set_plan_stack(&mut self, mut stack: Vec<PlanSpec>) {
+        if stack.is_empty() {
+            stack.push(PlanSpec::sequential());
+        }
+        if self.plan_stack != stack {
             // Tear down the old worker pool, as future does on plan change.
             self.backend = None;
-            self.plan = plan;
+            self.plan_stack = stack;
         }
+    }
+
+    /// The nesting metadata stamped into a new [`TaskContext`]: the
+    /// plan levels this session will *not* consume, for its workers.
+    pub fn nesting_for_context(&mut self) -> NestingInfo {
+        let level_workers = self.workers().max(1);
+        NestingInfo {
+            stack: self.plan_stack[1..].to_vec(),
+            outer_workers: self.outer_workers.max(1) * level_workers,
+            depth: self.nest_depth + 1,
+            root_seed: self.rng_root_seed,
+        }
+    }
+
+    /// Adopt inherited nesting state in a worker session (called by the
+    /// task runner before the first element of a context executes). An
+    /// empty inherited stack is the implicit inner level: sequential.
+    pub fn adopt_nesting(&mut self, nesting: &NestingInfo) {
+        let stack = if nesting.stack.is_empty() {
+            vec![PlanSpec::sequential()]
+        } else {
+            nesting.stack.clone()
+        };
+        self.set_plan_stack(stack);
+        self.outer_workers = nesting.outer_workers.max(1);
+        self.nest_depth = nesting.depth;
+        self.rng_root_seed = nesting.root_seed;
     }
 
     pub fn fresh_task_id(&mut self) -> u64 {
@@ -216,13 +412,16 @@ impl SessionState {
     /// embedder hook for custom [`Backend`] implementations (and the
     /// dispatch-core test suite's instrumented probe backends).
     pub fn install_backend(&mut self, backend: Box<dyn Backend>) {
+        self.peak_backend_workers = self.peak_backend_workers.max(backend.workers());
         self.backend = Some(backend);
     }
 
-    /// Instantiate (or reuse) the backend for the current plan.
+    /// Instantiate (or reuse) the backend for the stack's top level.
     pub fn backend(&mut self) -> Result<&mut Box<dyn Backend>, String> {
         if self.backend.is_none() {
-            self.backend = Some(crate::backend::instantiate(&self.plan)?);
+            let b = crate::backend::instantiate(&self.plan_stack[0], self.outer_workers)?;
+            self.peak_backend_workers = self.peak_backend_workers.max(b.workers());
+            self.backend = Some(b);
         }
         Ok(self.backend.as_mut().unwrap())
     }
@@ -241,6 +440,7 @@ impl SessionState {
 
 pub fn register_builtins(r: &mut Reg) {
     r.special("future", "plan", plan_fn);
+    r.special("future", "tweak", tweak_fn);
     r.normal("future", "nbrOfWorkers", nbr_of_workers_fn);
     r.normal("parallelly", "availableCores", available_cores_fn);
     r.special("future", "future", future_fn);
@@ -250,50 +450,216 @@ pub fn register_builtins(r: &mut Reg) {
     r.special("future", "%<-%", future_assign_fn);
 }
 
-/// `plan(backend, workers = n)` — a special form: the backend may be an
-/// unevaluated symbol (`multisession`), a namespaced symbol
-/// (`future.mirai::mirai_multisession`), or a string.
-fn plan_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
-    let Some(first) = args.first() else {
-        // plan() with no args: report current plan name.
-        return Ok(RVal::scalar_str(i.session.plan.describe()));
-    };
-    let kind_name = match &first.value {
-        Expr::Sym(s) => s.to_string(),
-        Expr::Ns { pkg, name } => format!("{pkg}::{name}"),
-        Expr::Str(s) => s.clone(),
-        other => {
-            // Maybe an expression evaluating to a string.
-            i.eval(other, env)?.as_str().map_err(Signal::error)?
-        }
-    };
-    let mut workers: Option<usize> = None;
-    let mut worker_names: Vec<String> = Vec::new();
-    let mut latency_ms: Option<f64> = None;
-    let mut poll_ms: Option<f64> = None;
-    for a in &args[1..] {
+/// Render a plan stack for `plan()` with no arguments.
+fn describe_stack(stack: &[PlanSpec]) -> String {
+    stack.iter().map(|p| p.describe()).collect::<Vec<_>>().join(" -> ")
+}
+
+/// Apply `workers = n` / `latency_ms = x` / `poll_ms = x` overrides to a
+/// parsed plan level. A single leading *unnamed* numeric argument is the
+/// `backend(n)` worker-count shorthand. Unknown named arguments are
+/// ignored, matching `plan()`'s historic tolerance.
+fn apply_plan_args(
+    i: &mut Interp,
+    spec: &mut PlanSpec,
+    args: &[Arg],
+    env: &EnvRef,
+) -> Result<(), Signal> {
+    for (k, a) in args.iter().enumerate() {
         match a.name.as_deref() {
+            None if k == 0 => {
+                let v = i.eval(&a.value, env)?;
+                spec.workers = v.as_usize().map_err(Signal::error)?.max(1);
+                spec.explicit_workers = true;
+            }
+            None => {
+                return Err(Signal::error(
+                    "plan: unexpected unnamed backend argument (only the first may be a \
+                     worker count)",
+                ))
+            }
             Some("workers") => {
                 let v = i.eval(&a.value, env)?;
                 match &v {
                     RVal::Chr(names) => {
-                        worker_names = names.vals.to_vec();
-                        workers = Some(names.vals.len());
+                        spec.worker_names = names.vals.to_vec();
+                        spec.workers = names.vals.len().max(1);
                     }
-                    other => workers = Some(other.as_usize().map_err(Signal::error)?),
+                    other => spec.workers = other.as_usize().map_err(Signal::error)?.max(1),
                 }
+                spec.explicit_workers = true;
             }
             Some("latency_ms") => {
-                latency_ms = Some(i.eval(&a.value, env)?.as_f64().map_err(Signal::error)?)
+                spec.latency_ms = i.eval(&a.value, env)?.as_f64().map_err(Signal::error)?;
             }
             Some("poll_ms") => {
-                poll_ms = Some(i.eval(&a.value, env)?.as_f64().map_err(Signal::error)?)
+                spec.poll_ms = i.eval(&a.value, env)?.as_f64().map_err(Signal::error)?;
             }
             _ => {}
         }
     }
-    let spec = PlanSpec::from_name(&kind_name, workers, worker_names, latency_ms, poll_ms)
-        .map_err(Signal::error)?;
+    Ok(())
+}
+
+/// Parse one level of a plan stack. Accepts a bare backend symbol
+/// (`multicore`), a namespaced symbol (`future.callr::callr`), a string,
+/// a `tweak(backend, workers = n, ...)` call, the `backend(n)` /
+/// `backend(workers = n)` shorthand, or any expression evaluating to a
+/// backend name or a `tweak()`-built FutureStrategy value.
+fn plan_level_from_expr(i: &mut Interp, e: &Expr, env: &EnvRef) -> Result<PlanSpec, Signal> {
+    match e {
+        Expr::Sym(s) => match PlanSpec::from_name(s.as_str(), None, vec![], None, None) {
+            Ok(spec) => Ok(spec),
+            // Not a backend name: maybe a variable bound to a name
+            // string or a tweak()-built strategy (`plan(s)`).
+            Err(err) => match crate::rlite::env::lookup_sym(env, *s) {
+                Some(v) => plan_level_from_value(&v),
+                None => Err(Signal::error(err)),
+            },
+        },
+        Expr::Ns { pkg, name } => {
+            PlanSpec::from_name(&format!("{pkg}::{name}"), None, vec![], None, None)
+                .map_err(Signal::error)
+        }
+        Expr::Str(s) => PlanSpec::from_name(s, None, vec![], None, None).map_err(Signal::error),
+        Expr::Call { func, args } => {
+            // `tweak(backend, ...)`: a base level plus overrides.
+            if matches!(func.as_ref(), Expr::Sym(s) if s.as_str() == "tweak") {
+                let Some(first) = args.first() else {
+                    return Err(Signal::error("tweak: missing backend argument"));
+                };
+                let mut spec = plan_level_from_expr(i, &first.value, env)?;
+                apply_plan_args(i, &mut spec, &args[1..], env)?;
+                return Ok(spec);
+            }
+            // The `backend(n)` / `backend(workers = n)` shorthand —
+            // only when the callee *names* a backend. Any other call
+            // is an ordinary expression evaluating to a backend name
+            // or strategy value (e.g. `plan(paste0("multi", "core"))`).
+            let head_name = match func.as_ref() {
+                Expr::Sym(s) => Some(s.as_str().to_string()),
+                Expr::Ns { pkg, name } => Some(format!("{pkg}::{name}")),
+                _ => None,
+            };
+            if let Some(name) = head_name {
+                if let Ok(mut spec) = PlanSpec::from_name(&name, None, vec![], None, None) {
+                    apply_plan_args(i, &mut spec, args, env)?;
+                    return Ok(spec);
+                }
+            }
+            let v = i.eval(e, env)?;
+            plan_level_from_value(&v)
+        }
+        other => {
+            let v = i.eval(other, env)?;
+            plan_level_from_value(&v)
+        }
+    }
+}
+
+/// Interpret an evaluated value as a plan level: a backend-name string
+/// or a FutureStrategy list built by `tweak()`.
+fn plan_level_from_value(v: &RVal) -> Result<PlanSpec, Signal> {
+    match v {
+        RVal::Chr(_) => {
+            let name = v.as_str().map_err(Signal::error)?;
+            PlanSpec::from_name(&name, None, vec![], None, None).map_err(Signal::error)
+        }
+        RVal::List(l) if l.class.as_deref() == Some("FutureStrategy") => {
+            let name = l
+                .get("backend")
+                .and_then(|x| x.as_str().ok())
+                .ok_or_else(|| Signal::error("plan: FutureStrategy is missing its backend"))?;
+            let explicit = l
+                .get("explicit_workers")
+                .and_then(|x| x.as_bool().ok())
+                .unwrap_or(false);
+            let workers = if explicit {
+                l.get("workers").and_then(|x| x.as_usize().ok())
+            } else {
+                None
+            };
+            let worker_names = l
+                .get("worker_names")
+                .and_then(|x| x.as_str_vec().ok())
+                .unwrap_or_default();
+            let latency_ms = l.get("latency_ms").and_then(|x| x.as_f64().ok());
+            let poll_ms = l.get("poll_ms").and_then(|x| x.as_f64().ok());
+            PlanSpec::from_name(&name, workers, worker_names, latency_ms, poll_ms)
+                .map_err(Signal::error)
+        }
+        other => Err(Signal::error(format!(
+            "plan: cannot interpret a {} as a backend",
+            other.class()
+        ))),
+    }
+}
+
+/// Build a value-level plan strategy (`tweak()`'s return value): a
+/// classed list `plan()` accepts anywhere a backend name is accepted,
+/// including as a `plan(list(...))` stack level.
+fn strategy_value(spec: &PlanSpec) -> RVal {
+    let mut l = RList::named(
+        vec![
+            RVal::scalar_str(spec.display.clone()),
+            RVal::scalar_int(spec.workers as i64),
+            RVal::scalar_bool(spec.explicit_workers),
+            RVal::scalar_dbl(spec.latency_ms),
+            RVal::scalar_dbl(spec.poll_ms),
+            RVal::chr(spec.worker_names.clone()),
+        ],
+        vec![
+            "backend".into(),
+            "workers".into(),
+            "explicit_workers".into(),
+            "latency_ms".into(),
+            "poll_ms".into(),
+            "worker_names".into(),
+        ],
+    );
+    l.class = Some("FutureStrategy".into());
+    RVal::List(l)
+}
+
+/// `tweak(backend, workers = n, ...)` — a special form returning a
+/// FutureStrategy value: the backend with option overrides applied,
+/// usable as `plan(s)` or inside a `plan(list(...))` stack.
+fn tweak_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let Some(first) = args.first() else {
+        return Err(Signal::error("tweak: missing backend argument"));
+    };
+    let mut spec = plan_level_from_expr(i, &first.value, env)?;
+    apply_plan_args(i, &mut spec, &args[1..], env)?;
+    Ok(strategy_value(&spec))
+}
+
+/// `plan(backend, workers = n)` or `plan(list(level1, level2, ...))` — a
+/// special form. The single-level form takes a backend symbol,
+/// namespaced symbol, or string; the list form installs a *plan stack*
+/// (paper/future's nested topologies): level 1 runs this session's map
+/// calls, level 2 is inherited by its workers for nested futurized
+/// calls, and so on. Levels may be tweaked in place:
+/// `plan(list(multisession(2), multicore(2)))`.
+fn plan_fn(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
+    let Some(first) = args.first() else {
+        // plan() with no args: report the current stack.
+        return Ok(RVal::scalar_str(describe_stack(i.session.plan_stack())));
+    };
+    if let Expr::Call { func, args: elems } = &first.value {
+        if matches!(func.as_ref(), Expr::Sym(s) if s.as_str() == "list") {
+            let mut stack = Vec::with_capacity(elems.len());
+            for el in elems {
+                stack.push(plan_level_from_expr(i, &el.value, env)?);
+            }
+            if stack.is_empty() {
+                return Err(Signal::error("plan(list()): a plan stack needs at least one level"));
+            }
+            i.session.set_plan_stack(stack);
+            return Ok(RVal::Null);
+        }
+    }
+    let mut spec = plan_level_from_expr(i, &first.value, env)?;
+    apply_plan_args(i, &mut spec, &args[1..], env)?;
     i.session.set_plan(spec);
     Ok(RVal::Null)
 }
@@ -346,14 +712,15 @@ fn submit_expr(i: &mut Interp, expr: &Expr, env: &EnvRef) -> Result<u64, Signal>
         globals.push((name, crate::rlite::serialize::to_wire(&v).map_err(Signal::error)?));
     }
     let id = i.session.fresh_task_id();
+    let nesting = i.session.nesting_for_context();
     let payload = TaskPayload {
         id,
-        kind: TaskKind::Expr { expr: expr.clone(), globals },
+        kind: TaskKind::Expr { expr: expr.clone(), globals, nesting },
         time_scale: i.config.time_scale,
         capture_stdout: true,
     };
     i.session.backend().map_err(Signal::error)?.submit(payload).map_err(Signal::error)?;
-    i.session.pending.insert(id, None);
+    i.session.pending.expect(id);
     Ok(id)
 }
 
@@ -371,14 +738,21 @@ fn future_id(v: &RVal) -> Result<u64, Signal> {
 /// condition (R future's semantics for an unreliable worker) — the wait
 /// never hangs on a `Done` that can no longer arrive.
 fn wait_for(i: &mut Interp, id: u64, env: &EnvRef) -> EvalResult {
+    // This wait is an event loop like a map call's drive loop: register
+    // it with the ledger so stray outcomes it parks are depth-tracked.
+    i.session.pending.enter();
+    let r = wait_for_inner(i, id, env);
+    i.session.pending.exit();
+    r
+}
+
+fn wait_for_inner(i: &mut Interp, id: u64, env: &EnvRef) -> EvalResult {
     loop {
-        if let Some(Some(outcome)) = i.session.pending.get(&id) {
-            let outcome = outcome.clone();
-            i.session.pending.remove(&id);
+        if let Some(outcome) = i.session.pending.take_ready(id) {
             return finish_outcome(i, outcome, env);
         }
         if let Some(worker) = i.session.lost_tasks.remove(&id) {
-            i.session.pending.remove(&id);
+            i.session.pending.discard(id);
             let backend = i.session.backend().map(|b| b.name()).unwrap_or("future");
             return Err(Signal::Error(worker_lost_condition(backend, worker, id, None)));
         }
@@ -394,10 +768,10 @@ fn wait_for(i: &mut Interp, id: u64, env: &EnvRef) -> EvalResult {
             }
             BackendEvent::Done(outcome) => {
                 if outcome.id == id {
-                    i.session.pending.remove(&id);
+                    i.session.pending.discard(id);
                     return finish_outcome(i, outcome, env);
                 }
-                i.session.pending.insert(outcome.id, Some(outcome));
+                i.session.pending.stash(outcome);
             }
             BackendEvent::WorkerLost { worker, task } => {
                 // Record the loss (ours included — picked up at the top
@@ -442,7 +816,7 @@ fn resolved_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
                 i.signal_condition(cond)?;
             }
             BackendEvent::Done(outcome) => {
-                i.session.pending.insert(outcome.id, Some(outcome));
+                i.session.pending.stash(outcome);
             }
             BackendEvent::WorkerLost { worker, task } => {
                 if let Some(tid) = task {
@@ -454,8 +828,7 @@ fn resolved_fn(i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
     // A lost future is resolved in R's sense: its (error) result is
     // ready to collect — `value()` raises the FutureError.
     Ok(RVal::scalar_bool(
-        matches!(i.session.pending.get(&id), Some(Some(_)))
-            || i.session.lost_tasks.contains_key(&id),
+        i.session.pending.is_ready(id) || i.session.lost_tasks.contains_key(&id),
     ))
 }
 
@@ -533,5 +906,110 @@ mod tests {
             "plan(multicore, workers = 1)\nf <- future(1 + 1)\nv <- value(f)\nv",
         );
         assert_eq!(v, RVal::scalar_dbl(2.0));
+    }
+
+    #[test]
+    fn low_level_future_inherits_the_plan_stack() {
+        // future() consumes one plan level exactly like a map call: its
+        // body session sees level 2, not the implicit sequential.
+        let v = run("plan(list(sequential, multicore(2)))\nf <- future(nbrOfWorkers())\nvalue(f)");
+        assert_eq!(v, RVal::scalar_int(2));
+        let v = run("plan(sequential)\nf <- future(nbrOfWorkers())\nvalue(f)");
+        assert_eq!(v, RVal::scalar_int(1));
+    }
+
+    #[test]
+    fn plan_accepts_evaluated_backend_expressions() {
+        // A call that is not a backend(n) shorthand evaluates normally.
+        let mut i = Interp::new();
+        i.eval_program("plan(paste0(\"multi\", \"core\"))").unwrap();
+        assert_eq!(i.session.plan().kind, crate::backend::BackendKind::Multicore);
+        // A variable bound to a backend-name string works too.
+        let mut i = Interp::new();
+        i.eval_program("p <- \"multisession\"\nplan(p)").unwrap();
+        assert_eq!(i.session.plan().kind, crate::backend::BackendKind::Multisession);
+    }
+
+    #[test]
+    fn plan_list_installs_a_stack() {
+        use crate::backend::BackendKind;
+        let mut i = Interp::new();
+        i.eval_program("plan(list(multisession(2), multicore(2)))").unwrap();
+        let stack = i.session.plan_stack().to_vec();
+        assert_eq!(stack.len(), 2);
+        assert_eq!(stack[0].kind, BackendKind::Multisession);
+        assert_eq!(stack[0].workers, 2);
+        assert!(stack[0].explicit_workers);
+        assert_eq!(stack[1].kind, BackendKind::Multicore);
+        assert_eq!(stack[1].workers, 2);
+        let desc = i.eval_program("plan()").unwrap();
+        let desc = desc.as_str().unwrap();
+        assert!(desc.contains("multisession") && desc.contains("->"), "{desc}");
+    }
+
+    #[test]
+    fn tweak_builds_strategy_values_plan_accepts() {
+        let mut i = Interp::new();
+        i.eval_program("s <- tweak(multicore, workers = 3)\nplan(s)").unwrap();
+        assert_eq!(i.session.plan().workers, 3);
+        assert!(i.session.plan().explicit_workers);
+        // tweak() inline in a stack, mixed with a bare symbol level.
+        let mut i = Interp::new();
+        i.eval_program("plan(list(tweak(multisession, workers = 2), sequential))").unwrap();
+        assert_eq!(i.session.plan_stack().len(), 2);
+        assert_eq!(i.session.plan_stack()[0].workers, 2);
+    }
+
+    #[test]
+    fn nesting_info_consumes_one_level_per_session() {
+        use super::SessionState;
+        let mut i = Interp::new();
+        i.eval_program("plan(list(multicore(2), multicore(3)))").unwrap();
+        let n = i.session.nesting_for_context();
+        assert_eq!(n.stack.len(), 1);
+        assert_eq!(n.stack[0].workers, 3);
+        assert_eq!(n.outer_workers, 2);
+        assert_eq!(n.depth, 1);
+        // A (simulated) worker session adopting the inherited stack.
+        let mut w = SessionState::default();
+        w.adopt_nesting(&n);
+        assert_eq!(w.plan().workers, 3);
+        assert_eq!(w.outer_workers, 2);
+        assert_eq!(w.nest_depth, 1);
+        // Its own contexts inherit the rest: the implicit sequential level.
+        let n2 = w.nesting_for_context();
+        assert!(n2.stack.is_empty());
+        assert_eq!(n2.outer_workers, 6);
+        assert_eq!(n2.depth, 2);
+        let mut w2 = SessionState::default();
+        w2.adopt_nesting(&n2);
+        assert_eq!(w2.plan().kind, crate::backend::BackendKind::Sequential);
+    }
+
+    #[test]
+    fn pending_ledger_prunes_strays_but_keeps_futures() {
+        use super::{PendingLedger, TaskOutcome};
+        let outcome = |id: u64| TaskOutcome {
+            id,
+            values: Ok(vec![]),
+            log: Default::default(),
+            worker: 0,
+            started_unix: 0.0,
+            finished_unix: 0.0,
+            nested_workers: 0,
+        };
+        let mut l = PendingLedger::default();
+        l.expect(1); // a future() placeholder
+        l.enter(); // outer drive loop
+        l.enter(); // nested drive loop
+        l.stash(outcome(1)); // the future resolves via a foreign loop
+        l.stash(outcome(2)); // a stray owned by the (aborting) outer loop
+        l.exit();
+        assert!(l.is_ready(2), "strays survive while any loop is active");
+        l.exit();
+        assert!(l.is_ready(1), "owned future outcomes survive depth 0");
+        assert!(!l.is_ready(2), "unclaimed strays are pruned at depth 0");
+        assert_eq!(l.take_ready(1).unwrap().id, 1);
+        assert!(l.is_empty());
     }
 }

@@ -28,6 +28,39 @@ pub fn make_streams(seed: u64, n: usize) -> Vec<RngState> {
     out
 }
 
+/// Advance a session root seed after a `seed = TRUE` map call consumed
+/// it: two sibling seeded maps in one session must draw *independent*
+/// stream families (as two sequential `rnorm()` calls would advance the
+/// session RNG), while staying fully deterministic — the advance
+/// depends only on the previous root, never on topology or timing.
+pub fn advance_root_seed(seed: u64) -> u64 {
+    // One splitmix64 step.
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Derive the root seed of a *nested* session from one element's stream
+/// state — the per-level RNG fork behind plan stacks: a nested
+/// `seed = TRUE` map inside element `k` of an outer map derives its own
+/// per-element streams from `nested_root_seed(streams[k])`, so the whole
+/// RNG tree depends only on the outer root seed and element indices.
+/// Results are therefore bit-identical for any stack shape, chunking,
+/// or worker placement, while distinct outer elements still get
+/// statistically unrelated nested streams.
+pub fn nested_root_seed(state: &RngState) -> u64 {
+    // splitmix-style fold of the six state words into one seed.
+    let mut h: u64 = 0x9E37_79B9_7F4A_7C15;
+    for w in state {
+        h ^= w.wrapping_add(0x100_0000_01B3).wrapping_add(h << 6).wrapping_add(h >> 2);
+        h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        h ^= h >> 31;
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -47,5 +80,18 @@ mod tests {
     #[test]
     fn different_seeds_differ() {
         assert_ne!(make_streams(1, 2), make_streams(2, 2));
+    }
+
+    #[test]
+    fn nested_roots_are_deterministic_and_distinct_per_element() {
+        let streams = make_streams(7, 4);
+        let roots: Vec<u64> = streams.iter().map(nested_root_seed).collect();
+        let again: Vec<u64> = make_streams(7, 4).iter().map(nested_root_seed).collect();
+        assert_eq!(roots, again);
+        for i in 0..roots.len() {
+            for j in (i + 1)..roots.len() {
+                assert_ne!(roots[i], roots[j], "nested roots {i} and {j} collide");
+            }
+        }
     }
 }

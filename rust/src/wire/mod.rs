@@ -186,6 +186,7 @@ mod tests {
                     "xs".into(),
                     crate::rlite::serialize::WireVal::Dbl(vec![1.0, 2.0], None),
                 )],
+                nesting: Default::default(),
             },
             time_scale: 0.5,
             capture_stdout: true,

@@ -168,7 +168,7 @@ fn raw_backends() -> Vec<(String, Box<dyn Backend>)> {
                 Some(2.0),
             )
             .unwrap();
-            (name, futurize::backend::instantiate(&spec).unwrap())
+            (name, futurize::backend::instantiate(&spec, 1).unwrap())
         })
         .collect()
 }
@@ -179,6 +179,7 @@ fn sleep_task(id: u64, seconds: f64) -> futurize::future_core::TaskPayload {
         kind: futurize::future_core::TaskKind::Expr {
             expr: futurize::rlite::parse_expr(&format!("Sys.sleep({seconds})")).unwrap(),
             globals: vec![],
+            nesting: Default::default(),
         },
         time_scale: 1.0,
         capture_stdout: true,
@@ -239,6 +240,7 @@ fn contexts_register_resolve_and_drop() {
             id: 1,
             body: ContextBody::Map { f: f_wire, extra: vec![] },
             globals: vec![],
+            nesting: Default::default(),
         }))
         .unwrap();
         b.submit(TaskPayload {

@@ -1,5 +1,9 @@
 //! Helpers shared by the integration-test binaries.
 
+// Each test binary compiles this module separately and uses only the
+// helpers it needs; unused ones are not dead code in the workspace.
+#![allow(dead_code)]
+
 /// Integration tests run inside the libtest harness binary, which
 /// cannot host workers; point process backends at the real CLI binary.
 pub fn worker_env() {

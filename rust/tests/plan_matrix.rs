@@ -1,0 +1,232 @@
+//! Differential conformance matrix for plan stacks (ISSUE 5): every
+//! API family × every backend × stack depths 1–2 must produce
+//!
+//! - **identical results** to the `plan(sequential)` reference,
+//! - **identical condition/stdout relay text** (the ordered-relay
+//!   contract: what the user sees cannot depend on topology), and
+//! - **bit-identical `seed = TRUE` draws** (per-element L'Ecuyer
+//!   streams fork per nesting level, so the whole RNG tree depends only
+//!   on the root seed and element indices — never on chunking, backend,
+//!   or stack shape).
+//!
+//! Runs under both wire codecs: CI re-executes this file with
+//! `FUTURIZE_WIRE_CODEC=json`.
+
+mod common;
+
+use common::worker_env;
+use futurize::prelude::*;
+
+/// (name, depth-1 plan, depth-2 plan). The depth-2 stacks put
+/// `multicore(2)` underneath so every outer backend is exercised with a
+/// real parallel inner level.
+const BACKENDS: &[(&str, &str, &str)] = &[
+    ("sequential", "plan(sequential)", "plan(list(sequential, multicore(2)))"),
+    (
+        "multicore",
+        "plan(multicore, workers = 2)",
+        "plan(list(multicore(2), multicore(2)))",
+    ),
+    (
+        "multisession",
+        "plan(multisession, workers = 2)",
+        "plan(list(multisession(2), multicore(2)))",
+    ),
+    (
+        "cluster",
+        "plan(cluster, workers = c(\"n1\", \"n2\"), latency_ms = 0.1)",
+        "plan(list(tweak(cluster, workers = c(\"n1\", \"n2\"), latency_ms = 0.1), multicore(2)))",
+    ),
+    (
+        "batchtools",
+        "plan(future.batchtools::batchtools_slurm, workers = 2, poll_ms = 2)",
+        "plan(list(tweak(future.batchtools::batchtools_slurm, workers = 2, poll_ms = 2), \
+         multicore(2)))",
+    ),
+];
+
+/// Depth-1 fixture: element function emits a message + stdout and draws
+/// from its per-element stream.
+const FIXTURE_D1: &str = "
+    xs <- 1:4
+    f1 <- function(x) {
+      message(paste0(\"m\", x))
+      cat(paste0(\"c\", x, \" \"))
+      rnorm(1) * 0.001 + x * 10
+    }
+";
+
+/// Depth-2 fixture: the element function additionally runs a *nested*
+/// futurized map (with its own messages and seeded draws) that the
+/// inherited stack level executes.
+const FIXTURE_D2: &str = "
+    xs <- 1:4
+    f2 <- function(x) {
+      message(paste0(\"m\", x))
+      inner <- future_sapply(1:3, function(y) {
+        message(paste0(\"n\", x, y))
+        rnorm(1) * 0.001 + y * x
+      }, future.seed = TRUE)
+      sum(inner) + rnorm(1) * 0.001 + x * 100
+    }
+";
+
+/// The API families of the paper's Table 1, each invoked through its
+/// own surface (`fn_name` is substituted for f1/f2 per depth).
+const FAMILIES: &[(&str, &str)] = &[
+    ("lapply", "unlist(lapply(xs, FN) |> futurize(seed = TRUE))"),
+    ("purrr::map", "map_dbl(xs, FN) |> futurize(seed = TRUE)"),
+    (
+        "foreach",
+        "unlist((foreach(x = xs, .combine = c) %do% { FN(x) }) |> futurize(seed = TRUE))",
+    ),
+    ("future_apply", "future_sapply(xs, FN, future.seed = TRUE)"),
+    (
+        "furrr",
+        "future_map_dbl(xs, FN, .options = furrr_options(seed = TRUE))",
+    ),
+    ("BiocParallel", "unlist(bplapply(xs, FN) |> futurize(seed = TRUE))"),
+];
+
+fn run_cell(plan_stmt: &str, fixture: &str, program: &str) -> (RVal, String) {
+    let mut s = Session::new();
+    s.eval_str(plan_stmt).unwrap_or_else(|e| panic!("{plan_stmt}: {e}"));
+    s.eval_str("futureSeed(99)").unwrap();
+    s.eval_str(fixture).unwrap();
+    let (r, out) = s.eval_captured(program);
+    let v = r.unwrap_or_else(|e| panic!("{plan_stmt} / {program}: {e}"));
+    (v, out)
+}
+
+fn matrix_for_depth(depth: usize) {
+    worker_env();
+    let (fixture, fn_name) = match depth {
+        1 => (FIXTURE_D1, "f1"),
+        _ => (FIXTURE_D2, "f2"),
+    };
+    for (family, template) in FAMILIES {
+        let program = template.replace("FN", fn_name);
+        // The reference is always flat plan(sequential): a nested
+        // futurized call under it degrades to the implicit sequential
+        // inner level, which every stack shape must match bit-for-bit.
+        let (ref_val, ref_out) = run_cell("plan(sequential)", fixture, &program);
+        assert!(
+            ref_out.contains("m1"),
+            "{family}: fixture lost its relay output: {ref_out:?}"
+        );
+        if depth == 2 {
+            assert!(ref_out.contains("n23"), "{family}: nested relay lost: {ref_out:?}");
+        }
+        for (backend, plan1, plan2) in BACKENDS {
+            let plan_stmt = if depth == 1 { plan1 } else { plan2 };
+            let (val, out) = run_cell(plan_stmt, fixture, &program);
+            assert_eq!(
+                val, ref_val,
+                "{family} × {backend} × depth {depth}: results differ from sequential"
+            );
+            assert_eq!(
+                out, ref_out,
+                "{family} × {backend} × depth {depth}: relay text/order differs"
+            );
+        }
+    }
+}
+
+#[test]
+fn matrix_depth1_all_families_all_backends() {
+    matrix_for_depth(1);
+}
+
+#[test]
+fn matrix_depth2_all_families_all_backends() {
+    matrix_for_depth(2);
+}
+
+/// The ISSUE 5 acceptance demo: `plan(list(multisession(2),
+/// multicore(2)))` runs a nested map with 4-way effective parallelism —
+/// both outer workers appear in the trace and each task reports a
+/// 2-worker inner backend — while results and seeded draws stay
+/// bit-identical to `plan(sequential)`.
+#[test]
+fn nested_stack_gives_outer_times_inner_parallelism() {
+    worker_env();
+    const PROG: &str = "unlist(lapply(1:4, function(x) \
+        sum(future_sapply(1:4, function(y) { Sys.sleep(0.01)\n\
+        rnorm(1) * 0.001 + y * x }, future.seed = TRUE))) |> futurize(seed = TRUE))";
+    let reference = {
+        let mut s = Session::new();
+        s.eval_str("plan(sequential)\nfutureSeed(7)").unwrap();
+        s.eval_str(PROG).unwrap()
+    };
+    let mut s = Session::new();
+    s.eval_str("plan(list(multisession(2), multicore(2)))\nfutureSeed(7)").unwrap();
+    let v = s.eval_str(PROG).unwrap();
+    assert_eq!(v, reference, "stacked results must be bit-identical to sequential");
+    let trace = s.last_trace();
+    let outer: std::collections::HashSet<usize> = trace.iter().map(|e| e.worker).collect();
+    assert_eq!(outer.len(), 2, "both outer workers must run chunks: {trace:?}");
+    assert!(
+        trace.iter().all(|e| e.inner_workers == 2),
+        "every chunk must report its 2-worker inner backend: {trace:?}"
+    );
+    // Under the flat sequential plan the same program reports the
+    // implicit (1-worker) inner level, not a parallel one.
+    let mut s = Session::new();
+    s.eval_str("plan(sequential)\nfutureSeed(7)").unwrap();
+    s.eval_str(PROG).unwrap();
+    assert!(s.last_trace().iter().all(|e| e.inner_workers <= 1), "{:?}", s.last_trace());
+}
+
+/// The unseeded-outer corner: a nested seed = TRUE map under an outer
+/// map *without* seed management must still be topology-invariant (the
+/// nested-root baseline is re-pinned per element, not leaked across the
+/// elements sharing one worker session), while sibling seeded maps
+/// inside one element still draw different numbers.
+#[test]
+fn unseeded_outer_with_seeded_nested_is_topology_invariant() {
+    const PROG: &str = "unlist(lapply(1:4, function(x) { \
+        a <- sum(future_sapply(1:2, function(y) rnorm(1), future.seed = TRUE))\n\
+        b <- sum(future_sapply(1:2, function(y) rnorm(1), future.seed = TRUE))\n\
+        if (a == b) stop(\"sibling seeded maps drew identical streams\")\n\
+        a * 1000 + b + x }) |> futurize())";
+    let run = |plan: &str| {
+        let mut s = Session::new();
+        s.eval_str(plan).unwrap();
+        s.eval_str(PROG).unwrap_or_else(|e| panic!("{plan}: {e}"))
+    };
+    let reference = run("plan(sequential)");
+    assert_eq!(run("plan(list(multicore(2), sequential))"), reference);
+    assert_eq!(run("plan(list(multicore(4), multicore(2)))"), reference);
+    // futureSeed() steers nested seeded maps even under an unseeded
+    // outer: the parent root rides to workers inside NestingInfo.
+    let seeded = |seed: u64| {
+        let mut s = Session::new();
+        s.eval_str("plan(multicore, workers = 2)").unwrap();
+        s.eval_str(&format!("futureSeed({seed})")).unwrap();
+        s.eval_str(PROG).unwrap()
+    };
+    assert_eq!(seeded(5), seeded(5), "same root seed must reproduce");
+    assert_ne!(seeded(5), seeded(6), "nested draws must respect futureSeed()");
+}
+
+/// nbrOfWorkers() reports the stack's top level; consuming one level in
+/// a worker session exposes the next one (observable via a futurized
+/// map that returns the worker-side nbrOfWorkers()).
+#[test]
+fn workers_see_the_inherited_stack() {
+    let mut s = Session::new();
+    s.eval_str("plan(list(multicore(2), multicore(3)))").unwrap();
+    let top = s.eval_str("nbrOfWorkers()").unwrap();
+    assert_eq!(top, RVal::scalar_int(2));
+    let inner = s
+        .eval_str("unlist(lapply(1:2, function(x) nbrOfWorkers()) |> futurize())")
+        .unwrap();
+    assert_eq!(inner.as_dbl_vec().unwrap(), vec![3.0, 3.0], "workers must see level 2");
+    // Depth exhausted: the implicit inner level is sequential.
+    let mut s = Session::new();
+    s.eval_str("plan(multicore, workers = 2)").unwrap();
+    let inner = s
+        .eval_str("unlist(lapply(1:2, function(x) nbrOfWorkers()) |> futurize())")
+        .unwrap();
+    assert_eq!(inner.as_dbl_vec().unwrap(), vec![1.0, 1.0]);
+}

@@ -175,6 +175,7 @@ fn multisession_drop_with_wedged_worker_is_bounded() {
             kind: TaskKind::Expr {
                 expr: futurize::rlite::parse_expr("Sys.sleep(600)").unwrap(),
                 globals: vec![],
+                nesting: Default::default(),
             },
             time_scale: 1.0,
             capture_stdout: true,
@@ -274,4 +275,55 @@ fn retry_preserves_seed_invariance_across_resubmit() {
     });
     let _ = std::fs::remove_file(&marker);
     assert_eq!(got, reference, "resubmitted chunk drew different random numbers");
+}
+
+#[test]
+fn killed_outer_worker_replays_inherited_stack_on_respawn() {
+    // Plan-stack supervision (ISSUE 5): kill an outer multisession
+    // worker mid-nested-map. The replacement must receive the replayed
+    // RegisterContext *including the inherited inner stack*, so the
+    // retried chunk (retries = 1) recovers AND still runs its nested
+    // map on the 2-worker inner multicore backend — observable both as
+    // bit-identical seeded results and as inner_workers = 2 on every
+    // trace event, the retried chunk's included.
+    let reference: Vec<f64> = {
+        let mut s = Session::new();
+        s.eval_str("futureSeed(31)").unwrap();
+        s.eval_str(
+            "unlist(lapply(1:4, function(x) \
+             sum(future_sapply(1:3, function(y) rnorm(1) * 0.001 + y * x, \
+             future.seed = TRUE))) |> futurize(seed = TRUE, chunk_size = 1))",
+        )
+        .unwrap()
+        .as_dbl_vec()
+        .unwrap()
+    };
+    let marker =
+        std::env::temp_dir().join(format!("futurize-nested-kill-{}", std::process::id()));
+    let _ = std::fs::remove_file(&marker);
+    let marker_str = marker.display().to_string();
+    let (got, out, all_inner_parallel) = within(90, "nested supervision", move || {
+        worker_env();
+        let mut s = Session::new();
+        s.eval_str("plan(list(multisession(2), multicore(2)))").unwrap();
+        s.eval_str("futureSeed(31)").unwrap();
+        let (r, out) = s.eval_captured(&format!(
+            "unlist(lapply(1:4, function(x) {{ \
+             if (x == 3) futurize_test_exit_once(\"{marker_str}\")\n\
+             sum(future_sapply(1:3, function(y) rnorm(1) * 0.001 + y * x, \
+             future.seed = TRUE)) }}) \
+             |> futurize(seed = TRUE, chunk_size = 1, retries = 1))"
+        ));
+        let v = r.unwrap().as_dbl_vec().unwrap();
+        let all_inner = s.last_trace().iter().all(|e| e.inner_workers == 2);
+        (v, out, all_inner)
+    });
+    let _ = std::fs::remove_file(&marker);
+    assert!(out.contains("resubmitting"), "expected a retry warning, got: {out:?}");
+    assert_eq!(got, reference, "recovered nested map drew different numbers");
+    assert!(
+        all_inner_parallel,
+        "the respawned worker must run its nested map on the inherited \
+         2-worker inner backend (context replay lost the stack?)"
+    );
 }

@@ -1,9 +1,11 @@
 //! Tests for the binary wire codec (`wire::bin`), the codec switch, and
 //! the zero-copy `WireSlice` fast path:
 //!
-//! - exhaustive roundtrips over every `WireVal` variant (closures with
-//!   captured bindings, conditions, NaN/±Inf doubles, non-ASCII
-//!   strings) through both codecs;
+//! - property-based roundtrips: a seeded deterministic generator builds
+//!   hundreds of arbitrary `WireVal` trees (closures with captured
+//!   bindings, conditions, NaN bit patterns/±Inf doubles, non-ASCII
+//!   names, deep list chains, shared `WireSlice` windows) and checks
+//!   them through both codecs — replacing the old hand-picked samples;
 //! - cross-codec agreement (JSON and binary decode to equal values);
 //! - `WireVal::approx_size` regression against real encoded lengths;
 //! - byte-reduction of binary over JSON on protocol streams;
@@ -55,63 +57,223 @@ fn wire_eq(a: &WireVal, b: &WireVal) -> bool {
     }
 }
 
-/// One sample per `WireVal` variant, exercising the tricky corners.
-/// Integer extremes stay within f64-exact range because the *JSON*
-/// codec routes numbers through f64 (a pre-existing limitation of the
-/// debug codec); full i64 range is covered by the binary-only test.
-fn sample_values() -> Vec<WireVal> {
-    let closure = {
-        let mut i = futurize::rlite::eval::Interp::new();
-        i.eval_program("a <- 10.5\nf <- function(z, k = 2) z * k + a").unwrap();
-        let f = futurize::rlite::env::lookup(&i.global, "f").unwrap();
-        to_wire(&f).unwrap()
-    };
-    let cond = WireVal::Cond(RCondition::custom(
-        "progression",
-        "étape ✓",
-        Some(futurize::wire::JsonValue::obj(vec![
-            ("amount", futurize::wire::JsonValue::num(1.0)),
-            ("total", futurize::wire::JsonValue::num(10.0)),
-        ])),
-    ));
-    vec![
-        WireVal::Null,
-        WireVal::Lgl(vec![], None),
-        WireVal::Lgl(vec![true, false, true], Some(vec!["a".into(), "b".into(), "c".into()])),
-        WireVal::Int(vec![0, -1, 1, 127, -128, 1 << 40, -(1 << 40), 1 << 62], None),
-        WireVal::Dbl(
-            vec![0.0, -0.0, 1.5, f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 1e-308],
-            Some((1..=7).map(|k| format!("n{k}")).collect()),
-        ),
-        WireVal::Chr(
-            vec![
-                "plain".into(),
-                "non-ASCII: ✓ héllo 日本語".into(),
-                "esc \"\\\n\t".into(),
-                String::new(),
-            ],
-            None,
-        ),
-        WireVal::List(
-            vec![
-                WireVal::Dbl(vec![1.0], None),
-                WireVal::List(vec![WireVal::Null], None, Some("inner".into())),
-            ],
-            Some(vec!["x".into(), "y".into()]),
-            Some("data.frame".into()),
-        ),
-        closure,
-        WireVal::Builtin("sum".into()),
-        cond,
-    ]
+// ---------------------------------------------------------------------------
+// Property-based value generation: a seeded deterministic generator of
+// arbitrary WireVal trees replaces the old hand-picked sample list, so
+// the roundtrip/cross-codec properties are checked over hundreds of
+// structurally diverse values (every failure reprints the offending
+// value and is reproducible from the fixed seed).
+// ---------------------------------------------------------------------------
+
+/// xorshift64* — tiny, dependency-free, deterministic.
+struct Gen(u64);
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen(seed | 1)
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn below(&mut self, n: u64) -> usize {
+        (self.next() % n.max(1)) as usize
+    }
+
+    fn chance(&mut self, percent: u64) -> bool {
+        self.next() % 100 < percent
+    }
 }
 
+/// What a corpus may contain. The JSON debug codec routes numbers
+/// through f64 (pre-existing limitation), so corpora that cross-check
+/// against JSON keep integers f64-exact; the binary-only corpus uses the
+/// full i64 range. `data_only` skips closures/conditions for properties
+/// that only hold exactly on data variants (approx_size).
+#[derive(Clone, Copy)]
+struct GenCfg {
+    f64_exact_ints: bool,
+    data_only: bool,
+}
+
+fn gen_string(g: &mut Gen) -> String {
+    const POOL: &[&str] = &[
+        "plain",
+        "",
+        "non-ASCII: ✓ héllo 日本語",
+        "esc \"\\\n\t",
+        "emoji 🔀🧵",
+        "ünïcode-名前",
+        "with space and 'quotes'",
+    ];
+    if g.chance(60) {
+        POOL[g.below(POOL.len() as u64)].to_string()
+    } else {
+        let n = g.below(12);
+        (0..n).map(|_| (b'a' + g.below(26) as u8) as char).collect()
+    }
+}
+
+fn gen_names(g: &mut Gen, len: usize) -> Option<Vec<String>> {
+    if g.chance(40) {
+        Some((0..len).map(|_| gen_string(g)).collect())
+    } else {
+        None
+    }
+}
+
+fn gen_dbl(g: &mut Gen, cfg: &GenCfg) -> f64 {
+    const POOL: &[f64] = &[
+        0.0,
+        -0.0,
+        1.5,
+        -1.0,
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        f64::MIN_POSITIVE,
+        1e-308,
+        1.5e300,
+        std::f64::consts::PI,
+    ];
+    if g.chance(50) {
+        POOL[g.below(POOL.len() as u64)]
+    } else if cfg.f64_exact_ints {
+        // JSON-safe corpus: arbitrary finite doubles (the text codec
+        // canonicalizes NaN payloads, so exotic bit patterns are a
+        // binary-only property).
+        (g.next() as i64) as f64 * 1.0e-3
+    } else {
+        f64::from_bits(g.next()) // arbitrary bit patterns, NaN payloads included
+    }
+}
+
+fn gen_int(g: &mut Gen, cfg: &GenCfg) -> i64 {
+    if cfg.f64_exact_ints {
+        // ±2^51: exactly representable in f64, so the JSON number path
+        // cannot lose them.
+        (g.next() % (1 << 52)) as i64 - (1 << 51)
+    } else {
+        g.next() as i64
+    }
+}
+
+/// A small pool of real serialized closures (params with defaults,
+/// captured bindings) whose captured values are re-randomized per draw.
+fn gen_closure(g: &mut Gen, cfg: &GenCfg) -> WireVal {
+    let srcs = [
+        "function(z, k = 2) z * k + a",
+        "function(x) x + a",
+        "function() a",
+    ];
+    let src = srcs[g.below(srcs.len() as u64)];
+    let mut i = futurize::rlite::eval::Interp::new();
+    i.eval_program(&format!("a <- 1\nf <- {src}")).unwrap();
+    let f = futurize::rlite::env::lookup(&i.global, "f").unwrap();
+    let WireVal::Closure { params, body, .. } = to_wire(&f).unwrap() else {
+        panic!("closure expected")
+    };
+    let captured = vec![("a".to_string(), arbitrary(g, 0, cfg))];
+    WireVal::Closure { params, body, captured }
+}
+
+/// One arbitrary WireVal tree: leaves at depth 0, otherwise any variant
+/// including nested lists (deep chains when the dice cooperate).
+fn arbitrary(g: &mut Gen, depth: usize, cfg: &GenCfg) -> WireVal {
+    let n_variants = if depth == 0 { 5 } else { 8 };
+    match g.below(n_variants) {
+        0 => WireVal::Null,
+        1 => {
+            let n = g.below(6);
+            let vals = (0..n).map(|_| g.chance(50)).collect();
+            let names = gen_names(g, n);
+            WireVal::Lgl(vals, names)
+        }
+        2 => {
+            let n = g.below(6);
+            let vals = (0..n).map(|_| gen_int(g, cfg)).collect();
+            let names = gen_names(g, n);
+            WireVal::Int(vals, names)
+        }
+        3 => {
+            let n = g.below(6);
+            let vals = (0..n).map(|_| gen_dbl(g, cfg)).collect();
+            let names = gen_names(g, n);
+            WireVal::Dbl(vals, names)
+        }
+        4 => {
+            let n = g.below(5);
+            let vals = (0..n).map(|_| gen_string(g)).collect();
+            let names = gen_names(g, n);
+            WireVal::Chr(vals, names)
+        }
+        5 => {
+            let n = g.below(4);
+            let vals = (0..n).map(|_| arbitrary(g, depth - 1, cfg)).collect();
+            let names = gen_names(g, n);
+            let class = if g.chance(30) { Some(gen_string(g)) } else { None };
+            WireVal::List(vals, names, class)
+        }
+        6 if !cfg.data_only => gen_closure(g, cfg),
+        7 if !cfg.data_only => WireVal::Cond(RCondition::custom(
+            "progression",
+            &gen_string(g),
+            Some(futurize::wire::JsonValue::obj(vec![
+                ("amount", futurize::wire::JsonValue::num(1.0)),
+                ("total", futurize::wire::JsonValue::num(10.0)),
+            ])),
+        )),
+        _ => WireVal::Builtin(["sum", "length", "identity"][g.below(3)].to_string()),
+    }
+}
+
+/// `n` arbitrary trees from a fixed seed, always prepending a maximally
+/// deep list chain so deep recursion is in every run, not left to dice.
+fn fuzz_corpus(seed: u64, n: usize, cfg: GenCfg) -> Vec<WireVal> {
+    let mut g = Gen::new(seed);
+    let mut out = Vec::with_capacity(n + 1);
+    let mut deep = arbitrary(&mut g, 0, &cfg);
+    for k in 0..12 {
+        deep = WireVal::List(
+            vec![deep],
+            Some(vec![format!("lvl{k}")]),
+            if k % 3 == 0 { Some("wrap".into()) } else { None },
+        );
+    }
+    out.push(deep);
+    for _ in 0..n {
+        out.push(arbitrary(&mut g, 4, &cfg));
+    }
+    out
+}
+
+const CROSS_CODEC_CFG: GenCfg = GenCfg { f64_exact_ints: true, data_only: false };
+const BINARY_ONLY_CFG: GenCfg = GenCfg { f64_exact_ints: false, data_only: false };
+const DATA_ONLY_CFG: GenCfg = GenCfg { f64_exact_ints: true, data_only: true };
+
 #[test]
-fn every_wireval_variant_roundtrips_in_binary() {
-    for w in sample_values() {
+fn arbitrary_wirevals_roundtrip_in_binary() {
+    // Full i64 range, NaN bit patterns, deep lists, non-ASCII names.
+    for w in fuzz_corpus(0xF00D, 300, BINARY_ONLY_CFG) {
         let bytes = bin::to_bytes(&w).unwrap_or_else(|e| panic!("{w:?}: {e}"));
         let back: WireVal = bin::from_bytes(&bytes).unwrap_or_else(|e| panic!("{w:?}: {e}"));
         assert!(wire_eq(&w, &back), "binary roundtrip changed value:\n{w:?}\n{back:?}");
+    }
+}
+
+#[test]
+fn arbitrary_wirevals_roundtrip_in_json() {
+    for w in fuzz_corpus(0xBEEF, 200, CROSS_CODEC_CFG) {
+        let json = futurize::wire::to_string(&w).unwrap_or_else(|e| panic!("{w:?}: {e}"));
+        let back: WireVal =
+            futurize::wire::from_str(&json).unwrap_or_else(|e| panic!("{w:?}: {e}"));
+        assert!(wire_eq(&w, &back), "JSON roundtrip changed value:\n{w:?}\n{back:?}");
     }
 }
 
@@ -126,14 +288,54 @@ fn binary_roundtrips_full_i64_range() {
 
 #[test]
 fn json_and_binary_decode_to_equal_values() {
-    for w in sample_values() {
+    for w in fuzz_corpus(0xCAFE, 200, CROSS_CODEC_CFG) {
         let json = futurize::wire::to_string(&w).unwrap();
         let from_json: WireVal = futurize::wire::from_str(&json).unwrap();
         let from_bin: WireVal = bin::from_bytes(&bin::to_bytes(&w).unwrap()).unwrap();
         assert!(
             wire_eq(&from_json, &from_bin),
-            "codecs disagree:\njson → {from_json:?}\nbin  → {from_bin:?}"
+            "codecs disagree on {w:?}:\njson → {from_json:?}\nbin  → {from_bin:?}"
         );
+    }
+}
+
+#[test]
+fn shared_wire_slices_roundtrip_like_their_window() {
+    // A Shared window must encode exactly like the owned window contents
+    // in BOTH codecs, and decode to an Owned slice with equal elements.
+    let mut g = Gen::new(0xD1CE);
+    for _ in 0..25 {
+        let n = 2 + g.below(8);
+        let elems: Vec<WireVal> =
+            (0..n).map(|_| arbitrary(&mut g, 2, &CROSS_CODEC_CFG)).collect();
+        let source = Arc::new(elems);
+        let start = g.below(source.len() as u64);
+        let end = start + 1 + g.below((source.len() - start) as u64);
+        let shared: WireSlice<WireVal> = WireSlice::shared(source.clone(), start, end);
+        let owned: WireSlice<WireVal> = WireSlice::from(source[start..end].to_vec());
+        type Roundtrip = fn(&WireSlice<WireVal>) -> (Vec<u8>, WireSlice<WireVal>);
+        let roundtrips: [Roundtrip; 2] = [
+            |s| {
+                let b = bin::to_bytes(s).unwrap();
+                let back = bin::from_bytes(&b).unwrap();
+                (b, back)
+            },
+            |s| {
+                let j = futurize::wire::to_string(s).unwrap();
+                let back = futurize::wire::from_str(&j).unwrap();
+                (j.into_bytes(), back)
+            },
+        ];
+        for roundtrip in roundtrips {
+            let (shared_bytes, back) = roundtrip(&shared);
+            let (owned_bytes, _) = roundtrip(&owned);
+            assert_eq!(shared_bytes, owned_bytes, "shared window must encode as its contents");
+            assert!(matches!(back, WireSlice::Owned(_)), "decode is always Owned");
+            assert_eq!(back.len(), end - start);
+            for (a, b) in back.as_slice().iter().zip(&source[start..end]) {
+                assert!(wire_eq(a, b), "slice element changed:\n{a:?}\n{b:?}");
+            }
+        }
     }
 }
 
@@ -193,8 +395,32 @@ fn approx_size_tracks_binary_encoded_length() {
     let unnamed = WireVal::Lgl(vec![true; 100], None);
     let named = WireVal::Lgl(vec![true; 100], Some((0..100).map(|k| format!("n{k}")).collect()));
     assert!(named.approx_size() > unnamed.approx_size() + 300);
+    // Arbitrary data-only trees stay near-exact (the formulas mirror the
+    // binary encoding; small slack keeps this a behaviour pin, not a
+    // byte-level one).
+    for w in fuzz_corpus(0xA55E7, 120, DATA_ONLY_CFG) {
+        let enc = bin::to_bytes(&w).unwrap().len() as i64;
+        let approx = w.approx_size() as i64;
+        let slack = (enc / 10).max(8);
+        assert!(
+            (approx - enc).abs() <= slack,
+            "approx_size {approx} vs encoded {enc} (> {slack} off) for {w:?}"
+        );
+    }
     // Estimated variants (closures, conditions) stay within a loose band.
-    for w in sample_values() {
+    let mut g = Gen::new(0x10af);
+    let estimated = vec![
+        gen_closure(&mut g, &CROSS_CODEC_CFG),
+        WireVal::Cond(RCondition::custom(
+            "progression",
+            "étape ✓",
+            Some(futurize::wire::JsonValue::obj(vec![
+                ("amount", futurize::wire::JsonValue::num(1.0)),
+                ("total", futurize::wire::JsonValue::num(10.0)),
+            ])),
+        )),
+    ];
+    for w in estimated {
         let enc = bin::to_bytes(&w).unwrap().len() as f64;
         let approx = w.approx_size() as f64;
         assert!(
@@ -223,7 +449,12 @@ fn binary_shrinks_the_protocol_stream_by_3x() {
         "w".to_string(),
         WireVal::Dbl((0..64).map(|k| (k as f64).sin()).collect(), None),
     )];
-    let ctx = TaskContext { id: 1, body: ContextBody::Map { f, extra: vec![] }, globals };
+    let ctx = TaskContext {
+        id: 1,
+        body: ContextBody::Map { f, extra: vec![] },
+        globals,
+        nesting: Default::default(),
+    };
     let mut msgs_parent: Vec<ParentMsg> = vec![ParentMsg::RegisterContext(ctx)];
     let mut msgs_worker: Vec<WorkerMsg> = Vec::new();
     for k in 0..48u64 {
@@ -244,6 +475,7 @@ fn binary_shrinks_the_protocol_stream_by_3x() {
             worker: (k % 2) as usize,
             started_unix: 1_769_000_000.123 + k as f64,
             finished_unix: 1_769_000_000.456 + k as f64,
+            nested_workers: 0,
         }));
     }
     let mut json_total = 0usize;
