@@ -19,6 +19,13 @@
 //! toggled off — so `speedup_vs_compat` is a conservative lower bound
 //! on the ns/elem improvement vs. the merge-base binary. Results land
 //! in `BENCH_interp.json` (`BENCH_SMOKE=1` shrinks sizes for CI).
+//!
+//! A second series times the AOT kernel-fusion catalog (elementwise
+//! polynomial, boot weighted-ratio, Gram block): each body runs once
+//! interpreted and once with the recognizer's `KernelPlan` attached,
+//! through the identical `run_task` slice path, landing per-shape
+//! `fusion_*` entries (interp vs. kernel ns/elem and speedup) in the
+//! same report.
 
 use futurize::backend::task_runner::run_task;
 use futurize::bench_harness as bh;
@@ -26,10 +33,14 @@ use futurize::future_core::{ContextBody, TaskContext, TaskKind, TaskPayload};
 use futurize::rlite::env::frames_allocated;
 use futurize::rlite::eval::Interp;
 use futurize::rlite::serialize::{to_wire, WireVal};
+use futurize::transpile::fusion;
 use futurize::wire::JsonValue;
 
-fn map_context(id: u64, f_src: &str) -> TaskContext {
+fn map_context(id: u64, f_src: &str, setup: &str) -> TaskContext {
     let mut i = Interp::new();
+    if !setup.is_empty() {
+        i.eval_program(setup).unwrap();
+    }
     i.eval_program(&format!("__f <- {f_src}")).unwrap();
     let f = futurize::rlite::env::lookup(&i.global, "__f").unwrap();
     TaskContext {
@@ -37,7 +48,22 @@ fn map_context(id: u64, f_src: &str) -> TaskContext {
         body: ContextBody::Map { f: to_wire(&f).unwrap(), extra: vec![] },
         globals: vec![],
         nesting: Default::default(),
+        kernel: None,
     }
+}
+
+/// Same context with the fusion recognizer's plan attached — the bench
+/// asserts the body actually matches so a catalog regression shows up
+/// as a bench failure, not a silently-interpreted "kernel" series.
+fn fused_context(id: u64, f_src: &str, setup: &str) -> TaskContext {
+    let mut ctx = map_context(id, f_src, setup);
+    let kernel = {
+        let ContextBody::Map { f, extra } = &ctx.body else { unreachable!() };
+        fusion::recognize(f, extra, &ctx.globals)
+    };
+    assert!(kernel.is_some(), "{f_src}: body did not match a kernel shape");
+    ctx.kernel = kernel;
+    ctx
 }
 
 fn slice_task(ctx: u64, items: Vec<WireVal>) -> TaskPayload {
@@ -75,9 +101,70 @@ const CASES: &[Case] = &[
     },
 ];
 
+/// Bodies from the fusion catalog, each timed interpreted (kernel plan
+/// stripped) and fused (plan attached), through the same slice path.
+struct FusedCase {
+    name: &'static str,
+    setup: &'static str,
+    f_src: &'static str,
+    items: fn(usize) -> Vec<WireVal>,
+}
+
+fn weight_items(n: usize) -> Vec<WireVal> {
+    (0..n)
+        .map(|k| WireVal::Dbl((0..64).map(|j| ((k + j) % 7 + 1) as f64).collect(), None))
+        .collect()
+}
+
+fn gram_items(n: usize) -> Vec<WireVal> {
+    (0..n)
+        .map(|k| {
+            let col = |c: usize| {
+                WireVal::Dbl((0..8).map(|j| (k + c * 8 + j) as f64 * 0.5).collect(), None)
+            };
+            WireVal::List(vec![col(0), col(1)], None, None)
+        })
+        .collect()
+}
+
+const FUSED_CASES: &[FusedCase] = &[
+    FusedCase {
+        name: "poly_arith",
+        setup: "",
+        f_src: "function(x) 3 * x * x + 2 * x + 1",
+        items: scalar_items,
+    },
+    FusedCase {
+        name: "boot_stat",
+        setup: "x <- sin(1:64)\nu <- cos(1:64) + 2",
+        f_src: "function(w) sum(x * w) / sum(u * w)",
+        items: weight_items,
+    },
+    FusedCase {
+        name: "gram",
+        setup: "y <- sin(1:8)",
+        f_src: "function(x) hlo_gram(x, y)",
+        items: gram_items,
+    },
+];
+
+/// ns/elem for one prepared context (compat/fusion already baked in).
+fn measure_ctx(ctx: &TaskContext, items: Vec<WireVal>, n: usize, reps: usize) -> f64 {
+    let task = slice_task(ctx.id, items);
+    // Warmup (also forces interner/registry initialization).
+    let o = run_task(&task, Some(ctx), 0, None);
+    assert!(o.values.is_ok(), "ctx {}: {:?}", ctx.id, o.values);
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let o = run_task(&task, Some(ctx), 0, None);
+        std::hint::black_box(&o);
+    }
+    t0.elapsed().as_secs_f64() * 1e9 / (n * reps) as f64
+}
+
 /// ns/elem for one case in the current mode (compat toggled by env).
 fn measure(case: &Case, n: usize, reps: usize) -> f64 {
-    let ctx = map_context(1, case.f_src);
+    let ctx = map_context(1, case.f_src, "");
     let task = slice_task(1, (case.items)(n));
     // Warmup (also forces interner/registry initialization).
     let o = run_task(&task, Some(&ctx), 0, None);
@@ -127,9 +214,43 @@ fn main() {
         );
     }
 
+    // Kernel fusion series: each catalog body, interpreted vs. fused.
+    bh::table_header(
+        "kernel fusion vs interpreter",
+        &["body", "interp ns/elem", "kernel ns/elem", "speedup"],
+    );
+    for (k, case) in FUSED_CASES.iter().enumerate() {
+        let id = 10 + k as u64;
+        let interp_ctx = map_context(id, case.f_src, case.setup);
+        let fused_ctx = fused_context(id, case.f_src, case.setup);
+        let fused_before = fusion::slices_fused();
+        let interp = measure_ctx(&interp_ctx, (case.items)(n), n, reps);
+        let kernel = measure_ctx(&fused_ctx, (case.items)(n), n, reps);
+        assert!(
+            fusion::slices_fused() > fused_before,
+            "{}: fused context fell back to the interpreter",
+            case.name
+        );
+        let speedup = interp / kernel;
+        bh::table_row(&[
+            case.name.to_string(),
+            format!("{interp:.0}"),
+            format!("{kernel:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        report.push(
+            &format!("fusion_{}", case.name),
+            JsonValue::obj(vec![
+                ("interp_ns_per_elem", JsonValue::num(interp)),
+                ("kernel_ns_per_elem", JsonValue::num(kernel)),
+                ("speedup_vs_interp", JsonValue::num(speedup)),
+            ]),
+        );
+    }
+
     // Frame allocations per element for the non-capturing body: must be
     // ~0 (the per-slice setup frames amortize to nothing).
-    let ctx = map_context(2, CASES[0].f_src);
+    let ctx = map_context(2, CASES[0].f_src, "");
     let task = slice_task(2, scalar_items(n));
     let before = frames_allocated();
     let o = run_task(&task, Some(&ctx), 0, None);

@@ -36,6 +36,7 @@ fn protocol_stream() -> (Vec<TaskPayload>, Vec<TaskOutcome>, TaskContext) {
             WireVal::Dbl((0..64).map(|k| (k as f64).sin()).collect(), None),
         )],
         nesting: Default::default(),
+        kernel: None,
     };
     let mut tasks = Vec::new();
     let mut outcomes = Vec::new();

@@ -1,0 +1,128 @@
+//! Per-worker cache of instantiated inner backends (ISSUE 6 satellite,
+//! carried over from the plan-stack PR).
+//!
+//! A worker session adopting an inherited plan stack used to
+//! instantiate its inner backend *per task*: every chunk of an outer
+//! map running under `plan(list(multisession(2), multisession(2)))`
+//! spawned (and tore down) two fresh inner worker processes. This
+//! module parks the live inner backend in a thread-local cache when the
+//! task's interpreter winds down ([`restore`]) and re-primes it into
+//! the next task's session ([`lend`]), keyed by the inherited plan
+//! stack and outer-worker budget — so nested parallelism spawns once
+//! per worker, not once per chunk.
+//!
+//! Soundness leans on two invariants: worker threads/processes are
+//! persistent (multicore threads and multisession/cluster processes
+//! both loop over tasks), and `SessionState::set_plan_stack` drops the
+//! backend on any stack change — so a live backend taken from a
+//! session always matches the session's *current* stack, and the
+//! current-stack key is the right place to park it.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::backend::{Backend, BackendKind};
+use crate::future_core::SessionState;
+
+thread_local! {
+    static CACHE: RefCell<HashMap<String, Box<dyn Backend>>> = RefCell::new(HashMap::new());
+}
+
+/// Cache key: the full inherited stack (every level shapes what nested
+/// calls instantiate) plus the outer-worker budget, which sizes
+/// implicit worker counts.
+fn key(session: &SessionState) -> String {
+    format!("{:?}@{}", session.plan_stack(), session.outer_workers)
+}
+
+/// Skip caching for sequential top levels: instantiation is free and
+/// the common leaf case (implicit sequential inner) would only churn
+/// the map.
+fn cacheable(session: &SessionState) -> bool {
+    session.plan().kind != BackendKind::Sequential
+}
+
+/// Re-prime a parked inner backend into `session` if one matches its
+/// adopted stack. Called by the task runner right after
+/// `adopt_nesting`, before the task body runs.
+pub fn lend(session: &mut SessionState) {
+    if !cacheable(session) {
+        return;
+    }
+    if let Some(b) = CACHE.with(|c| c.borrow_mut().remove(&key(session))) {
+        session.prime_backend(b);
+    }
+}
+
+/// Park `session`'s live inner backend (if any) for the next task on
+/// this worker. Called by the task runner after the task body finished,
+/// before the interpreter (and with it the backend) would drop.
+pub fn restore(session: &mut SessionState) {
+    if !cacheable(session) {
+        return;
+    }
+    if let Some(b) = session.take_backend() {
+        CACHE.with(|c| c.borrow_mut().insert(key(session), b));
+    }
+}
+
+/// Number of backends parked on this thread (test hook).
+pub fn cached_count() -> usize {
+    CACHE.with(|c| c.borrow().len())
+}
+
+/// Drop every parked backend on this thread (test hook).
+pub fn clear() {
+    CACHE.with(|c| c.borrow_mut().clear());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::PlanSpec;
+
+    #[test]
+    fn sequential_levels_are_not_cached() {
+        clear();
+        let mut s = SessionState::default();
+        s.set_plan_stack(vec![PlanSpec::sequential()]);
+        s.backend().unwrap();
+        restore(&mut s);
+        assert_eq!(cached_count(), 0);
+    }
+
+    #[test]
+    fn parked_backend_is_lent_back_for_the_same_stack() {
+        clear();
+        let mut s = SessionState::default();
+        let mut plan = PlanSpec::sequential();
+        plan.kind = BackendKind::Multicore;
+        plan.workers = 2;
+        plan.explicit_workers = true;
+        s.set_plan_stack(vec![plan.clone()]);
+        s.backend().unwrap();
+        restore(&mut s);
+        assert_eq!(cached_count(), 1);
+        // A fresh session with the same stack picks the pool back up
+        // without instantiating (prime does not record peak workers).
+        let mut s2 = SessionState::default();
+        s2.set_plan_stack(vec![plan]);
+        lend(&mut s2);
+        assert_eq!(cached_count(), 0);
+        assert_eq!(s2.peak_backend_workers, 0, "prime must not count as use");
+        assert_eq!(s2.backend().unwrap().workers(), 2);
+        assert_eq!(s2.peak_backend_workers, 2, "access must count");
+        // A *different* stack must not receive it.
+        restore(&mut s2);
+        assert_eq!(cached_count(), 1);
+        let mut s3 = SessionState::default();
+        let mut other = PlanSpec::sequential();
+        other.kind = BackendKind::Multicore;
+        other.workers = 3;
+        other.explicit_workers = true;
+        s3.set_plan_stack(vec![other]);
+        lend(&mut s3);
+        assert_eq!(cached_count(), 1, "mismatched stack must leave the cache alone");
+        clear();
+    }
+}

@@ -51,6 +51,7 @@
 
 pub mod batchtools_sim;
 pub mod cluster_sim;
+pub mod inner_cache;
 pub mod multicore;
 pub mod multisession;
 pub mod sequential;

@@ -220,6 +220,7 @@ mod tests {
             body: ContextBody::Map { f, extra: vec![] },
             globals: vec![],
             nesting: Default::default(),
+            kernel: None,
         }))
         .unwrap();
         b.submit(TaskPayload {

@@ -39,6 +39,7 @@ use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, Write};
 use std::path::{Path, PathBuf};
 use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -101,6 +102,17 @@ pub struct MultisessionBackend {
     name: &'static str,
 }
 
+/// Total worker processes this process has ever spawned (all
+/// multisession-protocol backends, including cluster_sim). Test hook
+/// for the per-worker inner-backend cache: nested plans must spawn
+/// inner pools once per worker, not once per chunk.
+static WORKERS_SPAWNED: AtomicU64 = AtomicU64::new(0);
+
+/// Monotonic count of worker-process spawns in this process.
+pub fn workers_spawned() -> u64 {
+    WORKERS_SPAWNED.load(Ordering::Relaxed)
+}
+
 /// Spawn one worker process into slot `idx` at generation `gen` and
 /// start its reader thread.
 fn spawn_worker(
@@ -119,6 +131,7 @@ fn spawn_worker(
         .stderr(Stdio::inherit())
         .spawn()
         .map_err(|e| format!("failed to spawn worker {}: {e}", bin.display()))?;
+    WORKERS_SPAWNED.fetch_add(1, Ordering::Relaxed);
     let stdin = child.stdin.take().ok_or("no stdin")?;
     let stdout = child.stdout.take().ok_or("no stdout")?;
     let tx = tx.clone();

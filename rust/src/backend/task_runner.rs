@@ -137,6 +137,10 @@ pub fn run_task(
     } else if let TaskKind::Expr { nesting, .. } = &payload.kind {
         interp.session.adopt_nesting(nesting);
     }
+    // Re-prime a cached inner backend for the adopted stack, if this
+    // worker kept one from an earlier task: nested maps then reuse the
+    // live worker pool instead of spawning a fresh one per chunk.
+    crate::backend::inner_cache::lend(&mut interp.session);
     // Stream live-class conditions through the hook; mark them so they are
     // not double-relayed from the final capture log.
     let streamed: Rc<RefCell<Vec<RCondition>>> = Rc::new(RefCell::new(Vec::new()));
@@ -167,6 +171,11 @@ pub fn run_task(
         log.conditions.retain(|c| !LIVE_CLASSES.iter().any(|lc| c.inherits(lc)));
     }
 
+    let nested_workers = interp.session.peak_backend_workers;
+    // Park the live inner backend (if any) in this worker's cache
+    // before the interpreter drops — the next task with the same
+    // inherited stack picks it up via `lend`.
+    crate::backend::inner_cache::restore(&mut interp.session);
     TaskOutcome {
         id: payload.id,
         values: result,
@@ -174,7 +183,7 @@ pub fn run_task(
         worker: worker_idx,
         started_unix: started,
         finished_unix: crate::future_core::driver::now_unix(),
-        nested_workers: interp.session.peak_backend_workers,
+        nested_workers,
     }
 }
 
@@ -197,6 +206,21 @@ fn execute_kind(
             let ContextBody::Map { f, extra } = &ctx.body else {
                 return (Err(context_mismatch(*ctx_id, "MapSlice")), CaptureLog::default());
             };
+            // Fused-kernel dispatch: a context that froze with a
+            // KernelPlan runs its slice through the native kernel —
+            // no interpreter, no globals install, no capture scope
+            // (recognized bodies are pure: no conditions, no stdout,
+            // no RNG, so an empty CaptureLog is exactly what the
+            // interpreted path would produce). Any item missing the
+            // runtime gate drops the whole slice back to the
+            // interpreter below.
+            if let Some(plan) = &ctx.kernel {
+                if let Some(vals) = plan.run_slice(items) {
+                    crate::transpile::fusion::note_fused_slice();
+                    return (Ok(vals), CaptureLog::default());
+                }
+                crate::transpile::fusion::note_fallback_slice();
+            }
             install_globals(genv, &ctx.globals);
             let func = from_wire(f, genv);
             let extra_vals: Vec<(Option<String>, RVal)> =
@@ -485,6 +509,68 @@ mod tests {
             body: ContextBody::Map { f: to_wire(&f).unwrap(), extra: vec![] },
             globals: vec![],
             nesting: Default::default(),
+            kernel: None,
+        }
+    }
+
+    /// Attach the freeze-time kernel plan to a map context, as
+    /// `run_map` would (panics if the body does not match the catalog).
+    fn fuse(ctx: &mut TaskContext) {
+        let kernel = {
+            let ContextBody::Map { f, extra } = &ctx.body else { unreachable!() };
+            crate::transpile::fusion::recognize(f, extra, &ctx.globals)
+        };
+        ctx.kernel = Some(kernel.expect("body must match the kernel catalog"));
+    }
+
+    #[test]
+    fn fused_map_slice_matches_interpreted_bitwise() {
+        let mut ctx = map_context(31, "function(x) 3 * x * x + 2 * x + 1");
+        let interp_vals =
+            run_task(&map_slice_task(31, 16), Some(&ctx), 0, None).values.unwrap();
+        fuse(&mut ctx);
+        let fused_before = crate::transpile::fusion::slices_fused();
+        let o = run_task(&map_slice_task(31, 16), Some(&ctx), 0, None);
+        assert!(
+            crate::transpile::fusion::slices_fused() > fused_before,
+            "kernel dispatch must fire"
+        );
+        let fused_vals = o.values.unwrap();
+        assert_eq!(fused_vals.len(), interp_vals.len());
+        for (f, i) in fused_vals.iter().zip(&interp_vals) {
+            let (WireVal::Dbl(fv, None), WireVal::Dbl(iv, None)) = (f, i) else {
+                panic!("shape mismatch: {f:?} vs {i:?}");
+            };
+            assert_eq!(fv[0].to_bits(), iv[0].to_bits(), "bitwise divergence");
+        }
+        assert!(o.log.stdout.is_empty() && o.log.conditions.is_empty() && !o.log.rng_used);
+    }
+
+    #[test]
+    fn fused_gate_miss_falls_back_to_interpreter() {
+        let mut ctx = map_context(32, "function(x) x * 2 + 1");
+        fuse(&mut ctx);
+        // A vector item misses the scalar gate: the whole slice must
+        // run interpreted (which vectorizes elementwise).
+        let t = TaskPayload {
+            id: 33,
+            kind: TaskKind::MapSlice {
+                ctx: 32,
+                items: vec![WireVal::Dbl(vec![1.0, 2.0], None)].into(),
+                seeds: None,
+            },
+            time_scale: 0.0,
+            capture_stdout: true,
+        };
+        let before = crate::transpile::fusion::slices_fallback();
+        let o = run_task(&t, Some(&ctx), 0, None);
+        assert!(
+            crate::transpile::fusion::slices_fallback() > before,
+            "fallback counter must tick"
+        );
+        match &o.values.unwrap()[0] {
+            WireVal::Dbl(v, _) => assert_eq!(v, &[3.0, 5.0]),
+            other => panic!("{other:?}"),
         }
     }
 
@@ -604,6 +690,7 @@ mod tests {
                     depth: 1,
                     root_seed: 42,
                 },
+                kernel: None,
             }
         };
         let t = TaskPayload {

@@ -202,6 +202,7 @@ mod tests {
                 crate::rlite::serialize::WireVal::Dbl(vec![1.5], None),
             )],
             nesting: Default::default(),
+            kernel: None,
         };
         for codec in [WireCodec::Binary, WireCodec::Json] {
             let bytes = codec.encode(&ParentMsg::RegisterContext(ctx.clone())).unwrap();
@@ -231,6 +232,7 @@ mod tests {
                 crate::rlite::serialize::WireVal::Dbl(vec![1.0, 2.0], None),
             )],
             nesting: Default::default(),
+            kernel: None,
         };
         for codec in [WireCodec::Binary, WireCodec::Json] {
             let owned = codec.encode(&ParentMsg::RegisterContext(ctx.clone())).unwrap();

@@ -561,11 +561,16 @@ pub fn run_map(
     opts: &MapOptions,
 ) -> Result<Vec<RVal>, Signal> {
     let nesting = i.session.nesting_for_context();
+    // Freeze-time kernel recognition: matched bodies ship a fused plan
+    // with the context; `FUTURIZE_NO_FUSION=1` suppresses it here, in
+    // the parent, so the switch reaches process backends too.
+    let kernel = crate::transpile::fusion::maybe_recognize(&f, &extra, &globals);
     let ctx = Arc::new(TaskContext {
         id: i.session.fresh_context_id(),
         body: ContextBody::Map { f, extra },
         globals,
         nesting,
+        kernel,
     });
     let workers = i.session.workers();
     let time_scale = i.config.time_scale;
@@ -588,6 +593,7 @@ pub fn run_foreach(
         body: ContextBody::Foreach { body },
         globals,
         nesting,
+        kernel: None,
     });
     let workers = i.session.workers();
     let time_scale = i.config.time_scale;

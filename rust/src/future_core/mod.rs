@@ -88,6 +88,13 @@ pub struct TaskContext {
     /// topologies). Riding inside the context means supervision replays
     /// it to respawned workers for free, along with everything else.
     pub nesting: NestingInfo,
+    /// Fused-kernel plan for this context's map body, attached at
+    /// freeze time when the AOT recognizer matched it against the
+    /// kernel catalog. `None` means every slice runs interpreted —
+    /// including when `FUTURIZE_NO_FUSION=1` suppressed recognition in
+    /// the parent, which is what makes the kill switch effective across
+    /// process backends without respawning workers.
+    pub kernel: Option<crate::transpile::fusion::KernelPlan>,
 }
 
 /// How a [`TaskContext`]'s tasks relate to the session's plan stack.
@@ -417,13 +424,33 @@ impl SessionState {
     }
 
     /// Instantiate (or reuse) the backend for the stack's top level.
+    /// Peak workers are recorded on every access (not just
+    /// instantiation) so a cache-primed backend still counts the
+    /// moment a nested map actually uses it.
     pub fn backend(&mut self) -> Result<&mut Box<dyn Backend>, String> {
         if self.backend.is_none() {
-            let b = crate::backend::instantiate(&self.plan_stack[0], self.outer_workers)?;
-            self.peak_backend_workers = self.peak_backend_workers.max(b.workers());
-            self.backend = Some(b);
+            self.backend =
+                Some(crate::backend::instantiate(&self.plan_stack[0], self.outer_workers)?);
         }
-        Ok(self.backend.as_mut().unwrap())
+        let b = self.backend.as_mut().unwrap();
+        self.peak_backend_workers = self.peak_backend_workers.max(b.workers());
+        Ok(b)
+    }
+
+    /// Remove the live backend without tearing it down — the worker's
+    /// inner-backend cache parks it between tasks. Because
+    /// [`SessionState::set_plan_stack`] drops the backend on any stack
+    /// change, a taken backend always matches the *current* stack.
+    pub fn take_backend(&mut self) -> Option<Box<dyn Backend>> {
+        self.backend.take()
+    }
+
+    /// Re-install a previously taken backend *without* recording peak
+    /// workers: priming from the cache must not make an unused nesting
+    /// level look used ([`SessionState::backend`] records the peak on
+    /// actual access).
+    pub fn prime_backend(&mut self, backend: Box<dyn Backend>) {
+        self.backend = Some(backend);
     }
 
     pub fn workers(&mut self) -> usize {

@@ -29,6 +29,7 @@ pub mod intern;
 pub mod lexer;
 pub mod parser;
 pub mod serialize;
+pub mod shape;
 pub mod value;
 
 pub use ast::{Arg, Expr, Param};

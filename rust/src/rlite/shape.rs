@@ -1,0 +1,130 @@
+//! AST shape analysis for kernel fusion: canonicalization and
+//! structural fingerprinting of map-body expressions over interned
+//! symbols.
+//!
+//! The transpile-time recognizer (`transpile::fusion`) pattern-matches
+//! closure bodies against a small kernel catalog. This module holds the
+//! rlite-side half of that analysis: [`peel`] strips no-op wrappers so
+//! equivalent spellings (`{ x * 2 }` vs `x * 2`) normalize to one tree,
+//! and [`fingerprint`] renders a body as a compact canonical label —
+//! the map element as `.`, resolvable constants as `#`, anything
+//! outside the recognizable grammar as `?` — used for trace/bench/test
+//! labeling of matched shapes. Both operate on interned [`Symbol`]s, so
+//! per-node work is u32 comparison, not string hashing.
+
+use super::ast::Expr;
+use super::intern::Symbol;
+
+/// Strip single-expression `{ ... }` blocks: `{ x * 2 }` and `x * 2`
+/// evaluate identically, so shape analysis sees one tree for both.
+/// Multi-statement blocks are *not* peeled — sequencing is semantics.
+pub fn peel(e: &Expr) -> &Expr {
+    let mut cur = e;
+    while let Expr::Block(v) = cur {
+        if v.len() != 1 {
+            break;
+        }
+        cur = &v[0];
+    }
+    cur
+}
+
+/// The callee of a call expression, when it is statically known:
+/// `(namespace, name)` for a bare symbol or `pkg::name` head. Computed
+/// heads (`(get(f))(x)`) return `None` — they are never fusable.
+pub fn callee(func: &Expr) -> Option<(Option<&str>, Symbol)> {
+    match func {
+        Expr::Sym(s) => Some((None, *s)),
+        Expr::Ns { pkg, name } => Some((Some(pkg.as_str()), Symbol::intern(name))),
+        _ => None,
+    }
+}
+
+/// Structural fingerprint of a body: the map element renders as `.`,
+/// numeric literals and symbols `resolves` accepts render as `#`, calls
+/// render as `name(args)`, and any node outside this grammar as `?`.
+/// Total — never fails — so recognizers can label near-misses too.
+pub fn fingerprint(e: &Expr, elem: Symbol, resolves: &dyn Fn(Symbol) -> bool) -> String {
+    let mut out = String::new();
+    render(peel(e), elem, resolves, &mut out);
+    out
+}
+
+fn render(e: &Expr, elem: Symbol, resolves: &dyn Fn(Symbol) -> bool, out: &mut String) {
+    match peel(e) {
+        Expr::Num(_) | Expr::Int(_) => out.push('#'),
+        Expr::Sym(s) if *s == elem => out.push('.'),
+        Expr::Sym(s) if resolves(*s) => out.push('#'),
+        Expr::Dollar { obj, name } => match peel(obj) {
+            Expr::Sym(s) if resolves(*s) => {
+                out.push('#');
+                out.push('$');
+                out.push_str(name);
+            }
+            _ => out.push('?'),
+        },
+        Expr::Call { func, args } => match callee(func) {
+            Some((_, name)) => {
+                out.push_str(name.as_str());
+                out.push('(');
+                for (i, a) in args.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    if a.name.is_some() {
+                        out.push('?');
+                    } else {
+                        render(&a.value, elem, resolves, out);
+                    }
+                }
+                out.push(')');
+            }
+            None => out.push('?'),
+        },
+        _ => out.push('?'),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rlite::parse_expr;
+
+    fn fp(src: &str, consts: &[&str]) -> String {
+        let e = parse_expr(src).unwrap();
+        let elem = Symbol::intern("x");
+        let consts: Vec<Symbol> = consts.iter().map(|s| Symbol::intern(s)).collect();
+        fingerprint(&e, elem, &|s| consts.contains(&s))
+    }
+
+    #[test]
+    fn peel_unwraps_single_expression_blocks() {
+        let wrapped = parse_expr("{ x * 2 }").unwrap();
+        let bare = parse_expr("x * 2").unwrap();
+        assert_eq!(peel(&wrapped), &bare);
+        // Nested single-expression blocks peel all the way down.
+        let nested = parse_expr("{ { x * 2 } }").unwrap();
+        assert_eq!(peel(&nested), &bare);
+        // Multi-statement blocks stay intact.
+        let multi = parse_expr("{ y <- 1\nx * 2 }").unwrap();
+        assert!(matches!(peel(&multi), Expr::Block(v) if v.len() == 2));
+    }
+
+    #[test]
+    fn fingerprint_canonical_forms() {
+        assert_eq!(fp("x * 2 + 1", &[]), "+(*(.,#),#)");
+        assert_eq!(fp("{ x * 2 + 1 }", &[]), "+(*(.,#),#)");
+        assert_eq!(fp("3 * x * x + 2 * x + 1", &[]), "+(+(*(*(#,.),.),*(#,.)),#)");
+        assert_eq!(fp("a * x", &["a"]), "*(#,.)");
+        // Unresolvable free symbols and non-catalog nodes degrade to `?`.
+        assert_eq!(fp("a * x", &[]), "*(?,.)");
+        assert_eq!(fp("if (x > 0) x else 0", &[]), "?");
+        assert_eq!(fp("sum(d$x * x)", &["d"]), "sum(*(#$x,.))");
+    }
+
+    #[test]
+    fn fingerprint_is_total_on_weird_shapes() {
+        assert_eq!(fp("x[[1]](2)", &[]), "?");
+        assert_eq!(fp("f(a = 1)", &[]), "f(?)");
+    }
+}

@@ -1,0 +1,176 @@
+//! Generalized elementwise-expression kernel: a tiny stack VM over f64
+//! scalars that executes recognized arithmetic map bodies (ISSUE 6
+//! tentpole) without touching the interpreter.
+//!
+//! Unlike the fixed-shape PJRT artifacts (`chunk_map` is hard-wired to
+//! 3x²+2x+1 over f32[128] blocks), an [`ElemOp`] program encodes an
+//! *arbitrary* arithmetic expression tree over the map element and
+//! captured scalars, compiled by `transpile::fusion` in postorder. Every
+//! opcode mirrors the exact f64 operation rlite's scalar arithmetic
+//! performs — [`ElemOp::Neg`] is `0.0 - v` (the interpreter's unary
+//! minus, which differs from `-v` at `v = 0.0`), [`ElemOp::Mod`] is
+//! `rem_euclid`, [`ElemOp::IntDiv`] is `(a / b).floor()` — so a fused
+//! slice is bit-identical to the interpreted one, non-finite corners
+//! included.
+
+use serde_derive::{Deserialize, Serialize};
+
+/// One opcode of a postorder stack program. Binary ops pop the right
+/// operand first; the program always nets exactly one value.
+#[derive(Clone, Copy, Debug, PartialEq, Serialize, Deserialize)]
+pub enum ElemOp {
+    /// Push the map element.
+    Par,
+    /// Push a literal or captured scalar resolved at recognition time.
+    Const(f64),
+    Add,
+    Sub,
+    Mul,
+    Div,
+    /// `^` — `f64::powf`, as rlite's `pow` builtin computes it.
+    Pow,
+    /// `%%` — `f64::rem_euclid`, as rlite's `%%` builtin computes it.
+    Mod,
+    /// `%/%` — `(a / b).floor()`, as rlite's `%/%` builtin computes it.
+    IntDiv,
+    /// Unary minus — `0.0 - v`, rlite's exact spelling (preserves the
+    /// sign of zero differently than `-v`).
+    Neg,
+    Sqrt,
+    Exp,
+    /// Single-argument `log` (natural logarithm).
+    Ln,
+    Log2,
+    Log10,
+    Abs,
+    Floor,
+    /// `ceiling`.
+    Ceil,
+    Sin,
+    Cos,
+}
+
+/// Peak operand-stack depth of a well-formed program — callers size the
+/// reusable evaluation stack once per slice with this.
+pub fn max_depth(prog: &[ElemOp]) -> usize {
+    let (mut depth, mut peak) = (0usize, 0usize);
+    for op in prog {
+        match op {
+            ElemOp::Par | ElemOp::Const(_) => {
+                depth += 1;
+                peak = peak.max(depth);
+            }
+            ElemOp::Add
+            | ElemOp::Sub
+            | ElemOp::Mul
+            | ElemOp::Div
+            | ElemOp::Pow
+            | ElemOp::Mod
+            | ElemOp::IntDiv => depth = depth.saturating_sub(1),
+            _ => {}
+        }
+    }
+    peak
+}
+
+/// Evaluate `prog` at element value `x`. `stack` is caller-provided
+/// scratch (cleared here) so the per-element loop allocates nothing.
+/// Programs come from the fusion compiler and are well-formed by
+/// construction; a malformed one yields `NaN`, never a panic.
+#[inline]
+pub fn eval(prog: &[ElemOp], x: f64, stack: &mut Vec<f64>) -> f64 {
+    stack.clear();
+    macro_rules! bin {
+        ($f:expr) => {{
+            let b = stack.pop().unwrap_or(f64::NAN);
+            let a = stack.pop().unwrap_or(f64::NAN);
+            #[allow(clippy::redundant_closure_call)]
+            stack.push($f(a, b));
+        }};
+    }
+    macro_rules! un {
+        ($f:expr) => {{
+            let v = stack.pop().unwrap_or(f64::NAN);
+            #[allow(clippy::redundant_closure_call)]
+            stack.push($f(v));
+        }};
+    }
+    for op in prog {
+        match *op {
+            ElemOp::Par => stack.push(x),
+            ElemOp::Const(c) => stack.push(c),
+            ElemOp::Add => bin!(|a: f64, b: f64| a + b),
+            ElemOp::Sub => bin!(|a: f64, b: f64| a - b),
+            ElemOp::Mul => bin!(|a: f64, b: f64| a * b),
+            ElemOp::Div => bin!(|a: f64, b: f64| a / b),
+            ElemOp::Pow => bin!(|a: f64, b: f64| a.powf(b)),
+            ElemOp::Mod => bin!(|a: f64, b: f64| a.rem_euclid(b)),
+            ElemOp::IntDiv => bin!(|a: f64, b: f64| (a / b).floor()),
+            ElemOp::Neg => un!(|v: f64| 0.0 - v),
+            ElemOp::Sqrt => un!(f64::sqrt),
+            ElemOp::Exp => un!(f64::exp),
+            ElemOp::Ln => un!(f64::ln),
+            ElemOp::Log2 => un!(f64::log2),
+            ElemOp::Log10 => un!(f64::log10),
+            ElemOp::Abs => un!(f64::abs),
+            ElemOp::Floor => un!(f64::floor),
+            ElemOp::Ceil => un!(f64::ceil),
+            ElemOp::Sin => un!(f64::sin),
+            ElemOp::Cos => un!(f64::cos),
+        }
+    }
+    stack.pop().unwrap_or(f64::NAN)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ElemOp::*;
+
+    fn run(prog: &[ElemOp], x: f64) -> f64 {
+        eval(prog, x, &mut Vec::new())
+    }
+
+    #[test]
+    fn polynomial_program() {
+        // 3*x*x + 2*x + 1 in postorder.
+        let prog = [Const(3.0), Par, Mul, Par, Mul, Const(2.0), Par, Mul, Add, Const(1.0), Add];
+        assert_eq!(run(&prog, 0.0), 1.0);
+        assert_eq!(run(&prog, 1.0), 6.0);
+        assert_eq!(run(&prog, 2.0), 17.0);
+        assert_eq!(max_depth(&prog), 3);
+    }
+
+    #[test]
+    fn neg_matches_interpreter_zero_semantics() {
+        // rlite's unary minus is 0.0 - v: -(0.0) stays +0.0.
+        let prog = [Par, Neg];
+        assert_eq!(run(&prog, 0.0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(run(&prog, 2.5), -2.5);
+    }
+
+    #[test]
+    fn non_finite_corners_flow_through() {
+        let prog = [Par, Const(0.0), Div];
+        assert!(run(&prog, 1.0).is_infinite());
+        assert!(run(&prog, 0.0).is_nan());
+        let sq = [Par, Sqrt];
+        assert!(run(&sq, -1.0).is_nan());
+    }
+
+    #[test]
+    fn intdiv_and_mod_mirror_builtins() {
+        let m = [Par, Const(3.0), Mod];
+        assert_eq!(run(&m, -7.0), (-7.0f64).rem_euclid(3.0));
+        let d = [Par, Const(3.0), IntDiv];
+        assert_eq!(run(&d, -7.0), (-7.0f64 / 3.0).floor());
+    }
+
+    #[test]
+    fn roundtrips_serde() {
+        let prog = vec![Par, Const(2.0), Mul, Const(1.0), Add];
+        let bytes = crate::wire::bin::to_bytes(&prog).unwrap();
+        let back: Vec<ElemOp> = crate::wire::bin::from_bytes(&bytes).unwrap();
+        assert_eq!(prog, back);
+    }
+}

@@ -1,26 +1,62 @@
-//! Kernel entry points: PJRT artifact first, bit-equivalent native
-//! fallback second.
+//! Kernel entry points: native f64 reference first, PJRT artifact
+//! adopted only when bit-identical.
 //!
 //! Shapes are fixed at AOT time (PJRT requires static shapes); inputs are
 //! zero-padded to the block size and outputs truncated back. The Pallas
 //! kernels use masking so padding never contaminates results.
+//!
+//! The artifacts compute in f32, so their round-tripped results can
+//! diverge from the native f64 path in the low mantissa bits. Because
+//! fusion's contract (and the futurize paper's) is that backend choice
+//! never changes results, every entry point here computes the native f64
+//! answer first and adopts the PJRT result only when it is *bitwise*
+//! equal — the accelerator then serves as a checked fast path, never a
+//! source of drift.
 
 use super::{pjrt_execute, BOOT_N, CHUNK_N, GRAM_N, GRAM_P};
+
+/// f32 results round-tripped to f64 are adopted only when every lane is
+/// bitwise-equal to the native f64 reference.
+fn bits_equal(pjrt: &[f32], native: &[f64]) -> bool {
+    pjrt.len() >= native.len()
+        && native.iter().zip(pjrt).all(|(&n, &p)| (p as f64).to_bits() == n.to_bits())
+}
 
 /// Elementwise 3x² + 2x + 1 (the "slow_fcn" compute payload).
 pub fn chunk_map(x: &[f64]) -> Vec<f64> {
     let mut out = Vec::with_capacity(x.len());
     for block in x.chunks(CHUNK_N) {
+        let native: Vec<f64> = block.iter().map(|&v| 3.0 * v * v + 2.0 * v + 1.0).collect();
         let mut buf = [0f32; CHUNK_N];
         for (i, &v) in block.iter().enumerate() {
             buf[i] = v as f32;
         }
         match pjrt_execute("chunk_map", &[(&buf, &[CHUNK_N])]) {
-            Some(res) => out.extend(res[..block.len()].iter().map(|&v| v as f64)),
-            None => out.extend(block.iter().map(|&v| 3.0 * v * v + 2.0 * v + 1.0)),
+            Some(res) if bits_equal(&res[..block.len()], &native) => {
+                out.extend(res[..block.len()].iter().map(|&v| v as f64))
+            }
+            _ => out.extend(native),
         }
     }
     out
+}
+
+/// Interpreter-exact weighted ratio `sum(x·w) / sum(u·w)`: left-to-right
+/// f64 folds from 0.0, division last, *no* zero-denominator guard — a
+/// zero denominator yields `NaN`/`±Inf` exactly as rlite's `sum(...)/
+/// sum(...)` does. This is the fused `boot_stat` entry point; the
+/// guarded [`boot_stat`] below keeps its error contract for the
+/// explicit `hlo_boot_stat()` builtin.
+pub fn weighted_ratio(x: &[f64], u: &[f64], w: &[f64]) -> f64 {
+    let mut num = 0.0f64;
+    for (a, b) in x.iter().zip(w) {
+        num += a * b;
+    }
+    let mut den = 0.0f64;
+    for (a, b) in u.iter().zip(w) {
+        den += a * b;
+    }
+    num / den
 }
 
 /// Weighted ratio statistic sum(w·x)/sum(w·u) — the `boot` bigcity
@@ -29,6 +65,11 @@ pub fn chunk_map(x: &[f64]) -> Vec<f64> {
 pub fn boot_stat(x: &[f64], u: &[f64], w: &[f64]) -> Result<f64, String> {
     if x.len() != u.len() || x.len() != w.len() {
         return Err("boot_stat: x, u, w must have equal length".into());
+    }
+    let num: f64 = x.iter().zip(w).map(|(a, b)| a * b).sum();
+    let den: f64 = u.iter().zip(w).map(|(a, b)| a * b).sum();
+    if den == 0.0 {
+        return Err("boot_stat: zero denominator".into());
     }
     if x.len() <= BOOT_N {
         let mut bx = [0f32; BOOT_N];
@@ -42,16 +83,12 @@ pub fn boot_stat(x: &[f64], u: &[f64], w: &[f64]) -> Result<f64, String> {
         if let Some(res) =
             pjrt_execute("boot_stat", &[(&bx, &[BOOT_N]), (&bu, &[BOOT_N]), (&bw, &[BOOT_N])])
         {
-            // Artifact returns (num, den) so the division stays exact in f64.
-            if res.len() >= 2 && res[1] != 0.0 {
+            // Artifact returns (num, den) separately; adopt only when the
+            // f32 sums round-trip to the exact f64 reference bits.
+            if res.len() >= 2 && bits_equal(&res[..2], &[num, den]) {
                 return Ok(res[0] as f64 / res[1] as f64);
             }
         }
-    }
-    let num: f64 = x.iter().zip(w).map(|(a, b)| a * b).sum();
-    let den: f64 = u.iter().zip(w).map(|(a, b)| a * b).sum();
-    if den == 0.0 {
-        return Err("boot_stat: zero denominator".into());
     }
     Ok(num / den)
 }
@@ -68,6 +105,17 @@ pub fn gram(cols: &[Vec<f64>], y: &[f64]) -> Result<(Vec<f64>, Vec<f64>), String
     if cols.iter().any(|c| c.len() != n) || y.len() != n {
         return Err("gram: ragged design matrix".into());
     }
+    // Native f64 reference.
+    let mut g = vec![0f64; p * p];
+    for i in 0..p {
+        for j in i..p {
+            let s: f64 = cols[i].iter().zip(&cols[j]).map(|(a, b)| a * b).sum();
+            g[i * p + j] = s;
+            g[j * p + i] = s;
+        }
+    }
+    let xty: Vec<f64> =
+        cols.iter().map(|c| c.iter().zip(y).map(|(a, b)| a * b).sum()).collect();
     if n <= GRAM_N && p <= GRAM_P {
         // Pack row-major padded f32[GRAM_N, GRAM_P].
         let mut xbuf = vec![0f32; GRAM_N * GRAM_P];
@@ -84,29 +132,19 @@ pub fn gram(cols: &[Vec<f64>], y: &[f64]) -> Result<(Vec<f64>, Vec<f64>), String
             pjrt_execute("gram", &[(&xbuf, &[GRAM_N, GRAM_P]), (&ybuf, &[GRAM_N])])
         {
             if res.len() >= GRAM_P * GRAM_P + GRAM_P {
-                let mut g = vec![0f64; p * p];
-                for i in 0..p {
-                    for j in 0..p {
-                        g[i * p + j] = res[i * GRAM_P + j] as f64;
-                    }
+                let gp: Vec<f32> = (0..p)
+                    .flat_map(|i| res[i * GRAM_P..i * GRAM_P + p].iter().copied())
+                    .collect();
+                let xp: Vec<f32> =
+                    res[GRAM_P * GRAM_P..GRAM_P * GRAM_P + p].to_vec();
+                if bits_equal(&gp, &g) && bits_equal(&xp, &xty) {
+                    let g64 = gp.iter().map(|&v| v as f64).collect();
+                    let x64 = xp.iter().map(|&v| v as f64).collect();
+                    return Ok((g64, x64));
                 }
-                let xty: Vec<f64> =
-                    (0..p).map(|j| res[GRAM_P * GRAM_P + j] as f64).collect();
-                return Ok((g, xty));
             }
         }
     }
-    // Native fallback.
-    let mut g = vec![0f64; p * p];
-    for i in 0..p {
-        for j in i..p {
-            let s: f64 = cols[i].iter().zip(&cols[j]).map(|(a, b)| a * b).sum();
-            g[i * p + j] = s;
-            g[j * p + i] = s;
-        }
-    }
-    let xty: Vec<f64> =
-        cols.iter().map(|c| c.iter().zip(y).map(|(a, b)| a * b).sum()).collect();
     Ok((g, xty))
 }
 

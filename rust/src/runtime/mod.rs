@@ -16,6 +16,7 @@ use crate::rlite::env::EnvRef;
 use crate::rlite::eval::{EvalResult, Interp, Signal};
 use crate::rlite::value::RVal;
 
+pub mod elementwise;
 pub mod kernels;
 
 /// Fixed shapes of the compiled artifacts (must match python/compile).

@@ -1,0 +1,654 @@
+//! AOT kernel fusion: recognize map-body shapes at context-freeze time
+//! and dispatch matched chunks to native kernels (ISSUE 6 tentpole).
+//!
+//! The futurize contract is that users declare *what* to parallelize
+//! and the runtime chooses *how* — which licenses executing a
+//! recognized map body as a fused native kernel, as long as results
+//! stay bit-identical to the interpreted path. When the parent freezes
+//! a map context ([`maybe_recognize`], called from `run_map`), the
+//! closure body is pattern-matched against a small catalog:
+//!
+//! - **elementwise** — arbitrary arithmetic expression trees over the
+//!   scalar element and captured scalars (`x * 2 + 1`,
+//!   `3 * x^2 + sqrt(a) * x`, ...), compiled to a postorder
+//!   [`ElemOp`] program for `runtime::elementwise::eval`;
+//! - **boot_stat** — the boot weighted-ratio statistic
+//!   `sum(x * w) / sum(u * w)` over a weight-vector element, with `x`
+//!   and `u` resolvable captured vectors (bare symbols or `d$field`
+//!   list accesses), dispatched to `kernels::weighted_ratio`;
+//! - **gram** — `hlo_gram(x, y)` cross-product blocks with a captured
+//!   response vector, dispatched to `kernels::gram`.
+//!
+//! A match produces a [`KernelPlan`] that ships inside `TaskContext`;
+//! workers run matched slices through [`KernelPlan::run_slice`] instead
+//! of the interpreter. Recognition is conservative by construction —
+//! any shape the catalog cannot prove bit-identical (shadowed builtins,
+//! named arguments, env mutation, conditions, RNG, vector elements for
+//! scalar kernels, named values whose propagation the kernel would
+//! drop) stays on the interpreted path, either at recognition time
+//! (no plan) or per-slice (`run_slice` returns `None` on any item that
+//! misses the runtime gate). `FUTURIZE_NO_FUSION=1` is the kill switch:
+//! it suppresses plan attachment at freeze time, so it works across
+//! process backends without re-spawning workers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use serde_derive::{Deserialize, Serialize};
+
+use crate::rlite::ast::Expr;
+use crate::rlite::intern::Symbol;
+use crate::rlite::serialize::{WireSlice, WireVal};
+use crate::rlite::shape::{callee, fingerprint, peel};
+use crate::runtime::elementwise::{self, ElemOp};
+use crate::runtime::kernels;
+
+/// Set to `1` to disable fusion entirely (every map runs interpreted).
+pub const NO_FUSION_ENV: &str = "FUTURIZE_NO_FUSION";
+
+/// Read the kill switch per call (not cached) so tests and operators
+/// can toggle it without restarting the session.
+pub fn enabled() -> bool {
+    std::env::var(NO_FUSION_ENV).map(|v| v != "1").unwrap_or(true)
+}
+
+// Trace counters (process-local, for tests/benches/diagnostics).
+// Recognition counters tick in the parent at freeze time; slice
+// counters tick wherever the slice executes, so process backends
+// accumulate them worker-side.
+static RECOGNIZED: AtomicU64 = AtomicU64::new(0);
+static UNMATCHED: AtomicU64 = AtomicU64::new(0);
+static FUSED_SLICES: AtomicU64 = AtomicU64::new(0);
+static FALLBACK_SLICES: AtomicU64 = AtomicU64::new(0);
+
+/// Map contexts whose body matched a kernel at freeze time.
+pub fn contexts_recognized() -> u64 {
+    RECOGNIZED.load(Ordering::Relaxed)
+}
+
+/// Map contexts frozen with no matching kernel (interpreted path).
+pub fn contexts_unmatched() -> u64 {
+    UNMATCHED.load(Ordering::Relaxed)
+}
+
+/// Slices executed through a kernel.
+pub fn slices_fused() -> u64 {
+    FUSED_SLICES.load(Ordering::Relaxed)
+}
+
+/// Slices of kernel-planned contexts that fell back to the interpreter
+/// (an item missed the runtime gate).
+pub fn slices_fallback() -> u64 {
+    FALLBACK_SLICES.load(Ordering::Relaxed)
+}
+
+pub fn note_fused_slice() {
+    FUSED_SLICES.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn note_fallback_slice() {
+    FALLBACK_SLICES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A recognized kernel for one map context, shipped inside
+/// `TaskContext` to wherever its slices execute.
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub struct KernelPlan {
+    /// Canonical label (`catalog entry:fingerprint`) for trace output,
+    /// bench series, and test assertions.
+    pub shape: String,
+    pub kind: KernelKind,
+}
+
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub enum KernelKind {
+    /// Scalar arithmetic program over the element (postorder stack VM).
+    Elementwise { prog: Vec<ElemOp> },
+    /// `sum(x·w) / sum(u·w)` with the element as weight vector `w`.
+    BootStat { x: Vec<f64>, u: Vec<f64> },
+    /// `hlo_gram(x, y)` with the element as the design matrix.
+    Gram { y: Vec<f64> },
+}
+
+/// Freeze-time entry point: recognition gated on the kill switch, with
+/// trace accounting. Returns the plan to ship in the context, if any.
+pub fn maybe_recognize(
+    f: &WireVal,
+    extra: &[(Option<String>, WireVal)],
+    globals: &[(String, WireVal)],
+) -> Option<KernelPlan> {
+    if !enabled() {
+        return None;
+    }
+    match recognize(f, extra, globals) {
+        Some(p) => {
+            RECOGNIZED.fetch_add(1, Ordering::Relaxed);
+            Some(p)
+        }
+        None => {
+            UNMATCHED.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+}
+
+/// Name-resolution scope for recognition: the element parameter, extra
+/// arguments bound to the remaining parameters, the closure's captured
+/// snapshot, and the context's exported globals — in that order, which
+/// mirrors the worker-side environment chain (params → closure env →
+/// globals). Builtins never appear in captured/globals snapshots
+/// (serialization skips them), so *any* binding for a callee name means
+/// the builtin is shadowed.
+struct Scope<'a> {
+    elem: Symbol,
+    bound: &'a [(Symbol, WireVal)],
+    captured: &'a [(String, WireVal)],
+    globals: &'a [(String, WireVal)],
+}
+
+impl Scope<'_> {
+    fn resolve(&self, s: Symbol) -> Option<&WireVal> {
+        if s == self.elem {
+            return None;
+        }
+        if let Some((_, v)) = self.bound.iter().find(|(n, _)| *n == s) {
+            return Some(v);
+        }
+        let name = s.as_str();
+        if let Some((_, v)) = self.captured.iter().rev().find(|(n, _)| n == name) {
+            return Some(v);
+        }
+        self.globals.iter().rev().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    /// A callee is fusable only when it will resolve to the base
+    /// builtin on the worker: no user binding may shadow it.
+    fn callee_is_builtin(&self, s: Symbol) -> bool {
+        s != self.elem && self.resolve(s).is_none()
+    }
+}
+
+/// A captured value usable as an elementwise constant: an *unnamed*
+/// scalar (names would propagate through the interpreter's slow-path
+/// binop and change the result shape). Int scalars are acceptable under
+/// an operator (the interpreter coerces `i as f64` identically) but not
+/// at the body root, where the interpreter returns them verbatim as Int.
+fn scalar_const(v: &WireVal, at_root: bool) -> Option<f64> {
+    match v {
+        WireVal::Dbl(vals, None) if vals.len() == 1 => Some(vals[0]),
+        WireVal::Int(vals, None) if vals.len() == 1 && !at_root => Some(vals[0] as f64),
+        _ => None,
+    }
+}
+
+/// A captured value usable as a constant numeric vector. Names are fine
+/// here: these feed `sum(...)` reductions and `hlo_gram`, which drop
+/// names exactly as the fused kernels do.
+fn const_dbl_vec(v: &WireVal) -> Option<Vec<f64>> {
+    match v {
+        WireVal::Dbl(vals, _) => Some(vals.clone()),
+        WireVal::Int(vals, _) => Some(vals.iter().map(|&x| x as f64).collect()),
+        _ => None,
+    }
+}
+
+/// Recognize a frozen map closure against the kernel catalog. Pure
+/// analysis — no counters, no kill switch — so tests and benches can
+/// call it directly.
+pub fn recognize(
+    f: &WireVal,
+    extra: &[(Option<String>, WireVal)],
+    globals: &[(String, WireVal)],
+) -> Option<KernelPlan> {
+    let WireVal::Closure { params, body, captured } = f else {
+        return None;
+    };
+    if params.is_empty() || params.iter().any(|p| p.name.as_str() == "...") {
+        return None;
+    }
+    let elem = params[0].name;
+
+    // Bind extras to the remaining parameters exactly as the map driver
+    // will: named extras match parameter names exactly, positional
+    // extras fill the remaining slots in order. Anything the static
+    // binding cannot prove (unknown names, unbound parameters needing
+    // defaults, surplus extras) rejects the match.
+    let rest = &params[1..];
+    let mut slots: Vec<Option<WireVal>> = vec![None; rest.len()];
+    let mut positional: Vec<WireVal> = Vec::new();
+    for (name, v) in extra {
+        match name {
+            Some(n) => {
+                if n == elem.as_str() {
+                    return None;
+                }
+                let i = rest.iter().position(|p| p.name.as_str() == n)?;
+                if slots[i].is_some() {
+                    return None;
+                }
+                slots[i] = Some(v.clone());
+            }
+            None => positional.push(v.clone()),
+        }
+    }
+    let mut pos = positional.into_iter();
+    for slot in slots.iter_mut() {
+        if slot.is_none() {
+            *slot = pos.next();
+        }
+    }
+    if pos.next().is_some() {
+        return None;
+    }
+    let mut bound: Vec<(Symbol, WireVal)> = Vec::with_capacity(rest.len());
+    for (p, s) in rest.iter().zip(slots) {
+        bound.push((p.name, s?));
+    }
+
+    let scope = Scope { elem, bound: &bound, captured, globals };
+    let body = peel(body);
+    let label = |prefix: &str| {
+        format!("{prefix}:{}", fingerprint(body, elem, &|s| scope.resolve(s).is_some()))
+    };
+    if let Some(kind) = recognize_boot(body, &scope) {
+        return Some(KernelPlan { shape: label("boot_stat"), kind });
+    }
+    if let Some(kind) = recognize_gram(body, &scope) {
+        return Some(KernelPlan { shape: label("gram"), kind });
+    }
+    let mut prog = Vec::new();
+    compile_elementwise(body, &scope, &mut prog, 0)?;
+    Some(KernelPlan { shape: label("elementwise"), kind: KernelKind::Elementwise { prog } })
+}
+
+/// The call's (namespace-checked, shadow-checked) builtin head and its
+/// unnamed arguments — `None` if the callee is computed, namespaced
+/// outside `allowed_ns`, shadowed, or any argument is named.
+fn builtin_call<'a>(
+    e: &'a Expr,
+    scope: &Scope,
+    allowed_ns: &[&str],
+) -> Option<(Symbol, Vec<&'a Expr>)> {
+    let Expr::Call { func, args } = e else {
+        return None;
+    };
+    let (ns, name) = callee(func)?;
+    if let Some(pkg) = ns {
+        if !allowed_ns.contains(&pkg) {
+            return None;
+        }
+    }
+    if !scope.callee_is_builtin(name) {
+        return None;
+    }
+    if args.iter().any(|a| a.name.is_some()) {
+        return None;
+    }
+    Some((name, args.iter().map(|a| &a.value).collect()))
+}
+
+/// Compile an arithmetic expression tree to a postorder [`ElemOp`]
+/// program. `depth == 0` marks the body root, where the interpreter
+/// returns non-Dbl leaves verbatim and the program must therefore
+/// reject them.
+fn compile_elementwise(
+    e: &Expr,
+    scope: &Scope,
+    out: &mut Vec<ElemOp>,
+    depth: usize,
+) -> Option<()> {
+    match peel(e) {
+        Expr::Num(v) => {
+            out.push(ElemOp::Const(*v));
+            Some(())
+        }
+        Expr::Int(v) if depth > 0 => {
+            out.push(ElemOp::Const(*v as f64));
+            Some(())
+        }
+        Expr::Sym(s) if *s == scope.elem => {
+            out.push(ElemOp::Par);
+            Some(())
+        }
+        Expr::Sym(s) => {
+            let c = scalar_const(scope.resolve(*s)?, depth == 0)?;
+            out.push(ElemOp::Const(c));
+            Some(())
+        }
+        call @ Expr::Call { .. } => {
+            let (name, args) = builtin_call(call, scope, &["base"])?;
+            let n = name.as_str();
+            if let Some(op) = match (n, args.len()) {
+                ("+", 2) => Some(ElemOp::Add),
+                ("-", 2) => Some(ElemOp::Sub),
+                ("*", 2) => Some(ElemOp::Mul),
+                ("/", 2) => Some(ElemOp::Div),
+                ("^", 2) => Some(ElemOp::Pow),
+                ("%%", 2) => Some(ElemOp::Mod),
+                ("%/%", 2) => Some(ElemOp::IntDiv),
+                _ => None,
+            } {
+                compile_elementwise(args[0], scope, out, depth + 1)?;
+                compile_elementwise(args[1], scope, out, depth + 1)?;
+                out.push(op);
+                return Some(());
+            }
+            // Unary `+` is the interpreter's identity: compile the
+            // operand at the *same* depth (root stays root).
+            if n == "+" && args.len() == 1 {
+                return compile_elementwise(args[0], scope, out, depth);
+            }
+            let un = match (n, args.len()) {
+                ("-", 1) => ElemOp::Neg,
+                ("sqrt", 1) => ElemOp::Sqrt,
+                ("exp", 1) => ElemOp::Exp,
+                ("log", 1) => ElemOp::Ln,
+                ("log2", 1) => ElemOp::Log2,
+                ("log10", 1) => ElemOp::Log10,
+                ("abs", 1) => ElemOp::Abs,
+                ("floor", 1) => ElemOp::Floor,
+                ("ceiling", 1) => ElemOp::Ceil,
+                ("sin", 1) => ElemOp::Sin,
+                ("cos", 1) => ElemOp::Cos,
+                _ => return None,
+            };
+            compile_elementwise(args[0], scope, out, depth + 1)?;
+            out.push(un);
+            Some(())
+        }
+        _ => None,
+    }
+}
+
+/// A resolvable constant numeric vector operand: a bare symbol, or a
+/// `d$field` access on a resolvable named list.
+fn resolve_vec(e: &Expr, scope: &Scope) -> Option<Vec<f64>> {
+    match peel(e) {
+        Expr::Sym(s) => const_dbl_vec(scope.resolve(*s)?),
+        Expr::Dollar { obj, name } => {
+            let Expr::Sym(s) = peel(obj) else {
+                return None;
+            };
+            let WireVal::List(vals, Some(names), _) = scope.resolve(*s)? else {
+                return None;
+            };
+            let i = names.iter().position(|n| n == name)?;
+            const_dbl_vec(&vals[i])
+        }
+        _ => None,
+    }
+}
+
+/// `sum(<vec> * elem)` (either factor order): the constant-vector half
+/// of one weighted sum.
+fn weighted_sum_vec(e: &Expr, scope: &Scope) -> Option<Vec<f64>> {
+    let (name, args) = builtin_call(peel(e), scope, &["base"])?;
+    if name.as_str() != "sum" || args.len() != 1 {
+        return None;
+    }
+    let (mul, factors) = builtin_call(peel(args[0]), scope, &["base"])?;
+    if mul.as_str() != "*" || factors.len() != 2 {
+        return None;
+    }
+    let is_elem = |e: &Expr| matches!(peel(e), Expr::Sym(s) if *s == scope.elem);
+    match (is_elem(factors[0]), is_elem(factors[1])) {
+        (true, false) => resolve_vec(factors[1], scope),
+        (false, true) => resolve_vec(factors[0], scope),
+        _ => None,
+    }
+}
+
+/// `sum(x * w) / sum(u * w)` with the element as weight vector.
+fn recognize_boot(body: &Expr, scope: &Scope) -> Option<KernelKind> {
+    let (name, args) = builtin_call(body, scope, &["base"])?;
+    if name.as_str() != "/" || args.len() != 2 {
+        return None;
+    }
+    let x = weighted_sum_vec(args[0], scope)?;
+    let u = weighted_sum_vec(args[1], scope)?;
+    // Equal lengths mean the interpreter never recycles and the kernel's
+    // exact zip reproduces it; the slice gate pins the element length.
+    if x.len() != u.len() {
+        return None;
+    }
+    Some(KernelKind::BootStat { x, u })
+}
+
+/// `hlo_gram(elem, y)` with a resolvable response vector.
+fn recognize_gram(body: &Expr, scope: &Scope) -> Option<KernelKind> {
+    let (name, args) = builtin_call(body, scope, &["futurize"])?;
+    if name.as_str() != "hlo_gram" || args.len() != 2 {
+        return None;
+    }
+    if !matches!(peel(args[0]), Expr::Sym(s) if *s == scope.elem) {
+        return None;
+    }
+    Some(KernelKind::Gram { y: resolve_vec(args[1], scope)? })
+}
+
+impl KernelPlan {
+    /// Execute a slice through the kernel. `None` means some item
+    /// missed the runtime gate and the *whole* slice must run
+    /// interpreted — safe because every cataloged shape is pure, so
+    /// re-execution has no observable side effects.
+    pub fn run_slice(&self, items: &WireSlice<WireVal>) -> Option<Vec<WireVal>> {
+        match &self.kind {
+            KernelKind::Elementwise { prog } => {
+                let mut out = Vec::with_capacity(items.len());
+                let mut stack = Vec::with_capacity(elementwise::max_depth(prog));
+                for item in items.iter() {
+                    // Unnamed scalars only: names would propagate
+                    // through the interpreter, vectors would map
+                    // elementwise, and a bare-Int identity body would
+                    // return Int verbatim (prog.len() > 1 guarantees a
+                    // root operation, which always produces unnamed Dbl).
+                    let x = match item {
+                        WireVal::Dbl(v, None) if v.len() == 1 => v[0],
+                        WireVal::Int(v, None) if v.len() == 1 && prog.len() > 1 => v[0] as f64,
+                        _ => return None,
+                    };
+                    out.push(WireVal::Dbl(vec![elementwise::eval(prog, x, &mut stack)], None));
+                }
+                Some(out)
+            }
+            KernelKind::BootStat { x, u } => {
+                let mut out = Vec::with_capacity(items.len());
+                let mut scratch: Vec<f64> = Vec::new();
+                for item in items.iter() {
+                    let w: &[f64] = match item {
+                        WireVal::Dbl(v, _) if v.len() == x.len() => v,
+                        WireVal::Int(v, _) if v.len() == x.len() => {
+                            scratch.clear();
+                            scratch.extend(v.iter().map(|&i| i as f64));
+                            &scratch
+                        }
+                        _ => return None,
+                    };
+                    out.push(WireVal::Dbl(vec![kernels::weighted_ratio(x, u, w)], None));
+                }
+                Some(out)
+            }
+            KernelKind::Gram { y } => {
+                let mut out = Vec::with_capacity(items.len());
+                for item in items.iter() {
+                    out.push(gram_item(item, y)?);
+                }
+                Some(out)
+            }
+        }
+    }
+}
+
+/// One gram item: a list of numeric columns (or a single numeric
+/// vector), checked rectangular against `y`. Dimension errors gate to
+/// `None` so the interpreter raises its own condition verbatim.
+fn gram_item(item: &WireVal, y: &[f64]) -> Option<WireVal> {
+    let cols: Vec<Vec<f64>> = match item {
+        WireVal::List(vals, _, _) => vals.iter().map(const_dbl_vec).collect::<Option<_>>()?,
+        WireVal::Dbl(..) | WireVal::Int(..) => vec![const_dbl_vec(item)?],
+        _ => return None,
+    };
+    let n = cols.first()?.len();
+    if cols.iter().any(|c| c.len() != n) || y.len() != n {
+        return None;
+    }
+    let (g, xty) = kernels::gram(&cols, y).ok()?;
+    let p = cols.len();
+    let mut parts: Vec<WireVal> =
+        g.chunks(p).map(|row| WireVal::Dbl(row.to_vec(), None)).collect();
+    parts.push(WireVal::Dbl(xty, None));
+    Some(WireVal::List(parts, None, None))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rlite::parse_expr;
+
+    /// Build a frozen map closure the way `closure_to_wire` would.
+    fn closure(src: &str, captured: &[(&str, WireVal)]) -> WireVal {
+        let Expr::Function { params, body } = parse_expr(src).unwrap() else {
+            panic!("fixture must be a function: {src}");
+        };
+        WireVal::Closure {
+            params,
+            body: *body,
+            captured: captured.iter().map(|(n, v)| (n.to_string(), v.clone())).collect(),
+        }
+    }
+
+    fn rec(src: &str, captured: &[(&str, WireVal)]) -> Option<KernelPlan> {
+        recognize(&closure(src, captured), &[], &[])
+    }
+
+    fn dbl(v: &[f64]) -> WireVal {
+        WireVal::Dbl(v.to_vec(), None)
+    }
+
+    #[test]
+    fn recognizes_polynomial_and_runs_it() {
+        let plan = rec("function(x) 3 * x * x + 2 * x + 1", &[]).expect("should match");
+        assert!(plan.shape.starts_with("elementwise:"), "{}", plan.shape);
+        let items: WireSlice<WireVal> =
+            vec![dbl(&[0.0]), dbl(&[1.0]), dbl(&[2.0])].into();
+        let out = plan.run_slice(&items).expect("gate passes");
+        assert_eq!(out, vec![dbl(&[1.0]), dbl(&[6.0]), dbl(&[17.0])]);
+    }
+
+    #[test]
+    fn captured_scalars_and_extras_become_constants() {
+        let a = dbl(&[2.5]);
+        let plan = rec("function(x) a * x + 1", &[("a", a.clone())]).expect("captured");
+        let out = plan.run_slice(&vec![dbl(&[2.0])].into()).unwrap();
+        assert_eq!(out, vec![dbl(&[6.0])]);
+        // The same body with `a` as a positional extra argument.
+        let f = closure("function(x, a) a * x + 1", &[]);
+        let plan = recognize(&f, &[(None, a.clone())], &[]).expect("positional extra");
+        assert_eq!(plan.run_slice(&vec![dbl(&[2.0])].into()).unwrap(), vec![dbl(&[6.0])]);
+        // And as a named extra.
+        let plan =
+            recognize(&f, &[(Some("a".into()), a)], &[]).expect("named extra");
+        assert_eq!(plan.run_slice(&vec![dbl(&[2.0])].into()).unwrap(), vec![dbl(&[6.0])]);
+    }
+
+    #[test]
+    fn rejects_unfusable_bodies() {
+        // Env mutation, conditions, RNG, control flow, vector ops.
+        for src in [
+            "function(x) { s <<- s + x\ns }",
+            "function(x) { message(\"hi\")\nx * 2 }",
+            "function(x) rnorm(1) + x",
+            "function(x) if (x > 0) x else 0",
+            "function(x) sum(x)",
+            "function(x) (function(y) y + 1)(x)",
+            "function(x) x * unknown_sym",
+            "function(...) 1",
+        ] {
+            assert!(rec(src, &[]).is_none(), "must not fuse: {src}");
+        }
+        // A shadowed builtin is not the builtin.
+        let shadow = closure("function(x) x * 2", &[("*", dbl(&[1.0]))]);
+        assert!(recognize(&shadow, &[], &[]).is_none(), "shadowed `*` must reject");
+        // Named scalars would propagate names through the interpreter.
+        let named = WireVal::Dbl(vec![2.0], Some(vec!["n".into()]));
+        assert!(rec("function(x) a * x", &[("a", named)]).is_none());
+        // Unbound second parameter (its default would need evaluation).
+        let f = closure("function(x, a = 2) a * x", &[]);
+        assert!(recognize(&f, &[], &[]).is_none());
+    }
+
+    #[test]
+    fn elementwise_gate_rejects_non_scalar_items() {
+        let plan = rec("function(x) x * 2 + 1", &[]).unwrap();
+        assert!(plan.run_slice(&vec![dbl(&[1.0, 2.0])].into()).is_none(), "vector item");
+        let named = WireVal::Dbl(vec![1.0], Some(vec!["n".into()]));
+        assert!(plan.run_slice(&vec![named].into()).is_none(), "named item");
+        assert!(
+            plan.run_slice(&vec![WireVal::Chr(vec!["a".into()], None)].into()).is_none(),
+            "character item"
+        );
+        // Int scalars coerce exactly under an arithmetic root...
+        let out = plan.run_slice(&vec![WireVal::Int(vec![3], None)].into()).unwrap();
+        assert_eq!(out, vec![dbl(&[7.0])]);
+        // ...but the identity body returns Int verbatim interpreted, so
+        // the fused path must refuse it.
+        let ident = rec("function(x) x", &[]).unwrap();
+        assert!(ident.run_slice(&vec![WireVal::Int(vec![3], None)].into()).is_none());
+        assert_eq!(ident.run_slice(&vec![dbl(&[3.0])].into()).unwrap(), vec![dbl(&[3.0])]);
+    }
+
+    #[test]
+    fn recognizes_boot_statistic_both_factor_orders_and_dollar_form() {
+        let x = dbl(&[5.0, 6.0]);
+        let u = dbl(&[1.0, 2.0]);
+        let plan =
+            rec("function(w) sum(x * w) / sum(w * u)", &[("x", x.clone()), ("u", u.clone())])
+                .expect("boot shape");
+        assert!(plan.shape.starts_with("boot_stat:"), "{}", plan.shape);
+        let out = plan.run_slice(&vec![dbl(&[1.0, 1.0])].into()).unwrap();
+        assert_eq!(out, vec![dbl(&[11.0 / 3.0])]);
+        // d$x / d$u on a captured named list.
+        let d = WireVal::List(vec![x, u], Some(vec!["x".into(), "u".into()]), None);
+        let plan = rec("function(w) sum(d$x * w) / sum(d$u * w)", &[("d", d)]).unwrap();
+        assert_eq!(plan.run_slice(&vec![dbl(&[1.0, 1.0])].into()).unwrap(), vec![
+            dbl(&[11.0 / 3.0])
+        ]);
+        // Length-mismatched weights gate to the interpreter.
+        assert!(plan.run_slice(&vec![dbl(&[1.0, 1.0, 1.0])].into()).is_none());
+        // Zero denominator flows through as the interpreter's NaN/Inf,
+        // not an error.
+        let z = plan.run_slice(&vec![dbl(&[0.0, 0.0])].into()).unwrap();
+        let WireVal::Dbl(v, None) = &z[0] else { panic!() };
+        assert!(v[0].is_nan());
+    }
+
+    #[test]
+    fn recognizes_gram_and_gates_ragged_items() {
+        let y = dbl(&[1.0, 0.0, 1.0]);
+        let plan = rec("function(x) hlo_gram(x, y)", &[("y", y)]).expect("gram shape");
+        assert!(plan.shape.starts_with("gram:"), "{}", plan.shape);
+        let cols = WireVal::List(
+            vec![dbl(&[1.0, 2.0, 3.0]), dbl(&[0.5, -1.0, 2.0])],
+            None,
+            None,
+        );
+        let out = plan.run_slice(&vec![cols].into()).unwrap();
+        let WireVal::List(parts, None, None) = &out[0] else {
+            panic!("gram output shape: {out:?}")
+        };
+        assert_eq!(parts.len(), 3); // 2 gram rows + xty
+        assert_eq!(parts[0], dbl(&[14.0, 4.5]));
+        // Ragged item → interpreter (which raises its own error).
+        let ragged = WireVal::List(vec![dbl(&[1.0]), dbl(&[1.0, 2.0])], None, None);
+        assert!(plan.run_slice(&vec![ragged].into()).is_none());
+    }
+
+    #[test]
+    fn plan_roundtrips_both_codecs() {
+        use crate::wire::codec::WireCodec;
+        let plan = rec("function(x) sqrt(x) + 2 ^ x", &[]).unwrap();
+        for codec in [WireCodec::Binary, WireCodec::Json] {
+            let bytes = codec.encode(&plan).unwrap();
+            assert_eq!(codec.decode::<KernelPlan>(&bytes).unwrap(), plan, "{codec:?}");
+        }
+    }
+}

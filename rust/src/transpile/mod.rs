@@ -24,6 +24,7 @@
 //! the transpiler descends to the transpilable call and rewrites it *in
 //! place*, preserving the wrappers.
 
+pub mod fusion;
 pub mod registry;
 
 use std::collections::HashMap;

@@ -241,6 +241,7 @@ fn contexts_register_resolve_and_drop() {
             body: ContextBody::Map { f: f_wire, extra: vec![] },
             globals: vec![],
             nesting: Default::default(),
+            kernel: None,
         }))
         .unwrap();
         b.submit(TaskPayload {

@@ -1,0 +1,295 @@
+//! Differential fusion suite (ISSUE 6): every body the AOT recognizer
+//! fuses must be **bit-identical** to the interpreted path — values,
+//! seeded RNG draws, and condition/stdout relay — on every backend and
+//! at nesting depths 1 and 2; bodies outside the catalog must fall back
+//! to the interpreter, observably (trace counters). CI re-runs this
+//! file with `FUTURIZE_WIRE_CODEC=json` and with `FUTURIZE_NO_FUSION=1`
+//! (under which the whole suite degenerates to interpreter-vs-
+//! interpreter — still a valid differential).
+//!
+//! Every test serializes on one mutex: the kill switch is a process
+//! env var and the fusion trace counters are process globals, so
+//! concurrent tests would race both.
+
+mod common;
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use common::worker_env;
+use futurize::backend::multisession;
+use futurize::prelude::*;
+use futurize::transpile::fusion;
+
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    // A panicked test must not wedge the rest of the suite.
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with fusion forced on or off, restoring the ambient state
+/// (which CI may pin to off for the conformance leg) afterwards.
+fn with_fusion<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    let ambient = std::env::var(fusion::NO_FUSION_ENV).ok();
+    if on {
+        std::env::remove_var(fusion::NO_FUSION_ENV);
+    } else {
+        std::env::set_var(fusion::NO_FUSION_ENV, "1");
+    }
+    let r = f();
+    match ambient {
+        Some(v) => std::env::set_var(fusion::NO_FUSION_ENV, v),
+        None => std::env::remove_var(fusion::NO_FUSION_ENV),
+    }
+    r
+}
+
+/// Bit pattern of a numeric result — `assert_eq!` on `RVal` treats
+/// NaN ≠ NaN, and the corner fixtures deliberately produce NaN/Inf.
+fn bits(v: &RVal) -> Vec<u64> {
+    v.as_dbl_vec().unwrap().iter().map(|x| x.to_bits()).collect()
+}
+
+fn run_with(plan: &str, fixture: &str, prog: &str, fuse: bool) -> (RVal, String) {
+    with_fusion(fuse, || {
+        let mut s = Session::new();
+        s.eval_str(plan).unwrap_or_else(|e| panic!("{plan}: {e}"));
+        s.eval_str("futureSeed(99)").unwrap();
+        s.eval_str(fixture).unwrap();
+        let (r, out) = s.eval_captured(prog);
+        (r.unwrap_or_else(|e| panic!("{plan} / {prog}: {e}")), out)
+    })
+}
+
+const PLANS: &[&str] = &[
+    "plan(sequential)",
+    "plan(multicore, workers = 2)",
+    "plan(multisession, workers = 2)",
+    "plan(cluster, workers = c(\"n1\", \"n2\"), latency_ms = 0.1)",
+    "plan(future.batchtools::batchtools_slurm, workers = 2, poll_ms = 2)",
+];
+
+/// In-process plans, where the fusion slice counters tick in *this*
+/// process (process backends fuse inside their workers).
+const LOCAL_PLANS: &[&str] = &["plan(sequential)", "plan(multicore, workers = 2)"];
+
+#[test]
+fn elementwise_bit_identical_on_every_backend_with_nonfinite_corners() {
+    let _g = serial();
+    worker_env();
+    // Inf, -Inf, NaN, and an overflow-on-square corner ride along: the
+    // fused VM must reproduce the interpreter's f64 bits exactly.
+    let fixture = "
+        xs <- c(-1.5, 0, 0.5, 2, 1/0, -1/0, 0/0, 1e308, 3)
+        f <- function(x) 3 * x * x + 2 * x + 1
+    ";
+    let prog = "future_sapply(xs, f)";
+    for plan in PLANS {
+        let recognized_before = fusion::contexts_recognized();
+        let (fused, fused_out) = run_with(plan, fixture, prog, true);
+        assert!(
+            fusion::contexts_recognized() > recognized_before,
+            "{plan}: recognizer must match the polynomial body"
+        );
+        let (interp, interp_out) = run_with(plan, fixture, prog, false);
+        assert_eq!(bits(&fused), bits(&interp), "{plan}: value bits diverge");
+        assert_eq!(fused_out, interp_out, "{plan}: relay text diverges");
+    }
+    // On in-process plans the fused slices demonstrably ran on the
+    // kernel path, not just through an attached-but-ignored plan.
+    for plan in LOCAL_PLANS {
+        let fused_before = fusion::slices_fused();
+        run_with(plan, fixture, prog, true);
+        assert!(fusion::slices_fused() > fused_before, "{plan}: no slice fused");
+    }
+}
+
+#[test]
+fn fused_bodies_leave_seeded_rng_streams_untouched() {
+    let _g = serial();
+    worker_env();
+    // A fused map consumes no RNG; the seeded map after it must draw
+    // the exact same stream as when everything runs interpreted.
+    let fixture = "
+        xs <- c(0.5, 1.5, 2.5, 3.5)
+        f <- function(x) x * 2 + 1
+    ";
+    let prog = "
+        a <- future_sapply(xs, f)
+        b <- future_sapply(1:4, function(x) rnorm(1), future.seed = TRUE)
+        c(a, b)
+    ";
+    for plan in PLANS {
+        let (fused, _) = run_with(plan, fixture, prog, true);
+        let (interp, _) = run_with(plan, fixture, prog, false);
+        assert_eq!(bits(&fused), bits(&interp), "{plan}: RNG stream diverges");
+    }
+}
+
+#[test]
+fn depth2_nested_fused_inner_body_is_bit_identical() {
+    let _g = serial();
+    worker_env();
+    // The inner closure captures `x` from the worker-side frame; the
+    // recognizer fuses it inside the nested session at depth 2.
+    let fixture = "nothing <- 0";
+    let prog = "unlist(lapply(1:4, function(x) \
+        sum(future_sapply(1:4, function(y) y * 2.0 + x))) |> futurize())";
+    let reference = run_with("plan(sequential)", fixture, prog, false).0;
+    for plan in
+        ["plan(list(multicore(2), multicore(2)))", "plan(list(multisession(2), multicore(2)))"]
+    {
+        let fused_before = fusion::slices_fused();
+        let (fused, _) = run_with(plan, fixture, prog, true);
+        assert_eq!(bits(&fused), bits(&reference), "{plan}: depth-2 diverges");
+        // Inner slices run on multicore worker threads of this process
+        // for the first stack, so the fused counter must tick there.
+        if plan == "plan(list(multicore(2), multicore(2)))" {
+            assert!(fusion::slices_fused() > fused_before, "{plan}: inner body not fused");
+        }
+    }
+}
+
+#[test]
+fn unmatched_bodies_run_interpreted_and_counters_say_so() {
+    let _g = serial();
+    let fixture = "
+        xs <- c(1, 2, 3, 4)
+        cnt <- 0
+    ";
+    // Env mutation, a condition, and a nested closure: all outside the
+    // catalog, all must keep their interpreter semantics.
+    let cases: &[(&str, &str)] = &[
+        ("unlist(lapply(xs, function(x) { cnt <<- cnt + 1\nx * 2 }) |> futurize())", "env"),
+        ("unlist(lapply(xs, function(x) { message(\"m\")\nx * 2 }) |> futurize())", "cond"),
+        ("unlist(lapply(xs, function(x) (function(y) y + 1)(x)) |> futurize())", "closure"),
+    ];
+    let unmatched_before = fusion::contexts_unmatched();
+    let fused_before = fusion::slices_fused();
+    with_fusion(true, || {
+        for (prog, tag) in cases {
+            let mut s = Session::new();
+            s.eval_str("plan(multicore, workers = 2)").unwrap();
+            s.eval_str(fixture).unwrap();
+            let (r, out) = s.eval_captured(prog);
+            let v = r.unwrap_or_else(|e| panic!("{tag}: {e}"));
+            match *tag {
+                "closure" => assert_eq!(v.as_dbl_vec().unwrap(), vec![2.0, 3.0, 4.0, 5.0]),
+                _ => assert_eq!(v.as_dbl_vec().unwrap(), vec![2.0, 4.0, 6.0, 8.0]),
+            }
+            if *tag == "cond" {
+                assert_eq!(out.matches('m').count(), 4, "message relay must survive: {out:?}");
+            }
+        }
+    });
+    assert!(
+        fusion::contexts_unmatched() >= unmatched_before + 3,
+        "all three bodies must be rejected at freeze time"
+    );
+    assert_eq!(
+        fusion::slices_fused(),
+        fused_before,
+        "no slice of an unmatched body may touch a kernel"
+    );
+}
+
+#[test]
+fn boot_statistic_bit_identical_including_dollar_form_and_zero_denominator() {
+    let _g = serial();
+    worker_env();
+    let fixture = "
+        x <- c(120, 150, 90, 200, 75, 60, 110, 95)
+        u <- c(100, 140, 80, 180, 70, 55, 100, 90)
+        d <- list(x = x, u = u)
+        ws <- lapply(1:7, function(i) if (i == 7) c(0, 0, 0, 0, 0, 0, 0, 0) \
+          else c(i, i * 0.5, 1, 2, i * 0.25, 1, 0.5, i))
+        stat <- function(w) sum(x * w) / sum(u * w)
+        stat_d <- function(w) sum(d$x * w) / sum(d$u * w)
+    ";
+    for prog in [
+        "unlist(lapply(ws, stat) |> futurize())",
+        "unlist(lapply(ws, stat_d) |> futurize())",
+    ] {
+        for plan in PLANS {
+            let (fused, _) = run_with(plan, fixture, prog, true);
+            let (interp, _) = run_with(plan, fixture, prog, false);
+            // The all-zero weight vector makes element 7 NaN (0/0) on
+            // both paths — bit comparison is the whole point here.
+            assert!(fused.as_dbl_vec().unwrap()[6].is_nan(), "{plan}: zero-den corner lost");
+            assert_eq!(bits(&fused), bits(&interp), "{plan} / {prog}: diverges");
+        }
+    }
+    let recognized_before = fusion::contexts_recognized();
+    let fused_before = fusion::slices_fused();
+    run_with("plan(sequential)", fixture, "unlist(lapply(ws, stat) |> futurize())", true);
+    assert!(fusion::contexts_recognized() > recognized_before, "boot body must match");
+    assert!(fusion::slices_fused() > fused_before, "boot slices must fuse");
+}
+
+#[test]
+fn gram_body_bit_identical_across_backends() {
+    let _g = serial();
+    worker_env();
+    let fixture = "
+        y <- c(1, 0, 1)
+        blocks <- lapply(1:4, function(i) list(c(1, 2, 3) * i, c(0.5, -1, 2)))
+        g <- function(x) hlo_gram(x, y)
+    ";
+    let prog = "lapply(blocks, g) |> futurize()";
+    let reference = run_with("plan(sequential)", fixture, prog, false).0;
+    for plan in PLANS {
+        let (fused, _) = run_with(plan, fixture, prog, true);
+        // Nested lists of finite doubles: RVal equality is exact here.
+        assert_eq!(fused, reference, "{plan}: gram result diverges");
+    }
+    let recognized_before = fusion::contexts_recognized();
+    let fused_before = fusion::slices_fused();
+    run_with("plan(sequential)", fixture, prog, true);
+    assert!(fusion::contexts_recognized() > recognized_before, "gram body must match");
+    assert!(fusion::slices_fused() > fused_before, "gram slices must fuse");
+}
+
+#[test]
+fn kill_switch_suppresses_recognition_entirely() {
+    let _g = serial();
+    let recognized_before = fusion::contexts_recognized();
+    let unmatched_before = fusion::contexts_unmatched();
+    let fused_before = fusion::slices_fused();
+    let (v, _) = run_with(
+        "plan(multicore, workers = 2)",
+        "f <- function(x) x * 2 + 1",
+        "future_sapply(c(1.0, 2.0, 3.0), f)",
+        false,
+    );
+    assert_eq!(v.as_dbl_vec().unwrap(), vec![3.0, 5.0, 7.0]);
+    assert_eq!(fusion::contexts_recognized(), recognized_before, "kill switch leaked");
+    assert_eq!(fusion::contexts_unmatched(), unmatched_before, "disabled ≠ unmatched");
+    assert_eq!(fusion::slices_fused(), fused_before, "kill switch must stop dispatch");
+}
+
+/// Satellite: the per-worker inner-backend cache. Eight outer chunks on
+/// two multicore workers, each running a nested map under an inherited
+/// `multisession(2)` level, must spawn the inner pool once per worker
+/// thread (2 spawns each) — not once per chunk (16 spawns).
+#[test]
+fn nested_multisession_spawns_once_per_worker_not_per_chunk() {
+    let _g = serial();
+    worker_env();
+    let prog = "unlist(lapply(1:8, function(x) \
+        sum(future_sapply(1:2, function(y) y * 1.0 + x))) |> futurize(scheduling = 4))";
+    let reference = {
+        let mut s = Session::new();
+        s.eval_str("plan(sequential)").unwrap();
+        s.eval_str(prog).unwrap()
+    };
+    let spawned_before = multisession::workers_spawned();
+    let mut s = Session::new();
+    s.eval_str("plan(list(multicore(2), multisession(2)))").unwrap();
+    let v = s.eval_str(prog).unwrap();
+    assert_eq!(bits(&v), bits(&reference), "cached inner backends must not change results");
+    let spawned = multisession::workers_spawned() - spawned_before;
+    assert!(
+        (2..=4).contains(&spawned),
+        "inner multisession(2) must spawn once per outer worker \
+         (expected 2-4 worker processes, saw {spawned})"
+    );
+}

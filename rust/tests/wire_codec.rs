@@ -454,6 +454,7 @@ fn binary_shrinks_the_protocol_stream_by_3x() {
         body: ContextBody::Map { f, extra: vec![] },
         globals,
         nesting: Default::default(),
+        kernel: None,
     };
     let mut msgs_parent: Vec<ParentMsg> = vec![ParentMsg::RegisterContext(ctx)];
     let mut msgs_worker: Vec<WorkerMsg> = Vec::new();
