@@ -49,6 +49,7 @@ fn map_context(id: u64, f_src: &str, setup: &str) -> TaskContext {
         globals: vec![],
         nesting: Default::default(),
         kernel: None,
+        reduce: None,
     }
 }
 

@@ -1,0 +1,79 @@
+//! BENCH_reduce: worker-side reduction fusion (ISSUE 7).
+//!
+//! Measures the two numbers the fusion layer exists to improve, fused
+//! versus full-result path, on a real `plan(multisession, workers = 2)`
+//! session:
+//!
+//! - **result bytes per call** — the volume of `Done` frames crossing
+//!   the worker→parent process boundary (O(workers) fused, O(n) full);
+//! - **ns per element** — end-to-end map-reduce wall time.
+//!
+//! Written to `BENCH_reduce.json` (CI smoke leg uploads it as an
+//! artifact alongside BENCH_wire.json).
+
+use futurize::bench_harness as bh;
+use futurize::prelude::*;
+use futurize::transpile::fusion;
+use futurize::wire::stats;
+
+/// One mode: result bytes/call and ns/elem over `reps` fused (or full)
+/// `sum(future_sapply(...))` calls on a fresh multisession pool.
+fn measure(n: usize, reps: usize, fuse: bool) -> (f64, f64) {
+    if fuse {
+        std::env::remove_var(fusion::NO_FUSION_ENV);
+    } else {
+        std::env::set_var(fusion::NO_FUSION_ENV, "1");
+    }
+    let mut s = Session::new();
+    s.eval_str("plan(multisession, workers = 2)").unwrap();
+    s.eval_str(&format!("xs <- 1:{n}")).unwrap();
+    let prog = "sum(future_sapply(xs, function(x) x + 1, future.reduce.op = \"sum\"))";
+    // Σ(x+1) for x in 1..n — integral, so both paths are exact.
+    let want = (n * (n + 3)) as f64 / 2.0;
+    // Warmup spawns the pool and forces registry initialization.
+    assert_eq!(s.eval_str(prog).unwrap().as_f64().unwrap(), want, "fuse={fuse}");
+    stats::reset();
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let v = s.eval_str(prog).unwrap();
+        std::hint::black_box(&v);
+    }
+    let ns_per_elem = t0.elapsed().as_secs_f64() * 1e9 / (n * reps) as f64;
+    let bytes_per_call = stats::result_bytes() as f64 / reps as f64;
+    (bytes_per_call, ns_per_elem)
+}
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+    let smoke = bh::smoke_mode();
+    let (n, reps) = if smoke { (20_000, 2) } else { (100_000, 5) };
+    let mut report = bh::JsonReport::new("BENCH_reduce.json");
+    report.push_num("elems", n as f64);
+    report.push(
+        "mode",
+        futurize::wire::JsonValue::String(if smoke { "smoke" } else { "full" }.into()),
+    );
+
+    let (fused_bytes, fused_ns) = measure(n, reps, true);
+    let (full_bytes, full_ns) = measure(n, reps, false);
+    std::env::remove_var(fusion::NO_FUSION_ENV);
+
+    bh::table_header(
+        "reduction fusion: sum over 1:n, multisession workers=2",
+        &["series", "result_bytes/call", "ns/elem"],
+    );
+    bh::table_row(&["fused".into(), format!("{fused_bytes:.0}"), format!("{fused_ns:.1}")]);
+    bh::table_row(&["full".into(), format!("{full_bytes:.0}"), format!("{full_ns:.1}")]);
+
+    report.push_num("fused_result_bytes_per_call", fused_bytes);
+    report.push_num("full_result_bytes_per_call", full_bytes);
+    report.push_num("fused_ns_per_elem", fused_ns);
+    report.push_num("full_ns_per_elem", full_ns);
+    report.push_num("result_bytes_shrink", full_bytes / fused_bytes.max(1.0));
+    report.write().unwrap();
+
+    assert!(
+        fused_bytes * 10.0 < full_bytes,
+        "fused result volume must be far below the full path: {fused_bytes} vs {full_bytes}"
+    );
+}

@@ -37,6 +37,7 @@ fn protocol_stream() -> (Vec<TaskPayload>, Vec<TaskOutcome>, TaskContext) {
         )],
         nesting: Default::default(),
         kernel: None,
+        reduce: None,
     };
     let mut tasks = Vec::new();
     let mut outcomes = Vec::new();
@@ -59,6 +60,7 @@ fn protocol_stream() -> (Vec<TaskPayload>, Vec<TaskOutcome>, TaskContext) {
             started_unix: 1.769e9 + k as f64,
             finished_unix: 1.769e9 + 0.3 + k as f64,
             nested_workers: 0,
+            partial: None,
         });
     }
     (tasks, outcomes, ctx)

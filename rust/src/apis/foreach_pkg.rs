@@ -6,12 +6,13 @@
 //! mirrors `replicate()` and defaults to `seed = TRUE` when futurized.
 //! Iterators: `icount()` (position counter) and `iter(obj)`.
 
-use crate::future_core::driver::foreach_elements;
+use crate::future_core::driver::{foreach_elements_run, MapRun};
 use crate::rlite::ast::Arg;
-use crate::rlite::builtins::{Args, Reg};
+use crate::rlite::builtins::{lookup_builtin, Args, Reg};
 use crate::rlite::env::{define, Env, EnvRef};
 use crate::rlite::eval::{EvalResult, Interp, Signal};
 use crate::rlite::value::{RList, RVal};
+use crate::transpile::reduce::{self, ReducePlan, ReduceSpec};
 use crate::transpile::{options_from_value, FuturizeOptions, SeedSetting};
 
 pub fn register(r: &mut Reg) {
@@ -136,6 +137,11 @@ pub(crate) fn expand_bindings(
     }
 }
 
+/// Is `v` the genuine builtin named `name` (not a user rebinding)?
+fn is_builtin(v: &RVal, name: &str) -> bool {
+    matches!(v, RVal::Builtin(id) if lookup_builtin(name).is_some_and(|d| d.id == *id))
+}
+
 /// Reduce per-iteration results per `.combine` (default: list).
 fn reduce_combine(
     i: &mut Interp,
@@ -147,6 +153,13 @@ fn reduce_combine(
         return Ok(RVal::list(results));
     }
     if combine.is_function() {
+        // `.combine = c` used to re-copy the growing accumulator once
+        // per iteration (quadratic in the iteration count);
+        // combine_results preallocates from the known total and
+        // replays the pairwise coercion ladder exactly.
+        if is_builtin(combine, "c") {
+            return reduce::combine_results(results);
+        }
         let mut it = results.into_iter();
         let Some(mut acc) = it.next() else { return Ok(RVal::Null) };
         for r in it {
@@ -155,6 +168,24 @@ fn reduce_combine(
         return Ok(acc);
     }
     Err(Signal::error("foreach: .combine must be a function"))
+}
+
+/// Map a runtime `.combine` value onto a worker-side reduction plan.
+/// Only the genuine builtins fuse — a user-defined combine function
+/// (even one rebinding a catalog name) must see every per-iteration
+/// result, so it keeps the full-result path.
+fn combine_reduce_spec(combine: &RVal, opts: &FuturizeOptions) -> Option<ReduceSpec> {
+    if opts.reduce.as_deref() == Some("off") {
+        return None;
+    }
+    let name = ["+", "*", "min", "max", "c"].into_iter().find(|n| is_builtin(combine, n))?;
+    Some(ReduceSpec {
+        plan: ReducePlan {
+            op: reduce::ReduceOp::parse(name).expect("combine op in catalog"),
+            assoc: opts.reduce.as_deref() == Some("assoc"),
+        },
+        wrap: false,
+    })
 }
 
 /// Sequential `%do%`: body evaluated in a child of the calling
@@ -197,8 +228,16 @@ fn do_future(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
             }
         }
     }
-    let results = foreach_elements(i, env, bindings, body, &opts.to_map_options(false))?;
-    reduce_combine(i, env, results, &combine)
+    let mut map_opts = opts.to_map_options(false);
+    if map_opts.reduce.is_none() {
+        map_opts.reduce = combine_reduce_spec(&combine, &opts);
+    }
+    match foreach_elements_run(i, env, bindings, body, &map_opts)? {
+        MapRun::Values(results) => reduce_combine(i, env, results, &combine),
+        // Fused: the chunk partials were merged with the combine's own
+        // semantics; the value is already the fold result.
+        MapRun::Reduced(v) => Ok(v),
+    }
 }
 
 #[cfg(test)]

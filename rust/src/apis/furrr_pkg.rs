@@ -3,13 +3,13 @@
 //! `.options = furrr_options(...)`, furrr's own convention.
 
 use super::purrr_pkg::{Arity, VARIANTS};
-use super::{as_function, simplify_to, static_name};
-use crate::future_core::driver::map_elements;
+use super::{as_function, map_maybe_reduced, simplify_to, static_name};
+use crate::future_core::driver::{map_elements, MapRun};
 use crate::rlite::builtins::{Args, Reg};
 use crate::rlite::env::EnvRef;
 use crate::rlite::eval::{EvalResult, Interp, Signal};
 use crate::rlite::value::RVal;
-use crate::transpile::{options_from_value, FuturizeOptions};
+use crate::transpile::{apply_option_pairs, options_from_value, FuturizeOptions};
 
 pub fn register(r: &mut Reg) {
     for &(name, arity, want) in VARIANTS {
@@ -35,16 +35,20 @@ pub fn register(r: &mut Reg) {
 }
 
 /// Split off `.options` (a furrr_options object) from the arguments.
+/// The transpiler's reduction markers ride as `future.*` named
+/// arguments even on furrr targets; they merge on top of `.options`.
 fn split_options(args: &Args) -> (Vec<(Option<String>, RVal)>, FuturizeOptions) {
     let mut user = Vec::new();
     let mut opts = FuturizeOptions::default();
+    let mut markers: Vec<(String, RVal)> = Vec::new();
     for (name, v) in &args.items {
-        if name.as_deref() == Some(".options") {
-            opts = options_from_value(v);
-        } else {
-            user.push((name.clone(), v.clone()));
+        match name.as_deref() {
+            Some(".options") => opts = options_from_value(v),
+            Some(n) if n.starts_with("future.") => markers.push((n.to_string(), v.clone())),
+            _ => user.push((name.clone(), v.clone())),
         }
     }
+    apply_option_pairs(&mut opts, &markers);
     (user, opts)
 }
 
@@ -57,14 +61,15 @@ fn future_map_variant(
 ) -> EvalResult {
     let (user, opts) = split_options(&args);
     let args = Args::new(user);
-    let mopts = opts.to_map_options(false);
     match arity {
         Arity::Map1 => {
             let b = args.bind(&[".x", ".f"]);
             let x = b.req(0, ".x")?;
             let f = as_function(&b.req(1, ".f")?, env)?;
-            let results = map_elements(i, env, x.iter_elements(), &f, b.rest, &mopts)?;
-            simplify_to(results, x.element_names(), want)
+            match map_maybe_reduced(i, env, x.iter_elements(), &f, b.rest, &opts, want)? {
+                MapRun::Reduced(v) => Ok(v),
+                MapRun::Values(results) => simplify_to(results, x.element_names(), want),
+            }
         }
         Arity::Map2 => {
             let b = args.bind(&[".x", ".y", ".f"]);

@@ -6,8 +6,8 @@
 //! `future.conditions=`) — produced by the futurize transpiler's
 //! option-mapping step.
 
-use super::{as_function, simplify_to};
-use crate::future_core::driver::{foreach_elements, map_elements};
+use super::{as_function, map_maybe_reduced, simplify_to};
+use crate::future_core::driver::{foreach_elements, map_elements, MapRun};
 use crate::rlite::ast::Arg;
 use crate::rlite::builtins::{Args, Reg};
 use crate::rlite::env::EnvRef;
@@ -81,7 +81,10 @@ fn fut_apply(i: &mut Interp, args: Args, env: &EnvRef, want: &str) -> EvalResult
     let (x, f, rest) = bind2(&user, "X", "FUN");
     let x = x.ok_or_else(|| Signal::error("missing X"))?.clone();
     let f = as_function(f.ok_or_else(|| Signal::error("missing FUN"))?, env)?;
-    let results = map_elements(i, env, x.iter_elements(), &f, rest, &opts.to_map_options(false))?;
+    let results = match map_maybe_reduced(i, env, x.iter_elements(), &f, rest, &opts, want)? {
+        MapRun::Reduced(v) => return Ok(v),
+        MapRun::Values(results) => results,
+    };
     let names = x.element_names().or(match (&x, want) {
         (RVal::Chr(v), "auto") => Some(v.vals.to_vec()),
         _ => None,

@@ -20,6 +20,7 @@ pub mod future_apply;
 pub mod plyr_pkg;
 pub mod purrr_pkg;
 
+use crate::future_core::driver::MapRun;
 use crate::rlite::builtins::Reg;
 use crate::rlite::env::EnvRef;
 use crate::rlite::eval::{EvalResult, Interp, Signal};
@@ -58,6 +59,44 @@ pub(crate) fn seq_map(
         out.push(i.call_function(f, args, env)?);
     }
     Ok(out)
+}
+
+/// `map_elements` with the transpiler's fused-reduction markers
+/// honored: when `opts` carries a recognized reduction and the kept
+/// outer call's symbol still resolves to the genuine builtin, workers
+/// fold their slices and the merged aggregate comes back packaged for
+/// that outer call — wrapped in a length-1 list for the `Reduce(f, ...)`
+/// form (whose fold over one element is the identity), or as a dummy
+/// vector of the exact result length for `length()`. `want` is the
+/// caller's simplification mode; only `"auto"` (sapply-style) applies
+/// the column-flattening rule the `length()` merge state replays.
+pub(crate) fn map_maybe_reduced(
+    i: &mut Interp,
+    env: &EnvRef,
+    items: Vec<RVal>,
+    f: &RVal,
+    extra: Vec<(Option<String>, RVal)>,
+    opts: &crate::transpile::FuturizeOptions,
+    want: &str,
+) -> Result<MapRun, Signal> {
+    use crate::transpile::reduce::{self, ReduceOp};
+    let n_items = items.len();
+    let mut mopts = opts.to_map_options(false);
+    if mopts.reduce.is_some_and(|spec| reduce::shadowed(env, &spec)) {
+        mopts.reduce = None;
+    }
+    let run = crate::future_core::driver::map_elements_run(i, env, items, f, extra, &mopts)?;
+    let Some(spec) = mopts.reduce else { return Ok(run) };
+    Ok(match run {
+        MapRun::Reduced(v) if spec.wrap => MapRun::Reduced(RVal::list(vec![v])),
+        MapRun::Reduced(_) if spec.plan.op == ReduceOp::Count && want != "auto" => {
+            // Non-simplifying targets (lapply/map/map_dbl): the length
+            // is always the element count; the merge-state dummy
+            // replays sapply's simplify rule instead.
+            MapRun::Reduced(RVal::Int(crate::rlite::value::RVec::plain(vec![0; n_items])))
+        }
+        other => other,
+    })
 }
 
 /// Resolve a function argument (closure, builtin, or name) — `match.fun`.

@@ -150,6 +150,7 @@ impl BatchtoolsSimBackend {
                                     started_unix: now,
                                     finished_unix: now,
                                     nested_workers: 0,
+                                    partial: None,
                                 }));
                             };
                             let bytes = match std::fs::read(&claimed_in) {

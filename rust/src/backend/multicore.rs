@@ -221,6 +221,7 @@ mod tests {
             globals: vec![],
             nesting: Default::default(),
             kernel: None,
+            reduce: None,
         }))
         .unwrap();
         b.submit(TaskPayload {

@@ -159,6 +159,11 @@ fn spawn_worker(
             };
             match codec.decode::<WorkerMsg>(&frame) {
                 Ok(msg) => {
+                    if matches!(msg, WorkerMsg::Done(_)) {
+                        // Result-volume accounting: fused reductions
+                        // assert these frames stay O(workers), not O(n).
+                        crate::wire::stats::record_result(frame.len());
+                    }
                     if tx.send((idx, gen, PipeEvent::Msg(msg))).is_err() {
                         return;
                     }

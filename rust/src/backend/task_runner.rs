@@ -176,6 +176,26 @@ pub fn run_task(
     // before the interpreter drops — the next task with the same
     // inherited stack picks it up via `lend`.
     crate::backend::inner_cache::restore(&mut interp.session);
+    // Worker-side reduction fusion: when the context carries a plan and
+    // the slice passed the plan's exactness gate, ship a constant-size
+    // partial aggregate instead of the O(slice) values. A gate miss
+    // ships the full values — the parent folds them with the exact
+    // sequential semantics, so the result is identical either way.
+    let mut partial = None;
+    let result = match (ctx.and_then(|c| c.reduce), result) {
+        (Some(plan), Ok(vals)) => match crate::transpile::reduce::fold_slice(&plan, &vals) {
+            Some(p) => {
+                crate::transpile::reduce::note_slice_folded();
+                partial = Some(p);
+                Ok(vec![])
+            }
+            None => {
+                crate::transpile::reduce::note_slice_fallback();
+                Ok(vals)
+            }
+        },
+        (_, r) => r,
+    };
     TaskOutcome {
         id: payload.id,
         values: result,
@@ -184,6 +204,7 @@ pub fn run_task(
         started_unix: started,
         finished_unix: crate::future_core::driver::now_unix(),
         nested_workers,
+        partial,
     }
 }
 
@@ -510,6 +531,7 @@ mod tests {
             globals: vec![],
             nesting: Default::default(),
             kernel: None,
+            reduce: None,
         }
     }
 
@@ -691,6 +713,7 @@ mod tests {
                     root_seed: 42,
                 },
                 kernel: None,
+                reduce: None,
             }
         };
         let t = TaskPayload {

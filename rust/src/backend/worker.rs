@@ -203,6 +203,7 @@ mod tests {
             )],
             nesting: Default::default(),
             kernel: None,
+            reduce: None,
         };
         for codec in [WireCodec::Binary, WireCodec::Json] {
             let bytes = codec.encode(&ParentMsg::RegisterContext(ctx.clone())).unwrap();
@@ -233,6 +234,7 @@ mod tests {
             )],
             nesting: Default::default(),
             kernel: None,
+            reduce: None,
         };
         for codec in [WireCodec::Binary, WireCodec::Json] {
             let owned = codec.encode(&ParentMsg::RegisterContext(ctx.clone())).unwrap();

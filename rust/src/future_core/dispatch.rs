@@ -35,7 +35,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use super::driver::{now_unix, MapOptions, SeedOption};
+use super::driver::{now_unix, MapOptions, MapRun, SeedOption};
 use super::{ContextBody, TaskContext, TaskKind, TaskOutcome, TaskPayload, TraceEvent};
 use crate::backend::BackendEvent;
 use crate::rlite::conditions::RCondition;
@@ -44,6 +44,7 @@ use crate::rlite::serialize::{from_wire_owned, WireSlice, WireVal};
 use crate::rlite::value::RVal;
 use crate::rng::RngState;
 use crate::scheduling::make_chunks;
+use crate::transpile::reduce::ReduceState;
 
 /// The per-element inputs of one map call, frozen once behind an `Arc`
 /// and sliced into chunk payloads on demand (at submit time, not
@@ -132,8 +133,24 @@ pub struct FutureSet {
     /// the `futurize(retries = N)` budget is per chunk, so one flaky
     /// worker can't starve an unrelated straggler of its retries.
     attempts: HashMap<usize, u32>,
+    /// Parent half of the fused-reduction combine tree, present iff the
+    /// context carries a [`ReducePlan`](crate::transpile::reduce::ReducePlan).
+    reduce_state: Option<ReduceState>,
+    /// Per-chunk reduction contributions, parked until their
+    /// chunk-ordered fold turn in [`FutureSet::relay_ready`].
+    reduce_pending: HashMap<usize, Contribution>,
     trace: Vec<TraceEvent>,
     t0: f64,
+}
+
+/// One chunk's contribution to a fused reduction: a worker-folded
+/// partial aggregate, or the full slice values when the slice failed
+/// the plan's exactness gate. Folding happens in the ordered relay —
+/// exactly once per chunk index, which also makes retried chunks count
+/// once (only the winning resubmission's outcome is ever absorbed).
+enum Contribution {
+    Partial { value: RVal, n: u64, m: u64 },
+    Values(Vec<RVal>),
 }
 
 impl FutureSet {
@@ -148,6 +165,7 @@ impl FutureSet {
         let n = source.len();
         let chunks = make_chunks(n, workers, &opts.policy);
         let cap = opts.policy.in_flight_cap(workers);
+        let reduce_state = ctx.reduce.map(ReduceState::new);
         FutureSet {
             ctx,
             source,
@@ -165,6 +183,8 @@ impl FutureSet {
             error_seen: false,
             cancelled: false,
             attempts: HashMap::new(),
+            reduce_state,
+            reduce_pending: HashMap::new(),
             trace: Vec::new(),
             t0: now_unix(),
         }
@@ -174,14 +194,17 @@ impl FutureSet {
     /// the shared context, stream chunks under backpressure, reduce
     /// outcomes incrementally, and fail fast on worker errors when
     /// `stop_on_error` is set. Returns per-element values in input
-    /// order.
-    pub fn run(mut self, i: &mut Interp, opts: &MapOptions) -> Result<Vec<RVal>, Signal> {
+    /// order — or the folded aggregate when the context carries a
+    /// reduction plan.
+    pub fn run(mut self, i: &mut Interp, opts: &MapOptions) -> Result<MapRun, Signal> {
         let n = self.source.len();
         if n == 0 {
             // No chunks ran: the trace of this call is empty, not the
-            // previous call's.
+            // previous call's. An empty input never reduces worker-side
+            // (there is nothing to fold); callers apply the operation's
+            // empty-case identity themselves.
             i.session.last_trace.clear();
-            return Ok(vec![]);
+            return Ok(MapRun::Values(vec![]));
         }
         {
             let backend = i.session.backend().map_err(Signal::error)?;
@@ -212,11 +235,17 @@ impl FutureSet {
             // below if that invariant is ever broken.
             return Err(Signal::error("a future failed but its error was lost"));
         }
-        Ok(self
-            .out
-            .into_iter()
-            .map(|v| v.expect("all elements resolved"))
-            .collect())
+        if let Some(state) = self.reduce_state.take() {
+            // Reduce mode: per-element slots were never filled; the
+            // ordered relay folded every chunk's contribution already.
+            return Ok(MapRun::Reduced(state.finish()?));
+        }
+        Ok(MapRun::Values(
+            self.out
+                .into_iter()
+                .map(|v| v.expect("all elements resolved"))
+                .collect(),
+        ))
     }
 
     /// The event loop: fill the in-flight window, consume one event,
@@ -334,6 +363,7 @@ impl FutureSet {
                 started_unix: now,
                 finished_unix: now,
                 nested_workers: 0,
+                partial: None,
             },
         );
         self.relay_ready(i, opts)
@@ -434,11 +464,29 @@ impl FutureSet {
         // Values are taken out of the outcome (relay only needs the log
         // and the error case), so the decoded buffers *move* into the
         // result vector — zero re-copies on the in-process fast path.
+        // In reduce mode the chunk's contribution (a worker-folded
+        // partial, or full values when the exactness gate rejected the
+        // slice) is parked instead, to be folded in chunk order by the
+        // relay below.
         let mut outcome = outcome;
         match std::mem::replace(&mut outcome.values, Ok(vec![])) {
             Ok(vals) => {
-                for (k, w) in vals.into_iter().enumerate() {
-                    self.out[start + k] = Some(from_wire_owned(w, &i.global));
+                if self.reduce_state.is_some() {
+                    let contrib = match outcome.partial.take() {
+                        Some(p) => Contribution::Partial {
+                            value: from_wire_owned(p.value, &i.global),
+                            n: p.n,
+                            m: p.m,
+                        },
+                        None => Contribution::Values(
+                            vals.into_iter().map(|w| from_wire_owned(w, &i.global)).collect(),
+                        ),
+                    };
+                    self.reduce_pending.insert(chunk_idx, contrib);
+                } else {
+                    for (k, w) in vals.into_iter().enumerate() {
+                        self.out[start + k] = Some(from_wire_owned(w, &i.global));
+                    }
                 }
             }
             Err(cond) => {
@@ -454,7 +502,22 @@ impl FutureSet {
     /// have all been relayed.
     fn relay_ready(&mut self, i: &mut Interp, opts: &MapOptions) -> Result<(), Signal> {
         while let Some(outcome) = self.pending_relay.remove(&self.relay_cursor) {
+            let chunk_idx = self.relay_cursor;
             self.relay_cursor += 1;
+            // Fold this chunk's reduction contribution now, in chunk
+            // order — the fold visits each chunk index exactly once, so
+            // a resubmitted chunk can never double-count its partial.
+            if let Some(state) = self.reduce_state.as_mut() {
+                match self.reduce_pending.remove(&chunk_idx) {
+                    Some(Contribution::Partial { value, n, m }) => {
+                        state.push_partial(value, n, m)?;
+                    }
+                    Some(Contribution::Values(vals)) => state.push_values(&vals)?,
+                    // Error chunks contribute nothing; the error itself
+                    // surfaces through first_error below.
+                    None => {}
+                }
+            }
             if opts.stdout || opts.conditions {
                 let mut log = outcome.log.clone();
                 if !opts.stdout {
@@ -559,18 +622,28 @@ pub fn run_map(
     globals: Vec<(String, WireVal)>,
     seeds: Option<Vec<RngState>>,
     opts: &MapOptions,
-) -> Result<Vec<RVal>, Signal> {
+) -> Result<MapRun, Signal> {
     let nesting = i.session.nesting_for_context();
     // Freeze-time kernel recognition: matched bodies ship a fused plan
     // with the context; `FUTURIZE_NO_FUSION=1` suppresses it here, in
-    // the parent, so the switch reaches process backends too.
+    // the parent, so the switch reaches process backends too. The same
+    // switch governs reduction fusion: with it off the plan is never
+    // attached and every chunk ships its full values.
     let kernel = crate::transpile::fusion::maybe_recognize(&f, &extra, &globals);
+    let reduce = opts
+        .reduce
+        .filter(|_| crate::transpile::fusion::enabled())
+        .map(|spec| spec.plan);
+    if reduce.is_some() {
+        crate::transpile::reduce::note_plan_attached();
+    }
     let ctx = Arc::new(TaskContext {
         id: i.session.fresh_context_id(),
         body: ContextBody::Map { f, extra },
         globals,
         nesting,
         kernel,
+        reduce,
     });
     let workers = i.session.workers();
     let time_scale = i.config.time_scale;
@@ -586,14 +659,22 @@ pub fn run_foreach(
     globals: Vec<(String, WireVal)>,
     seeds: Option<Vec<RngState>>,
     opts: &MapOptions,
-) -> Result<Vec<RVal>, Signal> {
+) -> Result<MapRun, Signal> {
     let nesting = i.session.nesting_for_context();
+    let reduce = opts
+        .reduce
+        .filter(|_| crate::transpile::fusion::enabled())
+        .map(|spec| spec.plan);
+    if reduce.is_some() {
+        crate::transpile::reduce::note_plan_attached();
+    }
     let ctx = Arc::new(TaskContext {
         id: i.session.fresh_context_id(),
         body: ContextBody::Foreach { body },
         globals,
         nesting,
         kernel: None,
+        reduce,
     });
     let workers = i.session.workers();
     let time_scale = i.config.time_scale;

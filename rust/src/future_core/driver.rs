@@ -24,6 +24,7 @@ use crate::rlite::serialize::{to_wire, WireVal};
 use crate::rlite::value::RVal;
 use crate::rng::{make_streams, RngState};
 use crate::scheduling::ChunkPolicy;
+use crate::transpile::reduce::ReduceSpec;
 
 /// Execution options distilled from `futurize()`'s unified surface.
 #[derive(Clone, Debug)]
@@ -43,6 +44,10 @@ pub struct MapOptions {
     /// fast, matching R future's unreliable-worker behaviour; rush-style
     /// bounded retry is opt-in via `futurize(retries = N)`.
     pub retries: u32,
+    /// Fused-reduction request: the map's results feed a recognized
+    /// reduction, so workers should fold slices locally and the
+    /// dispatch core should merge the partials ([`MapRun::Reduced`]).
+    pub reduce: Option<ReduceSpec>,
 }
 
 impl Default for MapOptions {
@@ -54,8 +59,17 @@ impl Default for MapOptions {
             conditions: true,
             stop_on_error: false,
             retries: 0,
+            reduce: None,
         }
     }
+}
+
+/// The outcome of one map run: per-element values in input order, or —
+/// when a reduction plan rode the context — the merged reduced value.
+#[derive(Debug)]
+pub enum MapRun {
+    Values(Vec<RVal>),
+    Reduced(RVal),
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -69,19 +83,37 @@ pub enum SeedOption {
 }
 
 /// Apply `f(item, extra...)` to every element, concurrently per the
-/// current plan. Returns per-element results in input order.
+/// current plan. Returns per-element results in input order; any
+/// reduction request in `opts` is ignored.
 pub fn map_elements(
+    i: &mut Interp,
+    env: &EnvRef,
+    items: Vec<RVal>,
+    f: &RVal,
+    extra: Vec<(Option<String>, RVal)>,
+    opts: &MapOptions,
+) -> Result<Vec<RVal>, Signal> {
+    let opts = MapOptions { reduce: None, ..opts.clone() };
+    match map_elements_run(i, env, items, f, extra, &opts)? {
+        MapRun::Values(v) => Ok(v),
+        MapRun::Reduced(_) => unreachable!("no reduction was requested"),
+    }
+}
+
+/// As [`map_elements`], but honouring [`MapOptions::reduce`]: with a
+/// reduction plan attached the run yields [`MapRun::Reduced`].
+pub fn map_elements_run(
     i: &mut Interp,
     _env: &EnvRef,
     items: Vec<RVal>,
     f: &RVal,
     extra: Vec<(Option<String>, RVal)>,
     opts: &MapOptions,
-) -> Result<Vec<RVal>, Signal> {
+) -> Result<MapRun, Signal> {
     let n = items.len();
     if n == 0 {
         i.session.last_trace.clear();
-        return Ok(vec![]);
+        return Ok(MapRun::Values(vec![]));
     }
     let f_wire = to_wire(f).map_err(Signal::error)?;
     // Consuming conversion: per-element scalars are uniquely owned, so
@@ -100,9 +132,8 @@ pub fn map_elements(
 }
 
 /// Foreach-style execution: per element, bind iteration variables then
-/// evaluate `body`. `globals` are the free variables of `body` minus the
-/// binding names, resolved in `env` and shipped once in the shared
-/// context.
+/// evaluate `body`. Returns per-element results in input order; any
+/// reduction request in `opts` is ignored.
 pub fn foreach_elements(
     i: &mut Interp,
     env: &EnvRef,
@@ -110,10 +141,27 @@ pub fn foreach_elements(
     body: &Expr,
     opts: &MapOptions,
 ) -> Result<Vec<RVal>, Signal> {
+    let opts = MapOptions { reduce: None, ..opts.clone() };
+    match foreach_elements_run(i, env, bindings, body, &opts)? {
+        MapRun::Values(v) => Ok(v),
+        MapRun::Reduced(_) => unreachable!("no reduction was requested"),
+    }
+}
+
+/// As [`foreach_elements`], but honouring [`MapOptions::reduce`]:
+/// `globals` are the free variables of `body` minus the binding names,
+/// resolved in `env` and shipped once in the shared context.
+pub fn foreach_elements_run(
+    i: &mut Interp,
+    env: &EnvRef,
+    bindings: Vec<Vec<(String, RVal)>>,
+    body: &Expr,
+    opts: &MapOptions,
+) -> Result<MapRun, Signal> {
     let n = bindings.len();
     if n == 0 {
         i.session.last_trace.clear();
-        return Ok(vec![]);
+        return Ok(MapRun::Values(vec![]));
     }
     // Globals: free vars of body minus per-iteration bindings.
     let bound: Vec<&str> = bindings[0].iter().map(|(k, _)| k.as_str()).collect();

@@ -95,6 +95,13 @@ pub struct TaskContext {
     /// the parent, which is what makes the kill switch effective across
     /// process backends without respawning workers.
     pub kernel: Option<crate::transpile::fusion::KernelPlan>,
+    /// Fused-reduction plan: the map's results feed a recognized
+    /// reduction, so workers fold each slice locally and ship a
+    /// constant-size partial aggregate instead of per-element results.
+    /// Attached only when the dispatch-time kill switch allows it, so
+    /// `FUTURIZE_NO_FUSION=1` keeps the full-result path without
+    /// respawning workers.
+    pub reduce: Option<crate::transpile::reduce::ReducePlan>,
 }
 
 /// How a [`TaskContext`]'s tasks relate to the session's plan stack.
@@ -169,6 +176,13 @@ pub struct TaskOutcome {
     /// into [`TraceEvent::inner_workers`] so outer×inner effective
     /// parallelism is observable from the parent's trace.
     pub nested_workers: usize,
+    /// Worker-side folded partial aggregate for a slice of a context
+    /// with a [`ReducePlan`](crate::transpile::reduce::ReducePlan).
+    /// When set, `values` is `Ok(vec![])` — the O(n) per-element results
+    /// never cross the wire. `None` on a reduce-planned context means
+    /// the slice's values failed the plan's exactness gate and shipped
+    /// in full (the parent folds them in chunk order instead).
+    pub partial: Option<crate::transpile::reduce::ReducePartial>,
 }
 
 /// Build the `FutureError`-style condition raised when a worker dies
@@ -1024,6 +1038,7 @@ mod tests {
             started_unix: 0.0,
             finished_unix: 0.0,
             nested_workers: 0,
+            partial: None,
         };
         let mut l = PendingLedger::default();
         l.expect(1); // a future() placeholder

@@ -435,18 +435,37 @@ impl KernelPlan {
             KernelKind::Elementwise { prog } => {
                 let mut out = Vec::with_capacity(items.len());
                 let mut stack = Vec::with_capacity(elementwise::max_depth(prog));
+                // A program that never reads the element is a constant:
+                // the interpreter returns a scalar for it, so mapping it
+                // over a vector item would change the result length.
+                let uses_elem = prog.iter().any(|op| matches!(op, ElemOp::Par));
                 for item in items.iter() {
-                    // Unnamed scalars only: names would propagate
-                    // through the interpreter, vectors would map
-                    // elementwise, and a bare-Int identity body would
-                    // return Int verbatim (prog.len() > 1 guarantees a
-                    // root operation, which always produces unnamed Dbl).
-                    let x = match item {
-                        WireVal::Dbl(v, None) if v.len() == 1 => v[0],
-                        WireVal::Int(v, None) if v.len() == 1 && prog.len() > 1 => v[0] as f64,
+                    // Unnamed numeric only: names would propagate
+                    // through the interpreter, and a bare-Int identity
+                    // body would return Int verbatim (prog.len() > 1
+                    // guarantees a root operation, which always produces
+                    // unnamed Dbl). Vector items run the program per
+                    // component — exactly the interpreter's recycling
+                    // binops and vectorized unary builtins, since every
+                    // non-element operand is a scalar constant.
+                    let vec_ok = |len: usize| uses_elem || len == 1;
+                    match item {
+                        WireVal::Dbl(v, None) if vec_ok(v.len()) => {
+                            out.push(WireVal::Dbl(
+                                v.iter().map(|&x| elementwise::eval(prog, x, &mut stack)).collect(),
+                                None,
+                            ));
+                        }
+                        WireVal::Int(v, None) if vec_ok(v.len()) && prog.len() > 1 => {
+                            out.push(WireVal::Dbl(
+                                v.iter()
+                                    .map(|&x| elementwise::eval(prog, x as f64, &mut stack))
+                                    .collect(),
+                                None,
+                            ));
+                        }
                         _ => return None,
-                    };
-                    out.push(WireVal::Dbl(vec![elementwise::eval(prog, x, &mut stack)], None));
+                    }
                 }
                 Some(out)
             }
@@ -577,9 +596,32 @@ mod tests {
     }
 
     #[test]
-    fn elementwise_gate_rejects_non_scalar_items() {
+    fn elementwise_maps_vector_items_per_component() {
         let plan = rec("function(x) x * 2 + 1", &[]).unwrap();
-        assert!(plan.run_slice(&vec![dbl(&[1.0, 2.0])].into()).is_none(), "vector item");
+        // Numeric vector items run the program per component, exactly
+        // like the interpreter's recycling binops.
+        let out = plan.run_slice(&vec![dbl(&[1.0, 2.0]), dbl(&[])].into()).unwrap();
+        assert_eq!(out, vec![dbl(&[3.0, 5.0]), dbl(&[])]);
+        let out = plan.run_slice(&vec![WireVal::Int(vec![1, 2, 3], None)].into()).unwrap();
+        assert_eq!(out, vec![dbl(&[3.0, 5.0, 7.0])]);
+        // The identity program must keep Int vectors on the interpreted
+        // path (they would come back Int verbatim, not Dbl).
+        let ident = rec("function(x) x", &[]).unwrap();
+        assert!(ident.run_slice(&vec![WireVal::Int(vec![1, 2], None)].into()).is_none());
+        assert_eq!(
+            ident.run_slice(&vec![dbl(&[1.0, 2.0])].into()).unwrap(),
+            vec![dbl(&[1.0, 2.0])]
+        );
+        // A constant body returns a scalar whatever the element length:
+        // vector items must not broadcast it.
+        let konst = rec("function(x) 1 + 1", &[]).unwrap();
+        assert!(konst.run_slice(&vec![dbl(&[1.0, 2.0])].into()).is_none());
+        assert_eq!(konst.run_slice(&vec![dbl(&[9.0])].into()).unwrap(), vec![dbl(&[2.0])]);
+    }
+
+    #[test]
+    fn elementwise_gate_rejects_non_numeric_items() {
+        let plan = rec("function(x) x * 2 + 1", &[]).unwrap();
         let named = WireVal::Dbl(vec![1.0], Some(vec!["n".into()]));
         assert!(plan.run_slice(&vec![named].into()).is_none(), "named item");
         assert!(

@@ -25,6 +25,7 @@
 //! place*, preserving the wrappers.
 
 pub mod fusion;
+pub mod reduce;
 pub mod registry;
 
 use std::collections::HashMap;
@@ -64,6 +65,18 @@ pub struct FuturizeOptions {
     pub packages: Vec<String>,
     /// `eval = FALSE`: return the transpiled call unevaluated (deparsed).
     pub eval: bool,
+    /// Reduction-fusion mode: `"exact"` (default — only
+    /// reassociation-exact combines fold worker-side), `"assoc"`
+    /// (accept reassociated floating-point folding, documented ULP
+    /// contract), `"off"` (never fold worker-side).
+    pub reduce: Option<String>,
+    /// The recognized reduction head/combine symbol (set by the
+    /// transpiler's enclosing-call recognition, carried to the target
+    /// API as `future.reduce.op`).
+    pub reduce_op: Option<String>,
+    /// `Reduce(f, <map>)` form: the fused result must come back wrapped
+    /// in a length-1 list so the kept outer `Reduce` is an identity.
+    pub reduce_wrap: bool,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -87,6 +100,9 @@ impl Default for FuturizeOptions {
             globals: None,
             packages: vec![],
             eval: true,
+            reduce: None,
+            reduce_op: None,
+            reduce_wrap: false,
         }
     }
 }
@@ -123,7 +139,21 @@ impl FuturizeOptions {
             conditions: self.conditions.unwrap_or(true),
             stop_on_error: self.stop_on_error.unwrap_or(false),
             retries: self.retries.unwrap_or(0),
+            reduce: self.reduce_spec(),
         }
+    }
+
+    /// The reduction-fusion request distilled from the recognized op
+    /// marker and the user's `reduce =` mode.
+    pub fn reduce_spec(&self) -> Option<reduce::ReduceSpec> {
+        if self.reduce.as_deref() == Some("off") {
+            return None;
+        }
+        let op = reduce::ReduceOp::parse(self.reduce_op.as_deref()?)?;
+        Some(reduce::ReduceSpec {
+            plan: reduce::ReducePlan { op, assoc: self.reduce.as_deref() == Some("assoc") },
+            wrap: self.reduce_wrap,
+        })
     }
 }
 
@@ -206,6 +236,14 @@ fn parse_options(i: &mut Interp, args: &[Arg], env: &EnvRef) -> Result<FuturizeO
             "globals" => o.globals = Some(v.as_bool().map_err(Signal::error)?),
             "packages" => o.packages = v.as_str_vec().map_err(Signal::error)?,
             "eval" => o.eval = v.as_bool().map_err(Signal::error)?,
+            "reduce" => match v.as_str().ok().as_deref() {
+                Some(m @ ("exact" | "assoc" | "off")) => o.reduce = Some(m.to_string()),
+                other => {
+                    return Err(Signal::error(format!(
+                        "futurize: reduce must be \"exact\", \"assoc\" or \"off\", got {other:?}"
+                    )))
+                }
+            },
             other => {
                 return Err(Signal::error(format!("futurize: unknown option '{other}'")))
             }
@@ -221,6 +259,14 @@ const UNWRAPPABLE: &[&str] =
 /// Transpile `expr`, descending through wrapper constructs and rewriting
 /// the innermost transpilable call in place.
 pub fn transpile_expr(expr: &Expr, opts: &FuturizeOptions) -> Result<Expr, String> {
+    // Enclosing-reduction recognition: `sum(lapply(...))`,
+    // `Reduce(min, lapply(...))` and friends futurize the inner map and
+    // mark it with the reduction so workers can fold slices locally
+    // (`reduce = "off"` still transpiles this way — the marker is
+    // ignored at dispatch time).
+    if let Some(rewritten) = transpile_reduction(expr, opts)? {
+        return Ok(rewritten);
+    }
     // Direct hit?
     if let Some(t) = lookup_transpiler(expr) {
         return t(expr, opts);
@@ -255,6 +301,85 @@ pub fn transpile_expr(expr: &Expr, opts: &FuturizeOptions) -> Result<Expr, Strin
             }
         }
         other => Err(format!("futurize: cannot futurize expression: {}", deparse(other))),
+    }
+}
+
+/// Reduction heads recognized over a transpilable map call. The outer
+/// call is *kept* in the rewritten source — it normalizes the fused
+/// partial exactly (`sum` of a folded scalar is that scalar; `length`
+/// measures the dummy) and provides the exact legacy semantics whenever
+/// the map falls back to shipping full results.
+const REDUCE_HEADS: &[&str] = &["sum", "prod", "mean", "min", "max", "any", "all", "length"];
+
+/// Pairwise folds recognized in the `Reduce(f, <map>)` form.
+const REDUCE_FOLDS: &[&str] = &["+", "*", "min", "max", "c"];
+
+/// Map heads whose futurized targets understand the reduction markers.
+const REDUCIBLE_MAPS: &[&str] = &["lapply", "sapply", "map", "map_dbl"];
+
+/// Recognize a reduction enclosing a transpilable map call and rewrite
+/// the inner map with `future.reduce.*` markers, keeping the enclosing
+/// call in place. Returns `None` when `expr` is not such a shape.
+fn transpile_reduction(expr: &Expr, opts: &FuturizeOptions) -> Result<Option<Expr>, String> {
+    let Expr::Call { func, args } = expr else { return Ok(None) };
+    let Expr::Sym(head) = func.as_ref() else { return Ok(None) };
+
+    // sum(<map>) / sum(unlist(<map>)) and friends.
+    if REDUCE_HEADS.contains(&head.as_str()) && args.len() == 1 && args[0].name.is_none() {
+        // Descend through an `unlist()` wrapper (kept, like the head).
+        let (map_expr, through_unlist) = match &args[0].value {
+            Expr::Call { func: f2, args: a2 }
+                if matches!(f2.as_ref(), Expr::Sym(s) if s == "unlist")
+                    && a2.len() == 1
+                    && a2[0].name.is_none() =>
+            {
+                (&a2[0].value, true)
+            }
+            v => (v, false),
+        };
+        if !is_reducible_map(map_expr) {
+            return Ok(None);
+        }
+        let mut inner = transpile_expr(map_expr, opts)?;
+        push_reduce_markers(&mut inner, head, false);
+        let body =
+            if through_unlist { Expr::call("unlist", vec![Arg::pos(inner)]) } else { inner };
+        return Ok(Some(Expr::Call { func: func.clone(), args: vec![Arg::pos(body)] }));
+    }
+
+    // Reduce(f, <map>) with a recognized fold symbol and no init/
+    // accumulate arguments. The outer `Reduce` is kept: the fused path
+    // hands it the folded value wrapped in a length-1 list (a single
+    // element is returned verbatim), while fallback paths hand it the
+    // full result list for the exact legacy fold — including when `f`
+    // was shadowed by a user function.
+    if head.as_str() == "Reduce" && args.len() == 2 && args.iter().all(|a| a.name.is_none()) {
+        let Expr::Sym(op) = &args[0].value else { return Ok(None) };
+        if !REDUCE_FOLDS.contains(&op.as_str()) || !is_reducible_map(&args[1].value) {
+            return Ok(None);
+        }
+        let mut inner = transpile_expr(&args[1].value, opts)?;
+        push_reduce_markers(&mut inner, op, true);
+        return Ok(Some(Expr::Call {
+            func: func.clone(),
+            args: vec![args[0].clone(), Arg::pos(inner)],
+        }));
+    }
+
+    Ok(None)
+}
+
+fn is_reducible_map(expr: &Expr) -> bool {
+    matches!(expr.call_name(), Some(n) if REDUCIBLE_MAPS.contains(&n))
+        && lookup_transpiler(expr).is_some()
+}
+
+fn push_reduce_markers(call: &mut Expr, op: &str, wrap: bool) {
+    if let Expr::Call { args, .. } = call {
+        args.push(Arg::named("future.reduce.op", Expr::Str(op.to_string())));
+        if wrap {
+            args.push(Arg::named("future.reduce.wrap", Expr::Bool(true)));
+        }
     }
 }
 
@@ -350,6 +475,9 @@ pub(crate) fn future_dot_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     if !opts.packages.is_empty() {
         args.push(Arg::named("future.packages", packages_expr(&opts.packages)));
     }
+    if let Some(r) = &opts.reduce {
+        args.push(Arg::named("future.reduce", Expr::Str(r.clone())));
+    }
 }
 
 /// Append `.options = furrr_options(...)` (furrr's convention).
@@ -381,6 +509,9 @@ pub(crate) fn furrr_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     }
     if !opts.packages.is_empty() {
         inner.push(Arg::named("packages", packages_expr(&opts.packages)));
+    }
+    if let Some(r) = &opts.reduce {
+        inner.push(Arg::named("reduce", Expr::Str(r.clone())));
     }
     if !inner.is_empty() {
         args.push(Arg::named(".options", Expr::ns_call("furrr", "furrr_options", inner)));
@@ -417,6 +548,9 @@ pub(crate) fn dofuture_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) 
     }
     if !opts.packages.is_empty() {
         inner.push(Arg::named("packages", packages_expr(&opts.packages)));
+    }
+    if let Some(r) = &opts.reduce {
+        inner.push(Arg::named("reduce", Expr::Str(r.clone())));
     }
     if !inner.is_empty() {
         args.push(Arg::named(".options.future", Expr::call("list", inner)));
@@ -470,6 +604,14 @@ fn packages_expr(pkgs: &[String]) -> Expr {
 /// `.options.future`, the domains' `.futurize_opts`).
 pub fn options_from_pairs(pairs: &[(String, RVal)]) -> FuturizeOptions {
     let mut o = FuturizeOptions::default();
+    apply_option_pairs(&mut o, pairs);
+    o
+}
+
+/// Fold option pairs into existing options — for callers with two
+/// option channels (furrr's `.options` list plus the transpiler's
+/// `future.reduce.*` marker arguments).
+pub fn apply_option_pairs(o: &mut FuturizeOptions, pairs: &[(String, RVal)]) {
     for (name, v) in pairs {
         let key = name.trim_start_matches("future.").replace(['.', '-'], "_");
         match key.as_str() {
@@ -491,10 +633,12 @@ pub fn options_from_pairs(pairs: &[(String, RVal)]) -> FuturizeOptions {
             "stop_on_error" => o.stop_on_error = v.as_bool().ok(),
             "retries" => o.retries = v.as_usize().ok().map(|n| n as u32),
             "packages" => o.packages = v.as_str_vec().unwrap_or_default(),
+            "reduce" => o.reduce = v.as_str().ok(),
+            "reduce_op" => o.reduce_op = v.as_str().ok(),
+            "reduce_wrap" => o.reduce_wrap = v.as_bool().unwrap_or(false),
             _ => {}
         }
     }
-    o
 }
 
 /// Extract option pairs from a named-list RVal (furrr_options result,
@@ -678,5 +822,68 @@ mod tests {
     fn parse_expr_roundtrip_of_transpiled_output() {
         let got = transpiled_with("lapply(xs, fcn)", "seed = TRUE");
         assert!(parse_expr(&got).is_ok(), "{got}");
+    }
+
+    #[test]
+    fn reduction_heads_futurize_the_inner_map() {
+        let got = transpiled("sum(lapply(xs, fcn))");
+        assert_eq!(
+            got,
+            "sum(future.apply::future_lapply(xs, fcn, future.reduce.op = \"sum\"))"
+        );
+        let got = transpiled("mean(unlist(sapply(xs, fcn)))");
+        assert!(got.starts_with("mean(unlist(future.apply::future_sapply("), "{got}");
+        assert!(got.contains("future.reduce.op = \"mean\""), "{got}");
+        let got = transpiled("length(map(xs, fcn))");
+        assert!(got.contains("future.reduce.op = \"length\""), "{got}");
+    }
+
+    #[test]
+    fn reduce_fold_form_keeps_outer_reduce_and_wraps() {
+        let got = transpiled("Reduce(min, lapply(xs, fcn))");
+        assert!(got.starts_with("Reduce(min, future.apply::future_lapply("), "{got}");
+        assert!(got.contains("future.reduce.op = \"min\""), "{got}");
+        assert!(got.contains("future.reduce.wrap = TRUE"), "{got}");
+        // Backtick-quoted operator symbols are recognized too.
+        let got = transpiled("Reduce(`+`, lapply(xs, fcn))");
+        assert!(got.contains("future.reduce.op = \"+\""), "{got}");
+        // An `init` argument defeats recognition: plain transpile error
+        // for the unsupported `Reduce` head.
+        let mut i = Interp::new();
+        let err =
+            i.eval_program("Reduce(min, lapply(xs, fcn), 0) |> futurize(eval = FALSE)");
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn reduce_mode_round_trips_to_map_options() {
+        let got = transpiled_with("sum(lapply(xs, fcn))", "reduce = \"assoc\"");
+        assert!(got.contains("future.reduce = \"assoc\""), "{got}");
+
+        let o = options_from_pairs(&[
+            ("future.reduce".into(), RVal::scalar_str("assoc")),
+            ("future.reduce.op".into(), RVal::scalar_str("sum")),
+        ]);
+        let spec = o.reduce_spec().unwrap();
+        assert_eq!(spec.plan.op, reduce::ReduceOp::Sum);
+        assert!(spec.plan.assoc);
+        assert!(!spec.wrap);
+
+        // "off" kills the plan even with a recognized op marker.
+        let o = options_from_pairs(&[
+            ("future.reduce".into(), RVal::scalar_str("off")),
+            ("future.reduce.op".into(), RVal::scalar_str("sum")),
+        ]);
+        assert!(o.reduce_spec().is_none());
+
+        // The wrap marker survives the round trip.
+        let o = options_from_pairs(&[
+            ("future.reduce.op".into(), RVal::scalar_str("c")),
+            ("future.reduce.wrap".into(), RVal::scalar_bool(true)),
+        ]);
+        let spec = o.reduce_spec().unwrap();
+        assert_eq!(spec.plan.op, reduce::ReduceOp::Concat);
+        assert!(!spec.plan.assoc);
+        assert!(spec.wrap);
     }
 }

@@ -1,0 +1,908 @@
+//! Worker-side reduction fusion (ISSUE 7): ship O(1) partial
+//! aggregates instead of O(n) per-element results.
+//!
+//! When the transpiler recognizes that a map call's results feed a
+//! known reduction (`sum(lapply(xs, f))`, `Reduce(min, ...)`,
+//! `foreach(.combine = +)`), a [`ReducePlan`] rides the map's
+//! [`TaskContext`](crate::future_core::TaskContext) alongside the PR 6
+//! [`KernelPlan`](super::fusion::KernelPlan). The task runner then folds
+//! each slice locally ([`fold_slice`]) and ships a constant-size
+//! [`ReducePartial`] per chunk; the dispatch core merges partials in
+//! chunk order as they stream in ([`ReduceState`]).
+//!
+//! ## Exactness contract
+//!
+//! Worker-side folding reassociates the reduction (per-chunk sub-folds
+//! merged at the parent), so by default the fold only runs when
+//! reassociation is bit-exact:
+//!
+//! - `sum`/`mean`/`+`: every operand integral and the running magnitude
+//!   within f64's integer-exact range (|Σ|x|| ≤ 2^53) — integer and
+//!   logical sums, exactly;
+//! - `min`/`max`, `any`/`all`, length-style counts: always (NaN-ignoring
+//!   f64 min/max and boolean folds are associative; mixed-sign zeros are
+//!   rejected because reassociation could flip which zero wins);
+//! - `c`: order-preserving concatenation of atomic, unnamed results
+//!   (coercion is deferred to the parent merge, which replays rlite's
+//!   own `c()` semantics).
+//!
+//! Anything else — `prod`/`*`, non-integral sums — only folds under
+//! `futurize(reduce = "assoc")`, which accepts reassociated floating
+//! point (results may differ from `plan(sequential)` in the last ULPs;
+//! the magnitude of the difference is the usual pairwise-vs-sequential
+//! summation error). A slice whose *values* fail the gate falls back to
+//! shipping full results for that chunk; the parent folds those
+//! elements in order, so a map where every chunk falls back is
+//! bit-identical to the sequential path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use serde_derive::{Deserialize, Serialize};
+
+use crate::rlite::builtins::core::combine;
+use crate::rlite::eval::{Interp, Signal};
+use crate::rlite::serialize::WireVal;
+use crate::rlite::value::RVal;
+
+/// Largest double magnitude at which every integer is exactly
+/// representable (2^53): the boundary of reassociation-exact integer
+/// summation.
+const EXACT_INT_MAX: f64 = 9_007_199_254_740_992.0;
+
+// ---- trace counters ---------------------------------------------------------
+
+static PLANS_ATTACHED: AtomicU64 = AtomicU64::new(0);
+static SLICES_FOLDED: AtomicU64 = AtomicU64::new(0);
+static SLICES_FALLBACK: AtomicU64 = AtomicU64::new(0);
+
+/// Map calls that were dispatched with a reduction plan attached.
+pub fn plans_attached() -> u64 {
+    PLANS_ATTACHED.load(Ordering::Relaxed)
+}
+
+/// Slices folded worker-side into a partial aggregate (ticks in the
+/// worker process; visible here for in-process backends).
+pub fn slices_folded() -> u64 {
+    SLICES_FOLDED.load(Ordering::Relaxed)
+}
+
+/// Slices whose values failed the exactness gate and shipped full
+/// results instead.
+pub fn slices_fallback() -> u64 {
+    SLICES_FALLBACK.load(Ordering::Relaxed)
+}
+
+pub(crate) fn note_plan_attached() {
+    PLANS_ATTACHED.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_slice_folded() {
+    SLICES_FOLDED.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_slice_fallback() {
+    SLICES_FALLBACK.fetch_add(1, Ordering::Relaxed);
+}
+
+// ---- plan -------------------------------------------------------------------
+
+/// A reduction the workers may fold locally.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Serialize, Deserialize)]
+pub enum ReduceOp {
+    /// `sum(<map>)` — flat f64 fold seeded at 0.0 (mirrors `sum_fn`).
+    Sum,
+    /// `prod(<map>)` — flat f64 product seeded at 1.0 (assoc-only).
+    Prod,
+    /// `mean(<map>)` — `sum / flattened length`.
+    Mean,
+    /// `min(<map>)`, `Reduce(min, ...)`, `.combine = min`.
+    Min,
+    /// `max(<map>)`, `Reduce(max, ...)`, `.combine = max`.
+    Max,
+    /// `any(<map>)`.
+    Any,
+    /// `all(<map>)`.
+    All,
+    /// `length(<map>)` — the parent reconstructs the simplified length.
+    Count,
+    /// Pairwise `+` fold (`Reduce(+, ...)`, `.combine = +`).
+    Add,
+    /// Pairwise `*` fold (`Reduce(*, ...)`, `.combine = *`; assoc-only).
+    Mul,
+    /// Order-preserving `c()` (`Reduce(c, ...)`, `.combine = c`).
+    Concat,
+}
+
+impl ReduceOp {
+    /// Parse the `future.reduce.op` marker the transpiler injects (the
+    /// recognized head or combine symbol, verbatim).
+    pub fn parse(name: &str) -> Option<ReduceOp> {
+        Some(match name {
+            "sum" => ReduceOp::Sum,
+            "prod" => ReduceOp::Prod,
+            "mean" => ReduceOp::Mean,
+            "min" => ReduceOp::Min,
+            "max" => ReduceOp::Max,
+            "any" => ReduceOp::Any,
+            "all" => ReduceOp::All,
+            "length" => ReduceOp::Count,
+            "+" => ReduceOp::Add,
+            "*" => ReduceOp::Mul,
+            "c" => ReduceOp::Concat,
+            _ => return None,
+        })
+    }
+
+    /// The pairwise-merge builtin the parent replays for fold-style ops.
+    fn pair_builtin(self) -> Option<&'static str> {
+        match self {
+            ReduceOp::Add => Some("+"),
+            ReduceOp::Mul => Some("*"),
+            ReduceOp::Min => Some("min"),
+            ReduceOp::Max => Some("max"),
+            _ => None,
+        }
+    }
+
+    /// The surface symbol of the kept outer call this op stands in for.
+    pub fn source_name(self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Prod => "prod",
+            ReduceOp::Mean => "mean",
+            ReduceOp::Min => "min",
+            ReduceOp::Max => "max",
+            ReduceOp::Any => "any",
+            ReduceOp::All => "all",
+            ReduceOp::Count => "length",
+            ReduceOp::Add => "+",
+            ReduceOp::Mul => "*",
+            ReduceOp::Concat => "c",
+        }
+    }
+}
+
+/// True when the symbols the fused fold stands in for no longer resolve
+/// to the genuine builtins in `env` — a user shadowing. The kept outer
+/// call then carries user semantics and must receive the full
+/// per-element results (the fallback path is exact by construction).
+pub fn shadowed(env: &crate::rlite::env::EnvRef, spec: &ReduceSpec) -> bool {
+    let mut names = vec![spec.plan.op.source_name()];
+    if spec.wrap {
+        names.push("Reduce");
+    }
+    names.into_iter().any(|name| match crate::rlite::env::lookup(env, name) {
+        None => false,
+        Some(RVal::Builtin(id)) => match crate::rlite::builtins::lookup_builtin(name) {
+            Some(d) => d.id != id,
+            None => true,
+        },
+        Some(_) => true,
+    })
+}
+
+/// The reduction attached to a map call's task context.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Serialize, Deserialize)]
+pub struct ReducePlan {
+    pub op: ReduceOp,
+    /// `futurize(reduce = "assoc")`: accept reassociated floating-point
+    /// folding (documented ULP contract) instead of the exactness gate.
+    pub assoc: bool,
+}
+
+/// A parent-side reduction request: the wire-shipped plan plus how the
+/// API must package the folded value. `wrap` is set for the
+/// `Reduce(f, <map>)` form, whose kept outer `Reduce` call needs the
+/// folded value wrapped in a length-1 list to pass through verbatim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReduceSpec {
+    pub plan: ReducePlan,
+    pub wrap: bool,
+}
+
+/// A worker's constant-size partial aggregate for one slice.
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub struct ReducePartial {
+    /// Op-specific payload (a folded scalar; for `Concat`, a lossless
+    /// segment; for `Count`, nothing).
+    pub value: WireVal,
+    /// Map elements covered by this partial.
+    pub n: u64,
+    /// Flattened numeric components covered (the `mean` denominator).
+    pub m: u64,
+}
+
+// ---- worker-side slice fold -------------------------------------------------
+
+/// Flattened f64 view of a mapped value, mirroring `RVal::as_dbl_vec`
+/// (lists flatten recursively, logicals become 0/1, `NULL` is empty).
+/// Returns `false` for non-numeric values (gate failure).
+fn numeric_view(v: &WireVal, out: &mut Vec<f64>) -> bool {
+    match v {
+        WireVal::Null => true,
+        WireVal::Lgl(b, _) => {
+            out.extend(b.iter().map(|&b| if b { 1.0 } else { 0.0 }));
+            true
+        }
+        WireVal::Int(x, _) => {
+            out.extend(x.iter().map(|&x| x as f64));
+            true
+        }
+        WireVal::Dbl(x, _) => {
+            out.extend_from_slice(x);
+            true
+        }
+        WireVal::List(l, _, _) => l.iter().all(|e| numeric_view(e, out)),
+        _ => false,
+    }
+}
+
+/// A length-1, unnamed numeric scalar as f64 (the pairwise-fold gate:
+/// rlite's scalar `+`/`*` fast path, which is a plain f64 op).
+fn scalar_num(v: &WireVal) -> Option<f64> {
+    match v {
+        WireVal::Lgl(x, None) if x.len() == 1 => Some(if x[0] { 1.0 } else { 0.0 }),
+        WireVal::Int(x, None) if x.len() == 1 => Some(x[0] as f64),
+        WireVal::Dbl(x, None) if x.len() == 1 => Some(x[0]),
+        _ => None,
+    }
+}
+
+/// Flatten every slice value, or gate-fail.
+fn flatten(vals: &[WireVal]) -> Option<Vec<f64>> {
+    let mut buf = Vec::with_capacity(vals.len());
+    for v in vals {
+        if !numeric_view(v, &mut buf) {
+            return None;
+        }
+    }
+    Some(buf)
+}
+
+/// Fold one slice's mapped values into a partial aggregate. `None`
+/// means the values failed the plan's exactness gate — the caller ships
+/// full results for this chunk instead (the fallback path).
+pub fn fold_slice(plan: &ReducePlan, vals: &[WireVal]) -> Option<ReducePartial> {
+    if vals.is_empty() {
+        return None;
+    }
+    let n = vals.len() as u64;
+    let partial = match plan.op {
+        ReduceOp::Sum | ReduceOp::Mean => {
+            let buf = flatten(vals)?;
+            let mut s = 0.0;
+            if plan.assoc {
+                for &x in &buf {
+                    s += x;
+                }
+            } else {
+                let mut abs = 0.0;
+                for &x in &buf {
+                    if x.fract() != 0.0 {
+                        return None; // non-integral (also Inf/NaN)
+                    }
+                    abs += x.abs();
+                    if abs > EXACT_INT_MAX {
+                        return None; // beyond the integer-exact range
+                    }
+                    s += x;
+                }
+            }
+            ReducePartial { value: WireVal::Dbl(vec![s], None), n, m: buf.len() as u64 }
+        }
+        ReduceOp::Prod => {
+            if !plan.assoc {
+                return None;
+            }
+            let buf = flatten(vals)?;
+            let mut p = 1.0;
+            for &x in &buf {
+                p *= x;
+            }
+            ReducePartial { value: WireVal::Dbl(vec![p], None), n, m: buf.len() as u64 }
+        }
+        ReduceOp::Min | ReduceOp::Max => {
+            let buf = flatten(vals)?;
+            // Reassociation could change which of -0.0/+0.0 survives.
+            if buf.iter().any(|&x| x == 0.0 && x.is_sign_negative()) {
+                return None;
+            }
+            let value = if vals.len() == 1 {
+                // A single element merges verbatim (`Reduce`/`.combine`
+                // return it untouched when it is the only one).
+                vals[0].clone()
+            } else {
+                let m = if plan.op == ReduceOp::Min {
+                    buf.iter().fold(f64::INFINITY, |a, &x| a.min(x))
+                } else {
+                    buf.iter().fold(f64::NEG_INFINITY, |a, &x| a.max(x))
+                };
+                WireVal::Dbl(vec![m], None)
+            };
+            ReducePartial { value, n, m: 0 }
+        }
+        ReduceOp::Any | ReduceOp::All => {
+            let buf = flatten(vals)?;
+            let hit = if plan.op == ReduceOp::Any {
+                buf.iter().any(|&x| x != 0.0)
+            } else {
+                buf.iter().all(|&x| x != 0.0)
+            };
+            ReducePartial { value: WireVal::Lgl(vec![hit], None), n, m: 0 }
+        }
+        ReduceOp::Count => {
+            // Length-1 atomic results keep `length(simplify(...))` == n
+            // regardless of kind; anything else defers to the parent's
+            // simplify-aware reconstruction via fallback values.
+            let scalar = |v: &WireVal| match v {
+                WireVal::Lgl(x, _) => x.len() == 1,
+                WireVal::Int(x, _) => x.len() == 1,
+                WireVal::Dbl(x, _) => x.len() == 1,
+                WireVal::Chr(x, _) => x.len() == 1,
+                _ => false,
+            };
+            if !vals.iter().all(scalar) {
+                return None;
+            }
+            ReducePartial { value: WireVal::Null, n, m: 0 }
+        }
+        ReduceOp::Add | ReduceOp::Mul => {
+            if plan.op == ReduceOp::Mul && !plan.assoc {
+                return None;
+            }
+            let mut acc: Option<f64> = None;
+            let mut abs = 0.0;
+            for v in vals {
+                let x = scalar_num(v)?;
+                if plan.op == ReduceOp::Add && !plan.assoc {
+                    if x.fract() != 0.0 {
+                        return None;
+                    }
+                    abs += x.abs();
+                    if abs > EXACT_INT_MAX {
+                        return None;
+                    }
+                }
+                acc = Some(match acc {
+                    None => x,
+                    Some(a) if plan.op == ReduceOp::Add => a + x,
+                    Some(a) => a * x,
+                });
+            }
+            let value = if vals.len() == 1 {
+                vals[0].clone() // single element returned untouched
+            } else {
+                WireVal::Dbl(vec![acc?], None)
+            };
+            ReducePartial { value, n, m: 0 }
+        }
+        ReduceOp::Concat => {
+            let kind = |v: &WireVal| match v {
+                WireVal::Lgl(x, None) => Some((0u8, x.len())),
+                WireVal::Int(x, None) => Some((1, x.len())),
+                WireVal::Dbl(x, None) => Some((2, x.len())),
+                WireVal::Chr(x, None) => Some((3, x.len())),
+                _ => None,
+            };
+            let mut kinds = Vec::with_capacity(vals.len());
+            for v in vals {
+                kinds.push(kind(v)?); // non-atomic or named → fallback
+            }
+            let uniform_scalars = kinds.iter().all(|&(k, len)| len == 1 && k == kinds[0].0);
+            let value = if vals.len() == 1 {
+                vals[0].clone()
+            } else if uniform_scalars {
+                // Lossless same-kind segment: one component per element,
+                // so the parent can recover element granularity.
+                match kinds[0].0 {
+                    0 => WireVal::Lgl(
+                        vals.iter()
+                            .map(|v| match v {
+                                WireVal::Lgl(x, _) => x[0],
+                                _ => unreachable!(),
+                            })
+                            .collect(),
+                        None,
+                    ),
+                    1 => WireVal::Int(
+                        vals.iter()
+                            .map(|v| match v {
+                                WireVal::Int(x, _) => x[0],
+                                _ => unreachable!(),
+                            })
+                            .collect(),
+                        None,
+                    ),
+                    2 => WireVal::Dbl(
+                        vals.iter()
+                            .map(|v| match v {
+                                WireVal::Dbl(x, _) => x[0],
+                                _ => unreachable!(),
+                            })
+                            .collect(),
+                        None,
+                    ),
+                    _ => WireVal::Chr(
+                        vals.iter()
+                            .map(|v| match v {
+                                WireVal::Chr(x, _) => x[0].clone(),
+                                _ => unreachable!(),
+                            })
+                            .collect(),
+                        None,
+                    ),
+                }
+            } else {
+                // Vector elements: keep per-element structure verbatim.
+                WireVal::List(vals.to_vec(), None, None)
+            };
+            ReducePartial { value, n, m: 0 }
+        }
+    };
+    Some(partial)
+}
+
+// ---- parent-side streaming merge --------------------------------------------
+
+/// One ordered piece of a `Concat` result.
+enum CPart {
+    /// A same-kind segment of length-1 elements (one component each).
+    Seg(RVal),
+    /// A single element, verbatim.
+    Elem(RVal),
+}
+
+enum Acc {
+    /// `Sum`/`Mean` running total (and `Prod` running product).
+    Num { s: f64, m: u64 },
+    /// Pairwise fold accumulator (`Add`/`Mul`/`Min`/`Max`).
+    Pair(Option<RVal>),
+    /// `Any`/`All`.
+    Bool(bool),
+    /// `Count`: enough metadata to replay `simplify`'s length rule for
+    /// fallback chunks.
+    Count { fb_count: u64, fb_first_len: Option<usize>, fb_uniform: bool, fb_all_num: bool },
+    /// Ordered `c()` pieces, combined once at the end.
+    Concat(Vec<CPart>),
+}
+
+/// The parent-side combine tree: partials (and fallback value chunks)
+/// are folded **in chunk order** exactly once each — the dispatch core
+/// feeds contributions as their relay turn comes up, which also makes
+/// retried chunks count once.
+pub struct ReduceState {
+    plan: ReducePlan,
+    n: u64,
+    acc: Acc,
+    /// Lazy interpreter for pairwise merges and `c()` replay — using
+    /// the real builtins keeps the merge bit-identical to the
+    /// sequential fold by construction.
+    interp: Option<Box<Interp>>,
+}
+
+impl ReduceState {
+    pub fn new(plan: ReducePlan) -> ReduceState {
+        let acc = match plan.op {
+            ReduceOp::Sum | ReduceOp::Mean => Acc::Num { s: 0.0, m: 0 },
+            ReduceOp::Prod => Acc::Num { s: 1.0, m: 0 },
+            ReduceOp::Add | ReduceOp::Mul | ReduceOp::Min | ReduceOp::Max => Acc::Pair(None),
+            ReduceOp::Any => Acc::Bool(false),
+            ReduceOp::All => Acc::Bool(true),
+            ReduceOp::Count => Acc::Count {
+                fb_count: 0,
+                fb_first_len: None,
+                fb_uniform: true,
+                fb_all_num: true,
+            },
+            ReduceOp::Concat => Acc::Concat(Vec::new()),
+        };
+        ReduceState { plan, n: 0, acc, interp: None }
+    }
+
+    /// Merge one chunk's partial aggregate (already decoded to rlite
+    /// values by the caller).
+    pub fn push_partial(&mut self, value: RVal, n: u64, m: u64) -> Result<(), Signal> {
+        match &mut self.acc {
+            Acc::Num { s, m: mm } => {
+                if self.plan.op == ReduceOp::Prod {
+                    *s *= value.as_f64().map_err(Signal::error)?;
+                } else {
+                    *s += value.as_f64().map_err(Signal::error)?;
+                }
+                *mm += m;
+            }
+            Acc::Bool(b) => {
+                let hit = value.as_bool().map_err(Signal::error)?;
+                if self.plan.op == ReduceOp::Any {
+                    *b |= hit;
+                } else {
+                    *b &= hit;
+                }
+            }
+            Acc::Count { .. } => {} // n tracks everything for partials
+            Acc::Concat(parts) => {
+                if n <= 1 {
+                    parts.push(CPart::Elem(value));
+                } else if let RVal::List(l) = value {
+                    parts.extend(l.vals.into_iter().map(CPart::Elem));
+                } else {
+                    parts.push(CPart::Seg(value));
+                }
+            }
+            Acc::Pair(_) => {
+                let acc = match &mut self.acc {
+                    Acc::Pair(a) => a.take(),
+                    _ => unreachable!(),
+                };
+                let next = match acc {
+                    None => value,
+                    Some(a) => self.pair(a, value)?,
+                };
+                match &mut self.acc {
+                    Acc::Pair(a) => *a = Some(next),
+                    _ => unreachable!(),
+                }
+            }
+        }
+        self.n += n;
+        Ok(())
+    }
+
+    /// Fold one chunk's full results (a slice whose values failed the
+    /// worker-side gate) element by element, in order — exactly the
+    /// sequential reduction over that stretch.
+    pub fn push_values(&mut self, values: &[RVal]) -> Result<(), Signal> {
+        match &mut self.acc {
+            Acc::Num { s, m } => {
+                for v in values {
+                    for x in v.as_dbl_vec().map_err(Signal::error)? {
+                        if self.plan.op == ReduceOp::Prod {
+                            *s *= x;
+                        } else {
+                            *s += x;
+                        }
+                        *m += 1;
+                    }
+                }
+            }
+            Acc::Bool(b) => {
+                for v in values {
+                    for x in v.as_dbl_vec().map_err(Signal::error)? {
+                        if self.plan.op == ReduceOp::Any {
+                            *b |= x != 0.0;
+                        } else {
+                            *b &= x != 0.0;
+                        }
+                    }
+                }
+            }
+            Acc::Count { fb_count, fb_first_len, fb_uniform, fb_all_num } => {
+                for v in values {
+                    let len = v.len();
+                    *fb_all_num &= matches!(v, RVal::Int(_) | RVal::Dbl(_));
+                    match fb_first_len {
+                        None => *fb_first_len = Some(len),
+                        Some(k) => *fb_uniform &= *k == len,
+                    }
+                    *fb_count += 1;
+                }
+            }
+            Acc::Concat(parts) => {
+                parts.extend(values.iter().cloned().map(CPart::Elem));
+            }
+            Acc::Pair(_) => {
+                for v in values {
+                    let acc = match &mut self.acc {
+                        Acc::Pair(a) => a.take(),
+                        _ => unreachable!(),
+                    };
+                    let next = match acc {
+                        None => v.clone(),
+                        Some(a) => self.pair(a, v.clone())?,
+                    };
+                    match &mut self.acc {
+                        Acc::Pair(a) => *a = Some(next),
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+        self.n += values.len() as u64;
+        Ok(())
+    }
+
+    /// Finish the merge and produce the reduced value.
+    pub fn finish(mut self) -> Result<RVal, Signal> {
+        match self.acc {
+            Acc::Num { s, m } => match self.plan.op {
+                ReduceOp::Mean => {
+                    if m == 0 {
+                        Ok(RVal::scalar_dbl(f64::NAN))
+                    } else {
+                        Ok(RVal::scalar_dbl(s / m as f64))
+                    }
+                }
+                _ => Ok(RVal::scalar_dbl(s)),
+            },
+            Acc::Bool(b) => Ok(RVal::scalar_bool(b)),
+            Acc::Pair(v) => Ok(v.unwrap_or(RVal::Null)),
+            Acc::Count { fb_count, fb_first_len, fb_uniform, fb_all_num } => {
+                // Replay `RVal::simplify`'s length rule: the flattened
+                // column-major case needs every element numeric with one
+                // common length > 1; partial-covered elements are
+                // length-1 scalars, so any partial forces length == n.
+                let all_fallback = fb_count == self.n;
+                let len = match fb_first_len {
+                    Some(k) if all_fallback && fb_all_num && fb_uniform && k > 1 => {
+                        self.n * k as u64
+                    }
+                    _ => self.n,
+                };
+                // The recognized `length(...)` call is kept in the
+                // transpiled source, so hand back a dummy of the exact
+                // simplified length for it to measure.
+                Ok(RVal::Int(crate::rlite::value::RVec::plain(vec![0; len as usize])))
+            }
+            Acc::Concat(parts) => {
+                if self.n <= 1 {
+                    return Ok(match parts.into_iter().next() {
+                        Some(CPart::Elem(v) | CPart::Seg(v)) => v,
+                        None => RVal::Null,
+                    });
+                }
+                let whole: Vec<&RVal> = parts
+                    .iter()
+                    .map(|p| match p {
+                        CPart::Seg(v) | CPart::Elem(v) => v,
+                    })
+                    .collect();
+                if flat_combinable_refs(&whole) {
+                    // Homogeneous coercion ladder: one flat pass equals
+                    // the pairwise fold (segments flatten identically).
+                    return combine(
+                        parts
+                            .into_iter()
+                            .map(|p| match p {
+                                CPart::Seg(v) | CPart::Elem(v) => (None, v),
+                            })
+                            .collect(),
+                    );
+                }
+                // Heterogeneous: replay the exact pairwise `c(acc, x)`
+                // fold over per-element values (coercion laddering is
+                // order-sensitive, e.g. logical → double → character).
+                let mut elems = Vec::new();
+                for p in parts {
+                    match p {
+                        CPart::Seg(v) => elems.extend(v.iter_elements()),
+                        CPart::Elem(v) => elems.push(v),
+                    }
+                }
+                let mut it = elems.into_iter();
+                let mut acc = it.next().unwrap_or(RVal::Null);
+                for e in it {
+                    acc = combine(vec![(None, acc), (None, e)])?;
+                }
+                Ok(acc)
+            }
+        }
+    }
+
+    /// Pairwise merge through the real rlite builtin (`+`, `*`, `min`,
+    /// `max`) so vector operands, coercions, and errors match the
+    /// sequential fold exactly.
+    fn pair(&mut self, a: RVal, b: RVal) -> Result<RVal, Signal> {
+        let name = self.plan.op.pair_builtin().expect("pair-fold op");
+        let f = crate::rlite::builtins::lookup_builtin(name)
+            .map(|d| RVal::Builtin(d.id))
+            .ok_or_else(|| Signal::error(format!("missing builtin '{name}'")))?;
+        let i = self.interp.get_or_insert_with(|| Box::new(Interp::new()));
+        let env = i.global.clone();
+        i.call_function(&f, vec![(None, a), (None, b)], &env)
+    }
+}
+
+// ---- shared `c()` fast path -------------------------------------------------
+
+/// One-pass `c()` over per-iteration results, preserving rlite's
+/// pairwise `c(acc, x)` fold semantics. Homogeneous runs (all numeric/
+/// logical, or all character — unnamed) take a single preallocated
+/// pass; heterogeneous inputs replay the exact pairwise fold, whose
+/// coercion laddering is order-sensitive. Shared by
+/// `foreach_pkg::reduce_combine` and the fused-`Concat` merge.
+pub fn combine_results(results: Vec<RVal>) -> Result<RVal, Signal> {
+    if results.len() <= 1 {
+        return Ok(results.into_iter().next().unwrap_or(RVal::Null));
+    }
+    let refs: Vec<&RVal> = results.iter().collect();
+    if !flat_combinable_refs(&refs) {
+        let mut it = results.into_iter();
+        let mut acc = it.next().expect("non-empty");
+        for r in it {
+            acc = combine(vec![(None, acc), (None, r)])?;
+        }
+        return Ok(acc);
+    }
+    if results.iter().all(|v| matches!(v, RVal::Lgl(_))) {
+        let total = results.iter().map(|v| v.len()).sum();
+        let mut out: Vec<bool> = Vec::with_capacity(total);
+        for v in &results {
+            if let RVal::Lgl(x) = v {
+                out.extend(x.vals.iter().copied());
+            }
+        }
+        return Ok(RVal::lgl(out));
+    }
+    if results.iter().all(|v| matches!(v, RVal::Chr(_))) {
+        let total = results.iter().map(|v| v.len()).sum();
+        let mut out: Vec<String> = Vec::with_capacity(total);
+        for v in &results {
+            if let RVal::Chr(x) = v {
+                out.extend(x.vals.iter().cloned());
+            }
+        }
+        return Ok(RVal::chr(out));
+    }
+    // Numeric ladder: preallocate from the known total length.
+    let total = results.iter().map(|v| v.len()).sum();
+    let mut out: Vec<f64> = Vec::with_capacity(total);
+    for v in &results {
+        match v {
+            RVal::Dbl(x) => out.extend(x.vals.iter().copied()),
+            RVal::Int(x) => out.extend(x.vals.iter().map(|&i| i as f64)),
+            RVal::Lgl(x) => out.extend(x.vals.iter().map(|&b| if b { 1.0 } else { 0.0 })),
+            _ => unreachable!("gated by flat_combinable_refs"),
+        }
+    }
+    Ok(RVal::dbl(out))
+}
+
+/// True when a single flat `c()` pass is bit-identical to the pairwise
+/// fold: every item unnamed and on one coercion ladder (numeric-ish or
+/// character). `NULL`s and lists force the pairwise replay.
+fn flat_combinable_refs(items: &[&RVal]) -> bool {
+    let num = items
+        .iter()
+        .all(|v| matches!(v, RVal::Lgl(_) | RVal::Int(_) | RVal::Dbl(_)) && v.names().is_none());
+    let chr = items.iter().all(|v| matches!(v, RVal::Chr(_)) && v.names().is_none());
+    num || chr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(op: ReduceOp) -> ReducePlan {
+        ReducePlan { op, assoc: false }
+    }
+
+    fn dbl(x: f64) -> WireVal {
+        WireVal::Dbl(vec![x], None)
+    }
+
+    #[test]
+    fn integral_sum_folds_and_float_sum_falls_back() {
+        let vals: Vec<WireVal> = (1..=5).map(|k| dbl(k as f64)).collect();
+        let p = fold_slice(&plan(ReduceOp::Sum), &vals).expect("integral sum folds");
+        assert_eq!(p.value, dbl(15.0));
+        assert_eq!((p.n, p.m), (5, 5));
+
+        let vals = vec![dbl(1.5), dbl(2.0)];
+        assert!(fold_slice(&plan(ReduceOp::Sum), &vals).is_none(), "non-integral must fall back");
+        let p = fold_slice(&ReducePlan { op: ReduceOp::Sum, assoc: true }, &vals).unwrap();
+        assert_eq!(p.value, dbl(3.5));
+    }
+
+    #[test]
+    fn sum_gate_rejects_magnitude_overflow_and_nonfinite() {
+        let vals = vec![dbl(EXACT_INT_MAX), dbl(1.0)];
+        assert!(fold_slice(&plan(ReduceOp::Sum), &vals).is_none());
+        assert!(fold_slice(&plan(ReduceOp::Sum), &[dbl(f64::INFINITY)]).is_none());
+        assert!(fold_slice(&plan(ReduceOp::Sum), &[dbl(f64::NAN)]).is_none());
+    }
+
+    #[test]
+    fn min_ignores_nan_and_rejects_negative_zero() {
+        let vals = vec![dbl(f64::NAN), dbl(3.0), dbl(-2.0)];
+        let p = fold_slice(&plan(ReduceOp::Min), &vals).unwrap();
+        assert_eq!(p.value, dbl(-2.0));
+        assert!(fold_slice(&plan(ReduceOp::Min), &[dbl(-0.0), dbl(1.0)]).is_none());
+    }
+
+    #[test]
+    fn prod_and_mul_are_assoc_only() {
+        let vals = vec![dbl(2.0), dbl(3.0)];
+        assert!(fold_slice(&plan(ReduceOp::Prod), &vals).is_none());
+        assert!(fold_slice(&plan(ReduceOp::Mul), &vals).is_none());
+        let p = fold_slice(&ReducePlan { op: ReduceOp::Prod, assoc: true }, &vals).unwrap();
+        assert_eq!(p.value, dbl(6.0));
+    }
+
+    #[test]
+    fn single_element_chunks_ship_verbatim() {
+        let one = vec![WireVal::Int(vec![7], None)];
+        for op in [ReduceOp::Add, ReduceOp::Min, ReduceOp::Max, ReduceOp::Concat] {
+            let p = fold_slice(&plan(op), &one).unwrap_or_else(|| panic!("{op:?}"));
+            assert_eq!(p.value, one[0], "{op:?}: single element must ship verbatim");
+        }
+    }
+
+    #[test]
+    fn concat_builds_lossless_segments() {
+        let vals = vec![WireVal::Int(vec![1], None), WireVal::Int(vec![2], None)];
+        let p = fold_slice(&plan(ReduceOp::Concat), &vals).unwrap();
+        assert_eq!(p.value, WireVal::Int(vec![1, 2], None), "same-kind scalars → segment");
+
+        let vals = vec![WireVal::Dbl(vec![1.0, 2.0], None), WireVal::Dbl(vec![3.0], None)];
+        let p = fold_slice(&plan(ReduceOp::Concat), &vals).unwrap();
+        assert!(matches!(p.value, WireVal::List(_, _, _)), "vector elements stay structured");
+
+        let named = vec![WireVal::Dbl(vec![1.0], Some(vec!["a".into()])), dbl(2.0)];
+        assert!(fold_slice(&plan(ReduceOp::Concat), &named).is_none(), "names → fallback");
+    }
+
+    #[test]
+    fn state_merges_partials_and_fallback_values_in_order() {
+        // sum(1..=10) split as [partial 1..=4], [fallback 5..=7], [partial 8..=10].
+        let mut st = ReduceState::new(plan(ReduceOp::Sum));
+        st.push_partial(RVal::scalar_dbl(10.0), 4, 4).unwrap();
+        let fb: Vec<RVal> = (5..=7).map(|k| RVal::scalar_dbl(k as f64)).collect();
+        st.push_values(&fb).unwrap();
+        st.push_partial(RVal::scalar_dbl(27.0), 3, 3).unwrap();
+        assert_eq!(st.finish().unwrap(), RVal::scalar_dbl(55.0));
+    }
+
+    #[test]
+    fn count_replays_simplify_column_flattening() {
+        // All-fallback, uniform length-3 numeric columns → n * 3.
+        let mut st = ReduceState::new(plan(ReduceOp::Count));
+        let col = RVal::dbl(vec![1.0, 2.0, 3.0]);
+        st.push_values(&[col.clone(), col.clone()]).unwrap();
+        assert_eq!(st.finish().unwrap().len(), 6);
+
+        // A scalar partial alongside vector fallbacks → plain list → n.
+        let mut st = ReduceState::new(plan(ReduceOp::Count));
+        st.push_partial(RVal::Null, 2, 0).unwrap();
+        st.push_values(&[col]).unwrap();
+        assert_eq!(st.finish().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn pair_merge_uses_real_builtin_semantics() {
+        let mut st = ReduceState::new(plan(ReduceOp::Add));
+        st.push_partial(RVal::scalar_int(7), 1, 0).unwrap();
+        st.push_values(&[RVal::dbl(vec![1.0, 2.0])]).unwrap(); // vector operand
+        let v = st.finish().unwrap();
+        assert_eq!(v, RVal::dbl(vec![8.0, 9.0]), "vectorized `+` with recycling");
+    }
+
+    #[test]
+    fn combine_results_matches_pairwise_coercion_ladder() {
+        // logical → double → character is order-sensitive: TRUE turns
+        // into "1" (via the numeric step), not "TRUE".
+        let results =
+            vec![RVal::scalar_bool(true), RVal::scalar_dbl(2.0), RVal::scalar_str("a".into())];
+        let flat = combine_results(results).unwrap();
+        assert_eq!(flat, RVal::chr(vec!["1".into(), "2".into(), "a".into()]));
+
+        // Homogeneous numeric takes the preallocated fast path.
+        let results = vec![RVal::dbl(vec![1.0, 2.0]), RVal::scalar_int(3)];
+        assert_eq!(combine_results(results).unwrap(), RVal::dbl(vec![1.0, 2.0, 3.0]));
+
+        // All-logical stays logical.
+        let results = vec![RVal::scalar_bool(true), RVal::scalar_bool(false)];
+        assert_eq!(combine_results(results).unwrap(), RVal::lgl(vec![true, false]));
+    }
+
+    #[test]
+    fn concat_state_heterogeneous_replay_is_pairwise_exact() {
+        // Chunk 1 folds to an Int segment; chunk 2 falls back with a
+        // character element. The merge must replay pairwise: the ints
+        // pass through the numeric ladder before the character step.
+        let mut st = ReduceState::new(plan(ReduceOp::Concat));
+        st.push_partial(RVal::Int(crate::rlite::value::RVec::plain(vec![1, 2])), 2, 0).unwrap();
+        st.push_values(&[RVal::scalar_str("z".into())]).unwrap();
+        let v = st.finish().unwrap();
+        assert_eq!(v, RVal::chr(vec!["1".into(), "2".into(), "z".into()]));
+    }
+}

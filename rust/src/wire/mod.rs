@@ -51,10 +51,29 @@ pub use value::JsonValue;
 /// test observes exactly the traffic of the session it drives.
 pub mod stats {
     use std::cell::Cell;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     thread_local! {
         static LOGICAL: Cell<u64> = const { Cell::new(0) };
         static PHYSICAL: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Result frames arriving from worker processes, in bytes. This is
+    /// the number reduction fusion shrinks: a fused reduction ships one
+    /// constant-size partial per chunk instead of O(n) values. Unlike
+    /// the encode-side counters this one is ticked on the per-worker
+    /// *reader threads*, so it is process-global and atomic; tests that
+    /// assert on it serialize behind a lock and call [`reset`] first.
+    static RESULT: AtomicU64 = AtomicU64::new(0);
+
+    /// Record `n` result-frame bytes read back from a worker process.
+    pub fn record_result(n: usize) {
+        RESULT.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Result bytes read from worker processes since start (or `reset`).
+    pub fn result_bytes() -> u64 {
+        RESULT.load(Ordering::Relaxed)
     }
 
     /// Record `n` encoded payload bytes (one per message encode).
@@ -82,6 +101,7 @@ pub mod stats {
     pub fn reset() {
         LOGICAL.with(|c| c.set(0));
         PHYSICAL.with(|c| c.set(0));
+        RESULT.store(0, Ordering::Relaxed);
     }
 }
 

@@ -242,6 +242,7 @@ fn contexts_register_resolve_and_drop() {
             globals: vec![],
             nesting: Default::default(),
             kernel: None,
+            reduce: None,
         }))
         .unwrap();
         b.submit(TaskPayload {

@@ -103,6 +103,37 @@ fn elementwise_bit_identical_on_every_backend_with_nonfinite_corners() {
     }
 }
 
+/// ISSUE 7 satellite: numeric-*vector* items run the ElemOp VM once per
+/// component instead of falling back to the interpreter.
+#[test]
+fn elementwise_vector_items_bit_identical_on_every_backend() {
+    let _g = serial();
+    worker_env();
+    fn list_bits(v: &RVal) -> Vec<Vec<u64>> {
+        match v {
+            RVal::List(l) => l.vals.iter().map(bits).collect(),
+            other => vec![bits(other)],
+        }
+    }
+    // Ragged lengths, non-finite corners, and a scalar straggler: the
+    // per-component VM must reproduce the interpreter's f64 bits.
+    let fixture = "
+        xs <- list(c(-1.5, 0, 2.5), c(1/0, 0/0, -1/0), c(1e308, 3), 4)
+        f <- function(x) 3 * x * x + 2 * x + 1
+    ";
+    let prog = "lapply(xs, f) |> futurize()";
+    for plan in PLANS {
+        let (fused, _) = run_with(plan, fixture, prog, true);
+        let (interp, _) = run_with(plan, fixture, prog, false);
+        assert_eq!(list_bits(&fused), list_bits(&interp), "{plan}: vector-item bits diverge");
+    }
+    for plan in LOCAL_PLANS {
+        let fused_before = fusion::slices_fused();
+        run_with(plan, fixture, prog, true);
+        assert!(fusion::slices_fused() > fused_before, "{plan}: vector items did not fuse");
+    }
+}
+
 #[test]
 fn fused_bodies_leave_seeded_rng_streams_untouched() {
     let _g = serial();

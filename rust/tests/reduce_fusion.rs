@@ -1,0 +1,364 @@
+//! Differential suite for worker-side reduction fusion (ISSUE 7):
+//! every recognized reduce shape — `sum(<map>)`-style heads,
+//! `Reduce(f, <map>)`, `foreach(.combine = ...)` — must produce results
+//! identical to `plan(sequential)` on every backend (bit-identical for
+//! exact-gate folds) while shipping O(workers) result bytes instead of
+//! O(n). CI re-runs this file with `FUTURIZE_NO_FUSION=1`, under which
+//! every test degenerates to the full-result path — still a valid
+//! differential.
+//!
+//! Every test serializes on one mutex: the kill switch is a process
+//! env var and the reduce/wire counters are process globals, so
+//! concurrent tests would race both.
+
+mod common;
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use common::{within, worker_env};
+use futurize::prelude::*;
+use futurize::transpile::{fusion, reduce};
+use futurize::wire::stats;
+
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    // A panicked test must not wedge the rest of the suite.
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with fusion forced on or off, restoring the ambient state
+/// (which CI may pin to off for the conformance leg) afterwards.
+fn with_fusion<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    let ambient = std::env::var(fusion::NO_FUSION_ENV).ok();
+    if on {
+        std::env::remove_var(fusion::NO_FUSION_ENV);
+    } else {
+        std::env::set_var(fusion::NO_FUSION_ENV, "1");
+    }
+    let r = f();
+    match ambient {
+        Some(v) => std::env::set_var(fusion::NO_FUSION_ENV, v),
+        None => std::env::remove_var(fusion::NO_FUSION_ENV),
+    }
+    r
+}
+
+/// Bit pattern of a numeric result — exactness is the contract under
+/// test, so every comparison is on f64 bits, not tolerances.
+fn bits(v: &RVal) -> Vec<u64> {
+    v.as_dbl_vec().unwrap().iter().map(|x| x.to_bits()).collect()
+}
+
+fn run_with(plan: &str, fixture: &str, prog: &str, fuse: bool) -> RVal {
+    with_fusion(fuse, || {
+        let mut s = Session::new();
+        s.eval_str(plan).unwrap_or_else(|e| panic!("{plan}: {e}"));
+        s.eval_str("futureSeed(99)").unwrap();
+        if !fixture.is_empty() {
+            s.eval_str(fixture).unwrap_or_else(|e| panic!("{fixture}: {e}"));
+        }
+        s.eval_str(prog).unwrap_or_else(|e| panic!("{plan} / {prog}: {e}"))
+    })
+}
+
+const PLANS: &[&str] = &[
+    "plan(sequential)",
+    "plan(multicore, workers = 2)",
+    "plan(multisession, workers = 2)",
+    "plan(cluster, workers = c(\"n1\", \"n2\"), latency_ms = 0.1)",
+    "plan(future.batchtools::batchtools_slurm, workers = 2, poll_ms = 2)",
+];
+
+/// In-process plans, where the worker-side fold counters tick in *this*
+/// process (process backends fold inside their worker processes).
+const LOCAL_PLANS: &[&str] = &["plan(sequential)", "plan(multicore, workers = 2)"];
+
+#[test]
+fn head_form_reductions_bit_identical_on_every_backend() {
+    let _g = serial();
+    worker_env();
+    let fixture = "xs <- 1:9";
+    // Integral values: every head is exact-gate eligible, so fused and
+    // full-result paths must agree to the bit (and in type).
+    let progs = [
+        "sum(sapply(xs, function(x) x * 3)) |> futurize()",
+        "mean(sapply(xs, function(x) x * 3)) |> futurize()",
+        "min(sapply(xs, function(x) x * 3)) |> futurize()",
+        "max(unlist(lapply(xs, function(x) x * 3))) |> futurize()",
+        "any(sapply(xs, function(x) x > 5)) |> futurize()",
+        "all(sapply(xs, function(x) x > 0)) |> futurize()",
+        "prod(sapply(xs, function(x) x)) |> futurize()",
+    ];
+    for prog in progs {
+        for plan in PLANS {
+            let fused = run_with(plan, fixture, prog, true);
+            let full = run_with(plan, fixture, prog, false);
+            assert_eq!(bits(&fused), bits(&full), "{plan} / {prog}: value bits diverge");
+            assert_eq!(fused.class(), full.class(), "{plan} / {prog}: class diverges");
+        }
+    }
+    // The fused runs above must actually have attached plans, and on
+    // in-process plans the slices demonstrably folded worker-side.
+    let attached_before = reduce::plans_attached();
+    for plan in LOCAL_PLANS {
+        let folded_before = reduce::slices_folded();
+        run_with(plan, fixture, "sum(sapply(xs, function(x) x * 3)) |> futurize()", true);
+        assert!(reduce::slices_folded() > folded_before, "{plan}: no slice folded");
+    }
+    assert!(reduce::plans_attached() > attached_before, "no reduce plan attached");
+}
+
+#[test]
+fn direct_marker_form_reduces_on_future_apply_and_furrr() {
+    let _g = serial();
+    worker_env();
+    // The runtime marker convention the transpiler emits, written by
+    // hand — both API families must honor it.
+    let progs = [
+        ("sum(future_sapply(1:20, function(x) x + 1, future.reduce.op = \"sum\"))", 230.0),
+        ("sum(furrr::future_map_dbl(1:8, function(x) x * 2, future.reduce.op = \"sum\"))", 72.0),
+    ];
+    for (prog, want) in progs {
+        for fuse in [true, false] {
+            let v = run_with("plan(multicore, workers = 2)", "", prog, fuse);
+            assert_eq!(v.as_f64().unwrap(), want, "fuse={fuse}: {prog}");
+        }
+    }
+}
+
+#[test]
+fn foreach_combines_bit_identical_on_every_backend() {
+    let _g = serial();
+    worker_env();
+    let fixture = "xs <- c(3, 1, 4, 1, 5, 9, 2, 6)";
+    // `.combine` ∈ {c, +, min} map onto worker-side folds; the default
+    // (list) combine rides the full-result path and must be untouched.
+    let cases = [
+        "foreach(x = xs, .combine = c) %dofuture% { x * 2 + 1 }",
+        "foreach(x = xs, .combine = `+`) %dofuture% { x * 2 + 1 }",
+        "foreach(x = xs, .combine = min) %dofuture% { x * 2 + 1 }",
+        "foreach(x = xs, .combine = max) %dofuture% { x - 7 }",
+        "foreach(x = xs) %dofuture% { x + 1 }",
+    ];
+    for prog in cases {
+        let reference = {
+            let seq = prog.replace("%dofuture%", "%do%");
+            run_with("plan(sequential)", fixture, &seq, true)
+        };
+        for plan in PLANS {
+            for fuse in [true, false] {
+                let par = run_with(plan, fixture, prog, fuse);
+                assert_eq!(par, reference, "{plan} / fuse={fuse} / {prog}");
+            }
+        }
+    }
+    // Combine mapping must engage: a recognized `.combine` attaches a
+    // plan and folds on in-process workers.
+    let attached_before = reduce::plans_attached();
+    let folded_before = reduce::slices_folded();
+    run_with(
+        "plan(multicore, workers = 2)",
+        fixture,
+        "foreach(x = xs, .combine = `+`) %dofuture% { x * 2 + 1 }",
+        true,
+    );
+    assert!(reduce::plans_attached() > attached_before, ".combine = + must attach a plan");
+    assert!(reduce::slices_folded() > folded_before, ".combine = + slices must fold");
+}
+
+/// Acceptance: a fused `sum` over 1e5 elements ships O(workers) result
+/// bytes on `plan(multisession)`; the same call with fusion disabled
+/// ships all 1e5 values back.
+#[test]
+fn fused_sum_ships_o_workers_result_bytes() {
+    let _g = serial();
+    worker_env();
+    let fixture = "xs <- 1:100000";
+    let prog = "sum(future_sapply(xs, function(x) x + 1, future.reduce.op = \"sum\"))";
+    let want = 5_000_150_000.0;
+    let mut measured = [0u64; 2];
+    for (k, fuse) in [true, false].into_iter().enumerate() {
+        measured[k] = with_fusion(fuse, || {
+            let mut s = Session::new();
+            s.eval_str("plan(multisession, workers = 2)").unwrap();
+            s.eval_str(fixture).unwrap();
+            // Reset after setup so only this map's Done frames count.
+            stats::reset();
+            let v = s.eval_str(prog).unwrap_or_else(|e| panic!("fuse={fuse}: {e}"));
+            assert_eq!(v.as_f64().unwrap(), want, "fuse={fuse}");
+            stats::result_bytes()
+        });
+    }
+    let [fused, full] = measured;
+    assert!(fused < 2_000, "fused sum must ship O(workers) result bytes, shipped {fused}");
+    assert!(full > 100_000, "full-result path must ship O(n) result bytes, shipped {full}");
+}
+
+#[test]
+fn fused_reduction_survives_worker_loss_without_double_count() {
+    let _g = serial();
+    // retries = 1 with exactly one induced crash: the lost chunk is
+    // re-executed, and its partial must enter the combine tree exactly
+    // once — 63, not 63 + a replayed chunk.
+    let marker =
+        std::env::temp_dir().join(format!("futurize-reduce-kill-{}", std::process::id()));
+    let _ = std::fs::remove_file(&marker);
+    let marker_str = marker.display().to_string();
+    let got = within(60, "reduce+retries", move || {
+        with_fusion(true, || {
+            worker_env();
+            let mut s = Session::new();
+            s.eval_str("plan(multisession, workers = 2)").unwrap();
+            s.eval_str(&format!(
+                "sum(sapply(1:6, function(x) {{ \
+                 if (x == 4) futurize_test_exit_once(\"{marker_str}\")\nx * 3 }})) \
+                 |> futurize(chunk_size = 1, retries = 1)"
+            ))
+            .unwrap()
+            .as_f64()
+            .unwrap()
+        })
+    });
+    let _ = std::fs::remove_file(&marker);
+    assert_eq!(got, 63.0, "retried chunk double-counted or lost its partial");
+}
+
+#[test]
+fn stop_on_error_with_reduction_surfaces_the_error() {
+    let _g = serial();
+    worker_env();
+    let prog = "sum(sapply(1:12, function(x) { if (x == 5) stop(\"boom\")\nx })) \
+                |> futurize(chunk_size = 1, stop_on_error = TRUE)";
+    for plan in ["plan(multicore, workers = 2)", "plan(multisession, workers = 2)"] {
+        for fuse in [true, false] {
+            let err = with_fusion(fuse, || {
+                let mut s = Session::new();
+                s.eval_str(plan).unwrap();
+                s.eval_str(prog).unwrap_err()
+            });
+            assert!(err.contains("boom"), "{plan} / fuse={fuse}: {err}");
+        }
+    }
+}
+
+#[test]
+fn depth2_nested_fused_reduction_matches_sequential() {
+    let _g = serial();
+    worker_env();
+    // The inner futurized reduce runs on the worker-side inner backend
+    // at depth 2; integral values keep both levels exact.
+    let prog = "unlist(lapply(1:3, function(x) \
+        sum(future_sapply(1:40, function(y) y * 2 + x, future.reduce.op = \"sum\"))) \
+        |> futurize())";
+    let reference = run_with("plan(sequential)", "", prog, true);
+    assert_eq!(reference.as_dbl_vec().unwrap(), vec![1680.0, 1720.0, 1760.0]);
+    for plan in
+        ["plan(list(multicore(2), multicore(2)))", "plan(list(multisession(2), multicore(2)))"]
+    {
+        for fuse in [true, false] {
+            let v = run_with(plan, "", prog, fuse);
+            assert_eq!(bits(&v), bits(&reference), "{plan} / fuse={fuse}: depth-2 diverges");
+        }
+    }
+}
+
+#[test]
+fn exact_gate_rejects_float_sums_and_assoc_opts_in() {
+    let _g = serial();
+    let fixture = "xs <- (1:4000) * 0.1";
+    let prog = "sum(sapply(xs, function(x) x * 0.5)) |> futurize()";
+    let seqv = run_with("plan(sequential)", fixture, prog, false);
+    // Default (exact) mode: non-integral values fail the gate on every
+    // slice, the chunks ship full results, and the parent folds them in
+    // order — bit-identical to sequential, observably via the fallback
+    // counter.
+    let fallback_before = reduce::slices_fallback();
+    let exact = run_with("plan(multicore, workers = 2)", fixture, prog, true);
+    assert_eq!(bits(&exact), bits(&seqv), "gate fallback must stay bit-exact");
+    assert!(reduce::slices_fallback() > fallback_before, "float sum must trip the gate");
+    // `reduce = "assoc"` accepts reassociated folding: slices fold, and
+    // the result agrees within the documented summation-error bound.
+    let folded_before = reduce::slices_folded();
+    let assoc = run_with(
+        "plan(multicore, workers = 2)",
+        fixture,
+        "sum(sapply(xs, function(x) x * 0.5)) |> futurize(reduce = \"assoc\")",
+        true,
+    );
+    assert!(reduce::slices_folded() > folded_before, "assoc slices must fold");
+    let (a, s) = (assoc.as_f64().unwrap(), seqv.as_f64().unwrap());
+    assert!((a - s).abs() <= 1e-9 * s.abs(), "assoc sum too far off: {a} vs {s}");
+}
+
+#[test]
+fn reduce_form_folds_and_unwraps_through_outer_reduce() {
+    let _g = serial();
+    worker_env();
+    let fixture = "xs <- c(7, 3, 9, 5)";
+    let prog = "Reduce(min, lapply(xs, function(x) x * 2)) |> futurize()";
+    for plan in PLANS {
+        for fuse in [true, false] {
+            let v = run_with(plan, fixture, prog, fuse);
+            assert_eq!(v.as_f64().unwrap(), 6.0, "{plan} / fuse={fuse}");
+        }
+    }
+}
+
+#[test]
+fn length_head_is_exact_for_nonsimplifying_and_simplifying_maps() {
+    let _g = serial();
+    worker_env();
+    let fixture = "xs <- 1:6";
+    // lapply keeps a 6-element list; sapply flattens the uniform
+    // length-2 columns to 12. The fused dummy must reproduce both.
+    let progs = [
+        "length(lapply(xs, function(x) c(x, x))) |> futurize()",
+        "length(sapply(xs, function(x) c(x, x))) |> futurize()",
+        "length(map(xs, function(x) c(x, x))) |> futurize()",
+    ];
+    for prog in progs {
+        for plan in ["plan(multicore, workers = 2)", "plan(multisession, workers = 2)"] {
+            let fused = run_with(plan, fixture, prog, true);
+            let full = run_with(plan, fixture, prog, false);
+            assert_eq!(bits(&fused), bits(&full), "{plan} / {prog}");
+        }
+    }
+}
+
+#[test]
+fn shadowed_outer_symbol_disables_the_fold() {
+    let _g = serial();
+    // A user rebinding of the kept outer symbol must receive the full
+    // result, never a pre-folded aggregate: `length(v)` distinguishes
+    // the 5-element vector from a folded scalar.
+    let v = run_with(
+        "plan(multicore, workers = 2)",
+        "sum <- function(v) length(v)",
+        "sum(sapply(1:5, function(x) x)) |> futurize()",
+        true,
+    );
+    assert_eq!(v.as_f64().unwrap(), 5.0, "shadowed sum() saw a folded aggregate");
+    // Same for a shadowed `Reduce` in the fold form: it must see the
+    // full list, not the fused length-1 wrapper.
+    let v = run_with(
+        "plan(multicore, workers = 2)",
+        "Reduce <- function(f, v) length(v)",
+        "Reduce(min, lapply(1:4, function(x) x)) |> futurize()",
+        true,
+    );
+    assert_eq!(v.as_f64().unwrap(), 4.0, "shadowed Reduce() saw the fused wrapper");
+}
+
+#[test]
+fn kill_switch_suppresses_plan_attach_entirely() {
+    let _g = serial();
+    let attached_before = reduce::plans_attached();
+    let v = run_with(
+        "plan(multicore, workers = 2)",
+        "",
+        "sum(sapply(1:6, function(x) x)) |> futurize()",
+        false,
+    );
+    assert_eq!(v.as_f64().unwrap(), 21.0);
+    assert_eq!(reduce::plans_attached(), attached_before, "kill switch leaked a plan");
+}

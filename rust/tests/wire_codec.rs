@@ -455,6 +455,7 @@ fn binary_shrinks_the_protocol_stream_by_3x() {
         globals,
         nesting: Default::default(),
         kernel: None,
+        reduce: None,
     };
     let mut msgs_parent: Vec<ParentMsg> = vec![ParentMsg::RegisterContext(ctx)];
     let mut msgs_worker: Vec<WorkerMsg> = Vec::new();
@@ -477,6 +478,7 @@ fn binary_shrinks_the_protocol_stream_by_3x() {
             started_unix: 1_769_000_000.123 + k as f64,
             finished_unix: 1_769_000_000.456 + k as f64,
             nested_workers: 0,
+            partial: None,
         }));
     }
     let mut json_total = 0usize;
