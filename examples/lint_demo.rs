@@ -1,0 +1,53 @@
+//! Parallel-safety analyzer demo: the three surfaces of the lint layer.
+//!
+//! 1. Default `lint = "warn"`: an unsafe body still runs, but a classed
+//!    `FuturizeLintWarning` is relayed once per map call.
+//! 2. `lint = "error"`: the same body raises a classed
+//!    `FuturizeLintError` at freeze time, before any worker is touched.
+//! 3. `lint_source()`: the script-level pass behind `futurize-rs lint`.
+//!
+//! Run: `cargo run --example lint_demo`
+
+use futurize::prelude::*;
+use futurize::transpile::analysis;
+
+fn main() {
+    // Host worker subprocesses when spawned by the multisession backend.
+    futurize::backend::worker::maybe_worker();
+
+    let dirty = "
+        total <- 0
+        unlist(lapply(1:4, function(x) {
+          total <<- total + x
+          runif(1) * total
+        }) |> futurize())
+    ";
+
+    println!("== lint = \"warn\" (default): runs, relays classed warnings ==");
+    let mut s = Session::new();
+    s.eval_str("plan(multicore, workers = 2)").unwrap();
+    let (r, out) = s.eval_captured(dirty);
+    println!("result ok: {}", r.is_ok());
+    for line in out.lines().filter(|l| l.contains("FZ")) {
+        println!("  relayed: {line}");
+    }
+
+    println!("\n== lint = \"error\": raises before any worker spawns ==");
+    let mut s = Session::new();
+    s.eval_str("plan(multicore, workers = 2)").unwrap();
+    let program = dirty.replace("futurize()", "futurize(lint = \"error\")");
+    match s.eval_str(&program) {
+        Ok(_) => println!("unexpectedly succeeded"),
+        Err(e) => println!("raised: {e}"),
+    }
+
+    println!("\n== script-level pass (futurize-rs lint) ==");
+    let findings = analysis::lint_source(dirty).expect("parses");
+    for f in &findings {
+        println!("statement {}:", f.stmt);
+        print!("{}", futurize::rlite::diag::render_table(&f.diags));
+    }
+
+    println!("\n== fusion_report(): why bodies were (not) fused ==");
+    println!("{}", fusion_report().render());
+}

@@ -1,0 +1,16 @@
+# Clean fixture for `futurize-rs lint`: every futurized map is
+# parallel-safe — globals defined, RNG seeded, no cross-iteration
+# state. CI asserts exit code 0 on this file.
+
+plan(multicore, workers = 2)
+
+scale <- 2.5
+xs <- c(1, 2, 3, 4)
+
+squares <- lapply(xs, function(x) x * x * scale) |> futurize()
+
+draws <- lapply(xs, function(x) rnorm(1) + x) |> futurize(seed = TRUE)
+
+boots <- replicate(8, mean(rnorm(4))) |> futurize()
+
+total <- sum(unlist(lapply(xs, function(x) x * 2) |> futurize()))

@@ -1,0 +1,15 @@
+# Known-dirty fixture for `futurize-rs lint`: the classic loop-carried
+# accumulator plus unseeded RNG. CI asserts a nonzero exit code and the
+# FZ001/FZ002 codes in the report.
+
+plan(multicore, workers = 2)
+
+total <- 0
+xs <- c(1, 2, 3, 4)
+
+r <- lapply(xs, function(x) {
+  total <<- total + x        # FZ001: element i depends on element i-1
+  runif(1) * total           # FZ002: RNG without seed = TRUE
+}) |> futurize()
+
+s <- lapply(xs, function(x) x * missing_scale) |> futurize()  # FZ003

@@ -232,6 +232,12 @@ fn do_future(i: &mut Interp, args: &[Arg], env: &EnvRef) -> EvalResult {
     if map_opts.reduce.is_none() {
         map_opts.reduce = combine_reduce_spec(&combine, &opts);
     }
+    // A user `.combine` (anything beyond the genuine builtin catalog)
+    // cannot be proven associative — record it so the analyzer can
+    // flag order-dependence under `reduce = "assoc"` (FZ005).
+    if matches!(combine, RVal::Closure(_)) {
+        map_opts.lint.nonassoc_combine = Some(".combine".into());
+    }
     match foreach_elements_run(i, env, bindings, body, &map_opts)? {
         MapRun::Values(results) => reduce_combine(i, env, results, &combine),
         // Fused: the chunk partials were merged with the combine's own

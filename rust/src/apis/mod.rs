@@ -83,6 +83,11 @@ pub(crate) fn map_maybe_reduced(
     let n_items = items.len();
     let mut mopts = opts.to_map_options(false);
     if mopts.reduce.is_some_and(|spec| reduce::shadowed(env, &spec)) {
+        let op = mopts.reduce.map(|spec| spec.plan.op.source_name()).unwrap_or("reduce");
+        reduce::note_plan_rejected_shadowed();
+        mopts.lint.reduce_rejected = Some(format!(
+            "'{op}' is shadowed by a user binding in the calling environment"
+        ));
         mopts.reduce = None;
     }
     let run = crate::future_core::driver::map_elements_run(i, env, items, f, extra, &mopts)?;

@@ -191,6 +191,15 @@ impl BatchtoolsSimBackend {
                                 None,
                             );
                             let _ = std::fs::remove_file(&claimed_in);
+                            // Result-bytes accounting: a real scheduler
+                            // writes the outcome back through the spool,
+                            // so charge its encoded size exactly as the
+                            // multisession reader threads do — the
+                            // O(result-volume) metric stays
+                            // backend-uniform.
+                            if let Ok(b) = codec.encode(&outcome) {
+                                crate::wire::stats::record_result(b.len());
+                            }
                             let _ = tx.send(BackendEvent::Done(outcome));
                         });
                         running.push(RunningJob { slot, task_id, claimed, handle });

@@ -13,6 +13,12 @@
 //! the inherited inner stack travels inside each `RegisterContext`
 //! frame of the wrapped process pool, and the latency model charges
 //! nested maps nothing extra (they run entirely on the remote node).
+//!
+//! Result-bytes accounting (`wire::stats::record_result`) is inherited
+//! from the wrapped multisession reader threads: every `Done` frame a
+//! cluster worker ships is read — and charged — by the same pipe
+//! readers, so the O(result-volume) metric holds here without extra
+//! code (asserted in `tests/lint_analysis.rs`).
 
 use std::sync::Arc;
 use std::time::Duration;

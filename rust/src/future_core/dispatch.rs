@@ -637,6 +637,15 @@ pub fn run_map(
     if reduce.is_some() {
         crate::transpile::reduce::note_plan_attached();
     }
+    // Parallel-safety lint, after kernel/reduce recognition (so the
+    // rejection explanations are accurate) and before any backend or
+    // worker exists (so `lint = "error"` raises with zero spawns).
+    let lint_mode = crate::rlite::diag::effective_mode(opts.lint.mode);
+    if lint_mode != crate::rlite::diag::LintMode::Off {
+        let diags =
+            crate::transpile::analysis::analyze_map(&f, &extra, &globals, kernel.is_some(), opts);
+        crate::transpile::analysis::surface(i, &diags, lint_mode)?;
+    }
     let ctx = Arc::new(TaskContext {
         id: i.session.fresh_context_id(),
         body: ContextBody::Map { f, extra },
@@ -667,6 +676,15 @@ pub fn run_foreach(
         .map(|spec| spec.plan);
     if reduce.is_some() {
         crate::transpile::reduce::note_plan_attached();
+    }
+    let lint_mode = crate::rlite::diag::effective_mode(opts.lint.mode);
+    if lint_mode != crate::rlite::diag::LintMode::Off {
+        let names: Vec<String> = bindings
+            .first()
+            .map(|b| b.iter().map(|(n, _)| n.clone()).collect())
+            .unwrap_or_default();
+        let diags = crate::transpile::analysis::analyze_foreach(&body, &names, &globals, opts);
+        crate::transpile::analysis::surface(i, &diags, lint_mode)?;
     }
     let ctx = Arc::new(TaskContext {
         id: i.session.fresh_context_id(),

@@ -48,6 +48,10 @@ pub struct MapOptions {
     /// reduction, so workers should fold slices locally and the
     /// dispatch core should merge the partials ([`MapRun::Reduced`]).
     pub reduce: Option<ReduceSpec>,
+    /// Parallel-safety analyzer configuration: lint mode plus the
+    /// distilled reduction facts the freeze-time detectors need
+    /// (`transpile::analysis`).
+    pub lint: crate::rlite::diag::LintSettings,
 }
 
 impl Default for MapOptions {
@@ -60,6 +64,7 @@ impl Default for MapOptions {
             stop_on_error: false,
             retries: 0,
             reduce: None,
+            lint: Default::default(),
         }
     }
 }

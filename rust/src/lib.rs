@@ -80,4 +80,71 @@ pub mod prelude {
     pub use crate::rlite::value::RVal;
     pub use crate::rlite::{parse_program, parse_expr};
     pub use crate::transpile::FuturizeOptions;
+    pub use crate::{fusion_report, FusionReport};
+}
+
+/// Snapshot of the fusion/reduction trace counters, including the
+/// per-reason rejection labels the parallel-safety analyzer surfaces
+/// as FZ007/FZ008 — the "silent rejection" observability hook.
+/// Counters are process-cumulative (slice counters tick wherever the
+/// slice runs, so subprocess backends accumulate them worker-side).
+#[derive(Clone, Debug)]
+pub struct FusionReport {
+    pub kernel_recognized: u64,
+    pub kernel_unmatched: u64,
+    pub kernel_slices_fused: u64,
+    pub kernel_slices_fallback: u64,
+    /// Kernel-recognition rejections by reason label
+    /// (`not-closure`, `params`, `env-mutation`, `named-args`,
+    /// `shadowed`, `shape`).
+    pub kernel_rejections: Vec<(&'static str, u64)>,
+    pub reduce_plans_attached: u64,
+    pub reduce_slices_folded: u64,
+    pub reduce_slices_fallback: u64,
+    /// Reduce-plan rejections by reason label
+    /// (`shadowed`, `not-in-catalog`, `vec-gate`).
+    pub reduce_rejections: Vec<(&'static str, u64)>,
+}
+
+impl FusionReport {
+    /// Multi-line human rendering (diagnostics/debug output).
+    pub fn render(&self) -> String {
+        let fmt_reasons = |rs: &[(&'static str, u64)]| {
+            rs.iter()
+                .map(|(l, n)| format!("{l}={n}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
+        format!(
+            "kernel: recognized={} unmatched={} slices_fused={} slices_fallback={}\n\
+             kernel rejections: {}\n\
+             reduce: plans_attached={} slices_folded={} slices_fallback={}\n\
+             reduce rejections: {}",
+            self.kernel_recognized,
+            self.kernel_unmatched,
+            self.kernel_slices_fused,
+            self.kernel_slices_fallback,
+            fmt_reasons(&self.kernel_rejections),
+            self.reduce_plans_attached,
+            self.reduce_slices_folded,
+            self.reduce_slices_fallback,
+            fmt_reasons(&self.reduce_rejections),
+        )
+    }
+}
+
+/// Read the current fusion/reduction counters (test + diagnostics
+/// hook; satellite of the parallel-safety analyzer).
+pub fn fusion_report() -> FusionReport {
+    FusionReport {
+        kernel_recognized: transpile::fusion::contexts_recognized(),
+        kernel_unmatched: transpile::fusion::contexts_unmatched(),
+        kernel_slices_fused: transpile::fusion::slices_fused(),
+        kernel_slices_fallback: transpile::fusion::slices_fallback(),
+        kernel_rejections: transpile::fusion::rejection_counts(),
+        reduce_plans_attached: transpile::reduce::plans_attached(),
+        reduce_slices_folded: transpile::reduce::slices_folded(),
+        reduce_slices_fallback: transpile::reduce::slices_fallback(),
+        reduce_rejections: transpile::reduce::plan_rejections(),
+    }
 }

@@ -12,9 +12,19 @@ futurize-rs — unified, transpiling map-reduce parallelism (futurize reproducti
 USAGE:
     futurize-rs run <script.R> [--time-scale X] [--trace]
     futurize-rs eval <expr> [--time-scale X]
+    futurize-rs lint <script.R>
     futurize-rs supported [package]
     futurize-rs doctor
 ";
+
+fn truncate(s: &str, max: usize) -> String {
+    if s.chars().count() <= max {
+        s.to_string()
+    } else {
+        let head: String = s.chars().take(max.saturating_sub(3)).collect();
+        format!("{head}...")
+    }
+}
 
 fn main() {
     // Worker mode: the multisession backend re-executes this binary with
@@ -79,6 +89,43 @@ fn main() {
                     eprintln!("{e}");
                     std::process::exit(1);
                 }
+            }
+        }
+        "lint" => {
+            let Some(script) = args.get(1).filter(|a| !a.starts_with("--")) else {
+                eprintln!("futurize-rs lint: missing script path");
+                std::process::exit(2);
+            };
+            let src = match std::fs::read_to_string(script) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("futurize-rs: cannot read {script}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            let findings = match futurize::transpile::analysis::lint_source(&src) {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!("futurize-rs lint: parse error in {script}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            if findings.is_empty() {
+                println!("{script}: no findings");
+                return;
+            }
+            let mut worst_is_actionable = false;
+            for f in &findings {
+                println!("{script} (statement {}): {}", f.stmt, truncate(&f.call, 72));
+                print!("{}", futurize::rlite::diag::render_table(&f.diags));
+                println!();
+                worst_is_actionable |= f
+                    .diags
+                    .iter()
+                    .any(|d| d.level >= futurize::rlite::diag::LintLevel::Warn);
+            }
+            if worst_is_actionable {
+                std::process::exit(1);
             }
         }
         "supported" => match args.get(1) {

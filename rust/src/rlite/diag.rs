@@ -1,0 +1,267 @@
+//! Diagnostics model for the parallel-safety analyzer
+//! (`transpile::analysis`).
+//!
+//! Every diagnostic carries a stable code (`FZ001`, ...), a severity, the
+//! deparsed offending sub-expression, a human message and a concrete fix
+//! hint. rlite's [`Expr`](super::ast::Expr) carries no source positions
+//! (adding them would change the wire format every backend speaks), so
+//! the deparsed snippet *is* the span: precise enough to locate the
+//! construct, stable across codecs.
+
+use std::fmt;
+
+/// How lint findings are surfaced, `futurize(lint = ...)`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LintMode {
+    /// Skip the analysis entirely.
+    Off,
+    /// Relay Warn-level findings through the ordered condition relay,
+    /// once per map call, then execute normally (the default).
+    #[default]
+    Warn,
+    /// Promote Warn-level findings to a classed `FuturizeLintError`
+    /// condition raised at freeze time, before any worker is touched.
+    Error,
+}
+
+impl LintMode {
+    pub fn parse(s: &str) -> Option<LintMode> {
+        match s {
+            "off" => Some(LintMode::Off),
+            "warn" => Some(LintMode::Warn),
+            "error" => Some(LintMode::Error),
+            _ => None,
+        }
+    }
+}
+
+/// Environment override for the lint mode — the operator's kill switch
+/// (`FUTURIZE_LINT=off`) and promotion lever (`FUTURIZE_LINT=error`).
+pub const LINT_ENV: &str = "FUTURIZE_LINT";
+
+/// The effective mode for one map call: the env var, when set to a
+/// valid mode, overrides the per-call option. Read per call (not
+/// cached) so tests and operators can toggle it without restarting.
+pub fn effective_mode(opt: LintMode) -> LintMode {
+    match std::env::var(LINT_ENV) {
+        Ok(v) => LintMode::parse(&v).unwrap_or(opt),
+        Err(_) => opt,
+    }
+}
+
+/// Per-map-call lint configuration distilled into
+/// [`MapOptions`](crate::future_core::driver::MapOptions). Besides the
+/// mode it carries the reduction facts the freeze-time analyzer needs
+/// but that `MapOptions::reduce` no longer encodes once a combine fails
+/// to map onto a worker-side plan.
+#[derive(Clone, Debug, Default)]
+pub struct LintSettings {
+    pub mode: LintMode,
+    /// The user asked for `reduce = "assoc"` (reassociated FP folding).
+    pub assoc_requested: bool,
+    /// The recognized reduction head/combine symbol, if any.
+    pub reduce_op: Option<String>,
+    /// A combine function that cannot be proven associative (a user
+    /// `.combine`), by display name.
+    pub nonassoc_combine: Option<String>,
+    /// Why no worker-side fold plan was attached despite a reduction
+    /// being requested (shadowed outer symbol, op not in the catalog).
+    pub reduce_rejected: Option<String>,
+}
+
+/// Severity of one finding, ordered `Info < Warn < Error`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LintLevel {
+    /// Explanatory only (fusion-rejection reasons, ULP contract notes):
+    /// shown by the `lint` CLI and `fusion_report()`, never relayed.
+    Info,
+    /// Relayed as a warning; promoted to an error under
+    /// `lint = "error"`.
+    Warn,
+    /// Always raises before dispatch.
+    Error,
+}
+
+impl LintLevel {
+    pub fn label(self) -> &'static str {
+        match self {
+            LintLevel::Info => "info",
+            LintLevel::Warn => "warn",
+            LintLevel::Error => "error",
+        }
+    }
+}
+
+/// Stable diagnostic codes. Codes are append-only: a released code never
+/// changes meaning, so scripts and CI greps can pin them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DiagCode {
+    /// FZ001 — cross-iteration dependence: `<<-`/`assign()` into a
+    /// binding the body also reads, so element i depends on i-1.
+    CrossIterationDependence,
+    /// FZ002 — RNG builtins in a body without `seed = TRUE`.
+    NonReproducibleRng,
+    /// FZ003 — a free variable that resolves to nothing at freeze time
+    /// (would surface as a worker-side "not found" error).
+    UnresolvableGlobal,
+    /// FZ004 — the captured/global export exceeds the size threshold.
+    OversizedCapture,
+    /// FZ005 — a combine that cannot be proven associative under
+    /// `reduce = "assoc"`.
+    OrderDependentReduction,
+    /// FZ006 — a floating-point fold opted into `reduce = "assoc"`
+    /// (the documented last-ULPs contract applies).
+    FloatFoldUlp,
+    /// FZ007 — kernel fusion rejected this body; names the blocker.
+    KernelFusionRejected,
+    /// FZ008 — reduction fusion rejected this call; names the blocker.
+    ReduceFusionRejected,
+}
+
+impl DiagCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DiagCode::CrossIterationDependence => "FZ001",
+            DiagCode::NonReproducibleRng => "FZ002",
+            DiagCode::UnresolvableGlobal => "FZ003",
+            DiagCode::OversizedCapture => "FZ004",
+            DiagCode::OrderDependentReduction => "FZ005",
+            DiagCode::FloatFoldUlp => "FZ006",
+            DiagCode::KernelFusionRejected => "FZ007",
+            DiagCode::ReduceFusionRejected => "FZ008",
+        }
+    }
+
+    /// The level a finding of this code carries before any promotion.
+    pub fn default_level(self) -> LintLevel {
+        match self {
+            DiagCode::CrossIterationDependence
+            | DiagCode::NonReproducibleRng
+            | DiagCode::UnresolvableGlobal
+            | DiagCode::OversizedCapture
+            | DiagCode::OrderDependentReduction => LintLevel::Warn,
+            DiagCode::FloatFoldUlp
+            | DiagCode::KernelFusionRejected
+            | DiagCode::ReduceFusionRejected => LintLevel::Info,
+        }
+    }
+}
+
+/// One analyzer finding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    pub code: DiagCode,
+    pub level: LintLevel,
+    /// Deparsed offending sub-expression (the "span").
+    pub snippet: String,
+    pub message: String,
+    /// A concrete, actionable fix.
+    pub hint: String,
+}
+
+impl Diagnostic {
+    pub fn new(
+        code: DiagCode,
+        snippet: impl Into<String>,
+        message: impl Into<String>,
+        hint: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic {
+            code,
+            level: code.default_level(),
+            snippet: snippet.into(),
+            message: message.into(),
+            hint: hint.into(),
+        }
+    }
+
+    /// One-line rendering used in relayed warnings and raised errors.
+    pub fn render(&self) -> String {
+        format!(
+            "{} [{}] `{}`: {} (fix: {})",
+            self.code.as_str(),
+            self.level.label(),
+            self.snippet,
+            self.message,
+            self.hint
+        )
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+/// Render findings as the aligned table the `futurize-rs lint`
+/// subcommand prints.
+pub fn render_table(diags: &[Diagnostic]) -> String {
+    let mut out = String::new();
+    let wide = |s: &str, w: usize| format!("{s:<w$}");
+    out.push_str(&format!(
+        "{}  {}  {:<40}  {}\n",
+        wide("CODE", 6),
+        wide("LEVEL", 5),
+        "EXPRESSION",
+        "MESSAGE"
+    ));
+    for d in diags {
+        let snippet = if d.snippet.chars().count() > 40 {
+            let head: String = d.snippet.chars().take(37).collect();
+            format!("{head}...")
+        } else {
+            d.snippet.clone()
+        };
+        out.push_str(&format!(
+            "{}  {}  {:<40}  {} (fix: {})\n",
+            wide(d.code.as_str(), 6),
+            wide(d.level.label(), 5),
+            snippet,
+            d.message,
+            d.hint
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_levelled() {
+        assert_eq!(DiagCode::CrossIterationDependence.as_str(), "FZ001");
+        assert_eq!(DiagCode::ReduceFusionRejected.as_str(), "FZ008");
+        assert_eq!(DiagCode::CrossIterationDependence.default_level(), LintLevel::Warn);
+        assert_eq!(DiagCode::KernelFusionRejected.default_level(), LintLevel::Info);
+        assert!(LintLevel::Info < LintLevel::Warn && LintLevel::Warn < LintLevel::Error);
+    }
+
+    #[test]
+    fn mode_parses_and_env_overrides() {
+        assert_eq!(LintMode::parse("warn"), Some(LintMode::Warn));
+        assert_eq!(LintMode::parse("error"), Some(LintMode::Error));
+        assert_eq!(LintMode::parse("off"), Some(LintMode::Off));
+        assert_eq!(LintMode::parse("loud"), None);
+        // Without the env var the option wins (the var is absent in the
+        // test environment unless a CI leg sets it globally).
+        if std::env::var(LINT_ENV).is_err() {
+            assert_eq!(effective_mode(LintMode::Error), LintMode::Error);
+        }
+    }
+
+    #[test]
+    fn render_carries_code_and_hint() {
+        let d = Diagnostic::new(
+            DiagCode::CrossIterationDependence,
+            "total <<- total + x",
+            "body mutates a binding it also reads",
+            "use a reduction instead",
+        );
+        let s = d.render();
+        assert!(s.contains("FZ001") && s.contains("fix:"), "{s}");
+        let t = render_table(std::slice::from_ref(&d));
+        assert!(t.contains("FZ001") && t.contains("total <<- total + x"), "{t}");
+    }
+}

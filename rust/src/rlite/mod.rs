@@ -23,6 +23,7 @@ pub mod ast;
 pub mod builtins;
 pub mod conditions;
 pub mod deparse;
+pub mod diag;
 pub mod env;
 pub mod eval;
 pub mod intern;

@@ -1,0 +1,1008 @@
+//! Parallel-safety analyzer — the freeze-time static pass over every
+//! futurized map/reduce expression.
+//!
+//! The paper's contract is "declare *what* to parallelize, let the end
+//! user choose *how*" — which silently assumes the declared body is
+//! actually safe to parallelize. This pass checks that assumption at
+//! the same moment the transpiler freezes the map (closure + captures
+//! already in wire form, kernel/reduce recognition already decided) and
+//! reports violations in the *parent*, before any worker is touched:
+//!
+//! - FZ001 cross-iteration dependence (`<<-`/`assign()` into a binding
+//!   the body also reads),
+//! - FZ002 RNG draws without `seed = TRUE`,
+//! - FZ003 free variables that resolve to nothing at freeze time,
+//! - FZ004 oversized captured/global exports,
+//! - FZ005 order-dependent reductions under `reduce = "assoc"`,
+//! - FZ006/FZ007/FZ008 Info-level explanations (assoc float-fold ULP
+//!   contract, kernel-fusion and reduce-fusion rejection reasons).
+//!
+//! Findings surface per [`LintMode`]: relayed once per map call as
+//! classed warnings (default), promoted to a classed
+//! `FuturizeLintError` before dispatch (`lint = "error"` /
+//! `FUTURIZE_LINT=error`), or skipped entirely (`"off"`). The same
+//! detectors back the `futurize-rs lint` CLI subcommand, which runs
+//! them over a parsed script with no session at all ([`lint_source`]).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::future_core::driver::{MapOptions, SeedOption};
+use crate::globals::free_variables;
+use crate::rlite::ast::{Arg, Expr, Param};
+use crate::rlite::builtins;
+use crate::rlite::conditions::RCondition;
+use crate::rlite::deparse::deparse;
+use crate::rlite::diag::{DiagCode, Diagnostic, LintLevel, LintMode};
+use crate::rlite::eval::{Interp, Signal};
+use crate::rlite::intern::Symbol;
+use crate::rlite::serialize::WireVal;
+use crate::transpile::fusion::{self, RejectReason};
+use crate::transpile::reduce::ReduceOp;
+
+/// Captured + global export volume above which FZ004 fires. Shipping
+/// multiple megabytes per map call usually means a dataset leaked into
+/// the closure environment instead of being chunked as items.
+pub const OVERSIZE_BYTES: usize = 4 << 20;
+
+/// Builtins whose evaluation draws from the RNG stream (mirrors
+/// `rlite::builtins::stats_rng` plus `set.seed`, which silently
+/// overrides the per-element L'Ecuyer streams).
+const RNG_BUILTINS: &[&str] =
+    &["set.seed", "rnorm", "runif", "rexp", "rbinom", "rpois", "sample"];
+
+// ---------------------------------------------------------------------------
+// AST walking primitives
+// ---------------------------------------------------------------------------
+
+/// Pre-order walk over every sub-expression, including nested function
+/// bodies and parameter defaults.
+pub fn walk(e: &Expr, f: &mut dyn FnMut(&Expr)) {
+    f(e);
+    match e {
+        Expr::Call { func, args } => {
+            walk(func, f);
+            walk_args(args, f);
+        }
+        Expr::Function { params, body } => {
+            for p in params {
+                if let Some(d) = &p.default {
+                    walk(d, f);
+                }
+            }
+            walk(body, f);
+        }
+        Expr::Block(es) => {
+            for x in es {
+                walk(x, f);
+            }
+        }
+        Expr::If { cond, then, els } => {
+            walk(cond, f);
+            walk(then, f);
+            if let Some(x) = els {
+                walk(x, f);
+            }
+        }
+        Expr::For { seq, body, .. } => {
+            walk(seq, f);
+            walk(body, f);
+        }
+        Expr::While { cond, body } => {
+            walk(cond, f);
+            walk(body, f);
+        }
+        Expr::Assign { target, value } | Expr::SuperAssign { target, value } => {
+            walk(target, f);
+            walk(value, f);
+        }
+        Expr::Index { obj, args, .. } => {
+            walk(obj, f);
+            walk_args(args, f);
+        }
+        Expr::Dollar { obj, .. } => walk(obj, f),
+        _ => {}
+    }
+}
+
+fn walk_args(args: &[Arg], f: &mut dyn FnMut(&Expr)) {
+    for a in args {
+        walk(&a.value, f);
+    }
+}
+
+/// The base symbol of an assignment target: `x` for `x`, `x[i]`,
+/// `x[[i]]$field` alike.
+fn base_sym(e: &Expr) -> Option<Symbol> {
+    match e {
+        Expr::Sym(s) => Some(*s),
+        Expr::Index { obj, .. } => base_sym(obj),
+        Expr::Dollar { obj, .. } => base_sym(obj),
+        _ => None,
+    }
+}
+
+/// Bindings the body writes into an *enclosing* frame: `name <<- ...`
+/// (any target shape, reduced to its base symbol) and
+/// `assign("name", ...)`. Returns `(name, offending-snippet)` pairs in
+/// first-occurrence order.
+fn escaping_writes(body: &Expr) -> Vec<(Symbol, String)> {
+    let mut out: Vec<(Symbol, String)> = Vec::new();
+    let mut seen: HashSet<Symbol> = HashSet::new();
+    walk(body, &mut |e| match e {
+        Expr::SuperAssign { target, .. } => {
+            if let Some(s) = base_sym(target) {
+                if seen.insert(s) {
+                    out.push((s, deparse(e)));
+                }
+            }
+        }
+        Expr::Call { args, .. } if e.call_name() == Some("assign") => {
+            if let Some(Arg { name: None, value: Expr::Str(n) }) = args.first() {
+                let s = Symbol::from(n.as_str());
+                if seen.insert(s) {
+                    out.push((s, deparse(e)));
+                }
+            }
+        }
+        _ => {}
+    });
+    out
+}
+
+/// Symbols the body *reads*. Plain assignment targets are writes, not
+/// reads; an `x[i] <- v` or `x$f <<- v` target reads its base object
+/// (read-modify-write), so those do count.
+fn collect_reads(e: &Expr, reads: &mut HashSet<Symbol>) {
+    match e {
+        Expr::Sym(s) => {
+            reads.insert(*s);
+        }
+        Expr::Assign { target, value } | Expr::SuperAssign { target, value } => {
+            if !matches!(&**target, Expr::Sym(_)) {
+                collect_reads(target, reads);
+            }
+            collect_reads(value, reads);
+        }
+        // Recurse by hand (not via `walk`) so nested assignments keep
+        // their write/read distinction.
+        _ => collect_reads_children(e, reads),
+    }
+}
+
+fn collect_reads_children(e: &Expr, reads: &mut HashSet<Symbol>) {
+    match e {
+        Expr::Call { func, args } => {
+            collect_reads(func, reads);
+            for a in args {
+                collect_reads(&a.value, reads);
+            }
+        }
+        Expr::Function { params, body } => {
+            for p in params {
+                if let Some(d) = &p.default {
+                    collect_reads(d, reads);
+                }
+            }
+            collect_reads(body, reads);
+        }
+        Expr::Block(es) => {
+            for x in es {
+                collect_reads(x, reads);
+            }
+        }
+        Expr::If { cond, then, els } => {
+            collect_reads(cond, reads);
+            collect_reads(then, reads);
+            if let Some(x) = els {
+                collect_reads(x, reads);
+            }
+        }
+        Expr::For { seq, body, .. } => {
+            collect_reads(seq, reads);
+            collect_reads(body, reads);
+        }
+        Expr::While { cond, body } => {
+            collect_reads(cond, reads);
+            collect_reads(body, reads);
+        }
+        Expr::Index { obj, args, .. } => {
+            collect_reads(obj, reads);
+            for a in args {
+                collect_reads(&a.value, reads);
+            }
+        }
+        Expr::Dollar { obj, .. } => collect_reads(obj, reads),
+        _ => {}
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Body detectors (shared by the runtime hook and the CLI)
+// ---------------------------------------------------------------------------
+
+/// Run the body-level detectors (FZ001, FZ002, FZ003) over one map
+/// function. `resolve` answers "does this free variable resolve to a
+/// value at freeze time?" — captured bindings plus explicit globals at
+/// runtime, top-level script definitions in the CLI.
+pub fn analyze_body(
+    params: &[Param],
+    body: &Expr,
+    seed_on: bool,
+    resolve: &dyn Fn(&str) -> bool,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+
+    // FZ001 — cross-iteration dependence.
+    let writes = escaping_writes(body);
+    if !writes.is_empty() {
+        let mut reads: HashSet<Symbol> = HashSet::new();
+        collect_reads(body, &mut reads);
+        for (name, snippet) in &writes {
+            if reads.contains(name) {
+                diags.push(Diagnostic::new(
+                    DiagCode::CrossIterationDependence,
+                    snippet.clone(),
+                    format!(
+                        "the body writes `{name}` into an enclosing frame and also reads \
+                         it, so element i depends on element i-1 — a parallel map cannot \
+                         honor that ordering (each worker sees its own copy)"
+                    ),
+                    "return per-element values and fold them in the parent \
+                     (e.g. sum(...), Reduce(...), or futurize(reduce = \"exact\"))",
+                ));
+            }
+        }
+    }
+
+    // FZ002 — non-reproducible RNG.
+    if !seed_on {
+        let mut rng_names: Vec<&'static str> = Vec::new();
+        let mut first_snippet: Option<String> = None;
+        walk(body, &mut |e| {
+            if let Some(name) = e.call_name() {
+                if let Some(hit) = RNG_BUILTINS.iter().copied().find(|b| *b == name) {
+                    if !rng_names.contains(&hit) {
+                        rng_names.push(hit);
+                    }
+                    if first_snippet.is_none() {
+                        first_snippet = Some(deparse(e));
+                    }
+                }
+            }
+        });
+        if let Some(snippet) = first_snippet {
+            diags.push(Diagnostic::new(
+                DiagCode::NonReproducibleRng,
+                snippet,
+                format!(
+                    "the body draws random numbers ({}) without `seed = TRUE`, so \
+                     results are irreproducible and statistically unsound across \
+                     workers",
+                    rng_names.join(", ")
+                ),
+                "pass seed = TRUE (or seed = <int>) to futurize() for per-element \
+                 L'Ecuyer streams",
+            ));
+        }
+    }
+
+    // FZ003 — unresolvable globals, reported at the parent instead of
+    // as a worker-side "object not found" error.
+    let body_fn =
+        Expr::Function { params: params.to_vec(), body: Box::new(body.clone()) };
+    for sym in free_variables(&body_fn) {
+        let name = sym.as_str();
+        if name == "..." || builtins::lookup_builtin(name).is_some() || resolve(name) {
+            continue;
+        }
+        diags.push(Diagnostic::new(
+            DiagCode::UnresolvableGlobal,
+            name,
+            format!(
+                "`{name}` resolves to nothing at freeze time; the worker would fail \
+                 with \"object '{name}' not found\""
+            ),
+            format!(
+                "define `{name}` before the futurize() call or export it explicitly \
+                 via futurize(globals = c(\"{name}\"))"
+            ),
+        ));
+    }
+
+    diags
+}
+
+// ---------------------------------------------------------------------------
+// Runtime entry points (called from future_core::dispatch at freeze time)
+// ---------------------------------------------------------------------------
+
+/// Analyze one frozen map call: the wire closure, its extra arguments,
+/// explicit globals, whether kernel fusion matched, and the map
+/// options (seed + distilled lint/reduce facts).
+pub fn analyze_map(
+    f: &WireVal,
+    extra: &[(Option<String>, WireVal)],
+    globals: &[(String, WireVal)],
+    kernel_attached: bool,
+    opts: &MapOptions,
+) -> Vec<Diagnostic> {
+    let seed_on = !matches!(opts.seed, SeedOption::False);
+    let mut diags = Vec::new();
+
+    if let WireVal::Closure { params, body, captured } = f {
+        let resolve = |name: &str| {
+            captured.iter().any(|(n, _)| n == name)
+                || globals.iter().any(|(n, _)| n == name)
+                || extra.iter().any(|(n, _)| n.as_deref() == Some(name))
+        };
+        diags.extend(analyze_body(params, body, seed_on, &resolve));
+    }
+
+    // FZ004 — oversized capture/global export.
+    let export: usize = f.approx_size()
+        + globals.iter().map(|(n, v)| n.len() + v.approx_size()).sum::<usize>()
+        + extra.iter().map(|(_, v)| v.approx_size()).sum::<usize>();
+    if export > OVERSIZE_BYTES {
+        let largest = largest_binding(f, globals);
+        diags.push(Diagnostic::new(
+            DiagCode::OversizedCapture,
+            largest.clone().unwrap_or_else(|| "<captures>".into()),
+            format!(
+                "the frozen closure exports ~{:.1} MiB to every worker{} — likely a \
+                 dataset captured by the closure instead of chunked as map items",
+                export as f64 / (1024.0 * 1024.0),
+                largest
+                    .map(|n| format!(" (largest binding: `{n}`)"))
+                    .unwrap_or_default()
+            ),
+            "pass large inputs as map items (they chunk and ship once per worker) \
+             or slim the captured environment",
+        ));
+    }
+
+    diags.extend(reduction_diags(opts));
+
+    // FZ007 — explain why kernel fusion rejected this body, for the
+    // blockers a user can actually act on.
+    if !kernel_attached && fusion::enabled() {
+        match fusion::classify_rejection(f, extra, globals) {
+            RejectReason::Params => diags.push(Diagnostic::new(
+                DiagCode::KernelFusionRejected,
+                closure_head(f),
+                "kernel fusion rejected this body: parameter list uses `...` or is \
+                 empty, so arguments cannot be statically bound",
+                "use explicitly named parameters",
+            )),
+            RejectReason::NamedArgs => diags.push(Diagnostic::new(
+                DiagCode::KernelFusionRejected,
+                closure_head(f),
+                "kernel fusion rejected this body: a call passes named arguments, \
+                 which the kernel catalog does not model",
+                "pass arguments positionally inside the map body",
+            )),
+            RejectReason::EnvMutation => diags.push(Diagnostic::new(
+                DiagCode::KernelFusionRejected,
+                closure_head(f),
+                "kernel fusion rejected this body: it mutates an enclosing \
+                 environment (`<<-`/`assign`), which kernels cannot replay",
+                "make the body a pure function of its element",
+            )),
+            RejectReason::Shadowed => diags.push(Diagnostic::new(
+                DiagCode::KernelFusionRejected,
+                closure_head(f),
+                "kernel fusion rejected this body: an arithmetic builtin is \
+                 shadowed by a local binding, so calls carry user semantics",
+                "rename the shadowing binding if builtin semantics were intended",
+            )),
+            RejectReason::NotClosure | RejectReason::Shape => {}
+        }
+    }
+
+    diags
+}
+
+/// Analyze one frozen foreach call (the body is a bare expression, the
+/// iteration variables arrive as per-element bindings).
+pub fn analyze_foreach(
+    body: &Expr,
+    binding_names: &[String],
+    globals: &[(String, WireVal)],
+    opts: &MapOptions,
+) -> Vec<Diagnostic> {
+    let seed_on = !matches!(opts.seed, SeedOption::False);
+    let params: Vec<Param> = binding_names
+        .iter()
+        .map(|n| Param { name: Symbol::from(n.as_str()), default: None })
+        .collect();
+    let resolve = |name: &str| globals.iter().any(|(n, _)| n == name);
+    let mut diags = analyze_body(&params, body, seed_on, &resolve);
+    diags.extend(reduction_diags(opts));
+    diags
+}
+
+/// FZ005/FZ006/FZ008 — reduction-order findings shared by map and
+/// foreach, from the facts `to_map_options`/`do_future` distilled into
+/// `opts.lint`.
+fn reduction_diags(opts: &MapOptions) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if opts.lint.assoc_requested {
+        if let Some(combine) = &opts.lint.nonassoc_combine {
+            diags.push(Diagnostic::new(
+                DiagCode::OrderDependentReduction,
+                combine.clone(),
+                format!(
+                    "`{combine}` cannot be proven associative, and reduce = \"assoc\" \
+                     reassociates the fold across chunks — the result becomes \
+                     chunking-order dependent"
+                ),
+                "use reduce = \"exact\" (order-preserving) or a builtin associative \
+                 combine (+, *, min, max, c)",
+            ));
+        }
+    }
+    if let Some(spec) = &opts.reduce {
+        if spec.plan.assoc
+            && matches!(
+                spec.plan.op,
+                ReduceOp::Sum | ReduceOp::Prod | ReduceOp::Mean | ReduceOp::Add | ReduceOp::Mul
+            )
+        {
+            diags.push(Diagnostic::new(
+                DiagCode::FloatFoldUlp,
+                spec.plan.op.source_name(),
+                "floating-point fold under reduce = \"assoc\": workers reassociate \
+                 the accumulation, so the result may differ from sequential order \
+                 in the last ULPs (documented contract)",
+                "use reduce = \"exact\" if bit-identical results are required",
+            ));
+        }
+    }
+    if let Some(reason) = &opts.lint.reduce_rejected {
+        diags.push(Diagnostic::new(
+            DiagCode::ReduceFusionRejected,
+            opts.lint.reduce_op.clone().unwrap_or_else(|| "reduce".into()),
+            format!("reduction fusion rejected this call: {reason}; workers ship full \
+                 per-element results instead of O(1) partials"),
+            "check fusion_report() for counters; the fallback path is exact but \
+             ships O(n) result bytes",
+        ));
+    }
+    diags
+}
+
+fn closure_head(f: &WireVal) -> String {
+    match f {
+        WireVal::Closure { params, .. } => format!(
+            "function({})",
+            params.iter().map(|p| p.name.as_str()).collect::<Vec<_>>().join(", ")
+        ),
+        WireVal::Builtin(n) => n.clone(),
+        _ => "<function>".into(),
+    }
+}
+
+fn largest_binding(f: &WireVal, globals: &[(String, WireVal)]) -> Option<String> {
+    let captured: &[(String, WireVal)] = match f {
+        WireVal::Closure { captured, .. } => captured,
+        _ => &[],
+    };
+    captured
+        .iter()
+        .chain(globals.iter())
+        .max_by_key(|(_, v)| v.approx_size())
+        .map(|(n, _)| n.clone())
+}
+
+/// Surface findings per the effective mode. Warn-level and above only
+/// (Info findings are for the CLI and `fusion_report()`):
+///
+/// - `Error` → one classed `FuturizeLintError` raised immediately,
+///   joining every finding, *before* any backend/worker exists;
+/// - `Warn` → each finding relayed once per map call as a classed
+///   `FuturizeLintWarning` through the ordered condition machinery;
+/// - `Off` → nothing.
+pub fn surface(
+    i: &mut Interp,
+    diags: &[Diagnostic],
+    mode: LintMode,
+) -> Result<(), Signal> {
+    let actionable: Vec<&Diagnostic> =
+        diags.iter().filter(|d| d.level >= LintLevel::Warn).collect();
+    if actionable.is_empty() || mode == LintMode::Off {
+        return Ok(());
+    }
+    match mode {
+        LintMode::Error => {
+            let joined =
+                actionable.iter().map(|d| d.render()).collect::<Vec<_>>().join("\n  ");
+            let mut cond = RCondition::error_cond(format!("futurize lint: {joined}"));
+            cond.classes = vec![
+                "FuturizeLintError".into(),
+                "FutureError".into(),
+                "error".into(),
+                "condition".into(),
+            ];
+            Err(Signal::Error(cond))
+        }
+        _ => {
+            for d in actionable {
+                let mut cond =
+                    RCondition::warning_cond(format!("futurize lint: {}", d.render()));
+                cond.classes = vec![
+                    "FuturizeLintWarning".into(),
+                    "warning".into(),
+                    "condition".into(),
+                ];
+                i.signal_condition(cond)?;
+            }
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Script-level analysis (the `futurize-rs lint` CLI)
+// ---------------------------------------------------------------------------
+
+/// One analyzed `futurize()` call site in a script.
+#[derive(Clone, Debug)]
+pub struct ScriptFinding {
+    /// 1-based top-level statement index.
+    pub stmt: usize,
+    /// Deparsed futurize call (for the report header).
+    pub call: String,
+    pub diags: Vec<Diagnostic>,
+}
+
+/// Heads whose first argument is "the thing being reduced/unwrapped" —
+/// the analyzer descends through them to find the map call.
+const UNWRAP_HEADS: &[&str] = &[
+    "unlist",
+    "suppressWarnings",
+    "suppressMessages",
+    "sum",
+    "prod",
+    "mean",
+    "min",
+    "max",
+    "length",
+    "any",
+    "all",
+];
+
+/// Map-family heads: `(items, fn, ...)` — the function is the second
+/// positional argument.
+const MAP_HEADS: &[&str] = &[
+    "lapply",
+    "sapply",
+    "vapply",
+    "map",
+    "map_dbl",
+    "map_chr",
+    "map_lgl",
+    "map_int",
+    "walk",
+    "llply",
+    "bplapply",
+    "xmap",
+    "xmap_dbl",
+    "xmap_chr",
+    "xwalk",
+    "future_lapply",
+    "future_sapply",
+    "future_vapply",
+    "future_map",
+    "future_map_dbl",
+    "future_map_chr",
+    "future_map_lgl",
+    "future_map_int",
+    "future_walk",
+    "future_xmap",
+    "future_xmap_dbl",
+    "future_xmap_chr",
+    "future_xwalk",
+];
+
+/// Combines provably associative for FZ005 purposes.
+const ASSOC_COMBINES: &[&str] = &["+", "*", "min", "max", "c", "sum", "prod"];
+
+/// Statically analyze a whole script: find every `futurize()` call,
+/// locate the map expression under it, and run the freeze-time
+/// detectors against top-level definitions. Purely syntactic — no
+/// session, no workers. Used by `futurize-rs lint`.
+pub fn lint_source(src: &str) -> Result<Vec<ScriptFinding>, String> {
+    let prog = crate::rlite::parse_program(src)?;
+
+    // Pass 1: top-level bindings are what free variables can resolve
+    // to at freeze time; keep function literals for indirect bodies
+    // (`f <- function(x) ...; lapply(xs, f) |> futurize()`).
+    let mut defined: HashSet<String> = HashSet::new();
+    let mut fns: HashMap<String, (Vec<Param>, Expr)> = HashMap::new();
+    for e in &prog {
+        if let Expr::Assign { target, value } = e {
+            if let Expr::Sym(s) = &**target {
+                defined.insert(s.as_str().to_string());
+                if let Expr::Function { params, body } = &**value {
+                    fns.insert(s.as_str().to_string(), (params.clone(), (**body).clone()));
+                }
+            }
+        }
+    }
+
+    // Pass 2: analyze every futurize() call, wherever it nests.
+    let mut findings: Vec<ScriptFinding> = Vec::new();
+    for (idx, stmt) in prog.iter().enumerate() {
+        walk(stmt, &mut |e| {
+            if e.call_name() != Some("futurize") {
+                return;
+            }
+            if let Some(diags) = lint_futurize_call(e, &defined, &fns) {
+                if !diags.is_empty() {
+                    findings.push(ScriptFinding {
+                        stmt: idx + 1,
+                        call: deparse(e),
+                        diags,
+                    });
+                }
+            }
+        });
+    }
+    Ok(findings)
+}
+
+/// Literal options of one futurize() call the static pass understands.
+#[derive(Default)]
+struct CallOpts {
+    seed_on: bool,
+    reduce: Option<String>,
+    lint: Option<String>,
+}
+
+fn literal_opts(args: &[Arg]) -> CallOpts {
+    let mut o = CallOpts::default();
+    for a in args {
+        let Some(name) = a.name.as_deref() else { continue };
+        let key = name.trim_start_matches("future.").replace(['.', '-'], "_");
+        match (key.as_str(), &a.value) {
+            ("seed", Expr::Bool(b)) => o.seed_on = *b,
+            ("seed", Expr::Int(_) | Expr::Num(_)) => o.seed_on = true,
+            ("reduce", Expr::Str(s)) => o.reduce = Some(s.clone()),
+            ("lint", Expr::Str(s)) => o.lint = Some(s.clone()),
+            _ => {}
+        }
+    }
+    o
+}
+
+/// Analyze one `futurize(<expr>, opts...)` call. Returns `None` when
+/// linting is off for this call or no analyzable map shape was found.
+fn lint_futurize_call(
+    call: &Expr,
+    defined: &HashSet<String>,
+    fns: &HashMap<String, (Vec<Param>, Expr)>,
+) -> Option<Vec<Diagnostic>> {
+    let (_, args) = call.as_call()?;
+    let target = &args.iter().find(|a| a.name.is_none())?.value;
+    let opts = literal_opts(args);
+
+    let mode = crate::rlite::diag::effective_mode(
+        opts.lint.as_deref().and_then(LintMode::parse).unwrap_or_default(),
+    );
+    if mode == LintMode::Off {
+        return None;
+    }
+
+    let mut diags = Vec::new();
+    let assoc = opts.reduce.as_deref() == Some("assoc");
+
+    // Descend through reduction/unwrap heads to the map call.
+    let mut cur = target;
+    let mut fold_head: Option<&str> = None;
+    loop {
+        let Some(name) = cur.call_name() else { break };
+        let (_, cargs) = cur.as_call()?;
+        if UNWRAP_HEADS.contains(&name) {
+            if matches!(name, "sum" | "prod" | "mean") {
+                fold_head = Some(name);
+            }
+            cur = &cargs.iter().find(|a| a.name.is_none())?.value;
+            continue;
+        }
+        if name == "Reduce" {
+            let mut pos = cargs.iter().filter(|a| a.name.is_none());
+            let combine = &pos.next()?.value;
+            let inner = &pos.next()?.value;
+            match combine {
+                Expr::Sym(s) if ASSOC_COMBINES.contains(&s.as_str()) => {
+                    if matches!(s.as_str(), "+" | "*" | "sum" | "prod") {
+                        fold_head = Some("Reduce");
+                    }
+                }
+                _ if assoc => diags.push(Diagnostic::new(
+                    DiagCode::OrderDependentReduction,
+                    deparse(combine),
+                    "`Reduce` uses a combine that cannot be proven associative while \
+                     reduce = \"assoc\" reassociates the fold across chunks",
+                    "use reduce = \"exact\" or a builtin associative combine \
+                     (+, *, min, max, c)",
+                )),
+                _ => {}
+            }
+            cur = inner;
+            continue;
+        }
+        break;
+    }
+
+    if assoc && fold_head.is_some() {
+        diags.push(Diagnostic::new(
+            DiagCode::FloatFoldUlp,
+            fold_head.unwrap_or("sum"),
+            "floating-point fold under reduce = \"assoc\": workers reassociate the \
+             accumulation, so results may differ in the last ULPs",
+            "use reduce = \"exact\" if bit-identical results are required",
+        ));
+    }
+
+    // Locate the map body.
+    let resolve = |name: &str| defined.contains(name);
+    let shape = map_shape(cur, fns);
+    match shape {
+        Some(MapShape::Fn { params, body, seed_default }) => {
+            diags.extend(analyze_body(
+                &params,
+                &body,
+                opts.seed_on || seed_default,
+                &resolve,
+            ));
+        }
+        Some(MapShape::Foreach { bindings, body, combine }) => {
+            let params: Vec<Param> = bindings
+                .iter()
+                .map(|n| Param { name: Symbol::from(n.as_str()), default: None })
+                .collect();
+            diags.extend(analyze_body(&params, &body, opts.seed_on, &resolve));
+            if assoc {
+                if let Some(c) = combine {
+                    if !ASSOC_COMBINES.contains(&c.as_str()) {
+                        diags.push(Diagnostic::new(
+                            DiagCode::OrderDependentReduction,
+                            c,
+                            "`.combine` cannot be proven associative while \
+                             reduce = \"assoc\" reassociates the fold across chunks",
+                            "use reduce = \"exact\" or a builtin associative combine \
+                             (+, *, min, max, c)",
+                        ));
+                    }
+                }
+            }
+        }
+        None => {
+            if diags.is_empty() {
+                return None;
+            }
+        }
+    }
+    Some(diags)
+}
+
+enum MapShape {
+    Fn { params: Vec<Param>, body: Expr, seed_default: bool },
+    Foreach { bindings: Vec<String>, body: Expr, combine: Option<String> },
+}
+
+/// Recognize the map call itself and extract the analyzable body.
+fn map_shape(e: &Expr, fns: &HashMap<String, (Vec<Param>, Expr)>) -> Option<MapShape> {
+    let name = e.call_name()?;
+    let (_, args) = e.as_call()?;
+
+    if MAP_HEADS.contains(&name) {
+        let f = &args.iter().filter(|a| a.name.is_none()).nth(1)?.value;
+        let (params, body) = fn_literal(f, fns)?;
+        return Some(MapShape::Fn { params, body, seed_default: false });
+    }
+    if name == "replicate" || name == "times" {
+        // replicate(n, body): the body is the second positional arg and
+        // runs under seed-by-default semantics (resampling APIs).
+        let body = args.iter().filter(|a| a.name.is_none()).nth(1)?.value.clone();
+        return Some(MapShape::Fn { params: Vec::new(), body, seed_default: true });
+    }
+    if matches!(name, "%do%" | "%dopar%" | "%dofuture%") {
+        let mut pos = args.iter().filter(|a| a.name.is_none());
+        let lhs = &pos.next()?.value;
+        let body = pos.next()?.value.clone();
+        if lhs.call_name() == Some("times") {
+            return Some(MapShape::Fn { params: Vec::new(), body, seed_default: true });
+        }
+        if lhs.call_name() != Some("foreach") {
+            return None;
+        }
+        let (_, fargs) = lhs.as_call()?;
+        let mut bindings = Vec::new();
+        let mut combine = None;
+        for a in fargs {
+            match a.name.as_deref() {
+                Some(".combine") => {
+                    combine = match &a.value {
+                        Expr::Sym(s) => Some(s.as_str().to_string()),
+                        Expr::Str(s) => Some(s.clone()),
+                        other => Some(deparse(other)),
+                    };
+                }
+                Some(n) if !n.starts_with('.') => bindings.push(n.to_string()),
+                _ => {}
+            }
+        }
+        return Some(MapShape::Foreach { bindings, body, combine });
+    }
+    None
+}
+
+fn fn_literal(
+    e: &Expr,
+    fns: &HashMap<String, (Vec<Param>, Expr)>,
+) -> Option<(Vec<Param>, Expr)> {
+    match e {
+        Expr::Function { params, body } => Some((params.clone(), (**body).clone())),
+        Expr::Sym(s) => fns.get(s.as_str()).cloned(),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rlite::parse_expr;
+
+    fn closure(src: &str, captured: Vec<(String, WireVal)>) -> WireVal {
+        let Expr::Function { params, body } = parse_expr(src).unwrap() else {
+            panic!("not a function: {src}");
+        };
+        WireVal::Closure { params, body: *body, captured }
+    }
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code.as_str()).collect()
+    }
+
+    fn body_diags(src: &str, seed_on: bool, defined: &[&str]) -> Vec<Diagnostic> {
+        let Expr::Function { params, body } = parse_expr(src).unwrap() else {
+            panic!("not a function: {src}");
+        };
+        analyze_body(&params, &body, seed_on, &|n| defined.contains(&n))
+    }
+
+    #[test]
+    fn fz001_fires_on_read_write_superassign_only() {
+        let d = body_diags("function(x) { total <<- total + x\ntotal }", false, &["total"]);
+        assert_eq!(codes(&d), vec!["FZ001"], "{d:?}");
+        assert!(d[0].render().contains("total <<- total + x"), "{}", d[0].render());
+        // Write-only superassign (no read of the binding) is not a
+        // cross-iteration dependence.
+        let d = body_diags("function(x) { last <<- x\nx * 2 }", false, &["last"]);
+        assert!(codes(&d).is_empty(), "{d:?}");
+        // assign() form.
+        let d = body_diags(
+            "function(x) assign(\"acc\", acc + x)",
+            false,
+            &["acc"],
+        );
+        assert_eq!(codes(&d), vec!["FZ001"], "{d:?}");
+        // Indexed super-assignment is a read-modify-write.
+        let d = body_diags("function(x) out[[x]] <<- x * 2", false, &["out"]);
+        assert_eq!(codes(&d), vec!["FZ001"], "{d:?}");
+    }
+
+    #[test]
+    fn fz002_respects_seed_flag() {
+        let d = body_diags("function(x) runif(1) * x", false, &[]);
+        assert_eq!(codes(&d), vec!["FZ002"], "{d:?}");
+        assert!(d[0].message.contains("runif"), "{}", d[0].message);
+        let d = body_diags("function(x) runif(1) * x", true, &[]);
+        assert!(codes(&d).is_empty(), "{d:?}");
+        // Plain local assignment is not RNG and not FZ001.
+        let d = body_diags("function(x) { y <- x + 1\ny }", false, &[]);
+        assert!(codes(&d).is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn fz003_reports_missing_globals_at_parent() {
+        let d = body_diags("function(x) scale * x", false, &[]);
+        assert_eq!(codes(&d), vec!["FZ003"], "{d:?}");
+        assert!(d[0].message.contains("scale"), "{}", d[0].message);
+        let d = body_diags("function(x) scale * x", false, &["scale"]);
+        assert!(codes(&d).is_empty(), "{d:?}");
+        // Builtins and locally-assigned names never fire.
+        let d = body_diags("function(x) { y <- sum(x)\nsqrt(y) }", false, &[]);
+        assert!(codes(&d).is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn fz004_flags_oversized_capture() {
+        let big = WireVal::Dbl(vec![0.0; (OVERSIZE_BYTES / 8) + 16], None);
+        let f = closure("function(x) x + big", vec![("big".to_string(), big)]);
+        let opts = MapOptions::default();
+        let d = analyze_map(&f, &[], &[], false, &opts);
+        assert!(codes(&d).contains(&"FZ004"), "{d:?}");
+        let small = closure(
+            "function(x) x + k",
+            vec![("k".to_string(), WireVal::Dbl(vec![1.0], None))],
+        );
+        let d = analyze_map(&small, &[], &[], false, &opts);
+        assert!(!codes(&d).contains(&"FZ004"), "{d:?}");
+    }
+
+    #[test]
+    fn fz007_explains_env_mutation_rejection() {
+        let f = closure(
+            "function(x) { cnt <<- cnt + 1\nx * 2 }",
+            vec![("cnt".to_string(), WireVal::Dbl(vec![0.0], None))],
+        );
+        let d = analyze_map(&f, &[], &[], false, &MapOptions::default());
+        assert!(codes(&d).contains(&"FZ001"), "{d:?}");
+        if fusion::enabled() {
+            let info: Vec<_> =
+                d.iter().filter(|x| x.code == DiagCode::KernelFusionRejected).collect();
+            assert_eq!(info.len(), 1, "{d:?}");
+            assert!(info[0].message.contains("mutates"), "{}", info[0].message);
+            assert_eq!(info[0].level, LintLevel::Info);
+        }
+    }
+
+    #[test]
+    fn lint_source_finds_dirty_and_passes_clean() {
+        let dirty = "
+            total <- 0
+            xs <- c(1, 2, 3)
+            r <- lapply(xs, function(x) {
+              total <<- total + x
+              runif(1) * total
+            }) |> futurize()
+        ";
+        let f = lint_source(dirty).unwrap();
+        assert_eq!(f.len(), 1, "{f:?}");
+        let c = codes(&f[0].diags);
+        assert!(c.contains(&"FZ001") && c.contains(&"FZ002"), "{c:?}");
+
+        let clean = "
+            scale <- 2
+            xs <- c(1, 2, 3)
+            r <- lapply(xs, function(x) x * scale) |> futurize()
+            d <- replicate(4, rnorm(2)) |> futurize()
+        ";
+        assert!(lint_source(clean).unwrap().is_empty());
+    }
+
+    #[test]
+    fn lint_source_handles_foreach_and_indirect_fn() {
+        let src = "
+            f <- function(x) missing_thing + x
+            r <- (foreach(x = 1:3, .combine = c) %dofuture% { f(x) }) |> futurize()
+            s <- lapply(1:3, f) |> futurize()
+        ";
+        let f = lint_source(src).unwrap();
+        // Both call sites flag the missing global inside `f`'s body.
+        assert_eq!(f.len(), 1, "{f:?}"); // foreach body calls f (resolves); only lapply(f) descends
+        assert!(codes(&f[0].diags).contains(&"FZ003"), "{f:?}");
+
+        let combine = "
+            r <- (foreach(x = 1:3, .combine = mycomb) %dofuture% { x * 2 }) \
+                |> futurize(reduce = \"assoc\")
+        ";
+        let f = lint_source(combine).unwrap();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(codes(&f[0].diags).contains(&"FZ005"), "{f:?}");
+    }
+
+    #[test]
+    fn lint_source_respects_per_call_off() {
+        let src = "
+            total <- 0
+            r <- lapply(1:3, function(x) { total <<- total + x\ntotal }) \
+                |> futurize(lint = \"off\")
+        ";
+        if std::env::var(crate::rlite::diag::LINT_ENV).is_err() {
+            assert!(lint_source(src).unwrap().is_empty());
+        }
+    }
+}

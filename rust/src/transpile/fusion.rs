@@ -89,6 +89,125 @@ pub fn note_fallback_slice() {
     FALLBACK_SLICES.fetch_add(1, Ordering::Relaxed);
 }
 
+/// Why recognition rejected a map body — the label the rejection
+/// counter ticks under and the parallel-safety analyzer turns into an
+/// FZ007 diagnostic. Classification is best-effort and ordered: the
+/// first blocker found wins (a body can have several).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The mapped function is not a wire closure (builtin reference).
+    NotClosure,
+    /// Empty parameter list or `...` — arguments cannot be bound
+    /// statically.
+    Params,
+    /// The body mutates an enclosing environment (`<<-`, `assign`,
+    /// `rm`).
+    EnvMutation,
+    /// A call passes named arguments, which the catalog does not model.
+    NamedArgs,
+    /// A builtin callee is shadowed by a user binding.
+    Shadowed,
+    /// Everything bindable, just not a catalog shape.
+    Shape,
+}
+
+impl RejectReason {
+    pub fn label(self) -> &'static str {
+        match self {
+            RejectReason::NotClosure => "not-closure",
+            RejectReason::Params => "params",
+            RejectReason::EnvMutation => "env-mutation",
+            RejectReason::NamedArgs => "named-args",
+            RejectReason::Shadowed => "shadowed",
+            RejectReason::Shape => "shape",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            RejectReason::NotClosure => 0,
+            RejectReason::Params => 1,
+            RejectReason::EnvMutation => 2,
+            RejectReason::NamedArgs => 3,
+            RejectReason::Shadowed => 4,
+            RejectReason::Shape => 5,
+        }
+    }
+}
+
+const REJECT_LABELS: [&str; 6] =
+    ["not-closure", "params", "env-mutation", "named-args", "shadowed", "shape"];
+
+static REJECTIONS: [AtomicU64; 6] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// Per-reason rejection counts `(label, count)`, in a stable order.
+/// Exposed through `futurize::fusion_report()`.
+pub fn rejection_counts() -> Vec<(&'static str, u64)> {
+    REJECT_LABELS
+        .iter()
+        .enumerate()
+        .map(|(i, l)| (*l, REJECTIONS[i].load(Ordering::Relaxed)))
+        .collect()
+}
+
+/// Classify why `recognize` would reject this context. Pure (no
+/// counters); also callable on bodies that *would* match, in which
+/// case it answers [`RejectReason::Shape`].
+pub fn classify_rejection(
+    f: &WireVal,
+    extra: &[(Option<String>, WireVal)],
+    globals: &[(String, WireVal)],
+) -> RejectReason {
+    let WireVal::Closure { params, body, captured } = f else {
+        return RejectReason::NotClosure;
+    };
+    if params.is_empty() || params.iter().any(|p| p.name.as_str() == "...") {
+        return RejectReason::Params;
+    }
+    let mut mutates = false;
+    let mut named = false;
+    let mut shadowed = false;
+    crate::transpile::analysis::walk(body, &mut |e| match e {
+        Expr::SuperAssign { .. } => mutates = true,
+        Expr::Call { args, .. } => {
+            if matches!(e.call_name(), Some("assign" | "rm")) {
+                mutates = true;
+            }
+            if args.iter().any(|a| a.name.is_some()) {
+                named = true;
+            }
+            if let Some(name) = e.call_name() {
+                if crate::rlite::builtins::lookup_builtin(name).is_some() {
+                    let bound = params.iter().any(|p| p.name.as_str() == name)
+                        || captured.iter().any(|(n, _)| n == name)
+                        || globals.iter().any(|(n, _)| n == name)
+                        || extra.iter().any(|(n, _)| n.as_deref() == Some(name));
+                    if bound {
+                        shadowed = true;
+                    }
+                }
+            }
+        }
+        _ => {}
+    });
+    if mutates {
+        RejectReason::EnvMutation
+    } else if named {
+        RejectReason::NamedArgs
+    } else if shadowed {
+        RejectReason::Shadowed
+    } else {
+        RejectReason::Shape
+    }
+}
+
 /// A recognized kernel for one map context, shipped inside
 /// `TaskContext` to wherever its slices execute.
 #[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
@@ -126,6 +245,8 @@ pub fn maybe_recognize(
         }
         None => {
             UNMATCHED.fetch_add(1, Ordering::Relaxed);
+            let reason = classify_rejection(f, extra, globals);
+            REJECTIONS[reason.index()].fetch_add(1, Ordering::Relaxed);
             None
         }
     }

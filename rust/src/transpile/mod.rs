@@ -24,6 +24,7 @@
 //! the transpiler descends to the transpilable call and rewrites it *in
 //! place*, preserving the wrappers.
 
+pub mod analysis;
 pub mod fusion;
 pub mod reduce;
 pub mod registry;
@@ -36,6 +37,7 @@ use crate::future_core::driver::{MapOptions, SeedOption};
 use crate::rlite::ast::{Arg, Expr};
 use crate::rlite::builtins::{Args, Reg};
 use crate::rlite::deparse::deparse;
+use crate::rlite::diag::LintMode;
 use crate::rlite::env::EnvRef;
 use crate::rlite::eval::{EvalResult, Interp, Signal};
 use crate::rlite::value::RVal;
@@ -77,6 +79,10 @@ pub struct FuturizeOptions {
     /// `Reduce(f, <map>)` form: the fused result must come back wrapped
     /// in a length-1 list so the kept outer `Reduce` is an identity.
     pub reduce_wrap: bool,
+    /// Parallel-safety analyzer mode: `"warn"` (default), `"error"`
+    /// (promote findings to a classed condition before dispatch) or
+    /// `"off"`. `FUTURIZE_LINT` overrides per call.
+    pub lint: Option<String>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -103,6 +109,7 @@ impl Default for FuturizeOptions {
             reduce: None,
             reduce_op: None,
             reduce_wrap: false,
+            lint: None,
         }
     }
 }
@@ -132,6 +139,21 @@ impl FuturizeOptions {
                 scheduling: self.scheduling.unwrap_or(1.0),
             }
         };
+        let reduce = self.reduce_spec();
+        let mut lint = crate::rlite::diag::LintSettings {
+            mode: self.lint.as_deref().and_then(LintMode::parse).unwrap_or_default(),
+            assoc_requested: self.reduce.as_deref() == Some("assoc"),
+            reduce_op: self.reduce_op.clone(),
+            nonassoc_combine: None,
+            reduce_rejected: None,
+        };
+        if let Some(op) = &self.reduce_op {
+            if reduce.is_none() && self.reduce.as_deref() != Some("off") {
+                reduce::note_plan_rejected_catalog();
+                lint.reduce_rejected =
+                    Some(format!("'{op}' is not in the worker-side fold catalog"));
+            }
+        }
         MapOptions {
             seed,
             policy,
@@ -139,7 +161,8 @@ impl FuturizeOptions {
             conditions: self.conditions.unwrap_or(true),
             stop_on_error: self.stop_on_error.unwrap_or(false),
             retries: self.retries.unwrap_or(0),
-            reduce: self.reduce_spec(),
+            reduce,
+            lint,
         }
     }
 
@@ -241,6 +264,14 @@ fn parse_options(i: &mut Interp, args: &[Arg], env: &EnvRef) -> Result<FuturizeO
                 other => {
                     return Err(Signal::error(format!(
                         "futurize: reduce must be \"exact\", \"assoc\" or \"off\", got {other:?}"
+                    )))
+                }
+            },
+            "lint" => match v.as_str().ok().as_deref() {
+                Some(m @ ("warn" | "error" | "off")) => o.lint = Some(m.to_string()),
+                other => {
+                    return Err(Signal::error(format!(
+                        "futurize: lint must be \"warn\", \"error\" or \"off\", got {other:?}"
                     )))
                 }
             },
@@ -478,6 +509,9 @@ pub(crate) fn future_dot_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     if let Some(r) = &opts.reduce {
         args.push(Arg::named("future.reduce", Expr::Str(r.clone())));
     }
+    if let Some(l) = &opts.lint {
+        args.push(Arg::named("future.lint", Expr::Str(l.clone())));
+    }
 }
 
 /// Append `.options = furrr_options(...)` (furrr's convention).
@@ -512,6 +546,9 @@ pub(crate) fn furrr_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     }
     if let Some(r) = &opts.reduce {
         inner.push(Arg::named("reduce", Expr::Str(r.clone())));
+    }
+    if let Some(l) = &opts.lint {
+        inner.push(Arg::named("lint", Expr::Str(l.clone())));
     }
     if !inner.is_empty() {
         args.push(Arg::named(".options", Expr::ns_call("furrr", "furrr_options", inner)));
@@ -552,6 +589,9 @@ pub(crate) fn dofuture_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) 
     if let Some(r) = &opts.reduce {
         inner.push(Arg::named("reduce", Expr::Str(r.clone())));
     }
+    if let Some(l) = &opts.lint {
+        inner.push(Arg::named("lint", Expr::Str(l.clone())));
+    }
     if !inner.is_empty() {
         args.push(Arg::named(".options.future", Expr::call("list", inner)));
     }
@@ -579,6 +619,9 @@ pub(crate) fn domain_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     }
     if let Some(n) = opts.retries {
         inner.push(Arg::named("retries", Expr::Num(n as f64)));
+    }
+    if let Some(l) = &opts.lint {
+        inner.push(Arg::named("lint", Expr::Str(l.clone())));
     }
     args.push(Arg::named(".futurize_opts", Expr::call("list", inner)));
 }
@@ -636,6 +679,7 @@ pub fn apply_option_pairs(o: &mut FuturizeOptions, pairs: &[(String, RVal)]) {
             "reduce" => o.reduce = v.as_str().ok(),
             "reduce_op" => o.reduce_op = v.as_str().ok(),
             "reduce_wrap" => o.reduce_wrap = v.as_bool().unwrap_or(false),
+            "lint" => o.lint = v.as_str().ok(),
             _ => {}
         }
     }

@@ -84,6 +84,32 @@ pub(crate) fn note_slice_fallback() {
     SLICES_FALLBACK.fetch_add(1, Ordering::Relaxed);
 }
 
+// Plan-level rejections, by reason: "shadowed" — the fold's surface
+// symbol no longer resolves to the genuine builtin in the calling
+// environment; "not-in-catalog" — a reduce was requested but the
+// recognized head/combine has no worker-side fold. (Slice-level
+// exactness-gate fallbacks — the "vec-gate" — are `slices_fallback`.)
+static PLANS_REJECTED_SHADOWED: AtomicU64 = AtomicU64::new(0);
+static PLANS_REJECTED_CATALOG: AtomicU64 = AtomicU64::new(0);
+
+/// Per-reason plan rejection counts `(label, count)`, in a stable
+/// order. Exposed through `futurize::fusion_report()`.
+pub fn plan_rejections() -> Vec<(&'static str, u64)> {
+    vec![
+        ("shadowed", PLANS_REJECTED_SHADOWED.load(Ordering::Relaxed)),
+        ("not-in-catalog", PLANS_REJECTED_CATALOG.load(Ordering::Relaxed)),
+        ("vec-gate", SLICES_FALLBACK.load(Ordering::Relaxed)),
+    ]
+}
+
+pub(crate) fn note_plan_rejected_shadowed() {
+    PLANS_REJECTED_SHADOWED.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_plan_rejected_catalog() {
+    PLANS_REJECTED_CATALOG.fetch_add(1, Ordering::Relaxed);
+}
+
 // ---- plan -------------------------------------------------------------------
 
 /// A reduction the workers may fold locally.

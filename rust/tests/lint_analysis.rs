@@ -1,0 +1,362 @@
+//! Golden-diagnostic suite for the parallel-safety analyzer (ISSUE 8):
+//! each detector's accept/reject matrix across the six API families,
+//! `lint = "error"` raising at freeze time (zero workers spawned),
+//! relay dedup (one warning per map call, not per chunk), the
+//! `FUTURIZE_LINT` env overrides, the fusion/reduce rejection report,
+//! and the `record_result` wire metric on the simulated HPC backends.
+//!
+//! Every test serializes on one mutex: `FUTURIZE_LINT` and
+//! `FUTURIZE_NO_FUSION` are process env vars, and the worker-spawn /
+//! fusion / wire counters are process globals, so concurrent tests
+//! would race all of them.
+
+mod common;
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use common::{within, worker_env};
+use futurize::backend::multisession;
+use futurize::prelude::*;
+use futurize::rlite::diag;
+use futurize::transpile::{analysis, fusion};
+use futurize::wire::stats;
+
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    // A panicked test must not wedge the rest of the suite.
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with `FUTURIZE_LINT` pinned (or removed, for the default
+/// `warn` mode), restoring the ambient value afterwards.
+fn with_lint<T>(val: Option<&str>, f: impl FnOnce() -> T) -> T {
+    let ambient = std::env::var(diag::LINT_ENV).ok();
+    match val {
+        Some(v) => std::env::set_var(diag::LINT_ENV, v),
+        None => std::env::remove_var(diag::LINT_ENV),
+    }
+    let r = f();
+    match ambient {
+        Some(v) => std::env::set_var(diag::LINT_ENV, v),
+        None => std::env::remove_var(diag::LINT_ENV),
+    }
+    r
+}
+
+fn run_captured(plan: &str, fixture: &str, prog: &str) -> (Result<RVal, String>, String) {
+    let mut s = Session::new();
+    s.eval_str(plan).unwrap_or_else(|e| panic!("{plan}: {e}"));
+    s.eval_str("futureSeed(99)").unwrap();
+    if !fixture.is_empty() {
+        s.eval_str(fixture).unwrap_or_else(|e| panic!("{fixture}: {e}"));
+    }
+    s.eval_captured(prog)
+}
+
+const MC2: &str = "plan(multicore, workers = 2)";
+const MS2: &str = "plan(multisession, workers = 2)";
+
+/// The classic loop-carried accumulator: writes `total` into the
+/// calling frame *and* reads it, so element i depends on element i-1.
+const DIRTY_FIXTURE: &str = "
+    xs <- c(1, 2, 3, 4)
+    total <- 0
+    f <- function(x) {
+      total <<- total + x
+      x * 2
+    }
+";
+const DIRTY_MAP: &str = "unlist(lapply(xs, f) |> futurize())";
+
+#[test]
+fn dirty_body_under_default_warn_runs_and_relays_exactly_once() {
+    let _g = serial();
+    with_lint(None, || {
+        // workers = 2 means two chunks; a per-chunk relay would print
+        // FZ001 twice. The contract is once per map call.
+        let (r, out) = run_captured(MC2, DIRTY_FIXTURE, DIRTY_MAP);
+        let v = r.expect("warn mode must still execute the map");
+        assert_eq!(v.as_dbl_vec().unwrap(), vec![2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(out.matches("FZ001").count(), 1, "FZ001 must relay exactly once:\n{out}");
+        assert!(out.contains("futurize lint: FZ001"), "warning must carry the code:\n{out}");
+        assert!(out.contains("fix:"), "warning must carry the fix hint:\n{out}");
+
+        // The relayed condition is classed, so user handlers can
+        // target it without string matching.
+        let prog = "tryCatch(lapply(xs, f) |> futurize(), \
+                    FuturizeLintWarning = function(w) \"classed\")";
+        let (r, _) = run_captured(MC2, DIRTY_FIXTURE, prog);
+        assert_eq!(r.unwrap().as_str().unwrap(), "classed");
+    });
+}
+
+#[test]
+fn lint_error_raises_at_freeze_time_before_any_worker_spawns() {
+    let _g = serial();
+    worker_env();
+    with_lint(None, || {
+        let spawned_before = multisession::workers_spawned();
+        let (r, _) =
+            run_captured(MS2, DIRTY_FIXTURE, "lapply(xs, f) |> futurize(lint = \"error\")");
+        let e = r.expect_err("lint = \"error\" must raise on the dirty body");
+        assert!(e.contains("FZ001"), "error must carry the code: {e}");
+        assert!(e.contains("fix:"), "error must carry the fix hint: {e}");
+        assert_eq!(
+            multisession::workers_spawned(),
+            spawned_before,
+            "the analyzer raised after a worker was spawned"
+        );
+
+        // The raised condition is classed (FuturizeLintError, also a
+        // FutureError) so tryCatch can target it.
+        let prog = "tryCatch(lapply(xs, f) |> futurize(lint = \"error\"), \
+                    FuturizeLintError = function(e) \"caught\")";
+        let (r, _) = run_captured(MS2, DIRTY_FIXTURE, prog);
+        assert_eq!(r.unwrap().as_str().unwrap(), "caught");
+
+        // Sanity: the spawn counter is live — a clean map on the same
+        // plan does spawn workers.
+        let (r, _) = within(60, "clean multisession map", || {
+            run_captured(
+                MS2,
+                "xs <- c(1, 2, 3, 4)",
+                "unlist(lapply(xs, function(x) x * 2) |> futurize())",
+            )
+        });
+        r.unwrap();
+        assert!(multisession::workers_spawned() > spawned_before, "spawn counter never ticked");
+    });
+}
+
+#[test]
+fn futurize_lint_env_overrides_kill_switch_and_promotion() {
+    let _g = serial();
+    // FUTURIZE_LINT=off silences even explicit lint = "warn".
+    with_lint(Some("off"), || {
+        let (r, out) =
+            run_captured(MC2, DIRTY_FIXTURE, "unlist(lapply(xs, f) |> futurize(lint = \"warn\"))");
+        r.unwrap();
+        assert!(!out.contains("FZ001"), "kill switch leaked a diagnostic:\n{out}");
+    });
+    // FUTURIZE_LINT=error promotes the default warn mode to a raise.
+    with_lint(Some("error"), || {
+        let (r, _) = run_captured(MC2, DIRTY_FIXTURE, DIRTY_MAP);
+        let e = r.expect_err("env promotion must raise");
+        assert!(e.contains("FZ001"), "{e}");
+    });
+    // An invalid env value falls back to the per-call mode.
+    with_lint(Some("banana"), || {
+        let (r, out) = run_captured(MC2, DIRTY_FIXTURE, DIRTY_MAP);
+        r.unwrap();
+        assert_eq!(out.matches("FZ001").count(), 1, "{out}");
+    });
+}
+
+/// FZ001 fires once — and exactly once — through every Table-1 API
+/// family surface, not just base lapply.
+#[test]
+fn fz001_relays_once_across_all_six_api_families() {
+    let _g = serial();
+    let families: &[(&str, &str)] = &[
+        ("base", "unlist(lapply(xs, f) |> futurize())"),
+        ("purrr", "map_dbl(xs, f) |> futurize()"),
+        (
+            "foreach",
+            "unlist((foreach(x = xs, .combine = c) %dofuture% { total <<- total + x; x * 2 }))",
+        ),
+        ("future.apply", "future_sapply(xs, f)"),
+        ("furrr", "future_map_dbl(xs, f)"),
+        ("BiocParallel", "unlist(bplapply(xs, f) |> futurize())"),
+    ];
+    with_lint(None, || {
+        for (family, prog) in families {
+            let (r, out) = run_captured(MC2, DIRTY_FIXTURE, prog);
+            let v = r.unwrap_or_else(|e| panic!("{family}: {e}"));
+            assert_eq!(v.as_dbl_vec().unwrap(), vec![2.0, 4.0, 6.0, 8.0], "{family}");
+            assert_eq!(out.matches("FZ001").count(), 1, "{family}: relay count\n{out}");
+        }
+    });
+}
+
+#[test]
+fn fz002_flags_unseeded_rng_and_accepts_seed_true() {
+    let _g = serial();
+    with_lint(None, || {
+        let fixture = "xs <- c(1, 2, 3, 4)";
+        let (r, out) = run_captured(
+            MC2,
+            fixture,
+            "unlist(lapply(xs, function(x) rnorm(1) + x) |> futurize())",
+        );
+        r.unwrap();
+        assert_eq!(out.matches("FZ002").count(), 1, "{out}");
+        assert!(out.contains("seed = TRUE"), "hint must name the fix:\n{out}");
+
+        let (r, out) = run_captured(
+            MC2,
+            fixture,
+            "unlist(lapply(xs, function(x) rnorm(1) + x) |> futurize(seed = TRUE))",
+        );
+        r.unwrap();
+        assert!(!out.contains("FZ002"), "seeded map must be clean:\n{out}");
+    });
+}
+
+#[test]
+fn fz003_warns_at_the_parent_before_the_worker_fails() {
+    let _g = serial();
+    with_lint(None, || {
+        let (r, out) = run_captured(
+            MC2,
+            "xs <- c(1, 2, 3, 4)",
+            "unlist(lapply(xs, function(x) x * missing_scale) |> futurize())",
+        );
+        // The map still fails worker-side (same as without the
+        // analyzer) — but the diagnostic landed first, at the parent.
+        let e = r.expect_err("unresolvable global must still fail at runtime");
+        assert!(e.contains("missing_scale"), "{e}");
+        assert_eq!(out.matches("FZ003").count(), 1, "{out}");
+        assert!(out.contains("missing_scale"), "diagnostic must name the symbol:\n{out}");
+    });
+}
+
+#[test]
+fn fz005_flags_user_combine_under_the_assoc_contract() {
+    let _g = serial();
+    with_lint(None, || {
+        let fixture = "
+            xs <- c(3, 1, 4, 1)
+            mycomb <- function(a, b) a - b
+        ";
+        let prog = "(foreach(x = xs, .combine = mycomb, \
+                    .options.future = list(reduce = \"assoc\")) %dofuture% { x * 2 })";
+        let (r, out) = run_captured(MC2, fixture, prog);
+        // ((6 - 2) - 8) - 2: the non-associative fold still runs in
+        // submission order — the diagnostic is advisory under warn.
+        assert_eq!(r.unwrap().as_f64().unwrap(), -6.0);
+        assert_eq!(out.matches("FZ005").count(), 1, "{out}");
+
+        // Without the assoc contract the same combine is silent: the
+        // full-result path replays it pairwise in order, so there is
+        // nothing order-dependent to flag.
+        let prog = "(foreach(x = xs, .combine = mycomb) %dofuture% { x * 2 })";
+        let (r, out) = run_captured(MC2, fixture, prog);
+        assert_eq!(r.unwrap().as_f64().unwrap(), -6.0);
+        assert!(!out.contains("FZ005"), "{out}");
+    });
+}
+
+#[test]
+fn clean_body_under_error_mode_executes_normally() {
+    let _g = serial();
+    with_lint(None, || {
+        let (r, out) = run_captured(
+            MC2,
+            "xs <- c(1, 2, 3, 4)\nscale <- 3",
+            "unlist(lapply(xs, function(x) x * scale) |> futurize(lint = \"error\"))",
+        );
+        assert_eq!(r.unwrap().as_dbl_vec().unwrap(), vec![3.0, 6.0, 9.0, 12.0]);
+        assert!(!out.contains("FZ0"), "clean body produced a diagnostic:\n{out}");
+    });
+}
+
+fn reason(pairs: &[(&'static str, u64)], label: &str) -> u64 {
+    pairs.iter().find(|(l, _)| *l == label).map(|(_, n)| *n).unwrap_or(0)
+}
+
+/// Satellite (b): the per-reason rejection counters behind
+/// `fusion_report()` tick for kernel env-mutation and shadowed-reduce.
+#[test]
+fn fusion_report_labels_env_mutation_and_shadowed_reduce() {
+    let _g = serial();
+    with_lint(None, || {
+        let ambient = std::env::var(fusion::NO_FUSION_ENV).ok();
+        std::env::remove_var(fusion::NO_FUSION_ENV);
+
+        let before = fusion_report();
+        // `<<-` in the body: outside the kernel catalog, reason
+        // "env-mutation".
+        let (r, _) = run_captured(MC2, DIRTY_FIXTURE, DIRTY_MAP);
+        r.unwrap();
+        let after = fusion_report();
+        assert!(
+            reason(&after.kernel_rejections, "env-mutation")
+                > reason(&before.kernel_rejections, "env-mutation"),
+            "env-mutation rejection must be counted:\n{}",
+            after.render()
+        );
+
+        // A user rebinding of `sum` keeps the full-result path, reason
+        // "shadowed" — and the shadowing binding sees all 5 elements.
+        let before = fusion_report();
+        let (r, _) = run_captured(
+            MC2,
+            "sum <- function(v) length(v)",
+            "sum(sapply(1:5, function(x) x)) |> futurize()",
+        );
+        assert_eq!(r.unwrap().as_f64().unwrap(), 5.0);
+        let after = fusion_report();
+        assert!(
+            reason(&after.reduce_rejections, "shadowed")
+                > reason(&before.reduce_rejections, "shadowed"),
+            "shadowed reduce rejection must be counted:\n{}",
+            after.render()
+        );
+
+        match ambient {
+            Some(v) => std::env::set_var(fusion::NO_FUSION_ENV, v),
+            None => std::env::remove_var(fusion::NO_FUSION_ENV),
+        }
+    });
+}
+
+/// Satellite (a): the `record_result` wire metric now ticks on the
+/// batchtools job path and on cluster_sim (via its wrapped
+/// multisession reader threads), not just raw multisession.
+#[test]
+fn hpc_sim_backends_record_result_bytes() {
+    let _g = serial();
+    worker_env();
+    with_lint(None, || {
+        for plan in [
+            "plan(future.batchtools::batchtools_slurm, workers = 2, poll_ms = 2)",
+            "plan(cluster, workers = c(\"n1\", \"n2\"), latency_ms = 0.1)",
+        ] {
+            stats::reset();
+            let plan_owned = plan.to_string();
+            let (r, _) = within(60, plan, move || {
+                run_captured(
+                    &plan_owned,
+                    "xs <- c(1, 2, 3, 4)",
+                    "unlist(lapply(xs, function(x) x * 2) |> futurize())",
+                )
+            });
+            assert_eq!(r.unwrap().as_dbl_vec().unwrap(), vec![2.0, 4.0, 6.0, 8.0], "{plan}");
+            assert!(stats::result_bytes() > 0, "{plan}: result bytes metric never ticked");
+        }
+    });
+}
+
+/// The CLI fixtures under examples/r/ stay golden: the dirty script
+/// carries FZ001/FZ002/FZ003 and the clean script has no findings.
+/// (CI additionally asserts the exit codes of `futurize-rs lint`.)
+#[test]
+fn cli_fixtures_lint_as_expected() {
+    let _g = serial();
+    with_lint(None, || {
+        let dirty = std::fs::read_to_string("../examples/r/lint_dirty.R").unwrap();
+        let findings = analysis::lint_source(&dirty).expect("dirty fixture parses");
+        assert!(!findings.is_empty(), "dirty fixture produced no findings");
+        let codes: Vec<&str> = findings
+            .iter()
+            .flat_map(|f| f.diags.iter().map(|d| d.code.as_str()))
+            .collect();
+        for want in ["FZ001", "FZ002", "FZ003"] {
+            assert!(codes.contains(&want), "dirty fixture must flag {want}, got {codes:?}");
+        }
+
+        let clean = std::fs::read_to_string("../examples/r/lint_clean.R").unwrap();
+        let findings = analysis::lint_source(&clean).expect("clean fixture parses");
+        assert!(findings.is_empty(), "clean fixture flagged: {findings:?}");
+    });
+}
