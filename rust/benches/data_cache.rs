@@ -1,0 +1,122 @@
+//! BENCH_cache: content-addressed data-plane cache (PR 9).
+//!
+//! Measures the number the cache exists to improve — **physical wire
+//! bytes per map call** over a large captured dataset — on a real
+//! `plan(multisession, workers = 2)` session:
+//!
+//! - call 1 ships the dataset as `CachePut` blobs (once per worker);
+//! - call 2 references it by digest, so its wire volume must collapse
+//!   to task/result framing — hard-asserted at ≥5× below call 1.
+//!
+//! Also reported (not asserted — wall-clock is noisy on shared CI):
+//! the first-call overhead of digesting + blob framing versus the same
+//! call with `FUTURIZE_NO_CACHE=1`, and raw FNV digest throughput.
+//! Results land in `BENCH_cache.json` (`BENCH_SMOKE=1` shrinks the
+//! dataset for CI).
+
+use futurize::backend::blobstore;
+use futurize::bench_harness as bh;
+use futurize::prelude::*;
+use futurize::rlite::serialize::{digest_val, WireVal};
+use futurize::wire::stats;
+
+const PROG: &str = "future_sapply(1:8, function(i) sum(d) + i)";
+
+/// Two identical maps over an `n`-double captured global on a fresh
+/// multisession pool: (first-call bytes, second-call bytes, first-call
+/// seconds, results). Physical frame bytes tick on the writing thread
+/// — the dispatch loop runs here, so the thread-local counter sees
+/// every parent→worker frame of this session and nothing else.
+fn measure(n: usize, cache: bool) -> (f64, f64, f64, Vec<f64>, Vec<f64>) {
+    if cache {
+        std::env::remove_var(blobstore::NO_CACHE_ENV);
+    } else {
+        std::env::set_var(blobstore::NO_CACHE_ENV, "1");
+    }
+    let mut s = Session::new();
+    s.eval_str("plan(multisession, workers = 2)").unwrap();
+    s.eval_str(&format!("d <- sin(1:{n})")).unwrap();
+    stats::reset();
+    let t0 = std::time::Instant::now();
+    let r1 = s.eval_str(PROG).unwrap().as_dbl_vec().unwrap();
+    let first_secs = t0.elapsed().as_secs_f64();
+    let first_bytes = stats::bytes() as f64;
+    let r2 = s.eval_str(PROG).unwrap().as_dbl_vec().unwrap();
+    let second_bytes = stats::bytes() as f64 - first_bytes;
+    (first_bytes, second_bytes, first_secs, r1, r2)
+}
+
+fn main() {
+    futurize::backend::worker::maybe_worker();
+    let smoke = bh::smoke_mode();
+    let n = if smoke { 100_000 } else { 1_000_000 };
+    let mut report = bh::JsonReport::new("BENCH_cache.json");
+    report.push_num("dataset_doubles", n as f64);
+    report.push(
+        "mode",
+        futurize::wire::JsonValue::String(if smoke { "smoke" } else { "full" }.into()),
+    );
+
+    let (cached_first, cached_second, cached_secs, r1, r2) = measure(n, true);
+    let (plain_first, plain_second, plain_secs, p1, _) = measure(n, false);
+    std::env::remove_var(blobstore::NO_CACHE_ENV);
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&r1), bits(&r2), "repeat cached call diverged");
+    assert_eq!(bits(&r1), bits(&p1), "cached and uncached results diverge");
+
+    // Raw digest throughput over the same dataset (the only work the
+    // cache adds on an all-resident repeat call, besides ref framing).
+    let w = WireVal::Dbl((0..n).map(|i| (i as f64).sin()).collect(), None);
+    let t0 = std::time::Instant::now();
+    let d = digest_val(&w);
+    let digest_secs = t0.elapsed().as_secs_f64();
+    std::hint::black_box(d);
+
+    bh::table_header(
+        "data-plane cache: 2 identical maps over an 8n-byte global, multisession workers=2",
+        &["series", "call1 bytes", "call2 bytes", "call1 secs"],
+    );
+    bh::table_row(&[
+        "cached".into(),
+        format!("{cached_first:.0}"),
+        format!("{cached_second:.0}"),
+        format!("{cached_secs:.3}"),
+    ]);
+    bh::table_row(&[
+        "no-cache".into(),
+        format!("{plain_first:.0}"),
+        format!("{plain_second:.0}"),
+        format!("{plain_secs:.3}"),
+    ]);
+    let reduction = cached_first / cached_second.max(1.0);
+    let resend_saved = plain_second / cached_second.max(1.0);
+    let overhead_pct = (cached_secs - plain_secs) / plain_secs * 100.0;
+    println!(
+        "\nsecond-call wire reduction: {reduction:.1}x (vs re-ship: {resend_saved:.1}x); \
+         first-call overhead: {overhead_pct:+.1}%; digest: {:.0} MB/s",
+        (n * 8) as f64 / 1e6 / digest_secs
+    );
+
+    report.push_num("cached_first_call_bytes", cached_first);
+    report.push_num("cached_second_call_bytes", cached_second);
+    report.push_num("plain_first_call_bytes", plain_first);
+    report.push_num("plain_second_call_bytes", plain_second);
+    report.push_num("second_call_reduction", reduction);
+    report.push_num("reduction_vs_reship", resend_saved);
+    report.push_num("first_call_overhead_pct", overhead_pct);
+    report.push_num("digest_mb_per_sec", (n * 8) as f64 / 1e6 / digest_secs);
+    report.write().unwrap();
+
+    // The tentpole number: a second identical map must ride the ledger,
+    // shipping digests instead of the dataset.
+    assert!(
+        cached_second * 5.0 <= cached_first,
+        "second identical map must ship >=5x fewer wire bytes: \
+         call1 {cached_first} vs call2 {cached_second}"
+    );
+    assert!(
+        cached_second * 5.0 <= plain_second,
+        "cached repeat call must ship >=5x fewer bytes than an uncached one: \
+         {cached_second} vs {plain_second}"
+    );
+}

@@ -47,6 +47,7 @@ fn map_context(id: u64, f_src: &str, setup: &str) -> TaskContext {
         id,
         body: ContextBody::Map { f: to_wire(&f).unwrap(), extra: vec![] },
         globals: vec![],
+        cached_globals: vec![],
         nesting: Default::default(),
         kernel: None,
         reduce: None,
@@ -145,6 +146,12 @@ const FUSED_CASES: &[FusedCase] = &[
         name: "gram",
         setup: "y <- sin(1:8)",
         f_src: "function(x) hlo_gram(x, y)",
+        items: gram_items,
+    },
+    FusedCase {
+        name: "ridge",
+        setup: "y <- sin(1:8)",
+        f_src: "function(x) hlo_ridge(x, y, 0.5)",
         items: gram_items,
     },
 ];

@@ -35,6 +35,7 @@ fn protocol_stream() -> (Vec<TaskPayload>, Vec<TaskOutcome>, TaskContext) {
             "w".to_string(),
             WireVal::Dbl((0..64).map(|k| (k as f64).sin()).collect(), None),
         )],
+        cached_globals: vec![],
         nesting: Default::default(),
         kernel: None,
         reduce: None,

@@ -17,9 +17,11 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use super::blobstore::{CacheBlob, CacheSource};
 use super::{Backend, BackendEvent};
-use crate::future_core::{TaskContext, TaskOutcome, TaskPayload};
+use crate::future_core::{TaskContext, TaskKind, TaskOutcome, TaskPayload};
 use crate::rlite::conditions::{CaptureLog, RCondition};
+use crate::rlite::serialize::WireSlice;
 use crate::wire::WireCodec;
 
 /// A claimed job being executed by a scheduler-owned thread. The
@@ -60,6 +62,7 @@ impl BatchtoolsSimBackend {
         std::fs::create_dir_all(spool.join("jobs")).map_err(|e| e.to_string())?;
         std::fs::create_dir_all(spool.join("running")).map_err(|e| e.to_string())?;
         std::fs::create_dir_all(spool.join("contexts")).map_err(|e| e.to_string())?;
+        std::fs::create_dir_all(spool.join("blobs")).map_err(|e| e.to_string())?;
         let (tx, rx) = channel::<BackendEvent>();
         let shutdown = Arc::new(AtomicBool::new(false));
 
@@ -175,12 +178,81 @@ impl BatchtoolsSimBackend {
                             // once per map call; job threads read them
                             // locally (a filesystem read, not a
                             // serialization trip).
-                            let ctx = task.kind.context_id().and_then(|id| {
+                            let mut ctx = task.kind.context_id().and_then(|id| {
                                 let p = spool.join("contexts").join(format!("{id}.ctx"));
                                 std::fs::read(p)
                                     .ok()
                                     .and_then(|b| codec.decode::<TaskContext>(&b).ok())
                             });
+                            // Data-plane cache resolution: blobs are
+                            // spool files keyed by digest, shared by
+                            // every job (and every map call) that
+                            // references them — the batchtools analog
+                            // of "ship once per worker". Files persist
+                            // for the backend's lifetime, so there is
+                            // no miss path here.
+                            let read_blob = |digest: u64| -> Option<CacheBlob> {
+                                let p = spool
+                                    .join("blobs")
+                                    .join(format!("{digest:016x}.blob"));
+                                std::fs::read(p).ok().and_then(|b| codec.decode(&b).ok())
+                            };
+                            if let Some(c) = ctx.as_mut() {
+                                let cached = std::mem::take(&mut c.cached_globals);
+                                for (name, digest) in cached {
+                                    match read_blob(digest) {
+                                        Some(CacheBlob::Val(v)) => c.globals.push((name, v)),
+                                        _ => {
+                                            return fail(format!(
+                                                "batchtools: missing cache blob \
+                                                 {digest:#018x} for task {task_id}"
+                                            ))
+                                        }
+                                    }
+                                }
+                            }
+                            let mut task = task;
+                            task.kind = match task.kind {
+                                TaskKind::MapSliceRef { ctx, digest, start, end, seeds } => {
+                                    match read_blob(digest) {
+                                        Some(CacheBlob::Items(items)) => TaskKind::MapSlice {
+                                            ctx,
+                                            items: WireSlice::shared(
+                                                Arc::new(items),
+                                                start,
+                                                end,
+                                            ),
+                                            seeds,
+                                        },
+                                        _ => {
+                                            return fail(format!(
+                                                "batchtools: missing cache blob \
+                                                 {digest:#018x} for task {task_id}"
+                                            ))
+                                        }
+                                    }
+                                }
+                                TaskKind::ForeachSliceRef { ctx, digest, start, end, seeds } => {
+                                    match read_blob(digest) {
+                                        Some(CacheBlob::Bindings(b)) => TaskKind::ForeachSlice {
+                                            ctx,
+                                            bindings: WireSlice::shared(
+                                                Arc::new(b),
+                                                start,
+                                                end,
+                                            ),
+                                            seeds,
+                                        },
+                                        _ => {
+                                            return fail(format!(
+                                                "batchtools: missing cache blob \
+                                                 {digest:#018x} for task {task_id}"
+                                            ))
+                                        }
+                                    }
+                                }
+                                k => k,
+                            };
                             // batchtools jobs cannot stream conditions
                             // live; progress arrives with the result, as
                             // on a real scheduler without a side channel.
@@ -307,6 +379,31 @@ impl Backend for BatchtoolsSimBackend {
             }
         }
         ids
+    }
+
+    fn data_cache(&self) -> bool {
+        true
+    }
+
+    fn put_blob(&mut self, _ctx_id: u64, digest: u64, blob: CacheSource) -> Result<(), String> {
+        // Blobs are digest-keyed spool files on the (simulated) shared
+        // filesystem — written once, read by every job of every map
+        // call that references them, removed with the spool at
+        // backend teardown. Write-if-absent is the dedup: a digest
+        // already spooled (same call or a previous one) costs nothing.
+        let fin = self.spool.join("blobs").join(format!("{digest:016x}.blob"));
+        if fin.exists() {
+            crate::wire::stats::record_cache_hit(blob.approx_bytes() as u64);
+            return Ok(());
+        }
+        let bytes = self.codec.encode(&blob.to_ref())?;
+        let tmp = self.spool.join("blobs").join(format!("{digest:016x}.tmp"));
+        std::fs::write(&tmp, &bytes).map_err(|e| e.to_string())?;
+        crate::wire::stats::record_physical(bytes.len());
+        // Atomic publish so a job thread never reads a partial blob.
+        std::fs::rename(&tmp, &fin).map_err(|e| e.to_string())?;
+        crate::wire::stats::record_cache_put(blob.approx_bytes() as u64);
+        Ok(())
     }
 }
 

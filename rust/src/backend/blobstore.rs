@@ -1,0 +1,299 @@
+//! The content-addressed data-plane cache.
+//!
+//! Iterative workloads (boot resampling, CV folds, a glmnet lambda
+//! path) map over the *same* multi-megabyte data many times per
+//! session. PR 2's Arc-freeze made that free for in-process backends;
+//! this module extends "ship once" across the process boundary and
+//! across calls. At freeze time the dispatch core digests large frozen
+//! payloads ([`crate::rlite::serialize::digest_val`] and friends — a
+//! structural FNV-1a walk, no copy) and replaces them with digest
+//! references; process backends ship the bytes as a
+//! `ParentMsg::CachePut` frame the *first* time a digest lands on a
+//! given worker and send only the 8-byte digest thereafter. The
+//! parent keeps a per-worker ledger of resident digests; workers keep
+//! an LRU [`BlobStore`] with a byte budget. A worker that no longer
+//! holds a referenced digest (fresh respawn, eviction) answers the
+//! task with a `CacheMiss` negative-ack and the parent re-puts — a
+//! cold worker can never wedge a map.
+//!
+//! Kill switches: `FUTURIZE_NO_CACHE=1` in the environment or
+//! `futurize(cache = "off")` per call disable extraction entirely,
+//! which the differential test suite uses to prove bit-identical
+//! results either way.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use serde_derive::{Deserialize, Serialize};
+
+use crate::rlite::serialize::WireVal;
+
+/// Environment kill switch: `FUTURIZE_NO_CACHE=1` disables the cache.
+pub const NO_CACHE_ENV: &str = "FUTURIZE_NO_CACHE";
+
+/// Worker-side blob-store byte budget override.
+pub const CACHE_BYTES_ENV: &str = "FUTURIZE_CACHE_BYTES";
+
+/// Default worker-side blob-store budget (~256 MiB).
+pub const DEFAULT_CACHE_BYTES: usize = 256 << 20;
+
+/// Payloads below this size ship inline — digesting and ledger
+/// bookkeeping only pay off once the blob dwarfs the 8-byte reference.
+pub const CACHE_MIN_BYTES: usize = 64 << 10;
+
+/// True unless `FUTURIZE_NO_CACHE=1`.
+pub fn cache_enabled() -> bool {
+    std::env::var(NO_CACHE_ENV).as_deref() != Ok("1")
+}
+
+/// The worker-side blob-store byte budget.
+pub fn cache_budget() -> usize {
+    std::env::var(CACHE_BYTES_ENV)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_CACHE_BYTES)
+}
+
+/// A cacheable payload as it travels in a `CachePut` frame.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub enum CacheBlob {
+    /// A frozen map-element vector (`ElementSource::Items`).
+    Items(Vec<WireVal>),
+    /// A frozen foreach binding vector (`ElementSource::Bindings`).
+    Bindings(Vec<Vec<(String, WireVal)>>),
+    /// One oversized context global.
+    Val(WireVal),
+}
+
+/// Encode-only borrowing mirror of [`CacheBlob`]: lets the parent
+/// serialize a blob straight out of its `Arc` without deep-cloning.
+/// Variant names and order MUST match [`CacheBlob`] exactly — both
+/// codecs tag enums by variant, so the two encode byte-identically
+/// (pinned alongside `ref_mirror_encodes_identically`).
+#[derive(Serialize)]
+pub enum CacheBlobRef<'a> {
+    Items(&'a [WireVal]),
+    Bindings(&'a [Vec<(String, WireVal)>]),
+    Val(&'a WireVal),
+}
+
+/// Parent-side handle on a frozen payload: the `Arc` the dispatch core
+/// already holds, kept alive for as long as any active context
+/// references its digest so a `CacheMiss`/respawn re-put never needs
+/// the original caller's data.
+#[derive(Clone)]
+pub enum CacheSource {
+    Items(Arc<Vec<WireVal>>),
+    Bindings(Arc<Vec<Vec<(String, WireVal)>>>),
+    Val(Arc<WireVal>),
+}
+
+impl CacheSource {
+    /// The borrowing encode mirror for this source.
+    pub fn to_ref(&self) -> CacheBlobRef<'_> {
+        match self {
+            CacheSource::Items(a) => CacheBlobRef::Items(a.as_slice()),
+            CacheSource::Bindings(a) => CacheBlobRef::Bindings(a.as_slice()),
+            CacheSource::Val(a) => CacheBlobRef::Val(a),
+        }
+    }
+
+    /// Approximate in-memory payload size (same estimator the
+    /// extraction threshold uses), for hit/evict accounting.
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            CacheSource::Items(a) => a.iter().map(|v| v.approx_size()).sum(),
+            CacheSource::Bindings(a) => a
+                .iter()
+                .map(|row| row.iter().map(|(n, v)| n.len() + v.approx_size()).sum::<usize>())
+                .sum(),
+            CacheSource::Val(a) => a.approx_size(),
+        }
+    }
+}
+
+/// A blob as the worker stores it: `Arc`-wrapped so resolving a task
+/// reference is a pointer bump, never a deep copy.
+#[derive(Clone)]
+pub enum StoredBlob {
+    Items(Arc<Vec<WireVal>>),
+    Bindings(Arc<Vec<Vec<(String, WireVal)>>>),
+    Val(Arc<WireVal>),
+}
+
+struct Entry {
+    blob: StoredBlob,
+    bytes: usize,
+    /// Which task-processing epoch inserted this entry. Entries from
+    /// the *current* epoch are eviction-exempt: a task's whole re-put
+    /// working set must survive until that task runs, otherwise a
+    /// budget smaller than one working set could evict blob A while
+    /// re-putting blob B forever. The budget is therefore soft within
+    /// a single task's working set.
+    epoch: u64,
+    /// LRU clock.
+    tick: u64,
+}
+
+/// The worker-side LRU blob store.
+pub struct BlobStore {
+    entries: HashMap<u64, Entry>,
+    budget: usize,
+    used: usize,
+    epoch: u64,
+    clock: u64,
+}
+
+impl BlobStore {
+    pub fn new(budget: usize) -> BlobStore {
+        BlobStore { entries: HashMap::new(), budget, used: 0, epoch: 0, clock: 0 }
+    }
+
+    /// Mark the start of a new task frame: previously inserted blobs
+    /// become eligible for eviction again.
+    pub fn bump_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
+    /// Insert a blob under its digest, evicting least-recently-used
+    /// entries from earlier epochs if the budget demands it.
+    pub fn insert(&mut self, digest: u64, blob: CacheBlob) {
+        if self.entries.contains_key(&digest) {
+            return;
+        }
+        let stored = match blob {
+            CacheBlob::Items(v) => StoredBlob::Items(Arc::new(v)),
+            CacheBlob::Bindings(v) => StoredBlob::Bindings(Arc::new(v)),
+            CacheBlob::Val(v) => StoredBlob::Val(Arc::new(v)),
+        };
+        let bytes = match &stored {
+            StoredBlob::Items(a) => a.iter().map(|v| v.approx_size()).sum(),
+            StoredBlob::Bindings(a) => a
+                .iter()
+                .map(|row| row.iter().map(|(n, v)| n.len() + v.approx_size()).sum::<usize>())
+                .sum(),
+            StoredBlob::Val(a) => a.approx_size(),
+        };
+        self.clock += 1;
+        self.used += bytes;
+        self.entries
+            .insert(digest, Entry { blob: stored, bytes, epoch: self.epoch, tick: self.clock });
+        while self.used > self.budget {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(d, e)| **d != digest && e.epoch < self.epoch)
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(d, _)| *d);
+            let Some(d) = victim else { break };
+            if let Some(e) = self.entries.remove(&d) {
+                self.used -= e.bytes;
+                crate::wire::stats::record_cache_evict(e.bytes as u64);
+            }
+        }
+    }
+
+    fn touch(&mut self, digest: u64) {
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&digest) {
+            e.tick = self.clock;
+        }
+    }
+
+    /// Resolve an items blob, refreshing its LRU position.
+    pub fn get_items(&mut self, digest: u64) -> Option<Arc<Vec<WireVal>>> {
+        self.touch(digest);
+        match self.entries.get(&digest).map(|e| &e.blob) {
+            Some(StoredBlob::Items(a)) => Some(a.clone()),
+            _ => None,
+        }
+    }
+
+    /// Resolve a bindings blob, refreshing its LRU position.
+    pub fn get_bindings(&mut self, digest: u64) -> Option<Arc<Vec<Vec<(String, WireVal)>>>> {
+        self.touch(digest);
+        match self.entries.get(&digest).map(|e| &e.blob) {
+            Some(StoredBlob::Bindings(a)) => Some(a.clone()),
+            _ => None,
+        }
+    }
+
+    /// Resolve a single-value blob, refreshing its LRU position.
+    pub fn get_val(&mut self, digest: u64) -> Option<Arc<WireVal>> {
+        self.touch(digest);
+        match self.entries.get(&digest).map(|e| &e.blob) {
+            Some(StoredBlob::Val(a)) => Some(a.clone()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::WireCodec;
+
+    fn dbl(n: usize, fill: f64) -> WireVal {
+        WireVal::Dbl(vec![fill; n], None)
+    }
+
+    #[test]
+    fn blob_ref_mirror_encodes_identically() {
+        let items = vec![dbl(3, 1.0), dbl(2, 2.0)];
+        let bindings = vec![vec![("x".to_string(), dbl(2, 3.0))]];
+        let val = dbl(4, 4.0);
+        let owned = [
+            CacheBlob::Items(items.clone()),
+            CacheBlob::Bindings(bindings.clone()),
+            CacheBlob::Val(val.clone()),
+        ];
+        let borrowed = [
+            CacheBlobRef::Items(&items),
+            CacheBlobRef::Bindings(&bindings),
+            CacheBlobRef::Val(&val),
+        ];
+        for (o, b) in owned.iter().zip(borrowed.iter()) {
+            for codec in [WireCodec::Binary, WireCodec::Json] {
+                let eo = codec.encode(o).unwrap();
+                let eb = codec.encode(b).unwrap();
+                assert_eq!(eo, eb, "{codec:?}: CacheBlobRef drifted from CacheBlob");
+                let back: CacheBlob = codec.decode(&eo).unwrap();
+                assert_eq!(
+                    std::mem::discriminant(o),
+                    std::mem::discriminant(&back),
+                    "{codec:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lru_evicts_older_epochs_only() {
+        let one_k = dbl(128, 1.0); // ~1 KiB of doubles
+        let bytes = one_k.approx_size();
+        let mut store = BlobStore::new(bytes * 2 + 64);
+        store.bump_epoch();
+        store.insert(1, CacheBlob::Val(one_k.clone()));
+        store.insert(2, CacheBlob::Val(dbl(128, 2.0)));
+        // Same epoch: inserting a third over budget must NOT evict the
+        // first two (they are this task's working set).
+        store.insert(3, CacheBlob::Val(dbl(128, 3.0)));
+        assert!(store.get_val(1).is_some());
+        assert!(store.get_val(2).is_some());
+        assert!(store.get_val(3).is_some());
+        // Next task frame: old entries become evictable; the LRU one
+        // (digest 1 untouched longest after we refresh 2 and 3) goes.
+        store.bump_epoch();
+        store.get_val(2);
+        store.get_val(3);
+        store.insert(4, CacheBlob::Val(dbl(128, 4.0)));
+        assert!(store.get_val(1).is_none(), "LRU entry from old epoch must be evicted");
+        assert!(store.get_val(4).is_some());
+    }
+
+    #[test]
+    fn env_parsing_defaults() {
+        assert_eq!(DEFAULT_CACHE_BYTES, 256 << 20);
+        assert!(CACHE_MIN_BYTES >= 1 << 10);
+    }
+}

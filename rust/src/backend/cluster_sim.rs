@@ -91,4 +91,22 @@ impl Backend for ClusterSimBackend {
     fn cancel_queued(&mut self) -> Vec<u64> {
         self.inner.cancel_queued()
     }
+
+    fn data_cache(&self) -> bool {
+        self.inner.data_cache()
+    }
+
+    fn put_blob(
+        &mut self,
+        ctx_id: u64,
+        digest: u64,
+        blob: super::blobstore::CacheSource,
+    ) -> Result<(), String> {
+        // One trip to announce the blob to the cluster; the bytes
+        // themselves ship lazily inside the wrapped pool's dispatch,
+        // and the whole point of the cache is that repeat calls skip
+        // that shipping entirely.
+        std::thread::sleep(self.latency);
+        self.inner.put_blob(ctx_id, digest, blob)
+    }
 }

@@ -50,6 +50,7 @@
 //!    wall clock.
 
 pub mod batchtools_sim;
+pub mod blobstore;
 pub mod cluster_sim;
 pub mod inner_cache;
 pub mod multicore;
@@ -258,6 +259,26 @@ pub trait Backend: Send {
     /// produce events; returns the ids of the cancelled tasks so the
     /// caller can stop waiting on them.
     fn cancel_queued(&mut self) -> Vec<u64>;
+    /// Whether this backend participates in the content-addressed
+    /// data-plane cache (see [`blobstore`]). In-process backends keep
+    /// the default `false`: their zero-copy `Arc` fast path already
+    /// ships nothing, so extraction would only add digesting overhead.
+    fn data_cache(&self) -> bool {
+        false
+    }
+    /// Register a blob the dispatch core extracted for context
+    /// `ctx_id`. The backend records it in its parent-side ledger and
+    /// ships it lazily (first task per worker) or spools it (file
+    /// backends); the `CacheSource` keeps the payload alive for
+    /// `CacheMiss`/respawn re-puts until the context drops.
+    fn put_blob(
+        &mut self,
+        _ctx_id: u64,
+        _digest: u64,
+        _blob: blobstore::CacheSource,
+    ) -> Result<(), String> {
+        Err("this backend does not support the data-plane cache".into())
+    }
 }
 
 /// Instantiate the backend for one plan level. `outer_workers` is the

@@ -219,6 +219,7 @@ mod tests {
             id: 11,
             body: ContextBody::Map { f, extra: vec![] },
             globals: vec![],
+            cached_globals: vec![],
             nesting: Default::default(),
             kernel: None,
             reduce: None,

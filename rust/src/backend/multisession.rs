@@ -35,7 +35,7 @@
 //! fail mid-stream route through the same path — the one dead worker is
 //! replaced instead of the whole map call failing.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufReader, Write};
 use std::path::{Path, PathBuf};
 use std::process::{Child, ChildStdin, Command, Stdio};
@@ -44,6 +44,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::blobstore::CacheSource;
 use super::worker::{ParentMsg, ParentMsgRef, WorkerMsg, WORKER_SENTINEL};
 use super::{Backend, BackendEvent};
 use crate::future_core::{TaskContext, TaskPayload};
@@ -77,6 +78,43 @@ struct WorkerProc {
     /// generation is bumped (a completed task must never be
     /// misreported as lost just because its `Done` was still queued).
     reader: Option<std::thread::JoinHandle<()>>,
+    /// Data-plane cache ledger: digests this worker's blob store holds
+    /// (as far as the parent knows — worker-side eviction is healed by
+    /// the `CacheMiss` negative-ack path). Monotone for the worker's
+    /// lifetime and *not* cleared on `drop_context`, which is what
+    /// makes a second map call over the same data ship zero blob
+    /// bytes. A replacement starts empty.
+    resident: HashSet<u64>,
+}
+
+/// Parent-side record of one extracted blob: the `Arc`-kept payload
+/// (alive for `CacheMiss`/respawn re-puts until the last referencing
+/// context drops), which active contexts reference it, and the
+/// lazily-encoded `CachePut` frame every ship of it reuses.
+struct BlobEntry {
+    source: CacheSource,
+    refs: HashSet<u64>,
+    frame: Option<Vec<u8>>,
+    /// Approximate payload bytes, for hit/put accounting.
+    bytes: u64,
+}
+
+/// Encode (once) and return the `CachePut` frame for `digest`. A free
+/// function over the field so callers can keep a disjoint `&mut`
+/// borrow of the worker table while holding the returned frame.
+fn ensure_blob_frame(
+    codec: WireCodec,
+    blobs: &mut HashMap<u64, BlobEntry>,
+    digest: u64,
+) -> Result<Option<&Vec<u8>>, String> {
+    let Some(entry) = blobs.get_mut(&digest) else { return Ok(None) };
+    if entry.frame.is_none() {
+        let bytes = codec
+            .encode(&ParentMsgRef::CachePut { digest, blob: entry.source.to_ref() })
+            .map_err(|e| format!("serialize cache blob: {e}"))?;
+        entry.frame = Some(bytes);
+    }
+    Ok(entry.frame.as_ref())
 }
 
 pub struct MultisessionBackend {
@@ -99,6 +137,14 @@ pub struct MultisessionBackend {
     /// worker's deliveries; re-processed ahead of `rx` so per-worker
     /// ordering is preserved.
     pipe_stash: VecDeque<(usize, u64, PipeEvent)>,
+    /// Extracted data-plane blobs by digest (see [`BlobEntry`]).
+    blobs: HashMap<u64, BlobEntry>,
+    /// Which blob digests each active context references, in put order.
+    ctx_blobs: HashMap<u64, Vec<u64>>,
+    /// Encoded `Task` frames of in-flight tasks whose context
+    /// references cached blobs, kept for `CacheMiss` redelivery.
+    /// Removed when the task's `Done` arrives (or its worker is lost).
+    task_frames: HashMap<u64, Vec<u8>>,
     name: &'static str,
 }
 
@@ -111,6 +157,17 @@ static WORKERS_SPAWNED: AtomicU64 = AtomicU64::new(0);
 /// Monotonic count of worker-process spawns in this process.
 pub fn workers_spawned() -> u64 {
     WORKERS_SPAWNED.load(Ordering::Relaxed)
+}
+
+/// Total `CachePut` frames replayed to replacement workers during
+/// supervision (all multisession-protocol backends). Test hook: the
+/// respawn-with-cache suite asserts replay covers exactly the digests
+/// referenced by still-active contexts, not every blob ever shipped.
+static BLOBS_REPLAYED: AtomicU64 = AtomicU64::new(0);
+
+/// Monotonic count of supervision-time blob replays in this process.
+pub fn blobs_replayed() -> u64 {
+    BLOBS_REPLAYED.load(Ordering::Relaxed)
 }
 
 /// Spawn one worker process into slot `idx` at generation `gen` and
@@ -183,7 +240,15 @@ fn spawn_worker(
             }
         }
     });
-    Ok(WorkerProc { child, stdin, running: None, gen, alive: true, reader: Some(reader) })
+    Ok(WorkerProc {
+        child,
+        stdin,
+        running: None,
+        gen,
+        alive: true,
+        reader: Some(reader),
+        resident: HashSet::new(),
+    })
 }
 
 impl MultisessionBackend {
@@ -215,6 +280,9 @@ impl MultisessionBackend {
             contexts: HashMap::new(),
             local_events: VecDeque::new(),
             pipe_stash: VecDeque::new(),
+            blobs: HashMap::new(),
+            ctx_blobs: HashMap::new(),
+            task_frames: HashMap::new(),
             name,
         })
     }
@@ -248,8 +316,13 @@ impl MultisessionBackend {
                 match ev {
                     PipeEvent::Msg(WorkerMsg::Done(outcome)) => {
                         self.workers[idx].running = None;
+                        self.task_frames.remove(&outcome.id);
                         self.local_events.push_back(BackendEvent::Done(outcome));
                     }
+                    // The store answering it is being reaped; the task
+                    // is lost and will be resubmitted through the
+                    // normal WorkerLost path.
+                    PipeEvent::Msg(WorkerMsg::CacheMiss { .. }) => {}
                     PipeEvent::Msg(WorkerMsg::Progress { task_id, cond }) => {
                         self.local_events.push_back(BackendEvent::Progress { task_id, cond });
                     }
@@ -264,6 +337,9 @@ impl MultisessionBackend {
             let w = &mut self.workers[idx];
             (w.running.take(), w.gen + 1)
         };
+        if let Some(t) = lost {
+            self.task_frames.remove(&t);
+        }
         eprintln!("futurize: {} worker {idx} lost ({reason}); spawning replacement", self.name);
         match spawn_worker(&self.bin, self.codec, &self.tx, idx, gen) {
             Ok(mut proc) => {
@@ -278,6 +354,43 @@ impl MultisessionBackend {
                         let _ = proc.child.wait();
                         proc.alive = false;
                         break;
+                    }
+                }
+                // Replay cached blobs referenced by *still-active*
+                // contexts — the replacement's store is empty, and an
+                // in-flight map must not need a CacheMiss round for
+                // data the parent already knows it requires. Digests
+                // whose last context dropped are gone from `blobs` and
+                // are deliberately not replayed.
+                if proc.alive {
+                    let mut digests: Vec<u64> = self
+                        .contexts
+                        .keys()
+                        .filter_map(|c| self.ctx_blobs.get(c))
+                        .flatten()
+                        .copied()
+                        .collect();
+                    digests.sort_unstable();
+                    digests.dedup();
+                    for d in digests {
+                        let bytes = self.blobs.get(&d).map(|b| b.bytes).unwrap_or(0);
+                        let Ok(Some(frame)) =
+                            ensure_blob_frame(self.codec, &mut self.blobs, d)
+                        else {
+                            continue;
+                        };
+                        if write_frame(&mut proc.stdin, frame)
+                            .and_then(|()| proc.stdin.flush())
+                            .is_err()
+                        {
+                            let _ = proc.child.kill();
+                            let _ = proc.child.wait();
+                            proc.alive = false;
+                            break;
+                        }
+                        proc.resident.insert(d);
+                        crate::wire::stats::record_cache_put(bytes);
+                        BLOBS_REPLAYED.fetch_add(1, Ordering::Relaxed);
                     }
                 }
                 self.workers[idx] = proc;
@@ -334,6 +447,48 @@ impl MultisessionBackend {
                 break;
             };
             let Some(task) = self.queue.pop_front() else { break };
+            // Data-plane cache, the lazy-ship half: make every blob the
+            // task's context references resident on the chosen worker
+            // before the task frame itself goes out (stdin FIFO then
+            // guarantees resolution). A digest already on the worker's
+            // ledger ships nothing — that is the cross-call win.
+            let ctx_digests: Vec<u64> = task
+                .kind
+                .context_id()
+                .and_then(|c| self.ctx_blobs.get(&c))
+                .cloned()
+                .unwrap_or_default();
+            let mut put_failed = false;
+            for d in &ctx_digests {
+                let bytes = self.blobs.get(d).map(|b| b.bytes).unwrap_or(0);
+                if self.workers[idle].resident.contains(d) {
+                    crate::wire::stats::record_cache_hit(bytes);
+                    continue;
+                }
+                let Some(frame) = ensure_blob_frame(self.codec, &mut self.blobs, *d)? else {
+                    continue;
+                };
+                let w = &mut self.workers[idle];
+                if write_frame(&mut w.stdin, frame).and_then(|()| w.stdin.flush()).is_err() {
+                    put_failed = true;
+                    break;
+                }
+                w.resident.insert(*d);
+                crate::wire::stats::record_cache_put(bytes);
+            }
+            if put_failed {
+                self.queue.push_front(task);
+                respawns += 1;
+                if respawns > self.workers.len() * 2 {
+                    return Err(
+                        "multisession: workers are dying faster than they can be respawned"
+                            .into(),
+                    );
+                }
+                let lost = self.supervise(idle, "cache put write failed");
+                self.local_events.push_back(BackendEvent::WorkerLost { worker: idle, task: lost });
+                continue;
+            }
             let payload = self
                 .codec
                 .encode(&ParentMsgRef::Task(&task))
@@ -343,6 +498,11 @@ impl MultisessionBackend {
             match write_frame(&mut w.stdin, &payload).and_then(|()| w.stdin.flush()) {
                 Ok(()) => {
                     w.running = Some(id);
+                    if !ctx_digests.is_empty() {
+                        // Keep the encoded frame for CacheMiss
+                        // redelivery; dropped again on Done.
+                        self.task_frames.insert(id, payload);
+                    }
                 }
                 Err(_) => {
                     // The worker died between events. The task was never
@@ -386,8 +546,65 @@ impl MultisessionBackend {
             }
             PipeEvent::Msg(WorkerMsg::Done(outcome)) => {
                 self.workers[idx].running = None;
+                self.task_frames.remove(&outcome.id);
                 self.dispatch()?;
                 Ok(Some(BackendEvent::Done(outcome)))
+            }
+            PipeEvent::Msg(WorkerMsg::CacheMiss { task_id, digests }) => {
+                // The worker's store no longer holds digests the parent
+                // ledger believed resident (fresh respawn that raced a
+                // task, LRU eviction). It discarded the task; re-put
+                // the blobs and re-send the stored task frame — stdin
+                // FIFO makes the retry resolve. Entirely internal: the
+                // dispatch core never sees a miss.
+                let mut healthy = true;
+                for d in &digests {
+                    crate::wire::stats::record_cache_miss();
+                    let bytes = self.blobs.get(d).map(|b| b.bytes).unwrap_or(0);
+                    match ensure_blob_frame(self.codec, &mut self.blobs, *d)? {
+                        Some(frame) => {
+                            let w = &mut self.workers[idx];
+                            if write_frame(&mut w.stdin, frame)
+                                .and_then(|()| w.stdin.flush())
+                                .is_ok()
+                            {
+                                w.resident.insert(*d);
+                                crate::wire::stats::record_cache_put(bytes);
+                            } else {
+                                healthy = false;
+                                break;
+                            }
+                        }
+                        // The parent no longer holds the blob — an
+                        // invariant break this task cannot recover
+                        // from on this worker.
+                        None => {
+                            healthy = false;
+                            break;
+                        }
+                    }
+                }
+                let frame = if healthy { self.task_frames.get(&task_id).cloned() } else { None };
+                match frame {
+                    Some(f) => {
+                        let w = &mut self.workers[idx];
+                        if write_frame(&mut w.stdin, &f).and_then(|()| w.stdin.flush()).is_ok() {
+                            Ok(None)
+                        } else {
+                            let lost = self.supervise(idx, "cache re-put write failed");
+                            self.dispatch()?;
+                            Ok(Some(BackendEvent::WorkerLost { worker: idx, task: lost }))
+                        }
+                    }
+                    // Treat the slot as lost so the dispatch core's
+                    // retry machinery takes over instead of the map
+                    // hanging on a task that can never complete.
+                    None => {
+                        let lost = self.supervise(idx, "cache state unavailable for retry");
+                        self.dispatch()?;
+                        Ok(Some(BackendEvent::WorkerLost { worker: idx, task: lost }))
+                    }
+                }
             }
             PipeEvent::Exit { reason } => {
                 let lost = self.supervise(idx, &reason);
@@ -421,6 +638,22 @@ impl Backend for MultisessionBackend {
 
     fn drop_context(&mut self, ctx_id: u64) -> Result<(), String> {
         self.contexts.remove(&ctx_id);
+        // Release the context's blob references; a blob with no
+        // remaining referents is dropped parent-side (bounded memory).
+        // Worker resident ledgers are deliberately untouched — the
+        // worker-side LRU keeps the bytes across calls, and a repeat
+        // map over the same data re-puts parent-side cheaply (the Arc
+        // comes back from the caller) while shipping nothing.
+        if let Some(digests) = self.ctx_blobs.remove(&ctx_id) {
+            for d in digests {
+                if let Some(e) = self.blobs.get_mut(&d) {
+                    e.refs.remove(&ctx_id);
+                    if e.refs.is_empty() {
+                        self.blobs.remove(&d);
+                    }
+                }
+            }
+        }
         let payload = self
             .codec
             .encode(&ParentMsg::DropContext(ctx_id))
@@ -485,6 +718,28 @@ impl Backend for MultisessionBackend {
 
     fn cancel_queued(&mut self) -> Vec<u64> {
         self.queue.drain(..).map(|t| t.id).collect()
+    }
+
+    fn data_cache(&self) -> bool {
+        true
+    }
+
+    fn put_blob(&mut self, ctx_id: u64, digest: u64, blob: CacheSource) -> Result<(), String> {
+        // Parent-side ledger only: nothing is shipped here. dispatch()
+        // makes the digest resident on a worker the first time a task
+        // referencing it lands there.
+        let entry = self.blobs.entry(digest).or_insert_with(|| BlobEntry {
+            bytes: blob.approx_bytes() as u64,
+            source: blob,
+            refs: HashSet::new(),
+            frame: None,
+        });
+        entry.refs.insert(ctx_id);
+        let list = self.ctx_blobs.entry(ctx_id).or_default();
+        if !list.contains(&digest) {
+            list.push(digest);
+        }
+        Ok(())
     }
 }
 

@@ -220,6 +220,17 @@ fn execute_kind(
             let (r, log) = interp.eval_captured(expr, genv);
             (wrap_single(r), log)
         }
+        // Digest references are resolved into plain slice kinds before
+        // run_task is reached (worker main loop, batchtools job
+        // threads); one arriving here is a dispatch bug, not a user
+        // error.
+        TaskKind::MapSliceRef { digest, .. } | TaskKind::ForeachSliceRef { digest, .. } => (
+            Err(RCondition::error_cond(format!(
+                "futurize internal error: unresolved cache ref {digest:#018x} \
+                 reached the task runner"
+            ))),
+            CaptureLog::default(),
+        ),
         TaskKind::MapSlice { ctx: ctx_id, items, seeds } => {
             let Some(ctx) = ctx else {
                 return (Err(missing_context(*ctx_id)), CaptureLog::default());
@@ -529,6 +540,7 @@ mod tests {
             id,
             body: ContextBody::Map { f: to_wire(&f).unwrap(), extra: vec![] },
             globals: vec![],
+            cached_globals: vec![],
             nesting: Default::default(),
             kernel: None,
             reduce: None,
@@ -706,6 +718,7 @@ mod tests {
                 id: 21,
                 body: ContextBody::Map { f: to_wire(&f).unwrap(), extra: vec![] },
                 globals: vec![],
+                cached_globals: vec![],
                 nesting: NestingInfo {
                     stack: vec![PlanSpec::sequential()],
                     outer_workers: 2,

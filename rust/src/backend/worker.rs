@@ -27,8 +27,10 @@ use std::io::Write;
 
 use serde_derive::{Deserialize, Serialize};
 
-use crate::future_core::{TaskContext, TaskOutcome, TaskPayload};
+use super::blobstore::{self, BlobStore};
+use crate::future_core::{TaskContext, TaskKind, TaskOutcome, TaskPayload};
 use crate::rlite::conditions::RCondition;
+use crate::rlite::serialize::WireSlice;
 use crate::wire::codec::{read_frame, write_frame};
 use crate::wire::WireCodec;
 
@@ -48,6 +50,11 @@ pub enum ParentMsg {
     /// Evict a cached context (its map call has fully resolved).
     DropContext(u64),
     Shutdown,
+    /// Ship a data-plane blob into the worker's LRU store (see
+    /// `backend::blobstore`). Sent at most once per (digest, worker)
+    /// in steady state; re-sent on `CacheMiss`/respawn. Appended after
+    /// the original variants so their wire tags stay stable.
+    CachePut { digest: u64, blob: super::blobstore::CacheBlob },
 }
 
 /// Encode-only borrowing mirror of [`ParentMsg`]: lets the parent
@@ -64,12 +71,20 @@ pub enum ParentMsgRef<'a> {
     DropContext(u64),
     #[allow(dead_code)]
     Shutdown,
+    CachePut { digest: u64, blob: super::blobstore::CacheBlobRef<'a> },
 }
 
 #[derive(Debug, Serialize, Deserialize)]
 pub enum WorkerMsg {
     Progress { task_id: u64, cond: RCondition },
     Done(TaskOutcome),
+    /// Negative-ack: a task referenced digests this worker's blob
+    /// store no longer holds (fresh respawn, eviction). The task was
+    /// discarded; the parent re-`CachePut`s the named digests and
+    /// re-sends the task frame — stdin ordering guarantees the blobs
+    /// arrive first. Appended after the original variants so their
+    /// wire tags stay stable.
+    CacheMiss { task_id: u64, digests: Vec<u64> },
 }
 
 /// Call this first in any binary that may be used as a worker host
@@ -93,6 +108,7 @@ pub fn worker_main() {
     let stdout = std::io::stdout();
     let mut out = stdout.lock();
     let mut contexts: HashMap<u64, TaskContext> = HashMap::new();
+    let mut store = BlobStore::new(blobstore::cache_budget());
     loop {
         let frame = match read_frame(&mut input) {
             Ok(Some(f)) => f,
@@ -120,11 +136,83 @@ pub fn worker_main() {
             ParentMsg::DropContext(id) => {
                 contexts.remove(&id);
             }
-            ParentMsg::Task(task) => {
+            ParentMsg::CachePut { digest, blob } => {
+                store.insert(digest, blob);
+            }
+            ParentMsg::Task(mut task) => {
                 let worker_idx = std::env::var("FUTURIZE_WORKER_IDX")
                     .ok()
                     .and_then(|s| s.parse().ok())
                     .unwrap_or(0);
+                // Each task frame opens a new blob-store epoch: blobs
+                // that arrived for *this* task are eviction-exempt
+                // until it runs, so a tiny budget can't livelock the
+                // CacheMiss → re-put loop.
+                store.bump_epoch();
+                let mut missing: Vec<u64> = Vec::new();
+                // Materialize cached globals into the referenced
+                // context (permanent: each miss round makes progress).
+                if let Some(ctx) = task.kind.context_id().and_then(|id| contexts.get_mut(&id)) {
+                    let cached = std::mem::take(&mut ctx.cached_globals);
+                    for (name, digest) in cached {
+                        match store.get_val(digest) {
+                            Some(v) => ctx.globals.push((name, (*v).clone())),
+                            None => {
+                                missing.push(digest);
+                                ctx.cached_globals.push((name, digest));
+                            }
+                        }
+                    }
+                }
+                // Resolve element-vector refs into zero-copy windows
+                // over the stored blob; the task runner only ever sees
+                // plain slice kinds.
+                let resolved = match &task.kind {
+                    TaskKind::MapSliceRef { ctx, digest, start, end, seeds } => {
+                        match store.get_items(*digest) {
+                            Some(arc) => Some(TaskKind::MapSlice {
+                                ctx: *ctx,
+                                items: WireSlice::shared(arc, *start, *end),
+                                seeds: seeds.clone(),
+                            }),
+                            None => {
+                                missing.push(*digest);
+                                None
+                            }
+                        }
+                    }
+                    TaskKind::ForeachSliceRef { ctx, digest, start, end, seeds } => {
+                        match store.get_bindings(*digest) {
+                            Some(arc) => Some(TaskKind::ForeachSlice {
+                                ctx: *ctx,
+                                bindings: WireSlice::shared(arc, *start, *end),
+                                seeds: seeds.clone(),
+                            }),
+                            None => {
+                                missing.push(*digest);
+                                None
+                            }
+                        }
+                    }
+                    _ => None,
+                };
+                if let Some(kind) = resolved {
+                    task.kind = kind;
+                }
+                if !missing.is_empty() {
+                    // Discard the task and negative-ack: the parent
+                    // re-puts the digests then re-sends the frame, and
+                    // stdin FIFO ordering makes the retry resolve.
+                    missing.sort_unstable();
+                    missing.dedup();
+                    let msg = WorkerMsg::CacheMiss { task_id: task.id, digests: missing };
+                    let Ok(bytes) = codec.encode(&msg) else { break };
+                    if write_frame(&mut out, &bytes).is_err() {
+                        break;
+                    }
+                    let _ = out.flush();
+                    continue;
+                }
                 let ctx = task.kind.context_id().and_then(|id| contexts.get(&id));
                 // Progress messages must flush immediately for near-live
                 // relay across the process boundary.
@@ -201,6 +289,7 @@ mod tests {
                 "a".into(),
                 crate::rlite::serialize::WireVal::Dbl(vec![1.5], None),
             )],
+            cached_globals: vec![],
             nesting: Default::default(),
             kernel: None,
             reduce: None,
@@ -223,6 +312,37 @@ mod tests {
     }
 
     #[test]
+    fn cache_messages_roundtrip() {
+        use super::super::blobstore::{CacheBlob, CacheBlobRef};
+        let items = vec![crate::rlite::serialize::WireVal::Dbl(vec![1.0, 2.0], None)];
+        for codec in [WireCodec::Binary, WireCodec::Json] {
+            let owned = codec
+                .encode(&ParentMsg::CachePut { digest: 9, blob: CacheBlob::Items(items.clone()) })
+                .unwrap();
+            let borrowed = codec
+                .encode(&ParentMsgRef::CachePut { digest: 9, blob: CacheBlobRef::Items(&items) })
+                .unwrap();
+            assert_eq!(owned, borrowed, "{codec:?}: CachePut mirror drifted from ParentMsg");
+            match codec.decode::<ParentMsg>(&owned).unwrap() {
+                ParentMsg::CachePut { digest, blob: CacheBlob::Items(v) } => {
+                    assert_eq!(digest, 9, "{codec:?}");
+                    assert_eq!(v.len(), 1, "{codec:?}");
+                }
+                other => panic!("{codec:?}: {other:?}"),
+            }
+            let miss = WorkerMsg::CacheMiss { task_id: 4, digests: vec![9, 11] };
+            let bytes = codec.encode(&miss).unwrap();
+            match codec.decode::<WorkerMsg>(&bytes).unwrap() {
+                WorkerMsg::CacheMiss { task_id, digests } => {
+                    assert_eq!(task_id, 4, "{codec:?}");
+                    assert_eq!(digests, vec![9, 11], "{codec:?}");
+                }
+                other => panic!("{codec:?}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn ref_mirror_encodes_identically() {
         use crate::future_core::{ContextBody, TaskContext};
         let ctx = TaskContext {
@@ -232,6 +352,7 @@ mod tests {
                 "g".into(),
                 crate::rlite::serialize::WireVal::Dbl(vec![1.0, 2.0], None),
             )],
+            cached_globals: vec![],
             nesting: Default::default(),
             kernel: None,
             reduce: None,

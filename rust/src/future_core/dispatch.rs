@@ -37,10 +37,13 @@ use std::sync::Arc;
 
 use super::driver::{now_unix, MapOptions, MapRun, SeedOption};
 use super::{ContextBody, TaskContext, TaskKind, TaskOutcome, TaskPayload, TraceEvent};
+use crate::backend::blobstore::{self, CacheSource};
 use crate::backend::BackendEvent;
 use crate::rlite::conditions::RCondition;
 use crate::rlite::eval::{Interp, Signal};
-use crate::rlite::serialize::{from_wire_owned, WireSlice, WireVal};
+use crate::rlite::serialize::{
+    digest_bindings, digest_items, digest_val, from_wire_owned, WireSlice, WireVal,
+};
 use crate::rlite::value::RVal;
 use crate::rng::RngState;
 use crate::scheduling::make_chunks;
@@ -72,21 +75,33 @@ impl ElementSource {
         self.len() == 0
     }
 
+    /// Build the task kind for one chunk window. With `digest` set the
+    /// element storage is resident in the workers' blob stores (the
+    /// parent shipped it via `put_blob`), so the payload carries only
+    /// the digest and the window indices — O(1) bytes per chunk instead
+    /// of O(chunk) — and the worker re-slices its cached copy.
     fn slice_kind(
         &self,
         ctx: u64,
+        digest: Option<u64>,
         start: usize,
         end: usize,
         seeds: &Option<Vec<RngState>>,
     ) -> TaskKind {
         let seeds = seeds.as_ref().map(|s| s[start..end].to_vec());
-        match self {
-            ElementSource::Items(items) => TaskKind::MapSlice {
+        match (self, digest) {
+            (ElementSource::Items(_), Some(digest)) => {
+                TaskKind::MapSliceRef { ctx, digest, start, end, seeds }
+            }
+            (ElementSource::Bindings(_), Some(digest)) => {
+                TaskKind::ForeachSliceRef { ctx, digest, start, end, seeds }
+            }
+            (ElementSource::Items(items), None) => TaskKind::MapSlice {
                 ctx,
                 items: WireSlice::shared(items.clone(), start, end),
                 seeds,
             },
-            ElementSource::Bindings(bindings) => TaskKind::ForeachSlice {
+            (ElementSource::Bindings(bindings), None) => TaskKind::ForeachSlice {
                 ctx,
                 bindings: WireSlice::shared(bindings.clone(), start, end),
                 seeds,
@@ -100,6 +115,10 @@ impl ElementSource {
 pub struct FutureSet {
     ctx: Arc<TaskContext>,
     source: ElementSource,
+    /// Content digest of the full element vector when it rides the
+    /// data-plane cache: chunks then ship digest-ref payloads and the
+    /// workers slice their resident copy.
+    items_digest: Option<u64>,
     seeds: Option<Vec<RngState>>,
     /// Sys.sleep scale, stamped onto every chunk payload.
     time_scale: f64,
@@ -157,6 +176,7 @@ impl FutureSet {
     pub fn new(
         ctx: Arc<TaskContext>,
         source: ElementSource,
+        items_digest: Option<u64>,
         seeds: Option<Vec<RngState>>,
         workers: usize,
         time_scale: f64,
@@ -169,6 +189,7 @@ impl FutureSet {
         FutureSet {
             ctx,
             source,
+            items_digest,
             seeds,
             time_scale,
             capture_stdout: opts.stdout,
@@ -379,7 +400,7 @@ impl FutureSet {
         let id = i.session.fresh_task_id();
         let payload = TaskPayload {
             id,
-            kind: self.source.slice_kind(self.ctx.id, start, end, &self.seeds),
+            kind: self.source.slice_kind(self.ctx.id, self.items_digest, start, end, &self.seeds),
             time_scale: self.time_scale,
             capture_stdout: self.capture_stdout,
         };
@@ -612,6 +633,63 @@ fn stash_foreign_outcome(i: &mut Interp, outcome: TaskOutcome) {
     i.session.pending.stash(outcome);
 }
 
+/// Does the data-plane cache apply to this call? Three gates: the
+/// per-call option (`futurize(cache = "off")`), the process-wide kill
+/// switch (`FUTURIZE_NO_CACHE=1`), and the backend (only process
+/// backends ship bytes over a wire; in-process backends already share
+/// the element `Arc`s, so caching would be pure overhead).
+fn cache_active(i: &mut Interp, opts: &MapOptions) -> bool {
+    opts.cache
+        && blobstore::cache_enabled()
+        && i.session.backend().map(|b| b.data_cache()).unwrap_or(false)
+}
+
+/// Freeze-time extraction for the data-plane cache: pull every global
+/// binding at or over the blob threshold out of the inline context,
+/// digest it, and queue one `CacheSource` put per *distinct* digest —
+/// two bindings aliasing the same frozen vector encode once, the second
+/// is a pure digest reference. Small bindings stay inline: digesting
+/// and ledger lookups cost more than just shipping them.
+#[allow(clippy::type_complexity)]
+fn extract_cached_globals(
+    globals: Vec<(String, WireVal)>,
+) -> (Vec<(String, WireVal)>, Vec<(String, u64)>, Vec<(u64, CacheSource)>) {
+    let mut inline = Vec::new();
+    let mut cached = Vec::new();
+    let mut puts: Vec<(u64, CacheSource)> = Vec::new();
+    for (name, v) in globals {
+        if v.approx_size() < blobstore::CACHE_MIN_BYTES {
+            inline.push((name, v));
+            continue;
+        }
+        let v = Arc::new(v);
+        let d = digest_val(&v);
+        if !puts.iter().any(|(pd, _)| *pd == d) {
+            puts.push((d, CacheSource::Val(v)));
+        }
+        cached.push((name, d));
+    }
+    (inline, cached, puts)
+}
+
+/// Ship queued blobs to the backend's data plane under the owning
+/// context id. The backend keeps the parent-side ledger: blobs already
+/// resident on a worker are *not* re-sent — that is the whole point.
+fn ship_blobs(
+    i: &mut Interp,
+    ctx_id: u64,
+    puts: Vec<(u64, CacheSource)>,
+) -> Result<(), Signal> {
+    if puts.is_empty() {
+        return Ok(());
+    }
+    let backend = i.session.backend().map_err(Signal::error)?;
+    for (d, src) in puts {
+        backend.put_blob(ctx_id, d, src).map_err(Signal::error)?;
+    }
+    Ok(())
+}
+
 /// Build and run a [`FutureSet`] for a map-style call.
 #[allow(clippy::too_many_arguments)]
 pub fn run_map(
@@ -646,18 +724,48 @@ pub fn run_map(
             crate::transpile::analysis::analyze_map(&f, &extra, &globals, kernel.is_some(), opts);
         crate::transpile::analysis::surface(i, &diags, lint_mode)?;
     }
+    // Data-plane cache (freeze-time half): on a cache-capable backend,
+    // oversized globals and the frozen element vector ship as
+    // content-addressed blobs — once per worker, referenced by digest
+    // thereafter — instead of riding every context and chunk payload.
+    let use_cache = cache_active(i, opts);
+    let (globals, cached_globals, mut puts) =
+        if use_cache { extract_cached_globals(globals) } else { (globals, vec![], vec![]) };
+    let items = Arc::new(items);
+    let items_digest = if use_cache
+        && items.iter().map(|v| v.approx_size()).sum::<usize>() >= blobstore::CACHE_MIN_BYTES
+    {
+        let d = digest_items(&items);
+        if !puts.iter().any(|(pd, _)| *pd == d) {
+            puts.push((d, CacheSource::Items(items.clone())));
+        }
+        Some(d)
+    } else {
+        None
+    };
+    let ctx_id = i.session.fresh_context_id();
+    ship_blobs(i, ctx_id, puts)?;
     let ctx = Arc::new(TaskContext {
-        id: i.session.fresh_context_id(),
+        id: ctx_id,
         body: ContextBody::Map { f, extra },
         globals,
+        cached_globals,
         nesting,
         kernel,
         reduce,
     });
     let workers = i.session.workers();
     let time_scale = i.config.time_scale;
-    FutureSet::new(ctx, ElementSource::Items(Arc::new(items)), seeds, workers, time_scale, opts)
-        .run(i, opts)
+    FutureSet::new(
+        ctx,
+        ElementSource::Items(items),
+        items_digest,
+        seeds,
+        workers,
+        time_scale,
+        opts,
+    )
+    .run(i, opts)
 }
 
 /// Build and run a [`FutureSet`] for a foreach-style call.
@@ -686,10 +794,31 @@ pub fn run_foreach(
         let diags = crate::transpile::analysis::analyze_foreach(&body, &names, &globals, opts);
         crate::transpile::analysis::surface(i, &diags, lint_mode)?;
     }
+    let use_cache = cache_active(i, opts);
+    let (globals, cached_globals, mut puts) =
+        if use_cache { extract_cached_globals(globals) } else { (globals, vec![], vec![]) };
+    let bindings = Arc::new(bindings);
+    let rows_bytes = |rows: &[Vec<(String, WireVal)>]| -> usize {
+        rows.iter()
+            .map(|row| row.iter().map(|(n, v)| n.len() + v.approx_size()).sum::<usize>())
+            .sum()
+    };
+    let bindings_digest = if use_cache && rows_bytes(&bindings) >= blobstore::CACHE_MIN_BYTES {
+        let d = digest_bindings(&bindings);
+        if !puts.iter().any(|(pd, _)| *pd == d) {
+            puts.push((d, CacheSource::Bindings(bindings.clone())));
+        }
+        Some(d)
+    } else {
+        None
+    };
+    let ctx_id = i.session.fresh_context_id();
+    ship_blobs(i, ctx_id, puts)?;
     let ctx = Arc::new(TaskContext {
-        id: i.session.fresh_context_id(),
+        id: ctx_id,
         body: ContextBody::Foreach { body },
         globals,
+        cached_globals,
         nesting,
         kernel: None,
         reduce,
@@ -698,7 +827,8 @@ pub fn run_foreach(
     let time_scale = i.config.time_scale;
     FutureSet::new(
         ctx,
-        ElementSource::Bindings(Arc::new(bindings)),
+        ElementSource::Bindings(bindings),
+        bindings_digest,
         seeds,
         workers,
         time_scale,

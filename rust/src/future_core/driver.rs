@@ -52,6 +52,11 @@ pub struct MapOptions {
     /// distilled reduction facts the freeze-time detectors need
     /// (`transpile::analysis`).
     pub lint: crate::rlite::diag::LintSettings,
+    /// Data-plane cache (`futurize(cache = "auto"|"off")`): oversized
+    /// exports and the frozen element vector ship as content-addressed
+    /// blobs once per worker and are referenced by digest thereafter.
+    /// On by default; `FUTURIZE_NO_CACHE=1` overrides per process.
+    pub cache: bool,
 }
 
 impl Default for MapOptions {
@@ -65,6 +70,7 @@ impl Default for MapOptions {
             retries: 0,
             reduce: None,
             lint: Default::default(),
+            cache: true,
         }
     }
 }

@@ -54,6 +54,23 @@ pub enum TaskKind {
         bindings: WireSlice<Vec<(String, WireVal)>>,
         seeds: Option<Vec<RngState>>,
     },
+    /// Like [`TaskKind::MapSlice`], but the element vector travels as a
+    /// data-plane cache digest plus a `[start, end)` window instead of
+    /// inline bytes (see `backend::blobstore`). The worker resolves the
+    /// digest against its blob store *before* the task runner sees the
+    /// task — a resolved ref is rewritten into a plain `MapSlice` — or
+    /// answers with a `CacheMiss` negative-ack so the parent re-puts.
+    /// Appended after the original variants to keep their wire tags
+    /// stable.
+    MapSliceRef { ctx: u64, digest: u64, start: usize, end: usize, seeds: Option<Vec<RngState>> },
+    /// The foreach analog of [`TaskKind::MapSliceRef`].
+    ForeachSliceRef {
+        ctx: u64,
+        digest: u64,
+        start: usize,
+        end: usize,
+        seeds: Option<Vec<RngState>>,
+    },
 }
 
 impl TaskKind {
@@ -61,7 +78,10 @@ impl TaskKind {
     pub fn context_id(&self) -> Option<u64> {
         match self {
             TaskKind::Expr { .. } => None,
-            TaskKind::MapSlice { ctx, .. } | TaskKind::ForeachSlice { ctx, .. } => Some(*ctx),
+            TaskKind::MapSlice { ctx, .. }
+            | TaskKind::ForeachSlice { ctx, .. }
+            | TaskKind::MapSliceRef { ctx, .. }
+            | TaskKind::ForeachSliceRef { ctx, .. } => Some(*ctx),
         }
     }
 }
@@ -82,6 +102,12 @@ pub struct TaskContext {
     /// Exported globals, installed into the worker's fresh interpreter
     /// before each task of this context runs.
     pub globals: Vec<(String, WireVal)>,
+    /// Oversized globals extracted into the data-plane cache: `(name,
+    /// digest)` pairs the worker materializes from its blob store into
+    /// `globals` at first use (see `backend::blobstore`). Empty when
+    /// the cache is off or nothing crossed the size threshold, so the
+    /// context encodes the same handful of extra bytes either way.
+    pub cached_globals: Vec<(String, u64)>,
     /// The plan-stack levels *below* the one running this context's
     /// tasks, inherited by worker sessions so nested futurized calls
     /// instantiate their own inner backend (paper's `plan(list(...))`

@@ -104,6 +104,19 @@ pub struct FusionReport {
     /// Reduce-plan rejections by reason label
     /// (`shadowed`, `not-in-catalog`, `vec-gate`).
     pub reduce_rejections: Vec<(&'static str, u64)>,
+    /// Data-plane cache: blobs actually written to a worker/spool.
+    pub cache_puts: u64,
+    /// Bytes those puts shipped (approximate in-memory size).
+    pub cache_put_bytes: u64,
+    /// Task dispatches that referenced an already-resident blob.
+    pub cache_hits: u64,
+    /// Bytes those hits did *not* re-ship (the wire savings).
+    pub cache_hit_bytes: u64,
+    /// Worker-side negative acks (blob evicted under memory pressure,
+    /// re-shipped on demand).
+    pub cache_misses: u64,
+    /// Bytes reclaimed by LRU eviction in worker blob stores.
+    pub cache_evict_bytes: u64,
 }
 
 impl FusionReport {
@@ -119,7 +132,8 @@ impl FusionReport {
             "kernel: recognized={} unmatched={} slices_fused={} slices_fallback={}\n\
              kernel rejections: {}\n\
              reduce: plans_attached={} slices_folded={} slices_fallback={}\n\
-             reduce rejections: {}",
+             reduce rejections: {}\n\
+             cache: puts={} put_bytes={} hits={} hit_bytes={} misses={} evict_bytes={}",
             self.kernel_recognized,
             self.kernel_unmatched,
             self.kernel_slices_fused,
@@ -129,6 +143,12 @@ impl FusionReport {
             self.reduce_slices_folded,
             self.reduce_slices_fallback,
             fmt_reasons(&self.reduce_rejections),
+            self.cache_puts,
+            self.cache_put_bytes,
+            self.cache_hits,
+            self.cache_hit_bytes,
+            self.cache_misses,
+            self.cache_evict_bytes,
         )
     }
 }
@@ -146,5 +166,11 @@ pub fn fusion_report() -> FusionReport {
         reduce_slices_folded: transpile::reduce::slices_folded(),
         reduce_slices_fallback: transpile::reduce::slices_fallback(),
         reduce_rejections: transpile::reduce::plan_rejections(),
+        cache_puts: wire::stats::cache_puts(),
+        cache_put_bytes: wire::stats::cache_put_bytes(),
+        cache_hits: wire::stats::cache_hits(),
+        cache_hit_bytes: wire::stats::cache_hit_bytes(),
+        cache_misses: wire::stats::cache_misses(),
+        cache_evict_bytes: wire::stats::cache_evict_bytes(),
     }
 }

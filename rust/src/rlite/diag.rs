@@ -116,6 +116,10 @@ pub enum DiagCode {
     KernelFusionRejected,
     /// FZ008 — reduction fusion rejected this call; names the blocker.
     ReduceFusionRejected,
+    /// FZ009 — data-plane cache activity for this map call: how many
+    /// blobs were extracted and the session's running hit/miss
+    /// counters (`fusion_report()` carries the same numbers).
+    CacheReport,
 }
 
 impl DiagCode {
@@ -129,6 +133,7 @@ impl DiagCode {
             DiagCode::FloatFoldUlp => "FZ006",
             DiagCode::KernelFusionRejected => "FZ007",
             DiagCode::ReduceFusionRejected => "FZ008",
+            DiagCode::CacheReport => "FZ009",
         }
     }
 
@@ -142,7 +147,8 @@ impl DiagCode {
             | DiagCode::OrderDependentReduction => LintLevel::Warn,
             DiagCode::FloatFoldUlp
             | DiagCode::KernelFusionRejected
-            | DiagCode::ReduceFusionRejected => LintLevel::Info,
+            | DiagCode::ReduceFusionRejected
+            | DiagCode::CacheReport => LintLevel::Info,
         }
     }
 }
@@ -233,8 +239,10 @@ mod tests {
     fn codes_are_stable_and_levelled() {
         assert_eq!(DiagCode::CrossIterationDependence.as_str(), "FZ001");
         assert_eq!(DiagCode::ReduceFusionRejected.as_str(), "FZ008");
+        assert_eq!(DiagCode::CacheReport.as_str(), "FZ009");
         assert_eq!(DiagCode::CrossIterationDependence.default_level(), LintLevel::Warn);
         assert_eq!(DiagCode::KernelFusionRejected.default_level(), LintLevel::Info);
+        assert_eq!(DiagCode::CacheReport.default_level(), LintLevel::Info);
         assert!(LintLevel::Info < LintLevel::Warn && LintLevel::Warn < LintLevel::Error);
     }
 

@@ -102,6 +102,155 @@ impl WireVal {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Content digests (the data-plane cache's addressing scheme)
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit, rolled by hand so digesting stays dependency-free.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    fn names(&mut self, names: &Option<Vec<String>>) {
+        match names {
+            None => self.u64(0),
+            Some(v) => {
+                self.u64(1 + v.len() as u64);
+                for s in v {
+                    self.str(s);
+                }
+            }
+        }
+    }
+
+    fn val(&mut self, v: &WireVal) {
+        match v {
+            WireVal::Null => self.u64(0),
+            WireVal::Lgl(v, n) => {
+                self.u64(1);
+                self.u64(v.len() as u64);
+                for &b in v {
+                    self.bytes(&[b as u8]);
+                }
+                self.names(n);
+            }
+            WireVal::Int(v, n) => {
+                self.u64(2);
+                self.u64(v.len() as u64);
+                for &x in v {
+                    self.bytes(&x.to_le_bytes());
+                }
+                self.names(n);
+            }
+            WireVal::Dbl(v, n) => {
+                self.u64(3);
+                self.u64(v.len() as u64);
+                for &x in v {
+                    self.bytes(&x.to_bits().to_le_bytes());
+                }
+                self.names(n);
+            }
+            WireVal::Chr(v, n) => {
+                self.u64(4);
+                self.u64(v.len() as u64);
+                for s in v {
+                    self.str(s);
+                }
+                self.names(n);
+            }
+            WireVal::List(v, n, class) => {
+                self.u64(5);
+                self.u64(v.len() as u64);
+                for x in v {
+                    self.val(x);
+                }
+                self.names(n);
+                match class {
+                    None => self.u64(0),
+                    Some(c) => {
+                        self.u64(1);
+                        self.str(c);
+                    }
+                }
+            }
+            WireVal::Builtin(k) => {
+                self.u64(6);
+                self.str(k);
+            }
+            // Closures and conditions are small and structural; hashing
+            // their exact binary encoding is simpler than walking the
+            // AST and just as deterministic (same-binary protocol).
+            other @ (WireVal::Closure { .. } | WireVal::Cond(_)) => {
+                self.u64(7);
+                let enc = crate::wire::bin::to_bytes(other).unwrap_or_default();
+                self.u64(enc.len() as u64);
+                self.bytes(&enc);
+            }
+        }
+    }
+}
+
+/// Content digest of one value — the address under which the data-plane
+/// cache ships it (`CachePut`) and references it (`TaskContext::
+/// cached_globals`). A structural walk over the in-memory value: no
+/// encoding is forced and nothing is copied, so digesting an
+/// `Arc`-frozen payload at freeze time is O(bytes hashed), zero
+/// allocations.
+pub fn digest_val(v: &WireVal) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(0x11); // domain tag: single value
+    h.val(v);
+    h.0
+}
+
+/// Content digest of a frozen map-element vector
+/// (`ElementSource::Items`). Domain-separated from [`digest_val`] so a
+/// one-element vector never collides with its element.
+pub fn digest_items(items: &[WireVal]) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(0x22); // domain tag: items vector
+    h.u64(items.len() as u64);
+    for v in items {
+        h.val(v);
+    }
+    h.0
+}
+
+/// Content digest of a frozen foreach binding vector
+/// (`ElementSource::Bindings`).
+pub fn digest_bindings(bindings: &[Vec<(String, WireVal)>]) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(0x33); // domain tag: bindings vector
+    h.u64(bindings.len() as u64);
+    for row in bindings {
+        h.u64(row.len() as u64);
+        for (name, v) in row {
+            h.str(name);
+            h.val(v);
+        }
+    }
+    h.0
+}
+
 /// A possibly-shared view of the per-chunk element payload inside
 /// [`TaskKind`](crate::future_core::TaskKind) slice tasks — the
 /// zero-copy fast path for in-process backends.

@@ -152,6 +152,7 @@ pub fn register_builtins(r: &mut Reg) {
     r.normal("futurize", "hlo_chunk_map", hlo_chunk_map_fn);
     r.normal("futurize", "hlo_boot_stat", hlo_boot_stat_fn);
     r.normal("futurize", "hlo_gram", hlo_gram_fn);
+    r.normal("futurize", "hlo_ridge", hlo_ridge_fn);
     r.normal("futurize", "hlo_available", |_i, _a, _e| {
         Ok(RVal::scalar_bool(pjrt_available()))
     });
@@ -200,6 +201,28 @@ fn hlo_gram_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
     Ok(RVal::list(out))
 }
 
+/// `hlo_ridge(x_cols, y, lam)`: the full ridge fold — the gram half
+/// (XLA when bit-identical, native otherwise), then the native Cholesky
+/// solve of `(G + λI) β = X^T y`. Returns the coefficient vector β.
+fn hlo_ridge_fn(_i: &mut Interp, args: Args, _env: &EnvRef) -> EvalResult {
+    let b = args.bind(&["x", "y", "lam"]);
+    let xv = b.req(0, "x")?;
+    let cols: Vec<Vec<f64>> = match &xv {
+        RVal::List(l) => l
+            .vals
+            .iter()
+            .map(|c| c.as_dbl_vec())
+            .collect::<Result<_, _>>()
+            .map_err(Signal::error)?,
+        other => vec![other.as_dbl_vec().map_err(Signal::error)?],
+    };
+    let y = b.req(1, "y")?.as_dbl_vec().map_err(Signal::error)?;
+    let lam = b.req(2, "lam")?.as_f64().map_err(Signal::error)?;
+    let (gram, xty) = kernels::gram(&cols, &y).map_err(Signal::error)?;
+    let beta = kernels::ridge_solve(&gram, &xty, lam).map_err(Signal::error)?;
+    Ok(RVal::dbl(beta))
+}
+
 #[cfg(test)]
 mod tests {
     use crate::rlite::eval::Interp;
@@ -227,5 +250,14 @@ mod tests {
         let xty = v.as_dbl_vec().unwrap();
         assert!((xty[0] - 3.0).abs() < 1e-5);
         assert!((xty[1] - 8.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ridge_small() {
+        // Identity design, λ = 1: (I + I) β = X^T y → β = y / 2.
+        let v = run("hlo_ridge(list(c(1, 0), c(0, 1)), c(3, 4), 1)");
+        let beta = v.as_dbl_vec().unwrap();
+        assert!((beta[0] - 1.5).abs() < 1e-6);
+        assert!((beta[1] - 2.0).abs() < 1e-6);
     }
 }

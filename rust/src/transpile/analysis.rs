@@ -15,7 +15,9 @@
 //! - FZ004 oversized captured/global exports,
 //! - FZ005 order-dependent reductions under `reduce = "assoc"`,
 //! - FZ006/FZ007/FZ008 Info-level explanations (assoc float-fold ULP
-//!   contract, kernel-fusion and reduce-fusion rejection reasons).
+//!   contract, kernel-fusion and reduce-fusion rejection reasons),
+//! - FZ009 Info-level data-plane cache report (which exports ride the
+//!   content-addressed blob cache, plus session hit/miss counters).
 //!
 //! Findings surface per [`LintMode`]: relayed once per map call as
 //! classed warnings (default), promoted to a classed
@@ -355,9 +357,44 @@ pub fn analyze_map(
                     .map(|n| format!(" (largest binding: `{n}`)"))
                     .unwrap_or_default()
             ),
-            "pass large inputs as map items (they chunk and ship once per worker) \
-             or slim the captured environment",
+            "pass large inputs as map items (they chunk and ship once per worker), \
+             slim the captured environment, or rely on the data-plane cache \
+             (cache = \"auto\", on by default): oversized exports ship as \
+             content-addressed blobs once per worker and repeat calls send only \
+             digests",
         ));
+    }
+
+    // FZ009 — data-plane cache activity (Info: shown by the lint CLI
+    // and `fusion_report()`, never relayed). Mirrors the freeze-time
+    // extraction rule in `future_core::dispatch`: exports at or over
+    // the blob threshold ride the cache on process backends.
+    if opts.cache && crate::backend::blobstore::cache_enabled() {
+        let cacheable: Vec<&str> = globals
+            .iter()
+            .filter(|(_, v)| v.approx_size() >= crate::backend::blobstore::CACHE_MIN_BYTES)
+            .map(|(n, _)| n.as_str())
+            .collect();
+        if !cacheable.is_empty() {
+            let names =
+                cacheable.iter().map(|s| format!("`{s}`")).collect::<Vec<_>>().join(", ");
+            diags.push(Diagnostic::new(
+                DiagCode::CacheReport,
+                cacheable[0].to_string(),
+                format!(
+                    "data-plane cache: {} oversized export(s) ({names}) ship as \
+                     content-addressed blobs — once per worker, referenced by \
+                     digest on repeat calls (session counters: {} puts, {} hits, \
+                     {} misses)",
+                    cacheable.len(),
+                    crate::wire::stats::cache_puts(),
+                    crate::wire::stats::cache_hits(),
+                    crate::wire::stats::cache_misses(),
+                ),
+                "cache = \"auto\" is the default; futurize(cache = \"off\") or \
+                 FUTURIZE_NO_CACHE=1 disables it for differential testing",
+            ));
+        }
     }
 
     diags.extend(reduction_diags(opts));

@@ -17,7 +17,10 @@
 //!   and `u` resolvable captured vectors (bare symbols or `d$field`
 //!   list accesses), dispatched to `kernels::weighted_ratio`;
 //! - **gram** — `hlo_gram(x, y)` cross-product blocks with a captured
-//!   response vector, dispatched to `kernels::gram`.
+//!   response vector, dispatched to `kernels::gram`;
+//! - **ridge** — `hlo_ridge(x, y, lam)` with a captured response vector
+//!   and constant penalty: the gram half plus the native Cholesky
+//!   solve (`kernels::ridge_solve`), fused end to end.
 //!
 //! A match produces a [`KernelPlan`] that ships inside `TaskContext`;
 //! workers run matched slices through [`KernelPlan::run_slice`] instead
@@ -226,6 +229,9 @@ pub enum KernelKind {
     BootStat { x: Vec<f64>, u: Vec<f64> },
     /// `hlo_gram(x, y)` with the element as the design matrix.
     Gram { y: Vec<f64> },
+    /// `hlo_ridge(x, y, lam)` with the element as the design matrix:
+    /// the gram half plus the native Cholesky solve, fused end to end.
+    Ridge { y: Vec<f64>, lam: f64 },
 }
 
 /// Freeze-time entry point: recognition gated on the kill switch, with
@@ -375,6 +381,9 @@ pub fn recognize(
     }
     if let Some(kind) = recognize_gram(body, &scope) {
         return Some(KernelPlan { shape: label("gram"), kind });
+    }
+    if let Some(kind) = recognize_ridge(body, &scope) {
+        return Some(KernelPlan { shape: label("ridge"), kind });
     }
     let mut prog = Vec::new();
     compile_elementwise(body, &scope, &mut prog, 0)?;
@@ -546,6 +555,31 @@ fn recognize_gram(body: &Expr, scope: &Scope) -> Option<KernelKind> {
     Some(KernelKind::Gram { y: resolve_vec(args[1], scope)? })
 }
 
+/// `hlo_ridge(elem, y, lam)` with a resolvable response vector and a
+/// constant penalty.
+fn recognize_ridge(body: &Expr, scope: &Scope) -> Option<KernelKind> {
+    let (name, args) = builtin_call(body, scope, &["futurize"])?;
+    if name.as_str() != "hlo_ridge" || args.len() != 3 {
+        return None;
+    }
+    if !matches!(peel(args[0]), Expr::Sym(s) if *s == scope.elem) {
+        return None;
+    }
+    let y = resolve_vec(args[1], scope)?;
+    let lam = resolve_scalar(args[2], scope)?;
+    Some(KernelKind::Ridge { y, lam })
+}
+
+/// A constant scalar operand: a numeric literal, or a binding resolving
+/// to an unnamed length-1 numeric.
+fn resolve_scalar(e: &Expr, scope: &Scope) -> Option<f64> {
+    match peel(e) {
+        Expr::Num(v) => Some(*v),
+        Expr::Sym(s) => scalar_const(scope.resolve(*s)?, false),
+        _ => None,
+    }
+}
+
 impl KernelPlan {
     /// Execute a slice through the kernel. `None` means some item
     /// missed the runtime gate and the *whole* slice must run
@@ -614,6 +648,13 @@ impl KernelPlan {
                 }
                 Some(out)
             }
+            KernelKind::Ridge { y, lam } => {
+                let mut out = Vec::with_capacity(items.len());
+                for item in items.iter() {
+                    out.push(ridge_item(item, y, *lam)?);
+                }
+                Some(out)
+            }
         }
     }
 }
@@ -637,6 +678,25 @@ fn gram_item(item: &WireVal, y: &[f64]) -> Option<WireVal> {
         g.chunks(p).map(|row| WireVal::Dbl(row.to_vec(), None)).collect();
     parts.push(WireVal::Dbl(xty, None));
     Some(WireVal::List(parts, None, None))
+}
+
+/// One ridge item: the gram half on the item's columns, then the native
+/// Cholesky solve of `(G + λI) β = X^T y`. Dimension errors and non-SPD
+/// systems gate to `None` so the interpreted `hlo_ridge` raises its own
+/// condition verbatim.
+fn ridge_item(item: &WireVal, y: &[f64], lam: f64) -> Option<WireVal> {
+    let cols: Vec<Vec<f64>> = match item {
+        WireVal::List(vals, _, _) => vals.iter().map(const_dbl_vec).collect::<Option<_>>()?,
+        WireVal::Dbl(..) | WireVal::Int(..) => vec![const_dbl_vec(item)?],
+        _ => return None,
+    };
+    let n = cols.first()?.len();
+    if cols.iter().any(|c| c.len() != n) || y.len() != n {
+        return None;
+    }
+    let (g, xty) = kernels::gram(&cols, y).ok()?;
+    let beta = kernels::ridge_solve(&g, &xty, lam).ok()?;
+    Some(WireVal::Dbl(beta, None))
 }
 
 #[cfg(test)]
@@ -803,6 +863,30 @@ mod tests {
         // Ragged item → interpreter (which raises its own error).
         let ragged = WireVal::List(vec![dbl(&[1.0]), dbl(&[1.0, 2.0])], None, None);
         assert!(plan.run_slice(&vec![ragged].into()).is_none());
+    }
+
+    #[test]
+    fn recognizes_ridge_with_literal_and_captured_lambda() {
+        let y = dbl(&[3.0, 4.0]);
+        let plan = rec("function(x) hlo_ridge(x, y, 1)", &[("y", y.clone())])
+            .expect("ridge shape");
+        assert!(plan.shape.starts_with("ridge:"), "{}", plan.shape);
+        // Identity design, λ = 1: (I + I) β = X^T y → β = y / 2.
+        let eye = WireVal::List(vec![dbl(&[1.0, 0.0]), dbl(&[0.0, 1.0])], None, None);
+        let out = plan.run_slice(&vec![eye].into()).unwrap();
+        assert_eq!(out[0], dbl(&[1.5, 2.0]));
+        // Captured scalar penalty resolves too.
+        let plan2 = rec(
+            "function(x) hlo_ridge(x, y, lam)",
+            &[("y", y), ("lam", dbl(&[1.0]))],
+        )
+        .expect("captured lambda");
+        let KernelKind::Ridge { lam, .. } = plan2.kind else { panic!("{plan2:?}") };
+        assert_eq!(lam, 1.0);
+        // A mismatched response length gates the item to the interpreter.
+        let short = rec("function(x) hlo_ridge(x, y, 1)", &[("y", dbl(&[1.0]))]).unwrap();
+        let eye = WireVal::List(vec![dbl(&[1.0, 0.0]), dbl(&[0.0, 1.0])], None, None);
+        assert!(short.run_slice(&vec![eye].into()).is_none());
     }
 
     #[test]

@@ -83,6 +83,11 @@ pub struct FuturizeOptions {
     /// (promote findings to a classed condition before dispatch) or
     /// `"off"`. `FUTURIZE_LINT` overrides per call.
     pub lint: Option<String>,
+    /// Data-plane cache mode: `"auto"` (default — oversized exports and
+    /// the frozen element vector ship as content-addressed blobs, once
+    /// per worker) or `"off"`. `FUTURIZE_NO_CACHE=1` overrides per
+    /// process.
+    pub cache: Option<String>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -110,6 +115,7 @@ impl Default for FuturizeOptions {
             reduce_op: None,
             reduce_wrap: false,
             lint: None,
+            cache: None,
         }
     }
 }
@@ -163,6 +169,7 @@ impl FuturizeOptions {
             retries: self.retries.unwrap_or(0),
             reduce,
             lint,
+            cache: self.cache.as_deref() != Some("off"),
         }
     }
 
@@ -272,6 +279,14 @@ fn parse_options(i: &mut Interp, args: &[Arg], env: &EnvRef) -> Result<FuturizeO
                 other => {
                     return Err(Signal::error(format!(
                         "futurize: lint must be \"warn\", \"error\" or \"off\", got {other:?}"
+                    )))
+                }
+            },
+            "cache" => match v.as_str().ok().as_deref() {
+                Some(m @ ("auto" | "off")) => o.cache = Some(m.to_string()),
+                other => {
+                    return Err(Signal::error(format!(
+                        "futurize: cache must be \"auto\" or \"off\", got {other:?}"
                     )))
                 }
             },
@@ -512,6 +527,9 @@ pub(crate) fn future_dot_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     if let Some(l) = &opts.lint {
         args.push(Arg::named("future.lint", Expr::Str(l.clone())));
     }
+    if let Some(c) = &opts.cache {
+        args.push(Arg::named("future.cache", Expr::Str(c.clone())));
+    }
 }
 
 /// Append `.options = furrr_options(...)` (furrr's convention).
@@ -549,6 +567,9 @@ pub(crate) fn furrr_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     }
     if let Some(l) = &opts.lint {
         inner.push(Arg::named("lint", Expr::Str(l.clone())));
+    }
+    if let Some(c) = &opts.cache {
+        inner.push(Arg::named("cache", Expr::Str(c.clone())));
     }
     if !inner.is_empty() {
         args.push(Arg::named(".options", Expr::ns_call("furrr", "furrr_options", inner)));
@@ -592,6 +613,9 @@ pub(crate) fn dofuture_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) 
     if let Some(l) = &opts.lint {
         inner.push(Arg::named("lint", Expr::Str(l.clone())));
     }
+    if let Some(c) = &opts.cache {
+        inner.push(Arg::named("cache", Expr::Str(c.clone())));
+    }
     if !inner.is_empty() {
         args.push(Arg::named(".options.future", Expr::call("list", inner)));
     }
@@ -622,6 +646,9 @@ pub(crate) fn domain_option_args(opts: &FuturizeOptions, args: &mut Vec<Arg>) {
     }
     if let Some(l) = &opts.lint {
         inner.push(Arg::named("lint", Expr::Str(l.clone())));
+    }
+    if let Some(c) = &opts.cache {
+        inner.push(Arg::named("cache", Expr::Str(c.clone())));
     }
     args.push(Arg::named(".futurize_opts", Expr::call("list", inner)));
 }
@@ -680,6 +707,7 @@ pub fn apply_option_pairs(o: &mut FuturizeOptions, pairs: &[(String, RVal)]) {
             "reduce_op" => o.reduce_op = v.as_str().ok(),
             "reduce_wrap" => o.reduce_wrap = v.as_bool().unwrap_or(false),
             "lint" => o.lint = v.as_str().ok(),
+            "cache" => o.cache = v.as_str().ok(),
             _ => {}
         }
     }

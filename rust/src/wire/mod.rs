@@ -98,10 +98,75 @@ pub mod stats {
         PHYSICAL.with(|c| c.get())
     }
 
+    // Data-plane cache counters (see `backend::blobstore`). Like
+    // RESULT these are process-global atomics: puts/hits are recorded
+    // on the parent dispatch thread, evictions inside worker processes
+    // never reach the parent's counters, but the batchtools job
+    // threads and tests run off the driving thread.
+    static CACHE_PUTS: AtomicU64 = AtomicU64::new(0);
+    static CACHE_PUT_BYTES: AtomicU64 = AtomicU64::new(0);
+    static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+    static CACHE_HIT_BYTES: AtomicU64 = AtomicU64::new(0);
+    static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+    static CACHE_EVICT_BYTES: AtomicU64 = AtomicU64::new(0);
+
+    /// Record one blob shipped to a worker (`CachePut`), `n` payload bytes.
+    pub fn record_cache_put(n: u64) {
+        CACHE_PUTS.fetch_add(1, Ordering::Relaxed);
+        CACHE_PUT_BYTES.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one blob *not* shipped because the worker already holds
+    /// it; `n` is the payload bytes saved.
+    pub fn record_cache_hit(n: u64) {
+        CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+        CACHE_HIT_BYTES.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one `CacheMiss` negative-ack (cold/evicted worker store).
+    pub fn record_cache_miss() {
+        CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` bytes evicted from a blob store under budget pressure.
+    pub fn record_cache_evict(n: u64) {
+        CACHE_EVICT_BYTES.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn cache_puts() -> u64 {
+        CACHE_PUTS.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_put_bytes() -> u64 {
+        CACHE_PUT_BYTES.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_hits() -> u64 {
+        CACHE_HITS.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_hit_bytes() -> u64 {
+        CACHE_HIT_BYTES.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_misses() -> u64 {
+        CACHE_MISSES.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_evict_bytes() -> u64 {
+        CACHE_EVICT_BYTES.load(Ordering::Relaxed)
+    }
+
     pub fn reset() {
         LOGICAL.with(|c| c.set(0));
         PHYSICAL.with(|c| c.set(0));
         RESULT.store(0, Ordering::Relaxed);
+        CACHE_PUTS.store(0, Ordering::Relaxed);
+        CACHE_PUT_BYTES.store(0, Ordering::Relaxed);
+        CACHE_HITS.store(0, Ordering::Relaxed);
+        CACHE_HIT_BYTES.store(0, Ordering::Relaxed);
+        CACHE_MISSES.store(0, Ordering::Relaxed);
+        CACHE_EVICT_BYTES.store(0, Ordering::Relaxed);
     }
 }
 

@@ -240,6 +240,7 @@ fn contexts_register_resolve_and_drop() {
             id: 1,
             body: ContextBody::Map { f: f_wire, extra: vec![] },
             globals: vec![],
+            cached_globals: vec![],
             nesting: Default::default(),
             kernel: None,
             reduce: None,

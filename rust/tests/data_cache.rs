@@ -1,0 +1,331 @@
+//! Content-addressed data-plane cache: differential + fault-injection
+//! suite (PR 9 tentpole).
+//!
+//! The cache is a pure transport optimization, so its contract is
+//! *observational equivalence*: with `FUTURIZE_NO_CACHE=1` (or
+//! `futurize(cache = "off")`) every map must produce bit-identical
+//! values, relay text, and seeded draws — on every backend, at nesting
+//! depths 1 and 2. On top of that, the parent-side ledger must actually
+//! save bytes (a second identical map ships zero blobs), a cold or
+//! evicted worker must recover through the `CacheMiss` negative-ack
+//! re-put path (never wedge), and supervision respawn must replay only
+//! the blobs of still-active contexts.
+//!
+//! Every test serializes on one mutex: the kill switches are process
+//! env vars and the cache counters are process globals.
+
+mod common;
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use common::{within, worker_env};
+use futurize::backend::{blobstore, multisession};
+use futurize::prelude::*;
+use futurize::wire::stats;
+
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    // A panicked test must not wedge the rest of the suite.
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with the cache forced on or off, restoring the ambient state
+/// (which CI may pin to off for the differential leg) afterwards.
+fn with_cache<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    let ambient = std::env::var(blobstore::NO_CACHE_ENV).ok();
+    if on {
+        std::env::remove_var(blobstore::NO_CACHE_ENV);
+    } else {
+        std::env::set_var(blobstore::NO_CACHE_ENV, "1");
+    }
+    let r = f();
+    match ambient {
+        Some(v) => std::env::set_var(blobstore::NO_CACHE_ENV, v),
+        None => std::env::remove_var(blobstore::NO_CACHE_ENV),
+    }
+    r
+}
+
+fn run_with(plan: &str, fixture: &str, prog: &str, cache: bool) -> (RVal, String) {
+    with_cache(cache, || {
+        let mut s = Session::new();
+        s.eval_str(plan).unwrap_or_else(|e| panic!("{plan}: {e}"));
+        s.eval_str("futureSeed(99)").unwrap();
+        s.eval_str(fixture).unwrap();
+        let (r, out) = s.eval_captured(prog);
+        (r.unwrap_or_else(|e| panic!("{plan} / {prog}: {e}")), out)
+    })
+}
+
+const PLANS: &[&str] = &[
+    "plan(sequential)",
+    "plan(multicore, workers = 2)",
+    "plan(multisession, workers = 2)",
+    "plan(cluster, workers = c(\"n1\", \"n2\"), latency_ms = 0.1)",
+    "plan(future.batchtools::batchtools_slurm, workers = 2, poll_ms = 2)",
+];
+
+/// Bit pattern of a numeric result — the seeded fixtures compare draws,
+/// where `assert_eq!` on f64 would hide sign-of-zero/NaN differences.
+fn bits(v: &RVal) -> Vec<u64> {
+    v.as_dbl_vec().unwrap().iter().map(|x| x.to_bits()).collect()
+}
+
+/// ~80 KiB captured global — over `CACHE_MIN_BYTES`, so it rides the
+/// cache on process backends; items stay small and ship inline.
+const BIG_FIXTURE: &str = "
+    d <- sin(1:10000)
+    f <- function(x) sum(d) + x
+";
+
+#[test]
+fn cache_on_off_bit_identical_on_every_backend() {
+    let _g = serial();
+    worker_env();
+    let prog = "future_sapply(c(-1.5, 0, 2.5, 4, 7, 11), f)";
+    for plan in PLANS {
+        let (cached, cached_out) = run_with(plan, BIG_FIXTURE, prog, true);
+        let (plain, plain_out) = run_with(plan, BIG_FIXTURE, prog, false);
+        assert_eq!(bits(&cached), bits(&plain), "{plan}: value bits diverge");
+        assert_eq!(cached_out, plain_out, "{plan}: relay text diverges");
+    }
+}
+
+#[test]
+fn cache_on_off_bit_identical_with_seeds_and_conditions() {
+    let _g = serial();
+    worker_env();
+    // Seeded draws plus a relayed warning per element: the cache must
+    // not perturb RNG stream assignment or the ordered relay.
+    let prog = "unlist(lapply(1:6, function(x) { \
+                 warning(paste(\"w\", x))\nrnorm(1) * 1e-9 + sum(d) * x }) \
+                 |> futurize(seed = TRUE, chunk_size = 1))";
+    for plan in PLANS {
+        let (cached, cached_out) = run_with(plan, BIG_FIXTURE, prog, true);
+        let (plain, plain_out) = run_with(plan, BIG_FIXTURE, prog, false);
+        assert_eq!(bits(&cached), bits(&plain), "{plan}: seeded bits diverge");
+        assert_eq!(cached_out, plain_out, "{plan}: condition relay diverges");
+    }
+}
+
+#[test]
+fn cache_on_off_bit_identical_at_depth_two() {
+    let _g = serial();
+    worker_env();
+    // The oversized global is captured by the *outer* body; the nested
+    // map runs on the inherited inner stack of the respawned topology.
+    let prog = "unlist(lapply(1:4, function(x) \
+                 sum(future_sapply(1:3, function(y) y * x)) + sum(d)) \
+                 |> futurize(chunk_size = 1))";
+    for plan in
+        ["plan(list(multisession(2), multicore(2)))", "plan(list(multicore(2), multicore(2)))"]
+    {
+        let (cached, _) = run_with(plan, BIG_FIXTURE, prog, true);
+        let (plain, _) = run_with(plan, BIG_FIXTURE, prog, false);
+        assert_eq!(bits(&cached), bits(&plain), "{plan}: depth-2 bits diverge");
+    }
+}
+
+#[test]
+fn second_identical_map_ships_zero_blobs() {
+    let _g = serial();
+    worker_env();
+    with_cache(true, || {
+        within(60, "ledger reuse", || {
+            let mut s = Session::new();
+            s.eval_str("plan(multisession, workers = 2)").unwrap();
+            s.eval_str(BIG_FIXTURE).unwrap();
+            stats::reset();
+            let r1 = s.eval_str("future_sapply(1:6, f)").unwrap();
+            let puts_first = stats::cache_puts();
+            let put_bytes_first = stats::cache_put_bytes();
+            assert!(puts_first >= 1, "first map must ship the oversized global");
+            assert!(
+                put_bytes_first as usize >= blobstore::CACHE_MIN_BYTES,
+                "{put_bytes_first} put bytes for an ~80 KiB blob"
+            );
+            let r2 = s.eval_str("future_sapply(1:6, f)").unwrap();
+            assert_eq!(
+                stats::cache_puts(),
+                puts_first,
+                "second identical map re-shipped resident blobs"
+            );
+            assert!(stats::cache_hits() > 0, "resident digests must count as hits");
+            assert!(
+                stats::cache_hit_bytes() as usize >= blobstore::CACHE_MIN_BYTES,
+                "hit accounting must credit the blob bytes saved"
+            );
+            assert_eq!(bits(&r1), bits(&r2));
+        });
+    });
+}
+
+#[test]
+fn per_call_cache_off_ships_nothing() {
+    let _g = serial();
+    worker_env();
+    with_cache(true, || {
+        within(60, "cache = off", || {
+            let mut s = Session::new();
+            s.eval_str("plan(multisession, workers = 2)").unwrap();
+            s.eval_str(BIG_FIXTURE).unwrap();
+            stats::reset();
+            let off = s
+                .eval_str("unlist(lapply(1:6, f) |> futurize(cache = \"off\"))")
+                .unwrap();
+            assert_eq!(stats::cache_puts(), 0, "cache = \"off\" must not extract blobs");
+            let on = s.eval_str("unlist(lapply(1:6, f) |> futurize())").unwrap();
+            assert!(stats::cache_puts() > 0, "cache = \"auto\" default must extract");
+            assert_eq!(bits(&off), bits(&on));
+        });
+    });
+}
+
+#[test]
+fn intra_call_alias_dedup_encodes_once() {
+    let _g = serial();
+    worker_env();
+    // Two bindings whose frozen values are structurally identical must
+    // ship as ONE blob (content addressing dedups by digest).
+    let fixture = "
+        a <- sin(1:10000)
+        b <- sin(1:10000)
+        f <- function(x) sum(a) + sum(b) + x
+    ";
+    let reference = {
+        let (r, _) = run_with("plan(sequential)", fixture, "future_sapply(1:4, f)", false);
+        bits(&r)
+    };
+    with_cache(true, || {
+        within(60, "alias dedup", move || {
+            let mut s = Session::new();
+            s.eval_str("plan(multisession, workers = 1)").unwrap();
+            s.eval_str(fixture).unwrap();
+            stats::reset();
+            let r = s.eval_str("future_sapply(1:4, f)").unwrap();
+            assert_eq!(
+                stats::cache_puts(),
+                1,
+                "aliased globals must dedup to a single CachePut"
+            );
+            assert_eq!(bits(&r), reference, "deduped map diverged");
+        });
+    });
+}
+
+#[test]
+fn evicted_blob_recovers_through_cache_miss_reput() {
+    let _g = serial();
+    worker_env();
+    // A 1-byte budget makes every blob evictable as soon as the next
+    // task frame inserts another. Map over X, then Y (evicts X in the
+    // worker), then X again: the parent ledger says X is resident, the
+    // worker answers CacheMiss, the parent re-puts, the map completes.
+    with_cache(true, || {
+        std::env::set_var(blobstore::CACHE_BYTES_ENV, "1");
+        let got = within(90, "cache-miss repair", || {
+            let mut s = Session::new();
+            s.eval_str("plan(multisession, workers = 1)").unwrap();
+            s.eval_str("x <- sin(1:10000)\ny <- cos(1:10000)").unwrap();
+            stats::reset();
+            let r1 = s.eval_str("future_sapply(1:2, function(i) sum(x) * i)").unwrap();
+            s.eval_str("invisible(future_sapply(1:2, function(i) sum(y) * i))").unwrap();
+            let misses_before = stats::cache_misses();
+            let r3 = s.eval_str("future_sapply(1:2, function(i) sum(x) * i)").unwrap();
+            (bits(&r1), bits(&r3), stats::cache_misses() - misses_before)
+        });
+        std::env::remove_var(blobstore::CACHE_BYTES_ENV);
+        let (r1, r3, misses) = got;
+        assert!(misses > 0, "the evicted blob must be re-requested via CacheMiss");
+        assert_eq!(r1, r3, "the re-put map diverged");
+    });
+}
+
+#[test]
+fn respawn_replays_only_active_context_blobs() {
+    let _g = serial();
+    worker_env();
+    // Map 1 (context A, blob `a`) completes and drops its context; map
+    // 2 (context B, blob `b`) is killed mid-map. The replacement worker
+    // must receive a replay of exactly context B's blob — context A is
+    // gone, so its blob must not ride along — and the retried chunk
+    // must reproduce the sequential seeded reference bit-for-bit.
+    let reference: Vec<u64> = {
+        let mut s = Session::new();
+        s.eval_str("futureSeed(77)").unwrap();
+        s.eval_str("a <- sin(1:10000)\nb <- cos(1:10000)").unwrap();
+        s.eval_str("invisible(unlist(lapply(1:4, function(i) sum(a) * i) |> futurize()))")
+            .unwrap();
+        bits(
+            &s.eval_str(
+                "unlist(lapply(1:4, function(i) rnorm(1) * 1e-9 + sum(b) * i) \
+                 |> futurize(seed = TRUE, chunk_size = 1))",
+            )
+            .unwrap(),
+        )
+    };
+    let marker =
+        std::env::temp_dir().join(format!("futurize-cache-kill-{}", std::process::id()));
+    let _ = std::fs::remove_file(&marker);
+    let marker_str = marker.display().to_string();
+    let (got, out, replayed) = with_cache(true, || {
+        within(90, "respawn blob replay", move || {
+            let mut s = Session::new();
+            s.eval_str("plan(multisession, workers = 2)").unwrap();
+            s.eval_str("futureSeed(77)").unwrap();
+            s.eval_str("a <- sin(1:10000)\nb <- cos(1:10000)").unwrap();
+            s.eval_str("invisible(unlist(lapply(1:4, function(i) sum(a) * i) |> futurize()))")
+                .unwrap();
+            let replayed_before = multisession::blobs_replayed();
+            let (r, out) = s.eval_captured(&format!(
+                "unlist(lapply(1:4, function(i) {{ \
+                 if (i == 3) futurize_test_exit_once(\"{marker_str}\")\n\
+                 rnorm(1) * 1e-9 + sum(b) * i }}) \
+                 |> futurize(seed = TRUE, chunk_size = 1, retries = 1))"
+            ));
+            let replayed = multisession::blobs_replayed() - replayed_before;
+            (bits(&r.unwrap()), out, replayed)
+        })
+    });
+    let _ = std::fs::remove_file(&marker);
+    assert!(out.contains("resubmitting"), "expected a retry warning, got: {out:?}");
+    assert_eq!(got, reference, "recovered map diverged from the sequential reference");
+    assert_eq!(
+        replayed, 1,
+        "respawn must replay exactly the active context's blob (got {replayed})"
+    );
+}
+
+#[test]
+fn fz009_reports_cache_extraction() {
+    let _g = serial();
+    use futurize::future_core::driver::MapOptions;
+    use futurize::rlite::serialize::WireVal;
+    use futurize::transpile::analysis::analyze_map;
+    let f = WireVal::Builtin("identity".into());
+    let big = WireVal::Dbl(vec![0.5; 10_000], None);
+    let small = WireVal::Dbl(vec![0.5; 4], None);
+    let diags = with_cache(true, || {
+        analyze_map(
+            &f,
+            &[],
+            &[("d".into(), big.clone()), ("k".into(), small)],
+            false,
+            &MapOptions::default(),
+        )
+    });
+    let fz009: Vec<_> =
+        diags.iter().filter(|d| d.code.as_str() == "FZ009").collect();
+    assert_eq!(fz009.len(), 1, "{diags:?}");
+    assert!(fz009[0].message.contains("`d`"), "{}", fz009[0].message);
+    // Opting out (per call or process-wide) silences the report.
+    let off_opts = MapOptions { cache: false, ..Default::default() };
+    let none = with_cache(true, || {
+        analyze_map(&f, &[], &[("d".into(), big.clone())], false, &off_opts)
+    });
+    assert!(none.iter().all(|d| d.code.as_str() != "FZ009"), "{none:?}");
+    let none = with_cache(false, || {
+        analyze_map(&f, &[], &[("d".into(), big)], false, &MapOptions::default())
+    });
+    assert!(none.iter().all(|d| d.code.as_str() != "FZ009"), "{none:?}");
+}

@@ -280,6 +280,30 @@ fn gram_body_bit_identical_across_backends() {
 }
 
 #[test]
+fn ridge_body_bit_identical_across_backends() {
+    let _g = serial();
+    worker_env();
+    let fixture = "
+        y <- c(1, 0, 1)
+        blocks <- lapply(1:4, function(i) list(c(1, 2, 3) * i, c(0.5, -1, 2)))
+        r <- function(x) hlo_ridge(x, y, 0.5)
+    ";
+    let prog = "lapply(blocks, r) |> futurize()";
+    let reference = run_with("plan(sequential)", fixture, prog, false).0;
+    for plan in PLANS {
+        let (fused, _) = run_with(plan, fixture, prog, true);
+        // Coefficient vectors of finite doubles: equality is exact here
+        // (both paths run the same gram + Cholesky f64 arithmetic).
+        assert_eq!(fused, reference, "{plan}: ridge result diverges");
+    }
+    let recognized_before = fusion::contexts_recognized();
+    let fused_before = fusion::slices_fused();
+    run_with("plan(sequential)", fixture, prog, true);
+    assert!(fusion::contexts_recognized() > recognized_before, "ridge body must match");
+    assert!(fusion::slices_fused() > fused_before, "ridge slices must fuse");
+}
+
+#[test]
 fn kill_switch_suppresses_recognition_entirely() {
     let _g = serial();
     let recognized_before = fusion::contexts_recognized();

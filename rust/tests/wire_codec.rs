@@ -453,6 +453,7 @@ fn binary_shrinks_the_protocol_stream_by_3x() {
         id: 1,
         body: ContextBody::Map { f, extra: vec![] },
         globals,
+        cached_globals: vec![],
         nesting: Default::default(),
         kernel: None,
         reduce: None,
