@@ -1,0 +1,136 @@
+//! BENCH_cluster: the real TCP cluster backend (PR 10).
+//!
+//! Three series, all on localhost sockets:
+//!
+//! - **dispatch overhead** — wall time of a minimal trivial map on
+//!   `plan(cluster_tcp, workers = 2)`, i.e. the physical per-call cost
+//!   of handshake-established socket transport (connect/spawn cost is
+//!   excluded by a warm-up call);
+//! - **chunking sweep** — the §2.4 scheduling trade-off over a genuine
+//!   socket transport, next to the same sweep on the `cluster`
+//!   simulation backend, so the injected-latency model can be
+//!   sanity-checked against physics;
+//! - **result volume** — per-call wall time of a map returning large
+//!   vectors, pinning the O(result-bytes) socket read path.
+//!
+//! Results land in `BENCH_cluster.json` (`BENCH_SMOKE=1` shrinks
+//! iteration counts for CI). Correctness is hard-asserted
+//! (bit-identical to sequential); wall-clock numbers are reported,
+//! not asserted — shared CI machines are too noisy to gate on.
+
+use futurize::bench_harness as bh;
+use futurize::prelude::*;
+
+const UNIT: f64 = 0.004;
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The §2.4 chunking sweep (unbalanced 48-task workload, 2 workers) on
+/// one plan; returns (policy label, mean seconds) per policy.
+fn sweep(plan: &str, label: &str, reps: usize) -> Vec<(String, f64)> {
+    bh::table_header(
+        &format!("chunking sweep on {label} (48 tasks, 2 workers)"),
+        &["policy", "walltime"],
+    );
+    let mut out = Vec::new();
+    for (policy, opts) in [
+        ("scheduling_1", "scheduling = 1"),
+        ("scheduling_inf", "scheduling = Inf"),
+        ("chunk_size_8", "chunk_size = 8"),
+    ] {
+        let mut session = Session::with_config(SessionConfig { time_scale: UNIT });
+        session.eval_str(&format!("plan({plan})")).unwrap();
+        session
+            .eval_str("f <- function(x) { Sys.sleep(x / 24)\nx }\nxs <- 1:48")
+            .unwrap();
+        session.eval_str("invisible(lapply(1:2, f) |> futurize())").unwrap(); // warm pool
+        let st = bh::bench("cluster", &format!("{label}/{policy}"), 0, reps, || {
+            session
+                .eval_str(&format!("ys <- lapply(xs, f) |> futurize({opts})"))
+                .unwrap();
+        });
+        bh::table_row(&[policy.to_string(), format!("{:.3}s", st.mean_s)]);
+        out.push((policy.to_string(), st.mean_s));
+    }
+    out
+}
+
+fn main() {
+    // CRITICAL: this bench binary is its own TCP worker — the backend
+    // respawns `current_exe() worker --connect <addr>`, and without
+    // this guard the child would re-run the bench instead of serving.
+    futurize::backend::worker::maybe_worker();
+
+    let smoke = bh::smoke_mode();
+    let reps = if smoke { 1 } else { 3 };
+    let mut report = bh::JsonReport::new("BENCH_cluster.json");
+    report.push(
+        "mode",
+        futurize::wire::JsonValue::String(if smoke { "smoke" } else { "full" }.into()),
+    );
+
+    // --- correctness pin: TCP results are bit-identical to sequential.
+    let reference = Session::new()
+        .eval_str("unlist(lapply(1:24, function(x) sin(x) * 2))")
+        .unwrap()
+        .as_dbl_vec()
+        .unwrap();
+    let mut s = Session::new();
+    s.eval_str("plan(cluster_tcp, workers = 2)").unwrap();
+    let tcp = s
+        .eval_str("unlist(lapply(1:24, function(x) sin(x) * 2) |> futurize())")
+        .unwrap()
+        .as_dbl_vec()
+        .unwrap();
+    assert_eq!(bits(&reference), bits(&tcp), "TCP cluster diverged from sequential");
+
+    // --- dispatch overhead: trivial 8-task map on a warm socket pool.
+    s.eval_str("g <- function(x) x + 1").unwrap();
+    s.eval_str("invisible(lapply(1:2, g) |> futurize())").unwrap();
+    let st = bh::bench("cluster", "tcp/map8_trivial", 1, reps, || {
+        s.eval_str("invisible(lapply(1:8, g) |> futurize(scheduling = Inf))").unwrap();
+    });
+    println!(
+        "\ntrivial 8-task map over localhost TCP: {:.1} ms/call ({:.2} ms/task)",
+        st.mean_s * 1e3,
+        st.mean_s / 8.0 * 1e3
+    );
+    report.push_num("tcp_map8_trivial_secs", st.mean_s);
+    report.push_num("tcp_per_task_ms", st.mean_s / 8.0 * 1e3);
+
+    // --- result volume: 10k doubles back per task, O(result-bytes) read path.
+    s.eval_str("h <- function(x) sin(x + 1:10000)").unwrap();
+    let st = bh::bench("cluster", "tcp/map8_bulk_results", 1, reps, || {
+        s.eval_str("invisible(lapply(1:8, h) |> futurize(scheduling = Inf))").unwrap();
+    });
+    println!(
+        "8 tasks x 10k doubles back: {:.1} ms/call ({:.1} MB/s result volume)",
+        st.mean_s * 1e3,
+        8.0 * 10_000.0 * 8.0 / 1e6 / st.mean_s
+    );
+    report.push_num("tcp_bulk_results_secs", st.mean_s);
+    drop(s);
+
+    // --- chunking sweep: real sockets vs the injected-latency model.
+    for (plan, label, key) in [
+        ("cluster_tcp, workers = 2", "cluster_tcp (real sockets)", "tcp"),
+        (
+            "cluster, workers = c(\"n1\", \"n2\"), latency_ms = 0.1",
+            "cluster-sim (0.1ms injected)",
+            "sim",
+        ),
+    ] {
+        for (policy, secs) in sweep(plan, label, reps) {
+            report.push_num(&format!("{key}_sweep_{policy}_secs"), secs);
+        }
+    }
+
+    report.write().unwrap();
+    println!(
+        "\nexpected shape: real-socket and simulated sweeps agree on the \
+         trade-off (fine chunks balance the skewed load; localhost latency \
+         is small enough that coarse chunks buy little)"
+    );
+}

@@ -8,6 +8,28 @@
 //! the evaluation: the chunking/scheduling trade-off (few large chunks
 //! amortize latency; many small chunks balance load).
 //!
+//! (For workers on *actual* remote machines — or real local sockets —
+//! see [`super::cluster_tcp`]: `tcp://` worker names promote `cluster`
+//! to the socket transport, whose latency is physical, not injected.)
+//!
+//! ## How the latency charge is modeled
+//!
+//! Sender-side messages (context registration, task submission, blob
+//! announcements) sleep on the caller: the driver genuinely cannot do
+//! anything else until its message is on the wire, and a one-way trip
+//! per message is the model. The **return path is different**: a result
+//! travelling back from a remote node delays the *result*, not the
+//! driver. Events are therefore stamped with an arrival deadline
+//! (`now + latency` at the moment the wrapped pool surfaced them) and
+//! parked until due. `try_next_event` never sleeps — a poll loop like
+//! `while (!resolved(f)) { do_other_work() }` keeps running other work
+//! during the simulated flight, exactly as it would against a real
+//! remote cluster; only a *blocking* `next_event` sleeps out the
+//! remaining flight time, because its caller asked to wait. `Progress`
+//! conditions relayed from remote tasks are charged the same flight
+//! time (they cross the same wire; an earlier version let them arrive
+//! instantaneously, which made near-live progress look free).
+//!
 //! Cluster-of-multicore (`plan(list(cluster(...), multicore(n)))`) —
 //! the paper's flagship nested topology — needs nothing special here:
 //! the inherited inner stack travels inside each `RegisterContext`
@@ -20,8 +42,9 @@
 //! readers, so the O(result-volume) metric holds here without extra
 //! code (asserted in `tests/lint_analysis.rs`).
 
+use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::multisession::MultisessionBackend;
 use super::{Backend, BackendEvent};
@@ -30,6 +53,11 @@ use crate::future_core::{TaskContext, TaskPayload};
 pub struct ClusterSimBackend {
     inner: MultisessionBackend,
     latency: Duration,
+    /// Events surfaced by the wrapped pool, still "in flight" over the
+    /// simulated wire: each becomes visible at its stamped deadline.
+    /// Constant latency keeps deadlines monotone, so FIFO order is
+    /// preserved.
+    in_flight: VecDeque<(Instant, BackendEvent)>,
 }
 
 impl ClusterSimBackend {
@@ -37,7 +65,27 @@ impl ClusterSimBackend {
         Ok(ClusterSimBackend {
             inner: MultisessionBackend::with_name(workers, "cluster")?,
             latency: Duration::from_secs_f64(latency_ms.max(0.0) / 1000.0),
+            in_flight: VecDeque::new(),
         })
+    }
+
+    /// Pull everything the wrapped pool has ready and stamp each event
+    /// with its arrival deadline. All event kinds cross the wire —
+    /// results, loss notifications, *and* relayed progress conditions —
+    /// so all are charged the one-way trip.
+    fn absorb_ready(&mut self) -> Result<(), String> {
+        let due = Instant::now() + self.latency;
+        while let Some(ev) = self.inner.try_next_event()? {
+            self.in_flight.push_back((due, ev));
+        }
+        Ok(())
+    }
+
+    fn pop_due(&mut self) -> Option<BackendEvent> {
+        match self.in_flight.front() {
+            Some((due, _)) if *due <= Instant::now() => self.in_flight.pop_front().map(|(_, e)| e),
+            _ => None,
+        }
     }
 }
 
@@ -70,22 +118,37 @@ impl Backend for ClusterSimBackend {
     }
 
     fn next_event(&mut self) -> Result<BackendEvent, String> {
-        let ev = self.inner.next_event()?;
-        if matches!(ev, BackendEvent::Done(_) | BackendEvent::WorkerLost { .. }) {
-            // Results — and the news that a remote node died — travel
-            // back over the wire. Supervision itself (respawn + context
-            // replay) is inherited from the inner process pool.
-            std::thread::sleep(self.latency);
+        loop {
+            self.absorb_ready()?;
+            if let Some(ev) = self.pop_due() {
+                return Ok(ev);
+            }
+            match self.in_flight.front() {
+                // Something is in flight: the caller asked to block, so
+                // sleep out the remaining flight time.
+                Some((due, _)) => {
+                    let now = Instant::now();
+                    if *due > now {
+                        std::thread::sleep(*due - now);
+                    }
+                }
+                // Nothing in flight at all: block on the pool, then the
+                // event that arrives starts its flight.
+                None => {
+                    let ev = self.inner.next_event()?;
+                    self.in_flight.push_back((Instant::now() + self.latency, ev));
+                }
+            }
         }
-        Ok(ev)
     }
 
     fn try_next_event(&mut self) -> Result<Option<BackendEvent>, String> {
-        let ev = self.inner.try_next_event()?;
-        if matches!(ev, Some(BackendEvent::Done(_) | BackendEvent::WorkerLost { .. })) {
-            std::thread::sleep(self.latency);
-        }
-        Ok(ev)
+        // Never sleeps: an event still in simulated flight is simply
+        // not visible yet, and the caller's poll loop stays free to do
+        // other work — the property that makes `resolved()` polling
+        // concurrent rather than secretly blocking.
+        self.absorb_ready()?;
+        Ok(self.pop_due())
     }
 
     fn cancel_queued(&mut self) -> Vec<u64> {

@@ -7,6 +7,7 @@
 //! | `multicore`                                | [`multicore`] (native threads, the fork analog) |
 //! | `multisession`, `future.callr::callr`, `future.mirai::mirai_multisession` | [`multisession`] (worker subprocesses over stdio, the PSOCK analog) |
 //! | `cluster`                                  | [`cluster_sim`] (process workers + injected per-message latency) |
+//! | `cluster_tcp`, `cluster` with `tcp://` workers | [`cluster_tcp`] (real socket transport: handshake, heartbeats, spawn or attach) |
 //! | `future.batchtools::batchtools_slurm` etc. | [`batchtools_sim`] (file-based job queue + polling scheduler) |
 //!
 //! Every backend implements [`Backend`] and must pass the conformance
@@ -52,6 +53,7 @@
 pub mod batchtools_sim;
 pub mod blobstore;
 pub mod cluster_sim;
+pub mod cluster_tcp;
 pub mod inner_cache;
 pub mod multicore;
 pub mod multisession;
@@ -73,6 +75,10 @@ pub enum BackendKind {
     Multicore,
     Multisession,
     ClusterSim,
+    /// Real socket-based cluster: workers connect over TCP (locally
+    /// spawned or externally attached) and speak the framed worker
+    /// protocol with handshake + heartbeat supervision.
+    ClusterTcp,
     BatchtoolsSim,
 }
 
@@ -92,6 +98,21 @@ pub struct PlanSpec {
     pub latency_ms: f64,
     /// batchtools_sim: scheduler poll interval in milliseconds.
     pub poll_ms: f64,
+    /// cluster_tcp: address to bind the worker listener to
+    /// (host:port). Empty = ephemeral localhost (spawn mode). Derived
+    /// from the first `tcp://` worker name, which switches the backend
+    /// into attach mode (externally launched workers dial in).
+    #[serde(default)]
+    pub tcp_listen: String,
+    /// cluster_tcp: worker launch command template (`{addr}`
+    /// substituted). Empty = launch this binary with
+    /// `worker --connect`; `"-"`/`"attach"` = never spawn.
+    #[serde(default)]
+    pub tcp_spawn: String,
+    /// cluster_tcp: worker heartbeat interval in milliseconds (0
+    /// disables heartbeat reaping).
+    #[serde(default)]
+    pub heartbeat_ms: f64,
     /// The plan name as the user wrote it (e.g.
     /// "future.mirai::mirai_multisession") for display.
     pub display: String,
@@ -112,6 +133,9 @@ impl PlanSpec {
             worker_names: vec![],
             latency_ms: 0.0,
             poll_ms: 0.0,
+            tcp_listen: String::new(),
+            tcp_spawn: String::new(),
+            heartbeat_ms: 0.0,
             display: "sequential".into(),
             explicit_workers: true,
         }
@@ -124,6 +148,9 @@ impl PlanSpec {
             worker_names: vec![],
             latency_ms: 0.0,
             poll_ms: 0.0,
+            tcp_listen: String::new(),
+            tcp_spawn: String::new(),
+            heartbeat_ms: 0.0,
             display: "multicore".into(),
             explicit_workers: true,
         }
@@ -136,6 +163,9 @@ impl PlanSpec {
             worker_names: vec![],
             latency_ms: 0.0,
             poll_ms: 0.0,
+            tcp_listen: String::new(),
+            tcp_spawn: String::new(),
+            heartbeat_ms: 0.0,
             display: "multisession".into(),
             explicit_workers: true,
         }
@@ -160,6 +190,12 @@ impl PlanSpec {
             "future.mirai::mirai_multisession" | "mirai_multisession" => {
                 BackendKind::Multisession
             }
+            "cluster_tcp" => BackendKind::ClusterTcp,
+            // `tcp://` worker names switch `cluster` from the latency
+            // simulator to the real socket backend in attach mode.
+            "cluster" if worker_names.iter().any(|n| n.starts_with("tcp://")) => {
+                BackendKind::ClusterTcp
+            }
             "cluster" => BackendKind::ClusterSim,
             n if n.starts_with("future.batchtools::") || n.starts_with("batchtools_") => {
                 BackendKind::BatchtoolsSim
@@ -169,17 +205,29 @@ impl PlanSpec {
         let default_workers = match kind {
             BackendKind::Sequential => 1,
             BackendKind::ClusterSim if !worker_names.is_empty() => worker_names.len(),
+            BackendKind::ClusterTcp if !worker_names.is_empty() => worker_names.len(),
             BackendKind::BatchtoolsSim => cores,
             _ => cores,
         };
         let explicit_workers =
             kind == BackendKind::Sequential || workers.is_some() || !worker_names.is_empty();
+        // First tcp:// worker name is the attach-mode listen address;
+        // its presence (rather than a spawn command) is what tells the
+        // backend not to launch local workers.
+        let tcp_listen = worker_names
+            .iter()
+            .find_map(|n| n.strip_prefix("tcp://"))
+            .unwrap_or("")
+            .to_string();
         Ok(PlanSpec {
             workers: workers.unwrap_or(default_workers).max(1),
             worker_names,
             latency_ms: latency_ms
                 .unwrap_or(if kind == BackendKind::ClusterSim { 1.0 } else { 0.0 }),
             poll_ms: poll_ms.unwrap_or(if kind == BackendKind::BatchtoolsSim { 20.0 } else { 0.0 }),
+            tcp_listen,
+            tcp_spawn: String::new(),
+            heartbeat_ms: if kind == BackendKind::ClusterTcp { 2000.0 } else { 0.0 },
             display: name.to_string(),
             kind,
             explicit_workers,
@@ -294,6 +342,12 @@ pub fn instantiate(plan: &PlanSpec, outer_workers: usize) -> Result<Box<dyn Back
         BackendKind::ClusterSim => {
             Box::new(cluster_sim::ClusterSimBackend::new(workers, plan.latency_ms)?)
         }
+        BackendKind::ClusterTcp => Box::new(cluster_tcp::ClusterTcpBackend::new(
+            workers,
+            &plan.tcp_listen,
+            &plan.tcp_spawn,
+            plan.heartbeat_ms,
+        )?),
         BackendKind::BatchtoolsSim => {
             Box::new(batchtools_sim::BatchtoolsSimBackend::new(workers, plan.poll_ms)?)
         }
@@ -332,6 +386,27 @@ mod tests {
         )
         .unwrap();
         assert_eq!(p.workers, 3);
+    }
+
+    #[test]
+    fn cluster_tcp_resolution() {
+        let p = PlanSpec::from_name("cluster_tcp", Some(2), vec![], None, None).unwrap();
+        assert_eq!(p.kind, BackendKind::ClusterTcp);
+        assert_eq!(p.heartbeat_ms, 2000.0);
+        assert!(p.tcp_listen.is_empty(), "no tcp:// names = spawn mode");
+
+        // tcp:// worker names promote `cluster` to the real backend in
+        // attach mode, with the first name as the listen address.
+        let p =
+            PlanSpec::from_name("cluster", None, vec!["tcp://0.0.0.0:7001".into()], None, None)
+                .unwrap();
+        assert_eq!(p.kind, BackendKind::ClusterTcp);
+        assert_eq!(p.tcp_listen, "0.0.0.0:7001");
+        assert_eq!(p.workers, 1);
+
+        // Plain node names keep the latency simulator.
+        let p = PlanSpec::from_name("cluster", None, vec!["n1".into()], None, None).unwrap();
+        assert_eq!(p.kind, BackendKind::ClusterSim);
     }
 
     #[test]

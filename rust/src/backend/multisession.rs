@@ -90,19 +90,21 @@ struct WorkerProc {
 /// Parent-side record of one extracted blob: the `Arc`-kept payload
 /// (alive for `CacheMiss`/respawn re-puts until the last referencing
 /// context drops), which active contexts reference it, and the
-/// lazily-encoded `CachePut` frame every ship of it reuses.
-struct BlobEntry {
-    source: CacheSource,
-    refs: HashSet<u64>,
-    frame: Option<Vec<u8>>,
+/// lazily-encoded `CachePut` frame every ship of it reuses. Shared
+/// with the TCP cluster backend, which keeps the identical ledger over
+/// a socket transport.
+pub(crate) struct BlobEntry {
+    pub(crate) source: CacheSource,
+    pub(crate) refs: HashSet<u64>,
+    pub(crate) frame: Option<Vec<u8>>,
     /// Approximate payload bytes, for hit/put accounting.
-    bytes: u64,
+    pub(crate) bytes: u64,
 }
 
 /// Encode (once) and return the `CachePut` frame for `digest`. A free
 /// function over the field so callers can keep a disjoint `&mut`
 /// borrow of the worker table while holding the returned frame.
-fn ensure_blob_frame(
+pub(crate) fn ensure_blob_frame(
     codec: WireCodec,
     blobs: &mut HashMap<u64, BlobEntry>,
     digest: u64,
@@ -168,6 +170,18 @@ static BLOBS_REPLAYED: AtomicU64 = AtomicU64::new(0);
 /// Monotonic count of supervision-time blob replays in this process.
 pub fn blobs_replayed() -> u64 {
     BLOBS_REPLAYED.load(Ordering::Relaxed)
+}
+
+/// Tick the shared spawn counter for a worker process launched by a
+/// sibling backend (the TCP cluster spawns through its own transport
+/// but participates in the same per-worker accounting).
+pub(crate) fn record_worker_spawned() {
+    WORKERS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Tick the shared supervision-replay counter (see [`blobs_replayed`]).
+pub(crate) fn record_blob_replayed() {
+    BLOBS_REPLAYED.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Spawn one worker process into slot `idx` at generation `gen` and

@@ -55,6 +55,14 @@ pub enum ParentMsg {
     /// in steady state; re-sent on `CacheMiss`/respawn. Appended after
     /// the original variants so their wire tags stay stable.
     CachePut { digest: u64, blob: super::blobstore::CacheBlob },
+    /// Cancel a task already written to this worker but (hopefully) not
+    /// yet started. TCP transport only: the worker's *reader thread*
+    /// purges it from the pending queue out-of-band — even while the
+    /// main thread is busy running an earlier task — and acks with
+    /// [`WorkerMsg::Cancelled`]. If the task already started (or
+    /// finished) no ack is sent; its `Done` frame is the answer.
+    /// Appended so the earlier variants' wire tags stay stable.
+    CancelTask(u64),
 }
 
 /// Encode-only borrowing mirror of [`ParentMsg`]: lets the parent
@@ -72,6 +80,7 @@ pub enum ParentMsgRef<'a> {
     #[allow(dead_code)]
     Shutdown,
     CachePut { digest: u64, blob: super::blobstore::CacheBlobRef<'a> },
+    CancelTask(u64),
 }
 
 #[derive(Debug, Serialize, Deserialize)]
@@ -85,21 +94,48 @@ pub enum WorkerMsg {
     /// arrive first. Appended after the original variants so their
     /// wire tags stay stable.
     CacheMiss { task_id: u64, digests: Vec<u64> },
+    /// Liveness beacon on the TCP transport, emitted every
+    /// `heartbeat_ms / 2` by a dedicated worker thread. The parent's
+    /// reader thread refreshes the connection deadline and swallows it
+    /// — a heartbeat is never surfaced as a backend event. Appended so
+    /// the earlier variants' wire tags stay stable.
+    Heartbeat,
+    /// Ack that [`ParentMsg::CancelTask`] purged the task before it
+    /// started: it will never run and will produce no further frames.
+    Cancelled { task_id: u64 },
 }
 
 /// Call this first in any binary that may be used as a worker host
 /// (the CLI and every example do). If the process was spawned as a
 /// worker it never returns.
 pub fn maybe_worker() {
-    let mut args = std::env::args();
-    let _exe = args.next();
-    if args.next().as_deref() == Some(WORKER_SENTINEL) {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) == Some(WORKER_SENTINEL) {
         worker_main();
         std::process::exit(0);
     }
+    // `<bin> worker --connect host:port` — the TCP cluster transport.
+    // Handled here (not just in the CLI's arg parser) so tests, benches
+    // and examples that re-exec themselves as workers all join TCP
+    // pools with the same one-line `maybe_worker()` guard.
+    if args.first().map(String::as_str) == Some("worker") {
+        match (args.get(1).map(String::as_str), args.get(2)) {
+            (Some("--connect"), Some(addr)) => match worker_tcp_main(addr) {
+                Ok(()) => std::process::exit(0),
+                Err(e) => {
+                    eprintln!("futurize worker: {e}");
+                    std::process::exit(1);
+                }
+            },
+            _ => {
+                eprintln!("usage: futurize-rs worker --connect <host:port>");
+                std::process::exit(2);
+            }
+        }
+    }
 }
 
-/// The worker main loop.
+/// The stdio worker main loop (multisession transport).
 pub fn worker_main() {
     // The parent stamps its codec into our environment at spawn time.
     let codec = WireCodec::active();
@@ -109,6 +145,15 @@ pub fn worker_main() {
     let mut out = stdout.lock();
     let mut contexts: HashMap<u64, TaskContext> = HashMap::new();
     let mut store = BlobStore::new(blobstore::cache_budget());
+    // Worker→parent frames must flush immediately (stdout is buffered)
+    // for near-live Progress relay across the process boundary.
+    let mut send = |msg: &WorkerMsg| -> bool {
+        let Ok(bytes) = codec.encode(msg) else { return false };
+        if write_frame(&mut out, &bytes).is_err() {
+            return false;
+        }
+        out.flush().is_ok()
+    };
     loop {
         let frame = match read_frame(&mut input) {
             Ok(Some(f)) => f,
@@ -128,116 +173,283 @@ pub fn worker_main() {
                 break;
             }
         };
-        match msg {
-            ParentMsg::Shutdown => break,
-            ParentMsg::RegisterContext(ctx) => {
-                contexts.insert(ctx.id, ctx);
-            }
-            ParentMsg::DropContext(id) => {
-                contexts.remove(&id);
-            }
-            ParentMsg::CachePut { digest, blob } => {
-                store.insert(digest, blob);
-            }
-            ParentMsg::Task(mut task) => {
-                let worker_idx = std::env::var("FUTURIZE_WORKER_IDX")
-                    .ok()
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or(0);
-                // Each task frame opens a new blob-store epoch: blobs
-                // that arrived for *this* task are eviction-exempt
-                // until it runs, so a tiny budget can't livelock the
-                // CacheMiss → re-put loop.
-                store.bump_epoch();
-                let mut missing: Vec<u64> = Vec::new();
-                // Materialize cached globals into the referenced
-                // context (permanent: each miss round makes progress).
-                if let Some(ctx) = task.kind.context_id().and_then(|id| contexts.get_mut(&id)) {
-                    let cached = std::mem::take(&mut ctx.cached_globals);
-                    for (name, digest) in cached {
-                        match store.get_val(digest) {
-                            Some(v) => ctx.globals.push((name, (*v).clone())),
-                            None => {
-                                missing.push(digest);
-                                ctx.cached_globals.push((name, digest));
-                            }
+        if !handle_parent_msg(msg, &mut contexts, &mut store, &mut send) {
+            break;
+        }
+    }
+}
+
+/// Process one parent→worker message against the worker's session
+/// state (context cache + blob store), shared by the stdio and TCP
+/// transports. `send` frames-and-flushes one [`WorkerMsg`] back to the
+/// parent, returning `false` on a dead channel. Returns `false` when
+/// the worker loop should end (shutdown, or the channel died).
+fn handle_parent_msg(
+    msg: ParentMsg,
+    contexts: &mut HashMap<u64, TaskContext>,
+    store: &mut BlobStore,
+    send: &mut dyn FnMut(&WorkerMsg) -> bool,
+) -> bool {
+    match msg {
+        ParentMsg::Shutdown => false,
+        ParentMsg::RegisterContext(ctx) => {
+            contexts.insert(ctx.id, ctx);
+            true
+        }
+        ParentMsg::DropContext(id) => {
+            contexts.remove(&id);
+            true
+        }
+        ParentMsg::CachePut { digest, blob } => {
+            store.insert(digest, blob);
+            true
+        }
+        // Cancellation is a reader-thread concern on the TCP transport
+        // (the queue purge happens there, see `worker_tcp_main`); on the
+        // ordered stdio transport the parent never sends it, and a task
+        // reaching this loop is by definition about to run.
+        ParentMsg::CancelTask(_) => true,
+        ParentMsg::Task(mut task) => {
+            let worker_idx = std::env::var("FUTURIZE_WORKER_IDX")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            // Each task frame opens a new blob-store epoch: blobs
+            // that arrived for *this* task are eviction-exempt
+            // until it runs, so a tiny budget can't livelock the
+            // CacheMiss → re-put loop.
+            store.bump_epoch();
+            let mut missing: Vec<u64> = Vec::new();
+            // Materialize cached globals into the referenced
+            // context (permanent: each miss round makes progress).
+            if let Some(ctx) = task.kind.context_id().and_then(|id| contexts.get_mut(&id)) {
+                let cached = std::mem::take(&mut ctx.cached_globals);
+                for (name, digest) in cached {
+                    match store.get_val(digest) {
+                        Some(v) => ctx.globals.push((name, (*v).clone())),
+                        None => {
+                            missing.push(digest);
+                            ctx.cached_globals.push((name, digest));
                         }
                     }
                 }
-                // Resolve element-vector refs into zero-copy windows
-                // over the stored blob; the task runner only ever sees
-                // plain slice kinds.
-                let resolved = match &task.kind {
-                    TaskKind::MapSliceRef { ctx, digest, start, end, seeds } => {
-                        match store.get_items(*digest) {
-                            Some(arc) => Some(TaskKind::MapSlice {
-                                ctx: *ctx,
-                                items: WireSlice::shared(arc, *start, *end),
-                                seeds: seeds.clone(),
-                            }),
-                            None => {
-                                missing.push(*digest);
-                                None
-                            }
-                        }
-                    }
-                    TaskKind::ForeachSliceRef { ctx, digest, start, end, seeds } => {
-                        match store.get_bindings(*digest) {
-                            Some(arc) => Some(TaskKind::ForeachSlice {
-                                ctx: *ctx,
-                                bindings: WireSlice::shared(arc, *start, *end),
-                                seeds: seeds.clone(),
-                            }),
-                            None => {
-                                missing.push(*digest);
-                                None
-                            }
-                        }
-                    }
-                    _ => None,
-                };
-                if let Some(kind) = resolved {
-                    task.kind = kind;
-                }
-                if !missing.is_empty() {
-                    // Discard the task and negative-ack: the parent
-                    // re-puts the digests then re-sends the frame, and
-                    // stdin FIFO ordering makes the retry resolve.
-                    missing.sort_unstable();
-                    missing.dedup();
-                    let msg = WorkerMsg::CacheMiss { task_id: task.id, digests: missing };
-                    let Ok(bytes) = codec.encode(&msg) else { break };
-                    if write_frame(&mut out, &bytes).is_err() {
-                        break;
-                    }
-                    let _ = out.flush();
-                    continue;
-                }
-                let ctx = task.kind.context_id().and_then(|id| contexts.get(&id));
-                // Progress messages must flush immediately for near-live
-                // relay across the process boundary.
-                let outcome = {
-                    let out_cell = std::cell::RefCell::new(&mut out);
-                    super::task_runner::run_task(
-                        &task,
-                        ctx,
-                        worker_idx,
-                        Some(&mut |task_id, cond| {
-                            let mut o = out_cell.borrow_mut();
-                            let msg = WorkerMsg::Progress { task_id, cond };
-                            if let Ok(bytes) = codec.encode(&msg) {
-                                let _ = write_frame(&mut **o, &bytes);
-                                let _ = o.flush();
-                            }
+            }
+            // Resolve element-vector refs into zero-copy windows
+            // over the stored blob; the task runner only ever sees
+            // plain slice kinds.
+            let resolved = match &task.kind {
+                TaskKind::MapSliceRef { ctx, digest, start, end, seeds } => {
+                    match store.get_items(*digest) {
+                        Some(arc) => Some(TaskKind::MapSlice {
+                            ctx: *ctx,
+                            items: WireSlice::shared(arc, *start, *end),
+                            seeds: seeds.clone(),
                         }),
-                    )
-                };
-                let msg = WorkerMsg::Done(outcome);
-                let Ok(bytes) = codec.encode(&msg) else { break };
-                if write_frame(&mut out, &bytes).is_err() {
-                    break;
+                        None => {
+                            missing.push(*digest);
+                            None
+                        }
+                    }
                 }
-                let _ = out.flush();
+                TaskKind::ForeachSliceRef { ctx, digest, start, end, seeds } => {
+                    match store.get_bindings(*digest) {
+                        Some(arc) => Some(TaskKind::ForeachSlice {
+                            ctx: *ctx,
+                            bindings: WireSlice::shared(arc, *start, *end),
+                            seeds: seeds.clone(),
+                        }),
+                        None => {
+                            missing.push(*digest);
+                            None
+                        }
+                    }
+                }
+                _ => None,
+            };
+            if let Some(kind) = resolved {
+                task.kind = kind;
+            }
+            if !missing.is_empty() {
+                // Discard the task and negative-ack: the parent
+                // re-puts the digests then re-sends the frame, and
+                // transport FIFO ordering makes the retry resolve.
+                missing.sort_unstable();
+                missing.dedup();
+                return send(&WorkerMsg::CacheMiss { task_id: task.id, digests: missing });
+            }
+            let ctx = task.kind.context_id().and_then(|id| contexts.get(&id));
+            let outcome = {
+                let mut progress = |task_id: u64, cond: RCondition| {
+                    let _ = send(&WorkerMsg::Progress { task_id, cond });
+                };
+                super::task_runner::run_task(&task, ctx, worker_idx, Some(&mut progress))
+            };
+            send(&WorkerMsg::Done(outcome))
+        }
+    }
+}
+
+/// Environment variable suppressing the TCP worker's heartbeat thread.
+/// Test hook only: lets the supervision suite simulate a live-but-
+/// unresponsive worker (connection open, no beacons) and assert the
+/// parent's heartbeat deadline reaps it.
+pub const NO_HEARTBEAT_ENV: &str = "FUTURIZE_TEST_NO_HEARTBEAT";
+
+/// One entry in the TCP worker's pending queue, produced by its reader
+/// thread.
+enum TcpItem {
+    Msg(ParentMsg),
+    /// The parent connection closed or desynced; the worker must exit.
+    Disconnect(String),
+}
+
+/// The TCP worker main loop (`futurize-rs worker --connect host:port`).
+///
+/// Connects, handshakes (see [`crate::wire::handshake`]), then splits
+/// into three threads: a *reader* decoding parent frames into a pending
+/// queue, a *heartbeat* emitting [`WorkerMsg::Heartbeat`] every half
+/// heartbeat interval, and the main thread draining the queue through
+/// the same [`handle_parent_msg`] logic as the stdio worker. All
+/// worker→parent frames go through one mutex-held writer, so a
+/// heartbeat can never interleave bytes into the middle of a `Done`
+/// frame. Returns `Err` on connection loss so the process exits
+/// nonzero and the parent's supervision ladder takes over.
+pub fn worker_tcp_main(addr: &str) -> Result<(), String> {
+    use crate::wire::handshake::{self, HandshakeReply, Hello};
+    use std::sync::{Arc, Condvar, Mutex};
+
+    let stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| format!("cannot connect to {addr}: {e}"))?;
+    // Protocol frames are small and latency-bound; never Nagle-delay them.
+    let _ = stream.set_nodelay(true);
+    let tag = format!(
+        "{}/pid-{}",
+        std::env::var("HOSTNAME").unwrap_or_else(|_| "localhost".into()),
+        std::process::id()
+    );
+    handshake::send(&mut &stream, &Hello::current(tag))
+        .map_err(|e| format!("handshake send failed: {e}"))?;
+    let (worker_idx, codec_name, heartbeat_ms) =
+        match handshake::recv::<HandshakeReply, _>(&mut &stream)
+            .map_err(|e| format!("handshake recv failed: {e}"))?
+        {
+            HandshakeReply::Welcome { worker_idx, codec, heartbeat_ms } => {
+                (worker_idx, codec, heartbeat_ms)
+            }
+            HandshakeReply::Reject { reason } => {
+                return Err(format!("parent rejected this worker: {reason}"));
+            }
+        };
+    // Still single-threaded here, so stamping the environment is safe.
+    // The task runner reads the worker index (seeding, diagnostics,
+    // test hooks), and any *nested* backend this worker instantiates
+    // inherits the negotiated codec through the usual env channel.
+    std::env::set_var("FUTURIZE_WORKER_IDX", worker_idx.to_string());
+    std::env::set_var(crate::wire::codec::WIRE_CODEC_ENV, &codec_name);
+    let codec = WireCodec::active();
+
+    let writer = Arc::new(Mutex::new(
+        stream.try_clone().map_err(|e| format!("stream clone failed: {e}"))?,
+    ));
+    let queue =
+        Arc::new((Mutex::new(std::collections::VecDeque::<TcpItem>::new()), Condvar::new()));
+
+    // Reader thread. Cancellation is handled HERE, out-of-band from
+    // task execution: a `CancelTask` purges the pending queue even
+    // while the main thread is busy running an earlier task — which is
+    // exactly what lets the parent retract work it has already written
+    // to the socket (see `cancel_queued` in `backend::cluster_tcp`).
+    {
+        let queue = Arc::clone(&queue);
+        let writer = Arc::clone(&writer);
+        let mut rd = stream.try_clone().map_err(|e| format!("stream clone failed: {e}"))?;
+        std::thread::spawn(move || loop {
+            let item = match read_frame(&mut rd) {
+                Ok(Some(frame)) => match codec.decode::<ParentMsg>(&frame) {
+                    Ok(msg) => TcpItem::Msg(msg),
+                    Err(e) => TcpItem::Disconnect(format!("undecodable frame: {e}")),
+                },
+                Ok(None) => TcpItem::Disconnect("connection closed".into()),
+                Err(e) => TcpItem::Disconnect(format!("read failed: {e}")),
+            };
+            let stop = matches!(item, TcpItem::Disconnect(_));
+            match item {
+                TcpItem::Msg(ParentMsg::CancelTask(task_id)) => {
+                    let (lock, _) = &*queue;
+                    let mut q = lock.lock().unwrap();
+                    let before = q.len();
+                    q.retain(|it| {
+                        !matches!(it, TcpItem::Msg(ParentMsg::Task(t)) if t.id == task_id)
+                    });
+                    let purged = q.len() < before;
+                    drop(q);
+                    if purged {
+                        if let Ok(bytes) = codec.encode(&WorkerMsg::Cancelled { task_id }) {
+                            let mut w = writer.lock().unwrap();
+                            let _ = write_frame(&mut *w, &bytes);
+                        }
+                    }
+                    // Not found ⇒ the task already started (or finished):
+                    // its Done frame is the parent's answer.
+                }
+                item => {
+                    let (lock, cv) = &*queue;
+                    lock.lock().unwrap().push_back(item);
+                    cv.notify_one();
+                }
+            }
+            if stop {
+                break;
+            }
+        });
+    }
+
+    // Heartbeat thread: half the reap interval keeps one lost beacon
+    // from looking like a death. Dies with the process (or on the first
+    // failed write — the reader will surface the disconnect).
+    let suppress = std::env::var(NO_HEARTBEAT_ENV).map(|v| v == "1").unwrap_or(false);
+    if !suppress && heartbeat_ms > 0.0 {
+        let writer = Arc::clone(&writer);
+        let period = std::time::Duration::from_secs_f64((heartbeat_ms / 2.0).max(1.0) / 1000.0);
+        std::thread::spawn(move || loop {
+            std::thread::sleep(period);
+            let Ok(bytes) = codec.encode(&WorkerMsg::Heartbeat) else { break };
+            let mut w = writer.lock().unwrap();
+            if write_frame(&mut *w, &bytes).is_err() {
+                break;
+            }
+        });
+    }
+
+    let mut contexts: HashMap<u64, TaskContext> = HashMap::new();
+    let mut store = BlobStore::new(blobstore::cache_budget());
+    let mut send = {
+        let writer = Arc::clone(&writer);
+        move |msg: &WorkerMsg| -> bool {
+            let Ok(bytes) = codec.encode(msg) else { return false };
+            let mut w = writer.lock().unwrap();
+            write_frame(&mut *w, &bytes).is_ok()
+        }
+    };
+    loop {
+        let item = {
+            let (lock, cv) = &*queue;
+            let mut q = lock.lock().unwrap();
+            loop {
+                match q.pop_front() {
+                    Some(item) => break item,
+                    None => q = cv.wait(q).unwrap(),
+                }
+            }
+        };
+        match item {
+            TcpItem::Disconnect(reason) => {
+                return Err(format!("parent connection lost: {reason}"));
+            }
+            TcpItem::Msg(msg) => {
+                if !handle_parent_msg(msg, &mut contexts, &mut store, &mut send) {
+                    return Ok(());
+                }
             }
         }
     }
@@ -361,6 +573,29 @@ mod tests {
             let owned = codec.encode(&ParentMsg::RegisterContext(ctx.clone())).unwrap();
             let borrowed = codec.encode(&ParentMsgRef::RegisterContext(&ctx)).unwrap();
             assert_eq!(owned, borrowed, "{codec:?}: mirror drifted from ParentMsg");
+        }
+    }
+
+    #[test]
+    fn tcp_protocol_messages_roundtrip() {
+        for codec in [WireCodec::Binary, WireCodec::Json] {
+            let owned = codec.encode(&ParentMsg::CancelTask(77)).unwrap();
+            let borrowed = codec.encode(&ParentMsgRef::CancelTask(77)).unwrap();
+            assert_eq!(owned, borrowed, "{codec:?}: CancelTask mirror drifted from ParentMsg");
+            match codec.decode::<ParentMsg>(&owned).unwrap() {
+                ParentMsg::CancelTask(id) => assert_eq!(id, 77, "{codec:?}"),
+                other => panic!("{codec:?}: {other:?}"),
+            }
+            let bytes = codec.encode(&WorkerMsg::Heartbeat).unwrap();
+            assert!(
+                matches!(codec.decode::<WorkerMsg>(&bytes).unwrap(), WorkerMsg::Heartbeat),
+                "{codec:?}"
+            );
+            let bytes = codec.encode(&WorkerMsg::Cancelled { task_id: 5 }).unwrap();
+            match codec.decode::<WorkerMsg>(&bytes).unwrap() {
+                WorkerMsg::Cancelled { task_id } => assert_eq!(task_id, 5, "{codec:?}"),
+                other => panic!("{codec:?}: {other:?}"),
+            }
         }
     }
 

@@ -549,8 +549,30 @@ fn apply_plan_args(
                 let v = i.eval(&a.value, env)?;
                 match &v {
                     RVal::Chr(names) => {
+                        let tcp = names.vals.iter().any(|n| n.starts_with("tcp://"));
                         spec.worker_names = names.vals.to_vec();
-                        spec.workers = names.vals.len().max(1);
+                        // A tcp:// entry is a *listen address*, not a
+                        // node: it must not clobber a worker count the
+                        // user already gave (`plan(cluster, 4, workers
+                        // = "tcp://0.0.0.0:7001")` awaits 4 workers).
+                        if !(tcp && spec.explicit_workers) {
+                            spec.workers = names.vals.len().max(1);
+                        }
+                        // Promote the latency simulator to the real
+                        // socket backend in attach mode (mirrors the
+                        // same promotion in `PlanSpec::from_name`,
+                        // which never saw these names).
+                        if tcp && spec.kind == crate::backend::BackendKind::ClusterSim {
+                            spec.kind = crate::backend::BackendKind::ClusterTcp;
+                            if spec.heartbeat_ms <= 0.0 {
+                                spec.heartbeat_ms = 2000.0;
+                            }
+                        }
+                        if let Some(listen) =
+                            names.vals.iter().find_map(|n| n.strip_prefix("tcp://"))
+                        {
+                            spec.tcp_listen = listen.to_string();
+                        }
                     }
                     other => spec.workers = other.as_usize().map_err(Signal::error)?.max(1),
                 }
@@ -561,6 +583,12 @@ fn apply_plan_args(
             }
             Some("poll_ms") => {
                 spec.poll_ms = i.eval(&a.value, env)?.as_f64().map_err(Signal::error)?;
+            }
+            Some("heartbeat_ms") => {
+                spec.heartbeat_ms = i.eval(&a.value, env)?.as_f64().map_err(Signal::error)?;
+            }
+            Some("spawn") => {
+                spec.tcp_spawn = i.eval(&a.value, env)?.as_str().map_err(Signal::error)?;
             }
             _ => {}
         }
@@ -652,8 +680,17 @@ fn plan_level_from_value(v: &RVal) -> Result<PlanSpec, Signal> {
                 .unwrap_or_default();
             let latency_ms = l.get("latency_ms").and_then(|x| x.as_f64().ok());
             let poll_ms = l.get("poll_ms").and_then(|x| x.as_f64().ok());
-            PlanSpec::from_name(&name, workers, worker_names, latency_ms, poll_ms)
-                .map_err(Signal::error)
+            let mut spec = PlanSpec::from_name(&name, workers, worker_names, latency_ms, poll_ms)
+                .map_err(Signal::error)?;
+            if let Some(hb) = l.get("heartbeat_ms").and_then(|x| x.as_f64().ok()) {
+                spec.heartbeat_ms = hb;
+            }
+            if let Some(spawn) = l.get("spawn").and_then(|x| x.as_str().ok()) {
+                if !spawn.is_empty() {
+                    spec.tcp_spawn = spawn;
+                }
+            }
+            Ok(spec)
         }
         other => Err(Signal::error(format!(
             "plan: cannot interpret a {} as a backend",
@@ -673,6 +710,8 @@ fn strategy_value(spec: &PlanSpec) -> RVal {
             RVal::scalar_bool(spec.explicit_workers),
             RVal::scalar_dbl(spec.latency_ms),
             RVal::scalar_dbl(spec.poll_ms),
+            RVal::scalar_dbl(spec.heartbeat_ms),
+            RVal::scalar_str(spec.tcp_spawn.clone()),
             RVal::chr(spec.worker_names.clone()),
         ],
         vec![
@@ -681,6 +720,8 @@ fn strategy_value(spec: &PlanSpec) -> RVal {
             "explicit_workers".into(),
             "latency_ms".into(),
             "poll_ms".into(),
+            "heartbeat_ms".into(),
+            "spawn".into(),
             "worker_names".into(),
         ],
     );

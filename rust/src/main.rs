@@ -15,6 +15,7 @@ USAGE:
     futurize-rs lint <script.R>
     futurize-rs supported [package]
     futurize-rs doctor
+    futurize-rs worker --connect <host:port>
 ";
 
 fn truncate(s: &str, max: usize) -> String {
@@ -159,6 +160,14 @@ fn main() {
                 )
                 .unwrap_or_else(|e| panic!("self-test failed: {e}"));
             println!("multisession self-test: {v}");
+        }
+        // Unreachable in practice — `maybe_worker()` above consumes
+        // every `worker` invocation (valid or not) and exits. Kept as a
+        // safety net so a refactor of that guard degrades to a usage
+        // error instead of "unknown command".
+        "worker" => {
+            eprintln!("futurize-rs worker: expected --connect <host:port>");
+            std::process::exit(2);
         }
         other => {
             eprintln!("futurize-rs: unknown command '{other}'\n{USAGE}");

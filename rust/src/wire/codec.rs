@@ -23,6 +23,36 @@ use std::io::{Read, Write};
 /// debug codec; anything else, or unset, selects binary).
 pub const WIRE_CODEC_ENV: &str = "FUTURIZE_WIRE_CODEC";
 
+/// Environment variable bounding the length a frame reader will accept
+/// (bytes; plain integer). The 4-byte length prefix is otherwise
+/// attacker-/corruption-controlled: a flipped bit in the header would
+/// ask the reader to allocate up to 4 GiB before the decode even runs.
+pub const MAX_FRAME_ENV: &str = "FUTURIZE_MAX_FRAME_BYTES";
+
+/// Default frame-length cap: 256 MiB, aligned with the data-plane
+/// cache budget (`FUTURIZE_CACHE_BYTES`) — the largest legitimate
+/// frames are `CachePut` blobs, which that budget already bounds.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 256 << 20;
+
+/// The active frame-length cap. Resolved from [`MAX_FRAME_ENV`] once
+/// per process (readers run on hot paths and in tight loops; worker
+/// processes inherit the parent's environment, so both sides of a
+/// connection agree for the process lifetime).
+pub fn max_frame_bytes() -> usize {
+    static CAP: once_cell::sync::Lazy<usize> =
+        once_cell::sync::Lazy::new(|| frame_cap_from_env(std::env::var(MAX_FRAME_ENV).ok()));
+    *CAP
+}
+
+/// Parse an optional env override into a cap; 0 or garbage falls back
+/// to the default (a zero cap would reject every frame, including the
+/// handshake that could report the misconfiguration).
+fn frame_cap_from_env(v: Option<String>) -> usize {
+    v.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_MAX_FRAME_BYTES)
+}
+
 /// The message-payload encoding used by a process transport.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WireCodec {
@@ -93,8 +123,19 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
 }
 
 /// Read one length-prefixed frame. Returns `Ok(None)` on a clean EOF
-/// (no header bytes at all); a mid-frame EOF is an error.
+/// (no header bytes at all); a mid-frame EOF is an error, and so is a
+/// length prefix over [`max_frame_bytes`] — a header that large is a
+/// desynced or corrupt stream, and trusting it would commit a multi-GiB
+/// allocation before the decode could fail. Callers already treat any
+/// `Err` as the peer being dead (worker exits; parent supervises), so
+/// the oversize path needs no new plumbing.
 pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<Vec<u8>>> {
+    read_frame_capped(r, max_frame_bytes())
+}
+
+/// [`read_frame`] with an explicit length cap (tests exercise caps
+/// without touching the process-global environment).
+pub fn read_frame_capped<R: Read>(r: &mut R, cap: usize) -> std::io::Result<Option<Vec<u8>>> {
     let mut hdr = [0u8; 4];
     let mut got = 0;
     while got < 4 {
@@ -115,6 +156,12 @@ pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<Vec<u8>>> {
         }
     }
     let len = u32::from_le_bytes(hdr) as usize;
+    if len > cap {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("wire frame length {len} exceeds cap {cap} (protocol desync?)"),
+        ));
+    }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
     Ok(Some(payload))
@@ -135,6 +182,39 @@ mod tests {
         assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
         assert_eq!(read_frame(&mut r).unwrap().unwrap(), vec![0u8, 10, 13, 255]);
         assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversize_length_prefix_is_a_desync_error() {
+        // A corrupt header asking for more than the cap must fail fast,
+        // before any payload allocation — not attempt a huge read.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        buf.extend_from_slice(b"junk");
+        let mut r = &buf[..];
+        let err = read_frame_capped(&mut r, 1024).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+        // A frame exactly at the cap still passes.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[7u8; 16]).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame_capped(&mut r, 16).unwrap().unwrap(), vec![7u8; 16]);
+        // One past it does not.
+        let mut r = &buf[..];
+        assert!(read_frame_capped(&mut r, 15).is_err());
+    }
+
+    #[test]
+    fn frame_cap_env_parsing() {
+        assert_eq!(frame_cap_from_env(None), DEFAULT_MAX_FRAME_BYTES);
+        assert_eq!(frame_cap_from_env(Some("1048576".into())), 1 << 20);
+        assert_eq!(frame_cap_from_env(Some(" 4096 ".into())), 4096);
+        // Garbage and the self-defeating zero fall back to the default.
+        assert_eq!(frame_cap_from_env(Some("not-a-number".into())), DEFAULT_MAX_FRAME_BYTES);
+        assert_eq!(frame_cap_from_env(Some("0".into())), DEFAULT_MAX_FRAME_BYTES);
+        // The default stays aligned with the cache budget default.
+        assert_eq!(DEFAULT_MAX_FRAME_BYTES, crate::backend::blobstore::DEFAULT_CACHE_BYTES);
     }
 
     #[test]

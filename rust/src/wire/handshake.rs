@@ -1,0 +1,175 @@
+//! Connection handshake for the TCP cluster transport.
+//!
+//! A connecting worker speaks first: one `Hello` frame carrying a magic
+//! number, the protocol version, the codecs it can decode, a display
+//! tag, and its capability set. The parent answers with one
+//! `HandshakeReply` frame — `Welcome` assigns the worker its slot and
+//! pins the codec and heartbeat interval for the rest of the
+//! connection, `Reject` names why the worker is unusable (version skew,
+//! no codec in common) before the socket closes.
+//!
+//! Handshake frames are always encoded with the **binary** codec,
+//! whatever the session's transport codec is: the negotiation must be
+//! decodable before its own outcome is known. Everything after the
+//! reply uses the codec the `Welcome` named.
+
+use serde_derive::{Deserialize, Serialize};
+
+use super::codec::{read_frame, write_frame};
+use super::WireCodec;
+
+/// First bytes of every `Hello`: rejects non-futurize peers (a port
+/// scanner, a stray HTTP client) before any state is built.
+pub const HANDSHAKE_MAGIC: u32 = 0x465A_5443; // "FZTC"
+
+/// Bumped whenever the worker protocol changes incompatibly; a parent
+/// rejects workers speaking a different version instead of desyncing
+/// mid-map.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Worker → parent: connection opener.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct Hello {
+    pub magic: u32,
+    pub version: u32,
+    /// Codec names this worker can decode (values of
+    /// [`WireCodec::env_value`]); the parent picks its session codec if
+    /// listed.
+    pub codecs: Vec<String>,
+    /// Display tag for logs (hostname/pid by default).
+    pub tag: String,
+    /// Cores available on the worker's machine — capability
+    /// registration for nested plan levels.
+    pub cores: u32,
+    /// Feature capabilities (e.g. "data-cache", "nested-plans").
+    pub capabilities: Vec<String>,
+}
+
+impl Hello {
+    /// A `Hello` describing this process.
+    pub fn current(tag: String) -> Hello {
+        Hello {
+            magic: HANDSHAKE_MAGIC,
+            version: PROTOCOL_VERSION,
+            codecs: vec![
+                WireCodec::Binary.env_value().to_string(),
+                WireCodec::Json.env_value().to_string(),
+            ],
+            tag,
+            cores: std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(1),
+            capabilities: vec!["data-cache".into(), "nested-plans".into()],
+        }
+    }
+
+    /// Check this peer can join a session speaking `codec`.
+    pub fn validate(&self, codec: WireCodec) -> Result<(), String> {
+        if self.magic != HANDSHAKE_MAGIC {
+            return Err(format!("bad handshake magic {:#010x}", self.magic));
+        }
+        if self.version != PROTOCOL_VERSION {
+            return Err(format!(
+                "protocol version mismatch: worker speaks v{}, parent v{PROTOCOL_VERSION}",
+                self.version
+            ));
+        }
+        if !self.codecs.iter().any(|c| c == codec.env_value()) {
+            return Err(format!(
+                "no codec in common: session uses '{}', worker offers {:?}",
+                codec.env_value(),
+                self.codecs
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Parent → worker: handshake outcome.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub enum HandshakeReply {
+    Welcome {
+        /// Slot index assigned to this worker (stable across the
+        /// connection; a respawn gets a fresh connection).
+        worker_idx: u32,
+        /// Codec for every subsequent frame ([`WireCodec::env_value`]).
+        codec: String,
+        /// Interval at which the worker must emit heartbeat frames;
+        /// the parent reaps the connection after ~2.5 missed intervals.
+        heartbeat_ms: f64,
+    },
+    Reject {
+        reason: String,
+    },
+}
+
+/// Send one handshake message (binary-encoded frame).
+pub fn send<T: serde::Serialize, W: std::io::Write>(w: &mut W, msg: &T) -> std::io::Result<()> {
+    let bytes = WireCodec::Binary
+        .encode(msg)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    write_frame(w, &bytes)
+}
+
+/// Receive one handshake message. EOF before a full frame is an error:
+/// a handshake is never optional.
+pub fn recv<T: for<'a> serde::Deserialize<'a>, R: std::io::Read>(
+    r: &mut R,
+) -> std::io::Result<T> {
+    let frame = read_frame(r)?.ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "peer closed during handshake")
+    })?;
+    WireCodec::Binary
+        .decode(&frame)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_roundtrips_and_validates() {
+        let h = Hello::current("test-host".into());
+        let mut buf = Vec::new();
+        send(&mut buf, &h).unwrap();
+        let back: Hello = recv(&mut &buf[..]).unwrap();
+        assert_eq!(back.magic, HANDSHAKE_MAGIC);
+        assert_eq!(back.version, PROTOCOL_VERSION);
+        assert_eq!(back.tag, "test-host");
+        back.validate(WireCodec::Binary).unwrap();
+        back.validate(WireCodec::Json).unwrap();
+    }
+
+    #[test]
+    fn bad_peers_are_rejected() {
+        let mut h = Hello::current("t".into());
+        h.magic = 0xDEAD_BEEF;
+        assert!(h.validate(WireCodec::Binary).unwrap_err().contains("magic"));
+        let mut h = Hello::current("t".into());
+        h.version = PROTOCOL_VERSION + 1;
+        assert!(h.validate(WireCodec::Binary).unwrap_err().contains("version"));
+        let mut h = Hello::current("t".into());
+        h.codecs = vec!["carrier-pigeon".into()];
+        assert!(h.validate(WireCodec::Binary).unwrap_err().contains("codec"));
+    }
+
+    #[test]
+    fn reply_roundtrips() {
+        let r = HandshakeReply::Welcome {
+            worker_idx: 3,
+            codec: "binary".into(),
+            heartbeat_ms: 500.0,
+        };
+        let mut buf = Vec::new();
+        send(&mut buf, &r).unwrap();
+        match recv::<HandshakeReply, _>(&mut &buf[..]).unwrap() {
+            HandshakeReply::Welcome { worker_idx, codec, heartbeat_ms } => {
+                assert_eq!(worker_idx, 3);
+                assert_eq!(codec, "binary");
+                assert_eq!(heartbeat_ms, 500.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        // A non-futurize peer speaking garbage fails the decode cleanly.
+        assert!(recv::<HandshakeReply, _>(&mut &b""[..]).is_err());
+    }
+}

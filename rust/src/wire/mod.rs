@@ -20,6 +20,7 @@
 
 pub mod bin;
 pub mod codec;
+pub mod handshake;
 mod de;
 mod ser;
 mod value;

@@ -1,6 +1,7 @@
 //! The future.tests analog (paper §2.1 footnote 2): every backend must
 //! be compliant with the Future API. One conformance suite, run against
-//! all five backends.
+//! all six backends — including `cluster_tcp`, whose workers are real
+//! processes dialing back over localhost sockets.
 
 mod common;
 
@@ -13,6 +14,7 @@ const PLANS: &[&str] = &[
     "multicore, workers = 2",
     "multisession, workers = 2",
     "cluster, workers = c(\"n1\", \"n2\"), latency_ms = 0.1",
+    "cluster_tcp, workers = 2",
     "future.batchtools::batchtools_slurm, workers = 2, poll_ms = 2",
 ];
 
@@ -227,6 +229,107 @@ fn cancelled_tasks_never_execute() {
 }
 
 #[test]
+fn cluster_sim_polling_never_blocks_the_driver() {
+    use std::time::{Duration, Instant};
+    worker_env();
+    // 40 ms one-way latency: big enough that a sleep hiding inside the
+    // poll path is unmistakable against the 20 ms per-poll bound.
+    let spec = futurize::backend::PlanSpec::from_name(
+        "cluster",
+        None,
+        vec!["n1".into(), "n2".into()],
+        Some(40.0),
+        None,
+    )
+    .unwrap();
+    let mut b = futurize::backend::instantiate(&spec, 1).unwrap();
+    b.submit(sleep_task(1, 0.0)).unwrap();
+    // Poll the result in. The Done spends 40 ms in simulated flight
+    // after the worker finishes, yet every individual poll must return
+    // immediately — the driver stays free to do other work, which is
+    // the whole point of `resolved()`-style polling.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        assert!(Instant::now() < deadline, "cluster_sim task never resolved");
+        let t0 = Instant::now();
+        let ev = b.try_next_event().unwrap();
+        let took = t0.elapsed();
+        assert!(
+            took < Duration::from_millis(20),
+            "try_next_event blocked the driver for {took:?} (latency model must \
+             stamp arrival deadlines, not sleep on the caller)"
+        );
+        match ev {
+            Some(futurize::backend::BackendEvent::Done(_)) => break,
+            Some(_) => {}
+            None => std::thread::sleep(Duration::from_millis(1)),
+        }
+    }
+}
+
+#[test]
+fn cluster_tcp_attach_mode_accepts_external_workers() {
+    use std::process::{Command, Stdio};
+    worker_env();
+    // Parent listens on an explicit localhost port; the worker is
+    // launched *by the test* and dials in — exactly the deployment
+    // shape of `plan(cluster, workers = "tcp://host:port")` with remote
+    // machines, minus the machines.
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+    let backend_thread = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            futurize::backend::cluster_tcp::ClusterTcpBackend::new(1, &addr, "attach", 500.0)
+        })
+    };
+    // Wait for the backend thread to bind before the single-shot
+    // connect below. The probe connection is closed immediately, so the
+    // acceptor sees a clean EOF and moves on.
+    let t0 = std::time::Instant::now();
+    loop {
+        match std::net::TcpStream::connect(&addr) {
+            Ok(s) => {
+                drop(s);
+                break;
+            }
+            Err(_) if t0.elapsed() < std::time::Duration::from_secs(20) => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => panic!("attach listener never came up: {e}"),
+        }
+    }
+    let bin = std::env::var("FUTURIZE_WORKER_BIN").unwrap();
+    let mut worker = Command::new(&bin)
+        .args(["worker", "--connect", &addr])
+        .stdin(Stdio::null())
+        .spawn()
+        .expect("cannot launch external worker");
+    let mut b = match backend_thread.join() {
+        Ok(Ok(b)) => b,
+        Ok(Err(e)) => {
+            let _ = worker.kill();
+            panic!("attach-mode construction failed: {e}");
+        }
+        Err(e) => std::panic::resume_unwind(e),
+    };
+    assert_eq!(b.workers(), 1);
+    b.submit(sleep_task(7, 0.0)).unwrap();
+    let done = loop {
+        match b.next_event().unwrap() {
+            futurize::backend::BackendEvent::Done(o) => break o,
+            _ => {}
+        }
+    };
+    assert_eq!(done.id, 7);
+    // Dropping the backend closes the socket; the external worker exits
+    // on its own (it is not the parent's child in attach mode).
+    drop(b);
+    let _ = worker.wait();
+}
+
+#[test]
 fn contexts_register_resolve_and_drop() {
     use futurize::future_core::{ContextBody, TaskContext, TaskKind, TaskPayload};
     for (name, mut b) in raw_backends() {
@@ -320,6 +423,7 @@ fn stop_on_error_cancels_remaining_work() {
 const PROCESS_PLANS: &[&str] = &[
     "multisession, workers = 2",
     "cluster, workers = c(\"n1\", \"n2\"), latency_ms = 0.1",
+    "cluster_tcp, workers = 2",
     "future.batchtools::batchtools_slurm, workers = 2, poll_ms = 2",
 ];
 

@@ -62,6 +62,7 @@ const PLANS: &[&str] = &[
     "plan(multicore, workers = 2)",
     "plan(multisession, workers = 2)",
     "plan(cluster, workers = c(\"n1\", \"n2\"), latency_ms = 0.1)",
+    "plan(cluster_tcp, workers = 2)",
     "plan(future.batchtools::batchtools_slurm, workers = 2, poll_ms = 2)",
 ];
 
@@ -238,6 +239,33 @@ fn evicted_blob_recovers_through_cache_miss_reput() {
         let (r1, r3, misses) = got;
         assert!(misses > 0, "the evicted blob must be re-requested via CacheMiss");
         assert_eq!(r1, r3, "the re-put map diverged");
+    });
+}
+
+#[test]
+fn evicted_blob_recovers_through_cache_miss_reput_over_tcp() {
+    let _g = serial();
+    worker_env();
+    // Same eviction scenario as above, but across a real socket: the
+    // worker's CacheMiss negative-ack and the parent's re-put + task
+    // redelivery must resolve over TCP framing exactly as over stdio.
+    with_cache(true, || {
+        std::env::set_var(blobstore::CACHE_BYTES_ENV, "1");
+        let got = within(90, "tcp cache-miss repair", || {
+            let mut s = Session::new();
+            s.eval_str("plan(cluster_tcp, workers = 1)").unwrap();
+            s.eval_str("x <- sin(1:10000)\ny <- cos(1:10000)").unwrap();
+            stats::reset();
+            let r1 = s.eval_str("future_sapply(1:2, function(i) sum(x) * i)").unwrap();
+            s.eval_str("invisible(future_sapply(1:2, function(i) sum(y) * i))").unwrap();
+            let misses_before = stats::cache_misses();
+            let r3 = s.eval_str("future_sapply(1:2, function(i) sum(x) * i)").unwrap();
+            (bits(&r1), bits(&r3), stats::cache_misses() - misses_before)
+        });
+        std::env::remove_var(blobstore::CACHE_BYTES_ENV);
+        let (r1, r3, misses) = got;
+        assert!(misses > 0, "the evicted blob must be re-requested via CacheMiss over TCP");
+        assert_eq!(r1, r3, "the re-put TCP map diverged");
     });
 }
 

@@ -244,6 +244,86 @@ fn protocol_desync_is_treated_as_worker_failure() {
 }
 
 #[test]
+fn cluster_tcp_heartbeat_timeout_is_detected_mid_task() {
+    // A TCP worker whose *connection* goes silent — no frames, no
+    // heartbeats — must be reaped by the heartbeat deadline even though
+    // the socket is still technically open. The test hook suppresses
+    // the worker's heartbeat thread, so from the parent's side the
+    // worker looks exactly like one on the far side of a dead network
+    // link; the long-running task means no Done will save it either.
+    std::env::set_var(futurize::backend::worker::NO_HEARTBEAT_ENV, "1");
+    let (elapsed, event_ok) = within(30, "cluster_tcp heartbeat", || {
+        worker_env();
+        let mut b =
+            futurize::backend::cluster_tcp::ClusterTcpBackend::new(1, "", "", 150.0).unwrap();
+        b.submit(TaskPayload {
+            id: 1,
+            kind: TaskKind::Expr {
+                expr: futurize::rlite::parse_expr("Sys.sleep(20)").unwrap(),
+                globals: vec![],
+                nesting: Default::default(),
+            },
+            time_scale: 1.0,
+            capture_stdout: true,
+        })
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let ev = b.next_event().unwrap();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let ok = matches!(ev, BackendEvent::WorkerLost { task: Some(1), .. });
+        (elapsed, ok)
+    });
+    std::env::remove_var(futurize::backend::worker::NO_HEARTBEAT_ENV);
+    assert!(event_ok, "expected WorkerLost for the silent worker's task");
+    // Deadline is 2.5 × 150 ms; allow generous CI slack but stay far
+    // below the 20 s task — proving the reap came from the heartbeat
+    // model, not from task completion or socket close.
+    assert!(
+        elapsed < 10.0,
+        "heartbeat timeout took {elapsed:.1}s — silent connection was not reaped"
+    );
+}
+
+#[test]
+fn cluster_tcp_runs_nested_stack_bit_identically() {
+    // Depth-2 plan stack over the socket transport: the inherited inner
+    // level travels inside RegisterContext frames exactly as it does
+    // over stdio, so a TCP worker's nested map runs on its own inner
+    // multicore pool — and seeded draws stay bit-identical to the
+    // single-process reference.
+    let reference: Vec<f64> = {
+        let mut s = Session::new();
+        s.eval_str("futureSeed(41)").unwrap();
+        s.eval_str(
+            "unlist(lapply(1:4, function(x) \
+             sum(future_sapply(1:3, function(y) rnorm(1) * 0.001 + y * x, \
+             future.seed = TRUE))) |> futurize(seed = TRUE, chunk_size = 1))",
+        )
+        .unwrap()
+        .as_dbl_vec()
+        .unwrap()
+    };
+    let got = within(90, "cluster_tcp nested stack", move || {
+        worker_env();
+        let mut s = Session::new();
+        // heartbeat_ms = 0 keeps this test independent of the
+        // NO_HEARTBEAT test hook, which a concurrently running test in
+        // this process may have toggled in the shared environment.
+        s.eval_str("plan(list(cluster_tcp(2, heartbeat_ms = 0), multicore(2)))").unwrap();
+        s.eval_str("futureSeed(41)").unwrap();
+        s.eval_str(
+            "unlist(lapply(1:4, function(x) \
+             sum(future_sapply(1:3, function(y) rnorm(1) * 0.001 + y * x, \
+             future.seed = TRUE))) |> futurize(seed = TRUE, chunk_size = 1))",
+        )
+        .unwrap()
+        .as_dbl_vec()
+        .unwrap()
+    });
+    assert_eq!(got, reference, "nested TCP map drew different numbers");
+}
+
+#[test]
 fn retry_preserves_seed_invariance_across_resubmit() {
     // seed = TRUE results must be identical whether or not a worker
     // crash forced a chunk to be resubmitted: per-element L'Ecuyer

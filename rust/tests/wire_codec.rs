@@ -556,6 +556,41 @@ fn multisession_works_under_forced_json_codec() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Frame layer: the length-prefix cap guards every process transport.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oversize_frame_is_a_protocol_error_not_an_allocation() {
+    use futurize::wire::codec::{read_frame, read_frame_capped, write_frame};
+    use std::io::Cursor;
+    // A frame within the cap roundtrips through the explicit-cap reader
+    // and through the default (env-capped, 256 MiB) reader.
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &[7u8; 1024]).unwrap();
+    assert_eq!(
+        read_frame_capped(&mut Cursor::new(&buf), 4096).unwrap().unwrap(),
+        vec![7u8; 1024]
+    );
+    assert_eq!(read_frame(&mut Cursor::new(&buf)).unwrap().unwrap().len(), 1024);
+    // A length prefix above the cap must error before allocating: a
+    // desynced or hostile stream advertising a multi-GiB frame would
+    // otherwise commit the allocation before the decode could fail.
+    let mut big = Vec::new();
+    write_frame(&mut big, &[0u8; 2048]).unwrap();
+    let err = read_frame_capped(&mut Cursor::new(&big), 1024).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert!(
+        err.to_string().contains("exceeds cap"),
+        "error should name the cap breach: {err}"
+    );
+    // Clean EOF (no header bytes) is Ok(None); a truncated header is an
+    // error — the two must stay distinguishable for supervision.
+    assert!(read_frame_capped(&mut Cursor::new(&[]), 1024).unwrap().is_none());
+    let err = read_frame_capped(&mut Cursor::new(&[1u8, 0]), 1024).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+}
+
 #[test]
 fn json_codec_costs_more_bytes_than_binary_end_to_end() {
     worker_env();
